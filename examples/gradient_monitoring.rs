@@ -1,0 +1,159 @@
+//! END-TO-END DRIVER (paper Figure 5 / §5.3): gradient monitoring on two
+//! contrasting sixteen-layer MLPs (1024-wide, ~17M parameters each).
+//!
+//! Exercises every layer of the system on a real workload:
+//!   L1 Pallas EMA sketch updates + L2 jax train step (AOT, via PJRT) —
+//!   the "healthy" (Kaiming/ReLU/Adam) and "problematic" (negative-bias/
+//!   SGD) configurations train for several hundred steps while sketches
+//!   accumulate in-graph;
+//!   L3 monitor service consumes per-step ||Z||_F and stable-rank metrics,
+//!   diagnoses the pathology, and reports the constant-memory story
+//!   (1.7 MB sketches vs 320 MB traditional checkpoints at T=5).
+//!
+//! The run (loss curves, diagnosis, memory) is recorded in EXPERIMENTS.md.
+//!
+//! Run: `cargo run --release --example gradient_monitoring -- [--epochs N]`
+
+use anyhow::Result;
+use sketchgrad::config::{ExperimentConfig, Variant};
+use sketchgrad::coordinator::experiments::curve_table;
+use sketchgrad::coordinator::{
+    diagnose_run, open_runtime, run_classifier, Trainer, VariantRun,
+};
+use sketchgrad::data::{make_chunks, synth_mnist, Init};
+use sketchgrad::memory::{fmt_bytes, monitor16_dims, MemoryModel};
+use sketchgrad::monitor::{MonitorConfig, MonitorService};
+use sketchgrad::util::cli::Args;
+use sketchgrad::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let mut args = Args::parse_env()?;
+    let epochs = args.opt_usize("epochs", 2)?;
+    let train_size = args.opt_usize("train-size", 128 * 40)?;
+    let seed = args.opt_u64("seed", 42)?;
+    args.finish()?;
+
+    let rt = open_runtime()?;
+    println!("Figure 5 end-to-end driver — 16-layer x 1024 MLPs, r=4, beta=0.9");
+    println!("platform: {}\n", rt.platform());
+
+    // --- healthy: Kaiming + ReLU + Adam (monitor16_healthy_chunk) -------
+    println!("== training HEALTHY configuration ==");
+    let healthy_cfg = ExperimentConfig {
+        name: "healthy".into(),
+        family: "monitor16".into(),
+        variant: Variant::Monitored,
+        rank: 4,
+        adaptive: false,
+        epochs,
+        train_size,
+        test_size: 128 * 20,
+        seed,
+        ..Default::default()
+    };
+    let healthy = run_classifier(&rt, &healthy_cfg, false)?;
+    for e in &healthy.epochs {
+        println!(
+            "  epoch {}: loss {:.4} acc {:.3} ({:.2} steps/s)",
+            e.epoch, e.mean_loss, e.mean_accuracy, e.steps_per_sec
+        );
+    }
+
+    // --- problematic: negative bias + SGD (monitor16_problematic_chunk) -
+    println!("== training PROBLEMATIC configuration ==");
+    let problematic = run_problematic(&rt, epochs, train_size, seed)?;
+    for e in &problematic.epochs {
+        println!(
+            "  epoch {}: loss {:.4} acc {:.3} ({:.2} steps/s)",
+            e.epoch, e.mean_loss, e.mean_accuracy, e.steps_per_sec
+        );
+    }
+
+    println!("\n{}", curve_table(&[&healthy, &problematic]));
+
+    // --- monitor-service diagnosis over the sketch metrics --------------
+    for (label, run) in [("healthy", &healthy), ("problematic", &problematic)] {
+        // Short demo run: shrink the diagnostic window so the detectors
+        // activate within a couple of epochs.
+        let cfg = MonitorConfig {
+            window: 20,
+            ..MonitorConfig::for_rank(4)
+        };
+        let mut svc = MonitorService::new(cfg, 15);
+        for m in &run.history {
+            svc.observe(m);
+        }
+        let d = svc.diagnose();
+        let last = run.history.last().unwrap();
+        let sr: f32 = last.stable_rank.iter().sum::<f32>()
+            / last.stable_rank.len() as f32;
+        let z: f32 =
+            last.z_norm.iter().sum::<f32>() / last.z_norm.len() as f32;
+        println!(
+            "[{label}] final mean ||Z||_F {z:.3}  stable rank {sr:.2}/9  \
+             healthy={}  monitor state {}",
+            svc.is_healthy(),
+            fmt_bytes(svc.monitor_bytes()),
+        );
+        if !d.notes.is_empty() {
+            println!("         detectors: {:?}", d.notes);
+        }
+        let _ = diagnose_run(run, 4, 15);
+    }
+
+    // --- the memory headline --------------------------------------------
+    let m = MemoryModel::new(&monitor16_dims(), 128);
+    println!("\nmonitoring memory (paper §5.3):");
+    for t in [5usize, 50, 500] {
+        println!(
+            "  T={t:>3}: traditional {} -> sketched {} ({:.2}% reduction)",
+            fmt_bytes(m.monitoring_traditional(t)),
+            fmt_bytes(m.monitoring_sketched(4)),
+            100.0 * m.monitoring_reduction(t, 4)
+        );
+    }
+    println!(
+        "  measured sketch state in trainer: healthy {} / problematic {}",
+        fmt_bytes(healthy.measured_sketch_bytes),
+        fmt_bytes(problematic.measured_sketch_bytes)
+    );
+    println!("\ngradient_monitoring driver OK");
+    Ok(())
+}
+
+fn run_problematic(
+    rt: &sketchgrad::runtime::Runtime,
+    epochs: usize,
+    train_size: usize,
+    seed: u64,
+) -> Result<VariantRun> {
+    let artifact = "monitor16_problematic_chunk";
+    let entry = rt.manifest.get(artifact)?;
+    let chunk_k = entry.meta_usize("chunk")?;
+    let n_b = entry.meta_usize("n_b")?;
+    let mut trainer =
+        Trainer::new(rt, artifact, Init::KaimingNegBias(-3.0), seed)?;
+    let train = synth_mnist(train_size, seed);
+    let mut data_rng = Rng::new(seed ^ 0xDA7A);
+    let mut wall = 0.0;
+    let mut steps = 0;
+    for _ in 0..epochs {
+        let chunks = make_chunks(&train, n_b, chunk_k, &mut data_rng, &[784]);
+        let s = trainer.run_epoch(&chunks)?;
+        wall += s.wall_secs;
+        steps += s.steps;
+    }
+    let dims = entry.meta_dims()?;
+    let model = MemoryModel::new(&dims, n_b);
+    Ok(VariantRun {
+        label: "problematic".into(),
+        epochs: trainer.epochs.clone(),
+        final_eval_loss: f32::NAN,
+        final_eval_acc: f32::NAN,
+        model_bytes: model.sketch_state(4),
+        measured_sketch_bytes: trainer.sketch_bytes(),
+        rank_decisions: Vec::new(),
+        steps_per_sec: steps as f64 / wall.max(1e-9),
+        history: trainer.history,
+    })
+}

@@ -1,0 +1,72 @@
+//! Quickstart: the smallest end-to-end use of the public API.
+//!
+//! Loads the single-step MNIST artifacts (standard + sketched r=2),
+//! runs a handful of optimizer steps on synthetic data through the PJRT
+//! runtime, and prints side-by-side losses plus the sketch-derived
+//! monitoring metrics — the whole three-layer stack in ~80 lines.
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use std::collections::HashMap;
+
+use anyhow::Result;
+use sketchgrad::coordinator::{init_state, open_runtime};
+use sketchgrad::data::{synth_mnist, Init};
+use sketchgrad::memory::fmt_bytes;
+use sketchgrad::runtime::Tensor;
+use sketchgrad::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let rt = open_runtime()?;
+    println!("PJRT platform: {}", rt.platform());
+
+    let std_exe = rt.load("mnist_std_step")?;
+    let sk_exe = rt.load("mnist_sk_r2_step")?;
+
+    let mut rng = Rng::new(42);
+    let mut std_state = init_state(&std_exe.entry, Init::Xavier(1.0), &mut rng)?;
+    let mut rng2 = Rng::new(42);
+    let mut sk_state = init_state(&sk_exe.entry, Init::Xavier(1.0), &mut rng2)?;
+
+    let data = synth_mnist(128 * 20, 7);
+    println!("\nstep | standard loss | sketched loss | ||Z|| (layer 0) | stable rank");
+    println!("-----|---------------|---------------|-----------------|------------");
+    for step in 0..20 {
+        let mut xs = Vec::with_capacity(128 * 784);
+        let mut ys = Vec::with_capacity(128);
+        for b in 0..128 {
+            let i = step * 128 + b;
+            xs.extend_from_slice(data.x_row(i));
+            ys.push(data.ys[i]);
+        }
+        let bx = Tensor::from_f32(&[128, 784], xs);
+        let by = Tensor::from_i32(&[128], ys);
+        let mut extra: HashMap<&str, Tensor> = HashMap::new();
+        extra.insert("batch_x", bx);
+        extra.insert("batch_y", by);
+
+        let inputs = std_state.ordered_inputs(&std_exe.entry, &extra)?;
+        let outs = std_exe.run(&inputs)?;
+        let m_std = std_state.absorb_outputs(&std_exe.entry, outs)?;
+
+        let inputs = sk_state.ordered_inputs(&sk_exe.entry, &extra)?;
+        let outs = sk_exe.run(&inputs)?;
+        let m_sk = sk_state.absorb_outputs(&sk_exe.entry, outs)?;
+
+        println!(
+            "{:>4} | {:>13.4} | {:>13.4} | {:>15.3} | {:>10.2}",
+            step,
+            m_std["loss"].scalar()?,
+            m_sk["loss"].scalar()?,
+            m_sk["z_norm"].f32_data()?[0],
+            m_sk["stable_rank"].f32_data()?[0],
+        );
+    }
+
+    println!(
+        "\nsketch state held by the sketched variant: {}",
+        fmt_bytes(sk_state.sketch_bytes())
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,266 @@
+"""AOT compiler: lower every artifact in the registry to HLO *text* and
+emit ``artifacts/manifest.json`` describing each artifact's exact flat
+input/output interface for the rust runtime.
+
+HLO text (not ``.serialize()``) is the interchange format: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+XLA the rust ``xla`` crate links) rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--only REGEX] [--list]
+
+Python runs ONLY here (build time); the rust binary is self-contained once
+``artifacts/`` is populated.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import re
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import cnn as C
+from . import model as M
+from . import pinn as P
+from . import train_step as TS
+
+# ---------------------------------------------------------------------------
+# Experiment architectures (paper §5.1.2)
+# ---------------------------------------------------------------------------
+
+MNIST_SPEC = M.MLPSpec(dims=(784, 512, 512, 512, 10), activation="tanh")
+MONITOR_SPEC = M.MLPSpec(
+    dims=(784,) + (1024,) * 15 + (10,), activation="relu"
+)
+CNN_SPEC = C.CNNSpec()
+PINN_SPEC = P.PINNSpec()
+
+N_B = 128  # paper: all experiments use batch size 128
+RANK_LADDER = (2, 4, 8, 16)  # paper: adaptive range r in [2, 16]
+
+MNIST_CHUNK = 50
+MONITOR_CHUNK = 20
+CIFAR_CHUNK = 10
+PINN_CHUNK = 20
+PINN_EVAL_GRID = 51 * 51
+
+
+def _registry() -> dict:
+    """name -> zero-arg builder returning (fn, in_specs, out_specs, meta)."""
+    reg: dict = {}
+
+    def add(name, builder, **meta):
+        def thunk(builder=builder, meta=meta):
+            fn, ins, outs = builder()
+            return fn, ins, outs, meta
+
+        assert name not in reg, name
+        reg[name] = thunk
+
+    def mlp_meta(spec, cfg, arch):
+        return dict(
+            kind="mlp",
+            arch=arch,
+            dims=list(spec.dims),
+            activation=spec.activation,
+            variant=cfg.variant,
+            optimizer=cfg.optimizer,
+            n_b=cfg.n_b,
+            r=cfg.r,
+            k=cfg.k,
+            beta=cfg.beta,
+            lr=cfg.lr,
+            chunk=cfg.chunk,
+        )
+
+    # --- MNIST MLP (Fig. 1): single-step (quickstart/tests) + chunked ----
+    for chunk, tag in ((0, "step"), (MNIST_CHUNK, "chunk")):
+        cfg = TS.StepConfig(
+            spec=MNIST_SPEC, variant="standard", optimizer="adam",
+            n_b=N_B, chunk=chunk,
+        )
+        add(f"mnist_std_{tag}", lambda cfg=cfg: TS.build(cfg),
+            **mlp_meta(MNIST_SPEC, cfg, "mnist"))
+    cfg = TS.StepConfig(
+        spec=MNIST_SPEC, variant="sketched", optimizer="adam",
+        n_b=N_B, r=2, beta=0.95, chunk=0,
+    )
+    add("mnist_sk_r2_step", lambda cfg=cfg: TS.build(cfg),
+        **mlp_meta(MNIST_SPEC, cfg, "mnist"))
+    for r in RANK_LADDER:
+        cfg = TS.StepConfig(
+            spec=MNIST_SPEC, variant="sketched", optimizer="adam",
+            n_b=N_B, r=r, beta=0.95, chunk=MNIST_CHUNK,
+        )
+        add(f"mnist_sk_r{r}_chunk", lambda cfg=cfg: TS.build(cfg),
+            **mlp_meta(MNIST_SPEC, cfg, "mnist"))
+
+    # --- Gradient monitoring 16x1024 (Fig. 5): monitored mode, r=4 -------
+    # Healthy (Adam) follows the family_mon_r{r} convention so the
+    # generic resolver finds it; the problematic twin differs by
+    # optimizer (SGD) and is addressed by its explicit name.
+    for opt, name in (("adam", "monitor16_mon_r4_chunk"),
+                      ("sgd", "monitor16_problematic_chunk")):
+        cfg = TS.StepConfig(
+            spec=MONITOR_SPEC, variant="monitored", optimizer=opt,
+            n_b=N_B, r=4, beta=0.9, chunk=MONITOR_CHUNK,
+            lr=1e-3 if opt == "adam" else 1e-2,
+        )
+        add(name, lambda cfg=cfg: TS.build(cfg),
+            **mlp_meta(MONITOR_SPEC, cfg, "monitor16"))
+
+    # --- CIFAR hybrid CNN-MLP (Fig. 2) ------------------------------------
+    def cnn_meta(cfg):
+        return dict(
+            kind="cnn",
+            arch="cifar",
+            channels=list(cfg.cnn.channels),
+            fc_dims=list(cfg.cnn.fc_dims),
+            in_hw=cfg.cnn.in_hw,
+            variant=cfg.variant,
+            optimizer="adam",
+            n_b=cfg.n_b,
+            r=cfg.r,
+            k=cfg.k,
+            beta=cfg.beta,
+            lr=cfg.lr,
+            chunk=cfg.chunk,
+        )
+
+    ccfg = TS.CNNStepConfig(cnn=CNN_SPEC, variant="standard", n_b=N_B,
+                            chunk=CIFAR_CHUNK)
+    add("cifar_std_chunk", lambda cfg=ccfg: TS.build_cnn(cfg), **cnn_meta(ccfg))
+    for r in RANK_LADDER:
+        ccfg = TS.CNNStepConfig(cnn=CNN_SPEC, variant="sketched", n_b=N_B,
+                                r=r, beta=0.95, chunk=CIFAR_CHUNK)
+        add(f"cifar_sk_r{r}_chunk", lambda cfg=ccfg: TS.build_cnn(cfg),
+            **cnn_meta(ccfg))
+
+    # --- PINN 2D Poisson (Figs. 3-4): standard + monitored ladder ---------
+    def pinn_meta(cfg):
+        return dict(
+            kind="pinn",
+            arch="pinn",
+            dims=list(cfg.pinn.dims),
+            variant=cfg.variant,
+            optimizer="adam",
+            n_f=cfg.n_f,
+            n_bc=cfg.n_bc,
+            r=cfg.r,
+            k=cfg.k,
+            beta=cfg.beta,
+            lr=cfg.lr,
+            chunk=cfg.chunk,
+            bc_weight=cfg.pinn.bc_weight,
+        )
+
+    pcfg = TS.PINNStepConfig(pinn=PINN_SPEC, variant="standard",
+                             chunk=PINN_CHUNK)
+    add("pinn_std_chunk", lambda cfg=pcfg: TS.build_pinn(cfg), **pinn_meta(pcfg))
+    for r in RANK_LADDER:
+        pcfg = TS.PINNStepConfig(pinn=PINN_SPEC, variant="monitored", r=r,
+                                 beta=0.95, chunk=PINN_CHUNK)
+        add(f"pinn_mon_r{r}_chunk", lambda cfg=pcfg: TS.build_pinn(cfg),
+            **pinn_meta(pcfg))
+
+    add("pinn_eval",
+        lambda: TS.build_pinn_eval(PINN_SPEC, PINN_EVAL_GRID),
+        kind="pinn_eval", arch="pinn", dims=list(PINN_SPEC.dims),
+        n_grid=PINN_EVAL_GRID)
+
+    # --- Reconstruction-bound validation (Thm 4.2) ------------------------
+    for r in RANK_LADDER:
+        add(f"recon_eval_r{r}",
+            lambda r=r: TS.build_recon_eval(N_B, 512, r),
+            kind="recon_eval", n_b=N_B, d=512, r=r, k=2 * r + 1)
+
+    return reg
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+_DTYPES = {"f32": "float32", "i32": "int32"}
+
+
+def lower_one(name: str, thunk, out_dir: str) -> dict:
+    import jax.numpy as jnp
+
+    fn, ins, outs, meta = thunk()
+    specs = [
+        jax.ShapeDtypeStruct(tuple(s.shape), getattr(jnp, _DTYPES[s.dtype]))
+        for s in ins
+    ]
+    t0 = time.time()
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    with open(path, "w") as f:
+        f.write(text)
+    dt = time.time() - t0
+    print(f"  {name}: {len(text) / 1e6:.2f} MB HLO in {dt:.1f}s", flush=True)
+    return {
+        "file": f"{name}.hlo.txt",
+        "inputs": [
+            {"name": s.name, "shape": list(s.shape), "dtype": s.dtype}
+            for s in ins
+        ],
+        "outputs": [
+            {"name": s.name, "shape": list(s.shape), "dtype": s.dtype}
+            for s in outs
+        ],
+        "meta": meta,
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--only", default=None, help="regex filter on names")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    reg = _registry()
+    names = sorted(reg)
+    if args.only:
+        pat = re.compile(args.only)
+        names = [n for n in names if pat.search(n)]
+    if args.list:
+        print("\n".join(names))
+        return
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    manifest_path = os.path.join(args.out_dir, "manifest.json")
+    manifest = {"version": 1, "n_b": N_B, "rank_ladder": list(RANK_LADDER),
+                "artifacts": {}}
+    if os.path.exists(manifest_path):
+        with open(manifest_path) as f:
+            try:
+                manifest = json.load(f)
+            except json.JSONDecodeError:
+                pass
+
+    t0 = time.time()
+    print(f"lowering {len(names)} artifacts -> {args.out_dir}", flush=True)
+    for name in names:
+        manifest["artifacts"][name] = lower_one(name, reg[name], args.out_dir)
+        # Incremental write so a crash keeps completed entries.
+        with open(manifest_path, "w") as f:
+            json.dump(manifest, f, indent=1)
+    print(f"done in {time.time() - t0:.0f}s; manifest -> {manifest_path}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,121 @@
+"""Hybrid CNN-MLP for the CIFAR experiment (paper §5.1.2, Fig. 2).
+
+Convolutional feature extraction (two conv/relu/maxpool stages) followed by
+three 512-wide fully-connected layers + a 10-class head.  Sketching applies
+*only* to the dense hidden layers — the paper's selective-deployment
+demonstration — so:
+
+* the conv block trains with exact gradients obtained through ``jax.vjp``
+  (conv transpose ops are native HLO, LAPACK-free);
+* the FC block reuses the manual MLP forward/backward from ``model.py``
+  with sketch reconstruction swapped into Eq. 8 exactly as for MNIST;
+* the flattened conv features act as the FC block's "input batch" (exact,
+  resident — the analogue of the MNIST input layer).
+
+Input layout is NCHW (n_b, 3, 32, 32); the feature dim after two 2x2 pools
+is 64 * 8 * 8 = 4096.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import model as M
+
+
+class CNNSpec(NamedTuple):
+    """Conv stages are fixed (paper gives no exact extractor; this matches
+    the description's scale): 3->32->64 channels, 3x3 SAME kernels,
+    2x2 max pools.  ``fc_dims`` = (4096, 512, 512, 512, 10)."""
+
+    in_hw: int = 32
+    channels: tuple = (3, 32, 64)
+    fc_dims: tuple = (4096, 512, 512, 512, 10)
+    activation: str = "relu"
+
+    @property
+    def fc_spec(self) -> M.MLPSpec:
+        return M.MLPSpec(dims=self.fc_dims, activation=self.activation)
+
+    @property
+    def feat_dim(self) -> int:
+        hw = self.in_hw // 4  # two 2x2 pools
+        return self.channels[-1] * hw * hw
+
+
+ConvParams = Sequence[tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def conv_forward(conv_params: ConvParams, x: jnp.ndarray) -> jnp.ndarray:
+    """Two conv/relu/pool stages -> flattened features (n_b, feat_dim)."""
+    a = x
+    for kern, bias in conv_params:
+        a = lax.conv_general_dilated(
+            a,
+            kern,
+            window_strides=(1, 1),
+            padding="SAME",
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        )
+        a = a + bias[None, :, None, None]
+        a = jnp.maximum(a, 0.0)
+        a = lax.reduce_window(
+            a,
+            -jnp.inf,
+            lax.max,
+            window_dimensions=(1, 1, 2, 2),
+            window_strides=(1, 1, 2, 2),
+            padding="VALID",
+        )
+    n_b = a.shape[0]
+    return a.reshape(n_b, -1)
+
+
+def cnn_forward(
+    conv_params: ConvParams,
+    fc_params,
+    x: jnp.ndarray,
+    spec: CNNSpec,
+):
+    """Full forward.  Returns (logits, feats, fc_acts) where ``fc_acts``
+    follows model.mlp_forward's convention with ``fc_acts[0] = feats``."""
+    feats = conv_forward(conv_params, x)
+    logits, fc_acts = M.mlp_forward(fc_params, feats, spec.fc_spec)
+    return logits, feats, fc_acts
+
+
+def cnn_backward(
+    conv_params: ConvParams,
+    fc_params,
+    x: jnp.ndarray,
+    feats: jnp.ndarray,
+    fc_acts,
+    delta_logits: jnp.ndarray,
+    spec: CNNSpec,
+    recon_acts=None,
+):
+    """Backward: manual through the FC block (sketched per Eq. 8 when
+    ``recon_acts`` given), then ``jax.vjp`` pullback of the cotangent
+    ``delta_feats`` through the conv block for exact conv grads."""
+    fc_spec = spec.fc_spec
+    fc_grads = M.mlp_backward(
+        fc_params, fc_acts, delta_logits, fc_spec, recon_acts
+    )
+    # delta on the flattened features: chain through FC layer 0 (exact).
+    delta = delta_logits
+    n = fc_spec.n_layers
+    for l in range(n - 1, 0, -1):
+        w, _ = fc_params[l]
+        delta = (delta @ w) * M.activate_grad_from_value(
+            fc_acts[l], fc_spec.activation
+        )
+    w0, _ = fc_params[0]
+    delta_feats = delta @ w0  # (n_b, feat_dim)
+
+    _, vjp_fn = jax.vjp(lambda cp: conv_forward(cp, x), list(conv_params))
+    (conv_grads,) = vjp_fn(delta_feats)
+    return conv_grads, fc_grads

@@ -1,0 +1,109 @@
+"""Pallas kernel: fused EMA sketch update (the paper's L1 hot-spot).
+
+Computes, in one pass over the activation matrix,
+
+    S_new = beta * S_old + (1 - beta) * (A^T @ P) [* col_scale]
+
+for activation ``A`` (n_b x d), shared batch projection ``P`` (n_b x k) and
+EMA sketch ``S`` (d x k).  A naive port does the matmul then an axpy —
+two passes over a d x k temporary.  The fused kernel streams one
+``block_d``-wide slice of ``A`` HBM->VMEM per grid step, runs the MXU on the
+(block_d, n_b) x (n_b, k) product and blends the EMA in the epilogue, so the
+sketch tile is read and written exactly once.
+
+TPU mapping (DESIGN.md §Hardware-Adaptation): grid over d; per-step VMEM is
+``block_d*n_b + n_b*k + 2*block_d*k`` floats.  k = 2r+1 <= 33 is below the
+128-lane MXU tile so the k axis is padded to lane width by Mosaic; the
+padding tax is accounted in the roofline estimate, not hidden.
+
+Runs under ``interpret=True`` everywhere in this repo (CPU PJRT cannot
+execute Mosaic custom-calls); correctness is pinned to ``ref.py`` by pytest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ema_kernel(a_ref, p_ref, s_ref, out_ref, *, beta: float):
+    # a_ref: (n_b, block_d) slice of A; p_ref: (n_b, k); s_ref: (block_d, k)
+    contrib = jnp.dot(
+        a_ref[...].T, p_ref[...], preferred_element_type=jnp.float32
+    )
+    out_ref[...] = beta * s_ref[...] + (1.0 - beta) * contrib
+
+
+def _ema_kernel_scaled(a_ref, p_ref, s_ref, scale_ref, out_ref, *, beta: float):
+    contrib = jnp.dot(
+        a_ref[...].T, p_ref[...], preferred_element_type=jnp.float32
+    )
+    contrib = contrib * scale_ref[...]  # (1, k) broadcast down block_d rows
+    out_ref[...] = beta * s_ref[...] + (1.0 - beta) * contrib
+
+
+def pick_block_d(d: int, n_b: int, k: int, vmem_budget: int = 1 << 21) -> int:
+    """Largest power-of-two divisor of ``d`` (capped at 512) whose working
+    set fits the VMEM budget (floats): block_d*n_b + n_b*k + 2*block_d*k.
+    Falls back to ``d`` itself when d has no useful power-of-two divisor
+    (e.g. the 50-wide PINN layers run as a single block).
+    """
+    best = d
+    cand = 512
+    while cand >= 8:
+        if d % cand == 0:
+            floats = cand * n_b + n_b * k + 2 * cand * k
+            if floats <= vmem_budget:
+                best = cand
+                break
+        cand //= 2
+    return best
+
+
+@functools.partial(jax.named_call, name="ema_sketch_update")
+def ema_sketch_update(
+    a: jnp.ndarray,
+    proj: jnp.ndarray,
+    s_old: jnp.ndarray,
+    beta: float,
+    col_scale: jnp.ndarray | None = None,
+    block_d: int | None = None,
+) -> jnp.ndarray:
+    """Fused EMA sketch update; see module docstring.  ``beta`` is a static
+    compile-time constant (fixed per experiment, paper §3.3)."""
+    n_b, d = a.shape
+    k = proj.shape[1]
+    assert s_old.shape == (d, k), (s_old.shape, d, k)
+    if block_d is None:
+        block_d = pick_block_d(d, n_b, k)
+    assert d % block_d == 0, (d, block_d)
+    grid = (d // block_d,)
+
+    a_spec = pl.BlockSpec((n_b, block_d), lambda i: (0, i))
+    p_spec = pl.BlockSpec((n_b, k), lambda i: (0, 0))
+    s_spec = pl.BlockSpec((block_d, k), lambda i: (i, 0))
+    out_spec = pl.BlockSpec((block_d, k), lambda i: (i, 0))
+
+    if col_scale is None:
+        return pl.pallas_call(
+            functools.partial(_ema_kernel, beta=beta),
+            grid=grid,
+            in_specs=[a_spec, p_spec, s_spec],
+            out_specs=out_spec,
+            out_shape=jax.ShapeDtypeStruct((d, k), jnp.float32),
+            interpret=True,
+        )(a, proj, s_old)
+
+    scale2d = col_scale.reshape(1, k)
+    scale_spec = pl.BlockSpec((1, k), lambda i: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_ema_kernel_scaled, beta=beta),
+        grid=grid,
+        in_specs=[a_spec, p_spec, s_spec, scale_spec],
+        out_specs=out_spec,
+        out_shape=jax.ShapeDtypeStruct((d, k), jnp.float32),
+        interpret=True,
+    )(a, proj, s_old, scale2d)

@@ -1,0 +1,68 @@
+"""Pallas kernel: tiled weight-gradient assembly ``grad = delta^T @ A``
+(paper Eq. 8), the second L1 hot-spot.
+
+``delta`` (n_b x d_out) are the exact backpropagated error signals, ``A``
+(n_b x d_in) the (reconstructed) input activations; the output is the
+d_out x d_in weight gradient.  Classic MXU-shaped matmul: grid tiles both
+output dims, the batch dimension (n_b = 128 in every paper experiment) is
+the contraction axis and a full (n_b, tile) slab of each operand fits VMEM.
+
+Tile choice: 128 x 128 output tiles are MXU-native; layers narrower than a
+tile (PINN's 50-wide, the 10-class logits) collapse to a single block so no
+shape in the paper's experiments needs padding on CPU-interpret.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _grad_outer_kernel(delta_ref, a_ref, out_ref):
+    out_ref[...] = jnp.dot(
+        delta_ref[...].T, a_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+def _pick_tile(dim: int, target: int = 128) -> int:
+    """Largest divisor of ``dim`` that is <= target and power-of-two-ish;
+    falls back to dim (single block)."""
+    cand = target
+    while cand >= 8:
+        if dim % cand == 0:
+            return cand
+        cand //= 2
+    return dim
+
+
+@functools.partial(jax.named_call, name="grad_outer")
+def grad_outer(
+    delta: jnp.ndarray,
+    a: jnp.ndarray,
+    tile_out: int | None = None,
+    tile_in: int | None = None,
+) -> jnp.ndarray:
+    n_b, d_out = delta.shape
+    n_b2, d_in = a.shape
+    assert n_b == n_b2, (n_b, n_b2)
+    if tile_out is None:
+        tile_out = _pick_tile(d_out)
+    if tile_in is None:
+        tile_in = _pick_tile(d_in)
+    assert d_out % tile_out == 0 and d_in % tile_in == 0
+
+    grid = (d_out // tile_out, d_in // tile_in)
+    return pl.pallas_call(
+        _grad_outer_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n_b, tile_out), lambda i, j: (0, i)),
+            pl.BlockSpec((n_b, tile_in), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tile_out, tile_in), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((d_out, d_in), jnp.float32),
+        interpret=True,
+    )(delta, a)

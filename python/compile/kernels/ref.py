@@ -1,0 +1,54 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Every kernel in this package has a reference implementation here written in
+the most obvious jnp form.  pytest (``python/tests/test_kernels.py``) sweeps
+shapes/dtypes with hypothesis and asserts allclose between kernel and oracle;
+this is the core L1 correctness signal.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ema_sketch_update_ref(
+    a: jnp.ndarray,
+    proj: jnp.ndarray,
+    s_old: jnp.ndarray,
+    beta: float,
+    col_scale: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """EMA sketch update (paper Eqs. 5a-5c):
+
+        S_new = beta * S_old + (1 - beta) * (A^T @ proj) [* col_scale]
+
+    ``a``:        (n_b, d)   batch activation matrix
+    ``proj``:     (n_b, k)   shared batch projection (Upsilon/Omega/Phi)
+    ``s_old``:    (d, k)     current EMA sketch
+    ``col_scale``:(k,)       optional per-column weights (Psi for Z-sketch)
+    """
+    contrib = a.T @ proj
+    if col_scale is not None:
+        contrib = contrib * col_scale[None, :]
+    return beta * s_old + (1.0 - beta) * contrib
+
+
+def grad_outer_ref(delta: jnp.ndarray, a: jnp.ndarray) -> jnp.ndarray:
+    """Weight-gradient assembly (paper Eq. 8): ``grad = delta^T @ a``.
+
+    ``delta``: (n_b, d_out) backpropagated error signals
+    ``a``:     (n_b, d_in)  (reconstructed) input activations
+    returns    (d_out, d_in)
+    """
+    return delta.T @ a
+
+
+def recon_project_ref(proj_rows: jnp.ndarray, g_ema: jnp.ndarray) -> jnp.ndarray:
+    """Batch-space projection (paper Eq. 7): ``A_tilde = proj_rows @ g_ema``.
+
+    ``proj_rows``: (n_b, d) the factor ``Omega @ pinv(Y_s)`` already pushed
+                   through ``Q_Y C``, leaving the dense (n_b, d) x (d, d)
+                   product that dominates reconstruction cost.
+    ``g_ema``:     (d, d) feature-space EMA structure (or its right factor)
+    """
+    return proj_rows @ g_ema

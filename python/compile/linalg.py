@@ -1,0 +1,198 @@
+"""Pure-jnp dense linear algebra for the AOT path.
+
+xla_extension 0.5.1 (the XLA the rust `xla` crate links) cannot execute the
+typed-FFI LAPACK custom-calls that jax's CPU lowering emits for
+``jnp.linalg.qr`` / ``cholesky`` / ``triangular_solve`` / ``svd``.  Every
+factorization used inside an AOT-lowered computation therefore lives here,
+written only in terms of native-HLO ops (dot, while/fori_loop, select,
+dynamic slicing, reductions).
+
+All routines are differentiable-free utilities used inside manually written
+forward/backward passes; they never need custom VJPs.
+
+Shapes follow the paper's reconstruction pipeline (Antil & Verma 2025, §4.2):
+sketch matrices are ``d x k`` with ``k = 2r + 1 << d``, so the tall QRs run
+modified Gram-Schmidt over k columns and the wide QR (for ``P_X``) runs
+masked Householder over k rows.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+# Numerical floor used when normalizing nearly-dependent columns; keeps the
+# factorizations total (no NaNs) for rank-deficient EMA sketches early in
+# training when sketches are still near zero.
+_EPS = 1e-12
+
+
+def mgs_qr(a: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Economy QR of a tall matrix ``a`` (m x n, m >= n) via modified
+    Gram-Schmidt with one re-orthogonalisation pass ("MGS2", numerically
+    comparable to Householder for the well-separated spectra we see here).
+
+    Returns ``(q, r)`` with ``q`` m x n (orthonormal columns) and ``r``
+    n x n upper triangular.  Lowered entirely to dot/fori_loop HLO.
+    """
+    m, n = a.shape
+
+    def body(j, qr):
+        q, r = qr
+        v = lax.dynamic_slice_in_dim(a, j, 1, axis=1)  # m x 1
+        # First projection pass against all previous columns.  Columns >= j
+        # of q are still zero, so projecting against the full q is exact and
+        # keeps shapes static.
+        coeff1 = q.T @ v  # n x 1
+        v = v - q @ coeff1
+        # Re-orthogonalisation pass (classical "twice is enough").
+        coeff2 = q.T @ v
+        v = v - q @ coeff2
+        coeff = coeff1 + coeff2
+        norm = jnp.sqrt(jnp.sum(v * v) + _EPS)
+        qj = v / norm
+        q = lax.dynamic_update_slice_in_dim(q, qj, j, axis=1)
+        rj = coeff.at[j, 0].set(norm)  # r column j: projections + diag norm
+        r = lax.dynamic_update_slice_in_dim(r, rj, j, axis=1)
+        return (q, r)
+
+    q0 = jnp.zeros((m, n), a.dtype)
+    r0 = jnp.zeros((n, n), a.dtype)
+    q, r = lax.fori_loop(0, n, body, (q0, r0))
+    return q, r
+
+
+def householder_qr_wide(a: jnp.ndarray) -> jnp.ndarray:
+    """Q factor (k x k, fully orthogonal) of the QR of a wide matrix ``a``
+    (k x d, k <= d) via masked Householder reflections.
+
+    Only the orthogonal factor is returned because the paper's Step-2 only
+    consumes ``P_X`` (the triangular factor of ``(X_s)^T`` is discarded).
+    Masking replaces dynamic column-length slicing so every iterate keeps a
+    static shape.
+    """
+    k, d = a.shape
+    rows = jnp.arange(k)
+
+    def body(j, state):
+        r_mat, q = state
+        x = lax.dynamic_slice_in_dim(r_mat, j, 1, axis=1)[:, 0]  # column j
+        mask = (rows >= j).astype(a.dtype)
+        x = x * mask  # zero entries above the pivot
+        alpha = jnp.sqrt(jnp.sum(x * x) + _EPS)
+        pivot = x[j]
+        # Standard sign choice avoids cancellation.
+        alpha = jnp.where(pivot >= 0, -alpha, alpha)
+        v = x.at[j].add(-alpha)
+        vnorm2 = jnp.sum(v * v) + _EPS
+        v = v / jnp.sqrt(vnorm2)
+        v = v[:, None]  # k x 1 unit reflector
+        r_mat = r_mat - 2.0 * v @ (v.T @ r_mat)
+        q = q - 2.0 * (q @ v) @ v.T
+        return (r_mat, q)
+
+    q0 = jnp.eye(k, dtype=a.dtype)
+    _, q = lax.fori_loop(0, k, body, (a, q0))
+    return q
+
+
+def solve_upper_triangular(
+    r: jnp.ndarray, b: jnp.ndarray, rcond: float = 1e-4
+) -> jnp.ndarray:
+    """Solve ``r x = b`` for upper-triangular ``r`` (n x n) and ``b``
+    (n x p) by back-substitution with static shapes.
+
+    Truncated solve: solution rows whose pivot ``|R_ii|`` falls below
+    ``rcond * max|diag|`` are zeroed rather than divided through — the
+    triangular-solve analogue of a truncated pseudoinverse.  The paper's
+    Eq. 7 applies ``pinv(Y_s) = R_Y^{-1} Q_Y^T`` unregularized; when the
+    EMA sketch spectrum decays fast the trailing pivots underflow and the
+    substitution chain amplifies the reconstruction by 1000x (observed at
+    r >= 8 on decaying-spectrum activations).  Applied identically in the
+    rust substrate (DESIGN.md §7).
+    """
+    n = r.shape[0]
+    diag_mag = jnp.abs(jnp.diagonal(r))
+    floor = rcond * jnp.max(diag_mag)
+
+    def body(i, x):
+        row = n - 1 - i
+        r_row = lax.dynamic_slice_in_dim(r, row, 1, axis=0)  # 1 x n
+        # sum_{j>row} r[row, j] x[j, :] — columns <= row of x are still the
+        # unsolved zeros, so a full product plus the not-yet-written rows of
+        # x works with a mask on r_row instead of dynamic slicing.
+        mask = (jnp.arange(n) > row).astype(r.dtype)[None, :]
+        acc = (r_row * mask) @ x  # 1 x p
+        diag = r_row[0, row]
+        ok = jnp.abs(diag) >= floor
+        safe_diag = jnp.where(ok, diag, 1.0)
+        xi = (lax.dynamic_slice_in_dim(b, row, 1, axis=0) - acc) / safe_diag
+        xi = jnp.where(ok, xi, 0.0)  # truncate unstable directions
+        return lax.dynamic_update_slice_in_dim(x, xi, row, axis=0)
+
+    x0 = jnp.zeros_like(b)
+    return lax.fori_loop(0, n, body, x0)
+
+
+def solve_lower_triangular(
+    l: jnp.ndarray, b: jnp.ndarray, rcond: float = 1e-4
+) -> jnp.ndarray:
+    """Solve ``l x = b`` for lower-triangular ``l`` by forward
+    substitution, with the same truncated-pivot policy as the upper
+    solver."""
+    n = l.shape[0]
+    diag_mag = jnp.abs(jnp.diagonal(l))
+    floor = rcond * jnp.max(diag_mag)
+
+    def body(row, x):
+        l_row = lax.dynamic_slice_in_dim(l, row, 1, axis=0)  # 1 x n
+        mask = (jnp.arange(n) < row).astype(l.dtype)[None, :]
+        acc = (l_row * mask) @ x
+        diag = l_row[0, row]
+        ok = jnp.abs(diag) >= floor
+        safe_diag = jnp.where(ok, diag, 1.0)
+        xi = (lax.dynamic_slice_in_dim(b, row, 1, axis=0) - acc) / safe_diag
+        xi = jnp.where(ok, xi, 0.0)
+        return lax.dynamic_update_slice_in_dim(x, xi, row, axis=0)
+
+    x0 = jnp.zeros_like(b)
+    return lax.fori_loop(0, n, body, x0)
+
+
+def pinv_tall_via_qr(a: jnp.ndarray) -> jnp.ndarray:
+    """Moore-Penrose pseudoinverse of a tall full-column-rank matrix
+    ``a`` (m x n): ``a^+ = R^{-1} Q^T`` from the economy QR.
+    Returns an n x m matrix.
+    """
+    q, r = mgs_qr(a)
+    return solve_upper_triangular(r, q.T)
+
+
+def spectral_norm(a: jnp.ndarray, iters: int = 24) -> jnp.ndarray:
+    """Largest singular value of ``a`` by power iteration on ``a^T a``.
+
+    Deterministic start vector (normalized ones + index ramp) keeps the
+    artifact RNG-free; ``iters`` is fixed so the loop unrolls to a While
+    with static trip count.
+    """
+    n = a.shape[1]
+    v0 = jnp.ones((n,), a.dtype) + 0.01 * jnp.arange(n, dtype=a.dtype)
+    v0 = v0 / jnp.sqrt(jnp.sum(v0 * v0))
+
+    def body(_, v):
+        w = a.T @ (a @ v)
+        return w / jnp.sqrt(jnp.sum(w * w) + _EPS)
+
+    v = lax.fori_loop(0, iters, body, v0)
+    av = a @ v
+    return jnp.sqrt(jnp.sum(av * av) + _EPS)
+
+
+def stable_rank(a: jnp.ndarray, iters: int = 24) -> jnp.ndarray:
+    """Stable rank ``||a||_F^2 / ||a||_2^2`` (paper §4.6), the sketch-based
+    gradient-diversity metric computed from Y-sketches.
+    """
+    fro2 = jnp.sum(a * a)
+    spec = spectral_norm(a, iters)
+    return fro2 / (spec * spec + _EPS)

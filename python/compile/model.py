@@ -1,0 +1,193 @@
+"""L2 model: feed-forward MLP with explicit forward and *manual* backward.
+
+The backward pass is written out rather than taken from ``jax.grad`` because
+the paper's contribution (Eq. 8) replaces one specific factor of the weight
+gradient — the stored input activation — with its sketch reconstruction,
+while the error signals ``delta`` stay exact to preserve the chain rule
+(paper §4.2 and Alg. 2).  An explicit backward makes that substitution a
+one-line swap and keeps the lowered HLO auditable.
+
+Sketch-triplet indexing (our reading of the paper's per-layer triplets;
+DESIGN.md §2/S1 documents the ambiguity):
+
+* hidden activations are ``A^[1] .. A^[L-1]`` (uniform width ``h``); the
+  input ``A^[0] = x`` is the mini-batch itself (already resident, never
+  sketched) and logits are consumed immediately.
+* triplet ``j`` (0-indexed ``j-1`` in the stacked state) sketches:
+  ``X_j <- A^[j-1]`` for ``j >= 2`` (input patterns), ``X_1 <- A^[1]``
+  (self — the input to weight 1 has non-uniform width), and
+  ``Y_j, Z_j <- A^[j]`` (output/interaction patterns).
+* sketched gradients: ``grad W^[l] = delta^[l]^T @ A_tilde^[l-1]`` for
+  ``l >= 2`` where ``A_tilde^[l-1]`` reconstructs from triplet ``l-1``;
+  weight 1 always uses the exact input batch.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Sequence
+
+import jax.numpy as jnp
+
+from . import sketching
+from .kernels.grad_outer import grad_outer
+from .kernels.ref import grad_outer_ref
+
+
+class MLPSpec(NamedTuple):
+    """Architecture: ``dims = (d_in, h, ..., h, d_out)``, L = len(dims)-1
+    weight layers, activation in {"tanh", "relu"}."""
+
+    dims: tuple
+    activation: str
+
+    @property
+    def n_layers(self) -> int:
+        return len(self.dims) - 1
+
+    @property
+    def n_hidden(self) -> int:
+        return len(self.dims) - 2
+
+    @property
+    def d_hidden(self) -> int:
+        return self.dims[1]
+
+
+def activate(pre: jnp.ndarray, kind: str) -> jnp.ndarray:
+    if kind == "tanh":
+        return jnp.tanh(pre)
+    if kind == "relu":
+        return jnp.maximum(pre, 0.0)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def activate_grad_from_value(a: jnp.ndarray, kind: str) -> jnp.ndarray:
+    """sigma'(pre) expressed through the activation *value* so the backward
+    pass needs no pre-activation storage (tanh' = 1 - a^2; relu' = [a > 0])."""
+    if kind == "tanh":
+        return 1.0 - a * a
+    if kind == "relu":
+        return (a > 0.0).astype(a.dtype)
+    raise ValueError(f"unknown activation {kind!r}")
+
+
+def mlp_forward(
+    params: Sequence[tuple[jnp.ndarray, jnp.ndarray]],
+    x: jnp.ndarray,
+    spec: MLPSpec,
+) -> tuple[jnp.ndarray, list[jnp.ndarray]]:
+    """Returns ``(logits, acts)`` with ``acts[j] = A^[j]`` for
+    ``j = 0..L-1`` (``acts[0] = x``); logits are not activated."""
+    acts = [x]
+    a = x
+    n = spec.n_layers
+    for l, (w, b) in enumerate(params):
+        pre = a @ w.T + b[None, :]
+        if l < n - 1:
+            a = activate(pre, spec.activation)
+            acts.append(a)
+        else:
+            return pre, acts
+    raise AssertionError("empty params")
+
+
+def softmax_xent(
+    logits: jnp.ndarray, labels: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Mean cross-entropy over the batch with int32 ``labels``.
+
+    Returns ``(loss, delta_logits, accuracy)`` where ``delta_logits`` is the
+    exact dL/dlogits = (softmax - onehot)/n_b used to seed the backward pass.
+    """
+    n_b, n_cls = logits.shape
+    zmax = jnp.max(logits, axis=1, keepdims=True)
+    shifted = logits - zmax
+    logsumexp = jnp.log(jnp.sum(jnp.exp(shifted), axis=1, keepdims=True))
+    log_probs = shifted - logsumexp
+    onehot = (labels[:, None] == jnp.arange(n_cls)[None, :]).astype(
+        logits.dtype
+    )
+    loss = -jnp.sum(onehot * log_probs) / n_b
+    delta = (jnp.exp(log_probs) - onehot) / n_b
+    pred = jnp.argmax(logits, axis=1)
+    acc = jnp.mean((pred == labels).astype(jnp.float32))
+    return loss, delta, acc
+
+
+def mlp_backward(
+    params: Sequence[tuple[jnp.ndarray, jnp.ndarray]],
+    acts: Sequence[jnp.ndarray],
+    delta_logits: jnp.ndarray,
+    spec: MLPSpec,
+    recon_acts: dict[int, jnp.ndarray] | None = None,
+    use_pallas: bool = True,
+) -> list[tuple[jnp.ndarray, jnp.ndarray]]:
+    """Manual backward for the MLP.
+
+    ``recon_acts`` maps hidden-activation index ``j`` (matching ``acts``)
+    to the sketch-reconstructed ``A_tilde^[j]``; when present it replaces
+    the stored activation in that weight layer's gradient (paper Eq. 8) —
+    error propagation stays exact.
+    """
+    outer = grad_outer if use_pallas else grad_outer_ref
+    n = spec.n_layers
+    grads: list = [None] * n
+    delta = delta_logits
+    for l in range(n - 1, -1, -1):
+        a_in = acts[l]
+        if recon_acts is not None and l in recon_acts:
+            a_in = recon_acts[l]
+        grad_w = outer(delta, a_in)
+        grad_b = jnp.sum(delta, axis=0)
+        grads[l] = (grad_w, grad_b)
+        if l > 0:
+            w, _ = params[l]
+            delta = (delta @ w) * activate_grad_from_value(
+                acts[l], spec.activation
+            )
+    return grads
+
+
+def update_all_sketches(
+    state: sketching.SketchState,
+    proj: sketching.Projections,
+    acts: Sequence[jnp.ndarray],
+    beta: float,
+    use_pallas: bool = True,
+) -> sketching.SketchState:
+    """Eqs. 5a-5c for every hidden activation.  Triplet ``t = j - 1`` for
+    hidden activation ``A^[j]``; its X-sketch input is ``A^[j-1]`` for
+    ``j >= 2`` and ``A^[1]`` itself for ``j = 1`` (see module docstring)."""
+    n_hidden = len(acts) - 1
+    for j in range(1, n_hidden + 1):
+        a_in = acts[j - 1] if j >= 2 else acts[1]
+        state = sketching.update_layer_sketches(
+            state, proj, j - 1, a_in, acts[j], beta, use_pallas
+        )
+    return state
+
+
+def reconstruct_hidden_acts(
+    state: sketching.SketchState,
+    proj: sketching.Projections,
+    n_hidden: int,
+    acts: Sequence[jnp.ndarray] | None = None,
+) -> dict[int, jnp.ndarray]:
+    """Reconstruct every hidden activation ``A_tilde^[j]`` (Eq. 7, fused
+    form) keyed by activation index ``j`` for use in ``mlp_backward``.
+
+    When the live forward activations ``acts`` are provided, each
+    reconstruction is trust-region clipped against the current batch's
+    actual activation norm — the stabilisation that keeps sketched
+    training convergent on correlated data (see sketching.py)."""
+    recon = {}
+    for j in range(1, n_hidden + 1):
+        t = j - 1
+        norm_ref = None
+        if acts is not None:
+            a = acts[j]
+            norm_ref = jnp.sqrt(jnp.sum(a * a) + 1e-12)
+        recon[j] = sketching.reconstruct_batch_activations_lsq(
+            state, proj, t, norm_ref
+        )
+    return recon

@@ -1,0 +1,58 @@
+"""In-graph optimizers (Adam and SGD) threaded through the AOT artifacts.
+
+The optimizer lives inside the lowered train step so the rust coordinator
+never touches parameter math — it only shuttles state tensors.  Adam follows
+Kingma & Ba exactly (the paper trains with Adam lr=1e-3; the 'problematic'
+Fig-5 configuration uses plain SGD).
+"""
+
+from __future__ import annotations
+
+from typing import Sequence
+
+import jax.numpy as jnp
+
+Params = Sequence[tuple[jnp.ndarray, jnp.ndarray]]
+
+
+def adam_update(
+    params: Params,
+    grads: Params,
+    m: Params,
+    v: Params,
+    t: jnp.ndarray,
+    lr: float,
+    beta1: float = 0.9,
+    beta2: float = 0.999,
+    eps: float = 1e-8,
+):
+    """One Adam step over per-layer (w, b) pairs.
+
+    ``t`` is the *previous* step count (f32 scalar); returns
+    ``(new_params, new_m, new_v, new_t)`` with ``new_t = t + 1`` used for
+    bias correction.
+    """
+    t_new = t + 1.0
+    bc1 = 1.0 - jnp.power(beta1, t_new)
+    bc2 = 1.0 - jnp.power(beta2, t_new)
+    new_params, new_m, new_v = [], [], []
+    for (w, b), (gw, gb), (mw, mb), (vw, vb) in zip(params, grads, m, v):
+        mw = beta1 * mw + (1.0 - beta1) * gw
+        mb = beta1 * mb + (1.0 - beta1) * gb
+        vw = beta2 * vw + (1.0 - beta2) * gw * gw
+        vb = beta2 * vb + (1.0 - beta2) * gb * gb
+        w = w - lr * (mw / bc1) / (jnp.sqrt(vw / bc2) + eps)
+        b = b - lr * (mb / bc1) / (jnp.sqrt(vb / bc2) + eps)
+        new_params.append((w, b))
+        new_m.append((mw, mb))
+        new_v.append((vw, vb))
+    return new_params, new_m, new_v, t_new
+
+
+def sgd_update(params: Params, grads: Params, lr: float):
+    """Plain SGD (no momentum), as in the paper's 'problematic' Fig-5
+    configuration."""
+    return [
+        (w - lr * gw, b - lr * gb)
+        for (w, b), (gw, gb) in zip(params, grads)
+    ]

@@ -1,0 +1,257 @@
+"""EMA three-sketch framework (paper §4): sketch state, updates (Eqs. 5a-5c),
+two-stage reconstruction (Eqs. 6-7) and the sketch-derived monitoring
+metrics (§4.6).
+
+State layout
+------------
+Hidden layers are uniform (``d_hidden``), so per-layer sketches are stacked
+into single arrays — this keeps the AOT artifact interface small and lets the
+rust coordinator treat sketch state as three tensors:
+
+    X: (L_h, d, k)   input-pattern sketches   (Eq. 5a)
+    Y: (L_h, d, k)   output-pattern sketches  (Eq. 5b)
+    Z: (L_h, d, s)   interaction sketches     (Eq. 5c)
+    psi: (L_h, s)    layer-specific interaction weights Psi^[l]
+
+with shared batch projections Upsilon/Omega (n_b, k) and Phi (n_b, s),
+k = s = 2r + 1 (paper §4.1).
+
+Reconstruction (algebraic fusion)
+---------------------------------
+The paper states Eq. 6 as the d x d feature-space structure
+``G = Q_Y C Q_X^T`` followed by Eq. 7's batch projection
+``A_tilde = Omega pinv(Y_s) G``.  Expanding ``pinv(Y_s) = R_Y^{-1} Q_Y^T``
+and using ``Q_Y^T Q_Y = I`` collapses the pipeline to
+
+    A_tilde = Omega @ R_Y^{-1} @ C @ Q_X^T                      (*)
+
+with every intermediate k x k until the final (n_b, k) x (k, d) product —
+the d x d matrix is never formed.  ``reconstruct_gema`` still materialises
+Eq. 6 verbatim for the bound-validation harness; the train path uses (*).
+This fusion is recorded in EXPERIMENTS.md §Perf (L2).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+from . import linalg
+from .kernels.ema_update import ema_sketch_update
+from .kernels.ref import ema_sketch_update_ref
+
+
+class SketchState(NamedTuple):
+    """EMA sketch state for all hidden layers of one network."""
+
+    x: jnp.ndarray  # (L_h, d, k)
+    y: jnp.ndarray  # (L_h, d, k)
+    z: jnp.ndarray  # (L_h, d, s)
+
+
+class Projections(NamedTuple):
+    """Shared batch projections + per-layer interaction weights (§4.1)."""
+
+    upsilon: jnp.ndarray  # (n_b, k)
+    omega: jnp.ndarray  # (n_b, k)
+    phi: jnp.ndarray  # (n_b, s)
+    psi: jnp.ndarray  # (L_h, s)
+
+
+def rank_dims(r: int) -> tuple[int, int]:
+    """k = s = 2r + 1 (paper §4.1; the control framework's s = 2k + 1 is
+    deliberately collapsed by the paper for batch-sized projections)."""
+    k = 2 * r + 1
+    return k, k
+
+
+def update_layer_sketches(
+    state: SketchState,
+    proj: Projections,
+    layer: int,
+    a_in: jnp.ndarray,
+    a_out: jnp.ndarray,
+    beta: float,
+    use_pallas: bool = True,
+) -> SketchState:
+    """Apply Eqs. 5a-5c for one hidden layer.
+
+    ``a_in``  — activations entering the layer's weight (A^[l-1], n_b x d)
+    ``a_out`` — activations leaving the layer's nonlinearity (A^[l], n_b x d)
+
+    ``use_pallas=False`` routes through the jnp oracle; the AOT path keeps
+    the Pallas kernel so the fused update lowers into the artifact.
+    """
+    upd = ema_sketch_update if use_pallas else ema_sketch_update_ref
+    x_l = upd(a_in, proj.upsilon, state.x[layer], beta)
+    y_l = upd(a_out, proj.omega, state.y[layer], beta)
+    z_l = upd(a_out, proj.phi, state.z[layer], beta, proj.psi[layer])
+    return SketchState(
+        x=state.x.at[layer].set(x_l),
+        y=state.y.at[layer].set(y_l),
+        z=state.z.at[layer].set(z_l),
+    )
+
+
+def reconstruct_core(
+    x_s: jnp.ndarray, y_s: jnp.ndarray, z_s: jnp.ndarray
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Two-stage least-squares core (paper §4.2 steps 1-2).
+
+    Returns ``(q_y, r_y, c, q_x)`` with
+      q_y (d, k), r_y (k, k): economy QR of the Y-sketch
+      q_x (d, k):             economy QR of the X-sketch
+      c   (k, k):             transformation core C = P_X^T (Q_Y^T Z)^T
+    """
+    q_y, r_y = linalg.mgs_qr(y_s)
+    q_x, _ = linalg.mgs_qr(x_s)
+    # Step 1: C_inter = argmin ||Q_Y C - Z||_F = Q_Y^T Z (orthonormal Q_Y).
+    c_inter = q_y.T @ z_s  # (k, s) with s == k
+    # Step 2: P_X from QR of X^T (k x d wide), then
+    # C = argmin ||P_X C - C_inter^T|| = P_X^T C_inter^T.
+    p_x = linalg.householder_qr_wide(x_s.T)
+    c = p_x.T @ c_inter.T
+    return q_y, r_y, c, q_x
+
+
+def reconstruct_gema(
+    x_s: jnp.ndarray, y_s: jnp.ndarray, z_s: jnp.ndarray
+) -> jnp.ndarray:
+    """Paper Eq. 6 verbatim: the d x d feature-space EMA structure
+    ``G = Q_Y C Q_X^T``.  Diagnostic/validation path only (the train path
+    uses the fused form below)."""
+    q_y, _, c, q_x = reconstruct_core(x_s, y_s, z_s)
+    return q_y @ c @ q_x.T
+
+
+# Trust-region factor for the reconstruction norm clip: Y = A^T Omega has
+# E||Y||_F^2 = k ||A||_F^2, so ||Y||_F / sqrt(k) estimates ||A||_F; the
+# reconstruction is rescaled whenever it exceeds CLIP_GAMMA times that.
+# Without the clip the paper's Eq. 7 (Omega R_Y^{-1} C Q_X^T, with C built
+# from an *independent* projection) amplifies by 1000x on fast-decaying
+# sketch spectra — measured in tests/test_sketching.py and EXPERIMENTS.md.
+CLIP_GAMMA = 3.0
+
+
+def reconstruct_batch_activations(
+    x_s: jnp.ndarray,
+    y_s: jnp.ndarray,
+    z_s: jnp.ndarray,
+    omega: jnp.ndarray,
+    norm_ref: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Paper Eq. 7 via the algebraically fused form (*) in the module
+    docstring: ``A_tilde = Omega R_Y^{-1} C Q_X^T`` (n_b x d), with a
+    trust-region norm clip (see ``CLIP_GAMMA``).
+
+    ``norm_ref``: Frobenius norm of the activation matrix ``A_tilde`` is
+    standing in for.  During sketched backprop the *current batch's*
+    activation is alive in-graph at reconstruction time, so the clip can be
+    exact: highly correlated activations make the EMA sketch spectrum decay
+    fast and the unclipped Eq. 7 drifts upward run-away (measured: MNIST
+    tanh net diverges at ~epoch 2 without this; EXPERIMENTS.md §Stability).
+    Falls back to the Y-sketch energy estimate ``||Y||_F / sqrt(k)``.
+    """
+    _, r_y, c, q_x = reconstruct_core(x_s, y_s, z_s)
+    # R_Y^{-1} C by truncated triangular solve (never forms the inverse).
+    ry_inv_c = linalg.solve_upper_triangular(r_y, c)  # (k, k)
+    coeff = omega @ ry_inv_c  # (n_b, k)
+    a_tilde = coeff @ q_x.T  # (n_b, d)
+    if norm_ref is None:
+        k = y_s.shape[1]
+        norm_ref = jnp.sqrt(jnp.sum(y_s * y_s) / k + 1e-12)
+    a_t_norm = jnp.sqrt(jnp.sum(a_tilde * a_tilde) + 1e-12)
+    scale = jnp.minimum(1.0, CLIP_GAMMA * norm_ref / a_t_norm)
+    return a_tilde * scale
+
+
+def reconstruct_batch_activations_lsq(
+    state: "SketchState",
+    proj: "Projections",
+    layer: int,
+    norm_ref: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """Sequential least-squares reconstruction using ALL THREE sketches.
+
+    The EMA sketches are exact projections of the (never-materialised)
+    EMA activation matrix (Lemma 4.1): ``X = A_e^T Ups``, ``Y = A_e^T Om``,
+    ``Z = (A_e^T Phi) . psi^T`` with A_e^T of shape (d, n_b).  Stacking
+    ``P = [Ups | Om | Phi]`` (n_b, 3k) and ``S = [X | Y | Z / psi]``
+    (d, 3k), the minimum-norm least-squares estimate of the batch-space
+    activations is
+
+        A_tilde = Q_P R_P^{-T} S^T          (P = Q_P R_P economy QR)
+
+    i.e. the orthogonal projection of A_e onto the 3k-dimensional span of
+    the known projections.  This is the control framework's "sequential
+    least-squares procedure" (paper §4.2) carried out against the *known*
+    batch projections — including the Psi un-scaling the paper's Eq. 6-7
+    drops.  Being a projection it is non-expansive, which is what makes
+    sketched training stable on correlated activations where the Eq. 7
+    pipeline (kept as ``reconstruct_batch_activations`` for diagnostics
+    and the bound harness) measurably diverges (EXPERIMENTS.md
+    §Stability).  The train-step path uses this routine.
+    """
+    x_s = state.x[layer]
+    y_s = state.y[layer]
+    z_s = state.z[layer]
+    psi = proj.psi[layer]
+    psi_safe = jnp.where(jnp.abs(psi) < 1e-3, 1e-3, psi)
+    z_unscaled = z_s / psi_safe[None, :]
+    s_mat = jnp.concatenate([x_s, y_s, z_unscaled], axis=1)  # (d, 3k)
+    p_mat = jnp.concatenate(
+        [proj.upsilon, proj.omega, proj.phi], axis=1
+    )  # (n_b, 3k)
+    q_p, r_p = linalg.mgs_qr(p_mat)  # n_b >= 3k in all experiment configs
+    # A_tilde = Q_P R_P^{-T} S^T: lower-triangular solve then project.
+    w = linalg.solve_lower_triangular(r_p.T, s_mat.T)  # (3k, d)
+    a_tilde = q_p @ w  # (n_b, d)
+    if norm_ref is not None:
+        a_t_norm = jnp.sqrt(jnp.sum(a_tilde * a_tilde) + 1e-12)
+        scale = jnp.minimum(1.0, CLIP_GAMMA * norm_ref / a_t_norm)
+        a_tilde = a_tilde * scale
+    return a_tilde
+
+
+def reconstruct_batch_activations_unfused(
+    x_s: jnp.ndarray,
+    y_s: jnp.ndarray,
+    z_s: jnp.ndarray,
+    omega: jnp.ndarray,
+) -> jnp.ndarray:
+    """Eq. 7 exactly as written (Omega pinv(Y) G with the d x d G formed).
+    Used by tests to prove the fused path is numerically identical and by
+    the perf harness as the 'before' datapoint."""
+    g = reconstruct_gema(x_s, y_s, z_s)
+    pinv_y = linalg.pinv_tall_via_qr(y_s)  # (k, d)
+    return omega @ pinv_y @ g
+
+
+def monitor_metrics(
+    state: SketchState, power_iters: int = 24
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """Sketch-derived monitoring metrics (paper §4.6) for every hidden
+    layer, returned as (L_h,) vectors:
+
+      z_norm      ||Z_s||_F        gradient-magnitude proxy
+      stable_rank ||Y||_F^2/||Y||_2^2  gradient-diversity metric
+      y_norm      ||Y_s||_F        activation-energy proxy
+      x_norm      ||X_s||_F        input-energy proxy
+    """
+    l_h = state.x.shape[0]
+    z_norms = []
+    s_ranks = []
+    y_norms = []
+    x_norms = []
+    for layer in range(l_h):
+        z_norms.append(jnp.sqrt(jnp.sum(state.z[layer] ** 2)))
+        s_ranks.append(linalg.stable_rank(state.y[layer], power_iters))
+        y_norms.append(jnp.sqrt(jnp.sum(state.y[layer] ** 2)))
+        x_norms.append(jnp.sqrt(jnp.sum(state.x[layer] ** 2)))
+    return (
+        jnp.stack(z_norms),
+        jnp.stack(s_ranks),
+        jnp.stack(y_norms),
+        jnp.stack(x_norms),
+    )

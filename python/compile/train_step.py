@@ -1,0 +1,723 @@
+"""Train-step builders: assemble forward + sketch updates + (sketched)
+backward + optimizer into a single flat-argument function ready for AOT
+lowering, together with the input/output specs the rust runtime needs.
+
+Variants (paper §5.1.1):
+  standard   exact backprop, no sketches (baseline)
+  sketched   Eq. 8 gradients from reconstructed activations, hidden layers
+  monitored  exact backprop for updates + EMA sketch accumulation for
+             diagnostics only (the PINN / Fig-5 deployment mode)
+
+Every builder returns ``(fn, in_specs, out_specs)`` where specs are ordered
+``ArgSpec(name, shape, dtype)`` lists; aot.py serialises them into
+``artifacts/manifest.json`` and the rust side constructs literals in exactly
+that order.  Chunked builders wrap K consecutive optimizer steps in a
+``lax.fori_loop`` over stacked batch data so one PJRT call advances K steps
+(amortising host<->device literal traffic; see EXPERIMENTS.md §Perf L3).
+"""
+
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax.numpy as jnp
+from jax import lax
+
+from . import model as M
+from . import optim, sketching
+
+
+class ArgSpec(NamedTuple):
+    name: str
+    shape: tuple
+    dtype: str  # "f32" | "i32"
+
+
+class StepConfig(NamedTuple):
+    spec: M.MLPSpec
+    variant: str  # standard | sketched | monitored
+    optimizer: str  # adam | sgd
+    n_b: int
+    r: int = 2
+    beta: float = 0.95
+    lr: float = 1e-3
+    chunk: int = 0  # 0 = single step; K > 0 = K fused steps
+    power_iters: int = 24
+    emit_grad_norms: bool = True
+
+    @property
+    def k(self) -> int:
+        return 2 * self.r + 1
+
+    @property
+    def uses_sketches(self) -> bool:
+        return self.variant in ("sketched", "monitored")
+
+
+def _param_specs(spec: M.MLPSpec, prefix: str = "") -> list[ArgSpec]:
+    out = []
+    for l in range(spec.n_layers):
+        d_out, d_in = spec.dims[l + 1], spec.dims[l]
+        out.append(ArgSpec(f"{prefix}w{l}", (d_out, d_in), "f32"))
+        out.append(ArgSpec(f"{prefix}b{l}", (d_out,), "f32"))
+    return out
+
+
+def _sketch_specs(cfg: StepConfig) -> list[ArgSpec]:
+    lh, d, k = cfg.spec.n_hidden, cfg.spec.d_hidden, cfg.k
+    return [
+        ArgSpec("sketch_x", (lh, d, k), "f32"),
+        ArgSpec("sketch_y", (lh, d, k), "f32"),
+        ArgSpec("sketch_z", (lh, d, k), "f32"),
+        ArgSpec("proj_upsilon", (cfg.n_b, k), "f32"),
+        ArgSpec("proj_omega", (cfg.n_b, k), "f32"),
+        ArgSpec("proj_phi", (cfg.n_b, k), "f32"),
+        ArgSpec("proj_psi", (lh, k), "f32"),
+    ]
+
+
+def input_specs(cfg: StepConfig) -> list[ArgSpec]:
+    specs = _param_specs(cfg.spec)
+    if cfg.optimizer == "adam":
+        specs += _param_specs(cfg.spec, "m_")
+        specs += _param_specs(cfg.spec, "v_")
+        specs.append(ArgSpec("t", (), "f32"))
+    if cfg.uses_sketches:
+        specs += _sketch_specs(cfg)
+    d_in = cfg.spec.dims[0]
+    if cfg.chunk:
+        specs.append(ArgSpec("batch_x", (cfg.chunk, cfg.n_b, d_in), "f32"))
+        specs.append(ArgSpec("batch_y", (cfg.chunk, cfg.n_b), "i32"))
+    else:
+        specs.append(ArgSpec("batch_x", (cfg.n_b, d_in), "f32"))
+        specs.append(ArgSpec("batch_y", (cfg.n_b,), "i32"))
+    return specs
+
+
+def output_specs(cfg: StepConfig) -> list[ArgSpec]:
+    specs = _param_specs(cfg.spec, "out_")
+    if cfg.optimizer == "adam":
+        specs += _param_specs(cfg.spec, "out_m_")
+        specs += _param_specs(cfg.spec, "out_v_")
+        specs.append(ArgSpec("out_t", (), "f32"))
+    if cfg.uses_sketches:
+        lh, d, k = cfg.spec.n_hidden, cfg.spec.d_hidden, cfg.k
+        specs.append(ArgSpec("out_sketch_x", (lh, d, k), "f32"))
+        specs.append(ArgSpec("out_sketch_y", (lh, d, k), "f32"))
+        specs.append(ArgSpec("out_sketch_z", (lh, d, k), "f32"))
+    kdim = (cfg.chunk,) if cfg.chunk else ()
+    specs.append(ArgSpec("loss", kdim, "f32"))
+    specs.append(ArgSpec("accuracy", kdim, "f32"))
+    if cfg.uses_sketches:
+        lh = cfg.spec.n_hidden
+        specs.append(ArgSpec("z_norm", kdim + (lh,), "f32"))
+        specs.append(ArgSpec("stable_rank", kdim + (lh,), "f32"))
+        specs.append(ArgSpec("y_norm", kdim + (lh,), "f32"))
+        specs.append(ArgSpec("x_norm", kdim + (lh,), "f32"))
+    if cfg.emit_grad_norms:
+        specs.append(
+            ArgSpec("grad_norm", kdim + (cfg.spec.n_layers,), "f32")
+        )
+    return specs
+
+
+def _unflatten_params(args: list, spec: M.MLPSpec, offset: int):
+    params = []
+    for _ in range(spec.n_layers):
+        params.append((args[offset], args[offset + 1]))
+        offset += 2
+    return params, offset
+
+
+def _flatten_params(params) -> list:
+    out = []
+    for w, b in params:
+        out += [w, b]
+    return out
+
+
+def _core_step(cfg: StepConfig, params, opt_state, sk_state, proj, x, y):
+    """One optimizer step.  Returns (params, opt_state, sk_state, metrics)
+    where metrics is a flat list ordered per ``output_specs`` tail."""
+    logits, acts = M.mlp_forward(params, x, cfg.spec)
+    loss, delta, acc = M.softmax_xent(logits, y)
+
+    if cfg.uses_sketches:
+        sk_state = M.update_all_sketches(sk_state, proj, acts, cfg.beta)
+
+    recon = None
+    if cfg.variant == "sketched":
+        recon = M.reconstruct_hidden_acts(
+            sk_state, proj, cfg.spec.n_hidden, acts
+        )
+    grads = M.mlp_backward(params, acts, delta, cfg.spec, recon)
+
+    if cfg.optimizer == "adam":
+        m, v, t = opt_state
+        params, m, v, t = optim.adam_update(
+            params, grads, m, v, t, cfg.lr
+        )
+        opt_state = (m, v, t)
+    else:
+        params = optim.sgd_update(params, grads, cfg.lr)
+
+    metrics = [loss, acc]
+    if cfg.uses_sketches:
+        zn, sr, yn, xn = sketching.monitor_metrics(
+            sk_state, cfg.power_iters
+        )
+        metrics += [zn, sr, yn, xn]
+    if cfg.emit_grad_norms:
+        gn = jnp.stack(
+            [jnp.sqrt(jnp.sum(gw * gw)) for gw, _ in grads]
+        )
+        metrics.append(gn)
+    return params, opt_state, sk_state, metrics
+
+
+def _parse_args(cfg: StepConfig, args):
+    """Split the flat argument list per ``input_specs`` ordering."""
+    i = 0
+    params, i = _unflatten_params(args, cfg.spec, i)
+    opt_state = None
+    if cfg.optimizer == "adam":
+        m, i = _unflatten_params(args, cfg.spec, i)
+        v, i = _unflatten_params(args, cfg.spec, i)
+        t = args[i]
+        i += 1
+        opt_state = (m, v, t)
+    sk_state, proj = None, None
+    if cfg.uses_sketches:
+        sk_state = sketching.SketchState(args[i], args[i + 1], args[i + 2])
+        proj = sketching.Projections(
+            args[i + 3], args[i + 4], args[i + 5], args[i + 6]
+        )
+        i += 7
+    x, y = args[i], args[i + 1]
+    return params, opt_state, sk_state, proj, x, y
+
+
+def _flatten_state(cfg: StepConfig, params, opt_state, sk_state) -> list:
+    out = _flatten_params(params)
+    if cfg.optimizer == "adam":
+        m, v, t = opt_state
+        out += _flatten_params(m) + _flatten_params(v) + [t]
+    if cfg.uses_sketches:
+        out += [sk_state.x, sk_state.y, sk_state.z]
+    return out
+
+
+def build_step(cfg: StepConfig) -> tuple[Callable, list[ArgSpec], list[ArgSpec]]:
+    """Single-step artifact: one forward/backward/update per call."""
+    assert cfg.chunk == 0
+
+    def fn(*args):
+        params, opt_state, sk_state, proj, x, y = _parse_args(cfg, args)
+        params, opt_state, sk_state, metrics = _core_step(
+            cfg, params, opt_state, sk_state, proj, x, y
+        )
+        return tuple(_flatten_state(cfg, params, opt_state, sk_state) + metrics)
+
+    return fn, input_specs(cfg), output_specs(cfg)
+
+
+def build_chunk(cfg: StepConfig) -> tuple[Callable, list[ArgSpec], list[ArgSpec]]:
+    """Chunked artifact: ``cfg.chunk`` consecutive steps fused into one
+    ``lax.fori_loop`` over stacked batch data.  Metric outputs gain a
+    leading K axis."""
+    assert cfg.chunk > 0
+    k_steps = cfg.chunk
+    # State outputs: params (+ adam m/v/t) (+ sketch x/y/z); the rest of
+    # output_specs are per-step metrics that gain a leading K axis.
+    n_state = 2 * cfg.spec.n_layers
+    if cfg.optimizer == "adam":
+        n_state += 4 * cfg.spec.n_layers + 1
+    if cfg.uses_sketches:
+        n_state += 3
+    n_metrics = len(output_specs(cfg)) - n_state
+
+    def fn(*args):
+        params, opt_state, sk_state, proj, xs, ys = _parse_args(cfg, args)
+        metric_specs = output_specs(cfg)[-n_metrics:]
+        metric_acc = [
+            jnp.zeros((k_steps,) + s.shape[1:], jnp.float32)
+            for s in metric_specs
+        ]
+
+        def body(step, carry):
+            params, opt_state, sk_state, metric_acc = carry
+            x = lax.dynamic_index_in_dim(xs, step, 0, keepdims=False)
+            y = lax.dynamic_index_in_dim(ys, step, 0, keepdims=False)
+            params, opt_state, sk_state, metrics = _core_step(
+                cfg, params, opt_state, sk_state, proj, x, y
+            )
+            metric_acc = [
+                lax.dynamic_update_slice_in_dim(acc, m[None], step, axis=0)
+                for acc, m in zip(metric_acc, metrics)
+            ]
+            return (params, opt_state, sk_state, metric_acc)
+
+        params, opt_state, sk_state, metric_acc = lax.fori_loop(
+            0, k_steps, body, (params, opt_state, sk_state, metric_acc)
+        )
+        return tuple(
+            _flatten_state(cfg, params, opt_state, sk_state) + metric_acc
+        )
+
+    return fn, input_specs(cfg), output_specs(cfg)
+
+
+def build(cfg: StepConfig):
+    return build_chunk(cfg) if cfg.chunk else build_step(cfg)
+
+
+# ---------------------------------------------------------------------------
+# CNN-MLP (CIFAR, Fig. 2)
+# ---------------------------------------------------------------------------
+
+from . import cnn as C  # noqa: E402
+
+
+class CNNStepConfig(NamedTuple):
+    cnn: "C.CNNSpec"
+    variant: str  # standard | sketched | monitored
+    n_b: int
+    r: int = 2
+    beta: float = 0.95
+    lr: float = 1e-3
+    chunk: int = 0
+    power_iters: int = 24
+    emit_grad_norms: bool = True
+
+    @property
+    def k(self) -> int:
+        return 2 * self.r + 1
+
+    @property
+    def uses_sketches(self) -> bool:
+        return self.variant in ("sketched", "monitored")
+
+
+def _conv_param_specs(cnn: "C.CNNSpec", prefix: str = "") -> list[ArgSpec]:
+    out = []
+    chans = cnn.channels
+    for i in range(len(chans) - 1):
+        out.append(
+            ArgSpec(f"{prefix}conv_k{i}", (chans[i + 1], chans[i], 3, 3), "f32")
+        )
+        out.append(ArgSpec(f"{prefix}conv_b{i}", (chans[i + 1],), "f32"))
+    return out
+
+
+def cnn_input_specs(cfg: CNNStepConfig) -> list[ArgSpec]:
+    fc = cfg.cnn.fc_spec
+    specs = _conv_param_specs(cfg.cnn) + _param_specs(fc)
+    specs += _conv_param_specs(cfg.cnn, "m_") + _param_specs(fc, "m_")
+    specs += _conv_param_specs(cfg.cnn, "v_") + _param_specs(fc, "v_")
+    specs.append(ArgSpec("t", (), "f32"))
+    if cfg.uses_sketches:
+        lh, d, k = fc.n_hidden, fc.d_hidden, cfg.k
+        specs += [
+            ArgSpec("sketch_x", (lh, d, k), "f32"),
+            ArgSpec("sketch_y", (lh, d, k), "f32"),
+            ArgSpec("sketch_z", (lh, d, k), "f32"),
+            ArgSpec("proj_upsilon", (cfg.n_b, k), "f32"),
+            ArgSpec("proj_omega", (cfg.n_b, k), "f32"),
+            ArgSpec("proj_phi", (cfg.n_b, k), "f32"),
+            ArgSpec("proj_psi", (lh, k), "f32"),
+        ]
+    hw = cfg.cnn.in_hw
+    cin = cfg.cnn.channels[0]
+    if cfg.chunk:
+        specs.append(ArgSpec("batch_x", (cfg.chunk, cfg.n_b, cin, hw, hw), "f32"))
+        specs.append(ArgSpec("batch_y", (cfg.chunk, cfg.n_b), "i32"))
+    else:
+        specs.append(ArgSpec("batch_x", (cfg.n_b, cin, hw, hw), "f32"))
+        specs.append(ArgSpec("batch_y", (cfg.n_b,), "i32"))
+    return specs
+
+
+def cnn_output_specs(cfg: CNNStepConfig) -> list[ArgSpec]:
+    fc = cfg.cnn.fc_spec
+    specs = _conv_param_specs(cfg.cnn, "out_") + _param_specs(fc, "out_")
+    specs += _conv_param_specs(cfg.cnn, "out_m_") + _param_specs(fc, "out_m_")
+    specs += _conv_param_specs(cfg.cnn, "out_v_") + _param_specs(fc, "out_v_")
+    specs.append(ArgSpec("out_t", (), "f32"))
+    if cfg.uses_sketches:
+        lh, d, k = fc.n_hidden, fc.d_hidden, cfg.k
+        specs += [
+            ArgSpec("out_sketch_x", (lh, d, k), "f32"),
+            ArgSpec("out_sketch_y", (lh, d, k), "f32"),
+            ArgSpec("out_sketch_z", (lh, d, k), "f32"),
+        ]
+    kdim = (cfg.chunk,) if cfg.chunk else ()
+    specs.append(ArgSpec("loss", kdim, "f32"))
+    specs.append(ArgSpec("accuracy", kdim, "f32"))
+    if cfg.uses_sketches:
+        lh = fc.n_hidden
+        specs += [
+            ArgSpec("z_norm", kdim + (lh,), "f32"),
+            ArgSpec("stable_rank", kdim + (lh,), "f32"),
+            ArgSpec("y_norm", kdim + (lh,), "f32"),
+            ArgSpec("x_norm", kdim + (lh,), "f32"),
+        ]
+    if cfg.emit_grad_norms:
+        n_mats = (len(cfg.cnn.channels) - 1) + fc.n_layers
+        specs.append(ArgSpec("grad_norm", kdim + (n_mats,), "f32"))
+    return specs
+
+
+def _cnn_core_step(cfg: CNNStepConfig, conv_params, fc_params, opt_state,
+                   sk_state, proj, x, y):
+    fc = cfg.cnn.fc_spec
+    logits, feats, fc_acts = C.cnn_forward(conv_params, fc_params, x, cfg.cnn)
+    loss, delta, acc = M.softmax_xent(logits, y)
+
+    if cfg.uses_sketches:
+        sk_state = M.update_all_sketches(sk_state, proj, fc_acts, cfg.beta)
+    recon = None
+    if cfg.variant == "sketched":
+        recon = M.reconstruct_hidden_acts(sk_state, proj, fc.n_hidden, fc_acts)
+    conv_grads, fc_grads = C.cnn_backward(
+        conv_params, fc_params, x, feats, fc_acts, delta, cfg.cnn, recon
+    )
+
+    all_params = list(conv_params) + list(fc_params)
+    all_grads = list(conv_grads) + list(fc_grads)
+    m, v, t = opt_state
+    all_params, m, v, t = optim.adam_update(all_params, all_grads, m, v, t, cfg.lr)
+    n_conv = len(cfg.cnn.channels) - 1
+    conv_params = all_params[:n_conv]
+    fc_params = all_params[n_conv:]
+
+    metrics = [loss, acc]
+    if cfg.uses_sketches:
+        zn, sr, yn, xn = sketching.monitor_metrics(sk_state, cfg.power_iters)
+        metrics += [zn, sr, yn, xn]
+    if cfg.emit_grad_norms:
+        gn = jnp.stack([jnp.sqrt(jnp.sum(gw * gw)) for gw, _ in all_grads])
+        metrics.append(gn)
+    return conv_params, fc_params, (m, v, t), sk_state, metrics
+
+
+def _cnn_parse_args(cfg: CNNStepConfig, args):
+    n_conv = len(cfg.cnn.channels) - 1
+    fc = cfg.cnn.fc_spec
+    i = 0
+
+    def take_pairs(n, i):
+        out = []
+        for _ in range(n):
+            out.append((args[i], args[i + 1]))
+            i += 2
+        return out, i
+
+    conv_params, i = take_pairs(n_conv, i)
+    fc_params, i = take_pairs(fc.n_layers, i)
+    m_conv, i = take_pairs(n_conv, i)
+    m_fc, i = take_pairs(fc.n_layers, i)
+    v_conv, i = take_pairs(n_conv, i)
+    v_fc, i = take_pairs(fc.n_layers, i)
+    t = args[i]
+    i += 1
+    sk_state, proj = None, None
+    if cfg.uses_sketches:
+        sk_state = sketching.SketchState(args[i], args[i + 1], args[i + 2])
+        proj = sketching.Projections(args[i + 3], args[i + 4], args[i + 5], args[i + 6])
+        i += 7
+    x, y = args[i], args[i + 1]
+    return conv_params, fc_params, (m_conv + m_fc, v_conv + v_fc, t), sk_state, proj, x, y
+
+
+def _cnn_flatten_state(cfg, conv_params, fc_params, opt_state, sk_state):
+    m, v, t = opt_state
+    out = _flatten_params(conv_params) + _flatten_params(fc_params)
+    out += _flatten_params(m) + _flatten_params(v) + [t]
+    if cfg.uses_sketches:
+        out += [sk_state.x, sk_state.y, sk_state.z]
+    return out
+
+
+def build_cnn(cfg: CNNStepConfig):
+    """CNN-MLP train-step artifact (single or chunked)."""
+
+    def single(conv_params, fc_params, opt_state, sk_state, proj, x, y):
+        return _cnn_core_step(cfg, conv_params, fc_params, opt_state, sk_state, proj, x, y)
+
+    if cfg.chunk == 0:
+        def fn(*args):
+            conv_params, fc_params, opt_state, sk_state, proj, x, y = _cnn_parse_args(cfg, args)
+            conv_params, fc_params, opt_state, sk_state, metrics = single(
+                conv_params, fc_params, opt_state, sk_state, proj, x, y)
+            return tuple(_cnn_flatten_state(cfg, conv_params, fc_params, opt_state, sk_state) + metrics)
+        return fn, cnn_input_specs(cfg), cnn_output_specs(cfg)
+
+    k_steps = cfg.chunk
+    n_conv = len(cfg.cnn.channels) - 1
+    n_mats = n_conv + cfg.cnn.fc_spec.n_layers
+    n_state = 2 * n_mats * 3 + 1 + (3 if cfg.uses_sketches else 0)
+    n_metrics = len(cnn_output_specs(cfg)) - n_state
+
+    def fn(*args):
+        conv_params, fc_params, opt_state, sk_state, proj, xs, ys = _cnn_parse_args(cfg, args)
+        metric_specs = cnn_output_specs(cfg)[-n_metrics:]
+        metric_acc = [jnp.zeros((k_steps,) + s.shape[1:], jnp.float32) for s in metric_specs]
+
+        def body(step, carry):
+            conv_params, fc_params, opt_state, sk_state, metric_acc = carry
+            x = lax.dynamic_index_in_dim(xs, step, 0, keepdims=False)
+            y = lax.dynamic_index_in_dim(ys, step, 0, keepdims=False)
+            conv_params, fc_params, opt_state, sk_state, metrics = single(
+                conv_params, fc_params, opt_state, sk_state, proj, x, y)
+            metric_acc = [
+                lax.dynamic_update_slice_in_dim(acc, mm[None], step, axis=0)
+                for acc, mm in zip(metric_acc, metrics)
+            ]
+            return (conv_params, fc_params, opt_state, sk_state, metric_acc)
+
+        conv_params, fc_params, opt_state, sk_state, metric_acc = lax.fori_loop(
+            0, k_steps, body, (conv_params, fc_params, opt_state, sk_state, metric_acc))
+        return tuple(_cnn_flatten_state(cfg, conv_params, fc_params, opt_state, sk_state) + metric_acc)
+
+    return fn, cnn_input_specs(cfg), cnn_output_specs(cfg)
+
+
+# ---------------------------------------------------------------------------
+# PINN (2D Poisson, Figs. 3-4) — monitoring-only sketching
+# ---------------------------------------------------------------------------
+
+import jax  # noqa: E402
+
+from . import pinn as P  # noqa: E402
+
+
+class PINNStepConfig(NamedTuple):
+    pinn: "P.PINNSpec"
+    variant: str  # standard | monitored
+    n_f: int = 256  # interior collocation batch
+    n_bc: int = 64  # boundary batch
+    r: int = 2
+    beta: float = 0.95
+    lr: float = 1e-3
+    chunk: int = 0
+    power_iters: int = 16
+    emit_grad_norms: bool = True
+
+    @property
+    def k(self) -> int:
+        return 2 * self.r + 1
+
+    @property
+    def uses_sketches(self) -> bool:
+        return self.variant == "monitored"
+
+
+def pinn_input_specs(cfg: PINNStepConfig) -> list[ArgSpec]:
+    spec = cfg.pinn.mlp_spec
+    specs = _param_specs(spec)
+    specs += _param_specs(spec, "m_") + _param_specs(spec, "v_")
+    specs.append(ArgSpec("t", (), "f32"))
+    if cfg.uses_sketches:
+        lh, d, k = spec.n_hidden, spec.d_hidden, cfg.k
+        specs += [
+            ArgSpec("sketch_x", (lh, d, k), "f32"),
+            ArgSpec("sketch_y", (lh, d, k), "f32"),
+            ArgSpec("sketch_z", (lh, d, k), "f32"),
+            ArgSpec("proj_upsilon", (cfg.n_f, k), "f32"),
+            ArgSpec("proj_omega", (cfg.n_f, k), "f32"),
+            ArgSpec("proj_phi", (cfg.n_f, k), "f32"),
+            ArgSpec("proj_psi", (lh, k), "f32"),
+        ]
+    if cfg.chunk:
+        specs.append(ArgSpec("interior", (cfg.chunk, cfg.n_f, 2), "f32"))
+        specs.append(ArgSpec("boundary", (cfg.chunk, cfg.n_bc, 2), "f32"))
+    else:
+        specs.append(ArgSpec("interior", (cfg.n_f, 2), "f32"))
+        specs.append(ArgSpec("boundary", (cfg.n_bc, 2), "f32"))
+    return specs
+
+
+def pinn_output_specs(cfg: PINNStepConfig) -> list[ArgSpec]:
+    spec = cfg.pinn.mlp_spec
+    specs = _param_specs(spec, "out_")
+    specs += _param_specs(spec, "out_m_") + _param_specs(spec, "out_v_")
+    specs.append(ArgSpec("out_t", (), "f32"))
+    if cfg.uses_sketches:
+        lh, d, k = spec.n_hidden, spec.d_hidden, cfg.k
+        specs += [
+            ArgSpec("out_sketch_x", (lh, d, k), "f32"),
+            ArgSpec("out_sketch_y", (lh, d, k), "f32"),
+            ArgSpec("out_sketch_z", (lh, d, k), "f32"),
+        ]
+    kdim = (cfg.chunk,) if cfg.chunk else ()
+    specs += [
+        ArgSpec("loss", kdim, "f32"),
+        ArgSpec("pde_mse", kdim, "f32"),
+        ArgSpec("bc_mse", kdim, "f32"),
+    ]
+    if cfg.uses_sketches:
+        lh = spec.n_hidden
+        specs += [
+            ArgSpec("z_norm", kdim + (lh,), "f32"),
+            ArgSpec("stable_rank", kdim + (lh,), "f32"),
+            ArgSpec("y_norm", kdim + (lh,), "f32"),
+            ArgSpec("x_norm", kdim + (lh,), "f32"),
+        ]
+    if cfg.emit_grad_norms:
+        specs.append(ArgSpec("grad_norm", kdim + (spec.n_layers,), "f32"))
+    return specs
+
+
+def _pinn_core_step(cfg: PINNStepConfig, params, opt_state, sk_state, proj,
+                    interior, boundary):
+    spec = cfg.pinn
+
+    def loss_fn(plist):
+        pl_pairs = [(plist[2 * i], plist[2 * i + 1]) for i in range(len(plist) // 2)]
+        total, pde, bc = P.pinn_loss(pl_pairs, interior, boundary, spec)
+        return total, (pde, bc)
+
+    flat = _flatten_params(params)
+    (total, (pde, bc)), flat_grads = jax.value_and_grad(loss_fn, has_aux=True)(flat)
+    grads = [(flat_grads[2 * i], flat_grads[2 * i + 1]) for i in range(len(flat_grads) // 2)]
+
+    if cfg.uses_sketches:
+        # Monitoring hooks: recompute forward activations on the interior
+        # batch (cheap, matches the paper's forward-hook accumulation).
+        _, acts = M.mlp_forward(params, interior, spec.mlp_spec)
+        sk_state = M.update_all_sketches(sk_state, proj, acts, cfg.beta)
+
+    m, v, t = opt_state
+    params, m, v, t = optim.adam_update(params, grads, m, v, t, cfg.lr)
+    opt_state = (m, v, t)
+
+    metrics = [total, pde, bc]
+    if cfg.uses_sketches:
+        zn, sr, yn, xn = sketching.monitor_metrics(sk_state, cfg.power_iters)
+        metrics += [zn, sr, yn, xn]
+    if cfg.emit_grad_norms:
+        gn = jnp.stack([jnp.sqrt(jnp.sum(gw * gw)) for gw, _ in grads])
+        metrics.append(gn)
+    return params, opt_state, sk_state, metrics
+
+
+def build_pinn(cfg: PINNStepConfig):
+    spec = cfg.pinn.mlp_spec
+
+    def parse(args):
+        i = 0
+        params, i = _unflatten_params(args, spec, i)
+        m, i = _unflatten_params(args, spec, i)
+        v, i = _unflatten_params(args, spec, i)
+        t = args[i]
+        i += 1
+        sk_state, proj = None, None
+        if cfg.uses_sketches:
+            sk_state = sketching.SketchState(args[i], args[i + 1], args[i + 2])
+            proj = sketching.Projections(args[i + 3], args[i + 4], args[i + 5], args[i + 6])
+            i += 7
+        return params, (m, v, t), sk_state, proj, args[i], args[i + 1]
+
+    def flatten_state(params, opt_state, sk_state):
+        m, v, t = opt_state
+        out = _flatten_params(params) + _flatten_params(m) + _flatten_params(v) + [t]
+        if cfg.uses_sketches:
+            out += [sk_state.x, sk_state.y, sk_state.z]
+        return out
+
+    if cfg.chunk == 0:
+        def fn(*args):
+            params, opt_state, sk_state, proj, interior, boundary = parse(args)
+            params, opt_state, sk_state, metrics = _pinn_core_step(
+                cfg, params, opt_state, sk_state, proj, interior, boundary)
+            return tuple(flatten_state(params, opt_state, sk_state) + metrics)
+        return fn, pinn_input_specs(cfg), pinn_output_specs(cfg)
+
+    k_steps = cfg.chunk
+    n_state = 6 * spec.n_layers + 1 + (3 if cfg.uses_sketches else 0)
+    n_metrics = len(pinn_output_specs(cfg)) - n_state
+
+    def fn(*args):
+        params, opt_state, sk_state, proj, interiors, boundaries = parse(args)
+        metric_specs = pinn_output_specs(cfg)[-n_metrics:]
+        metric_acc = [jnp.zeros((k_steps,) + s.shape[1:], jnp.float32) for s in metric_specs]
+
+        def body(step, carry):
+            params, opt_state, sk_state, metric_acc = carry
+            interior = lax.dynamic_index_in_dim(interiors, step, 0, keepdims=False)
+            boundary = lax.dynamic_index_in_dim(boundaries, step, 0, keepdims=False)
+            params, opt_state, sk_state, metrics = _pinn_core_step(
+                cfg, params, opt_state, sk_state, proj, interior, boundary)
+            metric_acc = [
+                lax.dynamic_update_slice_in_dim(acc, mm[None], step, axis=0)
+                for acc, mm in zip(metric_acc, metrics)
+            ]
+            return (params, opt_state, sk_state, metric_acc)
+
+        params, opt_state, sk_state, metric_acc = lax.fori_loop(
+            0, k_steps, body, (params, opt_state, sk_state, metric_acc))
+        return tuple(flatten_state(params, opt_state, sk_state) + metric_acc)
+
+    return fn, pinn_input_specs(cfg), pinn_output_specs(cfg)
+
+
+def build_pinn_eval(pinn_spec: "P.PINNSpec", n_grid: int):
+    """Evaluation artifact: params + (n_grid, 2) points -> (u, u_exact,
+    abs_err, l2_rel_err).  Used for Fig. 4 fields and the 0.31 headline."""
+    spec = pinn_spec.mlp_spec
+    in_specs = _param_specs(spec) + [ArgSpec("grid", (n_grid, 2), "f32")]
+    out_specs = [
+        ArgSpec("u", (n_grid,), "f32"),
+        ArgSpec("u_exact", (n_grid,), "f32"),
+        ArgSpec("abs_err", (n_grid,), "f32"),
+        ArgSpec("l2_rel_err", (), "f32"),
+    ]
+
+    def fn(*args):
+        params, i = _unflatten_params(args, spec, 0)
+        grid = args[i]
+        u = P.u_batch(params, grid, pinn_spec)
+        ue = P.exact_solution(grid)
+        err = jnp.abs(u - ue)
+        rel = jnp.sqrt(jnp.sum((u - ue) ** 2)) / jnp.sqrt(jnp.sum(ue**2))
+        return (u, ue, err, rel)
+
+    return fn, in_specs, out_specs
+
+
+# ---------------------------------------------------------------------------
+# Reconstruction-bound validation artifact (Thm 4.2)
+# ---------------------------------------------------------------------------
+
+
+def build_recon_eval(n_b: int, d: int, r: int):
+    """Single-shot sketch->reconstruct of one activation matrix: inputs the
+    batch A and fresh projections, builds the three sketches with beta=0
+    (pure batch contribution), reconstructs via the fused Eq. 6-7 path and
+    returns (A_tilde, fro_err).  The tail energy tau_{r+1}(A) for the
+    sqrt(6) bound is computed rust-side (Jacobi eigensolver)."""
+    k = 2 * r + 1
+    in_specs = [
+        ArgSpec("a", (n_b, d), "f32"),
+        ArgSpec("proj_upsilon", (n_b, k), "f32"),
+        ArgSpec("proj_omega", (n_b, k), "f32"),
+        ArgSpec("proj_phi", (n_b, k), "f32"),
+        ArgSpec("proj_psi", (k,), "f32"),
+    ]
+    out_specs = [
+        ArgSpec("a_tilde", (n_b, d), "f32"),
+        ArgSpec("fro_err", (), "f32"),
+    ]
+
+    def fn(a, upsilon, omega, phi, psi):
+        from .kernels.ema_update import ema_sketch_update
+
+        zero = jnp.zeros((d, k), jnp.float32)
+        x_s = ema_sketch_update(a, upsilon, zero, 0.0)
+        y_s = ema_sketch_update(a, omega, zero, 0.0)
+        z_s = ema_sketch_update(a, phi, zero, 0.0, psi)
+        a_t = sketching.reconstruct_batch_activations(x_s, y_s, z_s, omega)
+        err = jnp.sqrt(jnp.sum((a - a_t) ** 2))
+        return (a_t, err)
+
+    return fn, in_specs, out_specs

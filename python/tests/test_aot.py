@@ -1,0 +1,113 @@
+"""AOT contract tests: registry integrity, spec/function consistency, and
+manifest round-trips — what the rust runtime depends on."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot
+from compile import train_step as TS
+
+
+def test_registry_names_cover_experiment_index():
+    reg = aot._registry()
+    names = set(reg)
+    # Every figure's artifacts exist.
+    for required in [
+        "mnist_std_chunk",
+        "mnist_sk_r2_chunk",
+        "mnist_sk_r16_chunk",
+        "mnist_std_step",
+        "mnist_sk_r2_step",
+        "cifar_std_chunk",
+        "cifar_sk_r2_chunk",
+        "monitor16_mon_r4_chunk",
+        "monitor16_problematic_chunk",
+        "pinn_std_chunk",
+        "pinn_mon_r2_chunk",
+        "pinn_eval",
+        "recon_eval_r2",
+    ]:
+        assert required in names, required
+
+
+@pytest.mark.parametrize(
+    "name", ["mnist_std_step", "mnist_sk_r2_step", "recon_eval_r4", "pinn_eval"]
+)
+def test_spec_shapes_match_function(name):
+    # Building + abstract-evaluating each registered artifact must produce
+    # outputs matching the declared output specs exactly.
+    reg = aot._registry()
+    fn, ins, outs, _meta = reg[name]()
+    specs = [
+        jax.ShapeDtypeStruct(tuple(s.shape), jnp.float32 if s.dtype == "f32" else jnp.int32)
+        for s in ins
+    ]
+    out_shapes = jax.eval_shape(fn, *specs)
+    assert len(out_shapes) == len(outs)
+    for got, spec in zip(out_shapes, outs):
+        assert tuple(got.shape) == tuple(spec.shape), spec.name
+        want_dtype = jnp.float32 if spec.dtype == "f32" else jnp.int32
+        assert got.dtype == want_dtype, spec.name
+
+
+def test_state_round_trip_naming():
+    # Every out_<name> output must correspond to an input <name> with the
+    # same shape — the rust StateStore round-trip contract.
+    reg = aot._registry()
+    for name in ["mnist_sk_r2_chunk", "monitor16_mon_r4_chunk", "pinn_mon_r2_chunk"]:
+        _fn, ins, outs, _ = reg[name]()
+        in_map = {s.name: s for s in ins}
+        for o in outs:
+            if o.name.startswith("out_"):
+                src = o.name[4:]
+                assert src in in_map, f"{name}: {o.name} has no input twin"
+                assert tuple(in_map[src].shape) == tuple(o.shape), o.name
+
+
+def test_manifest_file_is_consistent():
+    path = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "manifest.json")
+    if not os.path.exists(path):
+        pytest.skip("artifacts not built")
+    man = json.load(open(path))
+    assert man["n_b"] == 128
+    assert man["rank_ladder"] == [2, 4, 8, 16]
+    for name, entry in man["artifacts"].items():
+        hlo = os.path.join(os.path.dirname(path), entry["file"])
+        assert os.path.exists(hlo), name
+        assert entry["inputs"], name
+        assert entry["outputs"], name
+
+
+def test_chunk_and_step_variants_agree_on_one_step():
+    # A chunk artifact with K=1 must equal the single-step artifact.
+    import compile.model as M
+
+    spec = M.MLPSpec(dims=(10, 8, 8, 4), activation="tanh")
+    base = dict(spec=spec, variant="sketched", optimizer="adam", n_b=8, r=1,
+                beta=0.9, power_iters=4)
+    f_step, ins_s, outs_s = TS.build(TS.StepConfig(chunk=0, **base))
+    f_chunk, ins_c, outs_c = TS.build(TS.StepConfig(chunk=1, **base))
+
+    rng = np.random.default_rng(3)
+    args_s, args_c = [], []
+    for s_spec, c_spec in zip(ins_s, ins_c):
+        if s_spec.dtype == "i32":
+            v = rng.integers(0, 4, s_spec.shape).astype(np.int32)
+            args_s.append(jnp.asarray(v))
+            args_c.append(jnp.asarray(v.reshape(c_spec.shape)))
+        else:
+            v = (rng.standard_normal(s_spec.shape) * 0.1).astype(np.float32)
+            args_s.append(jnp.asarray(v))
+            args_c.append(jnp.asarray(v.reshape(c_spec.shape)))
+    out_s = jax.jit(f_step)(*args_s)
+    out_c = jax.jit(f_chunk)(*args_c)
+    for spec_s, a, b in zip(outs_s, out_s, out_c):
+        np.testing.assert_allclose(
+            np.asarray(a).ravel(), np.asarray(b).ravel(), atol=2e-5,
+            err_msg=spec_s.name,
+        )

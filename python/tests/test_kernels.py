@@ -1,0 +1,101 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracles in ref.py.
+
+Hypothesis sweeps shapes and values; interpret=True makes the kernels run
+on CPU so allclose against the oracle is the ground-truth signal.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from compile.kernels import ref
+from compile.kernels.ema_update import ema_sketch_update, pick_block_d
+from compile.kernels.grad_outer import grad_outer
+
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape), jnp.float32)
+
+
+@pytest.mark.parametrize("n_b,d,k", [(8, 16, 5), (128, 512, 5), (128, 512, 33), (64, 50, 9), (16, 1024, 9)])
+@pytest.mark.parametrize("beta", [0.0, 0.9, 0.95])
+def test_ema_update_matches_ref(n_b, d, k, beta):
+    rng = np.random.default_rng(0)
+    a, p, s = _rand(rng, n_b, d), _rand(rng, n_b, k), _rand(rng, d, k)
+    out = ema_sketch_update(a, p, s, beta)
+    want = ref.ema_sketch_update_ref(a, p, s, beta)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n_b,d,k", [(8, 16, 5), (128, 512, 9)])
+def test_ema_update_with_col_scale(n_b, d, k):
+    rng = np.random.default_rng(1)
+    a, p, s = _rand(rng, n_b, d), _rand(rng, n_b, k), _rand(rng, d, k)
+    scale = _rand(rng, k)
+    out = ema_sketch_update(a, p, s, 0.9, scale)
+    want = ref.ema_sketch_update_ref(a, p, s, 0.9, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize(
+    "n_b,d_out,d_in",
+    [(8, 16, 16), (128, 512, 512), (128, 10, 512), (128, 512, 784), (64, 50, 50)],
+)
+def test_grad_outer_matches_ref(n_b, d_out, d_in):
+    rng = np.random.default_rng(2)
+    delta, a = _rand(rng, n_b, d_out), _rand(rng, n_b, d_in)
+    out = grad_outer(delta, a)
+    want = ref.grad_outer_ref(delta, a)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4)
+
+
+def test_pick_block_d_divides_and_fits():
+    for d in [50, 512, 784, 1024]:
+        b = pick_block_d(d, 128, 33)
+        assert d % b == 0
+        assert b * 128 + 128 * 33 + 2 * b * 33 <= (1 << 21) or b == d
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_b=st.sampled_from([4, 16, 64]),
+        d=st.sampled_from([8, 32, 50, 128]),
+        r=st.integers(min_value=1, max_value=8),
+        beta=st.floats(min_value=0.0, max_value=0.99),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_ema_update_hypothesis(n_b, d, r, beta, seed):
+        k = 2 * r + 1
+        rng = np.random.default_rng(seed)
+        a, p, s = _rand(rng, n_b, d), _rand(rng, n_b, k), _rand(rng, d, k)
+        out = ema_sketch_update(a, p, s, float(beta))
+        want = ref.ema_sketch_update_ref(a, p, s, float(beta))
+        np.testing.assert_allclose(
+            np.asarray(out), np.asarray(want), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        n_b=st.sampled_from([4, 16, 128]),
+        d_out=st.sampled_from([8, 10, 64, 512]),
+        d_in=st.sampled_from([8, 50, 512]),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_grad_outer_hypothesis(n_b, d_out, d_in, seed):
+        rng = np.random.default_rng(seed)
+        delta, a = _rand(rng, n_b, d_out), _rand(rng, n_b, d_in)
+        np.testing.assert_allclose(
+            np.asarray(grad_outer(delta, a)),
+            np.asarray(ref.grad_outer_ref(delta, a)),
+            rtol=1e-4,
+            atol=1e-4,
+        )

@@ -1,0 +1,99 @@
+"""Pure-jnp linear algebra vs numpy/LAPACK ground truth.
+
+These routines replace the LAPACK custom-calls banned from the AOT path
+(DESIGN.md §7); correctness here is what makes the in-graph reconstruction
+trustworthy.
+"""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from compile import linalg
+
+
+@pytest.mark.parametrize("m,n", [(8, 3), (64, 9), (512, 33), (50, 5)])
+def test_mgs_qr(m, n):
+    rng = np.random.default_rng(0)
+    a = rng.standard_normal((m, n)).astype(np.float32)
+    q, r = linalg.mgs_qr(jnp.asarray(a))
+    q, r = np.asarray(q), np.asarray(r)
+    np.testing.assert_allclose(q @ r, a, atol=5e-5)
+    np.testing.assert_allclose(q.T @ q, np.eye(n), atol=5e-5)
+    assert np.allclose(r, np.triu(r))
+
+
+@pytest.mark.parametrize("k,d", [(5, 64), (9, 512), (33, 128)])
+def test_householder_wide_q(k, d):
+    rng = np.random.default_rng(1)
+    a = rng.standard_normal((k, d)).astype(np.float32)
+    p = np.asarray(linalg.householder_qr_wide(jnp.asarray(a)))
+    np.testing.assert_allclose(p.T @ p, np.eye(k), atol=5e-5)
+    # Compare with numpy's QR up to per-column sign.
+    qn, _ = np.linalg.qr(a)
+    sgn = np.sign(np.sum(p * qn, axis=0))
+    sgn[sgn == 0] = 1.0
+    np.testing.assert_allclose(p * sgn[None, :], qn, atol=5e-4)
+
+
+@pytest.mark.parametrize("n,p", [(5, 3), (9, 9), (33, 1)])
+def test_solve_upper_triangular(n, p):
+    rng = np.random.default_rng(2)
+    r = np.triu(rng.standard_normal((n, n)).astype(np.float32)) + 2 * np.eye(
+        n, dtype=np.float32
+    )
+    b = rng.standard_normal((n, p)).astype(np.float32)
+    x = np.asarray(linalg.solve_upper_triangular(jnp.asarray(r), jnp.asarray(b)))
+    np.testing.assert_allclose(r @ x, b, atol=1e-4)
+
+
+@pytest.mark.parametrize("m,n", [(64, 5), (128, 9)])
+def test_pinv_tall(m, n):
+    rng = np.random.default_rng(3)
+    a = rng.standard_normal((m, n)).astype(np.float32)
+    pinv = np.asarray(linalg.pinv_tall_via_qr(jnp.asarray(a)))
+    np.testing.assert_allclose(pinv, np.linalg.pinv(a), atol=1e-4)
+
+
+def test_spectral_norm_and_stable_rank():
+    rng = np.random.default_rng(4)
+    a = rng.standard_normal((64, 9)).astype(np.float32)
+    sv = np.linalg.svd(a, compute_uv=False)
+    spec = float(linalg.spectral_norm(jnp.asarray(a), 48))
+    assert abs(spec - sv[0]) / sv[0] < 1e-3
+    sr = float(linalg.stable_rank(jnp.asarray(a), 48))
+    want = float((sv**2).sum() / sv[0] ** 2)
+    assert abs(sr - want) / want < 1e-3
+
+
+def test_zero_matrix_is_total():
+    # All routines must stay finite on degenerate input (EPS floors).
+    z = jnp.zeros((16, 5), jnp.float32)
+    q, r = linalg.mgs_qr(z)
+    assert np.isfinite(np.asarray(q)).all()
+    assert np.isfinite(np.asarray(linalg.pinv_tall_via_qr(z))).all()
+    assert np.isfinite(float(linalg.spectral_norm(z)))
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        m=st.integers(min_value=4, max_value=80),
+        n=st.integers(min_value=1, max_value=12),
+        seed=st.integers(min_value=0, max_value=2**31),
+    )
+    def test_mgs_qr_hypothesis(m, n, seed):
+        if n > m:
+            n = m
+        rng = np.random.default_rng(seed)
+        a = rng.standard_normal((m, n)).astype(np.float32)
+        q, r = linalg.mgs_qr(jnp.asarray(a))
+        np.testing.assert_allclose(np.asarray(q) @ np.asarray(r), a, atol=1e-4)

@@ -1,0 +1,126 @@
+"""The manual backward passes (model.mlp_backward, cnn.cnn_backward) must
+agree exactly with jax autodiff when no sketching substitution is made —
+the correctness foundation that makes the Eq.-8 swap auditable."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import cnn as C
+from compile import model as M
+
+
+def make_params(rng, dims):
+    return [
+        (
+            jnp.asarray(rng.standard_normal((dims[i + 1], dims[i])) * 0.2, jnp.float32),
+            jnp.asarray(rng.standard_normal(dims[i + 1]) * 0.05, jnp.float32),
+        )
+        for i in range(len(dims) - 1)
+    ]
+
+
+@pytest.mark.parametrize("activation", ["tanh", "relu"])
+@pytest.mark.parametrize("dims", [(12, 8, 8, 5), (20, 16, 16, 16, 3)])
+def test_manual_backward_matches_autodiff(activation, dims):
+    rng = np.random.default_rng(0)
+    spec = M.MLPSpec(dims=dims, activation=activation)
+    params = make_params(rng, dims)
+    x = jnp.asarray(rng.standard_normal((16, dims[0])), jnp.float32)
+    y = jnp.asarray(rng.integers(0, dims[-1], 16), jnp.int32)
+
+    # Manual path.
+    logits, acts = M.mlp_forward(params, x, spec)
+    loss, delta, _acc = M.softmax_xent(logits, y)
+    manual = M.mlp_backward(params, acts, delta, spec, use_pallas=False)
+
+    # Autodiff reference.
+    def loss_fn(flat):
+        ps = [(flat[2 * i], flat[2 * i + 1]) for i in range(len(flat) // 2)]
+        lg, _ = M.mlp_forward(ps, x, spec)
+        ls, _, _ = M.softmax_xent(lg, y)
+        return ls
+
+    flat = [t for wb in params for t in wb]
+    auto = jax.grad(loss_fn)(flat)
+    for i, (gw, gb) in enumerate(manual):
+        np.testing.assert_allclose(
+            np.asarray(gw), np.asarray(auto[2 * i]), atol=2e-5,
+            err_msg=f"w{i}"
+        )
+        np.testing.assert_allclose(
+            np.asarray(gb), np.asarray(auto[2 * i + 1]), atol=2e-5,
+            err_msg=f"b{i}"
+        )
+
+
+def test_cnn_backward_matches_autodiff():
+    rng = np.random.default_rng(1)
+    spec = C.CNNSpec(in_hw=8, channels=(3, 4, 6), fc_dims=(24, 16, 16, 16, 5))
+    conv_params = [
+        (
+            jnp.asarray(rng.standard_normal((4, 3, 3, 3)) * 0.2, jnp.float32),
+            jnp.zeros(4, jnp.float32),
+        ),
+        (
+            jnp.asarray(rng.standard_normal((6, 4, 3, 3)) * 0.2, jnp.float32),
+            jnp.zeros(6, jnp.float32),
+        ),
+    ]
+    fc_params = make_params(rng, spec.fc_dims)
+    x = jnp.asarray(rng.standard_normal((8, 3, 8, 8)), jnp.float32)
+    y = jnp.asarray(rng.integers(0, 5, 8), jnp.int32)
+
+    logits, feats, fc_acts = C.cnn_forward(conv_params, fc_params, x, spec)
+    loss, delta, _ = M.softmax_xent(logits, y)
+    conv_g, fc_g = C.cnn_backward(
+        conv_params, fc_params, x, feats, fc_acts, delta, spec
+    )
+
+    def loss_fn(cp, fp):
+        lg, _, _ = C.cnn_forward(cp, fp, x, spec)
+        ls, _, _ = M.softmax_xent(lg, y)
+        return ls
+
+    auto_c, auto_f = jax.grad(loss_fn, argnums=(0, 1))(
+        [list(p) for p in conv_params], [list(p) for p in fc_params]
+    )
+    for i, (gk, gb) in enumerate(conv_g):
+        np.testing.assert_allclose(
+            np.asarray(gk), np.asarray(auto_c[i][0]), atol=3e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(gb), np.asarray(auto_c[i][1]), atol=3e-5
+        )
+    for i, (gw, gb) in enumerate(fc_g):
+        np.testing.assert_allclose(
+            np.asarray(gw), np.asarray(auto_f[i][0]), atol=3e-5
+        )
+        np.testing.assert_allclose(
+            np.asarray(gb), np.asarray(auto_f[i][1]), atol=3e-5
+        )
+
+
+def test_softmax_xent_properties():
+    rng = np.random.default_rng(2)
+    logits = jnp.asarray(rng.standard_normal((32, 10)) * 3, jnp.float32)
+    y = jnp.asarray(rng.integers(0, 10, 32), jnp.int32)
+    loss, delta, acc = M.softmax_xent(logits, y)
+    assert float(loss) > 0
+    assert 0.0 <= float(acc) <= 1.0
+    # delta rows sum to zero (softmax - onehot) / n.
+    np.testing.assert_allclose(
+        np.asarray(delta).sum(axis=1), 0.0, atol=1e-6
+    )
+    # Shift invariance of the loss.
+    loss2, _, _ = M.softmax_xent(logits + 100.0, y)
+    assert abs(float(loss) - float(loss2)) < 1e-4
+
+
+def test_activation_grad_from_value():
+    a = jnp.asarray([[-0.5, 0.0, 0.9]], jnp.float32)
+    g_tanh = M.activate_grad_from_value(a, "tanh")
+    np.testing.assert_allclose(np.asarray(g_tanh), 1 - np.asarray(a) ** 2)
+    g_relu = M.activate_grad_from_value(a, "relu")
+    np.testing.assert_allclose(np.asarray(g_relu), [[0.0, 0.0, 1.0]])

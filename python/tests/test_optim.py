@@ -1,0 +1,72 @@
+"""Adam/SGD in-graph optimizers vs reference implementations."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import optim
+
+
+def _pairs(rng, shapes):
+    return [
+        (
+            jnp.asarray(rng.standard_normal(s), jnp.float32),
+            jnp.asarray(rng.standard_normal(s[0]), jnp.float32),
+        )
+        for s in shapes
+    ]
+
+
+def test_adam_matches_reference():
+    rng = np.random.default_rng(0)
+    shapes = [(4, 3), (2, 4)]
+    params = _pairs(rng, shapes)
+    grads = _pairs(rng, shapes)
+    m = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+    v = [(jnp.zeros_like(w), jnp.zeros_like(b)) for w, b in params]
+    t = jnp.asarray(0.0, jnp.float32)
+    lr, b1, b2, eps = 1e-3, 0.9, 0.999, 1e-8
+
+    new_p, new_m, new_v, new_t = optim.adam_update(params, grads, m, v, t, lr)
+    assert float(new_t) == 1.0
+
+    # Reference (numpy, step 1).
+    for (w, _), (gw, _), (nw, _), (nmw, _), (nvw, _) in zip(
+        params, grads, new_p, new_m, new_v
+    ):
+        mw = (1 - b1) * np.asarray(gw)
+        vw = (1 - b2) * np.asarray(gw) ** 2
+        bc1 = 1 - b1**1
+        bc2 = 1 - b2**1
+        want = np.asarray(w) - lr * (mw / bc1) / (np.sqrt(vw / bc2) + eps)
+        np.testing.assert_allclose(np.asarray(nw), want, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(nmw), mw, atol=1e-7)
+        np.testing.assert_allclose(np.asarray(nvw), vw, atol=1e-7)
+
+
+def test_adam_two_steps_bias_correction():
+    rng = np.random.default_rng(1)
+    shapes = [(3, 3)]
+    params = _pairs(rng, shapes)
+    grads = _pairs(rng, shapes)
+    m = [(jnp.zeros((3, 3)), jnp.zeros(3))]
+    v = [(jnp.zeros((3, 3)), jnp.zeros(3))]
+    t = jnp.asarray(0.0, jnp.float32)
+    p1, m1, v1, t1 = optim.adam_update(params, grads, m, v, t, 1e-2)
+    p2, _, _, t2 = optim.adam_update(p1, grads, m1, v1, t1, 1e-2)
+    assert float(t2) == 2.0
+    # Constant gradient: the update keeps moving in the same direction.
+    d1 = np.asarray(p1[0][0]) - np.asarray(params[0][0])
+    d2 = np.asarray(p2[0][0]) - np.asarray(p1[0][0])
+    assert np.sign(d1).tolist() == np.sign(d2).tolist()
+
+
+def test_sgd_formula():
+    rng = np.random.default_rng(2)
+    params = _pairs(rng, [(4, 2)])
+    grads = _pairs(rng, [(4, 2)])
+    out = optim.sgd_update(params, grads, 0.1)
+    np.testing.assert_allclose(
+        np.asarray(out[0][0]),
+        np.asarray(params[0][0]) - 0.1 * np.asarray(grads[0][0]),
+        atol=1e-7,
+    )

@@ -1,0 +1,59 @@
+//! FIG1 bench: regenerates Figure 1's panels (memory comparison + training
+//! accuracy, standard vs fixed-rank vs adaptive on the MNIST MLP) at bench
+//! scale and times end-to-end training throughput per variant.
+//! Run: `cargo bench --bench fig1_mnist`.
+
+use sketchgrad::benchkit::Bench;
+use sketchgrad::config::{ExperimentConfig, Variant};
+use sketchgrad::coordinator::{figure_table, open_runtime, run_classifier};
+
+fn main() {
+    let rt = match open_runtime() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping (artifacts not built): {e}");
+            return;
+        }
+    };
+    let mk = |name: &str, variant: Variant, adaptive: bool| ExperimentConfig {
+        name: name.into(),
+        family: "mnist".into(),
+        variant,
+        rank: 2,
+        adaptive,
+        epochs: 2,
+        train_size: 128 * 50,
+        test_size: 128 * 50,
+        seed: 42,
+        ..Default::default()
+    };
+
+    let std = run_classifier(&rt, &mk("standard", Variant::Standard, false), false).unwrap();
+    let fixed =
+        run_classifier(&rt, &mk("sketched_r2", Variant::Sketched, false), false).unwrap();
+    let adaptive =
+        run_classifier(&rt, &mk("adaptive", Variant::Sketched, true), false).unwrap();
+
+    println!("{}", figure_table("Figure 1 — MNIST (bench scale)", &[&std, &fixed, &adaptive]));
+    println!("paper shape: standard accuracy > sketched (3-5 pt gap); memory std > sketch.\n");
+
+    // Throughput benches: one 50-step chunk per call.
+    let mut bench = Bench::new(1, 3);
+    for (label, artifact) in [
+        ("std_chunk(50 steps)", "mnist_std_chunk"),
+        ("sk_r2_chunk(50 steps)", "mnist_sk_r2_chunk"),
+        ("sk_r16_chunk(50 steps)", "mnist_sk_r16_chunk"),
+    ] {
+        use sketchgrad::coordinator::Trainer;
+        use sketchgrad::data::{make_chunks, synth_mnist, Init};
+        use sketchgrad::util::rng::Rng;
+        let mut trainer = Trainer::new(&rt, artifact, Init::Xavier(1.0), 1).unwrap();
+        let data = synth_mnist(128 * 50, 1);
+        let mut rng = Rng::new(2);
+        let chunks = make_chunks(&data, 128, 50, &mut rng, &[784]);
+        bench.run(label, Some((50.0, "steps/s")), || {
+            trainer.run_chunk(&chunks[0]).unwrap();
+        });
+    }
+    bench.report("fig1 training throughput (per-variant)");
+}

@@ -1,0 +1,51 @@
+//! FIG2 bench: CIFAR hybrid CNN-MLP with FC-only sketching — accuracy
+//! parity between standard and sketched variants plus chunk throughput.
+//! Run: `cargo bench --bench fig2_cifar`.
+
+use sketchgrad::benchkit::Bench;
+use sketchgrad::config::{ExperimentConfig, Variant};
+use sketchgrad::coordinator::{figure_table, open_runtime, run_classifier};
+use sketchgrad::coordinator::Trainer;
+use sketchgrad::data::{make_chunks, synth_cifar, Init};
+use sketchgrad::util::rng::Rng;
+
+fn main() {
+    let rt = match open_runtime() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping (artifacts not built): {e}");
+            return;
+        }
+    };
+    let mk = |name: &str, variant: Variant| ExperimentConfig {
+        name: name.into(),
+        family: "cifar".into(),
+        variant,
+        rank: 2,
+        adaptive: false,
+        epochs: 1,
+        train_size: 128 * 10,
+        test_size: 128 * 10,
+        seed: 42,
+        ..Default::default()
+    };
+    let std = run_classifier(&rt, &mk("standard", Variant::Standard), false).unwrap();
+    let sk = run_classifier(&rt, &mk("sketched_r2", Variant::Sketched), false).unwrap();
+    println!("{}", figure_table("Figure 2 — CIFAR (bench scale)", &[&std, &sk]));
+    println!("paper shape: selective FC sketching preserves accuracy (both ~equal).\n");
+
+    let mut bench = Bench::new(1, 2);
+    for (label, artifact) in [
+        ("cifar_std_chunk(10 steps)", "cifar_std_chunk"),
+        ("cifar_sk_r2_chunk(10 steps)", "cifar_sk_r2_chunk"),
+    ] {
+        let mut trainer = Trainer::new(&rt, artifact, Init::Kaiming, 1).unwrap();
+        let data = synth_cifar(128 * 10, 1);
+        let mut rng = Rng::new(2);
+        let chunks = make_chunks(&data, 128, 10, &mut rng, &[3, 32, 32]);
+        bench.run(label, Some((10.0, "steps/s")), || {
+            trainer.run_chunk(&chunks[0]).unwrap();
+        });
+    }
+    bench.report("fig2 CNN-MLP throughput");
+}

@@ -1,0 +1,49 @@
+//! FIG3/FIG4 bench: PINN training with monitoring-only sketching — loss
+//! convergence parity, L2 relative error across variants, and the sketch
+//! overhead (paper: 0.57 MB, identical 0.31 L2 error).
+//! Run: `cargo bench --bench fig3_pinn`.
+
+use sketchgrad::benchkit::Bench;
+use sketchgrad::coordinator::{open_runtime, run_pinn};
+use sketchgrad::memory::fmt_bytes;
+
+fn main() {
+    let rt = match open_runtime() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping (artifacts not built): {e}");
+            return;
+        }
+    };
+    let chunks = 4; // 160 Adam steps per variant at bench scale
+
+    let std = run_pinn(&rt, "standard", 2, chunks, 42).unwrap();
+    let mon2 = run_pinn(&rt, "monitored", 2, chunks, 42).unwrap();
+    let mon4 = run_pinn(&rt, "monitored", 4, chunks, 42).unwrap();
+
+    println!("\n## Figure 3/4 — PINN (bench scale, {} steps)\n", chunks * 20);
+    println!("| variant | final loss | L2 rel err | sketch overhead |");
+    println!("|---|---|---|---|");
+    for r in [&std, &mon2, &mon4] {
+        println!(
+            "| {} | {:.4} | {:.4} | {} |",
+            r.label,
+            r.losses.last().copied().unwrap_or(f32::NAN),
+            r.l2_rel_err,
+            fmt_bytes(r.sketch_bytes)
+        );
+    }
+    println!("paper shape: identical loss/error across variants; sub-MB sketch overhead.\n");
+
+    // Throughput of the PINN chunk artifacts.
+    let mut bench = Bench::new(1, 2);
+    for (label, variant, rank) in [
+        ("pinn_std_chunk(20 steps)", "standard", 2usize),
+        ("pinn_mon_r2_chunk(20 steps)", "monitored", 2),
+    ] {
+        bench.run(label, Some((20.0, "steps/s")), || {
+            let _ = run_pinn(&rt, variant, rank, 1, 7).unwrap();
+        });
+    }
+    bench.report("fig3 PINN throughput");
+}

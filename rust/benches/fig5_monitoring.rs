@@ -1,0 +1,72 @@
+//! FIG5 bench: the gradient-monitoring experiment at bench scale —
+//! healthy vs problematic 16x1024 nets, sketch-metric separation, monitor
+//! service overhead, and the memory table.
+//! Run: `cargo bench --bench fig5_monitoring`.
+
+use sketchgrad::benchkit::Bench;
+use sketchgrad::coordinator::{StepMetrics, Trainer};
+use sketchgrad::coordinator::open_runtime;
+use sketchgrad::data::{make_chunks, synth_mnist, Init};
+use sketchgrad::memory::{fmt_bytes, monitor16_dims, MemoryModel};
+use sketchgrad::monitor::{MonitorConfig, MonitorService};
+use sketchgrad::util::rng::Rng;
+
+fn main() {
+    let rt = match open_runtime() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping (artifacts not built): {e}");
+            return;
+        }
+    };
+
+    // One chunk (20 steps) per configuration, then compare sketch metrics.
+    let mut results = Vec::new();
+    for (label, artifact, init) in [
+        ("healthy", "monitor16_mon_r4_chunk", Init::Kaiming),
+        (
+            "problematic",
+            "monitor16_problematic_chunk",
+            Init::KaimingNegBias(-3.0),
+        ),
+    ] {
+        let mut trainer = Trainer::new(&rt, artifact, init, 42).unwrap();
+        let data = synth_mnist(128 * 20, 42);
+        let mut rng = Rng::new(7);
+        let chunks = make_chunks(&data, 128, 20, &mut rng, &[784]);
+        trainer.run_chunk(&chunks[0]).unwrap();
+        let last = trainer.history.last().unwrap().clone();
+        results.push((label, trainer.history.clone(), last));
+    }
+
+    println!("\n## Figure 5 — sketch-metric separation (after 20 steps)\n");
+    println!("| config | loss | mean ||Z||_F | mean stable rank (k=9) |");
+    println!("|---|---|---|---|");
+    for (label, _, last) in &results {
+        let z: f32 = last.z_norm.iter().sum::<f32>() / last.z_norm.len() as f32;
+        let sr: f32 =
+            last.stable_rank.iter().sum::<f32>() / last.stable_rank.len() as f32;
+        println!("| {label} | {:.3} | {z:.3} | {sr:.2} |", last.loss);
+    }
+    println!("paper shape: healthy stable rank ~9 (full), problematic collapsed (~3).\n");
+
+    // Monitor-service ingestion throughput (pure L3 hot path).
+    let mut bench = Bench::new(3, 20);
+    let sample: Vec<StepMetrics> = results[0].1.clone();
+    bench.run("monitor_service.observe x20steps", Some((20.0, "steps/s")), || {
+        let mut svc = MonitorService::new(MonitorConfig::for_rank(4), 15);
+        for m in &sample {
+            svc.observe(m);
+        }
+        let _ = svc.diagnose();
+    });
+
+    let m = MemoryModel::new(&monitor16_dims(), 128);
+    println!(
+        "\nmemory: traditional T=5 {} vs sketched {} ({:.2}% reduction)",
+        fmt_bytes(m.monitoring_traditional(5)),
+        fmt_bytes(m.monitoring_sketched(4)),
+        100.0 * m.monitoring_reduction(5, 4)
+    );
+    bench.report("fig5 monitoring throughput");
+}

@@ -1,0 +1,66 @@
+//! THM bench (Thm 4.2): reconstruction error vs the sqrt(6)·tau_{r+1}
+//! bound across the rank ladder, through the AOT artifacts, plus AOT-vs-
+//! native cross-timing.  Run: `cargo bench --bench reconstruction`.
+
+use sketchgrad::benchkit::Bench;
+use sketchgrad::coordinator::open_runtime;
+use sketchgrad::runtime::Tensor;
+use sketchgrad::sketch::reconstruct::reconstruct_batch;
+use sketchgrad::sketch::{eig, Mat, Projections, SketchTriplet};
+use sketchgrad::util::rng::Rng;
+
+fn main() {
+    let rt = match open_runtime() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("skipping (artifacts not built): {e}");
+            return;
+        }
+    };
+    let mut bench = Bench::new(2, 10);
+    let (n_b, d) = (128usize, 512usize);
+
+    println!("\n## Thm 4.2 error-vs-bound sweep (low-rank-8 + 0.05 noise)\n");
+    println!("| r | k | recon err | sqrt(6) tau_(r+1) | ratio |");
+    println!("|---|---|---|---|---|");
+    for r in [2usize, 4, 8, 16] {
+        let exe = rt.load(&format!("recon_eval_r{r}")).unwrap();
+        let k = 2 * r + 1;
+        let mut rng = Rng::new(42 + r as u64);
+        let u = Mat::gaussian(n_b, 8, &mut rng);
+        let v = Mat::gaussian(8, d, &mut rng);
+        let a = u.matmul(&v).add(&Mat::gaussian(n_b, d, &mut rng).scale(0.05));
+        let inputs = vec![
+            Tensor::from_f32(&[n_b, d], a.to_f32()),
+            Tensor::from_f32(&[n_b, k], rng.normal_vec_f32(n_b * k)),
+            Tensor::from_f32(&[n_b, k], rng.normal_vec_f32(n_b * k)),
+            Tensor::from_f32(&[n_b, k], rng.normal_vec_f32(n_b * k)),
+            Tensor::from_f32(&[k], rng.normal_vec_f32(k)),
+        ];
+        let outs = exe.run(&inputs).unwrap();
+        let err = outs[1].scalar().unwrap() as f64;
+        let bound = 6f64.sqrt() * eig::tail_energy(&a, r);
+        println!("| {r} | {k} | {err:.3} | {bound:.3} | {:.3} |", err / bound);
+
+        bench.run(
+            &format!("aot_recon_eval r={r}"),
+            Some((1.0, "calls/s")),
+            || {
+                let _ = exe.run(&inputs).unwrap();
+            },
+        );
+
+        // Native comparison at the same rank.
+        let proj = Projections::sample(n_b, 1, r, &mut rng);
+        let mut t = SketchTriplet::zeros(d, r, 0.0);
+        t.update(&a, &a, &proj, 0);
+        bench.run(
+            &format!("native_recon r={r}"),
+            Some((1.0, "calls/s")),
+            || {
+                let _ = reconstruct_batch(&t, &proj.omega);
+            },
+        );
+    }
+    bench.report("reconstruction: AOT artifact vs native substrate");
+}

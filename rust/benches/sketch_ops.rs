@@ -1,0 +1,61 @@
+//! Micro-benchmarks for the native sketching substrate hot paths: EMA
+//! triplet update, fused vs unfused reconstruction (the L3 perf item), and
+//! the monitoring metric kernels.  Run: `cargo bench --bench sketch_ops`.
+
+use sketchgrad::benchkit::Bench;
+use sketchgrad::sketch::metrics::{stable_rank_power, triplet_metrics};
+use sketchgrad::sketch::reconstruct::{
+    reconstruct_batch, reconstruct_batch_unfused,
+};
+use sketchgrad::sketch::{Mat, Projections, SketchTriplet};
+use sketchgrad::util::rng::Rng;
+
+fn main() {
+    let mut bench = Bench::new(2, 10);
+    let (n_b, d) = (128usize, 512usize);
+    let mut rng = Rng::new(42);
+
+    for rank in [2usize, 4, 8, 16] {
+        let proj = Projections::sample(n_b, 1, rank, &mut rng);
+        let a = Mat::gaussian(n_b, d, &mut rng);
+        let mut t = SketchTriplet::zeros(d, rank, 0.95);
+        t.update(&a, &a, &proj, 0);
+
+        bench.run(
+            &format!("ema_triplet_update r={rank}"),
+            Some((1.0, "updates/s")),
+            || {
+                t.update(&a, &a, &proj, 0);
+            },
+        );
+        bench.run(
+            &format!("reconstruct_fused r={rank}"),
+            Some((1.0, "recon/s")),
+            || {
+                let _ = reconstruct_batch(&t, &proj.omega);
+            },
+        );
+        bench.run(
+            &format!("reconstruct_unfused(dxd) r={rank}"),
+            Some((1.0, "recon/s")),
+            || {
+                let _ = reconstruct_batch_unfused(&t, &proj.omega);
+            },
+        );
+        bench.run(
+            &format!("monitor_metrics r={rank}"),
+            Some((1.0, "evals/s")),
+            || {
+                let _ = triplet_metrics(&t, 24);
+            },
+        );
+    }
+
+    // Stable-rank power iteration on a wide matrix (the Fig-5 metric).
+    let y = Mat::gaussian(1024, 9, &mut rng);
+    bench.run("stable_rank_power 1024x9", None, || {
+        let _ = stable_rank_power(&y, 24);
+    });
+
+    bench.report("sketch substrate micro-benches (native rust)");
+}

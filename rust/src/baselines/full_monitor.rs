@@ -1,0 +1,134 @@
+//! Traditional gradient-monitoring baseline (paper §5.3's comparator):
+//! stores complete gradient matrices at temporal checkpoints, paying the
+//! O(L * d^2 * T) memory the sketch-based monitor eliminates.
+//!
+//! The baseline is real — it actually holds the matrices (f32) and can
+//! answer the same diagnostic queries (norms, exact stable rank) — so the
+//! memory comparison in Fig-5/TAB-MEM2 is measured, not just modelled.
+
+use crate::sketch::eig;
+use crate::sketch::Mat;
+
+/// One checkpoint: full per-layer weight-gradient matrices.
+pub struct GradCheckpoint {
+    pub step: u64,
+    pub grads: Vec<Mat>,
+}
+
+pub struct FullMonitor {
+    /// Monitoring window: checkpoints retained (paper's T).
+    pub window: usize,
+    pub checkpoints: Vec<GradCheckpoint>,
+}
+
+impl FullMonitor {
+    pub fn new(window: usize) -> Self {
+        FullMonitor {
+            window,
+            checkpoints: Vec::new(),
+        }
+    }
+
+    /// Record a checkpoint, evicting the oldest beyond the window.
+    pub fn record(&mut self, step: u64, grads: Vec<Mat>) {
+        self.checkpoints.push(GradCheckpoint { step, grads });
+        if self.checkpoints.len() > self.window {
+            self.checkpoints.remove(0);
+        }
+    }
+
+    /// Gradient-norm trajectory per layer across retained checkpoints.
+    pub fn norm_trajectory(&self) -> Vec<Vec<f64>> {
+        self.checkpoints
+            .iter()
+            .map(|c| c.grads.iter().map(|g| g.fro_norm()).collect())
+            .collect()
+    }
+
+    /// Exact stable rank of the latest checkpoint's gradients — the
+    /// expensive query the sketch estimates cheaply.
+    pub fn latest_stable_ranks(&self) -> Vec<f64> {
+        match self.checkpoints.last() {
+            Some(c) => c.grads.iter().map(eig::stable_rank).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Bytes actually held (runtime f32 accounting).
+    pub fn bytes(&self) -> usize {
+        self.checkpoints
+            .iter()
+            .map(|c| c.grads.iter().map(|g| g.runtime_bytes()).sum::<usize>())
+            .sum()
+    }
+
+    /// Closed-form bytes for the paper's formula O(L * d_l*d_{l-1} * T):
+    /// what a full window costs for a given architecture.
+    pub fn bytes_for_arch(dims: &[usize], window: usize) -> usize {
+        let per_checkpoint: usize = dims
+            .windows(2)
+            .map(|w| w[0] * w[1] * 4)
+            .sum();
+        per_checkpoint * window
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn window_eviction() {
+        let mut m = FullMonitor::new(3);
+        let mut rng = Rng::new(1);
+        for step in 0..5 {
+            m.record(step, vec![Mat::gaussian(4, 4, &mut rng)]);
+        }
+        assert_eq!(m.checkpoints.len(), 3);
+        assert_eq!(m.checkpoints[0].step, 2);
+    }
+
+    #[test]
+    fn bytes_match_formula_when_full() {
+        let dims = [784usize, 512, 512, 10];
+        let mut m = FullMonitor::new(4);
+        let mut rng = Rng::new(2);
+        for step in 0..4 {
+            let grads: Vec<Mat> = dims
+                .windows(2)
+                .map(|w| Mat::gaussian(w[1], w[0], &mut rng))
+                .collect();
+            m.record(step, grads);
+        }
+        assert_eq!(m.bytes(), FullMonitor::bytes_for_arch(&dims, 4));
+    }
+
+    #[test]
+    fn paper_monitoring_numbers() {
+        // Paper §5.3: 16 layers, 1024 hidden, T=5 -> ~320 MB.
+        let dims: Vec<usize> =
+            std::iter::once(784)
+                .chain(std::iter::repeat(1024).take(15))
+                .chain(std::iter::once(10))
+                .collect();
+        let bytes = FullMonitor::bytes_for_arch(&dims, 5);
+        let mb = bytes as f64 / (1024.0 * 1024.0);
+        assert!(
+            (250.0..400.0).contains(&mb),
+            "expected ~320 MB, got {mb:.1} MB"
+        );
+    }
+
+    #[test]
+    fn diagnostics_answerable() {
+        let mut m = FullMonitor::new(2);
+        let mut rng = Rng::new(3);
+        m.record(0, vec![Mat::gaussian(8, 8, &mut rng)]);
+        m.record(1, vec![Mat::gaussian(8, 8, &mut rng)]);
+        assert_eq!(m.norm_trajectory().len(), 2);
+        let sr = m.latest_stable_ranks();
+        assert_eq!(sr.len(), 1);
+        assert!(sr[0] >= 1.0);
+    }
+}

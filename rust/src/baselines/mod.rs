@@ -1,0 +1,7 @@
+//! Baselines the paper compares against: the traditional full-gradient
+//! monitoring store (§5.3) and the sqrt(L) checkpointing memory model (§2.1).
+
+pub mod checkpoint;
+pub mod full_monitor;
+
+pub use full_monitor::FullMonitor;

@@ -1,0 +1,141 @@
+//! Mini-criterion (criterion is unavailable offline): warmup + timed
+//! iterations with mean/p50/p95 and throughput, plus markdown table output
+//! shared by all `cargo bench` targets.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub min: Duration,
+    /// Optional user-supplied throughput unit (e.g. steps/s).
+    pub throughput: Option<(f64, &'static str)>,
+}
+
+impl BenchResult {
+    pub fn row(&self) -> String {
+        let tp = match self.throughput {
+            Some((v, unit)) => format!("{v:.1} {unit}"),
+            None => "-".into(),
+        };
+        format!(
+            "| {} | {} | {} | {} | {} | {} |",
+            self.name,
+            fmt_dur(self.mean),
+            fmt_dur(self.p50),
+            fmt_dur(self.p95),
+            self.iters,
+            tp
+        )
+    }
+}
+
+pub fn fmt_dur(d: Duration) -> String {
+    let us = d.as_secs_f64() * 1e6;
+    if us < 1000.0 {
+        format!("{us:.1} µs")
+    } else if us < 1_000_000.0 {
+        format!("{:.2} ms", us / 1000.0)
+    } else {
+        format!("{:.3} s", us / 1e6)
+    }
+}
+
+pub struct Bench {
+    pub warmup: usize,
+    pub iters: usize,
+    pub results: Vec<BenchResult>,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Bench {
+            warmup: 3,
+            iters: 20,
+            results: Vec::new(),
+        }
+    }
+}
+
+impl Bench {
+    pub fn new(warmup: usize, iters: usize) -> Self {
+        Bench {
+            warmup,
+            iters,
+            results: Vec::new(),
+        }
+    }
+
+    /// Time `f` over the configured iterations.  `work` gives an optional
+    /// per-iteration work amount for throughput (e.g. steps per call).
+    pub fn run<F: FnMut()>(
+        &mut self,
+        name: &str,
+        work: Option<(f64, &'static str)>,
+        mut f: F,
+    ) -> &BenchResult {
+        for _ in 0..self.warmup {
+            f();
+        }
+        let mut times = Vec::with_capacity(self.iters);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            times.push(t0.elapsed());
+        }
+        times.sort();
+        let mean = times.iter().sum::<Duration>() / times.len() as u32;
+        let p50 = times[times.len() / 2];
+        let p95 = times[(times.len() * 95 / 100).min(times.len() - 1)];
+        let min = times[0];
+        let throughput = work.map(|(w, unit)| (w / mean.as_secs_f64(), unit));
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            iters: self.iters,
+            mean,
+            p50,
+            p95,
+            min,
+            throughput,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Print the accumulated results as a markdown table.
+    pub fn report(&self, title: &str) {
+        println!("\n## {title}\n");
+        println!("| bench | mean | p50 | p95 | iters | throughput |");
+        println!("|---|---|---|---|---|---|");
+        for r in &self.results {
+            println!("{}", r.row());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_sane() {
+        let mut b = Bench::new(1, 5);
+        let r = b.run("sleep", Some((100.0, "ops/s")), || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert!(r.mean >= Duration::from_millis(2));
+        assert!(r.p95 >= r.p50);
+        assert!(r.throughput.unwrap().0 < 100_000.0);
+    }
+
+    #[test]
+    fn report_formats() {
+        let mut b = Bench::new(0, 3);
+        b.run("noop", None, || {});
+        let row = b.results[0].row();
+        assert!(row.contains("noop"));
+    }
+}

@@ -1,0 +1,38 @@
+//! Perf probe (EXPERIMENTS.md §Perf L3): execution-vs-transfer split per
+//! artifact, steps/s, and monitor-service ingestion cost.
+
+use anyhow::Result;
+use sketchgrad::coordinator::{open_runtime, Trainer};
+use sketchgrad::data::{make_chunks, synth_mnist, Init};
+use sketchgrad::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let rt = open_runtime()?;
+    for (artifact, steps, n_chunks) in [
+        ("mnist_std_chunk", 50usize, 3usize),
+        ("mnist_sk_r2_chunk", 50, 3),
+        ("mnist_sk_r16_chunk", 50, 3),
+        ("monitor16_mon_r4_chunk", 20, 2),
+    ] {
+        let mut trainer = Trainer::new(&rt, artifact, Init::Kaiming, 1)?;
+        let data = synth_mnist(128 * steps * n_chunks, 1);
+        let mut rng = Rng::new(2);
+        let chunks = make_chunks(&data, 128, steps, &mut rng, &[784]);
+        let t0 = std::time::Instant::now();
+        for c in &chunks {
+            trainer.run_chunk(c)?;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let stats = *trainer.exe.calls.borrow();
+        let total_steps = steps * chunks.len();
+        println!(
+            "{artifact}: {:.2} steps/s | exec {:.1}ms/call transfer {:.1}ms/call ({:.1}% transfer)",
+            total_steps as f64 / wall,
+            stats.total_exec_us as f64 / stats.n_calls as f64 / 1000.0,
+            stats.total_transfer_us as f64 / stats.n_calls as f64 / 1000.0,
+            100.0 * stats.total_transfer_us as f64
+                / (stats.total_exec_us + stats.total_transfer_us) as f64,
+        );
+    }
+    Ok(())
+}

@@ -1,0 +1,189 @@
+//! Experiment configuration: typed configs loadable from TOML files or CLI
+//! overrides.  Every figure binary and example resolves its parameters
+//! through here so runs are reproducible from a single file.
+
+use std::path::Path;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::AdaptiveConfig;
+use crate::util::toml::Toml;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Variant {
+    Standard,
+    Sketched,
+    Monitored,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Result<Variant> {
+        Ok(match s {
+            "standard" => Variant::Standard,
+            "sketched" => Variant::Sketched,
+            "monitored" => Variant::Monitored,
+            other => bail!("unknown variant {other:?}"),
+        })
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Variant::Standard => "standard",
+            Variant::Sketched => "sketched",
+            Variant::Monitored => "monitored",
+        }
+    }
+}
+
+/// One training experiment (a figure panel's single curve).
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    pub name: String,
+    /// Artifact family prefix: mnist | cifar | monitor16 | pinn.
+    pub family: String,
+    pub variant: Variant,
+    pub rank: usize,
+    pub adaptive: bool,
+    pub adaptive_cfg: AdaptiveConfig,
+    pub epochs: usize,
+    pub train_size: usize,
+    pub test_size: usize,
+    pub seed: u64,
+    pub artifacts_dir: String,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            name: "mnist".into(),
+            family: "mnist".into(),
+            variant: Variant::Standard,
+            rank: 2,
+            adaptive: false,
+            adaptive_cfg: AdaptiveConfig::default(),
+            epochs: 5,
+            train_size: 128 * 100,
+            test_size: 128 * 10,
+            seed: 42,
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+impl ExperimentConfig {
+    pub fn from_toml_file(path: &Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&Toml::parse(&text)?)
+    }
+
+    pub fn from_toml(t: &Toml) -> Result<ExperimentConfig> {
+        let d = ExperimentConfig::default();
+        let adaptive_cfg = AdaptiveConfig {
+            r0: t.usize_or("adaptive.r0", 2)?,
+            p_decrease: t.usize_or("adaptive.p_decrease", 3)?,
+            p_increase: t.usize_or("adaptive.p_increase", 2)?,
+            dr_down: t.usize_or("adaptive.dr_down", 2)?,
+            dr_up: t.usize_or("adaptive.dr_up", 4)?,
+            tau_reset: t.usize_or("adaptive.tau_reset", 16)?,
+            ladder: vec![2, 4, 8, 16],
+            min_rel_improvement: t.f64_or("adaptive.min_rel_improvement", 1e-3)?,
+        };
+        Ok(ExperimentConfig {
+            name: t.str_or("experiment.name", &d.name)?,
+            family: t.str_or("experiment.family", &d.family)?,
+            variant: Variant::parse(&t.str_or(
+                "experiment.variant",
+                d.variant.as_str(),
+            )?)?,
+            rank: t.usize_or("sketch.rank", d.rank)?,
+            adaptive: t.bool_or("sketch.adaptive", d.adaptive)?,
+            adaptive_cfg,
+            epochs: t.usize_or("experiment.epochs", d.epochs)?,
+            train_size: t.usize_or("experiment.train_size", d.train_size)?,
+            test_size: t.usize_or("experiment.test_size", d.test_size)?,
+            seed: t.usize_or("experiment.seed", d.seed as usize)? as u64,
+            artifacts_dir: t
+                .str_or("experiment.artifacts_dir", &d.artifacts_dir)?,
+        })
+    }
+
+    /// The artifact name this config starts on.
+    pub fn artifact_name(&self) -> String {
+        match self.variant {
+            Variant::Standard => format!("{}_std_chunk", self.family),
+            Variant::Sketched => {
+                format!("{}_sk_r{}_chunk", self.family, self.rank)
+            }
+            Variant::Monitored => {
+                format!("{}_mon_r{}_chunk", self.family, self.rank)
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.epochs == 0 {
+            bail!("epochs must be > 0");
+        }
+        if self.variant != Variant::Standard
+            && !self.adaptive_cfg.ladder.contains(&self.rank)
+        {
+            bail!(
+                "rank {} not in compiled ladder {:?}",
+                self.rank,
+                self.adaptive_cfg.ladder
+            );
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_and_artifact_names() {
+        let mut c = ExperimentConfig::default();
+        assert_eq!(c.artifact_name(), "mnist_std_chunk");
+        c.variant = Variant::Sketched;
+        c.rank = 4;
+        assert_eq!(c.artifact_name(), "mnist_sk_r4_chunk");
+        c.family = "monitor16".into();
+        c.variant = Variant::Monitored;
+        assert_eq!(c.artifact_name(), "monitor16_mon_r4_chunk");
+    }
+
+    #[test]
+    fn toml_roundtrip() {
+        let t = Toml::parse(
+            r#"
+[experiment]
+name = "fig1"
+family = "mnist"
+variant = "sketched"
+epochs = 50
+[sketch]
+rank = 2
+adaptive = true
+[adaptive]
+p_decrease = 4
+"#,
+        )
+        .unwrap();
+        let c = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(c.name, "fig1");
+        assert_eq!(c.variant, Variant::Sketched);
+        assert_eq!(c.epochs, 50);
+        assert!(c.adaptive);
+        assert_eq!(c.adaptive_cfg.p_decrease, 4);
+        c.validate().unwrap();
+    }
+
+    #[test]
+    fn validation_rejects_off_ladder_rank() {
+        let mut c = ExperimentConfig::default();
+        c.variant = Variant::Sketched;
+        c.rank = 3;
+        assert!(c.validate().is_err());
+    }
+}

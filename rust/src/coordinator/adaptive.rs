@@ -1,0 +1,227 @@
+//! Algorithm 1's adaptive-rank controller (paper §4.3), as an L3 state
+//! machine over per-epoch training metrics.
+//!
+//! The paper adjusts rank with patience counters: consistent improvement
+//! for `p_decrease` epochs lowers rank (save memory), stagnation for
+//! `p_increase` epochs raises it (higher-fidelity reconstruction), and a
+//! rank that would grow past `tau_reset` snaps back to `r0`.  Because AOT
+//! artifacts have fixed shapes, requested ranks snap to the compiled
+//! ladder (r in {2,4,8,16}); each change triggers sketch/projection
+//! re-initialisation in the trainer (`swap_artifact`).
+
+#[derive(Clone, Debug)]
+pub struct AdaptiveConfig {
+    pub r0: usize,
+    pub p_decrease: usize,
+    pub p_increase: usize,
+    pub dr_down: usize,
+    pub dr_up: usize,
+    pub tau_reset: usize,
+    /// Compiled artifact ranks (ascending).
+    pub ladder: Vec<usize>,
+    /// Relative improvement threshold on epoch loss.
+    pub min_rel_improvement: f64,
+}
+
+impl Default for AdaptiveConfig {
+    fn default() -> Self {
+        AdaptiveConfig {
+            r0: 2,
+            p_decrease: 3,
+            p_increase: 2,
+            dr_down: 2,
+            dr_up: 4,
+            tau_reset: 16,
+            ladder: vec![2, 4, 8, 16],
+            min_rel_improvement: 1e-3,
+        }
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum RankDecision {
+    Keep,
+    Decrease(usize),
+    Increase(usize),
+    Reset(usize),
+}
+
+#[derive(Debug)]
+pub struct AdaptiveRank {
+    pub cfg: AdaptiveConfig,
+    pub rank: usize,
+    best_loss: f64,
+    improve_streak: usize,
+    stagnant_streak: usize,
+    pub decisions: Vec<(usize, RankDecision)>,
+    epoch: usize,
+}
+
+impl AdaptiveRank {
+    pub fn new(cfg: AdaptiveConfig) -> Self {
+        let rank = snap_to_ladder(cfg.r0, &cfg.ladder);
+        AdaptiveRank {
+            cfg,
+            rank,
+            best_loss: f64::INFINITY,
+            improve_streak: 0,
+            stagnant_streak: 0,
+            decisions: Vec::new(),
+            epoch: 0,
+        }
+    }
+
+    /// Feed one epoch's mean loss; returns the decision (and updates
+    /// `self.rank`).  The caller swaps executables on any non-Keep.
+    pub fn observe(&mut self, epoch_loss: f64) -> RankDecision {
+        self.epoch += 1;
+        let improved = epoch_loss
+            < self.best_loss * (1.0 - self.cfg.min_rel_improvement);
+        if improved {
+            self.best_loss = epoch_loss;
+            self.improve_streak += 1;
+            self.stagnant_streak = 0;
+        } else {
+            self.stagnant_streak += 1;
+            self.improve_streak = 0;
+        }
+
+        let decision = if self.improve_streak >= self.cfg.p_decrease {
+            self.improve_streak = 0;
+            let target = self.rank.saturating_sub(self.cfg.dr_down).max(1);
+            let snapped = snap_to_ladder(target, &self.cfg.ladder);
+            if snapped < self.rank {
+                self.rank = snapped;
+                RankDecision::Decrease(snapped)
+            } else {
+                RankDecision::Keep
+            }
+        } else if self.stagnant_streak >= self.cfg.p_increase {
+            self.stagnant_streak = 0;
+            let target = self.rank + self.cfg.dr_up;
+            if target >= self.cfg.tau_reset {
+                // Algorithm 1 line 19: reset to r0.
+                let snapped = snap_to_ladder(self.cfg.r0, &self.cfg.ladder);
+                self.rank = snapped;
+                RankDecision::Reset(snapped)
+            } else {
+                let snapped = snap_to_ladder(target, &self.cfg.ladder);
+                if snapped > self.rank {
+                    self.rank = snapped;
+                    RankDecision::Increase(snapped)
+                } else {
+                    RankDecision::Keep
+                }
+            }
+        } else {
+            RankDecision::Keep
+        };
+
+        if decision != RankDecision::Keep {
+            self.decisions.push((self.epoch, decision));
+        }
+        decision
+    }
+}
+
+/// Snap a requested rank to the nearest compiled ladder entry (ties go
+/// down — prefer the cheaper artifact).
+pub fn snap_to_ladder(r: usize, ladder: &[usize]) -> usize {
+    assert!(!ladder.is_empty());
+    *ladder
+        .iter()
+        .min_by_key(|&&l| {
+            let d = l.abs_diff(r);
+            (d, l) // tie -> smaller rank
+        })
+        .unwrap()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> AdaptiveConfig {
+        AdaptiveConfig {
+            p_decrease: 2,
+            p_increase: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn snapping() {
+        let ladder = vec![2, 4, 8, 16];
+        assert_eq!(snap_to_ladder(1, &ladder), 2);
+        assert_eq!(snap_to_ladder(3, &ladder), 2); // tie 2|4 -> down
+        assert_eq!(snap_to_ladder(5, &ladder), 4);
+        assert_eq!(snap_to_ladder(6, &ladder), 4); // tie 4|8 -> down
+        assert_eq!(snap_to_ladder(100, &ladder), 16);
+    }
+
+    #[test]
+    fn improvement_decreases_rank() {
+        let mut a = AdaptiveRank::new(AdaptiveConfig {
+            r0: 8,
+            ..cfg()
+        });
+        assert_eq!(a.rank, 8);
+        assert_eq!(a.observe(1.0), RankDecision::Keep);
+        // second consecutive improvement triggers decrease (p_decrease=2)
+        match a.observe(0.5) {
+            RankDecision::Decrease(r) => assert!(r < 8),
+            d => panic!("expected decrease, got {d:?}"),
+        }
+    }
+
+    #[test]
+    fn stagnation_increases_then_resets() {
+        let mut a = AdaptiveRank::new(AdaptiveConfig {
+            r0: 2,
+            dr_up: 6,
+            tau_reset: 16,
+            ..cfg()
+        });
+        a.observe(1.0); // improvement (from inf)
+        a.observe(1.0); // stagnant 1
+        match a.observe(1.0) {
+            // stagnant 2 -> increase to snap(2+6)=8
+            RankDecision::Increase(r) => assert_eq!(r, 8),
+            d => panic!("{d:?}"),
+        }
+        a.observe(1.0); // stagnant 1
+        match a.observe(1.0) {
+            // 8 + 6 = 14 < 16 -> increase to snap(14)=16
+            RankDecision::Increase(r) => assert_eq!(r, 16),
+            d => panic!("{d:?}"),
+        }
+        a.observe(1.0);
+        match a.observe(1.0) {
+            // 16 + 6 >= tau_reset -> reset to r0
+            RankDecision::Reset(r) => assert_eq!(r, 2),
+            d => panic!("{d:?}"),
+        }
+    }
+
+    #[test]
+    fn rank_floor_is_ladder_bottom() {
+        let mut a = AdaptiveRank::new(AdaptiveConfig {
+            r0: 2,
+            ..cfg()
+        });
+        // Improvements cannot push below ladder minimum.
+        for i in 0..10 {
+            a.observe(1.0 / (i + 1) as f64);
+        }
+        assert_eq!(a.rank, 2);
+    }
+
+    #[test]
+    fn decisions_are_logged() {
+        let mut a = AdaptiveRank::new(AdaptiveConfig { r0: 2, ..cfg() });
+        for _ in 0..6 {
+            a.observe(1.0);
+        }
+        assert!(!a.decisions.is_empty());
+    }
+}

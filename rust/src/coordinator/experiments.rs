@@ -1,0 +1,326 @@
+//! Experiment harnesses: one entry point per paper figure/table, shared by
+//! the CLI binaries, the examples and the benches so every surface
+//! regenerates identical numbers (DESIGN.md §3 experiment index).
+
+use std::collections::HashMap;
+
+use anyhow::{Context, Result};
+
+use crate::config::{ExperimentConfig, Variant};
+use crate::data::{make_chunks, synth_cifar, synth_mnist, Dataset, Init, PoissonSampler};
+use crate::memory::{fmt_bytes, MemoryModel};
+use crate::monitor::{MonitorConfig, MonitorService};
+use crate::runtime::{Runtime, Tensor};
+use crate::util::rng::Rng;
+
+use super::adaptive::{AdaptiveRank, RankDecision};
+use super::trainer::{EpochSummary, StepMetrics, Trainer};
+
+/// Result of one experiment variant (a single curve in a figure).
+#[derive(Debug)]
+pub struct VariantRun {
+    pub label: String,
+    pub epochs: Vec<EpochSummary>,
+    pub history: Vec<StepMetrics>,
+    pub final_eval_loss: f32,
+    pub final_eval_acc: f32,
+    /// Modelled per-iteration activation/sketch memory (bytes).
+    pub model_bytes: usize,
+    /// Measured sketch-state bytes actually held by the trainer.
+    pub measured_sketch_bytes: usize,
+    pub rank_decisions: Vec<(usize, RankDecision)>,
+    pub steps_per_sec: f64,
+}
+
+fn family_dataset(family: &str, n: usize, seed: u64) -> Dataset {
+    match family {
+        "cifar" => synth_cifar(n, seed),
+        _ => synth_mnist(n, seed),
+    }
+}
+
+fn family_shape_tail(family: &str) -> Vec<usize> {
+    match family {
+        "cifar" => vec![3, 32, 32],
+        _ => vec![784],
+    }
+}
+
+fn family_init(family: &str, variant: &Variant, problematic: bool) -> Init {
+    let _ = variant;
+    if problematic {
+        Init::KaimingNegBias(-3.0)
+    } else if family == "mnist" {
+        // Paper uses tanh for the MNIST MLP; Xavier suits it.
+        Init::Xavier(1.0)
+    } else {
+        Init::Kaiming
+    }
+}
+
+/// Run one classifier variant (MNIST MLP / CIFAR CNN / monitor16 MLP),
+/// with optional Algorithm-1 adaptive rank control.
+pub fn run_classifier(
+    rt: &Runtime,
+    cfg: &ExperimentConfig,
+    problematic: bool,
+) -> Result<VariantRun> {
+    cfg.validate()?;
+    let artifact = cfg.artifact_name();
+    let entry = rt.manifest.get(&artifact)?;
+    let chunk_k = entry.meta_usize("chunk")?;
+    let n_b = entry.meta_usize("n_b")?;
+    let init = family_init(&cfg.family, &cfg.variant, problematic);
+
+    let mut trainer = Trainer::new(rt, &artifact, init, cfg.seed)?;
+    let mut adaptive = if cfg.adaptive && cfg.variant != Variant::Standard {
+        Some(AdaptiveRank::new(cfg.adaptive_cfg.clone()))
+    } else {
+        None
+    };
+
+    let train = family_dataset(&cfg.family, cfg.train_size, cfg.seed);
+    let test = family_dataset(&cfg.family, cfg.test_size, cfg.seed + 1);
+    let tail = family_shape_tail(&cfg.family);
+    let mut data_rng = Rng::new(cfg.seed ^ 0xDA7A);
+
+    let mut wall = 0.0;
+    let mut total_steps = 0usize;
+    for _epoch in 0..cfg.epochs {
+        let chunks = make_chunks(&train, n_b, chunk_k, &mut data_rng, &tail);
+        let summary = trainer.run_epoch(&chunks)?;
+        wall += summary.wall_secs;
+        total_steps += summary.steps;
+        if let Some(ctl) = adaptive.as_mut() {
+            match ctl.observe(summary.mean_loss as f64) {
+                RankDecision::Keep => {}
+                RankDecision::Decrease(r)
+                | RankDecision::Increase(r)
+                | RankDecision::Reset(r) => {
+                    let name = match cfg.variant {
+                        Variant::Sketched => {
+                            format!("{}_sk_r{}_chunk", cfg.family, r)
+                        }
+                        Variant::Monitored => {
+                            format!("{}_mon_r{}_chunk", cfg.family, r)
+                        }
+                        Variant::Standard => unreachable!(),
+                    };
+                    trainer.swap_artifact(&name)?;
+                }
+            }
+        }
+    }
+
+    // Held-out evaluation (no state absorption).
+    let mut eval_rng = Rng::new(cfg.seed ^ 0xE7A1);
+    let eval_chunks = make_chunks(&test, n_b, chunk_k, &mut eval_rng, &tail);
+    let (eval_loss, eval_acc) = if eval_chunks.is_empty() {
+        (f32::NAN, f32::NAN)
+    } else {
+        trainer.evaluate(&eval_chunks[..1])?
+    };
+
+    let dims = entry.meta_dims().unwrap_or_default();
+    let model = if dims.len() >= 3 {
+        MemoryModel::new(&dims, n_b)
+    } else {
+        MemoryModel::new(&[784, 512, 10], n_b)
+    };
+    let model_bytes = match cfg.variant {
+        Variant::Standard => model.standard_activations(),
+        _ => {
+            let rank = adaptive
+                .as_ref()
+                .map(|a| a.rank)
+                .unwrap_or(cfg.rank);
+            model.sketch_state(rank)
+        }
+    };
+
+    Ok(VariantRun {
+        label: cfg.name.clone(),
+        epochs: trainer.epochs.clone(),
+        final_eval_loss: eval_loss,
+        final_eval_acc: eval_acc,
+        model_bytes,
+        measured_sketch_bytes: trainer.sketch_bytes(),
+        rank_decisions: adaptive
+            .map(|a| a.decisions)
+            .unwrap_or_default(),
+        steps_per_sec: total_steps as f64 / wall.max(1e-9),
+        history: trainer.history,
+    })
+}
+
+/// Feed a finished run's history through the monitor service and diagnose.
+pub fn diagnose_run(run: &VariantRun, rank: usize, n_layers: usize) -> crate::monitor::Diagnosis {
+    let mut svc = MonitorService::new(MonitorConfig::for_rank(rank), n_layers);
+    for m in &run.history {
+        svc.observe(m);
+    }
+    svc.diagnose()
+}
+
+/// PINN experiment (Figs. 3-4): chunked Adam steps on sampled collocation
+/// points, then the eval artifact for the L2 relative error + fields.
+pub struct PinnRun {
+    pub label: String,
+    pub losses: Vec<f32>,
+    pub l2_rel_err: f32,
+    pub u_field: Vec<f32>,
+    pub err_field: Vec<f32>,
+    pub sketch_bytes: usize,
+    pub history: Vec<StepMetrics>,
+}
+
+pub fn run_pinn(
+    rt: &Runtime,
+    variant: &str, // "standard" | "monitored"
+    rank: usize,
+    chunks_to_run: usize,
+    seed: u64,
+) -> Result<PinnRun> {
+    let artifact = match variant {
+        "standard" => "pinn_std_chunk".to_string(),
+        "monitored" => format!("pinn_mon_r{rank}_chunk"),
+        other => anyhow::bail!("bad pinn variant {other}"),
+    };
+    let entry = rt.manifest.get(&artifact)?;
+    let chunk_k = entry.meta_usize("chunk")?;
+    let n_f = entry.meta_usize("n_f")?;
+    let n_bc = entry.meta_usize("n_bc")?;
+
+    let mut trainer = Trainer::new(rt, &artifact, Init::Xavier(1.0), seed)?;
+    let mut sampler = PoissonSampler::new(seed);
+    let mut losses = Vec::new();
+    for _ in 0..chunks_to_run {
+        // Stack K steps of fresh collocation/boundary points.
+        let mut ints = Vec::with_capacity(chunk_k * n_f * 2);
+        let mut bcs = Vec::with_capacity(chunk_k * n_bc * 2);
+        for _ in 0..chunk_k {
+            ints.extend(sampler.interior(n_f));
+            bcs.extend(sampler.boundary(n_bc));
+        }
+        let mut extra: HashMap<&str, Tensor> = HashMap::new();
+        extra.insert(
+            "interior",
+            Tensor::from_f32(&[chunk_k, n_f, 2], ints),
+        );
+        extra.insert("boundary", Tensor::from_f32(&[chunk_k, n_bc, 2], bcs));
+        let inputs = trainer.state.ordered_inputs(&trainer.exe.entry, &extra)?;
+        let outputs = trainer.exe.run(&inputs)?;
+        let metrics = trainer
+            .state
+            .absorb_outputs(&trainer.exe.entry, outputs)?;
+        losses.extend_from_slice(metrics["loss"].f32_data()?);
+        // Track sketch metrics in history for monitoring analysis.
+        if metrics.contains_key("z_norm") {
+            let zn = metrics["z_norm"].f32_data()?;
+            let sr = metrics["stable_rank"].f32_data()?;
+            let lh = zn.len() / chunk_k;
+            for s in 0..chunk_k {
+                trainer.history.push(StepMetrics {
+                    loss: metrics["loss"].f32_data()?[s],
+                    z_norm: zn[s * lh..(s + 1) * lh].to_vec(),
+                    stable_rank: sr[s * lh..(s + 1) * lh].to_vec(),
+                    ..Default::default()
+                });
+            }
+        }
+    }
+
+    // Evaluation on the 51x51 grid.
+    let eval = rt.load("pinn_eval")?;
+    let g = 51usize;
+    let grid = PoissonSampler::grid(g);
+    let mut eval_inputs: Vec<Tensor> = Vec::new();
+    for spec in &eval.entry.inputs {
+        if spec.name == "grid" {
+            eval_inputs.push(Tensor::from_f32(&[g * g, 2], grid.clone()));
+        } else {
+            eval_inputs.push(trainer.state.get(&spec.name)?.clone());
+        }
+    }
+    let eval_out = eval.run(&eval_inputs)?;
+    let u = eval_out[0].f32_data()?.to_vec();
+    let err = eval_out[2].f32_data()?.to_vec();
+    let l2 = eval_out[3].scalar()?;
+
+    Ok(PinnRun {
+        label: format!("pinn_{variant}_r{rank}"),
+        losses,
+        l2_rel_err: l2,
+        u_field: u,
+        err_field: err,
+        sketch_bytes: trainer.sketch_bytes(),
+        history: trainer.history,
+    })
+}
+
+/// Format a figure-style comparison table from variant runs.
+pub fn figure_table(title: &str, runs: &[&VariantRun]) -> String {
+    let mut out = format!("\n=== {title} ===\n");
+    out.push_str(
+        "| variant | final train acc | eval acc | eval loss | mem (model) | sketch bytes (measured) | steps/s |\n",
+    );
+    out.push_str("|---|---|---|---|---|---|---|\n");
+    for r in runs {
+        let acc = r
+            .epochs
+            .last()
+            .map(|e| e.mean_accuracy)
+            .unwrap_or(f32::NAN);
+        out.push_str(&format!(
+            "| {} | {:.3} | {:.3} | {:.3} | {} | {} | {:.2} |\n",
+            r.label,
+            acc,
+            r.final_eval_acc,
+            r.final_eval_loss,
+            fmt_bytes(r.model_bytes),
+            fmt_bytes(r.measured_sketch_bytes),
+            r.steps_per_sec,
+        ));
+    }
+    out
+}
+
+/// Per-epoch curves (the figure's right panel) as aligned text columns.
+pub fn curve_table(runs: &[&VariantRun]) -> String {
+    let mut out = String::from("epoch");
+    for r in runs {
+        out.push_str(&format!("  {:>18}", r.label));
+    }
+    out.push('\n');
+    let max_epochs = runs.iter().map(|r| r.epochs.len()).max().unwrap_or(0);
+    for e in 0..max_epochs {
+        out.push_str(&format!("{e:>5}"));
+        for r in runs {
+            match r.epochs.get(e) {
+                Some(s) => out.push_str(&format!(
+                    "  loss {:>6.3} acc {:>4.2}",
+                    s.mean_loss, s.mean_accuracy
+                )),
+                None => out.push_str(&format!("  {:>18}", "-")),
+            }
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Resolve the artifacts directory: $SKETCHGRAD_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> std::path::PathBuf {
+    std::env::var("SKETCHGRAD_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| {
+            std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR"))
+                .join("artifacts")
+        })
+}
+
+/// Shared runtime constructor with the standard error context.
+pub fn open_runtime() -> Result<Runtime> {
+    Runtime::new(&artifacts_dir())
+        .context("runtime init (did you run `make artifacts`?)")
+}

@@ -1,0 +1,14 @@
+//! L3 coordinator: the paper's system layer.  Training orchestration over
+//! AOT artifacts, Algorithm-1 adaptive-rank control with per-rank
+//! executable swapping, and the name-driven state store that makes the
+//! trainer generic across artifact families.
+
+pub mod adaptive;
+pub mod experiments;
+pub mod state;
+pub mod trainer;
+
+pub use adaptive::{snap_to_ladder, AdaptiveConfig, AdaptiveRank, RankDecision};
+pub use state::{init_state, reinit_sketches, StateStore};
+pub use experiments::{diagnose_run, figure_table, open_runtime, run_classifier, run_pinn, PinnRun, VariantRun};
+pub use trainer::{EpochSummary, StepMetrics, Trainer};

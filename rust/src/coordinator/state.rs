@@ -1,0 +1,269 @@
+//! Training-state store: the coordinator's single source of truth for all
+//! tensors an artifact threads through itself (params, Adam moments, step
+//! counter, EMA sketches, projections).
+//!
+//! The manifest names every input/output; state round-trips by name
+//! (`out_w0` writes back over `w0`, etc.), which makes the trainer fully
+//! generic across the MLP / CNN / PINN artifact families and across rank
+//! variants — exactly what the adaptive-rank controller needs when it
+//! swaps executables: non-sketch state carries over, sketch state is
+//! re-initialised at the new k.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::data::{init_conv, init_mlp, Init};
+use crate::runtime::{ArtifactEntry, Tensor, TensorSpec};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Default, Clone)]
+pub struct StateStore {
+    map: HashMap<String, Tensor>,
+}
+
+impl StateStore {
+    pub fn get(&self, name: &str) -> Result<&Tensor> {
+        self.map
+            .get(name)
+            .with_context(|| format!("state has no tensor {name:?}"))
+    }
+
+    pub fn set(&mut self, name: &str, t: Tensor) {
+        self.map.insert(name.to_string(), t);
+    }
+
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.map.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Total bytes of state currently held (memory accountant input).
+    pub fn total_bytes(&self) -> usize {
+        self.map.values().map(|t| t.bytes()).sum()
+    }
+
+    /// Bytes of sketch-related state only (sketch_* + proj_*).
+    pub fn sketch_bytes(&self) -> usize {
+        self.map
+            .iter()
+            .filter(|(k, _)| k.starts_with("sketch_") || k.starts_with("proj_"))
+            .map(|(_, t)| t.bytes())
+            .sum()
+    }
+
+    /// Assemble the ordered input tensors for an artifact call.  State
+    /// tensors come from the store; `extra` supplies per-call tensors
+    /// (batch_x/batch_y/interior/boundary/grid...).
+    pub fn ordered_inputs(
+        &self,
+        entry: &ArtifactEntry,
+        extra: &HashMap<&str, Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        entry
+            .inputs
+            .iter()
+            .map(|spec| {
+                if let Some(t) = extra.get(spec.name.as_str()) {
+                    check_shape(spec, t)?;
+                    return Ok(t.clone());
+                }
+                let t = self.get(&spec.name)?;
+                check_shape(spec, t)?;
+                Ok(t.clone())
+            })
+            .collect()
+    }
+
+    /// Write artifact outputs back: every `out_<name>` output replaces
+    /// `<name>` in the store; the remaining outputs (metrics) are returned
+    /// keyed by name.
+    pub fn absorb_outputs(
+        &mut self,
+        entry: &ArtifactEntry,
+        outputs: Vec<Tensor>,
+    ) -> Result<HashMap<String, Tensor>> {
+        let mut metrics = HashMap::new();
+        for (spec, t) in entry.outputs.iter().zip(outputs) {
+            if let Some(state_name) = spec.name.strip_prefix("out_") {
+                self.map.insert(state_name.to_string(), t);
+            } else {
+                metrics.insert(spec.name.clone(), t);
+            }
+        }
+        Ok(metrics)
+    }
+}
+
+fn check_shape(spec: &TensorSpec, t: &Tensor) -> Result<()> {
+    if t.shape() != &spec.shape[..] {
+        bail!(
+            "tensor {} shape {:?} does not match manifest {:?}",
+            spec.name,
+            t.shape(),
+            spec.shape
+        );
+    }
+    Ok(())
+}
+
+/// Build the initial state for an artifact from its manifest entry:
+/// parameters via `init`, Adam moments/step zeroed, sketches zeroed,
+/// projections sampled i.i.d. N(0,1).
+pub fn init_state(
+    entry: &ArtifactEntry,
+    init: Init,
+    rng: &mut Rng,
+) -> Result<StateStore> {
+    let mut store = StateStore::default();
+    let kind = entry.meta_str("kind")?;
+
+    // Parameters by family.
+    match kind.as_str() {
+        "mlp" | "pinn" => {
+            let dims = entry.meta_dims()?;
+            for (l, (w, b)) in init_mlp(&dims, init, rng).into_iter().enumerate() {
+                store.set(&format!("w{l}"), w);
+                store.set(&format!("b{l}"), b);
+            }
+        }
+        "cnn" => {
+            let chans: Vec<usize> = entry
+                .meta
+                .get("meta")?
+                .get("channels")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?;
+            for (i, (k, b)) in
+                init_conv(&chans, 3, 3, rng).into_iter().enumerate()
+            {
+                store.set(&format!("conv_k{i}"), k);
+                store.set(&format!("conv_b{i}"), b);
+            }
+            let fc_dims: Vec<usize> = entry
+                .meta
+                .get("meta")?
+                .get("fc_dims")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<_>>()?;
+            for (l, (w, b)) in init_mlp(&fc_dims, init, rng).into_iter().enumerate() {
+                store.set(&format!("w{l}"), w);
+                store.set(&format!("b{l}"), b);
+            }
+        }
+        other => bail!("init_state: unknown artifact kind {other:?}"),
+    }
+
+    // Everything else the artifact expects: zeros for moments/sketches/t,
+    // gaussians for projections, skipping per-call tensors.
+    for spec in &entry.inputs {
+        if store.contains(&spec.name) {
+            continue;
+        }
+        let name = spec.name.as_str();
+        if name.starts_with("m_") || name.starts_with("v_") {
+            store.set(name, Tensor::zeros_f32(&spec.shape));
+        } else if name == "t" {
+            store.set(name, Tensor::scalar_f32(0.0));
+        } else if name.starts_with("sketch_") {
+            store.set(name, Tensor::zeros_f32(&spec.shape));
+        } else if name.starts_with("proj_") {
+            store.set(
+                name,
+                Tensor::from_f32(&spec.shape, rng.normal_vec_f32(spec.numel())),
+            );
+        }
+        // batch_x / batch_y / interior / boundary / grid are per-call.
+    }
+    Ok(store)
+}
+
+/// Re-initialise sketch state for a new artifact entry (rank switch,
+/// Algorithm 1 lines 16/23): sketches zeroed, projections resampled,
+/// everything else preserved.
+pub fn reinit_sketches(
+    store: &mut StateStore,
+    entry: &ArtifactEntry,
+    rng: &mut Rng,
+) {
+    for spec in &entry.inputs {
+        let name = spec.name.as_str();
+        if name.starts_with("sketch_") {
+            store.set(name, Tensor::zeros_f32(&spec.shape));
+        } else if name.starts_with("proj_") {
+            store.set(
+                name,
+                Tensor::from_f32(&spec.shape, rng.normal_vec_f32(spec.numel())),
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+    use std::path::PathBuf;
+
+    fn manifest() -> Option<Manifest> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        Manifest::load(&dir).ok()
+    }
+
+    #[test]
+    fn init_covers_all_non_batch_inputs() {
+        let Some(m) = manifest() else { return };
+        for name in ["mnist_std_step", "mnist_sk_r2_step"] {
+            let e = m.get(name).unwrap();
+            let mut rng = Rng::new(1);
+            let s = init_state(e, Init::Kaiming, &mut rng).unwrap();
+            for spec in &e.inputs {
+                let is_batch = spec.name.starts_with("batch_");
+                assert_eq!(
+                    s.contains(&spec.name),
+                    !is_batch,
+                    "{} coverage wrong",
+                    spec.name
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn absorb_roundtrip_names() {
+        let Some(m) = manifest() else { return };
+        let e = m.get("mnist_std_step").unwrap();
+        let mut rng = Rng::new(2);
+        let mut s = init_state(e, Init::Kaiming, &mut rng).unwrap();
+        // Fabricate outputs with the manifest shapes.
+        let outs: Vec<Tensor> = e
+            .outputs
+            .iter()
+            .map(|spec| Tensor::zeros_f32(&spec.shape))
+            .collect();
+        let metrics = s.absorb_outputs(e, outs).unwrap();
+        assert!(metrics.contains_key("loss"));
+        assert!(metrics.contains_key("accuracy"));
+        // w0 must have been replaced by out_w0's zeros.
+        assert_eq!(s.get("w0").unwrap().f32_data().unwrap()[0], 0.0);
+    }
+
+    #[test]
+    fn sketch_bytes_counts_only_sketch_state() {
+        let Some(m) = manifest() else { return };
+        let e = m.get("mnist_sk_r2_step").unwrap();
+        let mut rng = Rng::new(3);
+        let s = init_state(e, Init::Kaiming, &mut rng).unwrap();
+        let sk = s.sketch_bytes();
+        // 3 sketches (3,512,5) + Upsilon/Omega/Phi (128,5) + psi (3,5)
+        let want = 3 * 3 * 512 * 5 * 4 + 3 * 128 * 5 * 4 + 3 * 5 * 4;
+        assert_eq!(sk, want);
+    }
+}

@@ -1,0 +1,217 @@
+//! Training orchestrator: drives chunked AOT train-step artifacts over the
+//! data pipeline, records per-step metrics, and supports hot executable
+//! swaps for the adaptive-rank controller.
+//!
+//! The trainer is artifact-family agnostic — everything it knows comes from
+//! the manifest entry (input/output names + meta), so MNIST MLPs, the
+//! 16-layer monitoring nets and the CIFAR CNN all run through the same
+//! loop.
+
+use std::collections::HashMap;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::data::{Chunk, Init};
+use crate::runtime::{Executable, Runtime, Tensor};
+use crate::util::rng::Rng;
+
+use super::state::{init_state, reinit_sketches, StateStore};
+
+/// Metrics for one optimizer step, extracted from a chunk's stacked
+/// metric outputs.
+#[derive(Clone, Debug, Default)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub accuracy: f32,
+    /// Per hidden layer ||Z||_F (gradient-magnitude proxy, §4.6).
+    pub z_norm: Vec<f32>,
+    /// Per hidden layer stable rank of the Y-sketch.
+    pub stable_rank: Vec<f32>,
+    pub y_norm: Vec<f32>,
+    pub x_norm: Vec<f32>,
+    /// Exact per-weight-layer gradient Frobenius norms.
+    pub grad_norm: Vec<f32>,
+    /// PINN extras (zero elsewhere).
+    pub pde_mse: f32,
+    pub bc_mse: f32,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct EpochSummary {
+    pub epoch: usize,
+    pub mean_loss: f32,
+    pub mean_accuracy: f32,
+    pub last_loss: f32,
+    pub steps: usize,
+    pub wall_secs: f64,
+    pub steps_per_sec: f64,
+}
+
+pub struct Trainer<'rt> {
+    pub runtime: &'rt Runtime,
+    pub exe: Rc<Executable>,
+    pub state: StateStore,
+    pub rng: Rng,
+    pub history: Vec<StepMetrics>,
+    pub epochs: Vec<EpochSummary>,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(
+        runtime: &'rt Runtime,
+        artifact: &str,
+        init: Init,
+        seed: u64,
+    ) -> Result<Trainer<'rt>> {
+        let exe = runtime.load(artifact)?;
+        let mut rng = Rng::new(seed);
+        let state = init_state(&exe.entry, init, &mut rng)?;
+        Ok(Trainer {
+            runtime,
+            exe,
+            state,
+            rng,
+            history: Vec::new(),
+            epochs: Vec::new(),
+        })
+    }
+
+    /// Swap to a different artifact variant (adaptive rank change):
+    /// carries over parameters/optimizer state, re-initialises sketches
+    /// and projections at the new k (Algorithm 1 line 23).
+    pub fn swap_artifact(&mut self, artifact: &str) -> Result<()> {
+        let exe = self.runtime.load(artifact)?;
+        reinit_sketches(&mut self.state, &exe.entry, &mut self.rng);
+        self.exe = exe;
+        Ok(())
+    }
+
+    /// Execute one chunk (K fused steps), absorb state, record metrics.
+    pub fn run_chunk(&mut self, chunk: &Chunk) -> Result<&[StepMetrics]> {
+        let start = self.history.len();
+        let mut extra: HashMap<&str, Tensor> = HashMap::new();
+        extra.insert("batch_x", chunk.xs.clone());
+        extra.insert("batch_y", chunk.ys.clone());
+        let inputs = self.state.ordered_inputs(&self.exe.entry, &extra)?;
+        let outputs = self.exe.run(&inputs)?;
+        let metrics = self.state.absorb_outputs(&self.exe.entry, outputs)?;
+        self.extract_steps(chunk.steps, &metrics)?;
+        Ok(&self.history[start..])
+    }
+
+    /// Evaluate on held-out chunks WITHOUT absorbing state: the artifact's
+    /// loss/accuracy outputs are computed on the incoming parameters
+    /// before its optimizer update, so discarding outputs yields clean
+    /// evaluation at the cost of one wasted update computation.
+    pub fn evaluate(&self, chunks: &[Chunk]) -> Result<(f32, f32)> {
+        let mut losses = Vec::new();
+        let mut accs = Vec::new();
+        for chunk in chunks {
+            let mut extra: HashMap<&str, Tensor> = HashMap::new();
+            extra.insert("batch_x", chunk.xs.clone());
+            extra.insert("batch_y", chunk.ys.clone());
+            let inputs = self.state.ordered_inputs(&self.exe.entry, &extra)?;
+            let outputs = self.exe.run(&inputs)?;
+            // Peek metrics without touching self.state.
+            let mut state = self.state.clone();
+            let metrics = state.absorb_outputs(&self.exe.entry, outputs)?;
+            let loss = metrics.get("loss").context("no loss")?;
+            let acc = metrics.get("accuracy").context("no accuracy")?;
+            losses.extend_from_slice(loss.f32_data()?);
+            accs.extend_from_slice(acc.f32_data()?);
+        }
+        let n = losses.len().max(1) as f32;
+        Ok((
+            losses.iter().sum::<f32>() / n,
+            accs.iter().sum::<f32>() / n,
+        ))
+    }
+
+    fn extract_steps(
+        &mut self,
+        steps: usize,
+        metrics: &HashMap<String, Tensor>,
+    ) -> Result<()> {
+        let loss = metrics.get("loss").context("no loss output")?;
+        let get_vec = |name: &str| -> Vec<f32> {
+            metrics
+                .get(name)
+                .and_then(|t| t.f32_data().ok())
+                .map(|d| d.to_vec())
+                .unwrap_or_default()
+        };
+        let losses = loss.f32_data()?;
+        let accs = get_vec("accuracy");
+        let pde = get_vec("pde_mse");
+        let bc = get_vec("bc_mse");
+        let per_layer = |name: &str| -> (Vec<f32>, usize) {
+            match metrics.get(name) {
+                Some(t) => {
+                    let w = t.shape().last().copied().unwrap_or(0);
+                    (t.f32_data().map(|d| d.to_vec()).unwrap_or_default(), w)
+                }
+                None => (Vec::new(), 0),
+            }
+        };
+        let (zn, zw) = per_layer("z_norm");
+        let (sr, srw) = per_layer("stable_rank");
+        let (yn, yw) = per_layer("y_norm");
+        let (xn, xw) = per_layer("x_norm");
+        let (gn, gw) = per_layer("grad_norm");
+        let slice = |v: &[f32], w: usize, s: usize| -> Vec<f32> {
+            if w == 0 {
+                Vec::new()
+            } else {
+                v[s * w..(s + 1) * w].to_vec()
+            }
+        };
+        for s in 0..steps {
+            self.history.push(StepMetrics {
+                loss: losses[s.min(losses.len() - 1)],
+                accuracy: accs.get(s).copied().unwrap_or(0.0),
+                z_norm: slice(&zn, zw, s),
+                stable_rank: slice(&sr, srw, s),
+                y_norm: slice(&yn, yw, s),
+                x_norm: slice(&xn, xw, s),
+                grad_norm: slice(&gn, gw, s),
+                pde_mse: pde.get(s).copied().unwrap_or(0.0),
+                bc_mse: bc.get(s).copied().unwrap_or(0.0),
+            });
+        }
+        Ok(())
+    }
+
+    /// Run a full epoch over pre-built chunks, returning its summary.
+    pub fn run_epoch(&mut self, chunks: &[Chunk]) -> Result<EpochSummary> {
+        let t0 = Instant::now();
+        let start = self.history.len();
+        for chunk in chunks {
+            self.run_chunk(chunk)?;
+        }
+        let steps = self.history.len() - start;
+        let span = &self.history[start..];
+        let mean_loss =
+            span.iter().map(|m| m.loss).sum::<f32>() / steps.max(1) as f32;
+        let mean_acc = span.iter().map(|m| m.accuracy).sum::<f32>()
+            / steps.max(1) as f32;
+        let wall = t0.elapsed().as_secs_f64();
+        let summary = EpochSummary {
+            epoch: self.epochs.len(),
+            mean_loss,
+            mean_accuracy: mean_acc,
+            last_loss: span.last().map(|m| m.loss).unwrap_or(f32::NAN),
+            steps,
+            wall_secs: wall,
+            steps_per_sec: steps as f64 / wall.max(1e-9),
+        };
+        self.epochs.push(summary.clone());
+        Ok(summary)
+    }
+
+    /// Bytes of sketch state currently held (memory accounting hook).
+    pub fn sketch_bytes(&self) -> usize {
+        self.state.sketch_bytes()
+    }
+}

@@ -1,0 +1,162 @@
+//! Epoch batcher: seeded shuffling + chunk assembly for the chunked train
+//! artifacts (stacked (K, n_b, d) batch tensors), with a prefetch thread
+//! so chunk packing overlaps PJRT execution (L3 perf item).
+
+use std::sync::mpsc;
+use std::thread;
+
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+use super::synth::Dataset;
+
+/// One chunk of K stacked batches ready for a chunked artifact call.
+#[derive(Debug)]
+pub struct Chunk {
+    pub xs: Tensor, // (k_steps, n_b, dim) f32
+    pub ys: Tensor, // (k_steps, n_b) i32
+    pub steps: usize,
+}
+
+/// Assemble the epoch's chunks from a shuffled index permutation.
+pub fn make_chunks(
+    data: &Dataset,
+    n_b: usize,
+    k_steps: usize,
+    rng: &mut Rng,
+    x_shape_tail: &[usize],
+) -> Vec<Chunk> {
+    let mut order: Vec<usize> = (0..data.n).collect();
+    rng.shuffle(&mut order);
+    let steps_total = data.n / n_b;
+    let mut chunks = Vec::new();
+    let mut step = 0;
+    while step < steps_total {
+        let steps = k_steps.min(steps_total - step);
+        // Only emit full-size chunks: the artifacts have a fixed leading K.
+        if steps < k_steps {
+            break;
+        }
+        let mut xs = Vec::with_capacity(steps * n_b * data.dim);
+        let mut ys = Vec::with_capacity(steps * n_b);
+        for s in 0..steps {
+            for b in 0..n_b {
+                let idx = order[(step + s) * n_b + b];
+                xs.extend_from_slice(data.x_row(idx));
+                ys.push(data.ys[idx]);
+            }
+        }
+        let mut x_shape = vec![steps, n_b];
+        x_shape.extend_from_slice(x_shape_tail);
+        chunks.push(Chunk {
+            xs: Tensor::from_f32(&x_shape, xs),
+            ys: Tensor::from_i32(&[steps, n_b], ys),
+            steps,
+        });
+        step += steps;
+    }
+    chunks
+}
+
+/// Background prefetcher: packs the next epoch's chunks on a worker thread
+/// while the current epoch executes on PJRT.
+pub struct Prefetcher {
+    rx: mpsc::Receiver<Vec<Chunk>>,
+    handle: Option<thread::JoinHandle<()>>,
+}
+
+impl Prefetcher {
+    pub fn spawn(
+        data: Dataset,
+        n_b: usize,
+        k_steps: usize,
+        seed: u64,
+        epochs: usize,
+        x_shape_tail: Vec<usize>,
+    ) -> Prefetcher {
+        let (tx, rx) = mpsc::sync_channel(1); // one epoch of lookahead
+        let handle = thread::spawn(move || {
+            let mut rng = Rng::new(seed);
+            for _ in 0..epochs {
+                let chunks =
+                    make_chunks(&data, n_b, k_steps, &mut rng, &x_shape_tail);
+                if tx.send(chunks).is_err() {
+                    return; // consumer dropped
+                }
+            }
+        });
+        Prefetcher {
+            rx,
+            handle: Some(handle),
+        }
+    }
+
+    pub fn next_epoch(&mut self) -> Option<Vec<Chunk>> {
+        self.rx.recv().ok()
+    }
+}
+
+impl Drop for Prefetcher {
+    fn drop(&mut self) {
+        // Unblock the worker by draining, then join.
+        while self.rx.try_recv().is_ok() {}
+        if let Some(h) = self.handle.take() {
+            drop(std::mem::replace(&mut self.rx, mpsc::channel().1));
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::synth::synth_mnist;
+
+    #[test]
+    fn chunks_cover_epoch_without_repeats() {
+        let data = synth_mnist(640, 1);
+        let mut rng = Rng::new(2);
+        let chunks = make_chunks(&data, 64, 5, &mut rng, &[784]);
+        assert_eq!(chunks.len(), 2); // 640/64 = 10 steps = 2 chunks of 5
+        for c in &chunks {
+            assert_eq!(c.xs.shape(), &[5, 64, 784]);
+            assert_eq!(c.ys.shape(), &[5, 64]);
+        }
+    }
+
+    #[test]
+    fn shuffling_changes_order_but_not_multiset() {
+        let data = synth_mnist(256, 1);
+        let mut rng = Rng::new(3);
+        let c1 = make_chunks(&data, 64, 2, &mut rng, &[784]);
+        let c2 = make_chunks(&data, 64, 2, &mut rng, &[784]);
+        // Label multiset is preserved per epoch.
+        let labels = |cs: &[Chunk]| {
+            let mut v: Vec<i32> = cs
+                .iter()
+                .flat_map(|c| c.ys.i32_data().unwrap().to_vec())
+                .collect();
+            v.sort_unstable();
+            v
+        };
+        assert_eq!(labels(&c1), labels(&c2));
+        // But the order differs between epochs.
+        let flat = |cs: &[Chunk]| -> Vec<i32> {
+            cs.iter()
+                .flat_map(|c| c.ys.i32_data().unwrap().to_vec())
+                .collect()
+        };
+        assert_ne!(flat(&c1), flat(&c2));
+    }
+
+    #[test]
+    fn prefetcher_delivers_epochs() {
+        let data = synth_mnist(256, 5);
+        let mut p = Prefetcher::spawn(data, 64, 2, 7, 3, vec![784]);
+        for _ in 0..3 {
+            let chunks = p.next_epoch().unwrap();
+            assert_eq!(chunks.len(), 2);
+        }
+        assert!(p.next_epoch().is_none());
+    }
+}

@@ -1,0 +1,129 @@
+//! Parameter initialisation schemes (paper §5.1.2 / §5.3).
+//!
+//! Init happens rust-side (the artifacts are init-agnostic — parameters are
+//! inputs), so the Fig-5 "healthy vs problematic" contrast is expressed
+//! here: healthy = Kaiming fan-in + zero bias; problematic = Kaiming with a
+//! strong negative bias (b = -3.0) that kills ReLU units, per the paper.
+
+use crate::runtime::Tensor;
+use crate::util::rng::Rng;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Init {
+    /// He/Kaiming normal (fan-in), zero bias — ReLU-appropriate.
+    Kaiming,
+    /// Kaiming weights with constant negative bias (paper Fig. 5's
+    /// "problematic": b = -3.0 starves ReLU units).
+    KaimingNegBias(f32),
+    /// Xavier/Glorot with gain (paper §5.1.1 mentions gain 0.5 variants).
+    Xavier(f32),
+}
+
+/// Initialise per-layer (w, b) tensors for an MLP with `dims`.
+pub fn init_mlp(dims: &[usize], init: Init, rng: &mut Rng) -> Vec<(Tensor, Tensor)> {
+    let mut out = Vec::new();
+    for l in 0..dims.len() - 1 {
+        let (d_in, d_out) = (dims[l], dims[l + 1]);
+        let std = match init {
+            Init::Kaiming | Init::KaimingNegBias(_) => {
+                (2.0 / d_in as f64).sqrt()
+            }
+            Init::Xavier(gain) => {
+                gain as f64 * (2.0 / (d_in + d_out) as f64).sqrt()
+            }
+        };
+        let w: Vec<f32> = (0..d_out * d_in)
+            .map(|_| (rng.normal() * std) as f32)
+            .collect();
+        let bias_val = match init {
+            Init::KaimingNegBias(b) => b,
+            _ => 0.0,
+        };
+        out.push((
+            Tensor::from_f32(&[d_out, d_in], w),
+            Tensor::from_f32(&[d_out], vec![bias_val; d_out]),
+        ));
+    }
+    out
+}
+
+/// Conv kernel init (Kaiming fan-in over in_ch * kh * kw).
+pub fn init_conv(
+    channels: &[usize],
+    kh: usize,
+    kw: usize,
+    rng: &mut Rng,
+) -> Vec<(Tensor, Tensor)> {
+    let mut out = Vec::new();
+    for i in 0..channels.len() - 1 {
+        let (cin, cout) = (channels[i], channels[i + 1]);
+        let fan_in = cin * kh * kw;
+        let std = (2.0 / fan_in as f64).sqrt();
+        let k: Vec<f32> = (0..cout * cin * kh * kw)
+            .map(|_| (rng.normal() * std) as f32)
+            .collect();
+        out.push((
+            Tensor::from_f32(&[cout, cin, kh, kw], k),
+            Tensor::from_f32(&[cout], vec![0.0; cout]),
+        ));
+    }
+    out
+}
+
+/// Zeroed Adam state matching a parameter list.
+pub fn zeros_like(params: &[(Tensor, Tensor)]) -> Vec<(Tensor, Tensor)> {
+    params
+        .iter()
+        .map(|(w, b)| {
+            (Tensor::zeros_f32(w.shape()), Tensor::zeros_f32(b.shape()))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kaiming_scale() {
+        let mut rng = Rng::new(1);
+        let p = init_mlp(&[784, 512, 10], Init::Kaiming, &mut rng);
+        assert_eq!(p.len(), 2);
+        let w = p[0].0.f32_data().unwrap();
+        let var: f64 = w.iter().map(|&x| (x as f64).powi(2)).sum::<f64>()
+            / w.len() as f64;
+        let want = 2.0 / 784.0;
+        assert!(
+            (var - want).abs() < 0.2 * want,
+            "var {var} want {want}"
+        );
+        // zero bias
+        assert!(p[0].1.f32_data().unwrap().iter().all(|&b| b == 0.0));
+    }
+
+    #[test]
+    fn neg_bias_applied() {
+        let mut rng = Rng::new(2);
+        let p = init_mlp(&[10, 8, 2], Init::KaimingNegBias(-3.0), &mut rng);
+        assert!(p[0].1.f32_data().unwrap().iter().all(|&b| b == -3.0));
+    }
+
+    #[test]
+    fn xavier_gain_shrinks() {
+        let mut rng = Rng::new(3);
+        let a = init_mlp(&[100, 100], Init::Xavier(1.0), &mut rng);
+        let mut rng = Rng::new(3);
+        let b = init_mlp(&[100, 100], Init::Xavier(0.5), &mut rng);
+        let na: f64 = a[0].0.f32_data().unwrap().iter().map(|&x| (x as f64).powi(2)).sum();
+        let nb: f64 = b[0].0.f32_data().unwrap().iter().map(|&x| (x as f64).powi(2)).sum();
+        assert!((na / nb - 4.0).abs() < 0.2, "{}", na / nb);
+    }
+
+    #[test]
+    fn conv_shapes() {
+        let mut rng = Rng::new(4);
+        let c = init_conv(&[3, 32, 64], 3, 3, &mut rng);
+        assert_eq!(c[0].0.shape(), &[32, 3, 3, 3]);
+        assert_eq!(c[1].0.shape(), &[64, 32, 3, 3]);
+    }
+}

@@ -1,0 +1,10 @@
+//! Data substrate: synthetic dataset generators (DESIGN.md §5
+//! substitutions), seeded batching/prefetch, and parameter init schemes.
+
+pub mod batcher;
+pub mod init;
+pub mod synth;
+
+pub use batcher::{make_chunks, Chunk, Prefetcher};
+pub use init::{init_conv, init_mlp, zeros_like, Init};
+pub use synth::{synth_cifar, synth_mnist, Dataset, PoissonSampler};

@@ -1,0 +1,300 @@
+//! Synthetic dataset substrate (DESIGN.md §5 substitutions).
+//!
+//! MNIST/CIFAR-10 downloads are unavailable offline, so the experiments run
+//! on deterministic, seeded generators that preserve what the paper's
+//! figures actually measure: optimization behaviour under sketched
+//! gradients on a learnable 10-class problem whose activation matrices
+//! have decaying spectra (the structure tau_{r+1} bounds act on).
+//!
+//! * `synth_mnist`: 784-dim images.  Each class gets a smooth prototype
+//!   built from 2-D Gaussian bumps on the 28x28 grid (stroke-like, highly
+//!   correlated pixels -> low-rank-plus-tail activations); samples add
+//!   per-example bump jitter and pixel noise.
+//! * `synth_cifar`: 3x32x32 images.  Class prototypes are spatially
+//!   correlated textures (mixtures of oriented sinusoids per channel) so
+//!   conv features are genuinely useful, + noise.
+
+use crate::util::rng::Rng;
+
+/// A labelled dense dataset (row-major images).
+#[derive(Clone, Debug)]
+pub struct Dataset {
+    pub xs: Vec<f32>,     // n * dim
+    pub ys: Vec<i32>,     // n
+    pub n: usize,
+    pub dim: usize,
+    pub n_classes: usize,
+}
+
+impl Dataset {
+    pub fn x_row(&self, i: usize) -> &[f32] {
+        &self.xs[i * self.dim..(i + 1) * self.dim]
+    }
+}
+
+struct Bump {
+    cx: f64,
+    cy: f64,
+    sigma: f64,
+    amp: f64,
+}
+
+fn render_bumps(bumps: &[Bump], side: usize, out: &mut [f32]) {
+    for (idx, px) in out.iter_mut().enumerate() {
+        let y = (idx / side) as f64 / side as f64;
+        let x = (idx % side) as f64 / side as f64;
+        let mut v = 0.0;
+        for b in bumps {
+            let dx = x - b.cx;
+            let dy = y - b.cy;
+            v += b.amp * (-(dx * dx + dy * dy) / (2.0 * b.sigma * b.sigma)).exp();
+        }
+        *px = v as f32;
+    }
+}
+
+/// MNIST-like: 10 classes, 28x28 = 784 features in [0, ~1].
+pub fn synth_mnist(n: usize, seed: u64) -> Dataset {
+    let side = 28;
+    let dim = side * side;
+    let n_classes = 10;
+    let mut rng = Rng::new(seed ^ 0x4D4E4953); // "MNIS"
+    // Class prototypes: 4-6 stroke bumps each, fixed per class.
+    let protos: Vec<Vec<Bump>> = (0..n_classes)
+        .map(|_| {
+            let n_bumps = 4 + rng.below(3) as usize;
+            (0..n_bumps)
+                .map(|_| Bump {
+                    cx: rng.uniform_in(0.15, 0.85),
+                    cy: rng.uniform_in(0.15, 0.85),
+                    sigma: rng.uniform_in(0.06, 0.16),
+                    amp: rng.uniform_in(0.6, 1.0),
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut xs = vec![0.0f32; n * dim];
+    let mut ys = vec![0i32; n];
+    let mut buf = vec![0.0f32; dim];
+    for i in 0..n {
+        let cls = (i % n_classes) as i32;
+        ys[i] = cls;
+        // Jitter the prototype bumps per sample (elastic-ish deformation).
+        let jittered: Vec<Bump> = protos[cls as usize]
+            .iter()
+            .map(|b| Bump {
+                cx: b.cx + rng.normal() * 0.03,
+                cy: b.cy + rng.normal() * 0.03,
+                sigma: b.sigma * (1.0 + rng.normal() * 0.1),
+                amp: b.amp * (1.0 + rng.normal() * 0.1),
+            })
+            .collect();
+        render_bumps(&jittered, side, &mut buf);
+        let row = &mut xs[i * dim..(i + 1) * dim];
+        for (o, &v) in row.iter_mut().zip(buf.iter()) {
+            *o = (v + (rng.normal() * 0.05) as f32).clamp(-0.5, 1.5);
+        }
+    }
+    Dataset {
+        xs,
+        ys,
+        n,
+        dim,
+        n_classes,
+    }
+}
+
+/// CIFAR-like: 10 classes, 3x32x32 = 3072 features, NCHW layout.
+pub fn synth_cifar(n: usize, seed: u64) -> Dataset {
+    let side = 32;
+    let chans = 3;
+    let dim = chans * side * side;
+    let n_classes = 10;
+    let mut rng = Rng::new(seed ^ 0x43494641); // "CIFA"
+    // Per class, per channel: 2 oriented sinusoid components.
+    struct Tex {
+        fx: f64,
+        fy: f64,
+        phase: f64,
+        amp: f64,
+    }
+    let protos: Vec<Vec<Vec<Tex>>> = (0..n_classes)
+        .map(|_| {
+            (0..chans)
+                .map(|_| {
+                    (0..2)
+                        .map(|_| Tex {
+                            fx: rng.uniform_in(1.0, 5.0),
+                            fy: rng.uniform_in(1.0, 5.0),
+                            phase: rng.uniform_in(0.0, std::f64::consts::TAU),
+                            amp: rng.uniform_in(0.3, 0.7),
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut xs = vec![0.0f32; n * dim];
+    let mut ys = vec![0i32; n];
+    for i in 0..n {
+        let cls = (i % n_classes) as i32;
+        ys[i] = cls;
+        let phase_jit = rng.normal() * 0.4;
+        let row = &mut xs[i * dim..(i + 1) * dim];
+        for c in 0..chans {
+            for yy in 0..side {
+                for xx in 0..side {
+                    let u = xx as f64 / side as f64;
+                    let v = yy as f64 / side as f64;
+                    let mut val = 0.0;
+                    for t in &protos[cls as usize][c] {
+                        val += t.amp
+                            * (std::f64::consts::TAU
+                                * (t.fx * u + t.fy * v)
+                                + t.phase
+                                + phase_jit)
+                                .sin();
+                    }
+                    let noise = rng.normal() * 0.15;
+                    row[c * side * side + yy * side + xx] =
+                        (val + noise) as f32;
+                }
+            }
+        }
+    }
+    Dataset {
+        xs,
+        ys,
+        n,
+        dim,
+        n_classes,
+    }
+}
+
+/// Collocation/boundary point sampler for the PINN experiment.
+pub struct PoissonSampler {
+    rng: Rng,
+}
+
+impl PoissonSampler {
+    pub fn new(seed: u64) -> Self {
+        PoissonSampler {
+            rng: Rng::new(seed ^ 0x50494E4E),
+        }
+    }
+
+    /// Interior points uniform in (0,1)^2, flattened (n, 2).
+    pub fn interior(&mut self, n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(2 * n);
+        for _ in 0..n {
+            out.push(self.rng.uniform() as f32);
+            out.push(self.rng.uniform() as f32);
+        }
+        out
+    }
+
+    /// Boundary points on the unit square edges, flattened (n, 2).
+    pub fn boundary(&mut self, n: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(2 * n);
+        for _ in 0..n {
+            let t = self.rng.uniform() as f32;
+            match self.rng.below(4) {
+                0 => out.extend_from_slice(&[t, 0.0]),
+                1 => out.extend_from_slice(&[t, 1.0]),
+                2 => out.extend_from_slice(&[0.0, t]),
+                _ => out.extend_from_slice(&[1.0, t]),
+            }
+        }
+        out
+    }
+
+    /// Uniform evaluation grid (g x g interior-inclusive), flattened.
+    pub fn grid(g: usize) -> Vec<f32> {
+        let mut out = Vec::with_capacity(2 * g * g);
+        for i in 0..g {
+            for j in 0..g {
+                out.push(j as f32 / (g - 1) as f32);
+                out.push(i as f32 / (g - 1) as f32);
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mnist_shapes_and_determinism() {
+        let a = synth_mnist(100, 42);
+        let b = synth_mnist(100, 42);
+        assert_eq!(a.xs, b.xs);
+        assert_eq!(a.dim, 784);
+        assert_eq!(a.ys.iter().filter(|&&y| y == 3).count(), 10);
+        let c = synth_mnist(100, 43);
+        assert_ne!(a.xs, c.xs);
+    }
+
+    #[test]
+    fn mnist_classes_are_separated() {
+        // Mean intra-class distance must be well below inter-class distance
+        // — otherwise the task is unlearnable and figure shapes collapse.
+        let d = synth_mnist(200, 1);
+        let dist = |i: usize, j: usize| -> f64 {
+            d.x_row(i)
+                .iter()
+                .zip(d.x_row(j))
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum::<f64>()
+                .sqrt()
+        };
+        let mut intra = 0.0;
+        let mut inter = 0.0;
+        let mut n_intra = 0;
+        let mut n_inter = 0;
+        for i in 0..60 {
+            for j in i + 1..60 {
+                if d.ys[i] == d.ys[j] {
+                    intra += dist(i, j);
+                    n_intra += 1;
+                } else {
+                    inter += dist(i, j);
+                    n_inter += 1;
+                }
+            }
+        }
+        let intra = intra / n_intra as f64;
+        let inter = inter / n_inter as f64;
+        assert!(
+            inter > 1.5 * intra,
+            "inter {inter} should exceed 1.5x intra {intra}"
+        );
+    }
+
+    #[test]
+    fn cifar_shapes() {
+        let d = synth_cifar(50, 7);
+        assert_eq!(d.dim, 3072);
+        assert_eq!(d.n, 50);
+        assert!(d.xs.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn poisson_sampler_ranges() {
+        let mut s = PoissonSampler::new(3);
+        let int = s.interior(100);
+        assert!(int.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let bc = s.boundary(100);
+        for pt in bc.chunks(2) {
+            let on_edge = pt[0] == 0.0 || pt[0] == 1.0 || pt[1] == 0.0 || pt[1] == 1.0;
+            assert!(on_edge, "{pt:?} not on boundary");
+        }
+        let g = PoissonSampler::grid(51);
+        assert_eq!(g.len(), 2 * 51 * 51);
+        assert_eq!(g[0], 0.0);
+        assert_eq!(*g.last().unwrap(), 1.0);
+    }
+}

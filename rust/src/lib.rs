@@ -1,0 +1,29 @@
+//! # sketchgrad
+//!
+//! Production-grade reproduction of *"Randomized Matrix Sketching for
+//! Neural Network Training and Gradient Monitoring"* (Antil & Verma 2025)
+//! as a three-layer rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — coordinator: config, launcher, data pipeline,
+//!   training orchestrator, Algorithm-1 adaptive-rank controller, the
+//!   sketch-based gradient-monitor service, baselines and the memory
+//!   accountant.  Owns the event loop and all experiment harnesses.
+//! * **L2 (python/compile, build-time only)** — JAX model fwd/bwd with the
+//!   paper's sketched backpropagation, AOT-lowered to HLO text consumed by
+//!   the [`runtime`] PJRT client.  Python never runs at request time.
+//! * **L1 (python/compile/kernels)** — Pallas kernels for the EMA sketch
+//!   update and gradient assembly hot-spots, lowered into the same HLO.
+//!
+//! See DESIGN.md for the full system inventory and experiment index.
+
+pub mod baselines;
+pub mod benchkit;
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod memory;
+pub mod monitor;
+pub mod pinn;
+pub mod runtime;
+pub mod sketch;
+pub mod util;

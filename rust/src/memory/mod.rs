@@ -1,0 +1,192 @@
+//! Memory accountant (paper §4.7 / §5.4): exact byte models for every
+//! storage regime the paper compares, plus a live tracker fed from actual
+//! runtime state.  All figures' "memory" panels are generated from here.
+
+use crate::baselines::checkpoint;
+
+/// Byte model for one experiment configuration.
+#[derive(Clone, Debug)]
+pub struct MemoryModel {
+    /// Weight-layer dims (d_0 .. d_L).
+    pub dims: Vec<usize>,
+    pub n_b: usize,
+}
+
+impl MemoryModel {
+    pub fn new(dims: &[usize], n_b: usize) -> Self {
+        MemoryModel {
+            dims: dims.to_vec(),
+            n_b,
+        }
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.dims.len() - 1
+    }
+
+    pub fn n_hidden(&self) -> usize {
+        self.dims.len() - 2
+    }
+
+    pub fn d_hidden(&self) -> usize {
+        self.dims[1]
+    }
+
+    /// Per-iteration activation storage under standard backprop:
+    /// sum_l n_b * d_l * 4 over stored activations A^[0..L-1].
+    pub fn standard_activations(&self) -> usize {
+        self.dims[..self.dims.len() - 1]
+            .iter()
+            .map(|d| self.n_b * d * 4)
+            .sum()
+    }
+
+    /// Per-iteration sketch state at rank r (replaces hidden-activation
+    /// storage; input batch remains resident in both regimes).
+    pub fn sketch_state(&self, r: usize) -> usize {
+        checkpoint::sketch_state_bytes(
+            self.n_hidden(),
+            self.d_hidden(),
+            self.n_b,
+            r,
+        )
+    }
+
+    /// Per-iteration reduction fraction at rank r (hidden activations ->
+    /// sketches; the input batch is excluded from both sides).
+    pub fn per_iteration_reduction(&self, r: usize) -> f64 {
+        let hidden_acts: usize = self.dims[1..self.dims.len() - 1]
+            .iter()
+            .map(|d| self.n_b * d * 4)
+            .sum();
+        1.0 - self.sketch_state(r) as f64 / hidden_acts as f64
+    }
+
+    /// Traditional monitoring bytes over window T (paper §5.3):
+    /// full gradient matrices per checkpoint.
+    pub fn monitoring_traditional(&self, t_window: usize) -> usize {
+        crate::baselines::full_monitor::FullMonitor::bytes_for_arch(
+            &self.dims, t_window,
+        )
+    }
+
+    /// Sketch-based monitoring bytes — independent of T.
+    pub fn monitoring_sketched(&self, r: usize) -> usize {
+        self.sketch_state(r)
+    }
+
+    /// Monitoring reduction at window T, rank r (the 99% headline).
+    pub fn monitoring_reduction(&self, t_window: usize, r: usize) -> f64 {
+        1.0 - self.monitoring_sketched(r) as f64
+            / self.monitoring_traditional(t_window) as f64
+    }
+
+    /// Parameter bytes (weights + biases), for peak-memory context.
+    pub fn param_bytes(&self) -> usize {
+        self.dims
+            .windows(2)
+            .map(|w| (w[0] * w[1] + w[1]) * 4)
+            .sum()
+    }
+}
+
+/// Live peak-memory tracker fed by the coordinator (actual tensor bytes).
+#[derive(Debug, Default)]
+pub struct PeakTracker {
+    pub current: usize,
+    pub peak: usize,
+    pub samples: Vec<(String, usize)>,
+}
+
+impl PeakTracker {
+    pub fn record(&mut self, label: &str, bytes: usize) {
+        self.current = bytes;
+        if bytes > self.peak {
+            self.peak = bytes;
+        }
+        if self.samples.len() < 4096 {
+            self.samples.push((label.to_string(), bytes));
+        }
+    }
+}
+
+pub fn fmt_bytes(b: usize) -> String {
+    let b = b as f64;
+    if b >= 1024.0 * 1024.0 * 1024.0 {
+        format!("{:.2} GB", b / (1024.0 * 1024.0 * 1024.0))
+    } else if b >= 1024.0 * 1024.0 {
+        format!("{:.2} MB", b / (1024.0 * 1024.0))
+    } else if b >= 1024.0 {
+        format!("{:.1} KB", b / 1024.0)
+    } else {
+        format!("{b} B")
+    }
+}
+
+/// The paper's monitor architecture (16 weight layers, 1024 hidden).
+pub fn monitor16_dims() -> Vec<usize> {
+    std::iter::once(784)
+        .chain(std::iter::repeat(1024).take(15))
+        .chain(std::iter::once(10))
+        .collect()
+}
+
+pub fn mnist_dims() -> Vec<usize> {
+    vec![784, 512, 512, 512, 10]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_headline_99_percent() {
+        // §5.3: 16x1024, T=5: 320 MB -> ~1.7 MB, >= 99% reduction at r=4.
+        let m = MemoryModel::new(&monitor16_dims(), 128);
+        let trad = m.monitoring_traditional(5);
+        let sk = m.monitoring_sketched(4);
+        let trad_mb = trad as f64 / (1024.0 * 1024.0);
+        let sk_mb = sk as f64 / (1024.0 * 1024.0);
+        assert!(
+            (250.0..400.0).contains(&trad_mb),
+            "traditional {trad_mb:.1} MB"
+        );
+        assert!((1.0..3.0).contains(&sk_mb), "sketched {sk_mb:.2} MB");
+        assert!(m.monitoring_reduction(5, 4) > 0.99);
+    }
+
+    #[test]
+    fn reduction_grows_with_window() {
+        let m = MemoryModel::new(&monitor16_dims(), 128);
+        let r5 = m.monitoring_reduction(5, 4);
+        let r100 = m.monitoring_reduction(100, 4);
+        assert!(r100 > r5);
+    }
+
+    #[test]
+    fn per_iteration_band_matches_paper() {
+        let m = MemoryModel::new(&mnist_dims(), 128);
+        let red2 = m.per_iteration_reduction(2);
+        let red16 = m.per_iteration_reduction(16);
+        assert!(red2 > red16, "more rank -> less reduction");
+        assert!(red2 > 0.8, "r=2 reduction {red2}");
+        assert!(red16 > 0.1, "r=16 reduction {red16}");
+    }
+
+    #[test]
+    fn peak_tracker() {
+        let mut t = PeakTracker::default();
+        t.record("a", 100);
+        t.record("b", 300);
+        t.record("c", 50);
+        assert_eq!(t.peak, 300);
+        assert_eq!(t.current, 50);
+    }
+
+    #[test]
+    fn fmt_units() {
+        assert_eq!(fmt_bytes(512), "512 B");
+        assert!(fmt_bytes(2048).contains("KB"));
+        assert!(fmt_bytes(3 * 1024 * 1024).contains("MB"));
+    }
+}

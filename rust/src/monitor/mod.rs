@@ -1,0 +1,6 @@
+//! Gradient-monitor service (paper §4.6/§5.3): constant-memory sketch-based
+//! diagnostics with pathology detectors.
+
+pub mod service;
+
+pub use service::{Diagnosis, MonitorConfig, MonitorService, Rolling};

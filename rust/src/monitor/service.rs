@@ -1,0 +1,340 @@
+//! Gradient-monitor service (paper §4.6 / §5.3): consumes per-step sketch
+//! metrics, maintains constant-memory history, and runs the pathology
+//! detectors that distinguish the Fig-5 "healthy" and "problematic" runs.
+//!
+//! Memory story (the paper's headline): the service holds ONE set of EMA
+//! sketch metrics + bounded summaries regardless of monitoring duration T,
+//! versus the traditional baseline's O(L * d^2 * T) gradient checkpoints
+//! (`baselines::full_monitor`).
+
+use crate::coordinator::StepMetrics;
+
+/// Rolling scalar summary (constant memory per metric stream).
+#[derive(Clone, Debug, Default)]
+pub struct Rolling {
+    pub n: u64,
+    pub mean: f64,
+    m2: f64,
+    pub min: f64,
+    pub max: f64,
+    pub last: f64,
+}
+
+impl Rolling {
+    pub fn push(&mut self, x: f64) {
+        if self.n == 0 {
+            self.min = x;
+            self.max = x;
+        }
+        self.n += 1;
+        let delta = x - self.mean;
+        self.mean += delta / self.n as f64;
+        self.m2 += delta * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+        self.last = x;
+    }
+
+    pub fn var(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.var().sqrt()
+    }
+}
+
+/// Detector verdicts over a monitoring window.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Diagnosis {
+    /// Gradient norms collapsing toward zero across layers.
+    pub vanishing_gradients: bool,
+    /// Gradient norms exploding (rapid exponential growth).
+    pub exploding_gradients: bool,
+    /// Loss not improving while gradients stay flat: optimizer stagnation.
+    pub stagnation: bool,
+    /// Stable rank far below sketch capacity: collapsed gradient diversity
+    /// (the paper's most discriminative signal, §5.3).
+    pub diversity_collapse: bool,
+    /// Mean stable rank over the window, normalised by k.
+    pub mean_stable_rank_frac: f64,
+    pub notes: Vec<String>,
+}
+
+#[derive(Clone, Debug)]
+pub struct MonitorConfig {
+    /// Sketch dimension k = 2r + 1 (for stable-rank normalisation).
+    pub k: usize,
+    /// Steps per diagnostic evaluation window.
+    pub window: usize,
+    /// ||Z|| ratio (first->last window) below which gradients "vanish".
+    pub vanish_ratio: f64,
+    /// ||Z|| growth ratio above which gradients "explode".
+    pub explode_ratio: f64,
+    /// Relative loss improvement below which the run is stagnant.
+    pub stagnation_eps: f64,
+    /// stable_rank / k below which diversity has collapsed.
+    pub collapse_frac: f64,
+}
+
+impl MonitorConfig {
+    pub fn for_rank(r: usize) -> Self {
+        MonitorConfig {
+            k: 2 * r + 1,
+            window: 50,
+            vanish_ratio: 1e-3,
+            explode_ratio: 1e3,
+            stagnation_eps: 2e-2,
+            // The paper reports stable rank ~9/9 (healthy) vs 2.9/9
+            // (problematic).  On our substrate tanh/relu activations are
+            // more correlated, compressing both scales (healthy ~0.13k,
+            // collapsed <0.01k); 0.1 separates them with margin either way.
+            collapse_frac: 0.1,
+        }
+    }
+}
+
+/// The monitor: constant-memory summaries + a bounded recent window.
+pub struct MonitorService {
+    pub cfg: MonitorConfig,
+    pub loss: Rolling,
+    /// Per-layer rolling ||Z||_F.
+    pub z_norm: Vec<Rolling>,
+    pub stable_rank: Vec<Rolling>,
+    /// Recent window ring buffer (bounded at cfg.window entries).
+    recent: Vec<(f64, Vec<f64>, Vec<f64>)>, // (loss, z_norms, sranks)
+    head: usize,
+    pub steps_seen: u64,
+    first_window_z: Option<f64>,
+    window_start_loss: Option<f64>,
+}
+
+impl MonitorService {
+    pub fn new(cfg: MonitorConfig, n_layers: usize) -> Self {
+        MonitorService {
+            cfg,
+            loss: Rolling::default(),
+            z_norm: vec![Rolling::default(); n_layers],
+            stable_rank: vec![Rolling::default(); n_layers],
+            recent: Vec::new(),
+            head: 0,
+            steps_seen: 0,
+            first_window_z: None,
+            window_start_loss: None,
+        }
+    }
+
+    pub fn observe(&mut self, m: &StepMetrics) {
+        self.steps_seen += 1;
+        self.loss.push(m.loss as f64);
+        for (i, &z) in m.z_norm.iter().enumerate() {
+            if i < self.z_norm.len() {
+                self.z_norm[i].push(z as f64);
+            }
+        }
+        for (i, &s) in m.stable_rank.iter().enumerate() {
+            if i < self.stable_rank.len() {
+                self.stable_rank[i].push(s as f64);
+            }
+        }
+        let entry = (
+            m.loss as f64,
+            m.z_norm.iter().map(|&v| v as f64).collect(),
+            m.stable_rank.iter().map(|&v| v as f64).collect(),
+        );
+        if self.recent.len() < self.cfg.window {
+            self.recent.push(entry);
+        } else {
+            self.recent[self.head] = entry;
+            self.head = (self.head + 1) % self.cfg.window;
+        }
+        if self.steps_seen == self.cfg.window as u64 {
+            self.first_window_z = Some(self.mean_recent_z());
+            self.window_start_loss = Some(self.loss.mean);
+        }
+    }
+
+    fn mean_recent_z(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for (_, zs, _) in &self.recent {
+            for z in zs {
+                sum += z;
+                n += 1;
+            }
+        }
+        sum / n.max(1) as f64
+    }
+
+    fn mean_recent_srank(&self) -> f64 {
+        let mut sum = 0.0;
+        let mut n = 0usize;
+        for (_, _, ss) in &self.recent {
+            for s in ss {
+                sum += s;
+                n += 1;
+            }
+        }
+        sum / n.max(1) as f64
+    }
+
+    fn mean_recent_loss(&self) -> f64 {
+        let s: f64 = self.recent.iter().map(|(l, _, _)| l).sum();
+        s / self.recent.len().max(1) as f64
+    }
+
+    /// Run the pathology detectors over everything observed so far.
+    pub fn diagnose(&self) -> Diagnosis {
+        let mut d = Diagnosis::default();
+        if self.steps_seen < (2 * self.cfg.window) as u64 {
+            d.notes.push("window too short for diagnosis".into());
+            return d;
+        }
+        let z_now = self.mean_recent_z();
+        let z_first = self.first_window_z.unwrap_or(z_now);
+        if z_first > 0.0 && z_now / z_first < self.cfg.vanish_ratio {
+            d.vanishing_gradients = true;
+            d.notes
+                .push(format!("||Z|| ratio {:.2e}", z_now / z_first));
+        }
+        if z_first > 0.0 && z_now / z_first > self.cfg.explode_ratio {
+            d.exploding_gradients = true;
+            d.notes
+                .push(format!("||Z|| ratio {:.2e}", z_now / z_first));
+        }
+        let loss_then = self.window_start_loss.unwrap_or(self.loss.mean);
+        let loss_now = self.mean_recent_loss();
+        if loss_then > 0.0
+            && (loss_then - loss_now) / loss_then < self.cfg.stagnation_eps
+        {
+            d.stagnation = true;
+            d.notes.push(format!(
+                "loss {:.4} -> {:.4} (rel impr {:.3})",
+                loss_then,
+                loss_now,
+                (loss_then - loss_now) / loss_then
+            ));
+        }
+        let sr = self.mean_recent_srank();
+        d.mean_stable_rank_frac = sr / self.cfg.k as f64;
+        if d.mean_stable_rank_frac < self.cfg.collapse_frac {
+            d.diversity_collapse = true;
+            d.notes.push(format!(
+                "stable rank {:.2} of k={} ({:.0}%)",
+                sr,
+                self.cfg.k,
+                100.0 * d.mean_stable_rank_frac
+            ));
+        }
+        d
+    }
+
+    /// "Healthy" = no pathologies flagged.
+    pub fn is_healthy(&self) -> bool {
+        let d = self.diagnose();
+        !(d.vanishing_gradients
+            || d.exploding_gradients
+            || (d.stagnation && d.diversity_collapse))
+    }
+
+    /// Bytes held by the monitor — constant in monitoring duration
+    /// (the paper's key claim: no T factor).
+    pub fn monitor_bytes(&self) -> usize {
+        let rolling = std::mem::size_of::<Rolling>();
+        let per_layer = (self.z_norm.len() + self.stable_rank.len()) * rolling;
+        let window_entry = 8 + self.z_norm.len() * 8 * 2;
+        per_layer + rolling + self.cfg.window * window_entry
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(loss: f32, z: f32, sr: f32, n_layers: usize) -> StepMetrics {
+        StepMetrics {
+            loss,
+            z_norm: vec![z; n_layers],
+            stable_rank: vec![sr; n_layers],
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn rolling_stats() {
+        let mut r = Rolling::default();
+        for x in [1.0, 2.0, 3.0, 4.0] {
+            r.push(x);
+        }
+        assert_eq!(r.mean, 2.5);
+        assert!((r.var() - 5.0 / 3.0).abs() < 1e-12);
+        assert_eq!((r.min, r.max, r.last), (1.0, 4.0, 4.0));
+    }
+
+    #[test]
+    fn healthy_run_is_clean() {
+        let cfg = MonitorConfig {
+            collapse_frac: 0.5,
+            ..MonitorConfig::for_rank(4)
+        };
+        let mut svc = MonitorService::new(cfg, 15);
+        for step in 0..300 {
+            // Loss decays, gradients lively, stable rank near k.
+            let loss = 2.3 * (-0.01 * step as f32).exp() + 0.1;
+            svc.observe(&metrics(loss, 100.0 + (step % 7) as f32, 8.7, 15));
+        }
+        let d = svc.diagnose();
+        assert!(!d.vanishing_gradients);
+        assert!(!d.diversity_collapse, "{d:?}");
+        assert!(!d.stagnation, "{d:?}");
+        assert!(svc.is_healthy());
+    }
+
+    #[test]
+    fn problematic_run_is_flagged() {
+        // Paper-scale stable ranks (2.9 of k=9): use the paper's 0.5
+        // threshold for this synthetic trace.
+        let cfg = MonitorConfig {
+            collapse_frac: 0.5,
+            ..MonitorConfig::for_rank(4)
+        };
+        let mut svc = MonitorService::new(cfg, 15);
+        for step in 0..300 {
+            // Flat loss, flat small gradients, collapsed stable rank.
+            let _ = step;
+            svc.observe(&metrics(2.30, 10.0, 2.9, 15));
+        }
+        let d = svc.diagnose();
+        assert!(d.stagnation, "{d:?}");
+        assert!(d.diversity_collapse, "{d:?}");
+        assert!(!svc.is_healthy());
+        assert!((d.mean_stable_rank_frac - 2.9 / 9.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn vanishing_gradients_detected() {
+        let cfg = MonitorConfig::for_rank(4);
+        let mut svc = MonitorService::new(cfg, 4);
+        for step in 0..400 {
+            let z = 100.0 * (-0.05 * step as f32).exp();
+            svc.observe(&metrics(2.3, z, 8.0, 4));
+        }
+        assert!(svc.diagnose().vanishing_gradients);
+    }
+
+    #[test]
+    fn monitor_memory_is_constant_in_duration() {
+        let cfg = MonitorConfig::for_rank(4);
+        let mut svc = MonitorService::new(cfg, 15);
+        svc.observe(&metrics(1.0, 1.0, 1.0, 15));
+        let b0 = svc.monitor_bytes();
+        for _ in 0..10_000 {
+            svc.observe(&metrics(1.0, 1.0, 1.0, 15));
+        }
+        assert_eq!(svc.monitor_bytes(), b0, "memory must not grow with T");
+    }
+}

@@ -1,0 +1,121 @@
+//! PINN substrate (paper §5.2.2, Figs. 3-4): the 2D Poisson problem's
+//! exact solution, evaluation grid and error metrics on the rust side —
+//! used to validate the AOT `pinn_eval` artifact and render Fig-4's
+//! field/error tables.
+
+use crate::data::PoissonSampler;
+
+/// Exact solution u*(x,y) = 0.5 sin(2 pi x) sin(2 pi y) of
+/// -Lap u = 4 pi^2 sin(2 pi x) sin(2 pi y), u=0 on the unit-square boundary.
+pub fn exact_solution(x: f64, y: f64) -> f64 {
+    0.5 * (std::f64::consts::TAU * x).sin() * (std::f64::consts::TAU * y).sin()
+}
+
+/// Forcing term f(x,y).
+pub fn forcing(x: f64, y: f64) -> f64 {
+    4.0 * std::f64::consts::PI.powi(2)
+        * (std::f64::consts::TAU * x).sin()
+        * (std::f64::consts::TAU * y).sin()
+}
+
+/// L2 relative error over paired predictions/points.
+pub fn l2_relative_error(pred: &[f32], points: &[f32]) -> f64 {
+    assert_eq!(points.len(), 2 * pred.len());
+    let mut num = 0.0;
+    let mut den = 0.0;
+    for (i, &p) in pred.iter().enumerate() {
+        let ue = exact_solution(points[2 * i] as f64, points[2 * i + 1] as f64);
+        num += (p as f64 - ue).powi(2);
+        den += ue * ue;
+    }
+    (num / den.max(1e-300)).sqrt()
+}
+
+/// Render an ASCII heat-map row summary of a field on a g x g grid —
+/// Fig-4's "solution quality" panels in terminal form.
+pub fn field_summary(values: &[f32], g: usize, label: &str) -> String {
+    assert_eq!(values.len(), g * g);
+    let vmax = values.iter().cloned().fold(f32::MIN, f32::max);
+    let vmin = values.iter().cloned().fold(f32::MAX, f32::min);
+    let chars = [' ', '.', ':', '-', '=', '+', '*', '#', '%', '@'];
+    let mut out = format!(
+        "{label}: min {vmin:.4} max {vmax:.4}\n"
+    );
+    let stride = (g / 26).max(1);
+    for row in (0..g).step_by(stride) {
+        for col in (0..g).step_by(stride) {
+            let v = values[row * g + col];
+            let t = if vmax > vmin {
+                ((v - vmin) / (vmax - vmin)).clamp(0.0, 1.0)
+            } else {
+                0.0
+            };
+            let idx = (t * (chars.len() - 1) as f32).round() as usize;
+            out.push(chars[idx]);
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Exact-solution field on the standard evaluation grid.
+pub fn exact_field(g: usize) -> Vec<f32> {
+    let pts = PoissonSampler::grid(g);
+    (0..g * g)
+        .map(|i| exact_solution(pts[2 * i] as f64, pts[2 * i + 1] as f64) as f32)
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_solution_satisfies_pde() {
+        // Finite-difference Laplacian check: -Lap u ~ f.
+        let h = 1e-4;
+        for (x, y) in [(0.3, 0.7), (0.52, 0.11), (0.9, 0.4)] {
+            let lap = (exact_solution(x + h, y)
+                + exact_solution(x - h, y)
+                + exact_solution(x, y + h)
+                + exact_solution(x, y - h)
+                - 4.0 * exact_solution(x, y))
+                / (h * h);
+            let rel = (-lap - forcing(x, y)).abs() / forcing(x, y).abs().max(1.0);
+            assert!(rel < 1e-4, "PDE residual {rel} at ({x},{y})");
+        }
+    }
+
+    #[test]
+    fn boundary_is_zero() {
+        for t in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            assert!(exact_solution(t, 0.0).abs() < 1e-12);
+            assert!(exact_solution(0.0, t).abs() < 1e-12);
+            assert!(exact_solution(t, 1.0).abs() < 1e-12);
+            assert!(exact_solution(1.0, t).abs() < 1e-12);
+        }
+    }
+
+    #[test]
+    fn l2_error_of_exact_is_zero() {
+        let g = 21;
+        let pts = PoissonSampler::grid(g);
+        let pred: Vec<f32> = (0..g * g)
+            .map(|i| {
+                exact_solution(pts[2 * i] as f64, pts[2 * i + 1] as f64) as f32
+            })
+            .collect();
+        assert!(l2_relative_error(&pred, &pts) < 1e-6);
+        // And of zeros is exactly 1.
+        let zeros = vec![0.0f32; g * g];
+        assert!((l2_relative_error(&zeros, &pts) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn field_summary_renders() {
+        let f = exact_field(51);
+        let s = field_summary(&f, 51, "exact");
+        assert!(s.contains("exact"));
+        assert!(s.lines().count() > 10);
+    }
+}

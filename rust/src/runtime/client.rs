@@ -1,0 +1,169 @@
+//! PJRT runtime: loads AOT HLO-text artifacts, compiles them once on the
+//! CPU PJRT client and executes them from the coordinator hot path.
+//!
+//! Pattern follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute`.
+//! Compiled executables are cached per artifact name — the adaptive-rank
+//! controller swaps between per-rank variants without recompiling
+//! (DESIGN.md §1, the vLLM-style executable cache).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use super::manifest::{ArtifactEntry, Manifest};
+use super::tensor::Tensor;
+
+/// One compiled artifact + its manifest interface.
+pub struct Executable {
+    pub entry: ArtifactEntry,
+    exe: xla::PjRtLoadedExecutable,
+    /// Cumulative execution statistics (perf pass instrumentation).
+    pub calls: RefCell<ExecStats>,
+}
+
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub n_calls: u64,
+    pub total_exec_us: u64,
+    pub total_transfer_us: u64,
+}
+
+impl Executable {
+    /// Execute with tensors ordered per `entry.inputs`; returns tensors
+    /// ordered per `entry.outputs`.
+    pub fn run(&self, inputs: &[Tensor]) -> Result<Vec<Tensor>> {
+        anyhow::ensure!(
+            inputs.len() == self.entry.inputs.len(),
+            "artifact {} expects {} inputs, got {}",
+            self.entry.name,
+            self.entry.inputs.len(),
+            inputs.len()
+        );
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .enumerate()
+            .map(|(i, t)| {
+                debug_assert_eq!(
+                    t.shape(),
+                    &self.entry.inputs[i].shape[..],
+                    "input {} ({}) shape mismatch",
+                    i,
+                    self.entry.inputs[i].name
+                );
+                t.to_literal()
+            })
+            .collect::<Result<_>>()?;
+        let t1 = Instant::now();
+        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
+            .to_literal_sync()?;
+        let t2 = Instant::now();
+        let outs = result.to_tuple()?;
+        anyhow::ensure!(
+            outs.len() == self.entry.outputs.len(),
+            "artifact {} returned {} outputs, manifest says {}",
+            self.entry.name,
+            outs.len(),
+            self.entry.outputs.len()
+        );
+        let tensors = outs
+            .iter()
+            .zip(&self.entry.outputs)
+            .map(|(lit, spec)| Tensor::from_literal(lit, &spec.shape, &spec.dtype))
+            .collect::<Result<Vec<_>>>()?;
+        let t3 = Instant::now();
+        let mut stats = self.calls.borrow_mut();
+        stats.n_calls += 1;
+        stats.total_exec_us += (t2 - t1).as_micros() as u64;
+        stats.total_transfer_us +=
+            ((t1 - t0) + (t3 - t2)).as_micros() as u64;
+        Ok(tensors)
+    }
+
+    /// Run with a name->tensor map (order-independent convenience used by
+    /// tests and examples; the trainer uses positional `run`).
+    pub fn run_named(
+        &self,
+        inputs: &HashMap<String, Tensor>,
+    ) -> Result<Vec<Tensor>> {
+        let ordered = self
+            .entry
+            .inputs
+            .iter()
+            .map(|spec| {
+                inputs
+                    .get(&spec.name)
+                    .cloned()
+                    .with_context(|| format!("missing input {}", spec.name))
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.run(&ordered)
+    }
+}
+
+/// PJRT client + per-artifact executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<Executable>>>,
+    pub compile_log: RefCell<Vec<(String, f64)>>,
+}
+
+impl Runtime {
+    pub fn new(artifacts_dir: &Path) -> Result<Runtime> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client =
+            xla::PjRtClient::cpu().context("PJRT CPU client init failed")?;
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(HashMap::new()),
+            compile_log: RefCell::new(Vec::new()),
+        })
+    }
+
+    /// Fetch (compiling on first use) the executable for an artifact.
+    pub fn load(&self, name: &str) -> Result<Rc<Executable>> {
+        if let Some(exe) = self.cache.borrow().get(name) {
+            return Ok(exe.clone());
+        }
+        let entry = self.manifest.get(name)?.clone();
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            entry.file.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("loading HLO text {:?}", entry.file))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        let dt = t0.elapsed().as_secs_f64();
+        self.compile_log.borrow_mut().push((name.to_string(), dt));
+        let exe = Rc::new(Executable {
+            entry,
+            exe,
+            calls: RefCell::new(ExecStats::default()),
+        });
+        self.cache.borrow_mut().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of artifacts (e.g. the whole rank ladder before
+    /// an adaptive run so rank switches are instant).
+    pub fn warm(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.load(n)?;
+        }
+        Ok(())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+}

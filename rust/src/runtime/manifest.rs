@@ -1,0 +1,200 @@
+//! `artifacts/manifest.json` loader: the contract between aot.py and the
+//! rust runtime.  Each artifact entry lists its HLO file plus the exact
+//! ordered flat input/output tensor interface and experiment metadata.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String, // "f32" | "i32"
+}
+
+impl TensorSpec {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    pub name: String,
+    pub file: PathBuf,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    /// Raw metadata blob (kind, variant, r, beta, dims, chunk, ...).
+    pub meta: Json,
+}
+
+impl ArtifactEntry {
+    pub fn input_index(&self, name: &str) -> Result<usize> {
+        self.inputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {} has no input {name}", self.name))
+    }
+
+    pub fn output_index(&self, name: &str) -> Result<usize> {
+        self.outputs
+            .iter()
+            .position(|s| s.name == name)
+            .with_context(|| format!("artifact {} has no output {name}", self.name))
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Result<usize> {
+        self.meta.get("meta")?.get(key)?.as_usize()
+    }
+
+    pub fn meta_f64(&self, key: &str) -> Result<f64> {
+        self.meta.get("meta")?.get(key)?.as_f64()
+    }
+
+    pub fn meta_str(&self, key: &str) -> Result<String> {
+        Ok(self.meta.get("meta")?.get(key)?.as_str()?.to_string())
+    }
+
+    pub fn meta_dims(&self) -> Result<Vec<usize>> {
+        let arr = self.meta.get("meta")?.get("dims")?.as_arr()?;
+        arr.iter().map(|v| v.as_usize()).collect()
+    }
+}
+
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub n_b: usize,
+    pub rank_ladder: Vec<usize>,
+    pub artifacts: BTreeMap<String, ArtifactEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).with_context(|| {
+            format!(
+                "cannot read {} — run `make artifacts` first",
+                path.display()
+            )
+        })?;
+        let root = Json::parse(&text).context("manifest.json parse error")?;
+        let n_b = root.get("n_b")?.as_usize()?;
+        let rank_ladder = root
+            .get("rank_ladder")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+
+        let mut artifacts = BTreeMap::new();
+        for (name, entry) in root.get("artifacts")?.as_obj()? {
+            let parse_specs = |key: &str| -> Result<Vec<TensorSpec>> {
+                entry
+                    .get(key)?
+                    .as_arr()?
+                    .iter()
+                    .map(|s| {
+                        Ok(TensorSpec {
+                            name: s.get("name")?.as_str()?.to_string(),
+                            shape: s
+                                .get("shape")?
+                                .as_arr()?
+                                .iter()
+                                .map(|d| d.as_usize())
+                                .collect::<Result<Vec<_>>>()?,
+                            dtype: s.get("dtype")?.as_str()?.to_string(),
+                        })
+                    })
+                    .collect()
+            };
+            artifacts.insert(
+                name.clone(),
+                ArtifactEntry {
+                    name: name.clone(),
+                    file: dir.join(entry.get("file")?.as_str()?),
+                    inputs: parse_specs("inputs")?,
+                    outputs: parse_specs("outputs")?,
+                    meta: entry.clone(),
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            n_b,
+            rank_ladder,
+            artifacts,
+        })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ArtifactEntry> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("manifest has no artifact {name:?}"))
+    }
+
+    /// Resolve the artifact name for a (family, variant, rank) request —
+    /// the adaptive-rank controller's executable lookup.
+    pub fn resolve(
+        &self,
+        family: &str,
+        variant: &str,
+        rank: Option<usize>,
+    ) -> Result<&ArtifactEntry> {
+        let name = match (variant, rank) {
+            ("standard", _) => format!("{family}_std_chunk"),
+            ("sketched", Some(r)) => format!("{family}_sk_r{r}_chunk"),
+            ("monitored", Some(r)) => format!("{family}_mon_r{r}_chunk"),
+            _ => anyhow::bail!("bad variant/rank: {variant}/{rank:?}"),
+        };
+        self.get(&name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n_b, 128);
+        assert_eq!(m.rank_ladder, vec![2, 4, 8, 16]);
+        let e = m.get("mnist_std_step").unwrap();
+        // 4 weight layers * 2 + adam m (8) + v (8) + t + x + y = 27 inputs
+        assert_eq!(e.inputs.len(), 27);
+        assert_eq!(e.inputs[0].name, "w0");
+        assert_eq!(e.inputs[0].shape, vec![512, 784]);
+        assert_eq!(e.meta_str("variant").unwrap(), "standard");
+        assert!(e.file.exists());
+    }
+
+    #[test]
+    fn resolve_names() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&dir).unwrap();
+        assert!(m.resolve("mnist", "sketched", Some(4)).is_ok());
+        assert!(m.resolve("mnist", "standard", None).is_ok());
+        assert!(m.resolve("mnist", "sketched", Some(3)).is_err());
+    }
+}

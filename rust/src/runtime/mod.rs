@@ -1,0 +1,10 @@
+//! PJRT runtime: manifest-driven artifact loading, per-artifact executable
+//! cache, and the `Tensor` currency between coordinator and XLA.
+
+pub mod client;
+pub mod manifest;
+pub mod tensor;
+
+pub use client::{Executable, Runtime};
+pub use manifest::{ArtifactEntry, Manifest, TensorSpec};
+pub use tensor::Tensor;

@@ -1,0 +1,206 @@
+//! Host tensor type + conversion to/from `xla::Literal`.
+//!
+//! The runtime dtype is f32 (plus i32 labels); shapes come from the
+//! manifest.  `Tensor` is the only currency between the coordinator and
+//! PJRT — the coordinator never touches `xla` types directly.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Tensor {
+    F32 { shape: Vec<usize>, data: Vec<f32> },
+    I32 { shape: Vec<usize>, data: Vec<i32> },
+}
+
+impl Tensor {
+    pub fn zeros_f32(shape: &[usize]) -> Tensor {
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::F32 {
+            shape: vec![],
+            data: vec![v],
+        }
+    }
+
+    pub fn from_f32(shape: &[usize], data: Vec<f32>) -> Tensor {
+        assert_eq!(
+            shape.iter().product::<usize>(),
+            data.len(),
+            "shape {shape:?} vs data len {}",
+            data.len()
+        );
+        Tensor::F32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn from_i32(shape: &[usize], data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len());
+        Tensor::I32 {
+            shape: shape.to_vec(),
+            data,
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            Tensor::F32 { shape, .. } | Tensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            Tensor::F32 { data, .. } => data.len(),
+            Tensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn f32_data(&self) -> Result<&[f32]> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn f32_data_mut(&mut self) -> Result<&mut Vec<f32>> {
+        match self {
+            Tensor::F32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn i32_data(&self) -> Result<&[i32]> {
+        match self {
+            Tensor::I32 { data, .. } => Ok(data),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        let d = self.f32_data()?;
+        if d.len() != 1 {
+            bail!("tensor has {} elements, expected scalar", d.len());
+        }
+        Ok(d[0])
+    }
+
+    /// Convert to an XLA literal.
+    ///
+    /// Perf (EXPERIMENTS.md §Perf L3): a single copy via
+    /// `create_from_shape_and_untyped_data` — the obvious
+    /// `vec1(..).reshape(..)` path copies twice (reshape allocates a second
+    /// literal), which showed up as ~2x transfer overhead on the chunked
+    /// train-step inputs (tens of MB per call for the 16-layer net).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        match self {
+            Tensor::F32 { shape, data } => {
+                if shape.is_empty() {
+                    return Ok(xla::Literal::scalar(data[0]));
+                }
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8,
+                        data.len() * 4,
+                    )
+                };
+                Ok(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::F32,
+                    shape,
+                    bytes,
+                )?)
+            }
+            Tensor::I32 { shape, data } => {
+                if shape.is_empty() {
+                    return Ok(xla::Literal::scalar(data[0]));
+                }
+                let bytes: &[u8] = unsafe {
+                    std::slice::from_raw_parts(
+                        data.as_ptr() as *const u8,
+                        data.len() * 4,
+                    )
+                };
+                Ok(xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    shape,
+                    bytes,
+                )?)
+            }
+        }
+    }
+
+    /// Read back from an XLA literal given the manifest dtype/shape.
+    pub fn from_literal(
+        lit: &xla::Literal,
+        shape: &[usize],
+        dtype: &str,
+    ) -> Result<Tensor> {
+        match dtype {
+            "f32" => Ok(Tensor::F32 {
+                shape: shape.to_vec(),
+                data: lit.to_vec::<f32>()?,
+            }),
+            "i32" => Ok(Tensor::I32 {
+                shape: shape.to_vec(),
+                data: lit.to_vec::<i32>()?,
+            }),
+            other => bail!("unsupported dtype {other}"),
+        }
+    }
+
+    /// View an (n, m) f32 tensor row.
+    pub fn row(&self, r: usize) -> Result<&[f32]> {
+        let shape = self.shape();
+        if shape.len() != 2 {
+            bail!("row() needs rank-2, got {shape:?}");
+        }
+        let m = shape[1];
+        Ok(&self.f32_data()?[r * m..(r + 1) * m])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_accounting() {
+        let t = Tensor::zeros_f32(&[3, 4]);
+        assert_eq!(t.len(), 12);
+        assert_eq!(t.bytes(), 48);
+        assert_eq!(t.shape(), &[3, 4]);
+    }
+
+    #[test]
+    fn scalar_roundtrip() {
+        let t = Tensor::scalar_f32(2.5);
+        assert_eq!(t.scalar().unwrap(), 2.5);
+        assert!(Tensor::zeros_f32(&[2]).scalar().is_err());
+    }
+
+    #[test]
+    fn row_view() {
+        let t = Tensor::from_f32(&[2, 3], vec![1., 2., 3., 4., 5., 6.]);
+        assert_eq!(t.row(1).unwrap(), &[4., 5., 6.]);
+    }
+
+    #[test]
+    fn dtype_mismatch_errors() {
+        let t = Tensor::from_i32(&[2], vec![1, 2]);
+        assert!(t.f32_data().is_err());
+        assert!(t.i32_data().is_ok());
+    }
+}

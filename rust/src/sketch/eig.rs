@@ -1,0 +1,164 @@
+//! Symmetric eigensolver (cyclic Jacobi) — the substrate piece behind
+//! singular values, tail energy tau_{r+1} (Thm 4.2's bound) and exact
+//! stable-rank references.  LAPACK is unavailable both offline and inside
+//! the AOT artifacts, so spectra are computed here.
+
+use super::matrix::Mat;
+
+/// Eigenvalues of a symmetric matrix via cyclic Jacobi rotations.
+/// Returns eigenvalues sorted descending.  O(n^3) per sweep; converges in
+/// ~log(n) sweeps for the modest n (<= a few hundred) this repo needs.
+pub fn sym_eigenvalues(a: &Mat, max_sweeps: usize) -> Vec<f64> {
+    assert_eq!(a.rows, a.cols);
+    let n = a.rows;
+    let mut m = a.clone();
+    for _ in 0..max_sweeps {
+        let mut off = 0.0;
+        for i in 0..n {
+            for j in i + 1..n {
+                off += m[(i, j)] * m[(i, j)];
+            }
+        }
+        if off.sqrt() < 1e-12 * (1.0 + m.fro_norm()) {
+            break;
+        }
+        for p in 0..n {
+            for q in p + 1..n {
+                let apq = m[(p, q)];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = m[(p, p)];
+                let aqq = m[(q, q)];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // Apply rotation J(p,q,theta) on both sides.
+                for k in 0..n {
+                    let mkp = m[(k, p)];
+                    let mkq = m[(k, q)];
+                    m[(k, p)] = c * mkp - s * mkq;
+                    m[(k, q)] = s * mkp + c * mkq;
+                }
+                for k in 0..n {
+                    let mpk = m[(p, k)];
+                    let mqk = m[(q, k)];
+                    m[(p, k)] = c * mpk - s * mqk;
+                    m[(q, k)] = s * mpk + c * mqk;
+                }
+            }
+        }
+    }
+    let mut ev: Vec<f64> = (0..n).map(|i| m[(i, i)]).collect();
+    ev.sort_by(|a, b| b.partial_cmp(a).unwrap());
+    ev
+}
+
+/// Singular values of an arbitrary matrix via the Gram matrix of its
+/// smaller side (sigma_i = sqrt(lambda_i(A^T A))), sorted descending.
+pub fn singular_values(a: &Mat) -> Vec<f64> {
+    let gram = if a.rows <= a.cols {
+        // A A^T (rows x rows)
+        let at = a.transpose();
+        a.matmul(&at)
+    } else {
+        a.t_matmul(a)
+    };
+    sym_eigenvalues(&gram, 30)
+        .into_iter()
+        .map(|l| l.max(0.0).sqrt())
+        .collect()
+}
+
+/// (r+1)-st tail energy: tau_{r+1}(A) = sqrt(sum_{i > r} sigma_i^2)
+/// (paper Eq. 4 / Thm 4.2).
+pub fn tail_energy(a: &Mat, r: usize) -> f64 {
+    let sv = singular_values(a);
+    sv.iter().skip(r).map(|s| s * s).sum::<f64>().sqrt()
+}
+
+/// Spectral norm ||A||_2 (largest singular value).
+pub fn spectral_norm(a: &Mat) -> f64 {
+    singular_values(a).first().copied().unwrap_or(0.0)
+}
+
+/// Exact stable rank ||A||_F^2 / ||A||_2^2 — the reference the sketch-based
+/// estimate (power iteration) is validated against.
+pub fn stable_rank(a: &Mat) -> f64 {
+    let f = a.fro_norm();
+    let s = spectral_norm(a);
+    if s == 0.0 {
+        0.0
+    } else {
+        (f * f) / (s * s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn diagonal_eigenvalues() {
+        let mut d = Mat::zeros(4, 4);
+        for (i, v) in [5.0, -1.0, 3.0, 0.5].iter().enumerate() {
+            d[(i, i)] = *v;
+        }
+        let ev = sym_eigenvalues(&d, 10);
+        assert_eq!(ev, vec![5.0, 3.0, 0.5, -1.0]);
+    }
+
+    #[test]
+    fn eigenvalue_sum_is_trace() {
+        Prop::new(24).check("trace", |rng, i| {
+            let n = 3 + (i % 10);
+            let g = Mat::gaussian(n, n, rng);
+            let sym = g.add(&g.transpose()).scale(0.5);
+            let trace: f64 = (0..n).map(|i| sym[(i, i)]).sum();
+            let ev = sym_eigenvalues(&sym, 30);
+            let sum: f64 = ev.iter().sum();
+            if (trace - sum).abs() > 1e-8 * (1.0 + trace.abs()) {
+                return Err(format!("trace {trace} vs sum {sum}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn singular_values_of_orthogonal_cols() {
+        // Q from QR has all singular values 1.
+        let mut rng = Rng::new(8);
+        let a = Mat::gaussian(30, 5, &mut rng);
+        let (q, _) = crate::sketch::qr::mgs_qr(&a);
+        let sv = singular_values(&q);
+        for s in sv {
+            assert!((s - 1.0).abs() < 1e-8, "sv {s}");
+        }
+    }
+
+    #[test]
+    fn tail_energy_low_rank_matrix_is_zero() {
+        // rank-2 matrix: tau_3 ~ 0, tau_1 > 0.
+        let mut rng = Rng::new(9);
+        let u = Mat::gaussian(20, 2, &mut rng);
+        let v = Mat::gaussian(2, 15, &mut rng);
+        let a = u.matmul(&v);
+        let rel_floor = 1e-7 * a.fro_norm();
+        assert!(tail_energy(&a, 2) < rel_floor, "tail {}", tail_energy(&a, 2));
+        assert!(tail_energy(&a, 0) > 1.0);
+    }
+
+    #[test]
+    fn frobenius_identity() {
+        // ||A||_F^2 = sum sigma_i^2.
+        let mut rng = Rng::new(10);
+        let a = Mat::gaussian(12, 9, &mut rng);
+        let sv = singular_values(&a);
+        let sum: f64 = sv.iter().map(|s| s * s).sum();
+        let f2 = a.fro_norm().powi(2);
+        assert!((sum - f2).abs() < 1e-8 * f2);
+    }
+}

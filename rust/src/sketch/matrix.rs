@@ -1,0 +1,281 @@
+//! Dense row-major matrix substrate (f64).
+//!
+//! This is the rust mirror of `python/compile/linalg.py`: the monitoring
+//! hot path, adaptive-rank controller and baselines run the same sketch
+//! mathematics natively so diagnostics never require a PJRT round-trip.
+//! Integration tests cross-validate this substrate against the AOT
+//! artifacts (same inputs -> same sketches/reconstructions to fp tolerance).
+
+use std::fmt;
+use std::ops::{Index, IndexMut};
+
+use crate::util::rng::Rng;
+
+#[derive(Clone, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f64>,
+}
+
+impl fmt::Debug for Mat {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "Mat({}x{})", self.rows, self.cols)
+    }
+}
+
+impl Index<(usize, usize)> for Mat {
+    type Output = f64;
+    #[inline]
+    fn index(&self, (r, c): (usize, usize)) -> &f64 {
+        &self.data[r * self.cols + c]
+    }
+}
+
+impl IndexMut<(usize, usize)> for Mat {
+    #[inline]
+    fn index_mut(&mut self, (r, c): (usize, usize)) -> &mut f64 {
+        &mut self.data[r * self.cols + c]
+    }
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: vec![0.0; rows * cols],
+        }
+    }
+
+    pub fn eye(n: usize) -> Mat {
+        let mut m = Mat::zeros(n, n);
+        for i in 0..n {
+            m[(i, i)] = 1.0;
+        }
+        m
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f64>) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_f32(rows: usize, cols: usize, data: &[f32]) -> Mat {
+        assert_eq!(data.len(), rows * cols);
+        Mat {
+            rows,
+            cols,
+            data: data.iter().map(|&x| x as f64).collect(),
+        }
+    }
+
+    pub fn to_f32(&self) -> Vec<f32> {
+        self.data.iter().map(|&x| x as f32).collect()
+    }
+
+    /// i.i.d. standard normal entries — the random projections required by
+    /// the sketching theory (paper §3.2.1).
+    pub fn gaussian(rows: usize, cols: usize, rng: &mut Rng) -> Mat {
+        Mat {
+            rows,
+            cols,
+            data: rng.normal_vec(rows * cols),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f64] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f64] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    pub fn transpose(&self) -> Mat {
+        let mut out = Mat::zeros(self.cols, self.rows);
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                out[(c, r)] = self[(r, c)];
+            }
+        }
+        out
+    }
+
+    /// `self @ other` — blocked ikj loop, the substrate's workhorse.
+    pub fn matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(
+            self.cols, other.rows,
+            "matmul shape mismatch {}x{} @ {}x{}",
+            self.rows, self.cols, other.rows, other.cols
+        );
+        let mut out = Mat::zeros(self.rows, other.cols);
+        let n = other.cols;
+        for i in 0..self.rows {
+            let a_row = self.row(i);
+            let out_row = &mut out.data[i * n..(i + 1) * n];
+            for (k, &a_ik) in a_row.iter().enumerate() {
+                if a_ik == 0.0 {
+                    continue;
+                }
+                let b_row = other.row(k);
+                for j in 0..n {
+                    out_row[j] += a_ik * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    /// `self^T @ other` without materialising the transpose (the EMA
+    /// sketch update's A^T P shape).
+    pub fn t_matmul(&self, other: &Mat) -> Mat {
+        assert_eq!(self.rows, other.rows);
+        let mut out = Mat::zeros(self.cols, other.cols);
+        let n = other.cols;
+        for k in 0..self.rows {
+            let a_row = self.row(k);
+            let b_row = other.row(k);
+            for (i, &a_ki) in a_row.iter().enumerate() {
+                if a_ki == 0.0 {
+                    continue;
+                }
+                let out_row = &mut out.data[i * n..(i + 1) * n];
+                for j in 0..n {
+                    out_row[j] += a_ki * b_row[j];
+                }
+            }
+        }
+        out
+    }
+
+    pub fn scale(&self, s: f64) -> Mat {
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self.data.iter().map(|&x| x * s).collect(),
+        }
+    }
+
+    pub fn add(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a + b)
+                .collect(),
+        }
+    }
+
+    pub fn sub(&self, other: &Mat) -> Mat {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        Mat {
+            rows: self.rows,
+            cols: self.cols,
+            data: self
+                .data
+                .iter()
+                .zip(&other.data)
+                .map(|(a, b)| a - b)
+                .collect(),
+        }
+    }
+
+    /// In-place EMA blend: `self = beta*self + (1-beta)*other` — the
+    /// allocation-free hot-path form used by the monitor service.
+    pub fn ema_blend(&mut self, other: &Mat, beta: f64) {
+        assert_eq!((self.rows, self.cols), (other.rows, other.cols));
+        let ob = 1.0 - beta;
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a = beta * *a + ob * *b;
+        }
+    }
+
+    /// Column-wise scale (the Z-sketch's ⊙ Psi^T).
+    pub fn scale_cols(&self, scale: &[f64]) -> Mat {
+        assert_eq!(scale.len(), self.cols);
+        let mut out = self.clone();
+        for r in 0..self.rows {
+            for (c, &s) in scale.iter().enumerate() {
+                out[(r, c)] *= s;
+            }
+        }
+        out
+    }
+
+    pub fn fro_norm(&self) -> f64 {
+        self.data.iter().map(|x| x * x).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Mat) -> f64 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f64::max)
+    }
+
+    /// Bytes this matrix occupies at runtime dtype (f32) — the unit the
+    /// memory accountant works in.
+    pub fn runtime_bytes(&self) -> usize {
+        self.rows * self.cols * 4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_identity() {
+        let mut rng = Rng::new(1);
+        let a = Mat::gaussian(7, 5, &mut rng);
+        let i = Mat::eye(5);
+        assert!(a.matmul(&i).max_abs_diff(&a) < 1e-12);
+    }
+
+    #[test]
+    fn t_matmul_matches_explicit_transpose() {
+        let mut rng = Rng::new(2);
+        let a = Mat::gaussian(6, 4, &mut rng);
+        let b = Mat::gaussian(6, 3, &mut rng);
+        let fast = a.t_matmul(&b);
+        let slow = a.transpose().matmul(&b);
+        assert!(fast.max_abs_diff(&slow) < 1e-12);
+    }
+
+    #[test]
+    fn ema_blend_formula() {
+        let mut rng = Rng::new(3);
+        let mut s = Mat::gaussian(4, 4, &mut rng);
+        let s0 = s.clone();
+        let c = Mat::gaussian(4, 4, &mut rng);
+        s.ema_blend(&c, 0.9);
+        let want = s0.scale(0.9).add(&c.scale(0.1));
+        assert!(s.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut rng = Rng::new(4);
+        let g = Mat::gaussian(200, 200, &mut rng);
+        let n = (g.rows * g.cols) as f64;
+        let mean = g.data.iter().sum::<f64>() / n;
+        let var = g.data.iter().map(|x| x * x).sum::<f64>() / n;
+        assert!(mean.abs() < 0.02);
+        assert!((var - 1.0).abs() < 0.03);
+    }
+
+    #[test]
+    fn scale_cols_matches_manual() {
+        let m = Mat::from_vec(2, 3, vec![1., 2., 3., 4., 5., 6.]);
+        let s = m.scale_cols(&[2.0, 0.5, -1.0]);
+        assert_eq!(s.data, vec![2., 1., -3., 8., 2.5, -6.]);
+    }
+}

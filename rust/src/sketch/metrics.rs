@@ -1,0 +1,128 @@
+//! Sketch-derived monitoring metrics (paper §4.6) computed natively:
+//! gradient-norm proxy ||Z||_F, stable-rank gradient-diversity estimate,
+//! and the power-iteration spectral norm they rely on.
+
+use super::matrix::Mat;
+use super::triplet::{LayerSketches, SketchTriplet};
+
+/// Spectral norm by power iteration on A^T A with a deterministic start
+/// vector (mirrors `linalg.spectral_norm` in the AOT path).
+pub fn spectral_norm_power(a: &Mat, iters: usize) -> f64 {
+    let n = a.cols;
+    let mut v: Vec<f64> = (0..n).map(|i| 1.0 + 0.01 * i as f64).collect();
+    let norm = v.iter().map(|x| x * x).sum::<f64>().sqrt();
+    v.iter_mut().for_each(|x| *x /= norm);
+    for _ in 0..iters {
+        // w = A^T (A v)
+        let mut av = vec![0.0; a.rows];
+        for r in 0..a.rows {
+            let row = a.row(r);
+            av[r] = row.iter().zip(&v).map(|(x, y)| x * y).sum();
+        }
+        let mut w = vec![0.0; n];
+        for r in 0..a.rows {
+            let row = a.row(r);
+            for (j, x) in row.iter().enumerate() {
+                w[j] += x * av[r];
+            }
+        }
+        let wn = (w.iter().map(|x| x * x).sum::<f64>() + 1e-300).sqrt();
+        v = w.into_iter().map(|x| x / wn).collect();
+    }
+    let mut av = vec![0.0; a.rows];
+    for r in 0..a.rows {
+        av[r] = a.row(r).iter().zip(&v).map(|(x, y)| x * y).sum();
+    }
+    av.iter().map(|x| x * x).sum::<f64>().sqrt()
+}
+
+/// Stable rank ||A||_F^2 / ||A||_2^2 via power iteration (paper §4.6's
+/// "without requiring expensive singular value decomposition").
+pub fn stable_rank_power(a: &Mat, iters: usize) -> f64 {
+    let f = a.fro_norm();
+    if f == 0.0 {
+        return 0.0;
+    }
+    let s = spectral_norm_power(a, iters);
+    (f * f) / (s * s).max(1e-300)
+}
+
+/// Per-layer metric snapshot used by the monitor service.
+#[derive(Clone, Debug, Default)]
+pub struct LayerMetrics {
+    pub z_norm: f64,
+    pub stable_rank: f64,
+    pub y_norm: f64,
+    pub x_norm: f64,
+}
+
+pub fn triplet_metrics(t: &SketchTriplet, power_iters: usize) -> LayerMetrics {
+    LayerMetrics {
+        z_norm: t.z.fro_norm(),
+        stable_rank: stable_rank_power(&t.y, power_iters),
+        y_norm: t.y.fro_norm(),
+        x_norm: t.x.fro_norm(),
+    }
+}
+
+pub fn all_metrics(ls: &LayerSketches, power_iters: usize) -> Vec<LayerMetrics> {
+    ls.layers
+        .iter()
+        .map(|t| triplet_metrics(t, power_iters))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::eig;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn power_iteration_matches_jacobi() {
+        Prop::new(16).check("specnorm", |rng, i| {
+            let m = 6 + i % 20;
+            let n = 3 + i % 8;
+            let a = Mat::gaussian(m, n, rng);
+            let power = spectral_norm_power(&a, 60);
+            let exact = eig::spectral_norm(&a);
+            let rel = (power - exact).abs() / exact;
+            if rel > 1e-3 {
+                return Err(format!("power {power} vs exact {exact}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stable_rank_bounds() {
+        Prop::new(16).check("srank", |rng, i| {
+            let n = 4 + i % 10;
+            let a = Mat::gaussian(20, n, rng);
+            let sr = stable_rank_power(&a, 60);
+            // 1 <= stable rank <= rank <= n
+            if !(0.99..=(n as f64) + 1e-6).contains(&sr) {
+                return Err(format!("stable rank {sr} out of [1, {n}]"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn stable_rank_of_rank_one_is_one() {
+        let mut rng = crate::util::rng::Rng::new(30);
+        let u = Mat::gaussian(20, 1, &mut rng);
+        let v = Mat::gaussian(1, 8, &mut rng);
+        let a = u.matmul(&v);
+        let sr = stable_rank_power(&a, 80);
+        assert!((sr - 1.0).abs() < 1e-6, "sr {sr}");
+    }
+
+    #[test]
+    fn zero_matrix_metrics() {
+        let t = SketchTriplet::zeros(8, 2, 0.9);
+        let m = triplet_metrics(&t, 16);
+        assert_eq!(m.z_norm, 0.0);
+        assert_eq!(m.stable_rank, 0.0);
+    }
+}

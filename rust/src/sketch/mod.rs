@@ -1,0 +1,17 @@
+//! Pure-rust sketching substrate: dense linear algebra, the EMA
+//! three-sketch triplet (paper §4.1), two-stage reconstruction (§4.2),
+//! spectra (Jacobi) and the sketch-derived monitoring metrics (§4.6).
+//!
+//! This mirrors the AOT python path (`python/compile/{linalg,sketching}.py`)
+//! so the monitoring hot path and the adaptive-rank controller run without
+//! PJRT round-trips; integration tests cross-validate both sides.
+
+pub mod eig;
+pub mod matrix;
+pub mod metrics;
+pub mod qr;
+pub mod reconstruct;
+pub mod triplet;
+
+pub use matrix::Mat;
+pub use triplet::{LayerSketches, Projections, SketchTriplet};

@@ -1,0 +1,277 @@
+//! QR factorizations mirroring `python/compile/linalg.py`:
+//! modified Gram–Schmidt with re-orthogonalisation for tall matrices and
+//! Householder for the wide `P_X` factor.
+
+use super::matrix::Mat;
+
+const EPS: f64 = 1e-12;
+
+/// Economy QR of a tall matrix (m x n, m >= n) via MGS2.
+/// Returns (Q m x n with orthonormal columns, R n x n upper triangular).
+pub fn mgs_qr(a: &Mat) -> (Mat, Mat) {
+    let (m, n) = (a.rows, a.cols);
+    assert!(m >= n, "mgs_qr needs tall input, got {m}x{n}");
+    let mut q = Mat::zeros(m, n);
+    let mut r = Mat::zeros(n, n);
+    for j in 0..n {
+        let mut v: Vec<f64> = (0..m).map(|i| a[(i, j)]).collect();
+        // Two projection passes ("twice is enough").
+        for _pass in 0..2 {
+            for p in 0..j {
+                let mut coeff = 0.0;
+                for i in 0..m {
+                    coeff += q[(i, p)] * v[i];
+                }
+                for i in 0..m {
+                    v[i] -= coeff * q[(i, p)];
+                }
+                r[(p, j)] += coeff;
+            }
+        }
+        let norm = (v.iter().map(|x| x * x).sum::<f64>() + EPS).sqrt();
+        r[(j, j)] = norm;
+        for i in 0..m {
+            q[(i, j)] = v[i] / norm;
+        }
+    }
+    (q, r)
+}
+
+/// Full orthogonal Q factor (k x k) of the QR of a wide matrix (k x d,
+/// k <= d) via Householder reflections; R is discarded (the reconstruction
+/// only consumes P_X).
+pub fn householder_q_wide(a: &Mat) -> Mat {
+    let (k, d) = (a.rows, a.cols);
+    assert!(k <= d, "householder_q_wide needs wide input, got {k}x{d}");
+    let mut r = a.clone();
+    let mut q = Mat::eye(k);
+    for j in 0..k {
+        // Reflector from column j, rows j..k.
+        let mut x = vec![0.0; k];
+        for i in j..k {
+            x[i] = r[(i, j)];
+        }
+        let alpha_mag = (x.iter().map(|v| v * v).sum::<f64>() + EPS).sqrt();
+        let alpha = if x[j] >= 0.0 { -alpha_mag } else { alpha_mag };
+        x[j] -= alpha;
+        let vnorm = (x.iter().map(|v| v * v).sum::<f64>() + EPS).sqrt();
+        for v in x.iter_mut() {
+            *v /= vnorm;
+        }
+        // r -= 2 v (v^T r); q -= 2 (q v) v^T
+        for c in 0..d {
+            let mut dot = 0.0;
+            for i in j..k {
+                dot += x[i] * r[(i, c)];
+            }
+            for i in j..k {
+                r[(i, c)] -= 2.0 * x[i] * dot;
+            }
+        }
+        for row in 0..k {
+            let mut dot = 0.0;
+            for i in j..k {
+                dot += q[(row, i)] * x[i];
+            }
+            for i in j..k {
+                q[(row, i)] -= 2.0 * dot * x[i];
+            }
+        }
+    }
+    q
+}
+
+/// Solve R X = B for upper-triangular R (n x n), B (n x p).
+///
+/// Truncated solve mirroring `python/compile/linalg.py`: solution rows
+/// whose pivot falls below `RCOND * max|diag|` are zeroed — the
+/// triangular-solve analogue of a truncated pseudoinverse.  The paper's
+/// unregularized `R_Y^{-1}` in Eq. 7 explodes on fast-decaying sketch
+/// spectra (DESIGN.md §7).
+pub const SOLVE_RCOND: f64 = 1e-4;
+
+pub fn solve_upper_triangular(r: &Mat, b: &Mat) -> Mat {
+    let n = r.rows;
+    assert_eq!(r.cols, n);
+    assert_eq!(b.rows, n);
+    let p = b.cols;
+    let max_diag = (0..n).map(|i| r[(i, i)].abs()).fold(0.0, f64::max);
+    let floor = SOLVE_RCOND * max_diag + EPS;
+    let mut x = Mat::zeros(n, p);
+    for row in (0..n).rev() {
+        for c in 0..p {
+            let mut acc = b[(row, c)];
+            for j in row + 1..n {
+                acc -= r[(row, j)] * x[(j, c)];
+            }
+            let diag = r[(row, row)];
+            x[(row, c)] = if diag.abs() >= floor { acc / diag } else { 0.0 };
+        }
+    }
+    x
+}
+
+/// Solve L X = B for lower-triangular L by forward substitution, with the
+/// same truncated-pivot policy as the upper solver.
+pub fn solve_lower_triangular(l: &Mat, b: &Mat) -> Mat {
+    let n = l.rows;
+    assert_eq!(l.cols, n);
+    assert_eq!(b.rows, n);
+    let p = b.cols;
+    let max_diag = (0..n).map(|i| l[(i, i)].abs()).fold(0.0, f64::max);
+    let floor = SOLVE_RCOND * max_diag + EPS;
+    let mut x = Mat::zeros(n, p);
+    for row in 0..n {
+        for c in 0..p {
+            let mut acc = b[(row, c)];
+            for j in 0..row {
+                acc -= l[(row, j)] * x[(j, c)];
+            }
+            let diag = l[(row, row)];
+            x[(row, c)] = if diag.abs() >= floor { acc / diag } else { 0.0 };
+        }
+    }
+    x
+}
+
+/// Moore–Penrose pseudoinverse of a tall full-column-rank matrix via
+/// economy QR: `a^+ = R^{-1} Q^T` (n x m).
+pub fn pinv_tall(a: &Mat) -> Mat {
+    let (q, r) = mgs_qr(a);
+    solve_upper_triangular(&r, &q.transpose())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn orth_err(q: &Mat) -> f64 {
+        let qtq = q.t_matmul(q);
+        let n = q.cols;
+        let mut err: f64 = 0.0;
+        for i in 0..n {
+            for j in 0..n {
+                let want = if i == j { 1.0 } else { 0.0 };
+                err = err.max((qtq[(i, j)] - want).abs());
+            }
+        }
+        err
+    }
+
+    #[test]
+    fn mgs_reconstructs_and_is_orthonormal() {
+        Prop::new(32).check("mgs_qr", |rng, i| {
+            let m = 8 + (i % 40);
+            let n = 1 + (i % 7).min(m - 1);
+            let a = Mat::gaussian(m, n, rng);
+            let (q, r) = mgs_qr(&a);
+            let recon = q.matmul(&r);
+            if recon.max_abs_diff(&a) > 1e-9 {
+                return Err(format!("recon err {}", recon.max_abs_diff(&a)));
+            }
+            if orth_err(&q) > 1e-9 {
+                return Err(format!("orth err {}", orth_err(&q)));
+            }
+            // R upper triangular
+            for i in 0..n {
+                for j in 0..i {
+                    if r[(i, j)].abs() > 1e-12 {
+                        return Err("R not upper triangular".to_string());
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn householder_q_is_orthogonal() {
+        Prop::new(32).check("householder", |rng, i| {
+            let k = 2 + (i % 12);
+            let d = k + (i % 50);
+            let a = Mat::gaussian(k, d, rng);
+            let q = householder_q_wide(&a);
+            if orth_err(&q) > 1e-7 {
+                return Err(format!("orth err {}", orth_err(&q)));
+            }
+            // Q^T A must be upper-trapezoidal (zeros below diagonal).
+            let r = q.t_matmul(&a);
+            for i in 0..k {
+                for j in 0..i.min(r.cols) {
+                    if r[(i, j)].abs() > 1e-8 {
+                        return Err(format!(
+                            "R[{i},{j}] = {} not zero",
+                            r[(i, j)]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn trisolve_and_pinv() {
+        Prop::new(32).check("pinv", |rng, i| {
+            let m = 10 + (i % 30);
+            let n = 2 + (i % 6);
+            let a = Mat::gaussian(m, n, rng);
+            let pinv = pinv_tall(&a);
+            // a^+ a = I_n
+            let id = pinv.matmul(&a);
+            let mut err: f64 = 0.0;
+            for r in 0..n {
+                for c in 0..n {
+                    let want = if r == c { 1.0 } else { 0.0 };
+                    err = err.max((id[(r, c)] - want).abs());
+                }
+            }
+            if err > 1e-8 {
+                return Err(format!("pinv err {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn mgs_handles_near_rank_deficient() {
+        let mut rng = Rng::new(99);
+        let mut a = Mat::gaussian(20, 4, &mut rng);
+        // Make column 3 a copy of column 0 (exactly dependent).
+        for i in 0..20 {
+            a[(i, 3)] = a[(i, 0)];
+        }
+        let (q, r) = mgs_qr(&a);
+        // Must stay finite and still reconstruct.
+        assert!(q.data.iter().all(|x| x.is_finite()));
+        assert!(q.matmul(&r).max_abs_diff(&a) < 1e-6);
+    }
+}
+
+#[cfg(test)]
+mod lower_tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn lower_solve_matches_upper_on_transpose() {
+        Prop::new(24).check("lower", |rng, i| {
+            let n = 2 + i % 10;
+            let p = 1 + i % 4;
+            // Well-conditioned lower-triangular via QR's R transposed +
+            // diagonal boost.
+            let a = Mat::gaussian(n + 4, n, rng);
+            let (_q, r) = mgs_qr(&a);
+            let l = r.transpose();
+            let b = Mat::gaussian(n, p, rng);
+            let x = solve_lower_triangular(&l, &b);
+            let resid = l.matmul(&x).sub(&b).fro_norm();
+            if resid > 1e-8 * (1.0 + b.fro_norm()) {
+                return Err(format!("resid {resid}"));
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,255 @@
+//! Two-stage reconstruction (paper §4.2, Eqs. 6-7) — native mirror of
+//! `python/compile/sketching.py::reconstruct_*`.
+//!
+//! Both forms are implemented: the paper-verbatim pipeline that forms the
+//! d x d feature structure G = Q_Y C Q_X^T, and the algebraically fused
+//! form A_tilde = Omega R_Y^{-1} C Q_X^T that never materialises G (the
+//! fusion used on the hot path; tests prove the two agree).
+
+use super::matrix::Mat;
+use super::qr::{
+    householder_q_wide, mgs_qr, pinv_tall, solve_lower_triangular,
+    solve_upper_triangular,
+};
+use super::triplet::{Projections, SketchTriplet};
+
+/// Core factors shared by both reconstruction forms.
+pub struct ReconCore {
+    pub q_y: Mat, // (d, k)
+    pub r_y: Mat, // (k, k)
+    pub c: Mat,   // (k, k)
+    pub q_x: Mat, // (d, k)
+}
+
+/// Stage 1 + 2 (QRs, C_inter = Q_Y^T Z, P_X, C = P_X^T C_inter^T).
+pub fn reconstruct_core(t: &SketchTriplet) -> ReconCore {
+    let (q_y, r_y) = mgs_qr(&t.y);
+    let (q_x, _r_x) = mgs_qr(&t.x);
+    let c_inter = q_y.t_matmul(&t.z); // (k, s), s == k
+    let p_x = householder_q_wide(&t.x.transpose()); // (k, k)
+    let c = p_x.t_matmul(&c_inter.transpose()); // (k, k)
+    ReconCore { q_y, r_y, c, q_x }
+}
+
+/// Paper Eq. 6 verbatim: G_EMA = Q_Y C Q_X^T (d x d).  Diagnostics only.
+pub fn reconstruct_gema(t: &SketchTriplet) -> Mat {
+    let core = reconstruct_core(t);
+    core.q_y.matmul(&core.c).matmul(&core.q_x.transpose())
+}
+
+/// Trust-region factor mirroring `python/compile/sketching.py::CLIP_GAMMA`:
+/// `||Y||_F / sqrt(k)` estimates `||A||_F`, and the reconstruction is
+/// rescaled whenever it exceeds `CLIP_GAMMA` times that (the paper's
+/// unclipped Eq. 7 amplifies by 1000x on fast-decaying sketch spectra).
+pub const CLIP_GAMMA: f64 = 3.0;
+
+/// Eq. 7, fused: A_tilde = Omega R_Y^{-1} C Q_X^T (n_b x d), norm-clipped.
+pub fn reconstruct_batch(t: &SketchTriplet, omega: &Mat) -> Mat {
+    let core = reconstruct_core(t);
+    let ry_inv_c = solve_upper_triangular(&core.r_y, &core.c); // (k, k)
+    let coeff = omega.matmul(&ry_inv_c); // (n_b, k)
+    let a_tilde = coeff.matmul(&core.q_x.transpose());
+    let k = t.y.cols as f64;
+    let a_norm_est = (t.y.fro_norm().powi(2) / k + 1e-12).sqrt();
+    let a_t_norm = a_tilde.fro_norm() + 1e-12;
+    let scale = (CLIP_GAMMA * a_norm_est / a_t_norm).min(1.0);
+    a_tilde.scale(scale)
+}
+
+/// Eq. 7 exactly as written (forms G and pinv(Y)); the perf baseline and
+/// equivalence witness for the fused form.
+pub fn reconstruct_batch_unfused(t: &SketchTriplet, omega: &Mat) -> Mat {
+    let g = reconstruct_gema(t);
+    let pinv_y = pinv_tall(&t.y); // (k, d)
+    omega.matmul(&pinv_y).matmul(&g)
+}
+
+/// Sequential least-squares reconstruction using all three sketches —
+/// the train-path routine, mirroring
+/// `python/compile/sketching.py::reconstruct_batch_activations_lsq`.
+/// Stacks `P = [Ups|Om|Phi]` (n_b, 3k) and `S = [X|Y|Z/psi]` (d, 3k) and
+/// returns the minimum-norm estimate `A_tilde = Q_P R_P^{-T} S^T`, a
+/// non-expansive projection (hence stable where the Eq.-7 pipeline
+/// diverges; EXPERIMENTS.md §Stability).
+pub fn reconstruct_batch_lsq(
+    t: &SketchTriplet,
+    proj: &Projections,
+    layer: usize,
+) -> Mat {
+    let d = t.x.rows;
+    let k = t.x.cols;
+    let n_b = proj.upsilon.rows;
+    assert!(3 * k <= n_b, "lsq reconstruction needs n_b >= 3k");
+    // S = [X | Y | Z ./ psi] (d, 3k)
+    let mut s_mat = Mat::zeros(d, 3 * k);
+    let psi = &proj.psi[layer];
+    for row in 0..d {
+        for c in 0..k {
+            s_mat[(row, c)] = t.x[(row, c)];
+            s_mat[(row, k + c)] = t.y[(row, c)];
+            let p = psi[c];
+            let p_safe = if p.abs() < 1e-3 {
+                1e-3_f64.copysign(if p == 0.0 { 1.0 } else { p })
+            } else {
+                p
+            };
+            s_mat[(row, 2 * k + c)] = t.z[(row, c)] / p_safe;
+        }
+    }
+    // P = [Ups | Om | Phi] (n_b, 3k)
+    let mut p_mat = Mat::zeros(n_b, 3 * k);
+    for row in 0..n_b {
+        for c in 0..k {
+            p_mat[(row, c)] = proj.upsilon[(row, c)];
+            p_mat[(row, k + c)] = proj.omega[(row, c)];
+            p_mat[(row, 2 * k + c)] = proj.phi[(row, c)];
+        }
+    }
+    let (q_p, r_p) = mgs_qr(&p_mat);
+    let w = solve_lower_triangular(&r_p.transpose(), &s_mat.transpose()); // (3k, d)
+    q_p.matmul(&w)
+}
+
+/// Frobenius reconstruction error against a target activation matrix.
+pub fn recon_error(t: &SketchTriplet, omega: &Mat, target: &Mat) -> f64 {
+    let a_tilde = reconstruct_batch(t, omega);
+    a_tilde.sub(target).fro_norm()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::eig::tail_energy;
+    use crate::sketch::triplet::Projections;
+    use crate::util::prop::Prop;
+    use crate::util::rng::Rng;
+
+    fn single_batch_triplet(
+        a: &Mat,
+        proj: &Projections,
+        rank: usize,
+    ) -> SketchTriplet {
+        // beta = 0 makes the EMA equal the single batch contribution.
+        let mut t = SketchTriplet::zeros(a.cols, rank, 0.0);
+        t.update(a, a, proj, 0);
+        t
+    }
+
+    #[test]
+    fn fused_equals_unfused() {
+        Prop::new(16).check("fusion", |rng, i| {
+            let (n_b, d, rank) = (16, 24, 1 + i % 4);
+            let proj = Projections::sample(n_b, 1, rank, rng);
+            let a = Mat::gaussian(n_b, d, rng);
+            let t = single_batch_triplet(&a, &proj, rank);
+            let fused = reconstruct_batch(&t, &proj.omega);
+            let unfused = reconstruct_batch_unfused(&t, &proj.omega);
+            let diff = fused.max_abs_diff(&unfused);
+            if diff > 1e-6 {
+                return Err(format!("fused vs unfused diff {diff}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn exact_recovery_of_low_rank() {
+        // A rank-r matrix with r below the sketch rank should reconstruct
+        // its EMA structure to high relative accuracy (tail energy ~ 0).
+        Prop::new(12).check("lowrank", |rng, i| {
+            let (n_b, d) = (24, 32);
+            let true_rank = 1 + i % 2;
+            let sketch_rank = true_rank + 2;
+            let u = Mat::gaussian(n_b, true_rank, rng);
+            let v = Mat::gaussian(true_rank, d, rng);
+            let a = u.matmul(&v);
+            // Verify premise: tail energy beyond true rank is ~0
+            // (relative to the matrix scale — Jacobi has a numeric floor).
+            if tail_energy(&a, true_rank) > 1e-7 * a.fro_norm() {
+                return Err("premise failed".into());
+            }
+            let proj = Projections::sample(n_b, 1, sketch_rank, rng);
+            let t = single_batch_triplet(&a, &proj, sketch_rank);
+            let a_tilde = reconstruct_batch(&t, &proj.omega);
+            // The paper's reconstruction is not an exact projector (it
+            // mixes X/Y bases through C); require strong correlation
+            // rather than exact equality: relative error well below 1.
+            let rel = a_tilde.sub(&a).fro_norm() / a.fro_norm();
+            if !rel.is_finite() {
+                return Err("non-finite reconstruction".into());
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn gema_shape_and_finite() {
+        let mut rng = Rng::new(20);
+        let proj = Projections::sample(8, 1, 2, &mut rng);
+        let a = Mat::gaussian(8, 16, &mut rng);
+        let t = single_batch_triplet(&a, &proj, 2);
+        let g = reconstruct_gema(&t);
+        assert_eq!((g.rows, g.cols), (16, 16));
+        assert!(g.data.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn zero_sketch_reconstructs_finite() {
+        // Untrained (all-zero) sketches must not produce NaNs — the EPS
+        // floors in QR/solve guarantee this.
+        let mut rng = Rng::new(21);
+        let proj = Projections::sample(8, 1, 2, &mut rng);
+        let t = SketchTriplet::zeros(16, 2, 0.9);
+        let a_tilde = reconstruct_batch(&t, &proj.omega);
+        assert!(a_tilde.data.iter().all(|x| x.is_finite()));
+    }
+}
+
+#[cfg(test)]
+mod lsq_tests {
+    use super::*;
+    use crate::sketch::triplet::Projections;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn lsq_is_non_expansive_and_beats_eq7_on_decay() {
+        Prop::new(12).check("lsq", |rng, i| {
+            let (n_b, d, rank) = (64, 48, 2 + i % 3);
+            let proj = Projections::sample(n_b, 1, rank, rng);
+            // Decaying-spectrum activation (the Eq.-7 failure regime).
+            let u = Mat::gaussian(n_b, 4, rng);
+            let v = Mat::gaussian(4, d, rng);
+            let a = u.matmul(&v).add(&Mat::gaussian(n_b, d, rng).scale(0.02));
+            let mut t = SketchTriplet::zeros(d, rank, 0.0);
+            t.update(&a, &a, &proj, 0);
+            let lsq = reconstruct_batch_lsq(&t, &proj, 0);
+            // Non-expansive: projection cannot exceed the source energy
+            // (allow small fp slack).
+            if lsq.fro_norm() > 1.05 * a.fro_norm() {
+                return Err(format!(
+                    "expansive: {} > {}",
+                    lsq.fro_norm(),
+                    a.fro_norm()
+                ));
+            }
+            let err_lsq = lsq.sub(&a).fro_norm();
+            let err_eq7 = recon_error(&t, &proj.omega, &a);
+            if err_lsq > err_eq7 * 1.05 {
+                return Err(format!(
+                    "lsq err {err_lsq} worse than eq7 {err_eq7}"
+                ));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn lsq_shapes_and_finiteness() {
+        let mut rng = crate::util::rng::Rng::new(31);
+        let proj = Projections::sample(32, 1, 2, &mut rng);
+        let t = SketchTriplet::zeros(16, 2, 0.9); // zero sketches
+        let out = reconstruct_batch_lsq(&t, &proj, 0);
+        assert_eq!((out.rows, out.cols), (32, 16));
+        assert!(out.data.iter().all(|x| x.is_finite()));
+    }
+}

@@ -1,0 +1,234 @@
+//! The EMA three-sketch triplet (paper §4.1, Eqs. 5a-5c) and its shared
+//! projections — the native-rust mirror of `python/compile/sketching.py`.
+//!
+//! One `SketchTriplet` holds the (X, Y, Z) sketches for a single hidden
+//! layer; `LayerSketches` stacks them for a network.  The monitor service
+//! updates these from activation batches without any PJRT round-trip, and
+//! the adaptive-rank controller reads reconstruction diagnostics from them.
+
+use crate::util::rng::Rng;
+
+use super::matrix::Mat;
+
+/// Shared batch projections (Upsilon, Omega, Phi) + per-layer Psi weights.
+#[derive(Clone, Debug)]
+pub struct Projections {
+    pub upsilon: Mat, // (n_b, k)
+    pub omega: Mat,   // (n_b, k)
+    pub phi: Mat,     // (n_b, s)
+    pub psi: Vec<Vec<f64>>, // per layer, length s
+    pub rank: usize,
+}
+
+impl Projections {
+    /// k = s = 2r + 1 (paper §4.1).
+    pub fn sample(n_b: usize, n_layers: usize, rank: usize, rng: &mut Rng) -> Self {
+        let k = 2 * rank + 1;
+        Projections {
+            upsilon: Mat::gaussian(n_b, k, rng),
+            omega: Mat::gaussian(n_b, k, rng),
+            phi: Mat::gaussian(n_b, k, rng),
+            psi: (0..n_layers).map(|_| rng.normal_vec(k)).collect(),
+            rank,
+        }
+    }
+
+    pub fn k(&self) -> usize {
+        2 * self.rank + 1
+    }
+}
+
+/// (X, Y, Z) EMA sketches for one hidden layer (each d x k).
+#[derive(Clone, Debug)]
+pub struct SketchTriplet {
+    pub x: Mat,
+    pub y: Mat,
+    pub z: Mat,
+    pub beta: f64,
+    /// Number of EMA updates applied (for bias diagnostics: the implicit
+    /// EMA weight mass is 1 - beta^n).
+    pub updates: usize,
+}
+
+impl SketchTriplet {
+    pub fn zeros(d: usize, rank: usize, beta: f64) -> Self {
+        let k = 2 * rank + 1;
+        SketchTriplet {
+            x: Mat::zeros(d, k),
+            y: Mat::zeros(d, k),
+            z: Mat::zeros(d, k),
+            beta,
+            updates: 0,
+        }
+    }
+
+    /// Eqs. 5a-5c: fused one-pass EMA update from a batch.
+    ///
+    /// `a_in`  (n_b, d): activations entering the layer's weight (A^[l-1])
+    /// `a_out` (n_b, d): activations leaving the nonlinearity (A^[l])
+    pub fn update(
+        &mut self,
+        a_in: &Mat,
+        a_out: &Mat,
+        proj: &Projections,
+        layer: usize,
+    ) {
+        let beta = self.beta;
+        let contrib_x = a_in.t_matmul(&proj.upsilon);
+        self.x.ema_blend(&contrib_x, beta);
+        let contrib_y = a_out.t_matmul(&proj.omega);
+        self.y.ema_blend(&contrib_y, beta);
+        let contrib_z = a_out
+            .t_matmul(&proj.phi)
+            .scale_cols(&proj.psi[layer]);
+        self.z.ema_blend(&contrib_z, beta);
+        self.updates += 1;
+    }
+
+    /// Runtime bytes of the triplet at f32 (memory accountant unit).
+    pub fn runtime_bytes(&self) -> usize {
+        self.x.runtime_bytes() + self.y.runtime_bytes() + self.z.runtime_bytes()
+    }
+}
+
+/// Stacked triplets for all hidden layers of one network.
+#[derive(Clone, Debug)]
+pub struct LayerSketches {
+    pub layers: Vec<SketchTriplet>,
+    pub proj: Projections,
+}
+
+impl LayerSketches {
+    pub fn new(
+        n_layers: usize,
+        d_hidden: usize,
+        n_b: usize,
+        rank: usize,
+        beta: f64,
+        rng: &mut Rng,
+    ) -> Self {
+        LayerSketches {
+            layers: (0..n_layers)
+                .map(|_| SketchTriplet::zeros(d_hidden, rank, beta))
+                .collect(),
+            proj: Projections::sample(n_b, n_layers, rank, rng),
+        }
+    }
+
+    /// Update every layer's triplet from the forward activations
+    /// `acts[j] = A^[j]` (acts[0] = input batch), matching the python
+    /// indexing: triplet j-1 takes a_in = A^[j-1] for j >= 2 and A^[1]
+    /// itself for j = 1.
+    pub fn update_from_acts(&mut self, acts: &[Mat]) {
+        let n_hidden = acts.len() - 1;
+        assert_eq!(n_hidden, self.layers.len());
+        for j in 1..=n_hidden {
+            let a_in = if j >= 2 { &acts[j - 1] } else { &acts[1] };
+            // Split borrow: triplet j-1 vs shared projections.
+            let proj = &self.proj;
+            self.layers[j - 1].update_ref(a_in, &acts[j], proj, j - 1);
+        }
+    }
+
+    /// Rank change (Algorithm 1 lines 16/21/23): reinitialise projections
+    /// and zero sketches with new k = s = 2r + 1.
+    pub fn reinitialize(&mut self, rank: usize, n_b: usize, rng: &mut Rng) {
+        let n_layers = self.layers.len();
+        let d = self.layers[0].x.rows;
+        let beta = self.layers[0].beta;
+        self.proj = Projections::sample(n_b, n_layers, rank, rng);
+        for t in &mut self.layers {
+            *t = SketchTriplet::zeros(d, rank, beta);
+        }
+    }
+
+    pub fn runtime_bytes(&self) -> usize {
+        let sketches: usize =
+            self.layers.iter().map(|t| t.runtime_bytes()).sum();
+        let proj = self.proj.upsilon.runtime_bytes()
+            + self.proj.omega.runtime_bytes()
+            + self.proj.phi.runtime_bytes()
+            + self.proj.psi.iter().map(|p| p.len() * 4).sum::<usize>();
+        sketches + proj
+    }
+}
+
+impl SketchTriplet {
+    /// Borrow-friendly variant of `update` used by `LayerSketches`.
+    fn update_ref(
+        &mut self,
+        a_in: &Mat,
+        a_out: &Mat,
+        proj: &Projections,
+        layer: usize,
+    ) {
+        self.update(a_in, a_out, proj, layer);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::Prop;
+
+    #[test]
+    fn ema_expansion_lemma_4_1() {
+        // Lemma 4.1: X_n = (1-beta) sum_j beta^{n-j} A_j^T Upsilon.
+        Prop::new(16).check("lemma41", |rng, i| {
+            let (n_b, d, rank) = (8, 12, 1 + i % 3);
+            let beta = 0.8;
+            let proj = Projections::sample(n_b, 1, rank, rng);
+            let mut t = SketchTriplet::zeros(d, rank, beta);
+            let batches: Vec<Mat> =
+                (0..5).map(|_| Mat::gaussian(n_b, d, rng)).collect();
+            for a in &batches {
+                t.update(a, a, &proj, 0);
+            }
+            // Explicit expansion.
+            let n = batches.len();
+            let mut want = Mat::zeros(d, proj.k());
+            for (j, a) in batches.iter().enumerate() {
+                let w = (1.0 - beta) * beta.powi((n - 1 - j) as i32);
+                want = want.add(&a.t_matmul(&proj.upsilon).scale(w));
+            }
+            if t.x.max_abs_diff(&want) > 1e-10 {
+                return Err(format!("diff {}", t.x.max_abs_diff(&want)));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn z_sketch_psi_scaling() {
+        let mut rng = Rng::new(5);
+        let proj = Projections::sample(6, 1, 2, &mut rng);
+        let mut t = SketchTriplet::zeros(10, 2, 0.0); // beta=0: pure batch
+        let a = Mat::gaussian(6, 10, &mut rng);
+        t.update(&a, &a, &proj, 0);
+        let want = a.t_matmul(&proj.phi).scale_cols(&proj.psi[0]);
+        assert!(t.z.max_abs_diff(&want) < 1e-12);
+    }
+
+    #[test]
+    fn reinitialize_changes_dims_and_zeroes() {
+        let mut rng = Rng::new(6);
+        let mut ls = LayerSketches::new(3, 16, 8, 2, 0.9, &mut rng);
+        let acts: Vec<Mat> =
+            (0..4).map(|_| Mat::gaussian(8, 16, &mut rng)).collect();
+        ls.update_from_acts(&acts);
+        assert!(ls.layers[0].x.fro_norm() > 0.0);
+        ls.reinitialize(4, 8, &mut rng);
+        assert_eq!(ls.proj.k(), 9);
+        assert_eq!(ls.layers[0].x.cols, 9);
+        assert_eq!(ls.layers[0].x.fro_norm(), 0.0);
+    }
+
+    #[test]
+    fn runtime_bytes_formula() {
+        let mut rng = Rng::new(7);
+        let ls = LayerSketches::new(2, 32, 16, 2, 0.9, &mut rng);
+        // 2 layers * 3 sketches * 32*5 floats * 4B
+        let sketch_bytes = 2 * 3 * 32 * 5 * 4;
+        assert!(ls.runtime_bytes() >= sketch_bytes);
+    }
+}

@@ -1,0 +1,131 @@
+//! Minimal CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value` and positional args.
+//! Each binary declares its options by querying the parsed map; unknown
+//! options are an error so typos fail loudly.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    known: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Result<Args> {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Result<Args> {
+        let mut a = Args::default();
+        let mut iter = it.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    a.opts.insert(rest.to_string(), v);
+                } else {
+                    a.flags.push(rest.to_string());
+                }
+            } else {
+                a.positional.push(tok);
+            }
+        }
+        Ok(a)
+    }
+
+    /// Register + fetch a string option.
+    pub fn opt(&mut self, key: &str) -> Option<String> {
+        self.known.push(key.to_string());
+        self.opts.get(key).cloned()
+    }
+
+    pub fn opt_or(&mut self, key: &str, default: &str) -> String {
+        self.opt(key).unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn opt_usize(&mut self, key: &str, default: usize) -> Result<usize> {
+        match self.opt(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn opt_u64(&mut self, key: &str, default: u64) -> Result<u64> {
+        match self.opt(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn opt_f64(&mut self, key: &str, default: f64) -> Result<f64> {
+        match self.opt(key) {
+            Some(v) => Ok(v.parse()?),
+            None => Ok(default),
+        }
+    }
+
+    pub fn flag(&mut self, key: &str) -> bool {
+        self.known.push(key.to_string());
+        self.flags.iter().any(|f| f == key)
+    }
+
+    /// Call after all opt()/flag() queries: errors on unrecognised input.
+    pub fn finish(&self) -> Result<()> {
+        for k in self.opts.keys() {
+            if !self.known.contains(k) {
+                bail!("unknown option --{k}");
+            }
+        }
+        for f in &self.flags {
+            if !self.known.contains(f) {
+                bail!("unknown flag --{f}");
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string())).unwrap()
+    }
+
+    #[test]
+    fn mixed_forms() {
+        let mut a = parse(&["train", "--epochs", "5", "--rank=4", "--verbose"]);
+        assert_eq!(a.positional, vec!["train"]);
+        assert_eq!(a.opt_usize("epochs", 0).unwrap(), 5);
+        assert_eq!(a.opt_usize("rank", 0).unwrap(), 4);
+        assert!(a.flag("verbose"));
+        a.finish().unwrap();
+    }
+
+    #[test]
+    fn unknown_option_fails() {
+        let mut a = parse(&["--bogus", "1"]);
+        let _ = a.opt("real");
+        assert!(a.finish().is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let mut a = parse(&[]);
+        assert_eq!(a.opt_or("mode", "standard"), "standard");
+        assert_eq!(a.opt_f64("beta", 0.95).unwrap(), 0.95);
+    }
+}

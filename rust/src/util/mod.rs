@@ -1,0 +1,8 @@
+//! Hand-rolled infrastructure substrate (no external crates offline):
+//! RNG, JSON, CLI, TOML-subset config parsing and a property-test kit.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod toml;

@@ -1,0 +1,95 @@
+//! Property-based testing kit (proptest is unavailable offline).
+//!
+//! `check` runs a property over `n` seeded random cases; on failure it
+//! reports the seed and case index so the exact case replays with
+//! `PROP_SEED=<seed> PROP_CASE=<idx>`.  Generators are plain closures over
+//! the substrate `Rng`, which keeps case generation deterministic.
+
+use super::rng::Rng;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        Prop { cases: 64, seed }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize) -> Self {
+        Prop {
+            cases,
+            ..Default::default()
+        }
+    }
+
+    /// Run `property(rng, case_idx)`; panics with replay info on failure.
+    pub fn check<F>(&self, name: &str, mut property: F)
+    where
+        F: FnMut(&mut Rng, usize) -> Result<(), String>,
+    {
+        let only: Option<usize> = std::env::var("PROP_CASE")
+            .ok()
+            .and_then(|s| s.parse().ok());
+        for idx in 0..self.cases {
+            if let Some(o) = only {
+                if idx != o {
+                    continue;
+                }
+            }
+            let mut rng = Rng::new(self.seed ^ (idx as u64).wrapping_mul(0x9E37));
+            if let Err(msg) = property(&mut rng, idx) {
+                panic!(
+                    "property {name:?} failed at case {idx} \
+                     (replay: PROP_SEED={} PROP_CASE={idx}): {msg}",
+                    self.seed
+                );
+            }
+        }
+    }
+}
+
+/// Assert helper returning Result for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !($cond) {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_all_cases() {
+        let mut count = 0;
+        Prop::new(16).check("count", |_rng, _i| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 16);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay")]
+    fn reports_failure() {
+        Prop::new(8).check("fails", |rng, _| {
+            let v = rng.uniform();
+            if v >= 0.0 {
+                Err("always".to_string())
+            } else {
+                Ok(())
+            }
+        });
+    }
+}

@@ -1,0 +1,250 @@
+//! Minimal TOML-subset parser for experiment configs (no toml crate
+//! offline).
+//!
+//! Supported grammar — the subset the config system uses:
+//!   * `[section]` and `[section.sub]` headers
+//!   * `key = value` with string ("..."), integer, float, bool and
+//!     homogeneous inline arrays `[1, 2, 3]`
+//!   * `#` comments, blank lines
+//!
+//! Values land in a flat `section.key -> Value` map; the typed config
+//! structs in `config/` pull from it with defaults and validation.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Value::Str(s) => Ok(s),
+            _ => bail!("expected string, got {self:?}"),
+        }
+    }
+
+    pub fn as_i64(&self) -> Result<i64> {
+        match self {
+            Value::Int(i) => Ok(*i),
+            _ => bail!("expected integer, got {self:?}"),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Value::Float(f) => Ok(*f),
+            Value::Int(i) => Ok(*i as f64),
+            _ => bail!("expected float, got {self:?}"),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Value::Bool(b) => Ok(*b),
+            _ => bail!("expected bool, got {self:?}"),
+        }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Toml {
+    pub values: BTreeMap<String, Value>,
+}
+
+impl Toml {
+    pub fn parse(text: &str) -> Result<Toml> {
+        let mut section = String::new();
+        let mut values = BTreeMap::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(rest) = line.strip_prefix('[') {
+                let name = rest
+                    .strip_suffix(']')
+                    .with_context(|| format!("line {}: bad section", lineno + 1))?;
+                section = name.trim().to_string();
+                continue;
+            }
+            let (key, val) = line
+                .split_once('=')
+                .with_context(|| format!("line {}: expected key = value", lineno + 1))?;
+            let full_key = if section.is_empty() {
+                key.trim().to_string()
+            } else {
+                format!("{section}.{}", key.trim())
+            };
+            let value = parse_value(val.trim())
+                .with_context(|| format!("line {}: bad value", lineno + 1))?;
+            values.insert(full_key, value);
+        }
+        Ok(Toml { values })
+    }
+
+    pub fn get(&self, key: &str) -> Option<&Value> {
+        self.values.get(key)
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> Result<String> {
+        match self.get(key) {
+            Some(v) => Ok(v.as_str()?.to_string()),
+            None => Ok(default.to_string()),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            Some(v) => Ok(v.as_i64()? as usize),
+            None => Ok(default),
+        }
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            Some(v) => v.as_f64(),
+            None => Ok(default),
+        }
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> Result<bool> {
+        match self.get(key) {
+            Some(v) => v.as_bool(),
+            None => Ok(default),
+        }
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside quoted strings must survive.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value> {
+    if let Some(rest) = s.strip_prefix('"') {
+        let inner = rest
+            .strip_suffix('"')
+            .with_context(|| "unterminated string")?;
+        return Ok(Value::Str(inner.to_string()));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(rest) = s.strip_prefix('[') {
+        let inner = rest.strip_suffix(']').with_context(|| "unterminated array")?;
+        let mut out = Vec::new();
+        for part in split_top_level(inner) {
+            let part = part.trim();
+            if !part.is_empty() {
+                out.push(parse_value(part)?);
+            }
+        }
+        return Ok(Value::Arr(out));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    bail!("cannot parse value {s:?}")
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut depth = 0usize;
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            '[' if !in_str => {
+                depth += 1;
+                cur.push(c);
+            }
+            ']' if !in_str => {
+                depth -= 1;
+                cur.push(c);
+            }
+            ',' if depth == 0 && !in_str => {
+                out.push(std::mem::take(&mut cur));
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_experiment_config() {
+        let text = r#"
+# Fig-1 config
+[experiment]
+name = "mnist"        # inline comment
+epochs = 50
+seed = 42
+
+[sketch]
+rank = 2
+beta = 0.95
+adaptive = true
+ladder = [2, 4, 8, 16]
+"#;
+        let t = Toml::parse(text).unwrap();
+        assert_eq!(t.str_or("experiment.name", "").unwrap(), "mnist");
+        assert_eq!(t.usize_or("experiment.epochs", 0).unwrap(), 50);
+        assert_eq!(t.f64_or("sketch.beta", 0.0).unwrap(), 0.95);
+        assert!(t.bool_or("sketch.adaptive", false).unwrap());
+        match t.get("sketch.ladder").unwrap() {
+            Value::Arr(v) => assert_eq!(v.len(), 4),
+            _ => panic!("not array"),
+        }
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let t = Toml::parse("").unwrap();
+        assert_eq!(t.usize_or("a.b", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_value_errors() {
+        assert!(Toml::parse("[s]\nx = @@@").is_err());
+        assert!(Toml::parse("[unclosed\nx = 1").is_err());
+    }
+
+    #[test]
+    fn hash_in_string_preserved() {
+        let t = Toml::parse("k = \"a#b\"").unwrap();
+        assert_eq!(t.str_or("k", "").unwrap(), "a#b");
+    }
+}

@@ -1,0 +1,139 @@
+//! Monitor-service integration (the Fig-5 claim): metrics from real AOT
+//! monitored training runs must separate healthy from problematic
+//! configurations, and the baseline comparison must hold on measured bytes.
+
+use sketchgrad::baselines::FullMonitor;
+use sketchgrad::coordinator::Trainer;
+use sketchgrad::data::{make_chunks, synth_mnist, Init};
+use sketchgrad::memory::monitor16_dims;
+use sketchgrad::monitor::{MonitorConfig, MonitorService};
+use sketchgrad::runtime::Runtime;
+use sketchgrad::sketch::Mat;
+use sketchgrad::util::rng::Rng;
+use std::path::PathBuf;
+
+fn runtime() -> Option<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+fn run_monitor16(
+    rt: &Runtime,
+    artifact: &str,
+    init: Init,
+) -> Vec<sketchgrad::coordinator::StepMetrics> {
+    let mut trainer = Trainer::new(rt, artifact, init, 42).unwrap();
+    let data = synth_mnist(128 * 20, 42);
+    let mut rng = Rng::new(7);
+    let chunks = make_chunks(&data, 128, 20, &mut rng, &[784]);
+    trainer.run_chunk(&chunks[0]).unwrap();
+    trainer.history
+}
+
+#[test]
+fn healthy_vs_problematic_metrics_separate() {
+    let Some(rt) = runtime() else { return };
+    let healthy = run_monitor16(&rt, "monitor16_mon_r4_chunk", Init::Kaiming);
+    let problematic = run_monitor16(
+        &rt,
+        "monitor16_problematic_chunk",
+        Init::KaimingNegBias(-3.0),
+    );
+
+    let mean = |ms: &[sketchgrad::coordinator::StepMetrics],
+                f: fn(&sketchgrad::coordinator::StepMetrics) -> f32|
+     -> f32 { ms.iter().map(f).sum::<f32>() / ms.len() as f32 };
+    let z_h = mean(&healthy, |m| {
+        m.z_norm.iter().sum::<f32>() / m.z_norm.len() as f32
+    });
+    let z_p = mean(&problematic, |m| {
+        m.z_norm.iter().sum::<f32>() / m.z_norm.len() as f32
+    });
+    // Healthy gradients live; problematic ReLU units starved by the -3
+    // bias produce near-zero activations/sketches (paper Fig. 5 shape).
+    assert!(
+        z_h > 10.0 * z_p,
+        "||Z|| must separate: healthy {z_h} vs problematic {z_p}"
+    );
+
+    let sr_h = mean(&healthy, |m| {
+        m.stable_rank.iter().sum::<f32>() / m.stable_rank.len() as f32
+    });
+    let sr_p = mean(&problematic, |m| {
+        m.stable_rank.iter().sum::<f32>() / m.stable_rank.len() as f32
+    });
+    assert!(
+        sr_h > 2.0 * sr_p,
+        "stable rank must separate: healthy {sr_h} vs problematic {sr_p}"
+    );
+
+    // Loss separation: healthy decreasing, problematic flat at ~ln(10).
+    let h_last = healthy.last().unwrap().loss;
+    let p_last = problematic.last().unwrap().loss;
+    assert!(h_last < 2.0, "healthy should be learning, loss {h_last}");
+    assert!(
+        (p_last - 2.3026).abs() < 0.05,
+        "problematic should be stuck at ln(10), loss {p_last}"
+    );
+}
+
+#[test]
+fn monitor_service_flags_the_problematic_run_only() {
+    let Some(rt) = runtime() else { return };
+    let cfg = MonitorConfig {
+        window: 5,
+        ..MonitorConfig::for_rank(4)
+    };
+    let healthy = run_monitor16(&rt, "monitor16_mon_r4_chunk", Init::Kaiming);
+    let problematic = run_monitor16(
+        &rt,
+        "monitor16_problematic_chunk",
+        Init::KaimingNegBias(-3.0),
+    );
+
+    let diagnose = |history: &[sketchgrad::coordinator::StepMetrics]| {
+        let mut svc = MonitorService::new(cfg.clone(), 15);
+        for m in history {
+            svc.observe(m);
+        }
+        (svc.diagnose(), svc.is_healthy())
+    };
+    let (d_h, ok_h) = diagnose(&healthy);
+    let (d_p, ok_p) = diagnose(&problematic);
+    assert!(ok_h, "healthy run flagged: {d_h:?}");
+    assert!(!ok_p, "problematic run not flagged: {d_p:?}");
+    assert!(d_p.diversity_collapse || d_p.stagnation, "{d_p:?}");
+}
+
+#[test]
+fn measured_monitoring_memory_ratio() {
+    // The Fig-5 memory claim on *measured* bytes: real full-gradient
+    // checkpoints for the 16x1024 net over T=5 vs the monitor service.
+    let dims = monitor16_dims();
+    let mut rng = Rng::new(3);
+    let mut full = FullMonitor::new(5);
+    for step in 0..5 {
+        let grads: Vec<Mat> = dims
+            .windows(2)
+            .map(|w| Mat::gaussian(w[1], w[0], &mut rng))
+            .collect();
+        full.record(step, grads);
+    }
+    let svc = MonitorService::new(MonitorConfig::for_rank(4), 15);
+    // Sketch state (1.6 MB) + service summaries vs 295 MB of checkpoints.
+    let sketch_state = {
+        use sketchgrad::sketch::LayerSketches;
+        LayerSketches::new(15, 1024, 128, 4, 0.9, &mut rng).runtime_bytes()
+    };
+    let total_sketch = sketch_state + svc.monitor_bytes();
+    let reduction = 1.0 - total_sketch as f64 / full.bytes() as f64;
+    assert!(
+        reduction > 0.99,
+        "measured reduction {reduction} (sketch {total_sketch} vs full {})",
+        full.bytes()
+    );
+}

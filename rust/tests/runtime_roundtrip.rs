@@ -1,0 +1,184 @@
+//! Integration: HLO-text artifacts load, compile and execute on the PJRT
+//! CPU client, and sketched training steps actually optimize.
+
+use std::collections::HashMap;
+use std::path::PathBuf;
+
+use sketchgrad::coordinator::{init_state, Trainer};
+use sketchgrad::data::{synth_mnist, make_chunks, Init};
+use sketchgrad::runtime::{Runtime, Tensor};
+use sketchgrad::util::rng::Rng;
+
+fn artifacts_dir() -> PathBuf {
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+fn runtime() -> Option<Runtime> {
+    let dir = artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+#[test]
+fn standard_step_executes_and_learns() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("mnist_std_step").unwrap();
+    let mut rng = Rng::new(1);
+    let mut state = init_state(&exe.entry, Init::Kaiming, &mut rng).unwrap();
+
+    let data = synth_mnist(128 * 12, 42);
+    let mut first_loss = None;
+    let mut last_loss = 0.0;
+    for step in 0..12 {
+        let mut xs = Vec::with_capacity(128 * 784);
+        let mut ys = Vec::with_capacity(128);
+        for b in 0..128 {
+            let i = step * 128 + b;
+            xs.extend_from_slice(data.x_row(i));
+            ys.push(data.ys[i]);
+        }
+        let mut extra: HashMap<&str, Tensor> = HashMap::new();
+        extra.insert("batch_x", Tensor::from_f32(&[128, 784], xs));
+        extra.insert("batch_y", Tensor::from_i32(&[128], ys));
+        let inputs = state.ordered_inputs(&exe.entry, &extra).unwrap();
+        let outputs = exe.run(&inputs).unwrap();
+        let metrics = state.absorb_outputs(&exe.entry, outputs).unwrap();
+        let loss = metrics["loss"].scalar().unwrap();
+        assert!(loss.is_finite(), "loss must be finite, got {loss}");
+        if first_loss.is_none() {
+            first_loss = Some(loss);
+        }
+        last_loss = loss;
+    }
+    let first = first_loss.unwrap();
+    assert!(
+        last_loss < first,
+        "loss should decrease: first {first} last {last_loss}"
+    );
+    // Step counter advanced.
+    assert_eq!(state.get("t").unwrap().scalar().unwrap(), 12.0);
+}
+
+#[test]
+fn sketched_step_executes_updates_sketches_and_learns() {
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("mnist_sk_r2_step").unwrap();
+    let mut rng = Rng::new(2);
+    let mut state = init_state(&exe.entry, Init::Kaiming, &mut rng).unwrap();
+    let data = synth_mnist(128 * 16, 7);
+
+    let sketch_before = state.get("sketch_y").unwrap().clone();
+    let mut losses = Vec::new();
+    for step in 0..16 {
+        let mut xs = Vec::with_capacity(128 * 784);
+        let mut ys = Vec::with_capacity(128);
+        for b in 0..128 {
+            let i = step * 128 + b;
+            xs.extend_from_slice(data.x_row(i));
+            ys.push(data.ys[i]);
+        }
+        let mut extra: HashMap<&str, Tensor> = HashMap::new();
+        extra.insert("batch_x", Tensor::from_f32(&[128, 784], xs));
+        extra.insert("batch_y", Tensor::from_i32(&[128], ys));
+        let inputs = state.ordered_inputs(&exe.entry, &extra).unwrap();
+        let outputs = exe.run(&inputs).unwrap();
+        let metrics = state.absorb_outputs(&exe.entry, outputs).unwrap();
+        losses.push(metrics["loss"].scalar().unwrap());
+        // Sketch metrics present and finite.
+        for name in ["z_norm", "stable_rank", "y_norm", "x_norm"] {
+            let t = &metrics[name];
+            assert_eq!(t.len(), 3, "{name} per hidden layer");
+            assert!(t.f32_data().unwrap().iter().all(|v| v.is_finite()));
+        }
+    }
+    // Sketches changed from zero.
+    let sketch_after = state.get("sketch_y").unwrap();
+    assert_ne!(&sketch_before, sketch_after);
+    assert!(losses.iter().all(|l| l.is_finite()));
+    assert!(
+        losses.last().unwrap() < losses.first().unwrap(),
+        "sketched training should reduce loss: {losses:?}"
+    );
+}
+
+#[test]
+fn chunked_trainer_runs_an_epoch() {
+    let Some(rt) = runtime() else { return };
+    let mut trainer =
+        Trainer::new(&rt, "mnist_std_chunk", Init::Kaiming, 3).unwrap();
+    let data = synth_mnist(128 * 50, 11); // exactly one chunk of K=50
+    let mut rng = Rng::new(4);
+    let chunks = make_chunks(&data, 128, 50, &mut rng, &[784]);
+    assert_eq!(chunks.len(), 1);
+    let summary = trainer.run_epoch(&chunks).unwrap();
+    assert_eq!(summary.steps, 50);
+    assert!(summary.mean_loss.is_finite());
+    // Within-epoch improvement: late steps beat early steps on average.
+    let early: f32 =
+        trainer.history[..10].iter().map(|m| m.loss).sum::<f32>() / 10.0;
+    let late: f32 = trainer.history[40..].iter().map(|m| m.loss).sum::<f32>()
+        / 10.0;
+    assert!(late < early, "early {early} late {late}");
+}
+
+#[test]
+fn recon_eval_matches_rust_substrate() {
+    // The same (A, projections) pushed through the AOT recon_eval artifact
+    // and the native substrate must agree on the reconstruction error.
+    let Some(rt) = runtime() else { return };
+    let exe = rt.load("recon_eval_r2").unwrap();
+    let (n_b, d, rank) = (128usize, 512usize, 2usize);
+    let k = 2 * rank + 1;
+    let mut rng = Rng::new(9);
+
+    let a: Vec<f32> = rng.normal_vec_f32(n_b * d);
+    let ups: Vec<f32> = rng.normal_vec_f32(n_b * k);
+    let omg: Vec<f32> = rng.normal_vec_f32(n_b * k);
+    let phi: Vec<f32> = rng.normal_vec_f32(n_b * k);
+    let psi: Vec<f32> = rng.normal_vec_f32(k);
+
+    let outputs = exe
+        .run(&[
+            Tensor::from_f32(&[n_b, d], a.clone()),
+            Tensor::from_f32(&[n_b, k], ups.clone()),
+            Tensor::from_f32(&[n_b, k], omg.clone()),
+            Tensor::from_f32(&[n_b, k], phi.clone()),
+            Tensor::from_f32(&[k], psi.clone()),
+        ])
+        .unwrap();
+    let aot_err = outputs[1].scalar().unwrap() as f64;
+
+    // Native substrate replay (beta=0 single-batch triplet).
+    use sketchgrad::sketch::{
+        reconstruct::recon_error, Mat, Projections, SketchTriplet,
+    };
+    let a_m = Mat::from_f32(n_b, d, &a);
+    let proj = Projections {
+        upsilon: Mat::from_f32(n_b, k, &ups),
+        omega: Mat::from_f32(n_b, k, &omg),
+        phi: Mat::from_f32(n_b, k, &phi),
+        psi: vec![psi.iter().map(|&x| x as f64).collect()],
+        rank,
+    };
+    let mut t = SketchTriplet::zeros(d, rank, 0.0);
+    t.update(&a_m, &a_m, &proj, 0);
+    let native_err = recon_error(&t, &proj.omega, &a_m);
+
+    let rel = (aot_err - native_err).abs() / native_err;
+    assert!(
+        rel < 2e-2,
+        "AOT recon err {aot_err} vs native {native_err} (rel {rel})"
+    );
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(rt) = runtime() else { return };
+    let a = rt.load("recon_eval_r2").unwrap();
+    let b = rt.load("recon_eval_r2").unwrap();
+    assert!(std::rc::Rc::ptr_eq(&a, &b));
+    assert_eq!(rt.compile_log.borrow().len(), 1);
+}

@@ -1,0 +1,138 @@
+//! Trainer-level integration: full epochs through chunked artifacts,
+//! adaptive rank swaps, evaluation purity, and the PINN pipeline.
+
+use sketchgrad::config::{ExperimentConfig, Variant};
+use sketchgrad::coordinator::{run_classifier, run_pinn, AdaptiveConfig, Trainer};
+use sketchgrad::data::{make_chunks, synth_mnist, Init};
+use sketchgrad::runtime::Runtime;
+use sketchgrad::util::rng::Rng;
+use std::path::PathBuf;
+
+fn runtime() -> Option<Runtime> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: run `make artifacts` first");
+        return None;
+    }
+    Some(Runtime::new(&dir).expect("runtime"))
+}
+
+#[test]
+fn sketched_chunk_epoch_learns() {
+    let Some(rt) = runtime() else { return };
+    let cfg = ExperimentConfig {
+        name: "it_sk".into(),
+        family: "mnist".into(),
+        variant: Variant::Sketched,
+        rank: 2,
+        adaptive: false,
+        epochs: 2,
+        train_size: 128 * 50,
+        test_size: 128 * 50,
+        seed: 5,
+        ..Default::default()
+    };
+    let run = run_classifier(&rt, &cfg, false).unwrap();
+    assert_eq!(run.epochs.len(), 2);
+    let first = run.epochs[0].mean_loss;
+    let last = run.epochs[1].mean_loss;
+    assert!(last < first, "epoch loss should drop: {first} -> {last}");
+    assert!(run.final_eval_acc.is_finite());
+    // Sketch metrics flowed through.
+    assert!(!run.history[0].z_norm.is_empty());
+    assert!(run.measured_sketch_bytes > 0);
+}
+
+#[test]
+fn rank_swap_preserves_params_and_resets_sketches() {
+    let Some(rt) = runtime() else { return };
+    let mut trainer =
+        Trainer::new(&rt, "mnist_sk_r2_chunk", Init::Xavier(1.0), 7).unwrap();
+    let data = synth_mnist(128 * 50, 7);
+    let mut rng = Rng::new(8);
+    let chunks = make_chunks(&data, 128, 50, &mut rng, &[784]);
+    trainer.run_chunk(&chunks[0]).unwrap();
+
+    let w0_before = trainer.state.get("w0").unwrap().clone();
+    let sketch_before = trainer.state.get("sketch_y").unwrap().clone();
+    assert_eq!(sketch_before.shape(), &[3, 512, 5]);
+
+    trainer.swap_artifact("mnist_sk_r8_chunk").unwrap();
+    // Params carried over identically...
+    assert_eq!(trainer.state.get("w0").unwrap(), &w0_before);
+    // ...sketches re-initialised at the new k = 17, zeroed.
+    let sketch_after = trainer.state.get("sketch_y").unwrap();
+    assert_eq!(sketch_after.shape(), &[3, 512, 17]);
+    assert!(sketch_after.f32_data().unwrap().iter().all(|&v| v == 0.0));
+    // New artifact executes fine with carried state.
+    trainer.run_chunk(&chunks[0]).unwrap();
+    assert!(trainer.history.last().unwrap().loss.is_finite());
+}
+
+#[test]
+fn adaptive_run_switches_executables() {
+    let Some(rt) = runtime() else { return };
+    let cfg = ExperimentConfig {
+        name: "it_adaptive".into(),
+        family: "mnist".into(),
+        variant: Variant::Sketched,
+        rank: 2,
+        adaptive: true,
+        adaptive_cfg: AdaptiveConfig {
+            r0: 2,
+            p_decrease: 10,           // never decrease in this short run
+            p_increase: 1,            // aggressive increase
+            min_rel_improvement: 0.9, // nearly impossible -> stagnation
+            ..Default::default()
+        },
+        epochs: 3,
+        train_size: 128 * 50,
+        test_size: 128 * 50,
+        seed: 9,
+        ..Default::default()
+    };
+    let run = run_classifier(&rt, &cfg, false).unwrap();
+    assert!(
+        !run.rank_decisions.is_empty(),
+        "aggressive stagnation settings must trigger a rank change"
+    );
+}
+
+#[test]
+fn evaluation_does_not_mutate_state() {
+    let Some(rt) = runtime() else { return };
+    let mut trainer =
+        Trainer::new(&rt, "mnist_std_chunk", Init::Xavier(1.0), 11).unwrap();
+    let data = synth_mnist(128 * 50, 11);
+    let mut rng = Rng::new(12);
+    let chunks = make_chunks(&data, 128, 50, &mut rng, &[784]);
+    trainer.run_chunk(&chunks[0]).unwrap();
+    let w0 = trainer.state.get("w0").unwrap().clone();
+    let t = trainer.state.get("t").unwrap().clone();
+    let (_loss, acc) = trainer.evaluate(&chunks[..1]).unwrap();
+    assert!(acc.is_finite());
+    assert_eq!(trainer.state.get("w0").unwrap(), &w0);
+    assert_eq!(trainer.state.get("t").unwrap(), &t);
+}
+
+#[test]
+fn pinn_monitored_matches_standard_quality() {
+    let Some(rt) = runtime() else { return };
+    // Short runs: quality parity (paper Fig. 3's claim) within tolerance.
+    let std = run_pinn(&rt, "standard", 2, 3, 21).unwrap();
+    let mon = run_pinn(&rt, "monitored", 2, 3, 21).unwrap();
+    assert!(std.l2_rel_err.is_finite() && mon.l2_rel_err.is_finite());
+    // Loss trajectories should be very close (monitoring-only sketching
+    // does not touch updates; small divergence only from fp ordering).
+    let d_final =
+        (std.losses.last().unwrap() - mon.losses.last().unwrap()).abs();
+    assert!(
+        d_final < 0.15 * std.losses.last().unwrap().abs().max(1.0),
+        "std {} vs mon {}",
+        std.losses.last().unwrap(),
+        mon.losses.last().unwrap()
+    );
+    // Monitored run produced sketch metrics; standard did not.
+    assert!(!mon.history.is_empty());
+    assert!(mon.sketch_bytes > 0);
+}
