@@ -22,7 +22,7 @@ use sketchgrad::coordinator::{
 };
 use sketchgrad::data::{make_chunks, synth_mnist, Init};
 use sketchgrad::memory::{fmt_bytes, monitor16_dims, MemoryModel};
-use sketchgrad::monitor::{MonitorConfig, MonitorService};
+use sketchgrad::monitor::{MonitorConfig, MonitorHub};
 use sketchgrad::util::cli::Args;
 use sketchgrad::util::rng::Rng;
 
@@ -71,19 +71,29 @@ fn main() -> Result<()> {
 
     println!("\n{}", curve_table(&[&healthy, &problematic]));
 
-    // --- monitor-service diagnosis over the sketch metrics --------------
-    for (label, run) in [("healthy", &healthy), ("problematic", &problematic)] {
-        // Short demo run: shrink the diagnostic window so the detectors
-        // activate within a couple of epochs.
-        let cfg = MonitorConfig {
-            window: 20,
-            ..MonitorConfig::for_rank(4)
-        };
-        let mut svc = MonitorService::new(cfg, 15);
+    // --- hub-multiplexed diagnosis over the sketch metrics ---------------
+    // Both runs monitored as tenants of ONE MonitorHub, each with its own
+    // config and constant-memory rolling state.  Short demo run: shrink
+    // the diagnostic window so the detectors activate within a couple of
+    // epochs.
+    let cfg = MonitorConfig {
+        window: 20,
+        ..MonitorConfig::for_rank(4)
+    };
+    let mut hub = MonitorHub::new();
+    let mut session_ids = Vec::new();
+    for (label, run) in [("healthy", &healthy), ("problematic", &problematic)]
+    {
+        let id = hub.register(label, cfg.clone(), 15);
         for m in &run.history {
-            svc.observe(m);
+            hub.observe(id, m)?;
         }
-        let d = svc.diagnose();
+        hub.report_sketch_bytes(id, run.measured_sketch_bytes)?;
+        session_ids.push((label, id, run));
+    }
+    for (label, id, run) in &session_ids {
+        let session = hub.session(*id)?;
+        let d = session.diagnose();
         let last = run.history.last().unwrap();
         let sr: f32 = last.stable_rank.iter().sum::<f32>()
             / last.stable_rank.len() as f32;
@@ -92,14 +102,21 @@ fn main() -> Result<()> {
         println!(
             "[{label}] final mean ||Z||_F {z:.3}  stable rank {sr:.2}/9  \
              healthy={}  monitor state {}",
-            svc.is_healthy(),
-            fmt_bytes(svc.monitor_bytes()),
+            session.is_healthy(),
+            fmt_bytes(session.monitor_bytes()),
         );
         if !d.notes.is_empty() {
             println!("         detectors: {:?}", d.notes);
         }
         let _ = diagnose_run(run, 4, 15);
     }
+    let report = hub.aggregate();
+    println!(
+        "hub aggregate: {}/{} healthy, monitor state {} across tenants",
+        report.healthy,
+        report.sessions,
+        fmt_bytes(report.monitor_bytes)
+    );
 
     // --- the memory headline --------------------------------------------
     let m = MemoryModel::new(&monitor16_dims(), 128);

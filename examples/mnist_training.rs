@@ -8,6 +8,7 @@ use anyhow::Result;
 use sketchgrad::config::{ExperimentConfig, Variant};
 use sketchgrad::coordinator::experiments::curve_table;
 use sketchgrad::coordinator::{figure_table, open_runtime, run_classifier};
+use sketchgrad::memory::fmt_bytes;
 use sketchgrad::util::cli::Args;
 
 fn main() -> Result<()> {
@@ -16,7 +17,6 @@ fn main() -> Result<()> {
     let train_size = args.opt_usize("train-size", 128 * 50)?;
     args.finish()?;
 
-    let rt = open_runtime()?;
     let mk = |name: &str, variant: Variant, adaptive: bool| ExperimentConfig {
         name: name.into(),
         family: "mnist".into(),
@@ -30,7 +30,20 @@ fn main() -> Result<()> {
         ..Default::default()
     };
 
-    println!("== standard backprop ==");
+    // Modelled sketch footprint per rank, from the engine accountant
+    // (what a native SketchEngine over the MNIST MLP would hold) —
+    // needs no artifacts.
+    println!("sketch memory across the compiled ladder (MNIST 3x512, n_b=128):");
+    for r in [2usize, 4, 8, 16] {
+        let cfg = mk("accountant", Variant::Sketched, false)
+            .sketch_builder(&[512, 512, 512])
+            .rank(r)
+            .build()?;
+        println!("  r={r:>2}: {}", fmt_bytes(cfg.expected_bytes(&[128])));
+    }
+
+    let rt = open_runtime()?;
+    println!("\n== standard backprop ==");
     let std = run_classifier(&rt, &mk("standard", Variant::Standard, false), false)?;
     println!("== sketched backprop (fixed r=2) ==");
     let fixed = run_classifier(&rt, &mk("sketched_r2", Variant::Sketched, false), false)?;

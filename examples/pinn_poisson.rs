@@ -6,6 +6,7 @@
 use anyhow::Result;
 use sketchgrad::coordinator::{open_runtime, run_pinn};
 use sketchgrad::memory::fmt_bytes;
+use sketchgrad::monitor::{MonitorConfig, MonitorHub};
 use sketchgrad::pinn::{exact_field, field_summary};
 use sketchgrad::util::cli::Args;
 
@@ -34,6 +35,37 @@ fn main() -> Result<()> {
             r.l2_rel_err,
             fmt_bytes(r.sketch_bytes)
         );
+    }
+
+    // Both monitored variants as tenants of one MonitorHub: a healthy
+    // PINN run should raise no pathology flags at either rank.
+    let mut hub = MonitorHub::new();
+    for (rank, run) in [(2usize, &mon2), (4, &mon4)] {
+        let cfg = MonitorConfig {
+            window: (run.history.len() / 4).max(5),
+            ..MonitorConfig::for_rank(rank)
+        };
+        let n_layers = run
+            .history
+            .first()
+            .map(|m| m.z_norm.len())
+            .unwrap_or(0);
+        let id = hub.register(&run.label, cfg, n_layers);
+        for m in &run.history {
+            hub.observe(id, m)?;
+        }
+        hub.report_sketch_bytes(id, run.sketch_bytes)?;
+    }
+    let report = hub.aggregate();
+    println!(
+        "\nmonitor hub: {}/{} sessions healthy, monitor state {}, sketch state {}",
+        report.healthy,
+        report.sessions,
+        fmt_bytes(report.monitor_bytes),
+        fmt_bytes(report.sketch_bytes)
+    );
+    for (_, name, d) in &report.flagged {
+        println!("  flagged {name}: {:?}", d.notes);
     }
 
     // Paper claim: identical solution quality across variants (Fig. 3/4).

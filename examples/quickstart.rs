@@ -1,11 +1,17 @@
 //! Quickstart: the smallest end-to-end use of the public API.
 //!
-//! Loads the single-step MNIST artifacts (standard + sketched r=2),
-//! runs a handful of optimizer steps on synthetic data through the PJRT
-//! runtime, and prints side-by-side losses plus the sketch-derived
-//! monitoring metrics — the whole three-layer stack in ~80 lines.
+//! Part 1 needs nothing but the crate: a `SketchEngine` built through
+//! `SketchConfigBuilder` ingests a heterogeneous-width activation stream
+//! (including a tail batch) and reports metrics + memory.
 //!
-//! Run: `make artifacts && cargo run --release --example quickstart`
+//! Part 2 (skipped gracefully when artifacts are absent) loads the
+//! single-step MNIST artifacts (standard + sketched r=2), runs a handful
+//! of optimizer steps on synthetic data through the PJRT runtime, and
+//! prints side-by-side losses plus the sketch-derived monitoring metrics
+//! — the whole three-layer stack.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (build artifacts first with `make artifacts` for part 2)
 
 use std::collections::HashMap;
 
@@ -14,11 +20,59 @@ use sketchgrad::coordinator::{init_state, open_runtime};
 use sketchgrad::data::{synth_mnist, Init};
 use sketchgrad::memory::fmt_bytes;
 use sketchgrad::runtime::Tensor;
+use sketchgrad::sketch::{Mat, SketchConfig, Sketcher};
 use sketchgrad::util::rng::Rng;
 
 fn main() -> Result<()> {
-    let rt = open_runtime()?;
-    println!("PJRT platform: {}", rt.platform());
+    // ---- Part 1: native SketchEngine on a funnel MLP ----------------
+    let mut engine = SketchConfig::builder()
+        .layer_dims(&[128, 64, 32]) // heterogeneous hidden widths
+        .rank(2)
+        .beta(0.9)
+        .seed(42)
+        .build_engine()?;
+    let mut rng = Rng::new(7);
+    println!("SketchEngine: dims 128/64/32, k = {}", engine.k());
+    for step in 0..8 {
+        // Tail batch on the last step — smaller than the nominal 32.
+        let n_b = if step == 7 { 11 } else { 32 };
+        let acts = vec![
+            Mat::gaussian(n_b, 784, &mut rng), // input batch
+            Mat::gaussian(n_b, 128, &mut rng),
+            Mat::gaussian(n_b, 64, &mut rng),
+            Mat::gaussian(n_b, 32, &mut rng),
+        ];
+        engine.ingest(&acts)?;
+    }
+    for (l, m) in engine.metrics().iter().enumerate() {
+        println!(
+            "  layer {l}: ||Z||_F {:>7.3}  stable rank {:.2}/{}",
+            m.z_norm,
+            m.stable_rank,
+            engine.k()
+        );
+    }
+    println!(
+        "  batch sizes seen {:?}; engine memory {} (accountant {})",
+        engine.batch_sizes_seen(),
+        fmt_bytes(engine.memory()),
+        fmt_bytes(
+            engine
+                .config()
+                .expected_bytes(&engine.batch_sizes_seen())
+        ),
+    );
+
+    // ---- Part 2: the AOT three-layer stack --------------------------
+    let rt = match open_runtime() {
+        Ok(rt) => rt,
+        Err(e) => {
+            println!("\nskipping AOT part (artifacts not built): {e:#}");
+            println!("quickstart OK");
+            return Ok(());
+        }
+    };
+    println!("\nPJRT platform: {}", rt.platform());
 
     let std_exe = rt.load("mnist_std_step")?;
     let sk_exe = rt.load("mnist_sk_r2_step")?;

@@ -8,7 +8,7 @@ use sketchgrad::coordinator::{StepMetrics, Trainer};
 use sketchgrad::coordinator::open_runtime;
 use sketchgrad::data::{make_chunks, synth_mnist, Init};
 use sketchgrad::memory::{fmt_bytes, monitor16_dims, MemoryModel};
-use sketchgrad::monitor::{MonitorConfig, MonitorService};
+use sketchgrad::monitor::{MonitorConfig, MonitorHub};
 use sketchgrad::util::rng::Rng;
 
 fn main() {
@@ -50,15 +50,19 @@ fn main() {
     }
     println!("paper shape: healthy stable rank ~9 (full), problematic collapsed (~3).\n");
 
-    // Monitor-service ingestion throughput (pure L3 hot path).
+    // Hub ingestion throughput (pure L3 hot path): two tenants fed the
+    // same 20-step sample, aggregate diagnosis at the end.
     let mut bench = Bench::new(3, 20);
     let sample: Vec<StepMetrics> = results[0].1.clone();
-    bench.run("monitor_service.observe x20steps", Some((20.0, "steps/s")), || {
-        let mut svc = MonitorService::new(MonitorConfig::for_rank(4), 15);
+    bench.run("hub.observe 2 tenants x20steps", Some((40.0, "steps/s")), || {
+        let mut hub = MonitorHub::new();
+        let a = hub.register("healthy", MonitorConfig::for_rank(4), 15);
+        let b = hub.register("problematic", MonitorConfig::for_rank(4), 15);
         for m in &sample {
-            svc.observe(m);
+            hub.observe(a, m).unwrap();
+            hub.observe(b, m).unwrap();
         }
-        let _ = svc.diagnose();
+        let _ = hub.aggregate();
     });
 
     let m = MemoryModel::new(&monitor16_dims(), 128);

@@ -9,7 +9,7 @@ use sketchgrad::baselines::checkpoint::{
 use sketchgrad::baselines::FullMonitor;
 use sketchgrad::benchkit::Bench;
 use sketchgrad::memory::{fmt_bytes, mnist_dims, monitor16_dims, MemoryModel};
-use sketchgrad::sketch::{LayerSketches, Mat};
+use sketchgrad::sketch::{Mat, SketchConfig, Sketcher};
 use sketchgrad::util::rng::Rng;
 
 fn main() {
@@ -36,7 +36,14 @@ fn main() {
     let mm = MemoryModel::new(&monitor16_dims(), 128);
     let mut rng = Rng::new(42);
     // Measured: actually allocate the baseline + the sketch state.
-    let sketches = LayerSketches::new(15, 1024, 128, 4, 0.9, &mut rng);
+    let mut engine = SketchConfig::builder()
+        .uniform_dims(15, 1024)
+        .rank(4)
+        .beta(0.9)
+        .seed(42)
+        .build_engine()
+        .unwrap();
+    engine.ensure_projections(128);
     for t in [1usize, 5, 10] {
         let mut full = FullMonitor::new(t);
         for step in 0..t {
@@ -51,7 +58,7 @@ fn main() {
             t,
             fmt_bytes(mm.monitoring_traditional(t)),
             fmt_bytes(full.bytes()),
-            fmt_bytes(sketches.runtime_bytes()),
+            fmt_bytes(engine.memory()),
             100.0 * mm.monitoring_reduction(t, 4),
         );
     }
@@ -71,7 +78,8 @@ fn main() {
         let _ = full.latest_stable_ranks();
     });
     bench.run("sketch.metrics (mnist arch, r=4)", None, || {
-        for t in &sketches.layers[..3.min(sketches.layers.len())] {
+        let layers = engine.layers();
+        for t in &layers[..3.min(layers.len())] {
             let _ = sketchgrad::sketch::metrics::triplet_metrics(t, 24);
         }
     });

@@ -5,8 +5,7 @@
 use sketchgrad::benchkit::Bench;
 use sketchgrad::coordinator::open_runtime;
 use sketchgrad::runtime::Tensor;
-use sketchgrad::sketch::reconstruct::reconstruct_batch;
-use sketchgrad::sketch::{eig, Mat, Projections, SketchTriplet};
+use sketchgrad::sketch::{eig, Mat, SketchConfig, Sketcher};
 use sketchgrad::util::rng::Rng;
 
 fn main() {
@@ -50,15 +49,20 @@ fn main() {
             },
         );
 
-        // Native comparison at the same rank.
-        let proj = Projections::sample(n_b, 1, r, &mut rng);
-        let mut t = SketchTriplet::zeros(d, r, 0.0);
-        t.update(&a, &a, &proj, 0);
+        // Native comparison at the same rank (beta=0: pure batch sketch).
+        let mut engine = SketchConfig::builder()
+            .layer_dims(&[d])
+            .rank(r)
+            .beta(0.0)
+            .seed(42 + r as u64)
+            .build_engine()
+            .unwrap();
+        engine.ingest(&[a.clone(), a.clone()]).unwrap();
         bench.run(
             &format!("native_recon r={r}"),
             Some((1.0, "calls/s")),
             || {
-                let _ = reconstruct_batch(&t, &proj.omega);
+                let _ = engine.reconstruct(0).unwrap();
             },
         );
     }

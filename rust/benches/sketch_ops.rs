@@ -1,13 +1,12 @@
-//! Micro-benchmarks for the native sketching substrate hot paths: EMA
-//! triplet update, fused vs unfused reconstruction (the L3 perf item), and
-//! the monitoring metric kernels.  Run: `cargo bench --bench sketch_ops`.
+//! Micro-benchmarks for the native sketching substrate hot paths: engine
+//! ingest (EMA triplet update), fused vs unfused reconstruction (the L3
+//! perf item), and the monitoring metric kernels.
+//! Run: `cargo bench --bench sketch_ops`.
 
 use sketchgrad::benchkit::Bench;
-use sketchgrad::sketch::metrics::{stable_rank_power, triplet_metrics};
-use sketchgrad::sketch::reconstruct::{
-    reconstruct_batch, reconstruct_batch_unfused,
-};
-use sketchgrad::sketch::{Mat, Projections, SketchTriplet};
+use sketchgrad::sketch::metrics::stable_rank_power;
+use sketchgrad::sketch::reconstruct::reconstruct_batch_unfused;
+use sketchgrad::sketch::{Mat, SketchConfig, Sketcher};
 use sketchgrad::util::rng::Rng;
 
 fn main() {
@@ -16,37 +15,45 @@ fn main() {
     let mut rng = Rng::new(42);
 
     for rank in [2usize, 4, 8, 16] {
-        let proj = Projections::sample(n_b, 1, rank, &mut rng);
+        let mut engine = SketchConfig::builder()
+            .layer_dims(&[d])
+            .rank(rank)
+            .beta(0.95)
+            .seed(42)
+            .build_engine()
+            .unwrap();
         let a = Mat::gaussian(n_b, d, &mut rng);
-        let mut t = SketchTriplet::zeros(d, rank, 0.95);
-        t.update(&a, &a, &proj, 0);
+        let acts = vec![a.clone(), a];
+        engine.ingest(&acts).unwrap();
 
         bench.run(
-            &format!("ema_triplet_update r={rank}"),
+            &format!("engine_ingest r={rank}"),
             Some((1.0, "updates/s")),
             || {
-                t.update(&a, &a, &proj, 0);
+                engine.ingest(&acts).unwrap();
             },
         );
         bench.run(
             &format!("reconstruct_fused r={rank}"),
             Some((1.0, "recon/s")),
             || {
-                let _ = reconstruct_batch(&t, &proj.omega);
+                let _ = engine.reconstruct(0).unwrap();
             },
         );
+        let t = &engine.layers()[0];
+        let omega = &engine.projections(n_b).unwrap().omega;
         bench.run(
             &format!("reconstruct_unfused(dxd) r={rank}"),
             Some((1.0, "recon/s")),
             || {
-                let _ = reconstruct_batch_unfused(&t, &proj.omega);
+                let _ = reconstruct_batch_unfused(t, omega);
             },
         );
         bench.run(
             &format!("monitor_metrics r={rank}"),
             Some((1.0, "evals/s")),
             || {
-                let _ = triplet_metrics(&t, 24);
+                let _ = engine.metrics();
             },
         );
     }

@@ -7,6 +7,7 @@ use std::path::Path;
 use anyhow::{bail, Result};
 
 use crate::coordinator::AdaptiveConfig;
+use crate::sketch::SketchConfigBuilder;
 use crate::util::toml::Toml;
 
 #[derive(Clone, Debug, PartialEq)]
@@ -43,6 +44,8 @@ pub struct ExperimentConfig {
     pub family: String,
     pub variant: Variant,
     pub rank: usize,
+    /// EMA decay for the sketch triplets (paper §4.1).
+    pub beta: f64,
     pub adaptive: bool,
     pub adaptive_cfg: AdaptiveConfig,
     pub epochs: usize,
@@ -59,6 +62,7 @@ impl Default for ExperimentConfig {
             family: "mnist".into(),
             variant: Variant::Standard,
             rank: 2,
+            beta: 0.9,
             adaptive: false,
             adaptive_cfg: AdaptiveConfig::default(),
             epochs: 5,
@@ -96,6 +100,7 @@ impl ExperimentConfig {
                 d.variant.as_str(),
             )?)?,
             rank: t.usize_or("sketch.rank", d.rank)?,
+            beta: t.f64_or("sketch.beta", d.beta)?,
             adaptive: t.bool_or("sketch.adaptive", d.adaptive)?,
             adaptive_cfg,
             epochs: t.usize_or("experiment.epochs", d.epochs)?,
@@ -120,9 +125,22 @@ impl ExperimentConfig {
         }
     }
 
+    /// Seed a `SketchConfigBuilder` from this experiment (rank, beta,
+    /// seed); the caller supplies the architecture's hidden widths.
+    pub fn sketch_builder(&self, layer_dims: &[usize]) -> SketchConfigBuilder {
+        SketchConfigBuilder::default()
+            .layer_dims(layer_dims)
+            .rank(self.rank)
+            .beta(self.beta)
+            .seed(self.seed)
+    }
+
     pub fn validate(&self) -> Result<()> {
         if self.epochs == 0 {
             bail!("epochs must be > 0");
+        }
+        if !(0.0..1.0).contains(&self.beta) {
+            bail!("beta {} outside [0, 1)", self.beta);
         }
         if self.variant != Variant::Standard
             && !self.adaptive_cfg.ladder.contains(&self.rank)
@@ -172,6 +190,10 @@ p_decrease = 4
         .unwrap();
         let c = ExperimentConfig::from_toml(&t).unwrap();
         assert_eq!(c.name, "fig1");
+        assert_eq!(c.beta, 0.9);
+        let sk = c.sketch_builder(&[128, 64]).build().unwrap();
+        assert_eq!(sk.rank, c.rank);
+        assert_eq!(sk.layer_dims, vec![128, 64]);
         assert_eq!(c.variant, Variant::Sketched);
         assert_eq!(c.epochs, 50);
         assert!(c.adaptive);

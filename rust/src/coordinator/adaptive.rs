@@ -7,7 +7,10 @@
 //! rank that would grow past `tau_reset` snaps back to `r0`.  Because AOT
 //! artifacts have fixed shapes, requested ranks snap to the compiled
 //! ladder (r in {2,4,8,16}); each change triggers sketch/projection
-//! re-initialisation in the trainer (`swap_artifact`).
+//! re-initialisation in the trainer (`swap_artifact`) or, on the native
+//! path, directly in a `SketchEngine` via `observe_with_engine`.
+
+use crate::sketch::{SketchEngine, Sketcher};
 
 #[derive(Clone, Debug)]
 pub struct AdaptiveConfig {
@@ -122,6 +125,25 @@ impl AdaptiveRank {
         }
         decision
     }
+
+    /// Native-substrate variant of the AOT `swap_artifact` path: feed one
+    /// epoch's loss and apply any rank change directly to a
+    /// [`SketchEngine`] (zeroed sketches + resampled projections at the
+    /// new k, Algorithm 1 lines 16/21/23).
+    pub fn observe_with_engine(
+        &mut self,
+        epoch_loss: f64,
+        engine: &mut SketchEngine,
+    ) -> RankDecision {
+        let decision = self.observe(epoch_loss);
+        match decision {
+            RankDecision::Keep => {}
+            RankDecision::Decrease(r)
+            | RankDecision::Increase(r)
+            | RankDecision::Reset(r) => engine.set_rank(r),
+        }
+        decision
+    }
 }
 
 /// Snap a requested rank to the nearest compiled ladder entry (ties go
@@ -214,6 +236,25 @@ mod tests {
             a.observe(1.0 / (i + 1) as f64);
         }
         assert_eq!(a.rank, 2);
+    }
+
+    #[test]
+    fn engine_rank_follows_controller() {
+        use crate::sketch::SketchConfig;
+        let mut engine = SketchConfig::builder()
+            .uniform_dims(2, 16)
+            .rank(8)
+            .build_engine()
+            .unwrap();
+        let mut a = AdaptiveRank::new(AdaptiveConfig { r0: 8, ..cfg() });
+        a.observe_with_engine(1.0, &mut engine);
+        match a.observe_with_engine(0.5, &mut engine) {
+            RankDecision::Decrease(r) => {
+                assert_eq!(engine.config().rank, r);
+                assert_eq!(engine.k(), 2 * r + 1);
+            }
+            d => panic!("expected decrease, got {d:?}"),
+        }
     }
 
     #[test]

@@ -9,7 +9,7 @@ use anyhow::{Context, Result};
 use crate::config::{ExperimentConfig, Variant};
 use crate::data::{make_chunks, synth_cifar, synth_mnist, Dataset, Init, PoissonSampler};
 use crate::memory::{fmt_bytes, MemoryModel};
-use crate::monitor::{MonitorConfig, MonitorService};
+use crate::monitor::{MonitorConfig, MonitorHub};
 use crate::runtime::{Runtime, Tensor};
 use crate::util::rng::Rng;
 
@@ -134,6 +134,9 @@ pub fn run_classifier(
                 .as_ref()
                 .map(|a| a.rank)
                 .unwrap_or(cfg.rank);
+            // Uniform AOT formula (psi stored as f32 tensors) so the
+            // modeled column stays comparable to measured_sketch_bytes;
+            // native engines use MemoryModel::engine_state (f64 psi).
             model.sketch_state(rank)
         }
     };
@@ -153,13 +156,18 @@ pub fn run_classifier(
     })
 }
 
-/// Feed a finished run's history through the monitor service and diagnose.
-pub fn diagnose_run(run: &VariantRun, rank: usize, n_layers: usize) -> crate::monitor::Diagnosis {
-    let mut svc = MonitorService::new(MonitorConfig::for_rank(rank), n_layers);
-    for m in &run.history {
-        svc.observe(m);
-    }
-    svc.diagnose()
+/// Feed a finished run's history through a hub-managed monitor session
+/// and diagnose.
+pub fn diagnose_run(
+    run: &VariantRun,
+    rank: usize,
+    n_layers: usize,
+) -> crate::monitor::Diagnosis {
+    MonitorHub::diagnose_history(
+        MonitorConfig::for_rank(rank),
+        n_layers,
+        &run.history,
+    )
 }
 
 /// PINN experiment (Figs. 3-4): chunked Adam steps on sampled collocation

@@ -114,11 +114,21 @@ impl<'rt> Trainer<'rt> {
             extra.insert("batch_y", chunk.ys.clone());
             let inputs = self.state.ordered_inputs(&self.exe.entry, &extra)?;
             let outputs = self.exe.run(&inputs)?;
-            // Peek metrics without touching self.state.
-            let mut state = self.state.clone();
-            let metrics = state.absorb_outputs(&self.exe.entry, outputs)?;
-            let loss = metrics.get("loss").context("no loss")?;
-            let acc = metrics.get("accuracy").context("no accuracy")?;
+            // Peek only the loss/accuracy outputs by position — no state
+            // clone, no absorption.
+            let idx_of = |name: &str| {
+                self.exe
+                    .entry
+                    .outputs
+                    .iter()
+                    .position(|spec| spec.name == name)
+            };
+            let loss = idx_of("loss")
+                .and_then(|i| outputs.get(i))
+                .context("no loss output")?;
+            let acc = idx_of("accuracy")
+                .and_then(|i| outputs.get(i))
+                .context("no accuracy output")?;
             losses.extend_from_slice(loss.f32_data()?);
             accs.extend_from_slice(acc.f32_data()?);
         }
@@ -143,6 +153,12 @@ impl<'rt> Trainer<'rt> {
                 .unwrap_or_default()
         };
         let losses = loss.f32_data()?;
+        if losses.is_empty() {
+            anyhow::bail!(
+                "artifact {:?} produced an empty loss output for a {steps}-step chunk",
+                self.exe.entry.name
+            );
+        }
         let accs = get_vec("accuracy");
         let pde = get_vec("pde_mse");
         let bc = get_vec("bc_mse");

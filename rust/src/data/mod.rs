@@ -7,4 +7,4 @@ pub mod synth;
 
 pub use batcher::{make_chunks, Chunk, Prefetcher};
 pub use init::{init_conv, init_mlp, zeros_like, Init};
-pub use synth::{synth_cifar, synth_mnist, Dataset, PoissonSampler};
+pub use synth::{synth_cifar, synth_mnist, ActStream, Dataset, PoissonSampler};

@@ -14,6 +14,7 @@
 //!   correlated textures (mixtures of oriented sinusoids per channel) so
 //!   conv features are genuinely useful, + noise.
 
+use crate::sketch::Mat;
 use crate::util::rng::Rng;
 
 /// A labelled dense dataset (row-major images).
@@ -223,9 +224,85 @@ impl PoissonSampler {
     }
 }
 
+/// Synthetic per-step activation stream for engine demos and tests (the
+/// `sketchgrad hub` tenants and the hub integration test share this).
+///
+/// Healthy runs emit full-rank gaussian hidden activations and a decaying
+/// loss; problematic runs collapse every layer onto one fixed direction
+/// with a flat loss — the paper's lost-gradient-diversity signature
+/// (§5.3), which the monitor's stable-rank detector must flag.
+pub struct ActStream {
+    dims: Vec<usize>,
+    problematic: bool,
+    /// One fixed direction per layer for the collapsed regime.
+    fixed_dirs: Vec<Mat>,
+    rng: Rng,
+}
+
+impl ActStream {
+    pub fn new(dims: &[usize], problematic: bool, seed: u64) -> Self {
+        let mut rng = Rng::new(seed ^ 0xAC75);
+        let fixed_dirs = dims
+            .iter()
+            .map(|&d| Mat::gaussian(1, d, &mut rng))
+            .collect();
+        ActStream {
+            dims: dims.to_vec(),
+            problematic,
+            fixed_dirs,
+            rng,
+        }
+    }
+
+    /// One forward pass: input batch + one activation per hidden layer,
+    /// all with `n_b` rows — ready for `SketchEngine::ingest`.
+    pub fn next_batch(&mut self, n_b: usize) -> Vec<Mat> {
+        let mut acts = vec![Mat::gaussian(n_b, 32, &mut self.rng)];
+        for l in 0..self.dims.len() {
+            let d = self.dims[l];
+            let a = if self.problematic {
+                Mat::gaussian(n_b, 1, &mut self.rng)
+                    .matmul(&self.fixed_dirs[l])
+                    .scale(0.05)
+            } else {
+                Mat::gaussian(n_b, d, &mut self.rng)
+            };
+            acts.push(a);
+        }
+        acts
+    }
+
+    /// Loss trace to pair with step `step` of `total`: flat at ~ln(10)
+    /// when problematic, exponential decay toward 0.1 otherwise.
+    pub fn loss_at(&self, step: usize, total: usize) -> f32 {
+        if self.problematic {
+            2.3
+        } else {
+            2.2 * (-3.0 * (step + 1) as f32 / total.max(1) as f32).exp() + 0.1
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn act_stream_shapes_and_regimes() {
+        let mut healthy = ActStream::new(&[8, 4], false, 1);
+        let acts = healthy.next_batch(6);
+        assert_eq!(acts.len(), 3);
+        assert_eq!((acts[1].rows, acts[1].cols), (6, 8));
+        assert_eq!((acts[2].rows, acts[2].cols), (6, 4));
+        assert!(healthy.loss_at(0, 10) > healthy.loss_at(9, 10));
+
+        let mut bad = ActStream::new(&[8], true, 2);
+        let b = &bad.next_batch(5)[1];
+        // Collapsed regime: every 2x2 minor of a rank-1 matrix vanishes.
+        let minor = b[(0, 0)] * b[(1, 1)] - b[(0, 1)] * b[(1, 0)];
+        assert!(minor.abs() < 1e-12, "minor {minor}");
+        assert_eq!(bad.loss_at(0, 10), bad.loss_at(9, 10));
+    }
 
     #[test]
     fn mnist_shapes_and_determinism() {

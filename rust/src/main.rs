@@ -6,9 +6,14 @@
 //!   fig2          CIFAR hybrid CNN-MLP (Figure 2)
 //!   pinn          2D Poisson PINN with monitoring (Figures 3-4)
 //!   monitor       healthy vs problematic 16-layer MLPs (Figure 5)
+//!   hub           K concurrent monitored runs through one MonitorHub
+//!                 (native substrate — no artifacts needed)
 //!   memory-table  §4.7 / §5.3 memory models (TAB-MEM1/2)
 //!   bound-check   Thm 4.2 sqrt(6)·tau_{r+1} validation
 //!   info          manifest + platform summary
+
+use std::sync::mpsc;
+use std::thread;
 
 use anyhow::{bail, Result};
 
@@ -18,11 +23,13 @@ use sketchgrad::coordinator::{
     diagnose_run, figure_table, open_runtime, run_classifier, run_pinn,
     Trainer, VariantRun,
 };
-use sketchgrad::data::{make_chunks, synth_mnist, Init};
+use sketchgrad::coordinator::StepMetrics;
+use sketchgrad::data::{make_chunks, synth_mnist, ActStream, Init};
 use sketchgrad::memory::{fmt_bytes, mnist_dims, monitor16_dims, MemoryModel};
+use sketchgrad::monitor::{step_metrics, MonitorConfig, MonitorHub};
 use sketchgrad::pinn::field_summary;
 use sketchgrad::runtime::{Runtime, Tensor};
-use sketchgrad::sketch::{eig, Mat};
+use sketchgrad::sketch::{eig, engine_state_bytes, Mat, SketchConfig, Sketcher};
 use sketchgrad::util::cli::Args;
 use sketchgrad::util::rng::Rng;
 
@@ -39,11 +46,12 @@ fn main() -> Result<()> {
         "fig2" => cmd_fig2(&mut args),
         "pinn" => cmd_pinn(&mut args),
         "monitor" => cmd_monitor(&mut args),
+        "hub" => cmd_hub(&mut args),
         "memory-table" => cmd_memory_table(&mut args),
         "bound-check" => cmd_bound_check(&mut args),
         "info" => cmd_info(),
         other => bail!(
-            "unknown command {other:?}; try train|fig1|fig2|pinn|monitor|memory-table|bound-check|info"
+            "unknown command {other:?}; try train|fig1|fig2|pinn|monitor|hub|memory-table|bound-check|info"
         ),
     }
 }
@@ -221,6 +229,208 @@ fn cmd_monitor(args: &mut Args) -> Result<()> {
         fmt_bytes(m.monitoring_sketched(4)),
         100.0 * m.monitoring_reduction(5, 4)
     );
+    Ok(())
+}
+
+/// Heterogeneous architecture menu for hub tenants (hidden widths per
+/// sketched layer) — every session gets a different shape to exercise the
+/// per-layer-width path.
+const HUB_ARCHS: [&[usize]; 4] = [
+    &[128, 64, 32],
+    &[96, 96],
+    &[160, 80, 40, 20],
+    &[64, 48, 32],
+];
+
+enum HubMsg {
+    Step { idx: usize, metrics: StepMetrics },
+    Done { idx: usize, measured_bytes: usize },
+}
+
+/// `sketchgrad hub --sessions K`: K concurrent monitored training runs —
+/// one thread + one `SketchEngine` each, heterogeneous hidden widths, a
+/// tail batch smaller than the nominal n_b — multiplexed through a single
+/// `MonitorHub`.  The last session is deliberately pathological
+/// (direction-collapsed activations + flat loss) and must be the only one
+/// flagged; every session's measured engine memory must match the fixed
+/// accountant within 1%.  Runs entirely on the native substrate, so no
+/// AOT artifacts are required.
+fn cmd_hub(args: &mut Args) -> Result<()> {
+    let sessions = args.opt_usize("sessions", 3)?;
+    let steps = args.opt_usize("steps", 160)?;
+    let n_b = args.opt_usize("batch", 64)?;
+    let rank = args.opt_usize("rank", 4)?;
+    let seed = args.opt_u64("seed", 42)?;
+    args.finish()?;
+    if sessions == 0 {
+        bail!("--sessions must be > 0");
+    }
+    if steps < 20 {
+        bail!("--steps must be >= 20 for a meaningful diagnostic window");
+    }
+    let tail = (n_b / 3).max(1);
+    let window = (steps / 4).clamp(5, 50);
+    println!(
+        "MonitorHub demo: {sessions} concurrent monitored runs, \
+         {steps} steps each, n_b={n_b} (tail batch {tail}), r={rank}"
+    );
+
+    let mut hub = MonitorHub::new();
+    let mut ids = Vec::new();
+    for idx in 0..sessions {
+        let dims = HUB_ARCHS[idx % HUB_ARCHS.len()];
+        let problematic = idx == sessions - 1;
+        let label = format!(
+            "run{idx}[{}]{}",
+            dims.iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join("/"),
+            if problematic { " (problematic)" } else { "" }
+        );
+        let cfg = MonitorConfig {
+            window,
+            collapse_frac: 0.25,
+            ..MonitorConfig::for_rank(rank)
+        };
+        ids.push(hub.register(&label, cfg, dims.len()));
+    }
+
+    // One producer thread per tenant; the hub consumes on this thread.
+    let (tx, rx) = mpsc::channel::<HubMsg>();
+    let mut handles = Vec::new();
+    for idx in 0..sessions {
+        let dims: Vec<usize> = HUB_ARCHS[idx % HUB_ARCHS.len()].to_vec();
+        let problematic = idx == sessions - 1;
+        let tx = tx.clone();
+        handles.push(thread::spawn(move || {
+            run_hub_session(
+                idx,
+                &dims,
+                rank,
+                seed + idx as u64,
+                steps,
+                n_b,
+                tail,
+                problematic,
+                &tx,
+            )
+        }));
+    }
+    drop(tx);
+
+    let mut measured = vec![0usize; sessions];
+    for msg in rx {
+        match msg {
+            HubMsg::Step { idx, metrics } => hub.observe(ids[idx], &metrics)?,
+            HubMsg::Done {
+                idx,
+                measured_bytes,
+            } => {
+                measured[idx] = measured_bytes;
+                hub.report_sketch_bytes(ids[idx], measured_bytes)?;
+            }
+        }
+    }
+    for h in handles {
+        h.join()
+            .map_err(|_| anyhow::anyhow!("hub session thread panicked"))??;
+    }
+
+    println!("\n| session | steps | sketch bytes (measured) | accountant | healthy |");
+    println!("|---|---|---|---|---|");
+    let mut self_check_ok = true;
+    for idx in 0..sessions {
+        let dims = HUB_ARCHS[idx % HUB_ARCHS.len()];
+        let problematic = idx == sessions - 1;
+        // The fixed accountant, computed independently of the engine:
+        // nominal batches plus the final tail batch were observed
+        // (engine_state_bytes dedups if tail == n_b).
+        let expected = engine_state_bytes(dims, rank, &[n_b, tail], 4);
+        let session = hub.session(ids[idx])?;
+        let healthy = session.is_healthy();
+        let rel = (measured[idx] as f64 - expected as f64).abs()
+            / expected as f64;
+        println!(
+            "| {} | {} | {} | {} | {} |",
+            session.name,
+            session.steps_seen(),
+            fmt_bytes(measured[idx]),
+            fmt_bytes(expected),
+            healthy
+        );
+        if rel > 0.01 {
+            bail!(
+                "session {idx}: measured {} vs accountant {} ({:.2}% off)",
+                measured[idx],
+                expected,
+                100.0 * rel
+            );
+        }
+        if healthy == problematic {
+            self_check_ok = false;
+            println!(
+                "  !! session {idx} mis-diagnosed \
+                 (problematic={problematic}, healthy={healthy}): {:?}",
+                session.diagnose()
+            );
+        }
+    }
+
+    let report = hub.aggregate();
+    println!(
+        "\naggregate: {} sessions, {} healthy, {} flagged; \
+         monitor state {} + tenant sketch state {}",
+        report.sessions,
+        report.healthy,
+        report.flagged.len(),
+        fmt_bytes(report.monitor_bytes),
+        fmt_bytes(report.sketch_bytes),
+    );
+    for (id, name, d) in &report.flagged {
+        println!("  flagged {id} {name}: {:?}", d.notes);
+    }
+    if !self_check_ok {
+        bail!("hub self-check failed: diagnosis did not match session design");
+    }
+    println!("hub OK");
+    Ok(())
+}
+
+/// Tenant worker: feeds a synthetic training run's activation stream
+/// through a private `SketchEngine`, emitting per-step metrics.
+#[allow(clippy::too_many_arguments)]
+fn run_hub_session(
+    idx: usize,
+    dims: &[usize],
+    rank: usize,
+    seed: u64,
+    steps: usize,
+    n_b: usize,
+    tail: usize,
+    problematic: bool,
+    tx: &mpsc::Sender<HubMsg>,
+) -> Result<()> {
+    let mut engine = SketchConfig::builder()
+        .layer_dims(dims)
+        .rank(rank)
+        .beta(0.9)
+        .seed(seed)
+        .build_engine()?;
+    let mut stream = ActStream::new(dims, problematic, seed);
+    for step in 0..steps {
+        let nb = if step == steps - 1 { tail } else { n_b };
+        engine.ingest(&stream.next_batch(nb))?;
+        let loss = stream.loss_at(step, steps);
+        let metrics = step_metrics(loss, &engine.metrics());
+        if tx.send(HubMsg::Step { idx, metrics }).is_err() {
+            bail!("hub receiver hung up");
+        }
+    }
+    let _ = tx.send(HubMsg::Done {
+        idx,
+        measured_bytes: engine.memory(),
+    });
     Ok(())
 }
 

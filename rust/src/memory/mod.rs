@@ -3,6 +3,7 @@
 //! runtime state.  All figures' "memory" panels are generated from here.
 
 use crate::baselines::checkpoint;
+use crate::sketch::engine_state_bytes;
 
 /// Byte model for one experiment configuration.
 #[derive(Clone, Debug)]
@@ -42,7 +43,8 @@ impl MemoryModel {
     }
 
     /// Per-iteration sketch state at rank r (replaces hidden-activation
-    /// storage; input batch remains resident in both regimes).
+    /// storage; input batch remains resident in both regimes).  Uniform
+    /// paper formula — kept for the §4.7/§5.3 tables.
     pub fn sketch_state(&self, r: usize) -> usize {
         checkpoint::sketch_state_bytes(
             self.n_hidden(),
@@ -50,6 +52,21 @@ impl MemoryModel {
             self.n_b,
             r,
         )
+    }
+
+    /// Heterogeneous-width engine accountant: the exact bytes a native
+    /// `SketchEngine` over this architecture's hidden layers holds at
+    /// rank r with this model's single batch size (delegates to
+    /// [`engine_state_bytes`], incl. Psi at its stored f64 width).  Use
+    /// `sketch_state` when modelling the AOT path, whose psi tensors are
+    /// f32.
+    pub fn engine_state(&self, r: usize) -> usize {
+        engine_state_bytes(self.hidden_dims(), r, &[self.n_b], 4)
+    }
+
+    /// The hidden-layer widths d_1..d_H (heterogeneous allowed).
+    pub fn hidden_dims(&self) -> &[usize] {
+        &self.dims[1..self.dims.len() - 1]
     }
 
     /// Per-iteration reduction fraction at rank r (hidden activations ->
@@ -171,6 +188,19 @@ mod tests {
         assert!(red2 > red16, "more rank -> less reduction");
         assert!(red2 > 0.8, "r=2 reduction {red2}");
         assert!(red16 > 0.1, "r=16 reduction {red16}");
+    }
+
+    #[test]
+    fn engine_accountant_matches_uniform_formula_up_to_psi_width() {
+        // engine_state counts Psi at its stored 8 B; the legacy uniform
+        // formula charged 4 B.  Everything else must agree exactly.
+        let m = MemoryModel::new(&mnist_dims(), 128);
+        for r in [2usize, 4, 8] {
+            let k = 2 * r + 1;
+            let psi_delta = m.n_hidden() * k * 4;
+            assert_eq!(m.engine_state(r), m.sketch_state(r) + psi_delta);
+        }
+        assert_eq!(m.hidden_dims(), &[512, 512, 512]);
     }
 
     #[test]

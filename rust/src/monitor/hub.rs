@@ -1,0 +1,335 @@
+//! Multi-tenant monitoring: one `MonitorHub` multiplexes N independent
+//! `MonitorSession`s, one per concurrent training run.
+//!
+//! Each session owns its own `MonitorConfig` and constant-memory
+//! `Rolling` state (via an embedded [`MonitorService`]), so the hub's
+//! footprint is O(sessions) and independent of monitoring duration — the
+//! paper's §4.6 memory story, multiplied across tenants.  The hub also
+//! aggregates diagnosis and memory accounting across tenants, which is
+//! what the `sketchgrad hub` subcommand and the serving-path roadmap
+//! items build on.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::StepMetrics;
+use crate::sketch::metrics::LayerMetrics;
+
+use super::service::{Diagnosis, MonitorConfig, MonitorService};
+
+/// Opaque tenant handle issued by [`MonitorHub::register`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct SessionId(u64);
+
+impl SessionId {
+    pub fn raw(self) -> u64 {
+        self.0
+    }
+}
+
+impl std::fmt::Display for SessionId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "s{}", self.0)
+    }
+}
+
+/// One tenant: a monitored training run with its own detector config and
+/// constant-memory summaries.
+pub struct MonitorSession {
+    pub id: SessionId,
+    pub name: String,
+    svc: MonitorService,
+    /// Last sketch-state bytes the tenant's engine reported (the hub does
+    /// not own engines — tenants push their accountant reading).
+    pub sketch_bytes: usize,
+}
+
+impl MonitorSession {
+    pub fn observe(&mut self, m: &StepMetrics) {
+        self.svc.observe(m);
+    }
+
+    pub fn diagnose(&self) -> Diagnosis {
+        self.svc.diagnose()
+    }
+
+    pub fn is_healthy(&self) -> bool {
+        self.svc.is_healthy()
+    }
+
+    pub fn steps_seen(&self) -> u64 {
+        self.svc.steps_seen
+    }
+
+    pub fn config(&self) -> &MonitorConfig {
+        &self.svc.cfg
+    }
+
+    /// Bytes of monitor state this session holds (constant in duration).
+    pub fn monitor_bytes(&self) -> usize {
+        self.svc.monitor_bytes()
+    }
+}
+
+/// Aggregate view over all tenants.
+#[derive(Debug, Default)]
+pub struct HubReport {
+    pub sessions: usize,
+    pub healthy: usize,
+    /// (id, name, diagnosis) for every unhealthy session.
+    pub flagged: Vec<(SessionId, String, Diagnosis)>,
+    /// Monitor-state bytes across all sessions.
+    pub monitor_bytes: usize,
+    /// Sum of tenant-reported sketch-state bytes.
+    pub sketch_bytes: usize,
+    pub steps_seen: u64,
+}
+
+/// The multiplexer: owns every session, routes observations by id.
+#[derive(Default)]
+pub struct MonitorHub {
+    sessions: BTreeMap<SessionId, MonitorSession>,
+    next_id: u64,
+}
+
+impl MonitorHub {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit a tenant; `n_layers` sizes its per-layer rolling stats.
+    pub fn register(
+        &mut self,
+        name: &str,
+        cfg: MonitorConfig,
+        n_layers: usize,
+    ) -> SessionId {
+        let id = SessionId(self.next_id);
+        self.next_id += 1;
+        self.sessions.insert(
+            id,
+            MonitorSession {
+                id,
+                name: name.to_string(),
+                svc: MonitorService::new(cfg, n_layers),
+                sketch_bytes: 0,
+            },
+        );
+        id
+    }
+
+    /// Evict a tenant, returning its final session state.
+    pub fn deregister(&mut self, id: SessionId) -> Result<MonitorSession> {
+        self.sessions
+            .remove(&id)
+            .with_context(|| format!("hub has no session {id}"))
+    }
+
+    pub fn len(&self) -> usize {
+        self.sessions.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.sessions.is_empty()
+    }
+
+    pub fn session(&self, id: SessionId) -> Result<&MonitorSession> {
+        self.sessions
+            .get(&id)
+            .with_context(|| format!("hub has no session {id}"))
+    }
+
+    pub fn sessions(&self) -> impl Iterator<Item = &MonitorSession> {
+        self.sessions.values()
+    }
+
+    /// Route one step's metrics to a tenant.
+    pub fn observe(&mut self, id: SessionId, m: &StepMetrics) -> Result<()> {
+        self.sessions
+            .get_mut(&id)
+            .with_context(|| format!("hub has no session {id}"))?
+            .observe(m);
+        Ok(())
+    }
+
+    /// Record the tenant's current engine memory (accountant bytes).
+    pub fn report_sketch_bytes(
+        &mut self,
+        id: SessionId,
+        bytes: usize,
+    ) -> Result<()> {
+        self.sessions
+            .get_mut(&id)
+            .with_context(|| format!("hub has no session {id}"))?
+            .sketch_bytes = bytes;
+        Ok(())
+    }
+
+    pub fn diagnose(&self, id: SessionId) -> Result<Diagnosis> {
+        Ok(self.session(id)?.diagnose())
+    }
+
+    /// Diagnose every tenant (id, name, diagnosis, healthy).
+    pub fn diagnose_all(&self) -> Vec<(SessionId, String, Diagnosis, bool)> {
+        self.sessions
+            .values()
+            .map(|s| (s.id, s.name.clone(), s.diagnose(), s.is_healthy()))
+            .collect()
+    }
+
+    /// Aggregate diagnosis + memory accounting across tenants.
+    pub fn aggregate(&self) -> HubReport {
+        let mut report = HubReport {
+            sessions: self.sessions.len(),
+            ..HubReport::default()
+        };
+        for s in self.sessions.values() {
+            if s.is_healthy() {
+                report.healthy += 1;
+            } else {
+                report.flagged.push((s.id, s.name.clone(), s.diagnose()));
+            }
+            report.monitor_bytes += s.monitor_bytes();
+            report.sketch_bytes += s.sketch_bytes;
+            report.steps_seen += s.steps_seen();
+        }
+        report
+    }
+
+    /// Hub-held monitor bytes across all sessions — grows with tenants,
+    /// never with monitoring duration.
+    pub fn memory(&self) -> usize {
+        self.sessions.values().map(|s| s.monitor_bytes()).sum()
+    }
+
+    /// One-shot convenience used by the experiment harnesses: run a
+    /// finished history through a throwaway session and return the
+    /// diagnosis.
+    pub fn diagnose_history(
+        cfg: MonitorConfig,
+        n_layers: usize,
+        history: &[StepMetrics],
+    ) -> Diagnosis {
+        let mut hub = MonitorHub::new();
+        let id = hub.register("history", cfg, n_layers);
+        for m in history {
+            hub.observe(id, m).expect("session just registered");
+        }
+        hub.diagnose(id).expect("session just registered")
+    }
+}
+
+/// Bridge from engine metrics to the monitor-service metric domain: the
+/// per-layer f64 sketch metrics become one `StepMetrics` sample.
+pub fn step_metrics(loss: f32, layer_metrics: &[LayerMetrics]) -> StepMetrics {
+    StepMetrics {
+        loss,
+        z_norm: layer_metrics.iter().map(|m| m.z_norm as f32).collect(),
+        stable_rank: layer_metrics
+            .iter()
+            .map(|m| m.stable_rank as f32)
+            .collect(),
+        y_norm: layer_metrics.iter().map(|m| m.y_norm as f32).collect(),
+        x_norm: layer_metrics.iter().map(|m| m.x_norm as f32).collect(),
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn metrics(loss: f32, z: f32, sr: f32, n_layers: usize) -> StepMetrics {
+        StepMetrics {
+            loss,
+            z_norm: vec![z; n_layers],
+            stable_rank: vec![sr; n_layers],
+            ..Default::default()
+        }
+    }
+
+    fn cfg() -> MonitorConfig {
+        MonitorConfig {
+            window: 20,
+            collapse_frac: 0.5,
+            ..MonitorConfig::for_rank(4)
+        }
+    }
+
+    #[test]
+    fn register_observe_deregister_roundtrip() {
+        let mut hub = MonitorHub::new();
+        let a = hub.register("a", cfg(), 3);
+        let b = hub.register("b", cfg(), 3);
+        assert_ne!(a, b);
+        assert_eq!(hub.len(), 2);
+        hub.observe(a, &metrics(1.0, 5.0, 8.0, 3)).unwrap();
+        assert_eq!(hub.session(a).unwrap().steps_seen(), 1);
+        assert_eq!(hub.session(b).unwrap().steps_seen(), 0);
+        let gone = hub.deregister(a).unwrap();
+        assert_eq!(gone.steps_seen(), 1);
+        assert!(hub.observe(a, &metrics(1.0, 5.0, 8.0, 3)).is_err());
+        assert_eq!(hub.len(), 1);
+    }
+
+    #[test]
+    fn sessions_are_independent() {
+        let mut hub = MonitorHub::new();
+        let good = hub.register("good", cfg(), 4);
+        let bad = hub.register("bad", cfg(), 4);
+        for step in 0..120 {
+            let loss = 2.3 * (-0.03 * step as f32).exp() + 0.05;
+            hub.observe(good, &metrics(loss, 80.0 + (step % 5) as f32, 8.5, 4))
+                .unwrap();
+            hub.observe(bad, &metrics(2.3, 9.0, 1.2, 4)).unwrap();
+        }
+        let report = hub.aggregate();
+        assert_eq!(report.sessions, 2);
+        assert_eq!(report.healthy, 1);
+        assert_eq!(report.flagged.len(), 1);
+        assert_eq!(report.flagged[0].1, "bad");
+        assert!(report.flagged[0].2.diversity_collapse);
+        assert_eq!(report.steps_seen, 240);
+    }
+
+    #[test]
+    fn hub_memory_scales_with_tenants_not_duration() {
+        let mut hub = MonitorHub::new();
+        let a = hub.register("a", cfg(), 8);
+        let m1 = hub.memory();
+        let _b = hub.register("b", cfg(), 8);
+        assert_eq!(hub.memory(), 2 * m1);
+        for _ in 0..5_000 {
+            hub.observe(a, &metrics(1.0, 1.0, 1.0, 8)).unwrap();
+        }
+        assert_eq!(hub.memory(), 2 * m1, "duration must not grow memory");
+    }
+
+    #[test]
+    fn sketch_bytes_reporting_aggregates() {
+        let mut hub = MonitorHub::new();
+        let a = hub.register("a", cfg(), 2);
+        let b = hub.register("b", cfg(), 2);
+        hub.report_sketch_bytes(a, 1000).unwrap();
+        hub.report_sketch_bytes(b, 500).unwrap();
+        assert_eq!(hub.aggregate().sketch_bytes, 1500);
+    }
+
+    #[test]
+    fn step_metrics_bridge_maps_layers() {
+        let lm = vec![
+            LayerMetrics {
+                z_norm: 2.0,
+                stable_rank: 3.0,
+                y_norm: 4.0,
+                x_norm: 5.0,
+            };
+            3
+        ];
+        let m = step_metrics(0.5, &lm);
+        assert_eq!(m.loss, 0.5);
+        assert_eq!(m.z_norm, vec![2.0f32; 3]);
+        assert_eq!(m.stable_rank, vec![3.0f32; 3]);
+    }
+}

@@ -1,6 +1,9 @@
 //! Gradient-monitor service (paper §4.6/§5.3): constant-memory sketch-based
-//! diagnostics with pathology detectors.
+//! diagnostics with pathology detectors, multiplexed across concurrent
+//! training runs by the multi-tenant [`hub::MonitorHub`].
 
+pub mod hub;
 pub mod service;
 
+pub use hub::{step_metrics, HubReport, MonitorHub, MonitorSession, SessionId};
 pub use service::{Diagnosis, MonitorConfig, MonitorService, Rolling};

@@ -1,0 +1,584 @@
+//! Builder-configured sketching engine: the public entry point to the EMA
+//! three-sketch substrate (paper §4.1).
+//!
+//! `SketchConfig`/`SketchConfigBuilder` describe a network's sketching
+//! setup — per-layer hidden widths (`layer_dims`), rank, EMA beta, seed
+//! and accounting precision — and `SketchEngine` owns the triplets and
+//! projections behind the narrow [`Sketcher`] surface:
+//! `ingest(acts)`, `reconstruct(layer)`, `metrics()`, `set_rank(r)`,
+//! `memory()`.
+//!
+//! Two generalisations over the seed `LayerSketches` API:
+//! * **Heterogeneous widths** — every hidden layer carries its own d, so
+//!   funnel-shaped MLPs (e.g. 128/64/32) sketch naturally; Lemma 4.1
+//!   holds per layer at that layer's width.
+//! * **Variable batch sizes** — batch projections (Upsilon/Omega/Phi) are
+//!   resampled lazily per *observed* batch size and cached, so tail
+//!   batches smaller than the nominal n_b and multi-dataset feeds just
+//!   work.  Sampling is keyed on (seed, rank, n_b): the same batch size
+//!   always sees the same projections regardless of arrival order, which
+//!   keeps the per-size EMA contributions consistent (Lemma 4.1 requires
+//!   a fixed Upsilon per batch size).  Psi is batch-size independent and
+//!   shared by every cached projection set.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+use super::matrix::Mat;
+use super::metrics::{all_metrics, LayerMetrics};
+use super::reconstruct::reconstruct_batch;
+use super::triplet::{Projections, SketchTriplet};
+
+/// Stream constants mixing seed, rank and batch size into independent
+/// deterministic RNG streams (splitmix-style odd multipliers).
+const PSI_STREAM: u64 = 0x9E3779B97F4A7C15;
+const BATCH_STREAM: u64 = 0xD1B54A32D192ED03;
+const RANK_STREAM: u64 = 0x2545F4914F6CDD1D;
+
+/// Power-iteration count used by `metrics()` (matches the monitoring AOT
+/// artifacts; see `sketch::metrics`).
+pub const METRIC_POWER_ITERS: usize = 24;
+
+/// Accounting precision: the byte width the memory accountant charges per
+/// matrix element.  The native substrate computes in f64 but the runtime
+/// dtype (and the paper's memory model) is f32, hence the default.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    F32,
+    F64,
+}
+
+impl Precision {
+    pub fn bytes(self) -> usize {
+        match self {
+            Precision::F32 => 4,
+            Precision::F64 => 8,
+        }
+    }
+}
+
+/// Immutable engine configuration produced by [`SketchConfigBuilder`].
+#[derive(Clone, Debug)]
+pub struct SketchConfig {
+    /// Hidden-layer widths d_1..d_H (one entry per sketched layer).
+    pub layer_dims: Vec<usize>,
+    pub rank: usize,
+    pub beta: f64,
+    pub seed: u64,
+    pub precision: Precision,
+}
+
+impl SketchConfig {
+    pub fn builder() -> SketchConfigBuilder {
+        SketchConfigBuilder::default()
+    }
+
+    pub fn k(&self) -> usize {
+        2 * self.rank + 1
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layer_dims.len()
+    }
+
+    /// Width of the activation entering layer `l`'s weight: layer 0
+    /// sketches its own output as input (the seed convention for A^[1]),
+    /// deeper layers take the previous hidden width.
+    pub fn d_in(&self, l: usize) -> usize {
+        if l == 0 {
+            self.layer_dims[0]
+        } else {
+            self.layer_dims[l - 1]
+        }
+    }
+
+    pub fn d_out(&self, l: usize) -> usize {
+        self.layer_dims[l]
+    }
+
+    /// The fixed accountant: exact bytes a `SketchEngine` built from this
+    /// config holds after observing the given batch sizes (duplicates
+    /// ignored).  Mirrors [`engine_state_bytes`].
+    pub fn expected_bytes(&self, batch_sizes: &[usize]) -> usize {
+        engine_state_bytes(
+            &self.layer_dims,
+            self.rank,
+            batch_sizes,
+            self.precision.bytes(),
+        )
+    }
+}
+
+/// The accountant formula shared by `SketchConfig::expected_bytes`,
+/// `SketchEngine::memory` and the coordinator's memory model:
+/// per layer (d_in + 2 d_out) k `unit` bytes of sketches, 3 n_b k `unit`
+/// bytes of batch projections per distinct observed batch size, and the
+/// shared Psi counted once at its stored f64 width (8 B — the seed
+/// under-counted this at 4 B).
+pub fn engine_state_bytes(
+    layer_dims: &[usize],
+    rank: usize,
+    batch_sizes: &[usize],
+    unit: usize,
+) -> usize {
+    let k = 2 * rank + 1;
+    let mut sketches = 0usize;
+    for (l, &d_out) in layer_dims.iter().enumerate() {
+        let d_in = if l == 0 { layer_dims[0] } else { layer_dims[l - 1] };
+        sketches += (d_in + 2 * d_out) * k * unit;
+    }
+    let distinct: std::collections::BTreeSet<usize> =
+        batch_sizes.iter().copied().collect();
+    let proj: usize = distinct.iter().map(|n_b| 3 * n_b * k * unit).sum();
+    let psi = layer_dims.len() * k * 8;
+    sketches + proj + psi
+}
+
+/// Builder with validation; the only way call sites outside the sketch
+/// module configure sketching.
+#[derive(Clone, Debug)]
+pub struct SketchConfigBuilder {
+    layer_dims: Vec<usize>,
+    rank: usize,
+    beta: f64,
+    seed: u64,
+    precision: Precision,
+}
+
+impl Default for SketchConfigBuilder {
+    fn default() -> Self {
+        SketchConfigBuilder {
+            layer_dims: Vec::new(),
+            rank: 2,
+            beta: 0.9,
+            seed: 42,
+            precision: Precision::F32,
+        }
+    }
+}
+
+impl SketchConfigBuilder {
+    /// Per-layer hidden widths (heterogeneous allowed).
+    pub fn layer_dims(mut self, dims: &[usize]) -> Self {
+        self.layer_dims = dims.to_vec();
+        self
+    }
+
+    /// Uniform-width convenience: `n_layers` hidden layers of width `d`.
+    pub fn uniform_dims(mut self, n_layers: usize, d: usize) -> Self {
+        self.layer_dims = vec![d; n_layers];
+        self
+    }
+
+    pub fn rank(mut self, rank: usize) -> Self {
+        self.rank = rank;
+        self
+    }
+
+    pub fn beta(mut self, beta: f64) -> Self {
+        self.beta = beta;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn precision(mut self, precision: Precision) -> Self {
+        self.precision = precision;
+        self
+    }
+
+    pub fn build(self) -> Result<SketchConfig> {
+        if self.layer_dims.is_empty() {
+            bail!("sketch config needs at least one hidden layer width");
+        }
+        if let Some(l) = self.layer_dims.iter().position(|&d| d == 0) {
+            bail!("layer {l} has zero width");
+        }
+        if self.rank == 0 {
+            bail!("rank must be >= 1 (k = 2r + 1)");
+        }
+        if !(0.0..1.0).contains(&self.beta) {
+            bail!("beta {} outside [0, 1)", self.beta);
+        }
+        Ok(SketchConfig {
+            layer_dims: self.layer_dims,
+            rank: self.rank,
+            beta: self.beta,
+            seed: self.seed,
+            precision: self.precision,
+        })
+    }
+
+    /// Build the config and stand the engine up in one call.
+    pub fn build_engine(self) -> Result<SketchEngine> {
+        Ok(SketchEngine::new(self.build()?))
+    }
+}
+
+/// The narrow surface call sites program against.
+pub trait Sketcher {
+    /// Ingest one forward pass: `acts[0]` is the input batch, `acts[j]`
+    /// (j >= 1) the j-th hidden activation, all with the same row count.
+    fn ingest(&mut self, acts: &[Mat]) -> Result<()>;
+    /// Eq.-7 reconstruction of the layer's incoming activation estimate
+    /// using the most recently observed batch size's Omega.
+    ///
+    /// Caveat for mixed batch-size streams: the EMA sketches blend
+    /// contributions projected through each batch size's own
+    /// Upsilon/Omega/Phi, while Eq. 7 (and the Thm-4.2 bound) assume one
+    /// fixed projection set.  With a single observed batch size the
+    /// paper's guarantees apply verbatim; after a tail batch or a
+    /// multi-size feed the result is a best-effort estimate dominated by
+    /// the majority batch size's contributions — fine for the monitoring
+    /// diagnostics built on sketch norms, but not covered by the bound.
+    fn reconstruct(&self, layer: usize) -> Result<Mat>;
+    /// Per-layer monitoring metrics (||Z||_F, stable rank, ...).
+    fn metrics(&self) -> Vec<LayerMetrics>;
+    /// Rank change (Algorithm 1 lines 16/21/23): zero sketches, resample
+    /// Psi and drop cached batch projections at the new k = 2r + 1.
+    /// `r = 0` is clamped to 1 (k = 3) — unlike the builder, this cannot
+    /// fail, so the degenerate request maps to the smallest valid rank.
+    fn set_rank(&mut self, r: usize);
+    /// Measured bytes currently held, per the fixed accountant.
+    fn memory(&self) -> usize;
+}
+
+/// Owns the per-layer triplets, the shared Psi and the lazily-sampled
+/// per-batch-size projections for one training run.
+#[derive(Clone, Debug)]
+pub struct SketchEngine {
+    cfg: SketchConfig,
+    layers: Vec<SketchTriplet>,
+    /// Shared per-layer Psi (length k each): one `Arc` allocation shared
+    /// with every cached projection set, hence accounted once.
+    psi: Arc<Vec<Vec<f64>>>,
+    /// Batch projections keyed by observed batch size.
+    proj: BTreeMap<usize, Projections>,
+    last_batch: Option<usize>,
+    batches_ingested: u64,
+}
+
+impl SketchEngine {
+    pub fn new(cfg: SketchConfig) -> Self {
+        let (layers, psi) = Self::fresh_state(&cfg);
+        SketchEngine {
+            cfg,
+            layers,
+            psi,
+            proj: BTreeMap::new(),
+            last_batch: None,
+            batches_ingested: 0,
+        }
+    }
+
+    fn fresh_state(
+        cfg: &SketchConfig,
+    ) -> (Vec<SketchTriplet>, Arc<Vec<Vec<f64>>>) {
+        let k = cfg.k();
+        let mut psi_rng = Rng::new(
+            cfg.seed ^ PSI_STREAM ^ (cfg.rank as u64).wrapping_mul(RANK_STREAM),
+        );
+        let psi = Arc::new(
+            (0..cfg.n_layers())
+                .map(|_| psi_rng.normal_vec(k))
+                .collect::<Vec<_>>(),
+        );
+        let layers = (0..cfg.n_layers())
+            .map(|l| {
+                SketchTriplet::with_dims(
+                    cfg.d_in(l),
+                    cfg.d_out(l),
+                    cfg.rank,
+                    cfg.beta,
+                )
+            })
+            .collect();
+        (layers, psi)
+    }
+
+    pub fn config(&self) -> &SketchConfig {
+        &self.cfg
+    }
+
+    pub fn k(&self) -> usize {
+        self.cfg.k()
+    }
+
+    pub fn n_layers(&self) -> usize {
+        self.layers.len()
+    }
+
+    /// Read access to the triplets (diagnostics / benches); mutation goes
+    /// through `ingest`/`set_rank` only.
+    pub fn layers(&self) -> &[SketchTriplet] {
+        &self.layers
+    }
+
+    /// The projections used for batches of size `n_b`, if that size has
+    /// been observed (or prepared) — cross-validation tests read these
+    /// out instead of sampling their own.
+    pub fn projections(&self, n_b: usize) -> Option<&Projections> {
+        self.proj.get(&n_b)
+    }
+
+    /// Distinct batch sizes observed so far (ascending).
+    pub fn batch_sizes_seen(&self) -> Vec<usize> {
+        self.proj.keys().copied().collect()
+    }
+
+    pub fn batches_ingested(&self) -> u64 {
+        self.batches_ingested
+    }
+
+    /// Pre-sample the projections for a batch size without ingesting —
+    /// deterministic in (seed, rank, n_b), so preparation and lazy
+    /// sampling agree.
+    pub fn ensure_projections(&mut self, n_b: usize) -> &Projections {
+        let cfg = &self.cfg;
+        let psi = &self.psi;
+        self.proj.entry(n_b).or_insert_with(|| {
+            let mut rng = Rng::new(
+                cfg.seed
+                    ^ (n_b as u64).wrapping_mul(BATCH_STREAM)
+                    ^ (cfg.rank as u64).wrapping_mul(RANK_STREAM),
+            );
+            Projections::with_psi(n_b, cfg.rank, psi.clone(), &mut rng)
+        })
+    }
+}
+
+impl Sketcher for SketchEngine {
+    fn ingest(&mut self, acts: &[Mat]) -> Result<()> {
+        if acts.len() != self.cfg.n_layers() + 1 {
+            bail!(
+                "ingest expects input batch + {} hidden activations, got {} matrices",
+                self.cfg.n_layers(),
+                acts.len()
+            );
+        }
+        let n_b = acts[0].rows;
+        if n_b == 0 {
+            bail!("empty batch");
+        }
+        for (j, a) in acts.iter().enumerate() {
+            if a.rows != n_b {
+                bail!(
+                    "activation {} has batch size {} but the input batch has {}",
+                    j,
+                    a.rows,
+                    n_b
+                );
+            }
+            if j >= 1 && a.cols != self.cfg.layer_dims[j - 1] {
+                bail!(
+                    "hidden activation {} is {} wide, config says {}",
+                    j - 1,
+                    a.cols,
+                    self.cfg.layer_dims[j - 1]
+                );
+            }
+        }
+        self.ensure_projections(n_b);
+        let proj = &self.proj[&n_b];
+        for j in 1..acts.len() {
+            let a_in = if j >= 2 { &acts[j - 1] } else { &acts[1] };
+            self.layers[j - 1].update(a_in, &acts[j], proj, j - 1);
+        }
+        self.last_batch = Some(n_b);
+        self.batches_ingested += 1;
+        Ok(())
+    }
+
+    fn reconstruct(&self, layer: usize) -> Result<Mat> {
+        if layer >= self.layers.len() {
+            bail!(
+                "layer {layer} out of range ({} sketched layers)",
+                self.layers.len()
+            );
+        }
+        let n_b = self
+            .last_batch
+            .context("reconstruct before any batch was ingested")?;
+        let proj = &self.proj[&n_b];
+        Ok(reconstruct_batch(&self.layers[layer], &proj.omega))
+    }
+
+    fn metrics(&self) -> Vec<LayerMetrics> {
+        all_metrics(&self.layers, METRIC_POWER_ITERS)
+    }
+
+    fn set_rank(&mut self, r: usize) {
+        self.cfg.rank = r.max(1);
+        let (layers, psi) = Self::fresh_state(&self.cfg);
+        self.layers = layers;
+        self.psi = psi;
+        self.proj.clear();
+        self.last_batch = None;
+    }
+
+    fn memory(&self) -> usize {
+        let unit = self.cfg.precision.bytes();
+        let k = self.cfg.k();
+        let sketches: usize = self
+            .layers
+            .iter()
+            .map(|t| (t.x.rows + t.y.rows + t.z.rows) * k * unit)
+            .sum();
+        let proj: usize = self.proj.values().map(|p| p.batch_bytes(unit)).sum();
+        let psi: usize = self.psi.iter().map(|p| p.len() * 8).sum();
+        sketches + proj + psi
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine(dims: &[usize], rank: usize) -> SketchEngine {
+        SketchConfig::builder()
+            .layer_dims(dims)
+            .rank(rank)
+            .beta(0.9)
+            .seed(7)
+            .build_engine()
+            .unwrap()
+    }
+
+    fn acts(n_b: usize, dims: &[usize], rng: &mut Rng) -> Vec<Mat> {
+        let mut out = vec![Mat::gaussian(n_b, 16, rng)]; // input batch
+        for &d in dims {
+            out.push(Mat::gaussian(n_b, d, rng));
+        }
+        out
+    }
+
+    #[test]
+    fn builder_validates() {
+        assert!(SketchConfig::builder().build().is_err()); // no dims
+        assert!(SketchConfig::builder()
+            .layer_dims(&[8, 0])
+            .build()
+            .is_err());
+        assert!(SketchConfig::builder()
+            .uniform_dims(2, 8)
+            .rank(0)
+            .build()
+            .is_err());
+        assert!(SketchConfig::builder()
+            .uniform_dims(2, 8)
+            .beta(1.0)
+            .build()
+            .is_err());
+        let cfg = SketchConfig::builder()
+            .layer_dims(&[128, 64, 32])
+            .rank(4)
+            .build()
+            .unwrap();
+        assert_eq!(cfg.k(), 9);
+        assert_eq!(cfg.d_in(0), 128);
+        assert_eq!(cfg.d_in(2), 64);
+        assert_eq!(cfg.d_out(2), 32);
+    }
+
+    #[test]
+    fn ingest_validates_shapes() {
+        let mut e = engine(&[12, 6], 2);
+        let mut rng = Rng::new(1);
+        // Wrong count.
+        assert!(e.ingest(&[Mat::gaussian(4, 12, &mut rng)]).is_err());
+        // Wrong hidden width.
+        let bad = vec![
+            Mat::gaussian(4, 16, &mut rng),
+            Mat::gaussian(4, 12, &mut rng),
+            Mat::gaussian(4, 7, &mut rng),
+        ];
+        assert!(e.ingest(&bad).is_err());
+        // Mismatched batch size across activations.
+        let bad2 = vec![
+            Mat::gaussian(4, 16, &mut rng),
+            Mat::gaussian(5, 12, &mut rng),
+            Mat::gaussian(4, 6, &mut rng),
+        ];
+        assert!(e.ingest(&bad2).is_err());
+        let ok = acts(4, &[12, 6], &mut rng);
+        e.ingest(&ok).unwrap();
+        assert_eq!(e.batches_ingested(), 1);
+    }
+
+    #[test]
+    fn projections_are_deterministic_per_batch_size() {
+        let mut rng = Rng::new(2);
+        let mut a = engine(&[10], 2);
+        let mut b = engine(&[10], 2);
+        // Observe sizes in different orders; same (seed, rank, n_b) must
+        // yield identical projections.
+        a.ingest(&acts(8, &[10], &mut rng)).unwrap();
+        a.ingest(&acts(3, &[10], &mut rng)).unwrap();
+        b.ensure_projections(3);
+        b.ensure_projections(8);
+        for n_b in [3usize, 8] {
+            let pa = a.projections(n_b).unwrap();
+            let pb = b.projections(n_b).unwrap();
+            assert_eq!(pa.upsilon.data, pb.upsilon.data, "n_b={n_b}");
+            assert_eq!(pa.psi, pb.psi);
+        }
+    }
+
+    #[test]
+    fn set_rank_reinitialises() {
+        let mut rng = Rng::new(3);
+        let mut e = engine(&[10, 5], 2);
+        e.ingest(&acts(8, &[10, 5], &mut rng)).unwrap();
+        assert!(e.layers()[0].x.fro_norm() > 0.0);
+        let psi_before = e.projections(8).unwrap().psi.clone();
+        e.set_rank(4);
+        assert_eq!(e.k(), 9);
+        assert_eq!(e.layers()[0].x.cols, 9);
+        assert_eq!(e.layers()[0].x.fro_norm(), 0.0);
+        assert!(e.batch_sizes_seen().is_empty());
+        assert!(e.reconstruct(0).is_err(), "no batch after rank change");
+        e.ingest(&acts(8, &[10, 5], &mut rng)).unwrap();
+        assert_ne!(e.projections(8).unwrap().psi, psi_before);
+    }
+
+    #[test]
+    fn memory_matches_fixed_accountant() {
+        let mut rng = Rng::new(4);
+        let dims = [64usize, 32, 16];
+        let mut e = engine(&dims, 4);
+        e.ingest(&acts(32, &dims, &mut rng)).unwrap();
+        e.ingest(&acts(7, &dims, &mut rng)).unwrap(); // tail batch
+        e.ingest(&acts(32, &dims, &mut rng)).unwrap(); // repeat size: no growth
+        let want = e.config().expected_bytes(&[32, 7, 32]);
+        assert_eq!(e.memory(), want);
+        // Hand formula: k=9, sketches (64+128 + 64+64 + 32+32)*9*4,
+        // proj (32+7)*3*9*4, psi 3*9*8.
+        let hand = (64 + 2 * 64 + 64 + 2 * 32 + 32 + 2 * 16) * 9 * 4
+            + 3 * (32 + 7) * 9 * 4
+            + 3 * 9 * 8;
+        assert_eq!(e.memory(), hand);
+    }
+
+    #[test]
+    fn reconstruct_shapes_follow_layer_dims() {
+        let mut rng = Rng::new(5);
+        let dims = [24usize, 12];
+        let mut e = engine(&dims, 2);
+        e.ingest(&acts(16, &dims, &mut rng)).unwrap();
+        let r0 = e.reconstruct(0).unwrap(); // d_in(0) = 24
+        let r1 = e.reconstruct(1).unwrap(); // d_in(1) = 24
+        assert_eq!((r0.rows, r0.cols), (16, 24));
+        assert_eq!((r1.rows, r1.cols), (16, 24));
+        assert!(e.reconstruct(2).is_err());
+        let m = e.metrics();
+        assert_eq!(m.len(), 2);
+        assert!(m.iter().all(|lm| lm.z_norm.is_finite()));
+    }
+}

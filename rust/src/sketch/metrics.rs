@@ -3,7 +3,7 @@
 //! and the power-iteration spectral norm they rely on.
 
 use super::matrix::Mat;
-use super::triplet::{LayerSketches, SketchTriplet};
+use super::triplet::SketchTriplet;
 
 /// Spectral norm by power iteration on A^T A with a deterministic start
 /// vector (mirrors `linalg.spectral_norm` in the AOT path).
@@ -65,8 +65,11 @@ pub fn triplet_metrics(t: &SketchTriplet, power_iters: usize) -> LayerMetrics {
     }
 }
 
-pub fn all_metrics(ls: &LayerSketches, power_iters: usize) -> Vec<LayerMetrics> {
-    ls.layers
+pub fn all_metrics(
+    layers: &[SketchTriplet],
+    power_iters: usize,
+) -> Vec<LayerMetrics> {
+    layers
         .iter()
         .map(|t| triplet_metrics(t, power_iters))
         .collect()

@@ -2,16 +2,26 @@
 //! three-sketch triplet (paper §4.1), two-stage reconstruction (§4.2),
 //! spectra (Jacobi) and the sketch-derived monitoring metrics (§4.6).
 //!
+//! The public entry point is the builder-configured [`engine::SketchEngine`]
+//! (heterogeneous layer widths, variable batch sizes, rank changes); the
+//! lower-level triplet/projection types stay available for the AOT
+//! cross-validation tests that must inject externally-fixed projections.
+//!
 //! This mirrors the AOT python path (`python/compile/{linalg,sketching}.py`)
 //! so the monitoring hot path and the adaptive-rank controller run without
 //! PJRT round-trips; integration tests cross-validate both sides.
 
 pub mod eig;
+pub mod engine;
 pub mod matrix;
 pub mod metrics;
 pub mod qr;
 pub mod reconstruct;
 pub mod triplet;
 
+pub use engine::{
+    engine_state_bytes, Precision, SketchConfig, SketchConfigBuilder,
+    SketchEngine, Sketcher,
+};
 pub use matrix::Mat;
-pub use triplet::{LayerSketches, Projections, SketchTriplet};
+pub use triplet::{Projections, SketchTriplet};

@@ -2,21 +2,30 @@
 //! projections — the native-rust mirror of `python/compile/sketching.py`.
 //!
 //! One `SketchTriplet` holds the (X, Y, Z) sketches for a single hidden
-//! layer; `LayerSketches` stacks them for a network.  The monitor service
-//! updates these from activation batches without any PJRT round-trip, and
-//! the adaptive-rank controller reads reconstruction diagnostics from them.
+//! layer.  Stacking triplets for a whole network, sampling projections per
+//! observed batch size and rank changes live in [`super::engine`]: all
+//! call sites outside the sketch module go through
+//! `SketchConfigBuilder`/`SketchEngine` rather than assembling these
+//! low-level pieces by hand.
+
+use std::sync::Arc;
 
 use crate::util::rng::Rng;
 
 use super::matrix::Mat;
 
 /// Shared batch projections (Upsilon, Omega, Phi) + per-layer Psi weights.
+///
+/// Upsilon/Omega/Phi are tied to one batch size `n_b`; Psi is batch-size
+/// independent (length k per layer) and is shared — one `Arc` allocation —
+/// by every projection set the engine samples, so cloning a `Projections`
+/// never duplicates the Psi storage.
 #[derive(Clone, Debug)]
 pub struct Projections {
     pub upsilon: Mat, // (n_b, k)
     pub omega: Mat,   // (n_b, k)
     pub phi: Mat,     // (n_b, s)
-    pub psi: Vec<Vec<f64>>, // per layer, length s
+    pub psi: Arc<Vec<Vec<f64>>>, // per layer, length s
     pub rank: usize,
 }
 
@@ -24,11 +33,29 @@ impl Projections {
     /// k = s = 2r + 1 (paper §4.1).
     pub fn sample(n_b: usize, n_layers: usize, rank: usize, rng: &mut Rng) -> Self {
         let k = 2 * rank + 1;
+        let psi = Arc::new(
+            (0..n_layers)
+                .map(|_| rng.normal_vec(k))
+                .collect::<Vec<_>>(),
+        );
+        Self::with_psi(n_b, rank, psi, rng)
+    }
+
+    /// Sample fresh batch projections around an existing Psi — the engine
+    /// uses this so every batch size shares one set of Psi weights (the
+    /// EMA triplets must see a consistent Z-weighting across batches).
+    pub fn with_psi(
+        n_b: usize,
+        rank: usize,
+        psi: Arc<Vec<Vec<f64>>>,
+        rng: &mut Rng,
+    ) -> Self {
+        let k = 2 * rank + 1;
         Projections {
             upsilon: Mat::gaussian(n_b, k, rng),
             omega: Mat::gaussian(n_b, k, rng),
             phi: Mat::gaussian(n_b, k, rng),
-            psi: (0..n_layers).map(|_| rng.normal_vec(k)).collect(),
+            psi,
             rank,
         }
     }
@@ -36,9 +63,32 @@ impl Projections {
     pub fn k(&self) -> usize {
         2 * self.rank + 1
     }
+
+    /// Batch size these projections were sampled for.
+    pub fn n_b(&self) -> usize {
+        self.upsilon.rows
+    }
+
+    /// Accountant bytes for the batch projections at `unit` bytes per
+    /// element, EXCLUDING Psi (the engine counts the shared Psi once,
+    /// not per cached batch size).
+    pub fn batch_bytes(&self, unit: usize) -> usize {
+        3 * self.upsilon.rows * self.upsilon.cols * unit
+    }
+
+    /// Bytes of the Psi weights as stored: f64, 8 bytes per element.
+    /// The `Arc` means every projection set sharing this Psi holds the
+    /// same single allocation — count it once.
+    pub fn psi_bytes(&self) -> usize {
+        self.psi.iter().map(|p| p.len() * 8).sum()
+    }
 }
 
-/// (X, Y, Z) EMA sketches for one hidden layer (each d x k).
+/// (X, Y, Z) EMA sketches for one hidden layer.
+///
+/// X sketches the layer's *incoming* activation (d_in x k) while Y and Z
+/// sketch the *outgoing* activation (d_out x k); for uniform-width
+/// networks d_in == d_out and the seed behaviour is recovered.
 #[derive(Clone, Debug)]
 pub struct SketchTriplet {
     pub x: Mat,
@@ -51,21 +101,27 @@ pub struct SketchTriplet {
 }
 
 impl SketchTriplet {
-    pub fn zeros(d: usize, rank: usize, beta: f64) -> Self {
+    /// Heterogeneous-width constructor: X is (d_in, k), Y/Z are (d_out, k).
+    pub fn with_dims(d_in: usize, d_out: usize, rank: usize, beta: f64) -> Self {
         let k = 2 * rank + 1;
         SketchTriplet {
-            x: Mat::zeros(d, k),
-            y: Mat::zeros(d, k),
-            z: Mat::zeros(d, k),
+            x: Mat::zeros(d_in, k),
+            y: Mat::zeros(d_out, k),
+            z: Mat::zeros(d_out, k),
             beta,
             updates: 0,
         }
     }
 
+    /// Uniform-width convenience (d_in == d_out == d).
+    pub fn zeros(d: usize, rank: usize, beta: f64) -> Self {
+        Self::with_dims(d, d, rank, beta)
+    }
+
     /// Eqs. 5a-5c: fused one-pass EMA update from a batch.
     ///
-    /// `a_in`  (n_b, d): activations entering the layer's weight (A^[l-1])
-    /// `a_out` (n_b, d): activations leaving the nonlinearity (A^[l])
+    /// `a_in`  (n_b, d_in):  activations entering the layer's weight (A^[l-1])
+    /// `a_out` (n_b, d_out): activations leaving the nonlinearity (A^[l])
     pub fn update(
         &mut self,
         a_in: &Mat,
@@ -88,81 +144,6 @@ impl SketchTriplet {
     /// Runtime bytes of the triplet at f32 (memory accountant unit).
     pub fn runtime_bytes(&self) -> usize {
         self.x.runtime_bytes() + self.y.runtime_bytes() + self.z.runtime_bytes()
-    }
-}
-
-/// Stacked triplets for all hidden layers of one network.
-#[derive(Clone, Debug)]
-pub struct LayerSketches {
-    pub layers: Vec<SketchTriplet>,
-    pub proj: Projections,
-}
-
-impl LayerSketches {
-    pub fn new(
-        n_layers: usize,
-        d_hidden: usize,
-        n_b: usize,
-        rank: usize,
-        beta: f64,
-        rng: &mut Rng,
-    ) -> Self {
-        LayerSketches {
-            layers: (0..n_layers)
-                .map(|_| SketchTriplet::zeros(d_hidden, rank, beta))
-                .collect(),
-            proj: Projections::sample(n_b, n_layers, rank, rng),
-        }
-    }
-
-    /// Update every layer's triplet from the forward activations
-    /// `acts[j] = A^[j]` (acts[0] = input batch), matching the python
-    /// indexing: triplet j-1 takes a_in = A^[j-1] for j >= 2 and A^[1]
-    /// itself for j = 1.
-    pub fn update_from_acts(&mut self, acts: &[Mat]) {
-        let n_hidden = acts.len() - 1;
-        assert_eq!(n_hidden, self.layers.len());
-        for j in 1..=n_hidden {
-            let a_in = if j >= 2 { &acts[j - 1] } else { &acts[1] };
-            // Split borrow: triplet j-1 vs shared projections.
-            let proj = &self.proj;
-            self.layers[j - 1].update_ref(a_in, &acts[j], proj, j - 1);
-        }
-    }
-
-    /// Rank change (Algorithm 1 lines 16/21/23): reinitialise projections
-    /// and zero sketches with new k = s = 2r + 1.
-    pub fn reinitialize(&mut self, rank: usize, n_b: usize, rng: &mut Rng) {
-        let n_layers = self.layers.len();
-        let d = self.layers[0].x.rows;
-        let beta = self.layers[0].beta;
-        self.proj = Projections::sample(n_b, n_layers, rank, rng);
-        for t in &mut self.layers {
-            *t = SketchTriplet::zeros(d, rank, beta);
-        }
-    }
-
-    pub fn runtime_bytes(&self) -> usize {
-        let sketches: usize =
-            self.layers.iter().map(|t| t.runtime_bytes()).sum();
-        let proj = self.proj.upsilon.runtime_bytes()
-            + self.proj.omega.runtime_bytes()
-            + self.proj.phi.runtime_bytes()
-            + self.proj.psi.iter().map(|p| p.len() * 4).sum::<usize>();
-        sketches + proj
-    }
-}
-
-impl SketchTriplet {
-    /// Borrow-friendly variant of `update` used by `LayerSketches`.
-    fn update_ref(
-        &mut self,
-        a_in: &Mat,
-        a_out: &Mat,
-        proj: &Projections,
-        layer: usize,
-    ) {
-        self.update(a_in, a_out, proj, layer);
     }
 }
 
@@ -210,25 +191,30 @@ mod tests {
     }
 
     #[test]
-    fn reinitialize_changes_dims_and_zeroes() {
-        let mut rng = Rng::new(6);
-        let mut ls = LayerSketches::new(3, 16, 8, 2, 0.9, &mut rng);
-        let acts: Vec<Mat> =
-            (0..4).map(|_| Mat::gaussian(8, 16, &mut rng)).collect();
-        ls.update_from_acts(&acts);
-        assert!(ls.layers[0].x.fro_norm() > 0.0);
-        ls.reinitialize(4, 8, &mut rng);
-        assert_eq!(ls.proj.k(), 9);
-        assert_eq!(ls.layers[0].x.cols, 9);
-        assert_eq!(ls.layers[0].x.fro_norm(), 0.0);
+    fn with_psi_shares_one_psi_allocation() {
+        let mut rng = Rng::new(8);
+        let base = Projections::sample(6, 2, 3, &mut rng);
+        let other = Projections::with_psi(12, 3, base.psi.clone(), &mut rng);
+        assert!(Arc::ptr_eq(&other.psi, &base.psi), "psi must be shared");
+        assert_eq!(other.n_b(), 12);
+        assert_eq!(other.k(), 7);
     }
 
     #[test]
-    fn runtime_bytes_formula() {
-        let mut rng = Rng::new(7);
-        let ls = LayerSketches::new(2, 32, 16, 2, 0.9, &mut rng);
-        // 2 layers * 3 sketches * 32*5 floats * 4B
-        let sketch_bytes = 2 * 3 * 32 * 5 * 4;
-        assert!(ls.runtime_bytes() >= sketch_bytes);
+    fn heterogeneous_triplet_dims() {
+        let t = SketchTriplet::with_dims(64, 32, 2, 0.9);
+        assert_eq!((t.x.rows, t.x.cols), (64, 5));
+        assert_eq!((t.y.rows, t.y.cols), (32, 5));
+        assert_eq!((t.z.rows, t.z.cols), (32, 5));
+    }
+
+    #[test]
+    fn psi_bytes_counts_f64_storage() {
+        // Psi is stored as f64: the accountant must charge 8 B/element
+        // (the seed under-counted at 4 B).
+        let mut rng = Rng::new(9);
+        let proj = Projections::sample(4, 3, 2, &mut rng);
+        assert_eq!(proj.psi_bytes(), 3 * 5 * 8);
+        assert_eq!(proj.batch_bytes(4), 3 * 4 * 5 * 4);
     }
 }

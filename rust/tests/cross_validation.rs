@@ -51,7 +51,10 @@ fn recon_eval_cross_rank_agreement() {
             upsilon: Mat::from_f32(n_b, k, &ups),
             omega: Mat::from_f32(n_b, k, &omg),
             phi: Mat::from_f32(n_b, k, &phi),
-            psi: vec![psi.iter().map(|&x| x as f64).collect()],
+            psi: std::sync::Arc::new(vec![psi
+                .iter()
+                .map(|&x| x as f64)
+                .collect()]),
             rank: r,
         };
         let mut t = SketchTriplet::zeros(d, r, 0.0);
@@ -74,27 +77,34 @@ fn recon_eval_cross_rank_agreement() {
     }
 }
 
-/// EMA recursion vs Lemma 4.1 closed form in the native substrate.
+/// EMA recursion vs Lemma 4.1 closed form in the native substrate,
+/// through the public engine API.
 #[test]
 fn ema_composition_matches() {
-    let (n_b, d, r) = (16usize, 32usize, 2usize);
+    use sketchgrad::sketch::{SketchConfig, Sketcher};
+    let (n_b, d) = (16usize, 32usize);
     let beta = 0.9;
     let mut rng = Rng::new(55);
-    let proj = Projections::sample(n_b, 1, r, &mut rng);
+    let mut engine = SketchConfig::builder()
+        .layer_dims(&[d])
+        .rank(2)
+        .beta(beta)
+        .seed(55)
+        .build_engine()
+        .unwrap();
     let batches: Vec<Mat> =
         (0..4).map(|_| Mat::gaussian(n_b, d, &mut rng)).collect();
-
-    let mut t = SketchTriplet::zeros(d, r, beta);
     for b in &batches {
-        t.update(b, b, &proj, 0);
+        engine.ingest(&[b.clone(), b.clone()]).unwrap();
     }
+    let proj = engine.projections(n_b).unwrap();
     let n = batches.len();
     let mut want = Mat::zeros(d, proj.k());
     for (j, b) in batches.iter().enumerate() {
         let w = (1.0 - beta) * beta.powi((n - 1 - j) as i32);
         want = want.add(&b.t_matmul(&proj.upsilon).scale(w));
     }
-    assert!(t.x.max_abs_diff(&want) < 1e-10);
+    assert!(engine.layers()[0].x.max_abs_diff(&want) < 1e-10);
 }
 
 /// Stable-rank estimates agree between power iteration and exact Jacobi.

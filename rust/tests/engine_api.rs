@@ -1,0 +1,261 @@
+//! Property tests for the builder-configured `SketchEngine`: Lemma 4.1
+//! must hold per layer at heterogeneous widths, variable batch sizes
+//! (including tail batches smaller than the nominal n_b) must accumulate
+//! consistently, rank changes through `set_rank` must re-initialise, and
+//! measured memory must match the fixed accountant.  None of these were
+//! expressible with the seed `LayerSketches::new(n_layers, d_hidden, ...)`
+//! API, which pinned every layer to one width and one batch size.
+
+use sketchgrad::sketch::{
+    engine_state_bytes, Mat, Precision, SketchConfig, Sketcher,
+};
+use sketchgrad::util::prop::Prop;
+use sketchgrad::util::rng::Rng;
+
+/// Random heterogeneous hidden widths (2-4 layers, distinct dims).
+fn random_dims(rng: &mut Rng, case: usize) -> Vec<usize> {
+    let n_layers = 2 + case % 3;
+    (0..n_layers)
+        .map(|l| 8 + 4 * l + rng.below(24) as usize)
+        .collect()
+}
+
+fn random_acts(n_b: usize, dims: &[usize], rng: &mut Rng) -> Vec<Mat> {
+    let mut acts = vec![Mat::gaussian(n_b, 6, rng)];
+    for &d in dims {
+        acts.push(Mat::gaussian(n_b, d, rng));
+    }
+    acts
+}
+
+/// Lemma 4.1 expansion per layer at that layer's own width:
+/// X_n^[l] = (1-beta) sum_j beta^{n-j} (A_in,j^[l])^T Upsilon.
+#[test]
+fn lemma_4_1_holds_per_layer_at_distinct_dims() {
+    Prop::new(12).check("hetero_lemma41", |rng, case| {
+        let dims = random_dims(rng, case);
+        let n_b = 5 + case % 6;
+        let beta = 0.85;
+        let rank = 1 + case % 3;
+        let mut engine = SketchConfig::builder()
+            .layer_dims(&dims)
+            .rank(rank)
+            .beta(beta)
+            .seed(1000 + case as u64)
+            .build_engine()
+            .map_err(|e| e.to_string())?;
+        let batches: Vec<Vec<Mat>> =
+            (0..4).map(|_| random_acts(n_b, &dims, rng)).collect();
+        for acts in &batches {
+            engine.ingest(acts).map_err(|e| e.to_string())?;
+        }
+        let proj = engine
+            .projections(n_b)
+            .ok_or("projections for n_b missing")?;
+        let n = batches.len();
+        for (l, &d) in dims.iter().enumerate() {
+            // a_in for layer l: acts[l] for l >= 1, acts[1] for l == 0.
+            let expected_d_in = if l == 0 { dims[0] } else { dims[l - 1] };
+            let mut want = Mat::zeros(expected_d_in, engine.k());
+            for (j, acts) in batches.iter().enumerate() {
+                let a_in = if l == 0 { &acts[1] } else { &acts[l] };
+                let w = (1.0 - beta) * beta.powi((n - 1 - j) as i32);
+                want = want.add(&a_in.t_matmul(&proj.upsilon).scale(w));
+            }
+            let x = &engine.layers()[l].x;
+            if (x.rows, x.cols) != (expected_d_in, engine.k()) {
+                return Err(format!(
+                    "layer {l}: X is {}x{}, want {}x{}",
+                    x.rows,
+                    x.cols,
+                    expected_d_in,
+                    engine.k()
+                ));
+            }
+            let diff = x.max_abs_diff(&want);
+            if diff > 1e-10 {
+                return Err(format!("layer {l} (d={d}): X diff {diff}"));
+            }
+            // Y/Z live at the layer's own width.
+            if engine.layers()[l].y.rows != d {
+                return Err(format!("layer {l}: Y width {}", d));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// Variable batch sizes: a nominal batch stream with a smaller tail batch
+/// must (a) ingest without error, (b) cache one projection set per
+/// distinct size, and (c) keep each size's EMA contribution tied to that
+/// size's own fixed Upsilon (checked via the two-size Lemma-4.1
+/// expansion).
+#[test]
+fn variable_batch_sizes_accumulate_consistently() {
+    Prop::new(10).check("variable_nb", |rng, case| {
+        let dims = vec![16 + case, 8 + case]; // mildly heterogeneous
+        let beta = 0.9;
+        let (n_b, tail) = (12, 5);
+        let mut engine = SketchConfig::builder()
+            .layer_dims(&dims)
+            .rank(2)
+            .beta(beta)
+            .seed(2000 + case as u64)
+            .build_engine()
+            .map_err(|e| e.to_string())?;
+        let mut batches = Vec::new();
+        for step in 0..5 {
+            let nb = if step == 4 { tail } else { n_b };
+            batches.push(random_acts(nb, &dims, rng));
+        }
+        for acts in &batches {
+            engine.ingest(acts).map_err(|e| e.to_string())?;
+        }
+        if engine.batch_sizes_seen() != vec![tail, n_b] {
+            return Err(format!(
+                "batch sizes seen {:?}",
+                engine.batch_sizes_seen()
+            ));
+        }
+        // Two-size expansion for layer 0 (a_in = acts[1]).
+        let proj_full = engine.projections(n_b).unwrap().upsilon.clone();
+        let proj_tail = engine.projections(tail).unwrap().upsilon.clone();
+        let n = batches.len();
+        let mut want = Mat::zeros(dims[0], engine.k());
+        for (j, acts) in batches.iter().enumerate() {
+            let ups = if acts[1].rows == tail {
+                &proj_tail
+            } else {
+                &proj_full
+            };
+            let w = (1.0 - beta) * beta.powi((n - 1 - j) as i32);
+            want = want.add(&acts[1].t_matmul(ups).scale(w));
+        }
+        let diff = engine.layers()[0].x.max_abs_diff(&want);
+        if diff > 1e-10 {
+            return Err(format!("two-size expansion diff {diff}"));
+        }
+        // Reconstruction after the tail batch uses the tail omega.
+        let recon = engine.reconstruct(0).map_err(|e| e.to_string())?;
+        if recon.rows != tail || recon.cols != dims[0] {
+            return Err(format!("recon {}x{}", recon.rows, recon.cols));
+        }
+        if !recon.data.iter().all(|x| x.is_finite()) {
+            return Err("non-finite reconstruction".into());
+        }
+        Ok(())
+    });
+}
+
+/// `set_rank` re-initialises sketches/projections at the new k and the
+/// engine keeps working across several rank hops.
+#[test]
+fn set_rank_walks_the_ladder() {
+    Prop::new(8).check("set_rank", |rng, case| {
+        let dims = vec![20, 10];
+        let mut engine = SketchConfig::builder()
+            .layer_dims(&dims)
+            .rank(2)
+            .seed(3000 + case as u64)
+            .build_engine()
+            .map_err(|e| e.to_string())?;
+        for &r in &[4usize, 8, 2, 16] {
+            engine.ingest(&random_acts(9, &dims, rng))
+                .map_err(|e| e.to_string())?;
+            engine.set_rank(r);
+            let k = 2 * r + 1;
+            if engine.k() != k {
+                return Err(format!("k {} after set_rank({r})", engine.k()));
+            }
+            for (l, t) in engine.layers().iter().enumerate() {
+                if t.x.cols != k || t.y.cols != k || t.z.cols != k {
+                    return Err(format!("layer {l} cols not {k}"));
+                }
+                if t.x.fro_norm() != 0.0 || t.updates != 0 {
+                    return Err(format!("layer {l} not zeroed"));
+                }
+            }
+            if !engine.batch_sizes_seen().is_empty() {
+                return Err("projection cache survived set_rank".into());
+            }
+            // Engine must accept new batches at the new rank.
+            engine.ingest(&random_acts(7, &dims, rng))
+                .map_err(|e| e.to_string())?;
+            if engine.layers()[0].x.fro_norm() == 0.0 {
+                return Err("no accumulation after rank change".into());
+            }
+            engine.set_rank(2); // reset between ladder hops
+        }
+        Ok(())
+    });
+}
+
+/// Measured memory == fixed accountant, across precisions, dims and
+/// observed batch-size sets (within 1% is the CLI gate; here exact).
+#[test]
+fn memory_matches_accountant_property() {
+    Prop::new(10).check("memory", |rng, case| {
+        let dims = random_dims(rng, case);
+        let rank = 1 + case % 4;
+        for precision in [Precision::F32, Precision::F64] {
+            let mut engine = SketchConfig::builder()
+                .layer_dims(&dims)
+                .rank(rank)
+                .precision(precision)
+                .seed(4000 + case as u64)
+                .build_engine()
+                .map_err(|e| e.to_string())?;
+            let sizes = [6usize, 13, 6];
+            for &nb in &sizes {
+                engine.ingest(&random_acts(nb, &dims, rng))
+                    .map_err(|e| e.to_string())?;
+            }
+            let expected = engine_state_bytes(
+                &dims,
+                rank,
+                &sizes,
+                precision.bytes(),
+            );
+            if engine.memory() != expected {
+                return Err(format!(
+                    "measured {} vs accountant {expected} ({precision:?})",
+                    engine.memory()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+/// The acceptance-criterion architecture verbatim: an MLP with
+/// non-uniform hidden widths 128/64/32 and a tail batch smaller than
+/// n_b — both impossible with the seed API.
+#[test]
+fn funnel_mlp_with_tail_batch() {
+    let dims = [128usize, 64, 32];
+    let mut engine = SketchConfig::builder()
+        .layer_dims(&dims)
+        .rank(4)
+        .beta(0.9)
+        .seed(42)
+        .build_engine()
+        .unwrap();
+    let mut rng = Rng::new(11);
+    for step in 0..12 {
+        let nb = if step == 11 { 17 } else { 64 }; // tail < n_b
+        engine.ingest(&random_acts(nb, &dims, &mut rng)).unwrap();
+    }
+    assert_eq!(engine.batch_sizes_seen(), vec![17, 64]);
+    let metrics = engine.metrics();
+    assert_eq!(metrics.len(), 3);
+    for (l, m) in metrics.iter().enumerate() {
+        assert!(m.z_norm > 0.0, "layer {l} Z empty");
+        // Gaussian activations: stable rank should be a healthy fraction
+        // of k = 9 at every width.
+        assert!(m.stable_rank > 3.0, "layer {l} sr {}", m.stable_rank);
+    }
+    assert_eq!(
+        engine.memory(),
+        engine.config().expected_bytes(&[64, 17])
+    );
+}

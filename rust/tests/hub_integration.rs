@@ -1,0 +1,191 @@
+//! MonitorHub integration: a healthy and a problematic training run
+//! execute concurrently (one thread + one private `SketchEngine` each,
+//! heterogeneous widths, tail batches), stream their sketch metrics into
+//! one hub, and only the problematic session may be diagnosed.
+
+use std::sync::{mpsc, Arc, Barrier};
+use std::thread;
+
+use sketchgrad::coordinator::StepMetrics;
+use sketchgrad::data::ActStream;
+use sketchgrad::monitor::{step_metrics, MonitorConfig, MonitorHub};
+use sketchgrad::sketch::{SketchConfig, Sketcher};
+
+const STEPS: usize = 120;
+const N_B: usize = 32;
+const TAIL: usize = 9;
+
+/// Produce one run's metric stream on its own thread, from the shared
+/// `ActStream` generator (healthy: full-rank gaussian activations,
+/// decaying loss; problematic: direction-collapsed activations, flat
+/// loss — the same streams `sketchgrad hub` demos).
+fn run_session(
+    idx: usize,
+    dims: Vec<usize>,
+    problematic: bool,
+    seed: u64,
+    start: Arc<Barrier>,
+    tx: mpsc::Sender<(usize, StepMetrics, usize)>,
+) -> thread::JoinHandle<()> {
+    thread::spawn(move || {
+        let mut engine = SketchConfig::builder()
+            .layer_dims(&dims)
+            .rank(4)
+            .beta(0.9)
+            .seed(seed)
+            .build_engine()
+            .unwrap();
+        let mut stream = ActStream::new(&dims, problematic, seed);
+        start.wait();
+        for step in 0..STEPS {
+            let nb = if step == STEPS - 1 { TAIL } else { N_B };
+            engine.ingest(&stream.next_batch(nb)).unwrap();
+            let m = step_metrics(stream.loss_at(step, STEPS), &engine.metrics());
+            tx.send((idx, m, engine.memory())).unwrap();
+        }
+    })
+}
+
+#[test]
+fn healthy_and_problematic_concurrent_only_problematic_flagged() {
+    let archs: Vec<(Vec<usize>, bool)> = vec![
+        (vec![128, 64, 32], false), // healthy funnel MLP
+        (vec![96, 48], true),       // problematic
+    ];
+    let mut hub = MonitorHub::new();
+    let cfg = || MonitorConfig {
+        window: STEPS / 4,
+        collapse_frac: 0.25,
+        ..MonitorConfig::for_rank(4)
+    };
+    let ids: Vec<_> = archs
+        .iter()
+        .map(|(dims, problematic)| {
+            let name = if *problematic { "problematic" } else { "healthy" };
+            hub.register(name, cfg(), dims.len())
+        })
+        .collect();
+
+    let (tx, rx) = mpsc::channel();
+    let start = Arc::new(Barrier::new(archs.len()));
+    let handles: Vec<_> = archs
+        .iter()
+        .enumerate()
+        .map(|(i, (dims, problematic))| {
+            run_session(
+                i,
+                dims.clone(),
+                *problematic,
+                42 + i as u64,
+                start.clone(),
+                tx.clone(),
+            )
+        })
+        .collect();
+    drop(tx);
+
+    let mut sketch_bytes = vec![0usize; archs.len()];
+    let mut interleaved = 0u32;
+    let mut last_idx = usize::MAX;
+    for (idx, metrics, mem) in rx {
+        if idx != last_idx {
+            interleaved += 1;
+            last_idx = idx;
+        }
+        hub.observe(ids[idx], &metrics).unwrap();
+        sketch_bytes[idx] = mem;
+    }
+    for h in handles {
+        h.join().unwrap();
+    }
+    for (i, &bytes) in sketch_bytes.iter().enumerate() {
+        hub.report_sketch_bytes(ids[i], bytes).unwrap();
+    }
+
+    // Both sessions delivered their full streams.
+    for &id in &ids {
+        assert_eq!(hub.session(id).unwrap().steps_seen(), STEPS as u64);
+    }
+    // The streams normally interleave (more handoffs than a sequential
+    // run's one-per-session); a loaded scheduler can legally serialize
+    // them, so record rather than assert — correctness of the hub does
+    // not depend on arrival order.
+    if interleaved <= archs.len() as u32 {
+        eprintln!(
+            "note: producer streams arrived sequentially \
+             ({interleaved} handoffs) — scheduler did not interleave"
+        );
+    }
+
+    let healthy = hub.session(ids[0]).unwrap();
+    let problematic = hub.session(ids[1]).unwrap();
+    assert!(
+        healthy.is_healthy(),
+        "healthy flagged: {:?}",
+        healthy.diagnose()
+    );
+    assert!(
+        !problematic.is_healthy(),
+        "problematic not flagged: {:?}",
+        problematic.diagnose()
+    );
+    let d = problematic.diagnose();
+    assert!(d.diversity_collapse, "{d:?}");
+    assert!(d.stagnation, "{d:?}");
+
+    let report = hub.aggregate();
+    assert_eq!(report.sessions, 2);
+    assert_eq!(report.healthy, 1);
+    assert_eq!(report.flagged.len(), 1);
+    assert_eq!(report.flagged[0].1, "problematic");
+    assert_eq!(report.steps_seen, 2 * STEPS as u64);
+
+    // Memory accounting: each tenant's measured engine bytes match the
+    // fixed accountant within 1% (exact, in fact).
+    for (i, (dims, _)) in archs.iter().enumerate() {
+        let expected = sketchgrad::sketch::engine_state_bytes(
+            dims,
+            4,
+            &[N_B, TAIL],
+            4,
+        );
+        let rel = (sketch_bytes[i] as f64 - expected as f64).abs()
+            / expected as f64;
+        assert!(
+            rel <= 0.01,
+            "session {i}: measured {} vs accountant {expected}",
+            sketch_bytes[i]
+        );
+    }
+    assert_eq!(
+        report.sketch_bytes,
+        sketch_bytes.iter().sum::<usize>()
+    );
+}
+
+/// Sessions can come and go while others keep streaming — the hub's
+/// accounting follows the tenant set.
+#[test]
+fn tenant_churn() {
+    let cfg = MonitorConfig::for_rank(2);
+    let mut hub = MonitorHub::new();
+    let a = hub.register("a", cfg.clone(), 2);
+    let m0 = hub.memory();
+    let b = hub.register("b", cfg.clone(), 2);
+    let c = hub.register("c", cfg, 2);
+    assert_eq!(hub.memory(), 3 * m0);
+    let sample = StepMetrics {
+        loss: 1.0,
+        z_norm: vec![1.0; 2],
+        stable_rank: vec![4.0; 2],
+        ..Default::default()
+    };
+    hub.observe(b, &sample).unwrap();
+    hub.deregister(a).unwrap();
+    assert_eq!(hub.memory(), 2 * m0);
+    hub.observe(b, &sample).unwrap();
+    hub.observe(c, &sample).unwrap();
+    assert!(hub.observe(a, &sample).is_err());
+    assert_eq!(hub.session(b).unwrap().steps_seen(), 2);
+    assert_eq!(hub.len(), 2);
+}

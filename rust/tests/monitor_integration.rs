@@ -126,8 +126,16 @@ fn measured_monitoring_memory_ratio() {
     let svc = MonitorService::new(MonitorConfig::for_rank(4), 15);
     // Sketch state (1.6 MB) + service summaries vs 295 MB of checkpoints.
     let sketch_state = {
-        use sketchgrad::sketch::LayerSketches;
-        LayerSketches::new(15, 1024, 128, 4, 0.9, &mut rng).runtime_bytes()
+        use sketchgrad::sketch::{SketchConfig, Sketcher};
+        let mut engine = SketchConfig::builder()
+            .uniform_dims(15, 1024)
+            .rank(4)
+            .beta(0.9)
+            .seed(3)
+            .build_engine()
+            .unwrap();
+        engine.ensure_projections(128);
+        engine.memory()
     };
     let total_sketch = sketch_state + svc.monitor_bytes();
     let reduction = 1.0 - total_sketch as f64 / full.bytes() as f64;

@@ -160,7 +160,10 @@ fn recon_eval_matches_rust_substrate() {
         upsilon: Mat::from_f32(n_b, k, &ups),
         omega: Mat::from_f32(n_b, k, &omg),
         phi: Mat::from_f32(n_b, k, &phi),
-        psi: vec![psi.iter().map(|&x| x as f64).collect()],
+        psi: std::sync::Arc::new(vec![psi
+            .iter()
+            .map(|&x| x as f64)
+            .collect()]),
         rank,
     };
     let mut t = SketchTriplet::zeros(d, rank, 0.0);
