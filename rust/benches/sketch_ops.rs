@@ -1,20 +1,131 @@
 //! Micro-benchmarks for the native sketching substrate hot paths: engine
-//! ingest (EMA triplet update), fused vs unfused reconstruction (the L3
-//! perf item), and the monitoring metric kernels.
-//! Run: `cargo bench --bench sketch_ops`.
+//! ingest (EMA triplet update) serial vs threaded, fused vs unfused
+//! reconstruction, and the monitoring metric kernels.
+//!
+//! Run: `cargo bench --bench sketch_ops` (add `-- --quick` for the cheap
+//! CI sizing).  Always writes `BENCH_sketch.json` — ns/op per bench plus
+//! `ingest_speedup_2t/4t` summary scalars — which the CI `bench-smoke`
+//! job uploads and gates on.  The parallel path is also numerically
+//! cross-checked against serial here (<= 1e-12, expected bitwise) so a
+//! kernel regression fails the bench run itself.
 
-use sketchgrad::benchkit::Bench;
+use sketchgrad::benchkit::{quick_requested, Bench};
 use sketchgrad::sketch::metrics::stable_rank_power;
 use sketchgrad::sketch::reconstruct::reconstruct_batch_unfused;
-use sketchgrad::sketch::{Mat, SketchConfig, Sketcher};
+use sketchgrad::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
 use sketchgrad::util::rng::Rng;
 
+const BENCH_JSON: &str = "BENCH_sketch.json";
+
+/// The default shape the CI perf gate compares at: enough layers for the
+/// per-layer fan-out to occupy 4 workers, wide enough that each triplet
+/// update is kernel-bound rather than spawn-bound.
+const BENCH_DIMS: [usize; 8] = [512; 8];
+const BENCH_NB: usize = 128;
+const BENCH_RANK: usize = 8;
+
+fn bench_engine(threads: usize) -> SketchEngine {
+    SketchConfig::builder()
+        .layer_dims(&BENCH_DIMS)
+        .rank(BENCH_RANK)
+        .beta(0.95)
+        .seed(42)
+        .threads(threads)
+        .build_engine()
+        .unwrap()
+}
+
+fn bench_acts(rng: &mut Rng) -> Vec<Mat> {
+    let mut acts = vec![Mat::gaussian(BENCH_NB, BENCH_DIMS[0], rng)];
+    for &d in &BENCH_DIMS {
+        acts.push(Mat::gaussian(BENCH_NB, d, rng));
+    }
+    acts
+}
+
+/// Parallel-vs-serial numerics witness: same seed and batches (including a
+/// tail batch), triplet state must agree to <= 1e-12 (bitwise, per the
+/// kernel determinism contract).
+fn max_parallel_divergence() -> f64 {
+    let mut serial = bench_engine(1);
+    let mut par = bench_engine(4);
+    let mut max_diff: f64 = 0.0;
+    for step in 0..3 {
+        let mut rng = Rng::new(7 + step);
+        let mut acts = bench_acts(&mut rng);
+        if step == 2 {
+            // Tail batch: truncate every activation to 1/3 of the rows.
+            let tail = BENCH_NB / 3;
+            acts = acts
+                .iter()
+                .map(|a| {
+                    Mat::from_vec(
+                        tail,
+                        a.cols,
+                        a.data[..tail * a.cols].to_vec(),
+                    )
+                })
+                .collect();
+        }
+        serial.ingest(&acts).unwrap();
+        par.ingest(&acts).unwrap();
+    }
+    max_diff = max_diff.max(serial.max_state_diff(&par));
+    for l in 0..serial.n_layers() {
+        let rs = serial.reconstruct(l).unwrap();
+        let rp = par.reconstruct(l).unwrap();
+        max_diff = max_diff.max(rs.max_abs_diff(&rp));
+    }
+    max_diff
+}
+
 fn main() {
-    let mut bench = Bench::new(2, 10);
-    let (n_b, d) = (128usize, 512usize);
+    let quick = quick_requested();
+    let mut bench = Bench::sized(quick);
     let mut rng = Rng::new(42);
 
-    for rank in [2usize, 4, 8, 16] {
+    // --- serial vs threaded ingest/reconstruct at the default shape ---
+    let acts = bench_acts(&mut rng);
+    let act_bytes: usize = acts.iter().map(|a| a.data.len() * 8).sum();
+    for threads in [1usize, 2, 4] {
+        let mut engine = bench_engine(threads);
+        engine.ingest(&acts).unwrap();
+        let bytes = engine.memory() + act_bytes;
+        let suffix = if threads == 1 {
+            "serial".to_string()
+        } else {
+            format!("threads{threads}")
+        };
+        bench.run_bytes(
+            &format!("ingest_{suffix}"),
+            Some((1.0, "updates/s")),
+            Some(bytes),
+            || {
+                engine.ingest(&acts).unwrap();
+            },
+        );
+        bench.run_bytes(
+            &format!("reconstruct_{suffix}"),
+            Some((1.0, "recon/s")),
+            Some(bytes),
+            || {
+                let _ = engine.reconstruct(0).unwrap();
+            },
+        );
+    }
+
+    let speedup = |a: &str, b: &str| {
+        bench.result(a).unwrap().ns_per_op() / bench.result(b).unwrap().ns_per_op()
+    };
+    let ingest_2t = speedup("ingest_serial", "ingest_threads2");
+    let ingest_4t = speedup("ingest_serial", "ingest_threads4");
+    let recon_4t = speedup("reconstruct_serial", "reconstruct_threads4");
+    let divergence = max_parallel_divergence();
+
+    // --- the original per-rank micro-benches ---
+    let (n_b, d) = (128usize, 512usize);
+    let ranks: &[usize] = if quick { &[2, 8] } else { &[2, 4, 8, 16] };
+    for &rank in ranks {
         let mut engine = SketchConfig::builder()
             .layer_dims(&[d])
             .rank(rank)
@@ -58,11 +169,36 @@ fn main() {
         );
     }
 
-    // Stable-rank power iteration on a wide matrix (the Fig-5 metric).
-    let y = Mat::gaussian(1024, 9, &mut rng);
-    bench.run("stable_rank_power 1024x9", None, || {
-        let _ = stable_rank_power(&y, 24);
-    });
+    if !quick {
+        // Stable-rank power iteration on a wide matrix (the Fig-5 metric).
+        let y = Mat::gaussian(1024, 9, &mut rng);
+        bench.run("stable_rank_power 1024x9", None, || {
+            let _ = stable_rank_power(&y, 24);
+        });
+    }
 
     bench.report("sketch substrate micro-benches (native rust)");
+    println!(
+        "\ningest speedup: 2t {ingest_2t:.2}x, 4t {ingest_4t:.2}x | \
+         reconstruct 4t {recon_4t:.2}x | parallel divergence {divergence:.2e}"
+    );
+    bench
+        .write_json(
+            "sketch substrate micro-benches",
+            quick,
+            &[
+                ("ingest_speedup_2t", ingest_2t),
+                ("ingest_speedup_4t", ingest_4t),
+                ("reconstruct_speedup_4t", recon_4t),
+                ("parallel_max_abs_diff", divergence),
+            ],
+            BENCH_JSON,
+        )
+        .expect("write BENCH_sketch.json");
+    println!("wrote {BENCH_JSON}");
+
+    if divergence > 1e-12 {
+        eprintln!("FAIL: parallel ingest diverged from serial ({divergence:.2e} > 1e-12)");
+        std::process::exit(1);
+    }
 }

@@ -1,8 +1,11 @@
 //! Mini-criterion (criterion is unavailable offline): warmup + timed
 //! iterations with mean/p50/p95 and throughput, plus markdown table output
-//! shared by all `cargo bench` targets.
+//! shared by all `cargo bench` targets and a machine-readable JSON
+//! reporter (`write_json`) consumed by the CI `bench-smoke` perf gate.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::{obj, Json};
 
 #[derive(Clone, Debug)]
 pub struct BenchResult {
@@ -14,9 +17,36 @@ pub struct BenchResult {
     pub min: Duration,
     /// Optional user-supplied throughput unit (e.g. steps/s).
     pub throughput: Option<(f64, &'static str)>,
+    /// Optional bytes touched per op (sketch state + activations) for the
+    /// JSON reporter's bandwidth view.
+    pub bytes: Option<usize>,
 }
 
 impl BenchResult {
+    /// Mean nanoseconds per op — the unit the CI perf gate compares.
+    pub fn ns_per_op(&self) -> f64 {
+        self.mean.as_secs_f64() * 1e9
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::Str(self.name.clone())),
+            ("ns_per_op", Json::Num(self.ns_per_op())),
+            ("p50_ns", Json::Num(self.p50.as_secs_f64() * 1e9)),
+            ("p95_ns", Json::Num(self.p95.as_secs_f64() * 1e9)),
+            ("min_ns", Json::Num(self.min.as_secs_f64() * 1e9)),
+            ("iters", Json::Num(self.iters as f64)),
+        ];
+        if let Some(b) = self.bytes {
+            pairs.push(("bytes", Json::Num(b as f64)));
+        }
+        if let Some((v, unit)) = self.throughput {
+            pairs.push(("throughput", Json::Num(v)));
+            pairs.push(("throughput_unit", Json::Str(unit.to_string())));
+        }
+        obj(pairs)
+    }
+
     pub fn row(&self) -> String {
         let tp = match self.throughput {
             Some((v, unit)) => format!("{v:.1} {unit}"),
@@ -70,12 +100,33 @@ impl Bench {
         }
     }
 
+    /// CI-friendly sizing: `quick` trades statistical depth for runtime.
+    pub fn sized(quick: bool) -> Self {
+        if quick {
+            Bench::new(1, 5)
+        } else {
+            Bench::default()
+        }
+    }
+
     /// Time `f` over the configured iterations.  `work` gives an optional
     /// per-iteration work amount for throughput (e.g. steps per call).
     pub fn run<F: FnMut()>(
         &mut self,
         name: &str,
         work: Option<(f64, &'static str)>,
+        f: F,
+    ) -> &BenchResult {
+        self.run_bytes(name, work, None, f)
+    }
+
+    /// [`Bench::run`] recording the bytes each op touches (for the JSON
+    /// reporter's bandwidth view).
+    pub fn run_bytes<F: FnMut()>(
+        &mut self,
+        name: &str,
+        work: Option<(f64, &'static str)>,
+        bytes: Option<usize>,
         mut f: F,
     ) -> &BenchResult {
         for _ in 0..self.warmup {
@@ -101,8 +152,15 @@ impl Bench {
             p95,
             min,
             throughput,
+            bytes,
         });
         self.results.last().unwrap()
+    }
+
+    /// Look a result up by name (for cross-result summaries like the
+    /// serial-vs-threaded speedup the CI gate checks).
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
     }
 
     /// Print the accumulated results as a markdown table.
@@ -114,6 +172,46 @@ impl Bench {
             println!("{}", r.row());
         }
     }
+
+    /// The machine-readable report: all results plus caller-supplied
+    /// summary scalars (e.g. `ingest_speedup_4t`), as one JSON object.
+    pub fn to_json(
+        &self,
+        title: &str,
+        quick: bool,
+        summary: &[(&str, f64)],
+    ) -> Json {
+        let mut pairs = vec![
+            ("title", Json::Str(title.to_string())),
+            ("quick", Json::Bool(quick)),
+            (
+                "results",
+                Json::Arr(self.results.iter().map(|r| r.to_json()).collect()),
+            ),
+        ];
+        for &(k, v) in summary {
+            pairs.push((k, Json::Num(v)));
+        }
+        obj(pairs)
+    }
+
+    /// Write the JSON report to `path` (the CI `bench-smoke` artifact).
+    pub fn write_json(
+        &self,
+        title: &str,
+        quick: bool,
+        summary: &[(&str, f64)],
+        path: &str,
+    ) -> std::io::Result<()> {
+        std::fs::write(path, self.to_json(title, quick, summary).to_string())
+    }
+}
+
+/// `--quick` on the bench command line (`cargo bench -- --quick`) or
+/// `BENCH_QUICK=1` in the environment: the cheap CI sizing.
+pub fn quick_requested() -> bool {
+    std::env::args().any(|a| a == "--quick")
+        || std::env::var("BENCH_QUICK").as_deref() == Ok("1")
 }
 
 #[cfg(test)]
@@ -137,5 +235,33 @@ mod tests {
         b.run("noop", None, || {});
         let row = b.results[0].row();
         assert!(row.contains("noop"));
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let mut b = Bench::new(0, 3);
+        b.run_bytes("ingest_serial", Some((1.0, "ops/s")), Some(4096), || {});
+        b.run("ingest_threads4", None, || {});
+        let j = b.to_json("sketch", true, &[("ingest_speedup_4t", 1.5)]);
+        let parsed = Json::parse(&j.to_string()).unwrap();
+        assert_eq!(parsed.get("title").unwrap().as_str().unwrap(), "sketch");
+        assert_eq!(parsed.get("quick").unwrap(), &Json::Bool(true));
+        assert_eq!(
+            parsed.get("ingest_speedup_4t").unwrap().as_f64().unwrap(),
+            1.5
+        );
+        let results = parsed.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 2);
+        assert_eq!(
+            results[0].get("name").unwrap().as_str().unwrap(),
+            "ingest_serial"
+        );
+        assert_eq!(results[0].get("bytes").unwrap().as_usize().unwrap(), 4096);
+        assert!(results[0].get("ns_per_op").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(results[1].get("bytes").is_err(), "no bytes recorded");
+        assert_eq!(
+            b.result("ingest_threads4").unwrap().name,
+            "ingest_threads4"
+        );
     }
 }

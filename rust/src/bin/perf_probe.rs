@@ -1,12 +1,125 @@
 //! Perf probe (EXPERIMENTS.md §Perf L3): execution-vs-transfer split per
 //! artifact, steps/s, and monitor-service ingestion cost.
+//!
+//! `--native` probes the pure-rust sketch substrate instead (serial vs
+//! threaded ingest + reconstruct + a hub diagnosis sweep) and needs no
+//! AOT artifacts — this is the CI smoke-test mode.
 
-use anyhow::Result;
+use std::time::Instant;
+
+use anyhow::{bail, Result};
 use sketchgrad::coordinator::{open_runtime, Trainer};
-use sketchgrad::data::{make_chunks, synth_mnist, Init};
+use sketchgrad::data::{make_chunks, synth_mnist, ActStream, Init};
+use sketchgrad::monitor::{step_metrics, MonitorConfig, MonitorHub};
+use sketchgrad::sketch::{Mat, Parallelism, SketchConfig, Sketcher};
 use sketchgrad::util::rng::Rng;
 
 fn main() -> Result<()> {
+    if std::env::args().any(|a| a == "--native") {
+        return native_probe();
+    }
+    artifact_probe()
+}
+
+/// Native-substrate probe: no artifacts, exercises the kernel worker
+/// pool and the hub fan-out end to end.  Exits nonzero only if the
+/// parallel path diverges from serial (> 1e-12); timing is reported but
+/// never gated here — a 10-step sample on a shared runner is too noisy,
+/// and the strict perf gate lives in the CI `bench-smoke` job.
+fn native_probe() -> Result<()> {
+    let dims = vec![512usize; 8];
+    let (n_b, rank, steps) = (128usize, 8usize, 10usize);
+    let mut rng = Rng::new(42);
+    let mut acts = vec![Mat::gaussian(n_b, dims[0], &mut rng)];
+    for &d in &dims {
+        acts.push(Mat::gaussian(n_b, d, &mut rng));
+    }
+
+    let mut timings = Vec::new();
+    let mut engines = Vec::new();
+    for threads in [1usize, 4] {
+        let mut engine = SketchConfig::builder()
+            .layer_dims(&dims)
+            .rank(rank)
+            .beta(0.95)
+            .seed(42)
+            .threads(threads)
+            .build_engine()?;
+        let t0 = Instant::now();
+        for _ in 0..steps {
+            engine.ingest(&acts)?;
+        }
+        let ingest = t0.elapsed().as_secs_f64() / steps as f64;
+        let t0 = Instant::now();
+        let _ = engine.reconstruct(0)?;
+        let recon = t0.elapsed().as_secs_f64();
+        println!(
+            "native substrate ({}): ingest {:.2} ms/update ({:.1} updates/s), \
+             reconstruct {:.2} ms",
+            Parallelism::from_threads(threads),
+            ingest * 1e3,
+            1.0 / ingest,
+            recon * 1e3,
+        );
+        timings.push(ingest);
+        engines.push(engine);
+    }
+    let divergence = engines[0].max_state_diff(&engines[1]);
+    println!(
+        "ingest speedup 4t: {:.2}x, parallel divergence {:.2e}",
+        timings[0] / timings[1],
+        divergence
+    );
+    if divergence > 1e-12 {
+        bail!("parallel ingest diverged from serial: {divergence:.2e}");
+    }
+    if timings[1] > timings[0] {
+        println!(
+            "note: threaded ingest slower than serial on this sample \
+             ({:.2} vs {:.2} ms) — not gated here, see bench-smoke",
+            timings[1] * 1e3,
+            timings[0] * 1e3
+        );
+    }
+
+    // Hub fan-out: 8 tenants of synthetic streams, parallel diagnosis.
+    let mut hub = MonitorHub::with_parallelism(Parallelism::Threads(4));
+    let hub_dims = [64usize, 48, 32];
+    for i in 0..8 {
+        let id = hub.register(
+            &format!("probe{i}"),
+            MonitorConfig {
+                window: 10,
+                ..MonitorConfig::for_rank(4)
+            },
+            hub_dims.len(),
+        );
+        let mut engine = SketchConfig::builder()
+            .layer_dims(&hub_dims)
+            .rank(4)
+            .seed(i as u64)
+            .build_engine()?;
+        let mut stream = ActStream::new(&hub_dims, i == 7, i as u64);
+        for step in 0..40 {
+            engine.ingest(&stream.next_batch(32))?;
+            let m = step_metrics(stream.loss_at(step, 40), &engine.metrics());
+            hub.observe(id, &m)?;
+        }
+    }
+    let t0 = Instant::now();
+    let report = hub.aggregate();
+    println!(
+        "hub: {} sessions aggregated in {:.2} ms ({} healthy, {} flagged)",
+        report.sessions,
+        t0.elapsed().as_secs_f64() * 1e3,
+        report.healthy,
+        report.flagged.len()
+    );
+    println!("native perf probe OK");
+    Ok(())
+}
+
+fn artifact_probe() -> Result<()> {
     let rt = open_runtime()?;
     for (artifact, steps, n_chunks) in [
         ("mnist_std_chunk", 50usize, 3usize),

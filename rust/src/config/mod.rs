@@ -46,6 +46,9 @@ pub struct ExperimentConfig {
     pub rank: usize,
     /// EMA decay for the sketch triplets (paper §4.1).
     pub beta: f64,
+    /// Kernel worker-pool width for the native sketch substrate (0/1 =
+    /// serial).  Numerics are identical at any setting.
+    pub threads: usize,
     pub adaptive: bool,
     pub adaptive_cfg: AdaptiveConfig,
     pub epochs: usize,
@@ -63,6 +66,7 @@ impl Default for ExperimentConfig {
             variant: Variant::Standard,
             rank: 2,
             beta: 0.9,
+            threads: 1,
             adaptive: false,
             adaptive_cfg: AdaptiveConfig::default(),
             epochs: 5,
@@ -101,6 +105,7 @@ impl ExperimentConfig {
             )?)?,
             rank: t.usize_or("sketch.rank", d.rank)?,
             beta: t.f64_or("sketch.beta", d.beta)?,
+            threads: t.usize_or("sketch.threads", d.threads)?,
             adaptive: t.bool_or("sketch.adaptive", d.adaptive)?,
             adaptive_cfg,
             epochs: t.usize_or("experiment.epochs", d.epochs)?,
@@ -126,13 +131,15 @@ impl ExperimentConfig {
     }
 
     /// Seed a `SketchConfigBuilder` from this experiment (rank, beta,
-    /// seed); the caller supplies the architecture's hidden widths.
+    /// seed, worker pool); the caller supplies the architecture's hidden
+    /// widths.
     pub fn sketch_builder(&self, layer_dims: &[usize]) -> SketchConfigBuilder {
         SketchConfigBuilder::default()
             .layer_dims(layer_dims)
             .rank(self.rank)
             .beta(self.beta)
             .seed(self.seed)
+            .threads(self.threads)
     }
 
     pub fn validate(&self) -> Result<()> {
@@ -182,6 +189,7 @@ variant = "sketched"
 epochs = 50
 [sketch]
 rank = 2
+threads = 4
 adaptive = true
 [adaptive]
 p_decrease = 4
@@ -194,6 +202,11 @@ p_decrease = 4
         let sk = c.sketch_builder(&[128, 64]).build().unwrap();
         assert_eq!(sk.rank, c.rank);
         assert_eq!(sk.layer_dims, vec![128, 64]);
+        assert_eq!(c.threads, 4);
+        assert_eq!(
+            sk.parallelism,
+            crate::sketch::Parallelism::Threads(4)
+        );
         assert_eq!(c.variant, Variant::Sketched);
         assert_eq!(c.epochs, 50);
         assert!(c.adaptive);

@@ -29,7 +29,7 @@ use sketchgrad::memory::{fmt_bytes, mnist_dims, monitor16_dims, MemoryModel};
 use sketchgrad::monitor::{step_metrics, MonitorConfig, MonitorHub};
 use sketchgrad::pinn::field_summary;
 use sketchgrad::runtime::{Runtime, Tensor};
-use sketchgrad::sketch::{eig, engine_state_bytes, Mat, SketchConfig, Sketcher};
+use sketchgrad::sketch::{eig, engine_state_bytes, Mat, Parallelism, SketchConfig, Sketcher};
 use sketchgrad::util::cli::Args;
 use sketchgrad::util::rng::Rng;
 
@@ -71,6 +71,7 @@ fn base_config(args: &mut Args) -> Result<ExperimentConfig> {
     cfg.test_size = args.opt_usize("test-size", cfg.test_size)?;
     cfg.seed = args.opt_u64("seed", cfg.seed)?;
     cfg.name = args.opt_or("name", &cfg.name);
+    cfg.threads = args.opt_usize("threads", cfg.threads)?;
     Ok(cfg)
 }
 
@@ -261,6 +262,7 @@ fn cmd_hub(args: &mut Args) -> Result<()> {
     let n_b = args.opt_usize("batch", 64)?;
     let rank = args.opt_usize("rank", 4)?;
     let seed = args.opt_u64("seed", 42)?;
+    let threads = args.opt_usize("threads", 1)?;
     args.finish()?;
     if sessions == 0 {
         bail!("--sessions must be > 0");
@@ -268,14 +270,16 @@ fn cmd_hub(args: &mut Args) -> Result<()> {
     if steps < 20 {
         bail!("--steps must be >= 20 for a meaningful diagnostic window");
     }
+    let par = Parallelism::from_threads(threads);
     let tail = (n_b / 3).max(1);
     let window = (steps / 4).clamp(5, 50);
     println!(
         "MonitorHub demo: {sessions} concurrent monitored runs, \
-         {steps} steps each, n_b={n_b} (tail batch {tail}), r={rank}"
+         {steps} steps each, n_b={n_b} (tail batch {tail}), r={rank}, \
+         kernels {par}"
     );
 
-    let mut hub = MonitorHub::new();
+    let mut hub = MonitorHub::with_parallelism(par);
     let mut ids = Vec::new();
     for idx in 0..sessions {
         let dims = HUB_ARCHS[idx % HUB_ARCHS.len()];
@@ -313,6 +317,7 @@ fn cmd_hub(args: &mut Args) -> Result<()> {
                 n_b,
                 tail,
                 problematic,
+                par,
                 &tx,
             )
         }));
@@ -409,6 +414,7 @@ fn run_hub_session(
     n_b: usize,
     tail: usize,
     problematic: bool,
+    par: Parallelism,
     tx: &mpsc::Sender<HubMsg>,
 ) -> Result<()> {
     let mut engine = SketchConfig::builder()
@@ -416,6 +422,7 @@ fn run_hub_session(
         .rank(rank)
         .beta(0.9)
         .seed(seed)
+        .parallelism(par)
         .build_engine()?;
     let mut stream = ActStream::new(dims, problematic, seed);
     for step in 0..steps {

@@ -15,6 +15,7 @@ use anyhow::{Context, Result};
 
 use crate::coordinator::StepMetrics;
 use crate::sketch::metrics::LayerMetrics;
+use crate::sketch::Parallelism;
 
 use super::service::{Diagnosis, MonitorConfig, MonitorService};
 
@@ -91,11 +92,62 @@ pub struct HubReport {
 pub struct MonitorHub {
     sessions: BTreeMap<SessionId, MonitorSession>,
     next_id: u64,
+    /// Worker pool for cross-tenant fan-out (diagnosis/aggregation).
+    /// Verdicts are identical to the serial path; only wall-clock changes.
+    parallelism: Parallelism,
 }
 
 impl MonitorHub {
     pub fn new() -> Self {
         Self::default()
+    }
+
+    /// A hub whose per-session diagnosis work fans out across `par`.
+    pub fn with_parallelism(par: Parallelism) -> Self {
+        MonitorHub {
+            parallelism: par,
+            ..Self::default()
+        }
+    }
+
+    pub fn set_parallelism(&mut self, par: Parallelism) {
+        self.parallelism = par;
+    }
+
+    pub fn parallelism(&self) -> Parallelism {
+        self.parallelism
+    }
+
+    /// Map a read-only closure over every session, fanning contiguous
+    /// session stripes across the worker pool.  Results keep the
+    /// deterministic BTreeMap (registration-id) order regardless of
+    /// worker count.
+    fn par_map<R, F>(&self, f: F) -> Vec<R>
+    where
+        R: Send,
+        F: Fn(&MonitorSession) -> R + Sync,
+    {
+        let sessions: Vec<&MonitorSession> = self.sessions.values().collect();
+        let workers = self.parallelism.threads().min(sessions.len());
+        if workers <= 1 {
+            return sessions.into_iter().map(f).collect();
+        }
+        let stripe = sessions.len().div_ceil(workers);
+        std::thread::scope(|s| {
+            let handles: Vec<_> = sessions
+                .chunks(stripe)
+                .map(|chunk| {
+                    let f = &f;
+                    s.spawn(move || {
+                        chunk.iter().map(|sess| f(sess)).collect::<Vec<R>>()
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .flat_map(|h| h.join().expect("hub worker panicked"))
+                .collect()
+        })
     }
 
     /// Admit a tenant; `n_layers` sizes its per-layer rolling stats.
@@ -170,29 +222,43 @@ impl MonitorHub {
         Ok(self.session(id)?.diagnose())
     }
 
-    /// Diagnose every tenant (id, name, diagnosis, healthy).
+    /// Diagnose every tenant (id, name, diagnosis, healthy) — the
+    /// detector pass per session fans out across the hub's worker pool.
     pub fn diagnose_all(&self) -> Vec<(SessionId, String, Diagnosis, bool)> {
-        self.sessions
-            .values()
-            .map(|s| (s.id, s.name.clone(), s.diagnose(), s.is_healthy()))
-            .collect()
+        self.par_map(|s| {
+            let d = s.diagnose();
+            let healthy = d.healthy();
+            (s.id, s.name.clone(), d, healthy)
+        })
     }
 
-    /// Aggregate diagnosis + memory accounting across tenants.
+    /// Aggregate diagnosis + memory accounting across tenants; the
+    /// per-session detector work runs on the hub's worker pool, the fold
+    /// stays on the caller's thread in session order.
     pub fn aggregate(&self) -> HubReport {
+        let rows = self.par_map(|s| {
+            (
+                s.id,
+                s.name.clone(),
+                s.diagnose(),
+                s.monitor_bytes(),
+                s.sketch_bytes,
+                s.steps_seen(),
+            )
+        });
         let mut report = HubReport {
-            sessions: self.sessions.len(),
+            sessions: rows.len(),
             ..HubReport::default()
         };
-        for s in self.sessions.values() {
-            if s.is_healthy() {
+        for (id, name, d, monitor_bytes, sketch_bytes, steps) in rows {
+            if d.healthy() {
                 report.healthy += 1;
             } else {
-                report.flagged.push((s.id, s.name.clone(), s.diagnose()));
+                report.flagged.push((id, name, d));
             }
-            report.monitor_bytes += s.monitor_bytes();
-            report.sketch_bytes += s.sketch_bytes;
-            report.steps_seen += s.steps_seen();
+            report.monitor_bytes += monitor_bytes;
+            report.sketch_bytes += sketch_bytes;
+            report.steps_seen += steps;
         }
         report
     }
@@ -304,6 +370,48 @@ mod tests {
             hub.observe(a, &metrics(1.0, 1.0, 1.0, 8)).unwrap();
         }
         assert_eq!(hub.memory(), 2 * m1, "duration must not grow memory");
+    }
+
+    #[test]
+    fn parallel_diagnosis_matches_serial() {
+        // Identical tenant histories through a serial and a 4-worker hub:
+        // every verdict, order and aggregate must match exactly.
+        let mut serial = MonitorHub::new();
+        let mut par = MonitorHub::with_parallelism(Parallelism::Threads(4));
+        for hub in [&mut serial, &mut par] {
+            let mut ids = Vec::new();
+            for i in 0..6 {
+                ids.push(hub.register(&format!("t{i}"), cfg(), 3));
+            }
+            for step in 0..120 {
+                for (i, &id) in ids.iter().enumerate() {
+                    // Alternate healthy / collapsed tenants.
+                    let m = if i % 2 == 0 {
+                        metrics(
+                            2.3 * (-0.03 * step as f32).exp(),
+                            80.0 + (step % 5) as f32,
+                            8.5,
+                            3,
+                        )
+                    } else {
+                        metrics(2.3, 9.0, 1.2, 3)
+                    };
+                    hub.observe(id, &m).unwrap();
+                }
+            }
+        }
+        let (a, b) = (serial.diagnose_all(), par.diagnose_all());
+        assert_eq!(a.len(), b.len());
+        for ((ia, na, da, ha), (ib, nb, db, hb)) in a.iter().zip(&b) {
+            assert_eq!((ia, na, ha), (ib, nb, hb));
+            assert_eq!(da, db);
+        }
+        let (ra, rb) = (serial.aggregate(), par.aggregate());
+        assert_eq!(ra.healthy, rb.healthy);
+        assert_eq!(ra.flagged.len(), rb.flagged.len());
+        assert_eq!(ra.monitor_bytes, rb.monitor_bytes);
+        assert_eq!(ra.steps_seen, rb.steps_seen);
+        assert_eq!(ra.healthy, 3);
     }
 
     #[test]

@@ -65,6 +65,17 @@ pub struct Diagnosis {
     pub notes: Vec<String>,
 }
 
+impl Diagnosis {
+    /// "Healthy" = no hard pathologies flagged (stagnation alone is a
+    /// warning, not a failure — only combined with collapsed diversity
+    /// does it indicate a dead run).
+    pub fn healthy(&self) -> bool {
+        !(self.vanishing_gradients
+            || self.exploding_gradients
+            || (self.stagnation && self.diversity_collapse))
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct MonitorConfig {
     /// Sketch dimension k = 2r + 1 (for stable-rank normalisation).
@@ -233,12 +244,9 @@ impl MonitorService {
         d
     }
 
-    /// "Healthy" = no pathologies flagged.
+    /// "Healthy" = no pathologies flagged (see [`Diagnosis::healthy`]).
     pub fn is_healthy(&self) -> bool {
-        let d = self.diagnose();
-        !(d.vanishing_gradients
-            || d.exploding_gradients
-            || (d.stagnation && d.diversity_collapse))
+        self.diagnose().healthy()
     }
 
     /// Bytes held by the monitor — constant in monitoring duration

@@ -59,9 +59,8 @@ pub fn sym_eigenvalues(a: &Mat, max_sweeps: usize) -> Vec<f64> {
 /// smaller side (sigma_i = sqrt(lambda_i(A^T A))), sorted descending.
 pub fn singular_values(a: &Mat) -> Vec<f64> {
     let gram = if a.rows <= a.cols {
-        // A A^T (rows x rows)
-        let at = a.transpose();
-        a.matmul(&at)
+        // A A^T (rows x rows), transpose-free
+        a.matmul_t(a)
     } else {
         a.t_matmul(a)
     };

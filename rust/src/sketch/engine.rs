@@ -28,9 +28,10 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::rng::Rng;
 
+use super::kernel::Parallelism;
 use super::matrix::Mat;
 use super::metrics::{all_metrics, LayerMetrics};
-use super::reconstruct::reconstruct_batch;
+use super::reconstruct::reconstruct_batch_with;
 use super::triplet::{Projections, SketchTriplet};
 
 /// Stream constants mixing seed, rank and batch size into independent
@@ -70,6 +71,9 @@ pub struct SketchConfig {
     pub beta: f64,
     pub seed: u64,
     pub precision: Precision,
+    /// Worker pool for ingest/reconstruct kernels.  A throughput knob
+    /// only: results are bitwise identical to `Serial` (kernel contract).
+    pub parallelism: Parallelism,
 }
 
 impl SketchConfig {
@@ -147,6 +151,7 @@ pub struct SketchConfigBuilder {
     beta: f64,
     seed: u64,
     precision: Precision,
+    parallelism: Parallelism,
 }
 
 impl Default for SketchConfigBuilder {
@@ -157,6 +162,7 @@ impl Default for SketchConfigBuilder {
             beta: 0.9,
             seed: 42,
             precision: Precision::F32,
+            parallelism: Parallelism::Serial,
         }
     }
 }
@@ -194,6 +200,16 @@ impl SketchConfigBuilder {
         self
     }
 
+    pub fn parallelism(mut self, parallelism: Parallelism) -> Self {
+        self.parallelism = parallelism;
+        self
+    }
+
+    /// Thread-count convenience: 0 and 1 mean the serial path.
+    pub fn threads(self, n: usize) -> Self {
+        self.parallelism(Parallelism::from_threads(n))
+    }
+
     pub fn build(self) -> Result<SketchConfig> {
         if self.layer_dims.is_empty() {
             bail!("sketch config needs at least one hidden layer width");
@@ -213,6 +229,7 @@ impl SketchConfigBuilder {
             beta: self.beta,
             seed: self.seed,
             precision: self.precision,
+            parallelism: self.parallelism,
         })
     }
 
@@ -321,6 +338,23 @@ impl SketchEngine {
         &self.layers
     }
 
+    /// Largest elementwise |diff| between this engine's triplet state
+    /// and another's (layer-by-layer X/Y/Z) — the parallel-vs-serial
+    /// equivalence witness shared by the benches, the perf probe and the
+    /// kernel tests, so a future change to triplet state updates every
+    /// gate at once.
+    pub fn max_state_diff(&self, other: &SketchEngine) -> f64 {
+        assert_eq!(self.layers.len(), other.layers.len());
+        let mut diff: f64 = 0.0;
+        for (s, o) in self.layers.iter().zip(&other.layers) {
+            diff = diff
+                .max(s.x.max_abs_diff(&o.x))
+                .max(s.y.max_abs_diff(&o.y))
+                .max(s.z.max_abs_diff(&o.z));
+        }
+        diff
+    }
+
     /// The projections used for batches of size `n_b`, if that size has
     /// been observed (or prepared) — cross-validation tests read these
     /// out instead of sampling their own.
@@ -387,9 +421,46 @@ impl Sketcher for SketchEngine {
         }
         self.ensure_projections(n_b);
         let proj = &self.proj[&n_b];
-        for j in 1..acts.len() {
-            let a_in = if j >= 2 { &acts[j - 1] } else { &acts[1] };
-            self.layers[j - 1].update(a_in, &acts[j], proj, j - 1);
+        let par = self.cfg.parallelism;
+        // (layer, incoming activation, outgoing activation) per triplet.
+        let jobs: Vec<(usize, &Mat, &Mat)> = (1..acts.len())
+            .map(|j| {
+                let a_in = if j >= 2 { &acts[j - 1] } else { &acts[1] };
+                (j - 1, a_in, &acts[j])
+            })
+            .collect();
+        let workers = par.threads().min(jobs.len());
+        if workers > 1 && par.threads() <= jobs.len() {
+            // At least one layer per worker: fan whole layers out across
+            // the pool; each triplet update is independent (own X/Y/Z,
+            // shared read-only projections).
+            let stripe = jobs.len().div_ceil(workers);
+            std::thread::scope(|s| {
+                for (layers, jobs) in
+                    self.layers.chunks_mut(stripe).zip(jobs.chunks(stripe))
+                {
+                    s.spawn(move || {
+                        for (t, (l, a_in, a_out)) in
+                            layers.iter_mut().zip(jobs)
+                        {
+                            t.update_with(
+                                a_in,
+                                a_out,
+                                proj,
+                                *l,
+                                Parallelism::Serial,
+                            );
+                        }
+                    });
+                }
+            });
+        } else {
+            // Serial config, or fewer layers than workers (the per-layer
+            // seam can't fill the pool): run layers sequentially and fan
+            // each projection product across the full pool instead.
+            for (t, (l, a_in, a_out)) in self.layers.iter_mut().zip(&jobs) {
+                t.update_with(a_in, a_out, proj, *l, par);
+            }
         }
         self.last_batch = Some(n_b);
         self.batches_ingested += 1;
@@ -407,7 +478,11 @@ impl Sketcher for SketchEngine {
             .last_batch
             .context("reconstruct before any batch was ingested")?;
         let proj = &self.proj[&n_b];
-        Ok(reconstruct_batch(&self.layers[layer], &proj.omega))
+        Ok(reconstruct_batch_with(
+            &self.layers[layer],
+            &proj.omega,
+            self.cfg.parallelism,
+        ))
     }
 
     fn metrics(&self) -> Vec<LayerMetrics> {

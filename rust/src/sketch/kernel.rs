@@ -1,0 +1,284 @@
+//! Cache-blocked, thread-parallel matmul kernels — the ingest hot path.
+//!
+//! Every sketch update is one of three product shapes: `A @ B` (matmul),
+//! `A^T @ B` (t_matmul, the EMA projection `A^T Upsilon`) and `A @ B^T`
+//! (matmul_t, the reconstruction's `... Q_X^T`).  All three run through
+//! the same scheme here:
+//!
+//! * **Blocking** — the shared `k` dimension is tiled (`BLOCK_K` rows of
+//!   the B panel) so the panel stays hot in cache while a stripe of output
+//!   rows streams through it.
+//! * **Worker fan-out** — output rows are split into contiguous stripes,
+//!   one per worker, executed on scoped `std::thread`s (rayon is not in
+//!   the dependency closure).  Spawn cost is a few tens of µs, amortised
+//!   over millisecond-scale products; sub-threshold shapes
+//!   (`PAR_MIN_FLOPS`) short-circuit to the serial path.
+//!
+//! **Determinism contract:** every output element is accumulated in
+//! ascending-`k` order regardless of blocking or worker count, so the
+//! parallel kernels are *bitwise identical* to the serial ones.  The
+//! Lemma-4.1 property tests (and the parallel-vs-serial ingest tests)
+//! rely on this: `Parallelism` is a throughput knob, never a numerics
+//! knob.
+
+use super::matrix::Mat;
+
+/// B-panel tile height (f64 elements): 64 rows x up to ~512 columns keeps
+/// the panel within a typical 256 KiB L2 slice alongside the output stripe.
+const BLOCK_K: usize = 64;
+
+/// Madds below which threading overhead exceeds the win; measured spawn
+/// cost is ~30 µs/worker vs ~1 madd/ns serial throughput.
+const PAR_MIN_FLOPS: usize = 64 * 1024;
+
+/// Worker-pool width for the sketch substrate.  `Serial` is the default
+/// and the reference semantics; `Threads(n)` fans work across `n` scoped
+/// workers.  Results are bitwise identical either way (see module docs).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum Parallelism {
+    #[default]
+    Serial,
+    Threads(usize),
+}
+
+impl Parallelism {
+    /// Normalise a thread-count knob: 0 and 1 both mean the serial path.
+    pub fn from_threads(n: usize) -> Self {
+        if n <= 1 {
+            Parallelism::Serial
+        } else {
+            Parallelism::Threads(n)
+        }
+    }
+
+    /// Effective worker count (>= 1).
+    pub fn threads(self) -> usize {
+        match self {
+            Parallelism::Serial => 1,
+            Parallelism::Threads(n) => n.max(1),
+        }
+    }
+
+    pub fn is_parallel(self) -> bool {
+        self.threads() > 1
+    }
+}
+
+impl std::fmt::Display for Parallelism {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Parallelism::Serial => write!(f, "serial"),
+            Parallelism::Threads(n) => write!(f, "{n} threads"),
+        }
+    }
+}
+
+/// Split `out`'s rows into one contiguous stripe per worker and run
+/// `body(first_row, last_row_exclusive, stripe)` on each.  The serial
+/// path is the single-stripe call, so both paths share one kernel body.
+fn for_row_stripes<F>(out: &mut Mat, par: Parallelism, flops: usize, body: F)
+where
+    F: Fn(usize, usize, &mut [f64]) + Sync,
+{
+    let (rows, cols) = (out.rows, out.cols);
+    let workers = par.threads().min(rows.max(1));
+    if workers <= 1 || rows * cols == 0 || flops < PAR_MIN_FLOPS {
+        body(0, rows, &mut out.data);
+        return;
+    }
+    let stripe_rows = rows.div_ceil(workers);
+    std::thread::scope(|s| {
+        for (w, stripe) in out.data.chunks_mut(stripe_rows * cols).enumerate() {
+            let body = &body;
+            s.spawn(move || {
+                let i0 = w * stripe_rows;
+                body(i0, i0 + stripe.len() / cols, stripe);
+            });
+        }
+    });
+}
+
+/// `a @ b` — blocked over the shared dimension, parallel over output rows.
+pub fn matmul(a: &Mat, b: &Mat, par: Parallelism) -> Mat {
+    assert_eq!(
+        a.cols, b.rows,
+        "matmul shape mismatch {}x{} @ {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let mut out = Mat::zeros(a.rows, b.cols);
+    let n = b.cols;
+    let flops = a.rows * a.cols * n;
+    for_row_stripes(&mut out, par, flops, |i0, i1, stripe| {
+        for kk in (0..a.cols).step_by(BLOCK_K) {
+            let kend = (kk + BLOCK_K).min(a.cols);
+            for i in i0..i1 {
+                let a_row = a.row(i);
+                let out_row = &mut stripe[(i - i0) * n..(i - i0 + 1) * n];
+                for (k, &a_ik) in a_row[kk..kend].iter().enumerate() {
+                    if a_ik == 0.0 {
+                        continue;
+                    }
+                    let b_row = b.row(kk + k);
+                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                        *o += a_ik * bv;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `a^T @ b` without materialising the transpose — the EMA sketch update's
+/// `A^T P` shape.  Blocked over the shared (batch) dimension, parallel
+/// over output rows (columns of `a`).
+pub fn t_matmul(a: &Mat, b: &Mat, par: Parallelism) -> Mat {
+    assert_eq!(
+        a.rows, b.rows,
+        "t_matmul shape mismatch {}x{}^T @ {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let mut out = Mat::zeros(a.cols, b.cols);
+    let n = b.cols;
+    let flops = a.rows * a.cols * n;
+    for_row_stripes(&mut out, par, flops, |i0, i1, stripe| {
+        for kk in (0..a.rows).step_by(BLOCK_K) {
+            let kend = (kk + BLOCK_K).min(a.rows);
+            for i in i0..i1 {
+                let out_row = &mut stripe[(i - i0) * n..(i - i0 + 1) * n];
+                for k in kk..kend {
+                    let a_ki = a[(k, i)];
+                    if a_ki == 0.0 {
+                        continue;
+                    }
+                    let b_row = b.row(k);
+                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                        *o += a_ki * bv;
+                    }
+                }
+            }
+        }
+    });
+    out
+}
+
+/// `a @ b^T` without materialising the transpose — the reconstruction's
+/// `... Q_X^T` shape.  Row-by-row dot products (both operands are read
+/// along rows, so this shape is cache-friendly without a k-tile), parallel
+/// over output rows.
+pub fn matmul_t(a: &Mat, b: &Mat, par: Parallelism) -> Mat {
+    assert_eq!(
+        a.cols, b.cols,
+        "matmul_t shape mismatch {}x{} @ {}x{}^T",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    let mut out = Mat::zeros(a.rows, b.rows);
+    let n = b.rows;
+    let flops = a.rows * a.cols * n;
+    for_row_stripes(&mut out, par, flops, |i0, i1, stripe| {
+        for i in i0..i1 {
+            let a_row = a.row(i);
+            let out_row = &mut stripe[(i - i0) * n..(i - i0 + 1) * n];
+            for (j, o) in out_row.iter_mut().enumerate() {
+                let b_row = b.row(j);
+                let mut acc = 0.0;
+                for (&x, &y) in a_row.iter().zip(b_row) {
+                    acc += x * y;
+                }
+                *o = acc;
+            }
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// Unblocked, unthreaded reference with the same ascending-k
+    /// accumulation order the kernels guarantee.
+    fn naive_matmul(a: &Mat, b: &Mat) -> Mat {
+        let mut out = Mat::zeros(a.rows, b.cols);
+        for i in 0..a.rows {
+            for k in 0..a.cols {
+                for j in 0..b.cols {
+                    out[(i, j)] += a[(i, k)] * b[(k, j)];
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn blocked_matmul_is_bitwise_naive() {
+        let mut rng = Rng::new(11);
+        // Spans multiple k-blocks (>BLOCK_K) and a tail block.
+        let a = Mat::gaussian(9, 2 * BLOCK_K + 7, &mut rng);
+        let b = Mat::gaussian(2 * BLOCK_K + 7, 13, &mut rng);
+        let want = naive_matmul(&a, &b);
+        for par in [
+            Parallelism::Serial,
+            Parallelism::Threads(2),
+            Parallelism::Threads(4),
+        ] {
+            let got = matmul(&a, &b, par);
+            assert_eq!(got.data, want.data, "par={par}");
+        }
+    }
+
+    #[test]
+    fn t_matmul_matches_transpose_matmul_bitwise() {
+        let mut rng = Rng::new(12);
+        let a = Mat::gaussian(BLOCK_K + 5, 17, &mut rng);
+        let b = Mat::gaussian(BLOCK_K + 5, 11, &mut rng);
+        let want = naive_matmul(&a.transpose(), &b);
+        for par in [Parallelism::Serial, Parallelism::Threads(3)] {
+            let got = t_matmul(&a, &b, par);
+            assert_eq!(got.data, want.data, "par={par}");
+        }
+    }
+
+    #[test]
+    fn matmul_t_matches_transpose_path() {
+        let mut rng = Rng::new(13);
+        let a = Mat::gaussian(12, 33, &mut rng);
+        let b = Mat::gaussian(21, 33, &mut rng);
+        let want = naive_matmul(&a, &b.transpose());
+        for par in [Parallelism::Serial, Parallelism::Threads(4)] {
+            let got = matmul_t(&a, &b, par);
+            // Same dot-product order per element; identical fp result.
+            assert!(got.max_abs_diff(&want) < 1e-12, "par={par}");
+        }
+    }
+
+    #[test]
+    fn parallel_handles_more_threads_than_rows() {
+        let mut rng = Rng::new(14);
+        let a = Mat::gaussian(2, 300, &mut rng);
+        let b = Mat::gaussian(300, 400, &mut rng);
+        let got = matmul(&a, &b, Parallelism::Threads(16));
+        assert_eq!(got.data, matmul(&a, &b, Parallelism::Serial).data);
+    }
+
+    #[test]
+    fn degenerate_shapes() {
+        let a = Mat::zeros(0, 5);
+        let b = Mat::zeros(5, 3);
+        let out = matmul(&a, &b, Parallelism::Threads(4));
+        assert_eq!((out.rows, out.cols), (0, 3));
+        let out = t_matmul(&Mat::zeros(4, 0), &Mat::zeros(4, 3), Parallelism::Threads(2));
+        assert_eq!((out.rows, out.cols), (0, 3));
+    }
+
+    #[test]
+    fn parallelism_knob() {
+        assert_eq!(Parallelism::from_threads(0), Parallelism::Serial);
+        assert_eq!(Parallelism::from_threads(1), Parallelism::Serial);
+        assert_eq!(Parallelism::from_threads(4), Parallelism::Threads(4));
+        assert_eq!(Parallelism::Threads(0).threads(), 1);
+        assert!(!Parallelism::Serial.is_parallel());
+        assert_eq!(format!("{}", Parallelism::Threads(4)), "4 threads");
+    }
+}

@@ -11,6 +11,8 @@ use std::ops::{Index, IndexMut};
 
 use crate::util::rng::Rng;
 
+use super::kernel::{self, Parallelism};
+
 #[derive(Clone, PartialEq)]
 pub struct Mat {
     pub rows: usize,
@@ -104,51 +106,33 @@ impl Mat {
         out
     }
 
-    /// `self @ other` — blocked ikj loop, the substrate's workhorse.
+    /// `self @ other` — the substrate's workhorse, delegating to the
+    /// blocked [`kernel`] on the serial path.  Call sites needing the
+    /// worker pool for this shape use `kernel::matmul` directly.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(
-            self.cols, other.rows,
-            "matmul shape mismatch {}x{} @ {}x{}",
-            self.rows, self.cols, other.rows, other.cols
-        );
-        let mut out = Mat::zeros(self.rows, other.cols);
-        let n = other.cols;
-        for i in 0..self.rows {
-            let a_row = self.row(i);
-            let out_row = &mut out.data[i * n..(i + 1) * n];
-            for (k, &a_ik) in a_row.iter().enumerate() {
-                if a_ik == 0.0 {
-                    continue;
-                }
-                let b_row = other.row(k);
-                for j in 0..n {
-                    out_row[j] += a_ik * b_row[j];
-                }
-            }
-        }
-        out
+        kernel::matmul(self, other, Parallelism::Serial)
     }
 
     /// `self^T @ other` without materialising the transpose (the EMA
     /// sketch update's A^T P shape).
     pub fn t_matmul(&self, other: &Mat) -> Mat {
-        assert_eq!(self.rows, other.rows);
-        let mut out = Mat::zeros(self.cols, other.cols);
-        let n = other.cols;
-        for k in 0..self.rows {
-            let a_row = self.row(k);
-            let b_row = other.row(k);
-            for (i, &a_ki) in a_row.iter().enumerate() {
-                if a_ki == 0.0 {
-                    continue;
-                }
-                let out_row = &mut out.data[i * n..(i + 1) * n];
-                for j in 0..n {
-                    out_row[j] += a_ki * b_row[j];
-                }
-            }
-        }
-        out
+        kernel::t_matmul(self, other, Parallelism::Serial)
+    }
+
+    /// `self^T @ other` on the given worker pool.
+    pub fn t_matmul_with(&self, other: &Mat, par: Parallelism) -> Mat {
+        kernel::t_matmul(self, other, par)
+    }
+
+    /// `self @ other^T` without materialising the transpose (the
+    /// reconstruction's `... Q_X^T` shape).
+    pub fn matmul_t(&self, other: &Mat) -> Mat {
+        kernel::matmul_t(self, other, Parallelism::Serial)
+    }
+
+    /// `self @ other^T` on the given worker pool.
+    pub fn matmul_t_with(&self, other: &Mat, par: Parallelism) -> Mat {
+        kernel::matmul_t(self, other, par)
     }
 
     pub fn scale(&self, s: f64) -> Mat {
@@ -247,6 +231,16 @@ mod tests {
         let b = Mat::gaussian(6, 3, &mut rng);
         let fast = a.t_matmul(&b);
         let slow = a.transpose().matmul(&b);
+        assert!(fast.max_abs_diff(&slow) < 1e-12);
+    }
+
+    #[test]
+    fn matmul_t_matches_explicit_transpose() {
+        let mut rng = Rng::new(6);
+        let a = Mat::gaussian(5, 7, &mut rng);
+        let b = Mat::gaussian(4, 7, &mut rng);
+        let fast = a.matmul_t(&b);
+        let slow = a.matmul(&b.transpose());
         assert!(fast.max_abs_diff(&slow) < 1e-12);
     }
 

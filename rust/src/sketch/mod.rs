@@ -13,6 +13,7 @@
 
 pub mod eig;
 pub mod engine;
+pub mod kernel;
 pub mod matrix;
 pub mod metrics;
 pub mod qr;
@@ -23,5 +24,6 @@ pub use engine::{
     engine_state_bytes, Precision, SketchConfig, SketchConfigBuilder,
     SketchEngine, Sketcher,
 };
+pub use kernel::Parallelism;
 pub use matrix::Mat;
 pub use triplet::{Projections, SketchTriplet};

@@ -41,9 +41,16 @@ pub fn mgs_qr(a: &Mat) -> (Mat, Mat) {
 /// k <= d) via Householder reflections; R is discarded (the reconstruction
 /// only consumes P_X).
 pub fn householder_q_wide(a: &Mat) -> Mat {
+    householder_q_wide_in(a.clone())
+}
+
+/// [`householder_q_wide`] consuming its input as the working buffer —
+/// call sites that already own a freshly-built matrix (e.g. the
+/// reconstruction's `X^T`) skip the defensive clone.
+pub fn householder_q_wide_in(a: Mat) -> Mat {
     let (k, d) = (a.rows, a.cols);
     assert!(k <= d, "householder_q_wide needs wide input, got {k}x{d}");
-    let mut r = a.clone();
+    let mut r = a;
     let mut q = Mat::eye(k);
     for j in 0..k {
         // Reflector from column j, rows j..k.
@@ -134,11 +141,37 @@ pub fn solve_lower_triangular(l: &Mat, b: &Mat) -> Mat {
     x
 }
 
+/// Solve R X = B^T for upper-triangular R (n x n) with B given
+/// *untransposed* (p x n) — the right-hand side is read through swapped
+/// indices, so no transpose of B is ever materialised.  Same truncated
+/// pivots as [`solve_upper_triangular`].
+pub fn solve_upper_triangular_tb(r: &Mat, b: &Mat) -> Mat {
+    let n = r.rows;
+    assert_eq!(r.cols, n);
+    assert_eq!(b.cols, n, "rhs^T needs {n} columns in b");
+    let p = b.rows;
+    let max_diag = (0..n).map(|i| r[(i, i)].abs()).fold(0.0, f64::max);
+    let floor = SOLVE_RCOND * max_diag + EPS;
+    let mut x = Mat::zeros(n, p);
+    for row in (0..n).rev() {
+        for c in 0..p {
+            let mut acc = b[(c, row)];
+            for j in row + 1..n {
+                acc -= r[(row, j)] * x[(j, c)];
+            }
+            let diag = r[(row, row)];
+            x[(row, c)] = if diag.abs() >= floor { acc / diag } else { 0.0 };
+        }
+    }
+    x
+}
+
 /// Moore–Penrose pseudoinverse of a tall full-column-rank matrix via
-/// economy QR: `a^+ = R^{-1} Q^T` (n x m).
+/// economy QR: `a^+ = R^{-1} Q^T` (n x m) — `Q^T` stays virtual via the
+/// transposed-rhs solver.
 pub fn pinv_tall(a: &Mat) -> Mat {
     let (q, r) = mgs_qr(a);
-    solve_upper_triangular(&r, &q.transpose())
+    solve_upper_triangular_tb(&r, &q)
 }
 
 #[cfg(test)]
@@ -230,6 +263,24 @@ mod tests {
             }
             if err > 1e-8 {
                 return Err(format!("pinv err {err}"));
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn tb_solve_matches_explicit_transpose() {
+        Prop::new(24).check("tb_solve", |rng, i| {
+            let n = 2 + i % 8;
+            let p = 1 + i % 5;
+            let a = Mat::gaussian(n + 4, n, rng);
+            let (_q, r) = mgs_qr(&a);
+            let b = Mat::gaussian(p, n, rng);
+            let fast = solve_upper_triangular_tb(&r, &b);
+            let slow = solve_upper_triangular(&r, &b.transpose());
+            let diff = fast.max_abs_diff(&slow);
+            if diff > 1e-12 {
+                return Err(format!("tb vs transpose diff {diff}"));
             }
             Ok(())
         });

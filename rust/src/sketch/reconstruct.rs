@@ -6,9 +6,10 @@
 //! form A_tilde = Omega R_Y^{-1} C Q_X^T that never materialises G (the
 //! fusion used on the hot path; tests prove the two agree).
 
+use super::kernel::Parallelism;
 use super::matrix::Mat;
 use super::qr::{
-    householder_q_wide, mgs_qr, pinv_tall, solve_lower_triangular,
+    householder_q_wide_in, mgs_qr, pinv_tall, solve_lower_triangular,
     solve_upper_triangular,
 };
 use super::triplet::{Projections, SketchTriplet};
@@ -26,7 +27,7 @@ pub fn reconstruct_core(t: &SketchTriplet) -> ReconCore {
     let (q_y, r_y) = mgs_qr(&t.y);
     let (q_x, _r_x) = mgs_qr(&t.x);
     let c_inter = q_y.t_matmul(&t.z); // (k, s), s == k
-    let p_x = householder_q_wide(&t.x.transpose()); // (k, k)
+    let p_x = householder_q_wide_in(t.x.transpose()); // (k, k)
     let c = p_x.t_matmul(&c_inter.transpose()); // (k, k)
     ReconCore { q_y, r_y, c, q_x }
 }
@@ -34,7 +35,7 @@ pub fn reconstruct_core(t: &SketchTriplet) -> ReconCore {
 /// Paper Eq. 6 verbatim: G_EMA = Q_Y C Q_X^T (d x d).  Diagnostics only.
 pub fn reconstruct_gema(t: &SketchTriplet) -> Mat {
     let core = reconstruct_core(t);
-    core.q_y.matmul(&core.c).matmul(&core.q_x.transpose())
+    core.q_y.matmul(&core.c).matmul_t(&core.q_x)
 }
 
 /// Trust-region factor mirroring `python/compile/sketching.py::CLIP_GAMMA`:
@@ -45,10 +46,20 @@ pub const CLIP_GAMMA: f64 = 3.0;
 
 /// Eq. 7, fused: A_tilde = Omega R_Y^{-1} C Q_X^T (n_b x d), norm-clipped.
 pub fn reconstruct_batch(t: &SketchTriplet, omega: &Mat) -> Mat {
+    reconstruct_batch_with(t, omega, Parallelism::Serial)
+}
+
+/// [`reconstruct_batch`] with the dominant `(n_b, k) @ (d, k)^T` product
+/// run on the given worker pool (bitwise identical to serial).
+pub fn reconstruct_batch_with(
+    t: &SketchTriplet,
+    omega: &Mat,
+    par: Parallelism,
+) -> Mat {
     let core = reconstruct_core(t);
     let ry_inv_c = solve_upper_triangular(&core.r_y, &core.c); // (k, k)
     let coeff = omega.matmul(&ry_inv_c); // (n_b, k)
-    let a_tilde = coeff.matmul(&core.q_x.transpose());
+    let a_tilde = coeff.matmul_t_with(&core.q_x, par);
     let k = t.y.cols as f64;
     let a_norm_est = (t.y.fro_norm().powi(2) / k + 1e-12).sqrt();
     let a_t_norm = a_tilde.fro_norm() + 1e-12;
@@ -80,20 +91,21 @@ pub fn reconstruct_batch_lsq(
     let k = t.x.cols;
     let n_b = proj.upsilon.rows;
     assert!(3 * k <= n_b, "lsq reconstruction needs n_b >= 3k");
-    // S = [X | Y | Z ./ psi] (d, 3k)
-    let mut s_mat = Mat::zeros(d, 3 * k);
+    // S^T = [X | Y | Z ./ psi]^T (3k, d), built transposed directly so the
+    // solve below needs no full-matrix transpose of the d-wide stack.
+    let mut s_t = Mat::zeros(3 * k, d);
     let psi = &proj.psi[layer];
-    for row in 0..d {
-        for c in 0..k {
-            s_mat[(row, c)] = t.x[(row, c)];
-            s_mat[(row, k + c)] = t.y[(row, c)];
-            let p = psi[c];
-            let p_safe = if p.abs() < 1e-3 {
-                1e-3_f64.copysign(if p == 0.0 { 1.0 } else { p })
-            } else {
-                p
-            };
-            s_mat[(row, 2 * k + c)] = t.z[(row, c)] / p_safe;
+    for c in 0..k {
+        let p = psi[c];
+        let p_safe = if p.abs() < 1e-3 {
+            1e-3_f64.copysign(if p == 0.0 { 1.0 } else { p })
+        } else {
+            p
+        };
+        for row in 0..d {
+            s_t[(c, row)] = t.x[(row, c)];
+            s_t[(k + c, row)] = t.y[(row, c)];
+            s_t[(2 * k + c, row)] = t.z[(row, c)] / p_safe;
         }
     }
     // P = [Ups | Om | Phi] (n_b, 3k)
@@ -106,7 +118,9 @@ pub fn reconstruct_batch_lsq(
         }
     }
     let (q_p, r_p) = mgs_qr(&p_mat);
-    let w = solve_lower_triangular(&r_p.transpose(), &s_mat.transpose()); // (3k, d)
+    // R_P^T is (3k, 3k) — transposing the small triangular factor is
+    // cheap; the d-wide right-hand side is already transposed above.
+    let w = solve_lower_triangular(&r_p.transpose(), &s_t); // (3k, d)
     q_p.matmul(&w)
 }
 

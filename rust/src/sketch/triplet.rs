@@ -12,6 +12,7 @@ use std::sync::Arc;
 
 use crate::util::rng::Rng;
 
+use super::kernel::Parallelism;
 use super::matrix::Mat;
 
 /// Shared batch projections (Upsilon, Omega, Phi) + per-layer Psi weights.
@@ -129,13 +130,27 @@ impl SketchTriplet {
         proj: &Projections,
         layer: usize,
     ) {
+        self.update_with(a_in, a_out, proj, layer, Parallelism::Serial);
+    }
+
+    /// [`SketchTriplet::update`] with the three projection products run on
+    /// the given worker pool — bitwise identical to the serial form (the
+    /// kernel determinism contract), so Lemma 4.1 holds unchanged.
+    pub fn update_with(
+        &mut self,
+        a_in: &Mat,
+        a_out: &Mat,
+        proj: &Projections,
+        layer: usize,
+        par: Parallelism,
+    ) {
         let beta = self.beta;
-        let contrib_x = a_in.t_matmul(&proj.upsilon);
+        let contrib_x = a_in.t_matmul_with(&proj.upsilon, par);
         self.x.ema_blend(&contrib_x, beta);
-        let contrib_y = a_out.t_matmul(&proj.omega);
+        let contrib_y = a_out.t_matmul_with(&proj.omega, par);
         self.y.ema_blend(&contrib_y, beta);
         let contrib_z = a_out
-            .t_matmul(&proj.phi)
+            .t_matmul_with(&proj.phi, par)
             .scale_cols(&proj.psi[layer]);
         self.z.ema_blend(&contrib_z, beta);
         self.updates += 1;

@@ -1,0 +1,137 @@
+//! Parallel-vs-serial equivalence for the kernel subsystem: the
+//! `Parallelism` knob must be a pure throughput knob.  Engines configured
+//! with 1/2/4 worker threads and fed identical streams (heterogeneous
+//! widths, multiple ranks, tail batches) must hold triplet state and
+//! reconstructions within 1e-12 of the serial engine — the kernel
+//! determinism contract says bitwise, the Lemma-4.1 property tests rely
+//! on at most 1e-12.
+
+use sketchgrad::sketch::kernel;
+use sketchgrad::sketch::{Mat, Parallelism, SketchConfig, SketchEngine, Sketcher};
+use sketchgrad::util::prop::Prop;
+use sketchgrad::util::rng::Rng;
+
+fn engine(dims: &[usize], rank: usize, threads: usize) -> SketchEngine {
+    SketchConfig::builder()
+        .layer_dims(dims)
+        .rank(rank)
+        .beta(0.9)
+        .seed(17)
+        .threads(threads)
+        .build_engine()
+        .unwrap()
+}
+
+fn acts(n_b: usize, dims: &[usize], rng: &mut Rng) -> Vec<Mat> {
+    let mut out = vec![Mat::gaussian(n_b, dims[0], rng)];
+    for &d in dims {
+        out.push(Mat::gaussian(n_b, d, rng));
+    }
+    out
+}
+
+#[test]
+fn parallel_ingest_equals_serial_across_thread_counts() {
+    // Heterogeneous widths, ranks 2/4, a nominal and a tail batch size,
+    // across 1/2/4 threads — the satellite's exact matrix.
+    let dims = [48usize, 32, 24, 16];
+    for rank in [2usize, 4] {
+        let mut serial = engine(&dims, rank, 1);
+        let mut threaded: Vec<SketchEngine> =
+            [2usize, 4].iter().map(|&t| engine(&dims, rank, t)).collect();
+        let mut rng = Rng::new(100 + rank as u64);
+        for step in 0..6 {
+            // Every third batch is a tail batch (n_b 7 instead of 20).
+            let n_b = if step % 3 == 2 { 7 } else { 20 };
+            let batch = acts(n_b, &dims, &mut rng);
+            serial.ingest(&batch).unwrap();
+            for e in &mut threaded {
+                e.ingest(&batch).unwrap();
+            }
+        }
+        for (i, e) in threaded.iter().enumerate() {
+            let diff = serial.max_state_diff(e);
+            assert!(
+                diff <= 1e-12,
+                "rank {rank}, {} threads: triplet diff {diff:.2e}",
+                [2, 4][i]
+            );
+            for layer in 0..dims.len() {
+                let rs = serial.reconstruct(layer).unwrap();
+                let rp = e.reconstruct(layer).unwrap();
+                let rdiff = rs.max_abs_diff(&rp);
+                assert!(
+                    rdiff <= 1e-12,
+                    "rank {rank}, layer {layer}: reconstruct diff {rdiff:.2e}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn single_layer_engine_uses_intra_kernel_parallelism() {
+    // One layer means the fan-out seam has nothing to split; the pool
+    // must flow into the projection products instead, same numerics.
+    let dims = [96usize];
+    let mut serial = engine(&dims, 4, 1);
+    let mut par = engine(&dims, 4, 4);
+    let mut rng = Rng::new(5);
+    for _ in 0..4 {
+        let batch = acts(64, &dims, &mut rng);
+        serial.ingest(&batch).unwrap();
+        par.ingest(&batch).unwrap();
+    }
+    assert!(serial.max_state_diff(&par) <= 1e-12);
+}
+
+#[test]
+fn kernel_products_match_serial_property() {
+    Prop::new(24).check("kernel_parity", |rng, i| {
+        let m = 1 + (i % 40);
+        let k = 1 + (i * 7) % 150;
+        let n = 1 + (i * 3) % 30;
+        let a = Mat::gaussian(m, k, rng);
+        let b = Mat::gaussian(k, n, rng);
+        let c = Mat::gaussian(m, n, rng);
+        for par in [Parallelism::Threads(2), Parallelism::Threads(4)] {
+            let mm = kernel::matmul(&a, &b, par)
+                .max_abs_diff(&kernel::matmul(&a, &b, Parallelism::Serial));
+            if mm > 0.0 {
+                return Err(format!("matmul not bitwise at {par}: {mm:.2e}"));
+            }
+            let tm = kernel::t_matmul(&a, &c, par)
+                .max_abs_diff(&kernel::t_matmul(&a, &c, Parallelism::Serial));
+            if tm > 0.0 {
+                return Err(format!("t_matmul not bitwise at {par}: {tm:.2e}"));
+            }
+            let mt = kernel::matmul_t(&b, &c, par).max_abs_diff(
+                &kernel::matmul_t(&b, &c, Parallelism::Serial),
+            );
+            if mt > 0.0 {
+                return Err(format!("matmul_t not bitwise at {par}: {mt:.2e}"));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn builder_exposes_the_knob() {
+    let cfg = SketchConfig::builder()
+        .layer_dims(&[8])
+        .threads(4)
+        .build()
+        .unwrap();
+    assert_eq!(cfg.parallelism, Parallelism::Threads(4));
+    let cfg = SketchConfig::builder()
+        .layer_dims(&[8])
+        .threads(1)
+        .build()
+        .unwrap();
+    assert_eq!(cfg.parallelism, Parallelism::Serial);
+    // set_rank must keep the worker pool.
+    let mut e = engine(&[8, 8], 2, 4);
+    e.set_rank(4);
+    assert_eq!(e.config().parallelism, Parallelism::Threads(4));
+}
