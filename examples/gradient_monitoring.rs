@@ -13,8 +13,15 @@
 //! The run (loss curves, diagnosis, memory) is recorded in EXPERIMENTS.md.
 //!
 //! Run: `cargo run --release --example gradient_monitoring -- [--epochs N]`
+//!
+//! **Remote mode** (`--remote ADDR`): instead of monitoring in-process,
+//! stream a native synthetic monitored run into a `sketchd` daemon
+//! (DESIGN.md §5) via the serve wire protocol and read the diagnosis
+//! back over the network — no AOT artifacts required.  Start a daemon
+//! first (`sketchgrad serve` or the `sketchd` binary), then:
+//! `cargo run --release --example gradient_monitoring -- --remote 127.0.0.1:7070`
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 use sketchgrad::config::{ExperimentConfig, Variant};
 use sketchgrad::coordinator::experiments::curve_table;
 use sketchgrad::coordinator::{
@@ -31,7 +38,12 @@ fn main() -> Result<()> {
     let epochs = args.opt_usize("epochs", 2)?;
     let train_size = args.opt_usize("train-size", 128 * 40)?;
     let seed = args.opt_u64("seed", 42)?;
+    let remote = args.opt("remote");
     args.finish()?;
+
+    if let Some(addr) = remote {
+        return run_remote(&addr, seed);
+    }
 
     let rt = open_runtime()?;
     println!("Figure 5 end-to-end driver — 16-layer x 1024 MLPs, r=4, beta=0.9");
@@ -84,7 +96,7 @@ fn main() -> Result<()> {
     let mut session_ids = Vec::new();
     for (label, run) in [("healthy", &healthy), ("problematic", &problematic)]
     {
-        let id = hub.register(label, cfg.clone(), 15);
+        let id = hub.register(label, cfg.clone(), 15)?;
         for m in &run.history {
             hub.observe(id, m)?;
         }
@@ -135,6 +147,73 @@ fn main() -> Result<()> {
         fmt_bytes(problematic.measured_sketch_bytes)
     );
     println!("\ngradient_monitoring driver OK");
+    Ok(())
+}
+
+/// Remote mode: a healthy and a problematic synthetic run stream their
+/// activations into a `sketchd` daemon, which owns the engines and the
+/// hub; only the problematic session may come back flagged.
+fn run_remote(addr: &str, seed: u64) -> Result<()> {
+    use sketchgrad::data::ActStream;
+    use sketchgrad::serve::{SessionSpec, SketchClient};
+
+    const STEPS: usize = 60;
+    const N_B: usize = 32;
+    let dims = [64usize, 32, 16];
+
+    let (mut client, info) = SketchClient::connect(addr)?;
+    println!(
+        "remote mode: {} proto v{} at {addr} ({}/{} sessions)",
+        info.server, info.proto, info.sessions, info.max_sessions
+    );
+
+    let mut sessions = Vec::new();
+    for (label, problematic) in [("healthy", false), ("problematic", true)] {
+        let session = client.open_session(&SessionSpec {
+            name: label.into(),
+            layer_dims: dims.to_vec(),
+            rank: 4,
+            beta: 0.9,
+            seed: seed + problematic as u64,
+            window: STEPS / 4,
+            collapse_frac: 0.25,
+        })?;
+        let mut stream = ActStream::new(&dims, problematic, seed);
+        for step in 0..STEPS {
+            let nb = if step == STEPS - 1 { N_B / 3 } else { N_B };
+            let loss = stream.loss_at(step, STEPS);
+            client.ingest(session, loss, &stream.next_batch(nb), false)?;
+        }
+        sessions.push((label, problematic, session));
+    }
+
+    println!("\n| session | steps | engine bytes | monitor bytes | healthy |");
+    println!("|---|---|---|---|---|");
+    for (label, problematic, session) in &sessions {
+        let d = client.diagnose(*session)?;
+        println!(
+            "| {label} | {} | {} | {} | {} |",
+            d.steps_seen,
+            fmt_bytes(d.engine_bytes as usize),
+            fmt_bytes(d.monitor_bytes as usize),
+            d.healthy
+        );
+        ensure!(
+            d.healthy != *problematic,
+            "{label} mis-diagnosed: {:?}",
+            d.diagnosis
+        );
+    }
+    let (path, bytes, n) = client.snapshot()?;
+    println!(
+        "\ndaemon snapshotted {n} sessions to {path} ({}); sessions stay \
+         live for reconnect/restart",
+        fmt_bytes(bytes as usize)
+    );
+    for (_, _, session) in &sessions {
+        client.close_session(*session)?;
+    }
+    println!("remote gradient_monitoring driver OK");
     Ok(())
 }
 

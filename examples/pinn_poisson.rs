@@ -50,7 +50,7 @@ fn main() -> Result<()> {
             .first()
             .map(|m| m.z_norm.len())
             .unwrap_or(0);
-        let id = hub.register(&run.label, cfg, n_layers);
+        let id = hub.register(&run.label, cfg, n_layers)?;
         for m in &run.history {
             hub.observe(id, m)?;
         }

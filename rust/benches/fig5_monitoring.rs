@@ -56,8 +56,8 @@ fn main() {
     let sample: Vec<StepMetrics> = results[0].1.clone();
     bench.run("hub.observe 2 tenants x20steps", Some((40.0, "steps/s")), || {
         let mut hub = MonitorHub::new();
-        let a = hub.register("healthy", MonitorConfig::for_rank(4), 15);
-        let b = hub.register("problematic", MonitorConfig::for_rank(4), 15);
+        let a = hub.register("healthy", MonitorConfig::for_rank(4), 15).unwrap();
+        let b = hub.register("problematic", MonitorConfig::for_rank(4), 15).unwrap();
         for m in &sample {
             hub.observe(a, m).unwrap();
             hub.observe(b, m).unwrap();

@@ -10,6 +10,9 @@
 //! kernel regression fails the bench run itself.
 
 use sketchgrad::benchkit::{quick_requested, Bench};
+use sketchgrad::config::ServeConfig;
+use sketchgrad::monitor::{step_metrics, MonitorHub};
+use sketchgrad::serve::{monitor_config, Daemon, SessionSpec, SketchClient};
 use sketchgrad::sketch::metrics::stable_rank_power;
 use sketchgrad::sketch::reconstruct::reconstruct_batch_unfused;
 use sketchgrad::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
@@ -177,10 +180,71 @@ fn main() {
         });
     }
 
+    // --- ingest over loopback (serve subsystem, DESIGN.md §5) ---
+    // One full monitored step through sketchd on 127.0.0.1 vs the same
+    // step in-process (engine ingest + metrics + hub observe): the gap
+    // is the wire + framing overhead clients of the daemon pay.
+    let snap_path = std::env::temp_dir()
+        .join(format!("sketchd-bench-{}.snap", std::process::id()));
+    let daemon = Daemon::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: 4,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: 0,
+        snapshot_path: snap_path.to_string_lossy().into_owned(),
+        threads: 1,
+    })
+    .expect("bind loopback daemon");
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().expect("spawn loopback daemon");
+    let spec = SessionSpec {
+        name: "bench".into(),
+        layer_dims: BENCH_DIMS.to_vec(),
+        rank: BENCH_RANK,
+        beta: 0.95,
+        seed: 42,
+        window: 10,
+        collapse_frac: 0.1,
+    };
+    let (mut client, _info) =
+        SketchClient::connect(&addr).expect("connect loopback daemon");
+    let session = client.open_session(&spec).expect("open bench session");
+
+    let mut local_engine = bench_engine(1);
+    let mut local_hub = MonitorHub::new();
+    let local_id = local_hub
+        .register("bench", monitor_config(&spec), BENCH_DIMS.len())
+        .unwrap();
+    bench.run_bytes(
+        "monitored_step_local",
+        Some((1.0, "steps/s")),
+        Some(act_bytes),
+        || {
+            local_engine.ingest(&acts).unwrap();
+            local_hub
+                .observe(local_id, &step_metrics(1.0, &local_engine.metrics()))
+                .unwrap();
+        },
+    );
+    bench.run_bytes(
+        "ingest_loopback",
+        Some((1.0, "steps/s")),
+        Some(act_bytes),
+        || {
+            client.ingest(session, 1.0, &acts, false).unwrap();
+        },
+    );
+    let loopback_overhead = bench.result("ingest_loopback").unwrap().ns_per_op()
+        / bench.result("monitored_step_local").unwrap().ns_per_op();
+    client.close_session(session).expect("close bench session");
+    handle.stop().expect("stop loopback daemon");
+    let _ = std::fs::remove_file(&snap_path);
+
     bench.report("sketch substrate micro-benches (native rust)");
     println!(
         "\ningest speedup: 2t {ingest_2t:.2}x, 4t {ingest_4t:.2}x | \
-         reconstruct 4t {recon_4t:.2}x | parallel divergence {divergence:.2e}"
+         reconstruct 4t {recon_4t:.2}x | parallel divergence {divergence:.2e} \
+         | loopback overhead {loopback_overhead:.2}x"
     );
     bench
         .write_json(
@@ -191,6 +255,7 @@ fn main() {
                 ("ingest_speedup_4t", ingest_4t),
                 ("reconstruct_speedup_4t", recon_4t),
                 ("parallel_max_abs_diff", divergence),
+                ("loopback_overhead_x", loopback_overhead),
             ],
             BENCH_JSON,
         )

@@ -93,7 +93,7 @@ fn native_probe() -> Result<()> {
                 ..MonitorConfig::for_rank(4)
             },
             hub_dims.len(),
-        );
+        )?;
         let mut engine = SketchConfig::builder()
             .layer_dims(&hub_dims)
             .rank(4)

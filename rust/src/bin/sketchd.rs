@@ -1,0 +1,27 @@
+//! `sketchd` — the standalone sketch-monitoring daemon binary.
+//!
+//! Thin wrapper over `sketchgrad::serve::daemon`; the same server is
+//! reachable as `sketchgrad serve`.  Flags (all optional, defaults from
+//! the `[serve]` TOML section or `ServeConfig::default()`):
+//!
+//! ```text
+//! sketchd [--config serve.toml] [--addr 127.0.0.1:7070]
+//!         [--max-sessions 16] [--snapshot-interval 30]
+//!         [--quota 67108864] [--snapshot-path sketchd.snapshot]
+//!         [--threads 1]
+//! ```
+//!
+//! The daemon snapshots on the interval, on client `Snapshot` requests
+//! and at shutdown; a restart on the same `--snapshot-path` resumes all
+//! sessions warm.  Stop it remotely with `sketchgrad connect --shutdown`
+//! (pure-std builds have no signal handling).
+
+use anyhow::Result;
+
+use sketchgrad::serve::serve_from_args;
+use sketchgrad::util::cli::Args;
+
+fn main() -> Result<()> {
+    let mut args = Args::parse_env()?;
+    serve_from_args(&mut args)
+}

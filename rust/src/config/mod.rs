@@ -10,6 +10,20 @@ use crate::coordinator::AdaptiveConfig;
 use crate::sketch::SketchConfigBuilder;
 use crate::util::toml::Toml;
 
+/// Resolve a thread-count knob: `0` means "auto" and maps to the host's
+/// available parallelism (never a zero-worker pool); any other value is
+/// taken literally (1 = serial).  Both the TOML `threads = 0` and the CLI
+/// `--threads 0` spellings route through here.
+pub fn resolve_threads(n: usize) -> usize {
+    if n == 0 {
+        std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1)
+    } else {
+        n
+    }
+}
+
 #[derive(Clone, Debug, PartialEq)]
 pub enum Variant {
     Standard,
@@ -46,8 +60,10 @@ pub struct ExperimentConfig {
     pub rank: usize,
     /// EMA decay for the sketch triplets (paper §4.1).
     pub beta: f64,
-    /// Kernel worker-pool width for the native sketch substrate (0/1 =
-    /// serial).  Numerics are identical at any setting.
+    /// Kernel worker-pool width for the native sketch substrate (1 =
+    /// serial; `0` in TOML/CLI input is resolved to the host's available
+    /// parallelism by [`resolve_threads`] before it lands here).
+    /// Numerics are identical at any setting.
     pub threads: usize,
     pub adaptive: bool,
     pub adaptive_cfg: AdaptiveConfig,
@@ -105,7 +121,7 @@ impl ExperimentConfig {
             )?)?,
             rank: t.usize_or("sketch.rank", d.rank)?,
             beta: t.f64_or("sketch.beta", d.beta)?,
-            threads: t.usize_or("sketch.threads", d.threads)?,
+            threads: resolve_threads(t.usize_or("sketch.threads", d.threads)?),
             adaptive: t.bool_or("sketch.adaptive", d.adaptive)?,
             adaptive_cfg,
             epochs: t.usize_or("experiment.epochs", d.epochs)?,
@@ -157,6 +173,78 @@ impl ExperimentConfig {
                 self.rank,
                 self.adaptive_cfg.ladder
             );
+        }
+        Ok(())
+    }
+}
+
+/// Configuration for the `sketchd` monitoring daemon (`rust/src/serve`),
+/// loadable from a `[serve]` TOML section with CLI overrides.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ServeConfig {
+    /// Listen address; port 0 binds an ephemeral port (tests/benches).
+    pub addr: String,
+    /// Admission cap: `OpenSession` beyond this replies `Busy`.
+    pub max_sessions: usize,
+    /// Seconds between periodic durable snapshots (0 = snapshot only on
+    /// client request and at shutdown).
+    pub snapshot_interval_secs: u64,
+    /// Per-session backpressure quota: ingest payload bytes a tenant may
+    /// stream between `Diagnose` calls before the daemon replies `Busy`
+    /// (0 = unlimited).  See DESIGN.md §5 backpressure rules.
+    pub session_quota_bytes: usize,
+    /// Durable snapshot file (written atomically via rename).
+    pub snapshot_path: String,
+    /// Worker-pool width for daemon-side engine kernels (0 = auto).
+    pub threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            addr: "127.0.0.1:7070".into(),
+            max_sessions: 16,
+            snapshot_interval_secs: 30,
+            session_quota_bytes: 64 << 20,
+            snapshot_path: "sketchd.snapshot".into(),
+            threads: 1,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_toml_file(path: &Path) -> Result<ServeConfig> {
+        let text = std::fs::read_to_string(path)?;
+        Self::from_toml(&Toml::parse(&text)?)
+    }
+
+    pub fn from_toml(t: &Toml) -> Result<ServeConfig> {
+        let d = ServeConfig::default();
+        Ok(ServeConfig {
+            addr: t.str_or("serve.addr", &d.addr)?,
+            max_sessions: t.usize_or("serve.max_sessions", d.max_sessions)?,
+            snapshot_interval_secs: t.usize_or(
+                "serve.snapshot_interval_secs",
+                d.snapshot_interval_secs as usize,
+            )? as u64,
+            session_quota_bytes: t.usize_or(
+                "serve.session_quota_bytes",
+                d.session_quota_bytes,
+            )?,
+            snapshot_path: t.str_or("serve.snapshot_path", &d.snapshot_path)?,
+            threads: resolve_threads(t.usize_or("serve.threads", d.threads)?),
+        })
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.addr.is_empty() {
+            bail!("serve.addr must not be empty");
+        }
+        if self.max_sessions == 0 {
+            bail!("serve.max_sessions must be > 0");
+        }
+        if self.snapshot_path.is_empty() {
+            bail!("serve.snapshot_path must not be empty");
         }
         Ok(())
     }
@@ -220,5 +308,70 @@ p_decrease = 4
         c.variant = Variant::Sketched;
         c.rank = 3;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn threads_zero_resolves_to_available_parallelism() {
+        let avail = std::thread::available_parallelism()
+            .map(|p| p.get())
+            .unwrap_or(1);
+        assert_eq!(resolve_threads(0), avail);
+        assert_eq!(resolve_threads(1), 1);
+        assert_eq!(resolve_threads(4), 4);
+
+        // TOML path: `threads = 0` must never reach the engine as a
+        // zero-worker pool.
+        let t = Toml::parse("[sketch]\nthreads = 0\n").unwrap();
+        let c = ExperimentConfig::from_toml(&t).unwrap();
+        assert_eq!(c.threads, avail);
+        assert!(c.threads >= 1);
+        let sk = c.sketch_builder(&[16]).build().unwrap();
+        assert!(sk.parallelism.threads() >= 1);
+
+        // CLI path: `--threads 0` goes through the same resolver.
+        let mut args = crate::util::cli::Args::parse(
+            ["--threads", "0"].iter().map(|s| s.to_string()),
+        )
+        .unwrap();
+        let cli = resolve_threads(args.opt_usize("threads", 1).unwrap());
+        assert_eq!(cli, avail);
+    }
+
+    #[test]
+    fn serve_config_from_toml_and_validation() {
+        let d = ServeConfig::default();
+        assert!(d.validate().is_ok());
+
+        let t = Toml::parse(
+            r#"
+[serve]
+addr = "0.0.0.0:9000"
+max_sessions = 4
+snapshot_interval_secs = 5
+session_quota_bytes = 1024
+snapshot_path = "/tmp/snap.bin"
+threads = 2
+"#,
+        )
+        .unwrap();
+        let c = ServeConfig::from_toml(&t).unwrap();
+        assert_eq!(c.addr, "0.0.0.0:9000");
+        assert_eq!(c.max_sessions, 4);
+        assert_eq!(c.snapshot_interval_secs, 5);
+        assert_eq!(c.session_quota_bytes, 1024);
+        assert_eq!(c.snapshot_path, "/tmp/snap.bin");
+        assert_eq!(c.threads, 2);
+        c.validate().unwrap();
+
+        // Missing section falls back to defaults entirely.
+        let empty = Toml::parse("").unwrap();
+        assert_eq!(ServeConfig::from_toml(&empty).unwrap(), d);
+
+        let mut bad = d.clone();
+        bad.max_sessions = 0;
+        assert!(bad.validate().is_err());
+        bad = d;
+        bad.addr.clear();
+        assert!(bad.validate().is_err());
     }
 }

@@ -1,4 +1,4 @@
-//! Data substrate: synthetic dataset generators (DESIGN.md §5
+//! Data substrate: synthetic dataset generators (DESIGN.md §6
 //! substitutions), seeded batching/prefetch, and parameter init schemes.
 
 pub mod batcher;

@@ -1,4 +1,4 @@
-//! Synthetic dataset substrate (DESIGN.md §5 substitutions).
+//! Synthetic dataset substrate (DESIGN.md §6 substitutions).
 //!
 //! MNIST/CIFAR-10 downloads are unavailable offline, so the experiments run
 //! on deterministic, seeded generators that preserve what the paper's

@@ -25,5 +25,6 @@ pub mod memory;
 pub mod monitor;
 pub mod pinn;
 pub mod runtime;
+pub mod serve;
 pub mod sketch;
 pub mod util;

@@ -8,6 +8,9 @@
 //!   monitor       healthy vs problematic 16-layer MLPs (Figure 5)
 //!   hub           K concurrent monitored runs through one MonitorHub
 //!                 (native substrate — no artifacts needed)
+//!   serve         run the sketchd monitoring daemon in-process
+//!   connect       talk to a sketchd daemon (--probe / --probe-resume N /
+//!                 --shutdown / status)
 //!   memory-table  §4.7 / §5.3 memory models (TAB-MEM1/2)
 //!   bound-check   Thm 4.2 sqrt(6)·tau_{r+1} validation
 //!   info          manifest + platform summary
@@ -17,7 +20,7 @@ use std::thread;
 
 use anyhow::{bail, Result};
 
-use sketchgrad::config::{ExperimentConfig, Variant};
+use sketchgrad::config::{resolve_threads, ExperimentConfig, Variant};
 use sketchgrad::coordinator::experiments::curve_table;
 use sketchgrad::coordinator::{
     diagnose_run, figure_table, open_runtime, run_classifier, run_pinn,
@@ -29,6 +32,9 @@ use sketchgrad::memory::{fmt_bytes, mnist_dims, monitor16_dims, MemoryModel};
 use sketchgrad::monitor::{step_metrics, MonitorConfig, MonitorHub};
 use sketchgrad::pinn::field_summary;
 use sketchgrad::runtime::{Runtime, Tensor};
+use sketchgrad::serve::{
+    run_probe, run_probe_resume, serve_from_args, SketchClient,
+};
 use sketchgrad::sketch::{eig, engine_state_bytes, Mat, Parallelism, SketchConfig, Sketcher};
 use sketchgrad::util::cli::Args;
 use sketchgrad::util::rng::Rng;
@@ -47,11 +53,13 @@ fn main() -> Result<()> {
         "pinn" => cmd_pinn(&mut args),
         "monitor" => cmd_monitor(&mut args),
         "hub" => cmd_hub(&mut args),
+        "serve" => serve_from_args(&mut args),
+        "connect" => cmd_connect(&mut args),
         "memory-table" => cmd_memory_table(&mut args),
         "bound-check" => cmd_bound_check(&mut args),
         "info" => cmd_info(),
         other => bail!(
-            "unknown command {other:?}; try train|fig1|fig2|pinn|monitor|hub|memory-table|bound-check|info"
+            "unknown command {other:?}; try train|fig1|fig2|pinn|monitor|hub|serve|connect|memory-table|bound-check|info"
         ),
     }
 }
@@ -71,7 +79,7 @@ fn base_config(args: &mut Args) -> Result<ExperimentConfig> {
     cfg.test_size = args.opt_usize("test-size", cfg.test_size)?;
     cfg.seed = args.opt_u64("seed", cfg.seed)?;
     cfg.name = args.opt_or("name", &cfg.name);
-    cfg.threads = args.opt_usize("threads", cfg.threads)?;
+    cfg.threads = resolve_threads(args.opt_usize("threads", cfg.threads)?);
     Ok(cfg)
 }
 
@@ -262,7 +270,7 @@ fn cmd_hub(args: &mut Args) -> Result<()> {
     let n_b = args.opt_usize("batch", 64)?;
     let rank = args.opt_usize("rank", 4)?;
     let seed = args.opt_u64("seed", 42)?;
-    let threads = args.opt_usize("threads", 1)?;
+    let threads = resolve_threads(args.opt_usize("threads", 1)?);
     args.finish()?;
     if sessions == 0 {
         bail!("--sessions must be > 0");
@@ -297,7 +305,7 @@ fn cmd_hub(args: &mut Args) -> Result<()> {
             collapse_frac: 0.25,
             ..MonitorConfig::for_rank(rank)
         };
-        ids.push(hub.register(&label, cfg, dims.len()));
+        ids.push(hub.register(&label, cfg, dims.len())?);
     }
 
     // One producer thread per tenant; the hub consumes on this thread.
@@ -481,6 +489,45 @@ fn run_with_artifact(
         steps_per_sec: steps as f64 / wall.max(1e-9),
         history: trainer.history,
     })
+}
+
+/// `sketchgrad connect`: client-side access to a running sketchd.
+/// `--probe` drives a full mirrored ingest/diagnose/snapshot cycle,
+/// `--probe-resume N` verifies a warm resume after a daemon restart,
+/// `--shutdown` snapshots and stops the daemon; with none of those the
+/// command prints the daemon's capacity status.
+fn cmd_connect(args: &mut Args) -> Result<()> {
+    let addr = args.opt_or("addr", "127.0.0.1:7070");
+    let probe = args.flag("probe");
+    let probe_resume = args.opt("probe-resume");
+    let shutdown = args.flag("shutdown");
+    args.finish()?;
+    let mut acted = false;
+    if probe {
+        run_probe(&addr)?;
+        acted = true;
+    }
+    if let Some(raw) = probe_resume {
+        let session: u64 = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--probe-resume needs a session id"))?;
+        run_probe_resume(&addr, session)?;
+        acted = true;
+    }
+    if shutdown {
+        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let sessions = client.shutdown_daemon()?;
+        println!("daemon shutting down ({sessions} sessions snapshotted)");
+        acted = true;
+    }
+    if !acted {
+        let (_client, info) = SketchClient::connect(&addr)?;
+        println!(
+            "{} proto v{} — {}/{} sessions",
+            info.server, info.proto, info.sessions, info.max_sessions
+        );
+    }
+    Ok(())
 }
 
 fn cmd_memory_table(args: &mut Args) -> Result<()> {

@@ -10,14 +10,15 @@
 //! items build on.
 
 use std::collections::BTreeMap;
-
-use anyhow::{Context, Result};
+use std::fmt;
 
 use crate::coordinator::StepMetrics;
 use crate::sketch::metrics::LayerMetrics;
 use crate::sketch::Parallelism;
 
-use super::service::{Diagnosis, MonitorConfig, MonitorService};
+use super::service::{
+    Diagnosis, MonitorConfig, MonitorService, ServiceState,
+};
 
 /// Opaque tenant handle issued by [`MonitorHub::register`].
 #[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord, Hash)]
@@ -27,7 +28,42 @@ impl SessionId {
     pub fn raw(self) -> u64 {
         self.0
     }
+
+    /// Rebuild a handle from its raw id (snapshot restore / wire layer).
+    pub fn from_raw(raw: u64) -> SessionId {
+        SessionId(raw)
+    }
 }
+
+/// Typed hub failures, so the serve wire layer can map each case to a
+/// protocol error code instead of stringly-typed (or panicking) paths.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum HubError {
+    /// `restore_session` was handed an id the hub already holds.
+    DuplicateSession(SessionId),
+    /// The id space is exhausted (`u64::MAX` is reserved as a sentinel).
+    SessionsExhausted,
+    /// An operation referenced an id the hub does not hold.
+    NoSuchSession(SessionId),
+}
+
+impl fmt::Display for HubError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            HubError::DuplicateSession(id) => {
+                write!(f, "hub already has session {id}")
+            }
+            HubError::SessionsExhausted => {
+                write!(f, "hub session id space exhausted")
+            }
+            HubError::NoSuchSession(id) => {
+                write!(f, "hub has no session {id}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for HubError {}
 
 impl std::fmt::Display for SessionId {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
@@ -71,6 +107,27 @@ impl MonitorSession {
     pub fn monitor_bytes(&self) -> usize {
         self.svc.monitor_bytes()
     }
+
+    /// Plain-data image of the session (id, name, tenant-reported sketch
+    /// bytes and the full detector state) for durable snapshots.
+    pub fn state(&self) -> SessionState {
+        SessionState {
+            id: self.id.raw(),
+            name: self.name.clone(),
+            sketch_bytes: self.sketch_bytes as u64,
+            service: self.svc.state(),
+        }
+    }
+}
+
+/// Snapshot image of one [`MonitorSession`]; restored with
+/// [`MonitorHub::restore_session`].
+#[derive(Clone, Debug)]
+pub struct SessionState {
+    pub id: u64,
+    pub name: String,
+    pub sketch_bytes: u64,
+    pub service: ServiceState,
 }
 
 /// Aggregate view over all tenants.
@@ -151,12 +208,19 @@ impl MonitorHub {
     }
 
     /// Admit a tenant; `n_layers` sizes its per-layer rolling stats.
+    ///
+    /// Errors with [`HubError::SessionsExhausted`] once the id space is
+    /// used up (`u64::MAX` is reserved) — a typed error the wire layer
+    /// maps to a protocol error code rather than a panic.
     pub fn register(
         &mut self,
         name: &str,
         cfg: MonitorConfig,
         n_layers: usize,
-    ) -> SessionId {
+    ) -> Result<SessionId, HubError> {
+        if self.next_id == u64::MAX {
+            return Err(HubError::SessionsExhausted);
+        }
         let id = SessionId(self.next_id);
         self.next_id += 1;
         self.sessions.insert(
@@ -168,14 +232,46 @@ impl MonitorHub {
                 sketch_bytes: 0,
             },
         );
-        id
+        Ok(id)
+    }
+
+    /// Re-admit a snapshotted session under its original id.  Rejects an
+    /// id the hub already holds (`DuplicateSession`) or the reserved
+    /// sentinel (`SessionsExhausted`); on success the id allocator is
+    /// advanced past the restored id so later `register` calls cannot
+    /// collide with it.
+    pub fn restore_session(
+        &mut self,
+        st: &SessionState,
+    ) -> Result<SessionId, HubError> {
+        if st.id == u64::MAX {
+            return Err(HubError::SessionsExhausted);
+        }
+        let id = SessionId(st.id);
+        if self.sessions.contains_key(&id) {
+            return Err(HubError::DuplicateSession(id));
+        }
+        self.sessions.insert(
+            id,
+            MonitorSession {
+                id,
+                name: st.name.clone(),
+                svc: MonitorService::from_state(&st.service),
+                sketch_bytes: st.sketch_bytes as usize,
+            },
+        );
+        self.next_id = self.next_id.max(st.id + 1);
+        Ok(id)
     }
 
     /// Evict a tenant, returning its final session state.
-    pub fn deregister(&mut self, id: SessionId) -> Result<MonitorSession> {
+    pub fn deregister(
+        &mut self,
+        id: SessionId,
+    ) -> Result<MonitorSession, HubError> {
         self.sessions
             .remove(&id)
-            .with_context(|| format!("hub has no session {id}"))
+            .ok_or(HubError::NoSuchSession(id))
     }
 
     pub fn len(&self) -> usize {
@@ -186,10 +282,11 @@ impl MonitorHub {
         self.sessions.is_empty()
     }
 
-    pub fn session(&self, id: SessionId) -> Result<&MonitorSession> {
-        self.sessions
-            .get(&id)
-            .with_context(|| format!("hub has no session {id}"))
+    pub fn session(
+        &self,
+        id: SessionId,
+    ) -> Result<&MonitorSession, HubError> {
+        self.sessions.get(&id).ok_or(HubError::NoSuchSession(id))
     }
 
     pub fn sessions(&self) -> impl Iterator<Item = &MonitorSession> {
@@ -197,10 +294,14 @@ impl MonitorHub {
     }
 
     /// Route one step's metrics to a tenant.
-    pub fn observe(&mut self, id: SessionId, m: &StepMetrics) -> Result<()> {
+    pub fn observe(
+        &mut self,
+        id: SessionId,
+        m: &StepMetrics,
+    ) -> Result<(), HubError> {
         self.sessions
             .get_mut(&id)
-            .with_context(|| format!("hub has no session {id}"))?
+            .ok_or(HubError::NoSuchSession(id))?
             .observe(m);
         Ok(())
     }
@@ -210,15 +311,15 @@ impl MonitorHub {
         &mut self,
         id: SessionId,
         bytes: usize,
-    ) -> Result<()> {
+    ) -> Result<(), HubError> {
         self.sessions
             .get_mut(&id)
-            .with_context(|| format!("hub has no session {id}"))?
+            .ok_or(HubError::NoSuchSession(id))?
             .sketch_bytes = bytes;
         Ok(())
     }
 
-    pub fn diagnose(&self, id: SessionId) -> Result<Diagnosis> {
+    pub fn diagnose(&self, id: SessionId) -> Result<Diagnosis, HubError> {
         Ok(self.session(id)?.diagnose())
     }
 
@@ -278,7 +379,9 @@ impl MonitorHub {
         history: &[StepMetrics],
     ) -> Diagnosis {
         let mut hub = MonitorHub::new();
-        let id = hub.register("history", cfg, n_layers);
+        let id = hub
+            .register("history", cfg, n_layers)
+            .expect("fresh hub cannot be exhausted");
         for m in history {
             hub.observe(id, m).expect("session just registered");
         }
@@ -326,8 +429,8 @@ mod tests {
     #[test]
     fn register_observe_deregister_roundtrip() {
         let mut hub = MonitorHub::new();
-        let a = hub.register("a", cfg(), 3);
-        let b = hub.register("b", cfg(), 3);
+        let a = hub.register("a", cfg(), 3).unwrap();
+        let b = hub.register("b", cfg(), 3).unwrap();
         assert_ne!(a, b);
         assert_eq!(hub.len(), 2);
         hub.observe(a, &metrics(1.0, 5.0, 8.0, 3)).unwrap();
@@ -342,8 +445,8 @@ mod tests {
     #[test]
     fn sessions_are_independent() {
         let mut hub = MonitorHub::new();
-        let good = hub.register("good", cfg(), 4);
-        let bad = hub.register("bad", cfg(), 4);
+        let good = hub.register("good", cfg(), 4).unwrap();
+        let bad = hub.register("bad", cfg(), 4).unwrap();
         for step in 0..120 {
             let loss = 2.3 * (-0.03 * step as f32).exp() + 0.05;
             hub.observe(good, &metrics(loss, 80.0 + (step % 5) as f32, 8.5, 4))
@@ -362,9 +465,9 @@ mod tests {
     #[test]
     fn hub_memory_scales_with_tenants_not_duration() {
         let mut hub = MonitorHub::new();
-        let a = hub.register("a", cfg(), 8);
+        let a = hub.register("a", cfg(), 8).unwrap();
         let m1 = hub.memory();
-        let _b = hub.register("b", cfg(), 8);
+        let _b = hub.register("b", cfg(), 8).unwrap();
         assert_eq!(hub.memory(), 2 * m1);
         for _ in 0..5_000 {
             hub.observe(a, &metrics(1.0, 1.0, 1.0, 8)).unwrap();
@@ -381,7 +484,7 @@ mod tests {
         for hub in [&mut serial, &mut par] {
             let mut ids = Vec::new();
             for i in 0..6 {
-                ids.push(hub.register(&format!("t{i}"), cfg(), 3));
+                ids.push(hub.register(&format!("t{i}"), cfg(), 3).unwrap());
             }
             for step in 0..120 {
                 for (i, &id) in ids.iter().enumerate() {
@@ -415,10 +518,75 @@ mod tests {
     }
 
     #[test]
+    fn typed_errors_for_missing_duplicate_and_exhausted_sessions() {
+        let mut hub = MonitorHub::new();
+        let ghost = SessionId::from_raw(99);
+        assert_eq!(
+            hub.observe(ghost, &metrics(1.0, 1.0, 1.0, 2)),
+            Err(HubError::NoSuchSession(ghost))
+        );
+        assert_eq!(
+            hub.diagnose(ghost).unwrap_err(),
+            HubError::NoSuchSession(ghost)
+        );
+        // (`unwrap_err` would need `MonitorSession: Debug`; go via `err`.)
+        assert_eq!(
+            hub.deregister(ghost).err(),
+            Some(HubError::NoSuchSession(ghost))
+        );
+
+        let a = hub.register("a", cfg(), 2).unwrap();
+        let st = hub.session(a).unwrap().state();
+        assert_eq!(
+            hub.restore_session(&st).unwrap_err(),
+            HubError::DuplicateSession(a)
+        );
+
+        // The reserved sentinel id is rejected, and restoring the largest
+        // valid id exhausts the allocator for subsequent registers.
+        let mut tail = st.clone();
+        tail.id = u64::MAX;
+        assert_eq!(
+            hub.restore_session(&tail).unwrap_err(),
+            HubError::SessionsExhausted
+        );
+        tail.id = u64::MAX - 1;
+        hub.restore_session(&tail).unwrap();
+        assert_eq!(
+            hub.register("overflow", cfg(), 2).unwrap_err(),
+            HubError::SessionsExhausted
+        );
+    }
+
+    #[test]
+    fn restore_session_resumes_detector_state() {
+        let mut hub = MonitorHub::new();
+        let a = hub.register("a", cfg(), 3).unwrap();
+        for _ in 0..60 {
+            hub.observe(a, &metrics(2.3, 9.0, 1.2, 3)).unwrap();
+        }
+        hub.report_sketch_bytes(a, 4096).unwrap();
+        let st = hub.session(a).unwrap().state();
+
+        let mut fresh = MonitorHub::new();
+        let rid = fresh.restore_session(&st).unwrap();
+        assert_eq!(rid, a);
+        let (orig, back) =
+            (hub.session(a).unwrap(), fresh.session(rid).unwrap());
+        assert_eq!(back.steps_seen(), orig.steps_seen());
+        assert_eq!(back.diagnose(), orig.diagnose());
+        assert_eq!(back.sketch_bytes, 4096);
+        assert_eq!(back.name, "a");
+        // The allocator skips past the restored id.
+        let next = fresh.register("next", cfg(), 3).unwrap();
+        assert!(next.raw() > rid.raw());
+    }
+
+    #[test]
     fn sketch_bytes_reporting_aggregates() {
         let mut hub = MonitorHub::new();
-        let a = hub.register("a", cfg(), 2);
-        let b = hub.register("b", cfg(), 2);
+        let a = hub.register("a", cfg(), 2).unwrap();
+        let b = hub.register("b", cfg(), 2).unwrap();
         hub.report_sketch_bytes(a, 1000).unwrap();
         hub.report_sketch_bytes(b, 500).unwrap();
         assert_eq!(hub.aggregate().sketch_bytes, 1500);

@@ -5,5 +5,11 @@
 pub mod hub;
 pub mod service;
 
-pub use hub::{step_metrics, HubReport, MonitorHub, MonitorSession, SessionId};
-pub use service::{Diagnosis, MonitorConfig, MonitorService, Rolling};
+pub use hub::{
+    step_metrics, HubError, HubReport, MonitorHub, MonitorSession,
+    SessionId, SessionState,
+};
+pub use service::{
+    Diagnosis, MonitorConfig, MonitorService, Rolling, RollingState,
+    ServiceState,
+};

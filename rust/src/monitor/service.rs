@@ -46,6 +46,41 @@ impl Rolling {
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
+
+    /// Full internal state (including the private Welford `m2`) as plain
+    /// data, so snapshots restore bit-for-bit.
+    pub fn state(&self) -> RollingState {
+        RollingState {
+            n: self.n,
+            mean: self.mean,
+            m2: self.m2,
+            min: self.min,
+            max: self.max,
+            last: self.last,
+        }
+    }
+
+    pub fn from_state(st: &RollingState) -> Rolling {
+        Rolling {
+            n: st.n,
+            mean: st.mean,
+            m2: st.m2,
+            min: st.min,
+            max: st.max,
+            last: st.last,
+        }
+    }
+}
+
+/// Plain-data image of a [`Rolling`] summary (snapshot hook).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct RollingState {
+    pub n: u64,
+    pub mean: f64,
+    pub m2: f64,
+    pub min: f64,
+    pub max: f64,
+    pub last: f64,
 }
 
 /// Detector verdicts over a monitoring window.
@@ -76,7 +111,7 @@ impl Diagnosis {
     }
 }
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct MonitorConfig {
     /// Sketch dimension k = 2r + 1 (for stable-rank normalisation).
     pub k: usize,
@@ -107,6 +142,22 @@ impl MonitorConfig {
             collapse_frac: 0.1,
         }
     }
+}
+
+/// Plain-data image of a [`MonitorService`] (snapshot hook; the serve
+/// subsystem's codec turns this into wire/disk bytes).
+#[derive(Clone, Debug)]
+pub struct ServiceState {
+    pub cfg: MonitorConfig,
+    pub loss: RollingState,
+    pub z_norm: Vec<RollingState>,
+    pub stable_rank: Vec<RollingState>,
+    /// Recent-window ring buffer entries: (loss, z_norms, sranks).
+    pub recent: Vec<(f64, Vec<f64>, Vec<f64>)>,
+    pub head: u64,
+    pub steps_seen: u64,
+    pub first_window_z: Option<f64>,
+    pub window_start_loss: Option<f64>,
 }
 
 /// The monitor: constant-memory summaries + a bounded recent window.
@@ -249,6 +300,42 @@ impl MonitorService {
         self.diagnose().healthy()
     }
 
+    /// Full detector state as plain data ([`ServiceState`]): rolling
+    /// summaries, the bounded recent window (ring buffer + head) and the
+    /// first-window baselines — everything `diagnose` reads, so a
+    /// restored service diagnoses identically.
+    pub fn state(&self) -> ServiceState {
+        ServiceState {
+            cfg: self.cfg.clone(),
+            loss: self.loss.state(),
+            z_norm: self.z_norm.iter().map(Rolling::state).collect(),
+            stable_rank: self.stable_rank.iter().map(Rolling::state).collect(),
+            recent: self.recent.clone(),
+            head: self.head as u64,
+            steps_seen: self.steps_seen,
+            first_window_z: self.first_window_z,
+            window_start_loss: self.window_start_loss,
+        }
+    }
+
+    pub fn from_state(st: &ServiceState) -> MonitorService {
+        MonitorService {
+            cfg: st.cfg.clone(),
+            loss: Rolling::from_state(&st.loss),
+            z_norm: st.z_norm.iter().map(Rolling::from_state).collect(),
+            stable_rank: st
+                .stable_rank
+                .iter()
+                .map(Rolling::from_state)
+                .collect(),
+            recent: st.recent.clone(),
+            head: st.head as usize,
+            steps_seen: st.steps_seen,
+            first_window_z: st.first_window_z,
+            window_start_loss: st.window_start_loss,
+        }
+    }
+
     /// Bytes held by the monitor — constant in monitoring duration
     /// (the paper's key claim: no T factor).
     pub fn monitor_bytes(&self) -> usize {
@@ -332,6 +419,32 @@ mod tests {
             svc.observe(&metrics(2.3, z, 8.0, 4));
         }
         assert!(svc.diagnose().vanishing_gradients);
+    }
+
+    #[test]
+    fn service_state_roundtrip_preserves_diagnosis() {
+        let cfg = MonitorConfig {
+            window: 10,
+            collapse_frac: 0.5,
+            ..MonitorConfig::for_rank(4)
+        };
+        let mut svc = MonitorService::new(cfg, 3);
+        for step in 0..35 {
+            // Past the window boundary so the ring buffer has wrapped and
+            // the first-window baselines are set.
+            svc.observe(&metrics(2.3, 10.0 + step as f32, 2.9, 3));
+        }
+        let st = svc.state();
+        assert_eq!(st.steps_seen, 35);
+        assert_eq!(st.recent.len(), 10);
+        let mut back = MonitorService::from_state(&st);
+        assert_eq!(back.diagnose(), svc.diagnose());
+        assert_eq!(back.monitor_bytes(), svc.monitor_bytes());
+        assert_eq!(back.loss.var(), svc.loss.var());
+        // Continued observation behaves identically (same ring head).
+        svc.observe(&metrics(1.0, 50.0, 8.0, 3));
+        back.observe(&metrics(1.0, 50.0, 8.0, 3));
+        assert_eq!(back.diagnose(), svc.diagnose());
     }
 
     #[test]

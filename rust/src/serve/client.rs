@@ -1,0 +1,458 @@
+//! Blocking client for the sketchd daemon, plus the deterministic
+//! `--probe` / `--probe-resume` drivers behind `sketchgrad connect` and
+//! the CI `serve-smoke` job.
+//!
+//! Every method sends one request frame and reads one response frame;
+//! `Busy` and remote protocol errors surface as typed [`ServeError`]
+//! variants so callers (and the backpressure tests) can branch on them.
+
+use std::fmt;
+use std::io;
+use std::net::TcpStream;
+use std::thread;
+use std::time::Duration;
+
+use anyhow::{ensure, Context, Result};
+
+use crate::coordinator::StepMetrics;
+use crate::data::ActStream;
+use crate::monitor::{step_metrics, MonitorHub, SessionId};
+use crate::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
+
+use super::daemon::recon_errors;
+use super::proto::{
+    monitor_config, read_frame, write_frame, ErrorCode, Request, Response,
+    SessionSpec, PROTO_VERSION,
+};
+
+/// Typed client-side failures.
+#[derive(Debug)]
+pub enum ServeError {
+    /// Daemon backpressure: admission cap or session quota hit.  Retry
+    /// after a `Diagnose` (quota) or a `Close` elsewhere (admission).
+    Busy { used: u64, limit: u64 },
+    /// The daemon replied with a protocol error.
+    Remote { code: ErrorCode, message: String },
+    /// The daemon replied with an unexpected message or malformed bytes.
+    Protocol(String),
+    Io(io::Error),
+}
+
+impl fmt::Display for ServeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ServeError::Busy { used, limit } => {
+                write!(f, "daemon busy ({used}/{limit})")
+            }
+            ServeError::Remote { code, message } => {
+                write!(f, "remote error [{code}]: {message}")
+            }
+            ServeError::Protocol(m) => write!(f, "protocol error: {m}"),
+            ServeError::Io(e) => write!(f, "io error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+impl From<io::Error> for ServeError {
+    fn from(e: io::Error) -> ServeError {
+        ServeError::Io(e)
+    }
+}
+
+/// Capacity info from the `Hello` handshake.
+#[derive(Clone, Debug)]
+pub struct ServerInfo {
+    pub server: String,
+    pub proto: u16,
+    pub sessions: u64,
+    pub max_sessions: u64,
+}
+
+/// One `Ingest` acknowledgement.
+#[derive(Clone, Debug)]
+pub struct IngestReply {
+    pub batches: u64,
+    pub engine_bytes: u64,
+    pub recon_err: Vec<f64>,
+}
+
+/// One `Diagnose` reply.
+#[derive(Clone, Debug)]
+pub struct DiagnoseReply {
+    pub diagnosis: crate::monitor::Diagnosis,
+    pub healthy: bool,
+    pub steps_seen: u64,
+    pub engine_bytes: u64,
+    pub monitor_bytes: u64,
+}
+
+/// Blocking sketchd client over one TCP connection.
+pub struct SketchClient {
+    stream: TcpStream,
+}
+
+impl SketchClient {
+    /// Connect and complete the `Hello` handshake.  Connection refusals
+    /// are retried briefly so freshly spawned daemons (CI scripts,
+    /// in-process tests) don't race the bind.
+    pub fn connect(addr: &str) -> Result<(SketchClient, ServerInfo), ServeError> {
+        let mut last: Option<io::Error> = None;
+        for _ in 0..20 {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true)?;
+                    let mut client = SketchClient { stream };
+                    let info = client.hello()?;
+                    return Ok((client, info));
+                }
+                Err(e) if e.kind() == io::ErrorKind::ConnectionRefused => {
+                    last = Some(e);
+                    thread::sleep(Duration::from_millis(100));
+                }
+                Err(e) => return Err(e.into()),
+            }
+        }
+        Err(ServeError::Io(last.unwrap_or_else(|| {
+            io::Error::new(io::ErrorKind::ConnectionRefused, "connect failed")
+        })))
+    }
+
+    fn round_trip(&mut self, req: &Request) -> Result<Response, ServeError> {
+        write_frame(&mut self.stream, req.msg_type(), &req.encode())?;
+        let (header, payload) = read_frame(&mut self.stream)?;
+        if header.version != PROTO_VERSION {
+            return Err(ServeError::Protocol(format!(
+                "response frame version {} (expected {PROTO_VERSION})",
+                header.version
+            )));
+        }
+        let resp = Response::decode(header.msg, &payload)
+            .map_err(|e| ServeError::Protocol(e.to_string()))?;
+        match resp {
+            Response::Busy { used, limit } => {
+                Err(ServeError::Busy { used, limit })
+            }
+            Response::Error { code, message } => {
+                Err(ServeError::Remote { code, message })
+            }
+            other => Ok(other),
+        }
+    }
+
+    fn hello(&mut self) -> Result<ServerInfo, ServeError> {
+        match self.round_trip(&Request::Hello {
+            client: concat!("sketchgrad/", env!("CARGO_PKG_VERSION"))
+                .to_string(),
+        })? {
+            Response::HelloOk {
+                server,
+                proto,
+                sessions,
+                max_sessions,
+            } => Ok(ServerInfo {
+                server,
+                proto,
+                sessions,
+                max_sessions,
+            }),
+            other => Err(unexpected("HelloOk", &other)),
+        }
+    }
+
+    pub fn open_session(
+        &mut self,
+        spec: &SessionSpec,
+    ) -> Result<u64, ServeError> {
+        match self.round_trip(&Request::OpenSession(spec.clone()))? {
+            Response::SessionOpened { session } => Ok(session),
+            other => Err(unexpected("SessionOpened", &other)),
+        }
+    }
+
+    /// One monitored training step (see [`Request::Ingest`]).
+    pub fn ingest(
+        &mut self,
+        session: u64,
+        loss: f32,
+        acts: &[Mat],
+        want_recon: bool,
+    ) -> Result<IngestReply, ServeError> {
+        match self.round_trip(&Request::Ingest {
+            session,
+            loss,
+            want_recon,
+            acts: acts.to_vec(),
+        })? {
+            Response::IngestOk {
+                batches,
+                engine_bytes,
+                recon_err,
+            } => Ok(IngestReply {
+                batches,
+                engine_bytes,
+                recon_err,
+            }),
+            other => Err(unexpected("IngestOk", &other)),
+        }
+    }
+
+    /// Push externally computed metrics (no daemon-side engine update).
+    pub fn observe(
+        &mut self,
+        session: u64,
+        metrics: &StepMetrics,
+    ) -> Result<u64, ServeError> {
+        match self.round_trip(&Request::Observe {
+            session,
+            metrics: metrics.clone(),
+        })? {
+            Response::ObserveOk { steps_seen } => Ok(steps_seen),
+            other => Err(unexpected("ObserveOk", &other)),
+        }
+    }
+
+    pub fn diagnose(
+        &mut self,
+        session: u64,
+    ) -> Result<DiagnoseReply, ServeError> {
+        match self.round_trip(&Request::Diagnose { session })? {
+            Response::Diagnosis {
+                diagnosis,
+                healthy,
+                steps_seen,
+                engine_bytes,
+                monitor_bytes,
+            } => Ok(DiagnoseReply {
+                diagnosis,
+                healthy,
+                steps_seen,
+                engine_bytes,
+                monitor_bytes,
+            }),
+            other => Err(unexpected("Diagnosis", &other)),
+        }
+    }
+
+    /// Force a durable snapshot; returns (path, file bytes, sessions).
+    pub fn snapshot(&mut self) -> Result<(String, u64, u64), ServeError> {
+        match self.round_trip(&Request::Snapshot)? {
+            Response::SnapshotOk {
+                path,
+                bytes,
+                sessions,
+            } => Ok((path, bytes, sessions)),
+            other => Err(unexpected("SnapshotOk", &other)),
+        }
+    }
+
+    pub fn close_session(&mut self, session: u64) -> Result<(), ServeError> {
+        match self.round_trip(&Request::Close { session })? {
+            Response::Closed { .. } => Ok(()),
+            other => Err(unexpected("Closed", &other)),
+        }
+    }
+
+    /// Snapshot + stop the daemon; returns sessions snapshotted.
+    pub fn shutdown_daemon(&mut self) -> Result<u64, ServeError> {
+        match self.round_trip(&Request::Shutdown)? {
+            Response::ShutdownOk { sessions } => Ok(sessions),
+            other => Err(unexpected("ShutdownOk", &other)),
+        }
+    }
+}
+
+fn unexpected(want: &str, got: &Response) -> ServeError {
+    ServeError::Protocol(format!("expected {want}, got {got:?}"))
+}
+
+// ---------------------------------------------------------------------
+// Deterministic probe: the CI smoke and `sketchgrad connect --probe`.
+// ---------------------------------------------------------------------
+
+/// Fixed probe workload — both the remote daemon and the in-process
+/// mirror replay exactly this, so every comparison can be bit-for-bit.
+pub const PROBE_DIMS: [usize; 2] = [48, 24];
+pub const PROBE_RANK: usize = 3;
+pub const PROBE_BETA: f64 = 0.9;
+pub const PROBE_SEED: u64 = 0x5EED;
+pub const PROBE_STEPS: usize = 8;
+pub const PROBE_NB: usize = 32;
+pub const PROBE_TAIL: usize = 11;
+pub const PROBE_WINDOW: usize = 2;
+pub const PROBE_COLLAPSE: f64 = 0.25;
+
+pub fn probe_spec() -> SessionSpec {
+    SessionSpec {
+        name: "probe".into(),
+        layer_dims: PROBE_DIMS.to_vec(),
+        rank: PROBE_RANK,
+        beta: PROBE_BETA,
+        seed: PROBE_SEED,
+        window: PROBE_WINDOW,
+        collapse_frac: PROBE_COLLAPSE,
+    }
+}
+
+/// In-process replica of a probe session: the same engine + hub setup
+/// the daemon builds for [`probe_spec`].
+struct Mirror {
+    engine: SketchEngine,
+    hub: MonitorHub,
+    id: SessionId,
+    stream: ActStream,
+}
+
+impl Mirror {
+    fn new() -> Result<Mirror> {
+        let spec = probe_spec();
+        let engine = SketchConfig::builder()
+            .layer_dims(&spec.layer_dims)
+            .rank(spec.rank)
+            .beta(spec.beta)
+            .seed(spec.seed)
+            .build_engine()?;
+        let mut hub = MonitorHub::new();
+        let id = hub.register(
+            &spec.name,
+            monitor_config(&spec),
+            spec.layer_dims.len(),
+        )?;
+        Ok(Mirror {
+            engine,
+            hub,
+            id,
+            stream: ActStream::new(&PROBE_DIMS, false, PROBE_SEED),
+        })
+    }
+
+    /// Generate probe step `step`'s batch and apply it locally.
+    fn step(&mut self, step: usize) -> Result<(f32, Vec<Mat>)> {
+        let n_b = if step == PROBE_STEPS - 1 {
+            PROBE_TAIL
+        } else {
+            PROBE_NB
+        };
+        let acts = self.stream.next_batch(n_b);
+        let loss = self.stream.loss_at(step, PROBE_STEPS);
+        self.engine.ingest(&acts)?;
+        self.hub
+            .observe(self.id, &step_metrics(loss, &self.engine.metrics()))?;
+        Ok((loss, acts))
+    }
+}
+
+/// `sketchgrad connect --probe`: drive a fresh monitored session through
+/// the daemon while mirroring every step in-process, asserting that the
+/// remote diagnosis, reconstruction errors and memory accounting are
+/// bit-for-bit identical.  The session is left OPEN (and a snapshot is
+/// forced) so a follow-up `--probe-resume` can verify a daemon restart.
+/// Returns the session id.
+pub fn run_probe(addr: &str) -> Result<u64> {
+    let (mut client, info) = SketchClient::connect(addr)?;
+    println!(
+        "connected to {} (proto v{}, {}/{} sessions)",
+        info.server, info.proto, info.sessions, info.max_sessions
+    );
+    let session = client.open_session(&probe_spec())?;
+    let mut mirror = Mirror::new()?;
+    for step in 0..PROBE_STEPS {
+        let want_recon = step == PROBE_STEPS - 1;
+        let (loss, acts) = mirror.step(step)?;
+        let reply = client.ingest(session, loss, &acts, want_recon)?;
+        ensure!(
+            reply.engine_bytes == mirror.engine.memory() as u64,
+            "engine bytes diverged at step {step}: remote {} local {}",
+            reply.engine_bytes,
+            mirror.engine.memory()
+        );
+        if want_recon {
+            let local = recon_errors(&mirror.engine, &acts)?;
+            ensure!(
+                reply.recon_err == local,
+                "reconstruction errors diverged: remote {:?} local {:?}",
+                reply.recon_err,
+                local
+            );
+        }
+    }
+    let remote = client.diagnose(session)?;
+    let local = mirror.hub.diagnose(mirror.id)?;
+    ensure!(
+        remote.diagnosis == local,
+        "diagnosis diverged: remote {:?} local {:?}",
+        remote.diagnosis,
+        local
+    );
+    ensure!(
+        remote.steps_seen == PROBE_STEPS as u64,
+        "steps_seen {} != {PROBE_STEPS}",
+        remote.steps_seen
+    );
+    let (path, bytes, sessions) = client.snapshot()?;
+    println!(
+        "probe: session={session} steps={} engine_bytes={} healthy={} \
+         mirror=bit-for-bit-ok snapshot={path} ({bytes} B, {sessions} \
+         sessions)",
+        remote.steps_seen, remote.engine_bytes, remote.healthy
+    );
+    Ok(session)
+}
+
+/// `sketchgrad connect --probe-resume <id>`: after a daemon restart,
+/// rebuild the probe mirror by replaying the probe workload in-process,
+/// verify the resumed session diagnoses identically, then ingest ONE
+/// extra batch on both sides — bit-for-bit equal reconstruction errors
+/// prove the resumed engine state matches (`max_state_diff == 0`).
+/// Closes the session on success.
+pub fn run_probe_resume(addr: &str, session: u64) -> Result<()> {
+    let (mut client, info) = SketchClient::connect(addr)?;
+    ensure!(
+        info.sessions >= 1,
+        "daemon resumed {} sessions, expected >= 1",
+        info.sessions
+    );
+    let mut mirror = Mirror::new()?;
+    for step in 0..PROBE_STEPS {
+        mirror.step(step)?;
+    }
+    let remote = client.diagnose(session)?;
+    let local = mirror.hub.diagnose(mirror.id)?;
+    ensure!(
+        remote.diagnosis == local,
+        "resumed diagnosis diverged: remote {:?} local {:?}",
+        remote.diagnosis,
+        local
+    );
+    ensure!(
+        remote.steps_seen == PROBE_STEPS as u64,
+        "resumed steps_seen {} != {PROBE_STEPS}",
+        remote.steps_seen
+    );
+    ensure!(
+        remote.engine_bytes == mirror.engine.memory() as u64,
+        "resumed engine bytes {} != {}",
+        remote.engine_bytes,
+        mirror.engine.memory()
+    );
+    // The decisive warm-resume check: one more EMA step on both sides.
+    let (loss, acts) = mirror.step(PROBE_STEPS)?;
+    let reply = client.ingest(session, loss, &acts, true)?;
+    let local_err = recon_errors(&mirror.engine, &acts)?;
+    ensure!(
+        reply.recon_err == local_err,
+        "post-resume reconstruction diverged: remote {:?} local {:?}",
+        reply.recon_err,
+        local_err
+    );
+    client
+        .close_session(session)
+        .context("closing probe session")?;
+    println!(
+        "probe-resume: session={session} steps={} resumed warm \
+         (diagnosis + reconstruction bit-for-bit, state diff 0)",
+        remote.steps_seen + 1
+    );
+    Ok(())
+}

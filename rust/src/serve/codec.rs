@@ -1,0 +1,458 @@
+//! Explicit little-endian codec primitives shared by the wire protocol
+//! (`serve::proto`) and the durable snapshot format (`serve::store`).
+//!
+//! Everything is written through [`Enc`] and read back through [`Dec`]:
+//! fixed-width integers, IEEE-754 bit patterns for floats (so snapshots
+//! and wire replies are *bit-exact*, not printf round-trips), u32
+//! length-prefixed strings/arrays and dense [`Mat`] payloads.  The
+//! decoder validates every length against the remaining payload before
+//! allocating, so a corrupt or hostile frame fails with a typed
+//! [`CodecError`] instead of an OOM or panic.
+
+use std::fmt;
+use std::sync::OnceLock;
+
+use crate::sketch::Mat;
+
+/// Typed decode failures (the encode side is infallible).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CodecError {
+    /// Needed `need` more bytes, only `have` remained.
+    Eof { need: usize, have: usize },
+    /// A length prefix exceeds the remaining payload.
+    BadLength { len: usize, have: usize },
+    /// String bytes were not valid UTF-8.
+    Utf8,
+    /// A tag byte had no mapped value.
+    BadTag { what: &'static str, tag: u8 },
+    /// Payload had trailing bytes after the message was fully decoded.
+    Trailing(usize),
+}
+
+impl fmt::Display for CodecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CodecError::Eof { need, have } => {
+                write!(f, "unexpected end of payload (need {need}, have {have})")
+            }
+            CodecError::BadLength { len, have } => {
+                write!(f, "length prefix {len} exceeds remaining {have} bytes")
+            }
+            CodecError::Utf8 => write!(f, "invalid UTF-8 in string"),
+            CodecError::BadTag { what, tag } => {
+                write!(f, "invalid {what} tag {tag}")
+            }
+            CodecError::Trailing(n) => {
+                write!(f, "{n} trailing bytes after message")
+            }
+        }
+    }
+}
+
+impl std::error::Error for CodecError {}
+
+/// Append-only little-endian encoder.
+#[derive(Debug, Default)]
+pub struct Enc {
+    buf: Vec<u8>,
+}
+
+impl Enc {
+    pub fn new() -> Enc {
+        Enc::default()
+    }
+
+    pub fn into_bytes(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// f32 as its IEEE-754 bit pattern (bit-exact round-trip).
+    pub fn f32(&mut self, v: f32) {
+        self.u32(v.to_bits());
+    }
+
+    /// f64 as its IEEE-754 bit pattern (bit-exact round-trip).
+    pub fn f64(&mut self, v: f64) {
+        self.u64(v.to_bits());
+    }
+
+    pub fn bool(&mut self, v: bool) {
+        self.u8(v as u8);
+    }
+
+    /// usize as u32 (wire quantities — dims, counts — are < 4 B entries).
+    pub fn len32(&mut self, n: usize) {
+        debug_assert!(n <= u32::MAX as usize);
+        self.u32(n as u32);
+    }
+
+    pub fn str(&mut self, s: &str) {
+        self.len32(s.len());
+        self.buf.extend_from_slice(s.as_bytes());
+    }
+
+    pub fn f64s(&mut self, xs: &[f64]) {
+        self.len32(xs.len());
+        for &x in xs {
+            self.f64(x);
+        }
+    }
+
+    pub fn f32s(&mut self, xs: &[f32]) {
+        self.len32(xs.len());
+        for &x in xs {
+            self.f32(x);
+        }
+    }
+
+    pub fn usizes(&mut self, xs: &[usize]) {
+        self.len32(xs.len());
+        for &x in xs {
+            self.len32(x);
+        }
+    }
+
+    pub fn opt_f64(&mut self, v: Option<f64>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.f64(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    pub fn opt_usize(&mut self, v: Option<usize>) {
+        match v {
+            Some(x) => {
+                self.u8(1);
+                self.len32(x);
+            }
+            None => self.u8(0),
+        }
+    }
+
+    pub fn mat(&mut self, m: &Mat) {
+        self.len32(m.rows);
+        self.len32(m.cols);
+        for &x in &m.data {
+            self.f64(x);
+        }
+    }
+}
+
+/// Bounds-checked little-endian decoder over a borrowed payload.
+pub struct Dec<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Dec<'a> {
+    pub fn new(b: &'a [u8]) -> Dec<'a> {
+        Dec { b, i: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8], CodecError> {
+        if self.remaining() < n {
+            return Err(CodecError::Eof {
+                need: n,
+                have: self.remaining(),
+            });
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, CodecError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, CodecError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, CodecError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, CodecError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f32(&mut self) -> Result<f32, CodecError> {
+        Ok(f32::from_bits(self.u32()?))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, CodecError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    pub fn bool(&mut self) -> Result<bool, CodecError> {
+        Ok(self.u8()? != 0)
+    }
+
+    /// A u32 length prefix for items of `elem` bytes each, validated
+    /// against the remaining payload before any allocation.
+    pub fn len32(&mut self, elem: usize) -> Result<usize, CodecError> {
+        let n = self.u32()? as usize;
+        let need = n.checked_mul(elem.max(1)).ok_or_else(|| {
+            CodecError::BadLength {
+                len: n,
+                have: self.remaining(),
+            }
+        })?;
+        if elem > 0 && need > self.remaining() {
+            return Err(CodecError::BadLength {
+                len: n,
+                have: self.remaining(),
+            });
+        }
+        Ok(n)
+    }
+
+    pub fn str(&mut self) -> Result<String, CodecError> {
+        let n = self.len32(1)?;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| CodecError::Utf8)
+    }
+
+    pub fn f64s(&mut self) -> Result<Vec<f64>, CodecError> {
+        let n = self.len32(8)?;
+        (0..n).map(|_| self.f64()).collect()
+    }
+
+    pub fn f32s(&mut self) -> Result<Vec<f32>, CodecError> {
+        let n = self.len32(4)?;
+        (0..n).map(|_| self.f32()).collect()
+    }
+
+    pub fn usizes(&mut self) -> Result<Vec<usize>, CodecError> {
+        let n = self.len32(4)?;
+        (0..n).map(|_| Ok(self.u32()? as usize)).collect()
+    }
+
+    pub fn opt_f64(&mut self) -> Result<Option<f64>, CodecError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.f64()?)),
+            tag => Err(CodecError::BadTag {
+                what: "option",
+                tag,
+            }),
+        }
+    }
+
+    pub fn opt_usize(&mut self) -> Result<Option<usize>, CodecError> {
+        match self.u8()? {
+            0 => Ok(None),
+            1 => Ok(Some(self.u32()? as usize)),
+            tag => Err(CodecError::BadTag {
+                what: "option",
+                tag,
+            }),
+        }
+    }
+
+    pub fn mat(&mut self) -> Result<Mat, CodecError> {
+        let rows = self.u32()? as usize;
+        let cols = self.u32()? as usize;
+        let n = rows.checked_mul(cols).ok_or_else(|| {
+            CodecError::BadLength {
+                len: rows,
+                have: self.remaining(),
+            }
+        })?;
+        let need = n.checked_mul(8).ok_or_else(|| {
+            CodecError::BadLength {
+                len: n,
+                have: self.remaining(),
+            }
+        })?;
+        if need > self.remaining() {
+            return Err(CodecError::BadLength {
+                len: n,
+                have: self.remaining(),
+            });
+        }
+        let mut data = Vec::with_capacity(n);
+        for _ in 0..n {
+            data.push(self.f64()?);
+        }
+        Ok(Mat::from_vec(rows, cols, data))
+    }
+
+    /// Assert the payload was consumed exactly.
+    pub fn finish(&self) -> Result<(), CodecError> {
+        if self.remaining() != 0 {
+            return Err(CodecError::Trailing(self.remaining()));
+        }
+        Ok(())
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected) over `bytes` — the snapshot store's
+/// integrity check.  Table built once on first use.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    static TABLE: OnceLock<[u32; 256]> = OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, slot) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 {
+                    0xEDB8_8320 ^ (c >> 1)
+                } else {
+                    c >> 1
+                };
+            }
+            *slot = c;
+        }
+        t
+    });
+    let mut crc = !0u32;
+    for &b in bytes {
+        crc = table[((crc ^ b as u32) & 0xFF) as usize] ^ (crc >> 8);
+    }
+    !crc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn primitive_roundtrip() {
+        let mut e = Enc::new();
+        e.u8(7);
+        e.u16(513);
+        e.u32(70_000);
+        e.u64(u64::MAX - 3);
+        e.f32(-1.5);
+        e.f64(std::f64::consts::PI);
+        e.bool(true);
+        e.str("héllo");
+        e.f64s(&[1.0, -2.5]);
+        e.f32s(&[0.5]);
+        e.usizes(&[3, 0, 9]);
+        e.opt_f64(Some(2.0));
+        e.opt_f64(None);
+        e.opt_usize(Some(5));
+        e.opt_usize(None);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(d.u8().unwrap(), 7);
+        assert_eq!(d.u16().unwrap(), 513);
+        assert_eq!(d.u32().unwrap(), 70_000);
+        assert_eq!(d.u64().unwrap(), u64::MAX - 3);
+        assert_eq!(d.f32().unwrap(), -1.5);
+        assert_eq!(d.f64().unwrap(), std::f64::consts::PI);
+        assert!(d.bool().unwrap());
+        assert_eq!(d.str().unwrap(), "héllo");
+        assert_eq!(d.f64s().unwrap(), vec![1.0, -2.5]);
+        assert_eq!(d.f32s().unwrap(), vec![0.5]);
+        assert_eq!(d.usizes().unwrap(), vec![3, 0, 9]);
+        assert_eq!(d.opt_f64().unwrap(), Some(2.0));
+        assert_eq!(d.opt_f64().unwrap(), None);
+        assert_eq!(d.opt_usize().unwrap(), Some(5));
+        assert_eq!(d.opt_usize().unwrap(), None);
+        d.finish().unwrap();
+    }
+
+    #[test]
+    fn floats_are_bit_exact() {
+        // NaN payloads and signed zeros survive (printf would not).
+        let vals = [f64::NAN, -0.0, f64::MIN_POSITIVE, 1.0 / 3.0];
+        let mut e = Enc::new();
+        for &v in &vals {
+            e.f64(v);
+        }
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        for &v in &vals {
+            assert_eq!(d.f64().unwrap().to_bits(), v.to_bits());
+        }
+    }
+
+    #[test]
+    fn mat_roundtrip() {
+        let m = Mat::from_vec(2, 3, vec![1.0, 2.0, 3.0, -4.0, 5.5, -0.0]);
+        let mut e = Enc::new();
+        e.mat(&m);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        let back = d.mat().unwrap();
+        d.finish().unwrap();
+        assert_eq!((back.rows, back.cols), (2, 3));
+        assert_eq!(back.max_abs_diff(&m), 0.0);
+    }
+
+    #[test]
+    fn truncated_and_oversized_inputs_error() {
+        let mut e = Enc::new();
+        e.u64(42);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes[..5]);
+        assert!(matches!(d.u64(), Err(CodecError::Eof { .. })));
+
+        // A length prefix larger than the payload must not allocate.
+        let mut e = Enc::new();
+        e.u32(u32::MAX); // claimed length
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert!(matches!(d.f64s(), Err(CodecError::BadLength { .. })));
+
+        let mut e = Enc::new();
+        e.u32(1_000_000); // rows
+        e.u32(1_000_000); // cols
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert!(matches!(d.mat(), Err(CodecError::BadLength { .. })));
+
+        // Trailing garbage is flagged.
+        let mut e = Enc::new();
+        e.u8(1);
+        e.u8(2);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        d.u8().unwrap();
+        assert_eq!(d.finish(), Err(CodecError::Trailing(1)));
+    }
+
+    #[test]
+    fn crc32_matches_reference_vectors() {
+        // Well-known IEEE CRC-32 test vectors.
+        assert_eq!(crc32(b""), 0x0000_0000);
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b"The quick brown fox jumps over the lazy dog"),
+            0x414F_A339);
+    }
+}

@@ -1,0 +1,582 @@
+//! The `sketchd` daemon: a multi-tenant sketch-monitoring service over
+//! TCP (std-only: `TcpListener` + scoped worker threads).
+//!
+//! One daemon owns one [`MonitorHub`] plus a [`SketchEngine`] per remote
+//! session; clients multiplex through the length-prefixed binary
+//! protocol in [`super::proto`].  Responsibilities:
+//!
+//! * **Admission**: `OpenSession` beyond `max_sessions` gets `Busy`.
+//! * **Backpressure**: each session accrues its ingest payload bytes; a
+//!   tenant that streams more than `session_quota_bytes` without an
+//!   intervening `Diagnose` (the "consume your diagnostics" contract)
+//!   gets `Busy` until it does.  `Diagnose` drains the counter.
+//! * **Durability**: state snapshots to [`SnapshotStore`] on an
+//!   interval, on client request (`Snapshot`) and at shutdown; a daemon
+//!   restarted on the same snapshot path resumes every session warm
+//!   (engine `max_state_diff == 0`, detector verdicts identical).
+//!
+//! Sessions outlive connections: a client may disconnect and a later
+//! connection (or a daemon restart) continues the same session id.
+
+use std::collections::BTreeMap;
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::config::{resolve_threads, ServeConfig};
+use crate::monitor::{step_metrics, HubError, MonitorHub, SessionId};
+use crate::sketch::{Mat, Parallelism, SketchConfig, SketchEngine, Sketcher};
+use crate::util::cli::Args;
+
+use super::proto::{
+    self, monitor_config, ErrorCode, FrameHeader, Request, Response,
+    FRAME_HEADER_LEN, PROTO_VERSION,
+};
+use super::store::{DaemonSnapshot, SessionRecord, SnapshotStore};
+
+/// Per-session sketch-side state (the monitor side lives in the hub).
+struct Tenant {
+    engine: SketchEngine,
+    /// Ingest payload bytes since the session's last `Diagnose`.
+    quota_used: u64,
+}
+
+struct State {
+    hub: MonitorHub,
+    tenants: BTreeMap<u64, Tenant>,
+}
+
+struct Shared {
+    cfg: ServeConfig,
+    /// Engine worker pool, resolved once at bind time.
+    par: Parallelism,
+    store: SnapshotStore,
+    state: Mutex<State>,
+    shutdown: AtomicBool,
+    /// State changed since the last snapshot.  Only mutated while the
+    /// state lock is held, so `save_snapshot`'s capture-and-clear cannot
+    /// lose a concurrent mutation's mark.
+    dirty: AtomicBool,
+}
+
+fn lock(state: &Mutex<State>) -> MutexGuard<'_, State> {
+    // A poisoned lock means a handler panicked; the state itself is a
+    // BTreeMap of value types and stays usable.
+    state.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Per-layer relative reconstruction errors for a just-ingested batch:
+/// `||A - A~||_F / ||A||_F` against the activation the layer's incoming
+/// sketch actually saw (layer 0 sketches its own output — the seed
+/// convention).  Shared by the daemon and the in-process mirrors in the
+/// probe/tests so both sides compute bit-for-bit identical values.
+pub fn recon_errors(engine: &SketchEngine, acts: &[Mat]) -> Result<Vec<f64>> {
+    (0..engine.n_layers())
+        .map(|l| {
+            let rec = engine.reconstruct(l)?;
+            let reference = &acts[l.max(1)];
+            let err = reference.sub(&rec).fro_norm();
+            let denom = reference.fro_norm();
+            Ok(if denom == 0.0 { err } else { err / denom })
+        })
+        .collect()
+}
+
+fn hub_error(e: HubError) -> Response {
+    let code = match e {
+        HubError::NoSuchSession(_) => ErrorCode::UnknownSession,
+        HubError::DuplicateSession(_) => ErrorCode::DuplicateSession,
+        HubError::SessionsExhausted => ErrorCode::SessionsExhausted,
+    };
+    Response::Error {
+        code,
+        message: e.to_string(),
+    }
+}
+
+fn invalid(message: String) -> Response {
+    Response::Error {
+        code: ErrorCode::Invalid,
+        message,
+    }
+}
+
+/// Build the durable snapshot under the state lock and write it out.
+/// The dirty flag is cleared at capture time *under the lock* (every
+/// mutation also happens under it, so no concurrent change's mark can
+/// be wiped) and re-set if the write fails, so un-persisted state is
+/// always retried at the next opportunity.
+fn save_snapshot(shared: &Shared) -> Result<(u64, u64)> {
+    let snap = {
+        let st = lock(&shared.state);
+        let mut sessions = Vec::with_capacity(st.hub.len());
+        for s in st.hub.sessions() {
+            let raw = s.id.raw();
+            let tenant = st
+                .tenants
+                .get(&raw)
+                .with_context(|| format!("session {raw} has no engine"))?;
+            sessions.push(SessionRecord {
+                session: s.state(),
+                engine: tenant.engine.snapshot(),
+                quota_used: tenant.quota_used,
+            });
+        }
+        shared.dirty.store(false, Ordering::SeqCst);
+        DaemonSnapshot { sessions }
+    };
+    let count = snap.sessions.len() as u64;
+    match shared.store.save(&snap) {
+        Ok(bytes) => Ok((bytes, count)),
+        Err(e) => {
+            shared.dirty.store(true, Ordering::SeqCst);
+            Err(e)
+        }
+    }
+}
+
+fn handle_request(
+    shared: &Shared,
+    req: Request,
+    payload_len: usize,
+) -> Response {
+    match req {
+        Request::Hello { client: _ } => {
+            let st = lock(&shared.state);
+            Response::HelloOk {
+                server: concat!("sketchd/", env!("CARGO_PKG_VERSION"))
+                    .to_string(),
+                proto: PROTO_VERSION,
+                sessions: st.hub.len() as u64,
+                max_sessions: shared.cfg.max_sessions as u64,
+            }
+        }
+        Request::OpenSession(spec) => {
+            let mut st = lock(&shared.state);
+            if st.hub.len() >= shared.cfg.max_sessions {
+                return Response::Busy {
+                    used: st.hub.len() as u64,
+                    limit: shared.cfg.max_sessions as u64,
+                };
+            }
+            let engine = match SketchConfig::builder()
+                .layer_dims(&spec.layer_dims)
+                .rank(spec.rank)
+                .beta(spec.beta)
+                .seed(spec.seed)
+                .parallelism(shared.par)
+                .build_engine()
+            {
+                Ok(e) => e,
+                Err(e) => return invalid(format!("bad session spec: {e}")),
+            };
+            if spec.window == 0 {
+                return invalid("window must be > 0".into());
+            }
+            let id = match st.hub.register(
+                &spec.name,
+                monitor_config(&spec),
+                spec.layer_dims.len(),
+            ) {
+                Ok(id) => id,
+                Err(e) => return hub_error(e),
+            };
+            st.tenants.insert(
+                id.raw(),
+                Tenant {
+                    engine,
+                    quota_used: 0,
+                },
+            );
+            shared.dirty.store(true, Ordering::SeqCst);
+            Response::SessionOpened { session: id.raw() }
+        }
+        Request::Ingest {
+            session,
+            loss,
+            want_recon,
+            acts,
+        } => {
+            let mut st = lock(&shared.state);
+            let State { hub, tenants } = &mut *st;
+            let id = SessionId::from_raw(session);
+            let tenant = match tenants.get_mut(&session) {
+                Some(t) => t,
+                None => return hub_error(HubError::NoSuchSession(id)),
+            };
+            let quota = shared.cfg.session_quota_bytes as u64;
+            if quota > 0 && tenant.quota_used + payload_len as u64 > quota {
+                return Response::Busy {
+                    used: tenant.quota_used,
+                    limit: quota,
+                };
+            }
+            if let Err(e) = tenant.engine.ingest(&acts) {
+                return invalid(format!("ingest rejected: {e}"));
+            }
+            tenant.quota_used += payload_len as u64;
+            let metrics = tenant.engine.metrics();
+            if let Err(e) = hub.observe(id, &step_metrics(loss, &metrics)) {
+                return hub_error(e);
+            }
+            let engine_bytes = tenant.engine.memory();
+            if let Err(e) = hub.report_sketch_bytes(id, engine_bytes) {
+                return hub_error(e);
+            }
+            let recon_err = if want_recon {
+                match recon_errors(&tenant.engine, &acts) {
+                    Ok(v) => v,
+                    Err(e) => {
+                        return invalid(format!("reconstruction failed: {e}"))
+                    }
+                }
+            } else {
+                Vec::new()
+            };
+            shared.dirty.store(true, Ordering::SeqCst);
+            Response::IngestOk {
+                batches: tenant.engine.batches_ingested(),
+                engine_bytes: engine_bytes as u64,
+                recon_err,
+            }
+        }
+        Request::Observe { session, metrics } => {
+            let mut st = lock(&shared.state);
+            let id = SessionId::from_raw(session);
+            if let Err(e) = st.hub.observe(id, &metrics) {
+                return hub_error(e);
+            }
+            shared.dirty.store(true, Ordering::SeqCst);
+            let steps_seen =
+                st.hub.session(id).map(|s| s.steps_seen()).unwrap_or(0);
+            Response::ObserveOk { steps_seen }
+        }
+        Request::Diagnose { session } => {
+            let mut st = lock(&shared.state);
+            let id = SessionId::from_raw(session);
+            let (diagnosis, steps_seen, monitor_bytes) =
+                match st.hub.session(id) {
+                    Ok(s) => (s.diagnose(), s.steps_seen(), s.monitor_bytes()),
+                    Err(e) => return hub_error(e),
+                };
+            let engine_bytes = match st.tenants.get_mut(&session) {
+                Some(t) => {
+                    // Diagnose is the tenant's check-in: drain the
+                    // backpressure counter.
+                    t.quota_used = 0;
+                    t.engine.memory()
+                }
+                None => 0,
+            };
+            let healthy = diagnosis.healthy();
+            Response::Diagnosis {
+                diagnosis,
+                healthy,
+                steps_seen,
+                engine_bytes: engine_bytes as u64,
+                monitor_bytes: monitor_bytes as u64,
+            }
+        }
+        Request::Snapshot => match save_snapshot(shared) {
+            Ok((bytes, sessions)) => Response::SnapshotOk {
+                path: shared.cfg.snapshot_path.clone(),
+                bytes,
+                sessions,
+            },
+            Err(e) => Response::Error {
+                code: ErrorCode::Internal,
+                message: format!("snapshot failed: {e:#}"),
+            },
+        },
+        Request::Close { session } => {
+            let mut st = lock(&shared.state);
+            let id = SessionId::from_raw(session);
+            if let Err(e) = st.hub.deregister(id) {
+                return hub_error(e);
+            }
+            st.tenants.remove(&session);
+            shared.dirty.store(true, Ordering::SeqCst);
+            Response::Closed { session }
+        }
+        Request::Shutdown => {
+            let sessions = match save_snapshot(shared) {
+                Ok((_, n)) => n,
+                Err(e) => {
+                    return Response::Error {
+                        code: ErrorCode::Internal,
+                        message: format!("shutdown snapshot failed: {e:#}"),
+                    }
+                }
+            };
+            shared.shutdown.store(true, Ordering::SeqCst);
+            Response::ShutdownOk { sessions }
+        }
+    }
+}
+
+/// Read one frame tolerating idle read timeouts: a timeout before any
+/// header byte just polls the shutdown flag; a timeout mid-frame keeps
+/// reading (the client is mid-send).  `Ok(None)` = clean EOF/shutdown.
+fn read_frame_idle(
+    stream: &mut TcpStream,
+    shutdown: &AtomicBool,
+) -> Result<Option<(FrameHeader, Vec<u8>)>> {
+    let mut hdr = [0u8; FRAME_HEADER_LEN];
+    let mut got = 0usize;
+    while got < hdr.len() {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match stream.read(&mut hdr[got..]) {
+            Ok(0) => {
+                if got == 0 {
+                    return Ok(None);
+                }
+                anyhow::bail!("connection closed mid-header");
+            }
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let header = FrameHeader::parse(&hdr)?;
+    let mut payload = vec![0u8; header.len as usize];
+    let mut got = 0usize;
+    while got < payload.len() {
+        if shutdown.load(Ordering::SeqCst) {
+            return Ok(None);
+        }
+        match stream.read(&mut payload[got..]) {
+            Ok(0) => anyhow::bail!("connection closed mid-payload"),
+            Ok(n) => got += n,
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::WouldBlock
+                        | std::io::ErrorKind::TimedOut
+                        | std::io::ErrorKind::Interrupted
+                ) => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Ok(Some((header, payload)))
+}
+
+fn handle_conn(mut stream: TcpStream, shared: &Shared) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    loop {
+        let (header, payload) =
+            match read_frame_idle(&mut stream, &shared.shutdown) {
+                Ok(Some(f)) => f,
+                Ok(None) | Err(_) => return,
+            };
+        let resp = if header.version != PROTO_VERSION {
+            Response::Error {
+                code: ErrorCode::UnsupportedVersion,
+                message: format!(
+                    "server speaks proto v{PROTO_VERSION}, frame is v{}",
+                    header.version
+                ),
+            }
+        } else {
+            match Request::decode(header.msg, &payload) {
+                Ok(req) => handle_request(shared, req, payload.len()),
+                Err(e) => Response::Error {
+                    code: ErrorCode::BadFrame,
+                    message: e.to_string(),
+                },
+            }
+        };
+        let fatal = matches!(
+            resp,
+            Response::Error {
+                code: ErrorCode::UnsupportedVersion | ErrorCode::BadFrame,
+                ..
+            }
+        );
+        if proto::write_frame(&mut stream, resp.msg_type(), &resp.encode())
+            .is_err()
+            || fatal
+        {
+            return;
+        }
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+    }
+}
+
+/// A bound (but not yet running) daemon.  Binding and running are split
+/// so in-process embedders (tests, benches) can learn the ephemeral port
+/// before serving starts.
+pub struct Daemon {
+    listener: TcpListener,
+    shared: Arc<Shared>,
+}
+
+impl Daemon {
+    /// Bind the listen socket and, if a snapshot exists at
+    /// `cfg.snapshot_path`, restore every session from it.
+    pub fn bind(cfg: ServeConfig) -> Result<Daemon> {
+        cfg.validate()?;
+        let listener = TcpListener::bind(&cfg.addr)
+            .with_context(|| format!("binding {}", cfg.addr))?;
+        listener.set_nonblocking(true)?;
+        let store = SnapshotStore::new(cfg.snapshot_path.clone());
+        let mut state = State {
+            hub: MonitorHub::new(),
+            tenants: BTreeMap::new(),
+        };
+        let par = Parallelism::from_threads(resolve_threads(cfg.threads));
+        if let Some(snap) = store
+            .load()
+            .with_context(|| format!("loading snapshot {}", cfg.snapshot_path))?
+        {
+            for rec in &snap.sessions {
+                state.hub.restore_session(&rec.session)?;
+                state.tenants.insert(
+                    rec.session.id,
+                    Tenant {
+                        engine: SketchEngine::from_snapshot(&rec.engine, par)?,
+                        quota_used: rec.quota_used,
+                    },
+                );
+            }
+        }
+        Ok(Daemon {
+            listener,
+            shared: Arc::new(Shared {
+                cfg,
+                par,
+                store,
+                state: Mutex::new(state),
+                shutdown: AtomicBool::new(false),
+                dirty: AtomicBool::new(false),
+            }),
+        })
+    }
+
+    pub fn local_addr(&self) -> Result<SocketAddr> {
+        Ok(self.listener.local_addr()?)
+    }
+
+    /// Sessions currently held (restored + live).
+    pub fn session_count(&self) -> usize {
+        lock(&self.shared.state).hub.len()
+    }
+
+    /// Serve until the shutdown flag is set (by a `Shutdown` frame or a
+    /// [`DaemonHandle`]), then write a final snapshot if state changed.
+    pub fn run(self) -> Result<()> {
+        let shared: &Shared = &self.shared;
+        let mut last_snapshot = Instant::now();
+        thread::scope(|s| {
+            loop {
+                if shared.shutdown.load(Ordering::SeqCst) {
+                    break;
+                }
+                let interval = shared.cfg.snapshot_interval_secs;
+                if interval > 0
+                    && last_snapshot.elapsed().as_secs() >= interval
+                {
+                    if shared.dirty.load(Ordering::SeqCst) {
+                        if let Err(e) = save_snapshot(shared) {
+                            eprintln!("sketchd: periodic snapshot failed: {e:#}");
+                        }
+                    }
+                    last_snapshot = Instant::now();
+                }
+                match self.listener.accept() {
+                    Ok((stream, _peer)) => {
+                        s.spawn(move || handle_conn(stream, shared));
+                    }
+                    Err(e)
+                        if e.kind() == std::io::ErrorKind::WouldBlock =>
+                    {
+                        thread::sleep(Duration::from_millis(10));
+                    }
+                    Err(e) => {
+                        eprintln!("sketchd: accept failed: {e}");
+                        thread::sleep(Duration::from_millis(50));
+                    }
+                }
+            }
+        });
+        if shared.dirty.load(Ordering::SeqCst) {
+            save_snapshot(shared)?;
+        }
+        Ok(())
+    }
+
+    /// Run on a background thread; the returned handle stops the daemon
+    /// (with a final snapshot) on [`DaemonHandle::stop`].  Used by the
+    /// loopback tests and benches.
+    pub fn spawn(self) -> Result<DaemonHandle> {
+        let addr = self.local_addr()?;
+        let shared = Arc::clone(&self.shared);
+        let join = thread::spawn(move || self.run());
+        Ok(DaemonHandle { addr, shared, join })
+    }
+}
+
+/// Handle to an in-process daemon spawned with [`Daemon::spawn`].
+pub struct DaemonHandle {
+    addr: SocketAddr,
+    shared: Arc<Shared>,
+    join: thread::JoinHandle<Result<()>>,
+}
+
+impl DaemonHandle {
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Request shutdown and wait for the final snapshot to land.
+    pub fn stop(self) -> Result<()> {
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        match self.join.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("daemon thread panicked"),
+        }
+    }
+}
+
+/// `sketchd`/`sketchgrad serve` entry point: `[serve]` TOML config with
+/// CLI overrides, then serve until shutdown.
+pub fn serve_from_args(args: &mut Args) -> Result<()> {
+    let mut cfg = if let Some(path) = args.opt("config") {
+        ServeConfig::from_toml_file(std::path::Path::new(&path))?
+    } else {
+        ServeConfig::default()
+    };
+    cfg.addr = args.opt_or("addr", &cfg.addr);
+    cfg.max_sessions = args.opt_usize("max-sessions", cfg.max_sessions)?;
+    cfg.snapshot_interval_secs =
+        args.opt_u64("snapshot-interval", cfg.snapshot_interval_secs)?;
+    cfg.session_quota_bytes =
+        args.opt_usize("quota", cfg.session_quota_bytes)?;
+    cfg.snapshot_path = args.opt_or("snapshot-path", &cfg.snapshot_path);
+    cfg.threads = resolve_threads(args.opt_usize("threads", cfg.threads)?);
+    args.finish()?;
+
+    let daemon = Daemon::bind(cfg)?;
+    println!(
+        "sketchd listening on {} ({} resumed sessions, snapshots -> {})",
+        daemon.local_addr()?,
+        daemon.session_count(),
+        daemon.shared.cfg.snapshot_path,
+    );
+    daemon.run()
+}

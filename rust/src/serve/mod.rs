@@ -1,0 +1,38 @@
+//! The serve subsystem: `sketchd`, a network-facing, restartable
+//! multi-tenant sketch-monitoring daemon (DESIGN.md §5).
+//!
+//! Remote training runs stream activations (or pre-computed metrics)
+//! over a length-prefixed binary wire protocol into one shared
+//! [`MonitorHub`](crate::monitor::MonitorHub) + per-session
+//! [`SketchEngine`](crate::sketch::SketchEngine) pool; the same codec
+//! doubles as a durable on-disk snapshot format so the daemon resumes
+//! every session warm after a restart.  Layers:
+//!
+//! * [`codec`] — explicit little-endian primitives (bit-exact floats,
+//!   bounds-checked lengths) + CRC-32.
+//! * [`proto`] — versioned frame header and the
+//!   `Hello`/`OpenSession`/`Ingest`/`Observe`/`Diagnose`/`Snapshot`/
+//!   `Close`/`Shutdown` messages.
+//! * [`store`] — atomic write-rename snapshot files (versioned header,
+//!   CRC-checked payload).
+//! * [`daemon`] — the TCP server: admission caps, per-session byte
+//!   quotas with `Busy` backpressure, interval/shutdown snapshots.
+//! * [`client`] — the blocking [`SketchClient`] plus the deterministic
+//!   probe behind `sketchgrad connect --probe[-resume]`.
+
+pub mod client;
+pub mod codec;
+pub mod daemon;
+pub mod proto;
+pub mod store;
+
+pub use client::{
+    run_probe, run_probe_resume, DiagnoseReply, IngestReply, ServeError,
+    ServerInfo, SketchClient,
+};
+pub use daemon::{recon_errors, serve_from_args, Daemon, DaemonHandle};
+pub use proto::{
+    monitor_config, ErrorCode, Request, Response, SessionSpec,
+    PROTO_VERSION,
+};
+pub use store::{DaemonSnapshot, SessionRecord, SnapshotStore};

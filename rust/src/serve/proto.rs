@@ -1,0 +1,805 @@
+//! The sketchd wire protocol: versioned length-prefixed binary frames.
+//!
+//! Frame layout (all little-endian; see DESIGN.md §5 for the diagram):
+//!
+//! ```text
+//! +----------+----------+-----+----------+----------+=============+
+//! | magic u32| ver  u16 | msg | reserved | len  u32 | payload ... |
+//! | "SKD1"   |          | u8  | u8 (=0)  |          | (len bytes) |
+//! +----------+----------+-----+----------+----------+=============+
+//! ```
+//!
+//! Requests (`Hello`/`OpenSession`/`Ingest`/`Observe`/`Diagnose`/
+//! `Snapshot`/`Close`/`Shutdown`) and responses are encoded with the
+//! explicit little-endian codecs in [`super::codec`]; floats travel as
+//! IEEE-754 bit patterns so a remote session is *bit-for-bit* equivalent
+//! to an in-process one.  The server rejects frames whose header version
+//! differs from [`PROTO_VERSION`] with [`ErrorCode::UnsupportedVersion`].
+
+use std::io::{Read, Write};
+
+use crate::coordinator::StepMetrics;
+use crate::monitor::{Diagnosis, MonitorConfig};
+use crate::sketch::Mat;
+
+use super::codec::{CodecError, Dec, Enc};
+
+/// `b"SKD1"` interpreted little-endian.
+pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"SKD1");
+pub const PROTO_VERSION: u16 = 1;
+pub const FRAME_HEADER_LEN: usize = 12;
+/// Upper bound on a frame payload (a 128-batch, 8x512-layer ingest is
+/// ~5 MB; 64 MiB leaves ample headroom while bounding a hostile header).
+pub const MAX_FRAME_LEN: u32 = 64 << 20;
+
+/// Message-type bytes (requests < 128, responses >= 128).
+pub mod msg {
+    pub const HELLO: u8 = 1;
+    pub const OPEN_SESSION: u8 = 2;
+    pub const INGEST: u8 = 3;
+    pub const OBSERVE: u8 = 4;
+    pub const DIAGNOSE: u8 = 5;
+    pub const SNAPSHOT: u8 = 6;
+    pub const CLOSE: u8 = 7;
+    pub const SHUTDOWN: u8 = 8;
+
+    pub const HELLO_OK: u8 = 128;
+    pub const SESSION_OPENED: u8 = 129;
+    pub const INGEST_OK: u8 = 130;
+    pub const OBSERVE_OK: u8 = 131;
+    pub const DIAGNOSIS: u8 = 132;
+    pub const SNAPSHOT_OK: u8 = 133;
+    pub const CLOSED: u8 = 134;
+    pub const BUSY: u8 = 135;
+    pub const ERROR: u8 = 136;
+    pub const SHUTDOWN_OK: u8 = 137;
+}
+
+/// Protocol error codes carried by [`Response::Error`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrorCode {
+    BadFrame = 1,
+    UnsupportedVersion = 2,
+    UnknownSession = 3,
+    DuplicateSession = 4,
+    SessionsExhausted = 5,
+    Invalid = 6,
+    Internal = 7,
+}
+
+impl ErrorCode {
+    pub fn as_u16(self) -> u16 {
+        self as u16
+    }
+
+    pub fn from_u16(v: u16) -> Result<ErrorCode, CodecError> {
+        Ok(match v {
+            1 => ErrorCode::BadFrame,
+            2 => ErrorCode::UnsupportedVersion,
+            3 => ErrorCode::UnknownSession,
+            4 => ErrorCode::DuplicateSession,
+            5 => ErrorCode::SessionsExhausted,
+            6 => ErrorCode::Invalid,
+            7 => ErrorCode::Internal,
+            _ => {
+                return Err(CodecError::BadTag {
+                    what: "error code",
+                    tag: v as u8,
+                })
+            }
+        })
+    }
+}
+
+impl std::fmt::Display for ErrorCode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let s = match self {
+            ErrorCode::BadFrame => "bad-frame",
+            ErrorCode::UnsupportedVersion => "unsupported-version",
+            ErrorCode::UnknownSession => "unknown-session",
+            ErrorCode::DuplicateSession => "duplicate-session",
+            ErrorCode::SessionsExhausted => "sessions-exhausted",
+            ErrorCode::Invalid => "invalid",
+            ErrorCode::Internal => "internal",
+        };
+        write!(f, "{s}")
+    }
+}
+
+/// Parsed frame header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct FrameHeader {
+    pub version: u16,
+    pub msg: u8,
+    pub len: u32,
+}
+
+impl FrameHeader {
+    pub fn encode(version: u16, msg: u8, len: u32) -> [u8; FRAME_HEADER_LEN] {
+        let mut h = [0u8; FRAME_HEADER_LEN];
+        h[0..4].copy_from_slice(&FRAME_MAGIC.to_le_bytes());
+        h[4..6].copy_from_slice(&version.to_le_bytes());
+        h[6] = msg;
+        h[7] = 0;
+        h[8..12].copy_from_slice(&len.to_le_bytes());
+        h
+    }
+
+    /// Parse and sanity-check a header (magic + length cap).  The
+    /// version is NOT checked here — the server replies with a typed
+    /// `UnsupportedVersion` error instead of dropping the connection.
+    pub fn parse(h: &[u8; FRAME_HEADER_LEN]) -> Result<FrameHeader, CodecError> {
+        let magic = u32::from_le_bytes(h[0..4].try_into().unwrap());
+        if magic != FRAME_MAGIC {
+            return Err(CodecError::BadTag {
+                what: "frame magic",
+                tag: h[0],
+            });
+        }
+        let len = u32::from_le_bytes(h[8..12].try_into().unwrap());
+        if len > MAX_FRAME_LEN {
+            return Err(CodecError::BadLength {
+                len: len as usize,
+                have: MAX_FRAME_LEN as usize,
+            });
+        }
+        Ok(FrameHeader {
+            version: u16::from_le_bytes(h[4..6].try_into().unwrap()),
+            msg: h[6],
+            len,
+        })
+    }
+}
+
+/// Write one frame (header + payload) as a single buffer.
+pub fn write_frame(
+    w: &mut impl Write,
+    msg: u8,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    write_frame_versioned(w, PROTO_VERSION, msg, payload)
+}
+
+/// [`write_frame`] with an explicit version — used by the
+/// version-negotiation tests to craft mismatched frames.
+///
+/// Rejects payloads over [`MAX_FRAME_LEN`] *before* sending: the peer
+/// would drop the connection at the header (it cannot trust the
+/// framing), which surfaces as an opaque reset mid-write — and a
+/// payload over `u32::MAX` would silently wrap the length field.
+pub fn write_frame_versioned(
+    w: &mut impl Write,
+    version: u16,
+    msg: u8,
+    payload: &[u8],
+) -> std::io::Result<()> {
+    if payload.len() > MAX_FRAME_LEN as usize {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!(
+                "frame payload is {} bytes, protocol cap is {} — split the \
+                 batch (e.g. smaller n_b per Ingest)",
+                payload.len(),
+                MAX_FRAME_LEN
+            ),
+        ));
+    }
+    let mut buf =
+        Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    buf.extend_from_slice(&FrameHeader::encode(
+        version,
+        msg,
+        payload.len() as u32,
+    ));
+    buf.extend_from_slice(payload);
+    w.write_all(&buf)
+}
+
+/// Blocking frame read (client side; the server uses its own
+/// idle-tolerant reader).
+pub fn read_frame(
+    r: &mut impl Read,
+) -> std::io::Result<(FrameHeader, Vec<u8>)> {
+    let mut h = [0u8; FRAME_HEADER_LEN];
+    r.read_exact(&mut h)?;
+    let header = FrameHeader::parse(&h).map_err(|e| {
+        std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
+    })?;
+    let mut payload = vec![0u8; header.len as usize];
+    r.read_exact(&mut payload)?;
+    Ok((header, payload))
+}
+
+/// Parameters a client supplies to open a monitored session.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SessionSpec {
+    pub name: String,
+    pub layer_dims: Vec<usize>,
+    pub rank: usize,
+    pub beta: f64,
+    pub seed: u64,
+    /// Monitor diagnostic window (steps).
+    pub window: usize,
+    /// Stable-rank collapse threshold (fraction of k).
+    pub collapse_frac: f64,
+}
+
+/// The daemon-side `MonitorConfig` for a spec — exposed so in-process
+/// mirrors (tests, the probe) configure their hub identically.
+pub fn monitor_config(spec: &SessionSpec) -> MonitorConfig {
+    MonitorConfig {
+        window: spec.window,
+        collapse_frac: spec.collapse_frac,
+        ..MonitorConfig::for_rank(spec.rank)
+    }
+}
+
+/// Client -> daemon messages.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Handshake: announce the client; the reply carries capacity info.
+    Hello { client: String },
+    OpenSession(SessionSpec),
+    /// One monitored training step: the daemon ingests the activations
+    /// into the session's engine, derives sketch metrics and observes
+    /// them (with `loss`) in the hub.  `want_recon` asks for per-layer
+    /// relative reconstruction errors in the reply (costs a
+    /// reconstruction per layer server-side).
+    Ingest {
+        session: u64,
+        loss: f32,
+        want_recon: bool,
+        acts: Vec<Mat>,
+    },
+    /// Push externally computed step metrics (remote-metrics mode — no
+    /// activation shipping, no daemon-side engine update).
+    Observe {
+        session: u64,
+        metrics: StepMetrics,
+    },
+    Diagnose { session: u64 },
+    /// Force a durable snapshot now.
+    Snapshot,
+    Close { session: u64 },
+    /// Snapshot and stop the daemon (clean remote shutdown — pure-std
+    /// builds have no signal handling).
+    Shutdown,
+}
+
+impl Request {
+    pub fn msg_type(&self) -> u8 {
+        match self {
+            Request::Hello { .. } => msg::HELLO,
+            Request::OpenSession(_) => msg::OPEN_SESSION,
+            Request::Ingest { .. } => msg::INGEST,
+            Request::Observe { .. } => msg::OBSERVE,
+            Request::Diagnose { .. } => msg::DIAGNOSE,
+            Request::Snapshot => msg::SNAPSHOT,
+            Request::Close { .. } => msg::CLOSE,
+            Request::Shutdown => msg::SHUTDOWN,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Request::Hello { client } => e.str(client),
+            Request::OpenSession(spec) => {
+                e.str(&spec.name);
+                e.usizes(&spec.layer_dims);
+                e.len32(spec.rank);
+                e.f64(spec.beta);
+                e.u64(spec.seed);
+                e.len32(spec.window);
+                e.f64(spec.collapse_frac);
+            }
+            Request::Ingest {
+                session,
+                loss,
+                want_recon,
+                acts,
+            } => {
+                e.u64(*session);
+                e.f32(*loss);
+                e.bool(*want_recon);
+                e.len32(acts.len());
+                for a in acts {
+                    e.mat(a);
+                }
+            }
+            Request::Observe { session, metrics } => {
+                e.u64(*session);
+                enc_step_metrics(&mut e, metrics);
+            }
+            Request::Diagnose { session } | Request::Close { session } => {
+                e.u64(*session)
+            }
+            Request::Snapshot | Request::Shutdown => {}
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(msg_type: u8, payload: &[u8]) -> Result<Request, CodecError> {
+        let mut d = Dec::new(payload);
+        let req = match msg_type {
+            msg::HELLO => Request::Hello { client: d.str()? },
+            msg::OPEN_SESSION => Request::OpenSession(SessionSpec {
+                name: d.str()?,
+                layer_dims: d.usizes()?,
+                rank: d.u32()? as usize,
+                beta: d.f64()?,
+                seed: d.u64()?,
+                window: d.u32()? as usize,
+                collapse_frac: d.f64()?,
+            }),
+            msg::INGEST => {
+                let session = d.u64()?;
+                let loss = d.f32()?;
+                let want_recon = d.bool()?;
+                let n = d.len32(8)?; // a Mat is at least rows+cols
+                let mut acts = Vec::with_capacity(n);
+                for _ in 0..n {
+                    acts.push(d.mat()?);
+                }
+                Request::Ingest {
+                    session,
+                    loss,
+                    want_recon,
+                    acts,
+                }
+            }
+            msg::OBSERVE => Request::Observe {
+                session: d.u64()?,
+                metrics: dec_step_metrics(&mut d)?,
+            },
+            msg::DIAGNOSE => Request::Diagnose { session: d.u64()? },
+            msg::SNAPSHOT => Request::Snapshot,
+            msg::CLOSE => Request::Close { session: d.u64()? },
+            msg::SHUTDOWN => Request::Shutdown,
+            other => {
+                return Err(CodecError::BadTag {
+                    what: "request type",
+                    tag: other,
+                })
+            }
+        };
+        d.finish()?;
+        Ok(req)
+    }
+}
+
+/// Daemon -> client messages.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    HelloOk {
+        server: String,
+        proto: u16,
+        sessions: u64,
+        max_sessions: u64,
+    },
+    SessionOpened { session: u64 },
+    IngestOk {
+        batches: u64,
+        engine_bytes: u64,
+        /// Per-layer relative reconstruction errors (empty unless
+        /// `want_recon`).
+        recon_err: Vec<f64>,
+    },
+    ObserveOk { steps_seen: u64 },
+    Diagnosis {
+        diagnosis: Diagnosis,
+        healthy: bool,
+        steps_seen: u64,
+        engine_bytes: u64,
+        monitor_bytes: u64,
+    },
+    SnapshotOk {
+        path: String,
+        bytes: u64,
+        sessions: u64,
+    },
+    Closed { session: u64 },
+    /// Backpressure: admission or quota limit hit — retry after a
+    /// `Diagnose` (which drains the session's quota counter).
+    Busy { used: u64, limit: u64 },
+    Error { code: ErrorCode, message: String },
+    ShutdownOk { sessions: u64 },
+}
+
+impl Response {
+    pub fn msg_type(&self) -> u8 {
+        match self {
+            Response::HelloOk { .. } => msg::HELLO_OK,
+            Response::SessionOpened { .. } => msg::SESSION_OPENED,
+            Response::IngestOk { .. } => msg::INGEST_OK,
+            Response::ObserveOk { .. } => msg::OBSERVE_OK,
+            Response::Diagnosis { .. } => msg::DIAGNOSIS,
+            Response::SnapshotOk { .. } => msg::SNAPSHOT_OK,
+            Response::Closed { .. } => msg::CLOSED,
+            Response::Busy { .. } => msg::BUSY,
+            Response::Error { .. } => msg::ERROR,
+            Response::ShutdownOk { .. } => msg::SHUTDOWN_OK,
+        }
+    }
+
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        match self {
+            Response::HelloOk {
+                server,
+                proto,
+                sessions,
+                max_sessions,
+            } => {
+                e.str(server);
+                e.u16(*proto);
+                e.u64(*sessions);
+                e.u64(*max_sessions);
+            }
+            Response::SessionOpened { session } => e.u64(*session),
+            Response::IngestOk {
+                batches,
+                engine_bytes,
+                recon_err,
+            } => {
+                e.u64(*batches);
+                e.u64(*engine_bytes);
+                e.f64s(recon_err);
+            }
+            Response::ObserveOk { steps_seen } => e.u64(*steps_seen),
+            Response::Diagnosis {
+                diagnosis,
+                healthy,
+                steps_seen,
+                engine_bytes,
+                monitor_bytes,
+            } => {
+                enc_diagnosis(&mut e, diagnosis);
+                e.bool(*healthy);
+                e.u64(*steps_seen);
+                e.u64(*engine_bytes);
+                e.u64(*monitor_bytes);
+            }
+            Response::SnapshotOk {
+                path,
+                bytes,
+                sessions,
+            } => {
+                e.str(path);
+                e.u64(*bytes);
+                e.u64(*sessions);
+            }
+            Response::Closed { session } => e.u64(*session),
+            Response::Busy { used, limit } => {
+                e.u64(*used);
+                e.u64(*limit);
+            }
+            Response::Error { code, message } => {
+                e.u16(code.as_u16());
+                e.str(message);
+            }
+            Response::ShutdownOk { sessions } => e.u64(*sessions),
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(
+        msg_type: u8,
+        payload: &[u8],
+    ) -> Result<Response, CodecError> {
+        let mut d = Dec::new(payload);
+        let resp = match msg_type {
+            msg::HELLO_OK => Response::HelloOk {
+                server: d.str()?,
+                proto: d.u16()?,
+                sessions: d.u64()?,
+                max_sessions: d.u64()?,
+            },
+            msg::SESSION_OPENED => Response::SessionOpened {
+                session: d.u64()?,
+            },
+            msg::INGEST_OK => Response::IngestOk {
+                batches: d.u64()?,
+                engine_bytes: d.u64()?,
+                recon_err: d.f64s()?,
+            },
+            msg::OBSERVE_OK => Response::ObserveOk {
+                steps_seen: d.u64()?,
+            },
+            msg::DIAGNOSIS => Response::Diagnosis {
+                diagnosis: dec_diagnosis(&mut d)?,
+                healthy: d.bool()?,
+                steps_seen: d.u64()?,
+                engine_bytes: d.u64()?,
+                monitor_bytes: d.u64()?,
+            },
+            msg::SNAPSHOT_OK => Response::SnapshotOk {
+                path: d.str()?,
+                bytes: d.u64()?,
+                sessions: d.u64()?,
+            },
+            msg::CLOSED => Response::Closed { session: d.u64()? },
+            msg::BUSY => Response::Busy {
+                used: d.u64()?,
+                limit: d.u64()?,
+            },
+            msg::ERROR => Response::Error {
+                code: ErrorCode::from_u16(d.u16()?)?,
+                message: d.str()?,
+            },
+            msg::SHUTDOWN_OK => Response::ShutdownOk {
+                sessions: d.u64()?,
+            },
+            other => {
+                return Err(CodecError::BadTag {
+                    what: "response type",
+                    tag: other,
+                })
+            }
+        };
+        d.finish()?;
+        Ok(resp)
+    }
+}
+
+pub fn enc_step_metrics(e: &mut Enc, m: &StepMetrics) {
+    e.f32(m.loss);
+    e.f32(m.accuracy);
+    e.f32s(&m.z_norm);
+    e.f32s(&m.stable_rank);
+    e.f32s(&m.y_norm);
+    e.f32s(&m.x_norm);
+    e.f32s(&m.grad_norm);
+    e.f32(m.pde_mse);
+    e.f32(m.bc_mse);
+}
+
+pub fn dec_step_metrics(d: &mut Dec) -> Result<StepMetrics, CodecError> {
+    Ok(StepMetrics {
+        loss: d.f32()?,
+        accuracy: d.f32()?,
+        z_norm: d.f32s()?,
+        stable_rank: d.f32s()?,
+        y_norm: d.f32s()?,
+        x_norm: d.f32s()?,
+        grad_norm: d.f32s()?,
+        pde_mse: d.f32()?,
+        bc_mse: d.f32()?,
+    })
+}
+
+pub fn enc_diagnosis(e: &mut Enc, d: &Diagnosis) {
+    e.bool(d.vanishing_gradients);
+    e.bool(d.exploding_gradients);
+    e.bool(d.stagnation);
+    e.bool(d.diversity_collapse);
+    e.f64(d.mean_stable_rank_frac);
+    e.len32(d.notes.len());
+    for n in &d.notes {
+        e.str(n);
+    }
+}
+
+pub fn dec_diagnosis(d: &mut Dec) -> Result<Diagnosis, CodecError> {
+    let vanishing_gradients = d.bool()?;
+    let exploding_gradients = d.bool()?;
+    let stagnation = d.bool()?;
+    let diversity_collapse = d.bool()?;
+    let mean_stable_rank_frac = d.f64()?;
+    let n = d.len32(4)?;
+    let mut notes = Vec::with_capacity(n);
+    for _ in 0..n {
+        notes.push(d.str()?);
+    }
+    Ok(Diagnosis {
+        vanishing_gradients,
+        exploding_gradients,
+        stagnation,
+        diversity_collapse,
+        mean_stable_rank_frac,
+        notes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spec() -> SessionSpec {
+        SessionSpec {
+            name: "run0".into(),
+            layer_dims: vec![128, 64, 32],
+            rank: 4,
+            beta: 0.9,
+            seed: 42,
+            window: 25,
+            collapse_frac: 0.25,
+        }
+    }
+
+    fn roundtrip_req(req: &Request) -> Request {
+        Request::decode(req.msg_type(), &req.encode()).unwrap()
+    }
+
+    fn roundtrip_resp(resp: &Response) -> Response {
+        Response::decode(resp.msg_type(), &resp.encode()).unwrap()
+    }
+
+    #[test]
+    fn request_roundtrips() {
+        match roundtrip_req(&Request::Hello {
+            client: "cli".into(),
+        }) {
+            Request::Hello { client } => assert_eq!(client, "cli"),
+            other => panic!("{other:?}"),
+        }
+        match roundtrip_req(&Request::OpenSession(spec())) {
+            Request::OpenSession(s) => assert_eq!(s, spec()),
+            other => panic!("{other:?}"),
+        }
+        let mut rng = Rng::new(1);
+        let acts = vec![Mat::gaussian(4, 8, &mut rng), Mat::gaussian(4, 6, &mut rng)];
+        match roundtrip_req(&Request::Ingest {
+            session: 3,
+            loss: 0.25,
+            want_recon: true,
+            acts: acts.clone(),
+        }) {
+            Request::Ingest {
+                session,
+                loss,
+                want_recon,
+                acts: back,
+            } => {
+                assert_eq!((session, loss, want_recon), (3, 0.25, true));
+                assert_eq!(back.len(), 2);
+                assert_eq!(back[0].max_abs_diff(&acts[0]), 0.0);
+                assert_eq!(back[1].max_abs_diff(&acts[1]), 0.0);
+            }
+            other => panic!("{other:?}"),
+        }
+        let m = StepMetrics {
+            loss: 1.5,
+            z_norm: vec![2.0, 3.0],
+            stable_rank: vec![4.0],
+            ..Default::default()
+        };
+        match roundtrip_req(&Request::Observe {
+            session: 9,
+            metrics: m.clone(),
+        }) {
+            Request::Observe { session, metrics } => {
+                assert_eq!(session, 9);
+                assert_eq!(metrics.loss, m.loss);
+                assert_eq!(metrics.z_norm, m.z_norm);
+                assert_eq!(metrics.stable_rank, m.stable_rank);
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(matches!(
+            roundtrip_req(&Request::Diagnose { session: 7 }),
+            Request::Diagnose { session: 7 }
+        ));
+        assert!(matches!(
+            roundtrip_req(&Request::Snapshot),
+            Request::Snapshot
+        ));
+        assert!(matches!(
+            roundtrip_req(&Request::Close { session: 2 }),
+            Request::Close { session: 2 }
+        ));
+        assert!(matches!(
+            roundtrip_req(&Request::Shutdown),
+            Request::Shutdown
+        ));
+    }
+
+    #[test]
+    fn response_roundtrips() {
+        let rs = [
+            Response::HelloOk {
+                server: "sketchd/0.2".into(),
+                proto: PROTO_VERSION,
+                sessions: 2,
+                max_sessions: 16,
+            },
+            Response::SessionOpened { session: 5 },
+            Response::IngestOk {
+                batches: 10,
+                engine_bytes: 4096,
+                recon_err: vec![0.5, 0.25],
+            },
+            Response::ObserveOk { steps_seen: 3 },
+            Response::Diagnosis {
+                diagnosis: Diagnosis {
+                    stagnation: true,
+                    diversity_collapse: true,
+                    mean_stable_rank_frac: 0.322,
+                    notes: vec!["stable rank 2.9 of k=9".into()],
+                    ..Default::default()
+                },
+                healthy: false,
+                steps_seen: 120,
+                engine_bytes: 1000,
+                monitor_bytes: 2000,
+            },
+            Response::SnapshotOk {
+                path: "/tmp/s.bin".into(),
+                bytes: 999,
+                sessions: 1,
+            },
+            Response::Closed { session: 4 },
+            Response::Busy {
+                used: 900,
+                limit: 1000,
+            },
+            Response::Error {
+                code: ErrorCode::UnknownSession,
+                message: "no session s9".into(),
+            },
+            Response::ShutdownOk { sessions: 2 },
+        ];
+        for r in &rs {
+            assert_eq!(&roundtrip_resp(r), r, "{r:?}");
+        }
+    }
+
+    #[test]
+    fn frame_header_roundtrip_and_guards() {
+        let h = FrameHeader::encode(PROTO_VERSION, msg::INGEST, 1234);
+        let back = FrameHeader::parse(&h).unwrap();
+        assert_eq!(
+            back,
+            FrameHeader {
+                version: PROTO_VERSION,
+                msg: msg::INGEST,
+                len: 1234
+            }
+        );
+        // Bad magic.
+        let mut bad = h;
+        bad[0] = b'X';
+        assert!(FrameHeader::parse(&bad).is_err());
+        // Oversized payload claim.
+        let huge = FrameHeader::encode(PROTO_VERSION, msg::INGEST, u32::MAX);
+        assert!(FrameHeader::parse(&huge).is_err());
+    }
+
+    #[test]
+    fn frame_io_roundtrip() {
+        let req = Request::Diagnose { session: 11 };
+        let mut buf = Vec::new();
+        write_frame(&mut buf, req.msg_type(), &req.encode()).unwrap();
+        let mut r = std::io::Cursor::new(buf);
+        let (header, payload) = read_frame(&mut r).unwrap();
+        assert_eq!(header.version, PROTO_VERSION);
+        assert_eq!(header.msg, msg::DIAGNOSE);
+        assert!(matches!(
+            Request::decode(header.msg, &payload).unwrap(),
+            Request::Diagnose { session: 11 }
+        ));
+    }
+
+    #[test]
+    fn write_frame_rejects_oversized_payloads() {
+        let payload = vec![0u8; MAX_FRAME_LEN as usize + 1];
+        let mut sink = Vec::new();
+        let err =
+            write_frame(&mut sink, msg::INGEST, &payload).unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+        assert!(sink.is_empty(), "nothing may reach the wire");
+    }
+
+    #[test]
+    fn decode_rejects_unknown_types_and_trailing_bytes() {
+        assert!(Request::decode(200, &[]).is_err());
+        assert!(Response::decode(1, &[]).is_err());
+        let mut payload = Request::Diagnose { session: 1 }.encode();
+        payload.push(0xFF);
+        assert!(matches!(
+            Request::decode(msg::DIAGNOSE, &payload),
+            Err(CodecError::Trailing(1))
+        ));
+    }
+}

@@ -1,0 +1,482 @@
+//! Durable snapshots for the sketchd daemon: the wire codec doubles as
+//! the on-disk format.
+//!
+//! File layout (little-endian; see DESIGN.md §5):
+//!
+//! ```text
+//! +----------+---------+----------+---------+---------+=============+
+//! | magic 8B | ver u16 | rsvd u16 | len u32 | crc u32 | payload ... |
+//! | SKSNAP01 |         |  (=0)    |         | (IEEE)  | (len bytes) |
+//! +----------+---------+----------+---------+---------+=============+
+//! ```
+//!
+//! The payload is a [`DaemonSnapshot`] encoded with [`super::codec`]:
+//! per session the hub-side [`SessionState`] (detector state), the
+//! engine-side [`EngineSnapshot`] (EMA triplets; projections re-derived
+//! from seed) and the backpressure counter.  Writes are atomic: the
+//! bytes go to `<path>.tmp`, are fsynced, then renamed over `<path>`, so
+//! a crash mid-write leaves the previous snapshot intact.  `load`
+//! verifies magic, version, length and CRC-32 before decoding.
+
+use std::fs;
+use std::io::Write as _;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::monitor::{
+    MonitorConfig, RollingState, ServiceState, SessionState,
+};
+use crate::sketch::{EngineSnapshot, Precision, TripletState};
+
+use super::codec::{crc32, CodecError, Dec, Enc};
+
+pub const SNAP_MAGIC: &[u8; 8] = b"SKSNAP01";
+pub const SNAP_VERSION: u16 = 1;
+pub const SNAP_HEADER_LEN: usize = 20;
+
+/// One tenant's full durable state.
+#[derive(Clone, Debug)]
+pub struct SessionRecord {
+    /// Monitor-side state (id, name, detector internals).
+    pub session: SessionState,
+    /// Sketch-side state (EMA triplets + re-derivable randomness).
+    pub engine: EngineSnapshot,
+    /// Ingested-bytes-since-last-diagnose backpressure counter.
+    pub quota_used: u64,
+}
+
+/// Everything the daemon persists between restarts.
+#[derive(Clone, Debug, Default)]
+pub struct DaemonSnapshot {
+    pub sessions: Vec<SessionRecord>,
+}
+
+impl DaemonSnapshot {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut e = Enc::new();
+        e.len32(self.sessions.len());
+        for rec in &self.sessions {
+            enc_session_state(&mut e, &rec.session);
+            enc_engine_snapshot(&mut e, &rec.engine);
+            e.u64(rec.quota_used);
+        }
+        e.into_bytes()
+    }
+
+    pub fn decode(payload: &[u8]) -> Result<DaemonSnapshot, CodecError> {
+        let mut d = Dec::new(payload);
+        let n = d.len32(1)?;
+        let mut sessions = Vec::with_capacity(n);
+        for _ in 0..n {
+            let session = dec_session_state(&mut d)?;
+            let engine = dec_engine_snapshot(&mut d)?;
+            let quota_used = d.u64()?;
+            sessions.push(SessionRecord {
+                session,
+                engine,
+                quota_used,
+            });
+        }
+        d.finish()?;
+        Ok(DaemonSnapshot { sessions })
+    }
+}
+
+/// Atomic, CRC-checked snapshot file.
+#[derive(Clone, Debug)]
+pub struct SnapshotStore {
+    path: PathBuf,
+}
+
+impl SnapshotStore {
+    pub fn new(path: impl Into<PathBuf>) -> SnapshotStore {
+        SnapshotStore { path: path.into() }
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Serialise, checksum and atomically replace the snapshot file.
+    /// Returns total file bytes written.
+    pub fn save(&self, snap: &DaemonSnapshot) -> Result<u64> {
+        let payload = snap.encode();
+        let mut file = Vec::with_capacity(SNAP_HEADER_LEN + payload.len());
+        file.extend_from_slice(SNAP_MAGIC);
+        file.extend_from_slice(&SNAP_VERSION.to_le_bytes());
+        file.extend_from_slice(&0u16.to_le_bytes());
+        file.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        file.extend_from_slice(&crc32(&payload).to_le_bytes());
+        file.extend_from_slice(&payload);
+
+        if let Some(parent) = self.path.parent() {
+            if !parent.as_os_str().is_empty() {
+                fs::create_dir_all(parent).with_context(|| {
+                    format!("creating snapshot dir {}", parent.display())
+                })?;
+            }
+        }
+        let tmp = self.path.with_extension("tmp");
+        {
+            let mut f = fs::File::create(&tmp).with_context(|| {
+                format!("creating {}", tmp.display())
+            })?;
+            f.write_all(&file)?;
+            f.sync_all()?;
+        }
+        fs::rename(&tmp, &self.path).with_context(|| {
+            format!("renaming {} -> {}", tmp.display(), self.path.display())
+        })?;
+        Ok(file.len() as u64)
+    }
+
+    /// Load and verify the snapshot; `Ok(None)` when no file exists yet
+    /// (fresh daemon).  A corrupt file is an error, never silent state
+    /// loss.
+    pub fn load(&self) -> Result<Option<DaemonSnapshot>> {
+        let bytes = match fs::read(&self.path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {
+                return Ok(None)
+            }
+            Err(e) => {
+                return Err(e).with_context(|| {
+                    format!("reading snapshot {}", self.path.display())
+                })
+            }
+        };
+        if bytes.len() < SNAP_HEADER_LEN {
+            bail!("snapshot truncated ({} bytes)", bytes.len());
+        }
+        if &bytes[0..8] != SNAP_MAGIC {
+            bail!("snapshot has wrong magic");
+        }
+        let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
+        if version != SNAP_VERSION {
+            bail!("snapshot version {version} (expected {SNAP_VERSION})");
+        }
+        let len =
+            u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
+        let crc = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        let payload = &bytes[SNAP_HEADER_LEN..];
+        if payload.len() != len {
+            bail!(
+                "snapshot payload is {} bytes, header says {len}",
+                payload.len()
+            );
+        }
+        let actual = crc32(payload);
+        if actual != crc {
+            bail!("snapshot CRC mismatch ({actual:08x} != {crc:08x})");
+        }
+        let snap = DaemonSnapshot::decode(payload)
+            .context("decoding snapshot payload")?;
+        Ok(Some(snap))
+    }
+}
+
+fn enc_rolling(e: &mut Enc, r: &RollingState) {
+    e.u64(r.n);
+    e.f64(r.mean);
+    e.f64(r.m2);
+    e.f64(r.min);
+    e.f64(r.max);
+    e.f64(r.last);
+}
+
+fn dec_rolling(d: &mut Dec) -> Result<RollingState, CodecError> {
+    Ok(RollingState {
+        n: d.u64()?,
+        mean: d.f64()?,
+        m2: d.f64()?,
+        min: d.f64()?,
+        max: d.f64()?,
+        last: d.f64()?,
+    })
+}
+
+fn enc_monitor_config(e: &mut Enc, c: &MonitorConfig) {
+    e.len32(c.k);
+    e.len32(c.window);
+    e.f64(c.vanish_ratio);
+    e.f64(c.explode_ratio);
+    e.f64(c.stagnation_eps);
+    e.f64(c.collapse_frac);
+}
+
+fn dec_monitor_config(d: &mut Dec) -> Result<MonitorConfig, CodecError> {
+    Ok(MonitorConfig {
+        k: d.u32()? as usize,
+        window: d.u32()? as usize,
+        vanish_ratio: d.f64()?,
+        explode_ratio: d.f64()?,
+        stagnation_eps: d.f64()?,
+        collapse_frac: d.f64()?,
+    })
+}
+
+pub fn enc_service_state(e: &mut Enc, s: &ServiceState) {
+    enc_monitor_config(e, &s.cfg);
+    enc_rolling(e, &s.loss);
+    e.len32(s.z_norm.len());
+    for r in &s.z_norm {
+        enc_rolling(e, r);
+    }
+    e.len32(s.stable_rank.len());
+    for r in &s.stable_rank {
+        enc_rolling(e, r);
+    }
+    e.len32(s.recent.len());
+    for (loss, zs, ss) in &s.recent {
+        e.f64(*loss);
+        e.f64s(zs);
+        e.f64s(ss);
+    }
+    e.u64(s.head);
+    e.u64(s.steps_seen);
+    e.opt_f64(s.first_window_z);
+    e.opt_f64(s.window_start_loss);
+}
+
+pub fn dec_service_state(d: &mut Dec) -> Result<ServiceState, CodecError> {
+    let cfg = dec_monitor_config(d)?;
+    let loss = dec_rolling(d)?;
+    let n = d.len32(48)?;
+    let z_norm = (0..n)
+        .map(|_| dec_rolling(d))
+        .collect::<Result<Vec<_>, _>>()?;
+    let n = d.len32(48)?;
+    let stable_rank = (0..n)
+        .map(|_| dec_rolling(d))
+        .collect::<Result<Vec<_>, _>>()?;
+    let n = d.len32(16)?; // each entry >= loss f64 + two u32 prefixes
+    let mut recent = Vec::with_capacity(n);
+    for _ in 0..n {
+        let loss = d.f64()?;
+        let zs = d.f64s()?;
+        let ss = d.f64s()?;
+        recent.push((loss, zs, ss));
+    }
+    Ok(ServiceState {
+        cfg,
+        loss,
+        z_norm,
+        stable_rank,
+        recent,
+        head: d.u64()?,
+        steps_seen: d.u64()?,
+        first_window_z: d.opt_f64()?,
+        window_start_loss: d.opt_f64()?,
+    })
+}
+
+pub fn enc_session_state(e: &mut Enc, s: &SessionState) {
+    e.u64(s.id);
+    e.str(&s.name);
+    e.u64(s.sketch_bytes);
+    enc_service_state(e, &s.service);
+}
+
+pub fn dec_session_state(d: &mut Dec) -> Result<SessionState, CodecError> {
+    Ok(SessionState {
+        id: d.u64()?,
+        name: d.str()?,
+        sketch_bytes: d.u64()?,
+        service: dec_service_state(d)?,
+    })
+}
+
+pub fn enc_engine_snapshot(e: &mut Enc, s: &EngineSnapshot) {
+    e.usizes(&s.layer_dims);
+    e.len32(s.rank);
+    e.f64(s.beta);
+    e.u64(s.seed);
+    e.u8(match s.precision {
+        Precision::F32 => 0,
+        Precision::F64 => 1,
+    });
+    e.len32(s.triplets.len());
+    for t in &s.triplets {
+        e.mat(&t.x);
+        e.mat(&t.y);
+        e.mat(&t.z);
+        e.u64(t.updates);
+    }
+    e.usizes(&s.batch_sizes);
+    e.opt_usize(s.last_batch);
+    e.u64(s.batches_ingested);
+}
+
+pub fn dec_engine_snapshot(
+    d: &mut Dec,
+) -> Result<EngineSnapshot, CodecError> {
+    let layer_dims = d.usizes()?;
+    let rank = d.u32()? as usize;
+    let beta = d.f64()?;
+    let seed = d.u64()?;
+    let precision = match d.u8()? {
+        0 => Precision::F32,
+        1 => Precision::F64,
+        tag => {
+            return Err(CodecError::BadTag {
+                what: "precision",
+                tag,
+            })
+        }
+    };
+    let n = d.len32(32)?; // a triplet is at least 3 mat headers + updates
+    let mut triplets = Vec::with_capacity(n);
+    for _ in 0..n {
+        let x = d.mat()?;
+        let y = d.mat()?;
+        let z = d.mat()?;
+        let updates = d.u64()?;
+        triplets.push(TripletState { x, y, z, updates });
+    }
+    Ok(EngineSnapshot {
+        layer_dims,
+        rank,
+        beta,
+        seed,
+        precision,
+        triplets,
+        batch_sizes: d.usizes()?,
+        last_batch: d.opt_usize()?,
+        batches_ingested: d.u64()?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::monitor::{MonitorHub, MonitorService};
+    use crate::sketch::{
+        Mat, Parallelism, SketchConfig, SketchEngine, Sketcher,
+    };
+    use crate::util::rng::Rng;
+
+    fn temp_path(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!(
+            "sketchd-store-{tag}-{}.snap",
+            std::process::id()
+        ))
+    }
+
+    fn sample_record(seed: u64) -> SessionRecord {
+        let dims = [24usize, 12];
+        let mut engine = SketchConfig::builder()
+            .layer_dims(&dims)
+            .rank(3)
+            .beta(0.9)
+            .seed(seed)
+            .build_engine()
+            .unwrap();
+        let mut rng = Rng::new(seed);
+        for n_b in [16usize, 5] {
+            let mut acts = vec![Mat::gaussian(n_b, 8, &mut rng)];
+            for &d in &dims {
+                acts.push(Mat::gaussian(n_b, d, &mut rng));
+            }
+            engine.ingest(&acts).unwrap();
+        }
+        let mut hub = MonitorHub::new();
+        let id = hub
+            .register("rec", MonitorConfig::for_rank(3), dims.len())
+            .unwrap();
+        for i in 0..30 {
+            hub.observe(
+                id,
+                &crate::coordinator::StepMetrics {
+                    loss: 1.0 / (i + 1) as f32,
+                    z_norm: vec![5.0; dims.len()],
+                    stable_rank: vec![3.0; dims.len()],
+                    ..Default::default()
+                },
+            )
+            .unwrap();
+        }
+        hub.report_sketch_bytes(id, engine.memory()).unwrap();
+        SessionRecord {
+            session: hub.session(id).unwrap().state(),
+            engine: engine.snapshot(),
+            quota_used: 1234,
+        }
+    }
+
+    #[test]
+    fn snapshot_save_load_roundtrip() {
+        let path = temp_path("roundtrip");
+        let store = SnapshotStore::new(&path);
+        assert!(store.load().unwrap().is_none(), "fresh path is None");
+
+        let snap = DaemonSnapshot {
+            sessions: vec![sample_record(7), sample_record(8)],
+        };
+        let bytes = store.save(&snap).unwrap();
+        assert!(bytes > SNAP_HEADER_LEN as u64);
+
+        let back = store.load().unwrap().expect("snapshot present");
+        assert_eq!(back.sessions.len(), 2);
+        for (orig, got) in snap.sessions.iter().zip(&back.sessions) {
+            assert_eq!(got.session.id, orig.session.id);
+            assert_eq!(got.session.name, orig.session.name);
+            assert_eq!(got.quota_used, orig.quota_used);
+            // Engine state restores exactly.
+            let a =
+                SketchEngine::from_snapshot(&orig.engine, Parallelism::Serial)
+                    .unwrap();
+            let b =
+                SketchEngine::from_snapshot(&got.engine, Parallelism::Serial)
+                    .unwrap();
+            assert_eq!(a.max_state_diff(&b), 0.0);
+            // Detector state diagnoses identically.
+            let sa = MonitorService::from_state(&orig.session.service);
+            let sb = MonitorService::from_state(&got.session.service);
+            assert_eq!(sa.diagnose(), sb.diagnose());
+            assert_eq!(sa.steps_seen, sb.steps_seen);
+        }
+        let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupt_snapshots_are_rejected() {
+        let path = temp_path("corrupt");
+        let store = SnapshotStore::new(&path);
+        let snap = DaemonSnapshot {
+            sessions: vec![sample_record(9)],
+        };
+        store.save(&snap).unwrap();
+
+        // Flip one payload byte: CRC must catch it.
+        let mut bytes = fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0xFF;
+        fs::write(&path, &bytes).unwrap();
+        let err = store.load().unwrap_err().to_string();
+        assert!(err.contains("CRC"), "{err}");
+
+        // Wrong magic.
+        let mut bytes = fs::read(&path).unwrap();
+        bytes[0] = b'X';
+        fs::write(&path, &bytes).unwrap();
+        assert!(store.load().is_err());
+
+        // Truncation.
+        fs::write(&path, &[0u8; 4]).unwrap();
+        assert!(store.load().is_err());
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(path.with_extension("tmp"));
+    }
+
+    #[test]
+    fn save_is_atomic_rename() {
+        let path = temp_path("atomic");
+        let store = SnapshotStore::new(&path);
+        store.save(&DaemonSnapshot::default()).unwrap();
+        // The temp file never lingers after a successful save.
+        assert!(!path.with_extension("tmp").exists());
+        assert!(path.exists());
+        let _ = fs::remove_file(&path);
+    }
+}

@@ -239,6 +239,38 @@ impl SketchConfigBuilder {
     }
 }
 
+/// Plain-data image of one triplet's EMA state ([`EngineSnapshot`]).
+#[derive(Clone, Debug)]
+pub struct TripletState {
+    pub x: Mat,
+    pub y: Mat,
+    pub z: Mat,
+    pub updates: u64,
+}
+
+/// Plain-data image of a `SketchEngine` for durable snapshots and the
+/// serve wire format: the triplets' EMA state plus everything needed to
+/// re-derive the random state (Psi and the per-batch-size projections are
+/// deterministic in (seed, rank, n_b), so only the observed batch sizes
+/// are recorded, not the projection matrices themselves).
+///
+/// `Parallelism` is deliberately absent: it is a runtime throughput knob
+/// with no effect on numerics, so the restoring host chooses its own.
+#[derive(Clone, Debug)]
+pub struct EngineSnapshot {
+    pub layer_dims: Vec<usize>,
+    pub rank: usize,
+    pub beta: f64,
+    pub seed: u64,
+    pub precision: Precision,
+    pub triplets: Vec<TripletState>,
+    /// Distinct batch sizes observed (ascending) — projections are
+    /// resampled from (seed, rank, n_b) on restore.
+    pub batch_sizes: Vec<usize>,
+    pub last_batch: Option<usize>,
+    pub batches_ingested: u64,
+}
+
 /// The narrow surface call sites program against.
 pub trait Sketcher {
     /// Ingest one forward pass: `acts[0]` is the input batch, `acts[j]`
@@ -369,6 +401,91 @@ impl SketchEngine {
 
     pub fn batches_ingested(&self) -> u64 {
         self.batches_ingested
+    }
+
+    /// Capture the engine's full state as plain data (see
+    /// [`EngineSnapshot`] for what is stored vs re-derived).
+    pub fn snapshot(&self) -> EngineSnapshot {
+        EngineSnapshot {
+            layer_dims: self.cfg.layer_dims.clone(),
+            rank: self.cfg.rank,
+            beta: self.cfg.beta,
+            seed: self.cfg.seed,
+            precision: self.cfg.precision,
+            triplets: self
+                .layers
+                .iter()
+                .map(|t| TripletState {
+                    x: t.x.clone(),
+                    y: t.y.clone(),
+                    z: t.z.clone(),
+                    updates: t.updates as u64,
+                })
+                .collect(),
+            batch_sizes: self.proj.keys().copied().collect(),
+            last_batch: self.last_batch,
+            batches_ingested: self.batches_ingested,
+        }
+    }
+
+    /// Rebuild an engine from a snapshot: configuration is re-validated
+    /// through the builder, Psi and batch projections are re-derived from
+    /// (seed, rank, n_b), and the triplets' EMA state is installed
+    /// verbatim — `restored.max_state_diff(&original) == 0` exactly.
+    pub fn from_snapshot(
+        snap: &EngineSnapshot,
+        par: Parallelism,
+    ) -> Result<SketchEngine> {
+        let cfg = SketchConfig::builder()
+            .layer_dims(&snap.layer_dims)
+            .rank(snap.rank)
+            .beta(snap.beta)
+            .seed(snap.seed)
+            .precision(snap.precision)
+            .parallelism(par)
+            .build()?;
+        if snap.triplets.len() != cfg.n_layers() {
+            bail!(
+                "snapshot has {} triplets for {} layers",
+                snap.triplets.len(),
+                cfg.n_layers()
+            );
+        }
+        let k = cfg.k();
+        for (l, t) in snap.triplets.iter().enumerate() {
+            let (d_in, d_out) = (cfg.d_in(l), cfg.d_out(l));
+            if (t.x.rows, t.x.cols) != (d_in, k)
+                || (t.y.rows, t.y.cols) != (d_out, k)
+                || (t.z.rows, t.z.cols) != (d_out, k)
+            {
+                bail!(
+                    "snapshot triplet {l} shapes ({}x{}, {}x{}, {}x{}) \
+                     do not match config (d_in {d_in}, d_out {d_out}, k {k})",
+                    t.x.rows,
+                    t.x.cols,
+                    t.y.rows,
+                    t.y.cols,
+                    t.z.rows,
+                    t.z.cols
+                );
+            }
+        }
+        let mut engine = SketchEngine::new(cfg);
+        for (layer, t) in engine.layers.iter_mut().zip(&snap.triplets) {
+            layer.x = t.x.clone();
+            layer.y = t.y.clone();
+            layer.z = t.z.clone();
+            layer.updates = t.updates as usize;
+        }
+        for &n_b in &snap.batch_sizes {
+            engine.ensure_projections(n_b);
+        }
+        if let Some(n_b) = snap.last_batch {
+            engine.ensure_projections(n_b);
+        }
+        engine.last_batch = snap.last_batch;
+        engine.batches_ingested = snap.batches_ingested;
+        Ok(engine)
     }
 
     /// Pre-sample the projections for a batch size without ingesting —
@@ -639,6 +756,52 @@ mod tests {
             + 3 * (32 + 7) * 9 * 4
             + 3 * 9 * 8;
         assert_eq!(e.memory(), hand);
+    }
+
+    #[test]
+    fn snapshot_roundtrip_restores_exact_state() {
+        let mut rng = Rng::new(6);
+        let dims = [20usize, 10];
+        let mut e = engine(&dims, 3);
+        e.ingest(&acts(16, &dims, &mut rng)).unwrap();
+        e.ingest(&acts(5, &dims, &mut rng)).unwrap(); // tail batch
+        let snap = e.snapshot();
+        assert_eq!(snap.batch_sizes, vec![5, 16]);
+        assert_eq!(snap.last_batch, Some(5));
+        let mut r =
+            SketchEngine::from_snapshot(&snap, Parallelism::Serial).unwrap();
+        assert_eq!(r.max_state_diff(&e), 0.0);
+        assert_eq!(r.memory(), e.memory());
+        assert_eq!(r.batches_ingested(), e.batches_ingested());
+        assert_eq!(r.batch_sizes_seen(), e.batch_sizes_seen());
+        // Projections were re-derived, not copied: continued ingestion
+        // and reconstruction stay bitwise identical.
+        let next = acts(16, &dims, &mut rng);
+        e.ingest(&next).unwrap();
+        r.ingest(&next).unwrap();
+        assert_eq!(r.max_state_diff(&e), 0.0);
+        for l in 0..dims.len() {
+            let (a, b) = (e.reconstruct(l).unwrap(), r.reconstruct(l).unwrap());
+            assert_eq!(a.max_abs_diff(&b), 0.0);
+        }
+    }
+
+    #[test]
+    fn snapshot_rejects_mismatched_triplets() {
+        let mut rng = Rng::new(7);
+        let dims = [12usize, 6];
+        let mut e = engine(&dims, 2);
+        e.ingest(&acts(8, &dims, &mut rng)).unwrap();
+        let mut snap = e.snapshot();
+        snap.triplets.pop();
+        assert!(
+            SketchEngine::from_snapshot(&snap, Parallelism::Serial).is_err()
+        );
+        let mut snap2 = e.snapshot();
+        snap2.triplets[0].x = Mat::zeros(3, 3);
+        assert!(
+            SketchEngine::from_snapshot(&snap2, Parallelism::Serial).is_err()
+        );
     }
 
     #[test]

@@ -21,8 +21,8 @@ pub mod reconstruct;
 pub mod triplet;
 
 pub use engine::{
-    engine_state_bytes, Precision, SketchConfig, SketchConfigBuilder,
-    SketchEngine, Sketcher,
+    engine_state_bytes, EngineSnapshot, Precision, SketchConfig,
+    SketchConfigBuilder, SketchEngine, Sketcher, TripletState,
 };
 pub use kernel::Parallelism;
 pub use matrix::Mat;

@@ -88,7 +88,11 @@ impl Json {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 1e15 {
+                if !n.is_finite() {
+                    // JSON has no NaN/Infinity literals; emitting them
+                    // produces unparseable output, so degrade to null.
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 1e15 {
                     let _ = write!(out, "{}", *n as i64);
                 } else {
                     let _ = write!(out, "{}", n);
@@ -378,6 +382,27 @@ mod tests {
         assert!(Json::parse("{,}").is_err());
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("{\"a\":1} x").is_err());
+    }
+
+    #[test]
+    fn non_finite_numbers_serialise_as_null() {
+        let v = obj(vec![
+            ("nan", Json::Num(f64::NAN)),
+            ("pinf", Json::Num(f64::INFINITY)),
+            ("ninf", Json::Num(f64::NEG_INFINITY)),
+            ("ok", Json::Num(1.5)),
+        ]);
+        let s = v.to_string();
+        assert_eq!(
+            s,
+            r#"{"nan":null,"ninf":null,"ok":1.5,"pinf":null}"#
+        );
+        // The output must stay parseable JSON.
+        let back = Json::parse(&s).unwrap();
+        assert_eq!(back.get("nan").unwrap(), &Json::Null);
+        assert_eq!(back.get("ok").unwrap(), &Json::Num(1.5));
+        // Arrays too (the metrics sinks write f64 arrays).
+        assert_eq!(arr_f64(&[1.0, f64::NAN]).to_string(), "[1,null]");
     }
 
     #[test]

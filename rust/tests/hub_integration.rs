@@ -62,7 +62,7 @@ fn healthy_and_problematic_concurrent_only_problematic_flagged() {
         .iter()
         .map(|(dims, problematic)| {
             let name = if *problematic { "problematic" } else { "healthy" };
-            hub.register(name, cfg(), dims.len())
+            hub.register(name, cfg(), dims.len()).unwrap()
         })
         .collect();
 
@@ -169,10 +169,10 @@ fn healthy_and_problematic_concurrent_only_problematic_flagged() {
 fn tenant_churn() {
     let cfg = MonitorConfig::for_rank(2);
     let mut hub = MonitorHub::new();
-    let a = hub.register("a", cfg.clone(), 2);
+    let a = hub.register("a", cfg.clone(), 2).unwrap();
     let m0 = hub.memory();
-    let b = hub.register("b", cfg.clone(), 2);
-    let c = hub.register("c", cfg, 2);
+    let b = hub.register("b", cfg.clone(), 2).unwrap();
+    let c = hub.register("c", cfg, 2).unwrap();
     assert_eq!(hub.memory(), 3 * m0);
     let sample = StepMetrics {
         loss: 1.0,

@@ -1,0 +1,415 @@
+//! Loopback integration tests for the sketchd daemon: concurrent remote
+//! sessions must be *bit-for-bit* equivalent to in-process MonitorHub
+//! runs, a kill -> restart cycle must resume every session from the
+//! durable snapshot with `max_state_diff == 0`, and the backpressure /
+//! error paths must surface as typed protocol replies.
+
+use std::thread;
+
+use sketchgrad::config::ServeConfig;
+use sketchgrad::data::ActStream;
+use sketchgrad::monitor::{step_metrics, MonitorHub, SessionId};
+use sketchgrad::serve::daemon::recon_errors;
+use sketchgrad::serve::proto::{
+    self, monitor_config, ErrorCode, Request, Response, SessionSpec,
+};
+use sketchgrad::serve::{
+    Daemon, ServeError, SketchClient, SnapshotStore,
+};
+use sketchgrad::sketch::{
+    Mat, Parallelism, SketchConfig, SketchEngine, Sketcher,
+};
+
+/// Disjoint per-run architectures (heterogeneous widths); the last run
+/// is the direction-collapsed problematic stream.
+const ARCHS: [(&[usize], bool); 4] = [
+    (&[48, 24, 12], false),
+    (&[40, 40], false),
+    (&[56, 28, 14, 7], false),
+    (&[32, 16], true),
+];
+const STEPS: usize = 40;
+const N_B: usize = 24;
+const TAIL: usize = 7;
+const WINDOW: usize = 10;
+const RANK: usize = 4;
+const BETA: f64 = 0.9;
+
+fn unique_snapshot_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("sketchd-it-{tag}-{}.snap", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn test_config(tag: &str, max_sessions: usize, quota: usize) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: quota,
+        snapshot_path: unique_snapshot_path(tag),
+        threads: 1,
+    }
+}
+
+fn spec_for(idx: usize, name: &str) -> SessionSpec {
+    SessionSpec {
+        name: name.into(),
+        layer_dims: ARCHS[idx].0.to_vec(),
+        rank: RANK,
+        beta: BETA,
+        seed: 500 + idx as u64,
+        window: WINDOW,
+        collapse_frac: 0.25,
+    }
+}
+
+/// In-process replica of run `idx`: same engine config, same hub config,
+/// same deterministic activation stream.
+struct Mirror {
+    engine: SketchEngine,
+    hub: MonitorHub,
+    id: SessionId,
+    stream: ActStream,
+}
+
+impl Mirror {
+    fn new(idx: usize) -> Mirror {
+        let spec = spec_for(idx, "mirror");
+        let engine = SketchConfig::builder()
+            .layer_dims(&spec.layer_dims)
+            .rank(spec.rank)
+            .beta(spec.beta)
+            .seed(spec.seed)
+            .build_engine()
+            .unwrap();
+        let mut hub = MonitorHub::new();
+        let id = hub
+            .register("mirror", monitor_config(&spec), spec.layer_dims.len())
+            .unwrap();
+        Mirror {
+            engine,
+            hub,
+            id,
+            stream: ActStream::new(ARCHS[idx].0, ARCHS[idx].1, spec.seed),
+        }
+    }
+
+    fn step(&mut self, step: usize, total: usize) -> (f32, Vec<Mat>) {
+        let n_b = if step == total - 1 { TAIL } else { N_B };
+        let acts = self.stream.next_batch(n_b);
+        let loss = self.stream.loss_at(step, total);
+        self.engine.ingest(&acts).unwrap();
+        self.hub
+            .observe(self.id, &step_metrics(loss, &self.engine.metrics()))
+            .unwrap();
+        (loss, acts)
+    }
+}
+
+/// ACCEPTANCE: 4 concurrent clients ingest disjoint runs; per-session
+/// diagnosis, reconstruction errors and memory accounting match an
+/// in-process MonitorHub run bit-for-bit, and only the problematic
+/// session is flagged.
+#[test]
+fn four_concurrent_remote_sessions_match_in_process_bit_for_bit() {
+    let daemon = Daemon::bind(test_config("concurrent", 8, 0)).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let snap_path = unique_snapshot_path("concurrent");
+    let handle = daemon.spawn().unwrap();
+
+    // 4 concurrent clients, one OS thread each, disjoint runs.
+    let results: Vec<(usize, u64, Vec<f64>, _)> = thread::scope(|s| {
+        let handles: Vec<_> = (0..ARCHS.len())
+            .map(|idx| {
+                let addr = addr.clone();
+                s.spawn(move || {
+                    let (mut client, _info) =
+                        SketchClient::connect(&addr).unwrap();
+                    let session = client
+                        .open_session(&spec_for(idx, &format!("run{idx}")))
+                        .unwrap();
+                    // The client generates the same deterministic stream
+                    // the mirror will replay.
+                    let mut stream = ActStream::new(
+                        ARCHS[idx].0,
+                        ARCHS[idx].1,
+                        500 + idx as u64,
+                    );
+                    let mut last_recon = Vec::new();
+                    for step in 0..STEPS {
+                        let n_b =
+                            if step == STEPS - 1 { TAIL } else { N_B };
+                        let acts = stream.next_batch(n_b);
+                        let loss = stream.loss_at(step, STEPS);
+                        let want = step == STEPS - 1;
+                        let reply = client
+                            .ingest(session, loss, &acts, want)
+                            .unwrap();
+                        if want {
+                            last_recon = reply.recon_err;
+                        }
+                    }
+                    let diag = client.diagnose(session).unwrap();
+                    (idx, session, last_recon, diag)
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    for (idx, _session, remote_recon, diag) in &results {
+        let idx = *idx;
+        // Sequential in-process replay of the identical run.
+        let mut mirror = Mirror::new(idx);
+        let mut local_recon = Vec::new();
+        for step in 0..STEPS {
+            let (_loss, acts) = mirror.step(step, STEPS);
+            if step == STEPS - 1 {
+                local_recon = recon_errors(&mirror.engine, &acts).unwrap();
+            }
+        }
+        let local_diag = mirror.hub.diagnose(mirror.id).unwrap();
+
+        assert_eq!(
+            diag.diagnosis, local_diag,
+            "run {idx}: remote diagnosis diverged"
+        );
+        assert_eq!(diag.steps_seen, STEPS as u64, "run {idx}");
+        assert_eq!(
+            diag.engine_bytes,
+            mirror.engine.memory() as u64,
+            "run {idx}: accountant diverged"
+        );
+        assert_eq!(
+            remote_recon, &local_recon,
+            "run {idx}: reconstruction errors not bit-for-bit"
+        );
+        let problematic = ARCHS[idx].1;
+        assert_eq!(
+            diag.healthy, !problematic,
+            "run {idx}: healthy={} but problematic={problematic}: {:?}",
+            diag.healthy, diag.diagnosis
+        );
+    }
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+/// ACCEPTANCE: kill -> restart resumes every session from the snapshot
+/// with engine `max_state_diff == 0` and identical detector verdicts;
+/// remote sessions then continue bit-for-bit against an uninterrupted
+/// in-process run.
+#[test]
+fn kill_restart_resumes_sessions_with_zero_state_diff() {
+    let cfg = test_config("restart", 8, 0);
+    let snap_path = cfg.snapshot_path.clone();
+    let first_half = STEPS / 2;
+
+    // Phase 1: two sessions ingest half their runs, then the daemon is
+    // stopped (final snapshot on shutdown).
+    let daemon = Daemon::bind(cfg.clone()).unwrap();
+    let addr1 = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+    let mut mirrors: Vec<Mirror> = (0..2).map(Mirror::new).collect();
+    let mut sessions = Vec::new();
+    {
+        let (mut client, info) = SketchClient::connect(&addr1).unwrap();
+        assert_eq!(info.sessions, 0);
+        for (idx, mirror) in mirrors.iter_mut().enumerate() {
+            let session = client
+                .open_session(&spec_for(idx, &format!("run{idx}")))
+                .unwrap();
+            for step in 0..first_half {
+                let (loss, acts) = mirror.step(step, STEPS);
+                client.ingest(session, loss, &acts, false).unwrap();
+            }
+            sessions.push(session);
+        }
+    }
+    handle.stop().unwrap();
+
+    // The durable snapshot alone must rebuild engines identical to the
+    // uninterrupted mirrors (the direct max_state_diff == 0 witness).
+    let snap = SnapshotStore::new(snap_path.clone())
+        .load()
+        .unwrap()
+        .expect("shutdown snapshot written");
+    assert_eq!(snap.sessions.len(), 2);
+    for rec in &snap.sessions {
+        let idx = rec.session.id as usize;
+        let restored =
+            SketchEngine::from_snapshot(&rec.engine, Parallelism::Serial)
+                .unwrap();
+        assert_eq!(
+            restored.max_state_diff(&mirrors[idx].engine),
+            0.0,
+            "session {idx}: snapshot state drifted"
+        );
+    }
+
+    // Phase 2: restart on the same snapshot path; clients reconnect and
+    // finish their runs; the mirrors run uninterrupted.
+    let daemon = Daemon::bind(cfg).unwrap();
+    assert_eq!(daemon.session_count(), 2, "sessions resumed from snapshot");
+    let addr2 = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+    {
+        let (mut client, info) = SketchClient::connect(&addr2).unwrap();
+        assert_eq!(info.sessions, 2);
+        for (idx, mirror) in mirrors.iter_mut().enumerate() {
+            let session = sessions[idx];
+            let mut last_reply = None;
+            for step in first_half..STEPS {
+                let (loss, acts) = mirror.step(step, STEPS);
+                let want = step == STEPS - 1;
+                let reply =
+                    client.ingest(session, loss, &acts, want).unwrap();
+                assert_eq!(
+                    reply.engine_bytes,
+                    mirror.engine.memory() as u64,
+                    "run {idx} step {step}: accountant diverged post-resume"
+                );
+                if want {
+                    let local =
+                        recon_errors(&mirror.engine, &acts).unwrap();
+                    assert_eq!(
+                        reply.recon_err, local,
+                        "run {idx}: post-resume reconstruction diverged"
+                    );
+                }
+                last_reply = Some(reply);
+            }
+            assert_eq!(
+                last_reply.unwrap().batches,
+                STEPS as u64,
+                "run {idx}: batch count lost across restart"
+            );
+            let diag = client.diagnose(session).unwrap();
+            let local = mirror.hub.diagnose(mirror.id).unwrap();
+            assert_eq!(diag.steps_seen, STEPS as u64);
+            assert_eq!(
+                diag.diagnosis, local,
+                "run {idx}: diagnosis diverged across restart"
+            );
+        }
+    }
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+/// Per-session byte quota: over-quota ingest gets `Busy`; `Diagnose`
+/// drains the counter and ingestion resumes.
+#[test]
+fn backpressure_busy_then_drained_by_diagnose() {
+    // Each ingest frame here is ~3 KB; quota admits roughly three of
+    // them between diagnoses.
+    let quota = 10_000;
+    let daemon = Daemon::bind(test_config("quota", 4, quota)).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let snap_path = unique_snapshot_path("quota");
+    let handle = daemon.spawn().unwrap();
+
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    let dims: &[usize] = &[16];
+    let session = client
+        .open_session(&SessionSpec {
+            name: "throttled".into(),
+            layer_dims: dims.to_vec(),
+            rank: 2,
+            beta: 0.9,
+            seed: 7,
+            window: 5,
+            collapse_frac: 0.25,
+        })
+        .unwrap();
+    let mut stream = ActStream::new(dims, false, 7);
+
+    let mut accepted = 0usize;
+    let busy = loop {
+        let acts = stream.next_batch(8);
+        match client.ingest(session, 1.0, &acts, false) {
+            Ok(_) => accepted += 1,
+            Err(ServeError::Busy { used, limit }) => break (used, limit),
+            Err(e) => panic!("unexpected error: {e}"),
+        }
+        assert!(accepted < 100, "quota never triggered");
+    };
+    assert!(accepted >= 1, "first ingest should fit under quota");
+    assert_eq!(busy.1, quota as u64);
+    assert!(busy.0 <= quota as u64);
+
+    // Diagnose drains the counter; the same ingest now succeeds.
+    client.diagnose(session).unwrap();
+    let acts = stream.next_batch(8);
+    client.ingest(session, 1.0, &acts, false).unwrap();
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+/// Typed wire errors: unknown sessions, admission caps and version
+/// mismatches all come back as protocol-level replies, not hangups.
+#[test]
+fn wire_errors_admission_and_version_negotiation() {
+    let daemon = Daemon::bind(test_config("errors", 1, 0)).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let snap_path = unique_snapshot_path("errors");
+    let handle = daemon.spawn().unwrap();
+
+    let (mut client, info) = SketchClient::connect(&addr).unwrap();
+    assert_eq!(info.max_sessions, 1);
+
+    // Unknown session -> typed remote error.
+    match client.diagnose(999) {
+        Err(ServeError::Remote { code, .. }) => {
+            assert_eq!(code, ErrorCode::UnknownSession)
+        }
+        other => panic!("expected UnknownSession, got {other:?}"),
+    }
+
+    // Admission cap: the second OpenSession is Busy.
+    let spec = SessionSpec {
+        name: "only".into(),
+        layer_dims: vec![8],
+        rank: 2,
+        beta: 0.9,
+        seed: 1,
+        window: 5,
+        collapse_frac: 0.25,
+    };
+    let session = client.open_session(&spec).unwrap();
+    match client.open_session(&spec) {
+        Err(ServeError::Busy { used, limit }) => {
+            assert_eq!((used, limit), (1, 1))
+        }
+        other => panic!("expected Busy, got {other:?}"),
+    }
+    client.close_session(session).unwrap();
+    client.open_session(&spec).unwrap();
+
+    // A frame with a future protocol version gets UnsupportedVersion.
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    let req = Request::Hello {
+        client: "time-traveller".into(),
+    };
+    proto::write_frame_versioned(
+        &mut raw,
+        proto::PROTO_VERSION + 1,
+        req.msg_type(),
+        &req.encode(),
+    )
+    .unwrap();
+    let (header, payload) = proto::read_frame(&mut raw).unwrap();
+    match Response::decode(header.msg, &payload).unwrap() {
+        Response::Error { code, .. } => {
+            assert_eq!(code, ErrorCode::UnsupportedVersion)
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}

@@ -1,0 +1,251 @@
+//! Snapshot round-trip property tests: engine and monitor state must
+//! survive save -> codec encode -> decode -> load with *zero* state
+//! drift (`max_state_diff == 0`, identical diagnoses) across
+//! heterogeneous widths, tail batches and post-`set_rank` states — the
+//! invariant the sketchd warm-restart path rests on.
+
+use sketchgrad::coordinator::StepMetrics;
+use sketchgrad::monitor::{MonitorConfig, MonitorHub, MonitorService};
+use sketchgrad::serve::codec::{Dec, Enc};
+use sketchgrad::serve::store::{
+    dec_engine_snapshot, dec_service_state, enc_engine_snapshot,
+    enc_service_state,
+};
+use sketchgrad::sketch::{
+    Mat, Parallelism, SketchConfig, SketchEngine, Sketcher,
+};
+use sketchgrad::util::prop::Prop;
+use sketchgrad::util::rng::Rng;
+
+fn random_dims(rng: &mut Rng) -> Vec<usize> {
+    let n_layers = 1 + rng.below(4) as usize;
+    (0..n_layers).map(|_| 4 + rng.below(36) as usize).collect()
+}
+
+fn random_acts(n_b: usize, dims: &[usize], rng: &mut Rng) -> Vec<Mat> {
+    let mut acts = vec![Mat::gaussian(n_b, 8, rng)];
+    for &d in dims {
+        acts.push(Mat::gaussian(n_b, d, rng));
+    }
+    acts
+}
+
+/// Engine snapshot -> wire bytes -> restore must be exact, and the
+/// restored engine must keep evolving identically.
+fn check_engine_roundtrip(
+    engine: &mut SketchEngine,
+    dims: &[usize],
+    rng: &mut Rng,
+) -> Result<(), String> {
+    let snap = engine.snapshot();
+    let mut e = Enc::new();
+    enc_engine_snapshot(&mut e, &snap);
+    let bytes = e.into_bytes();
+    let mut d = Dec::new(&bytes);
+    let decoded = dec_engine_snapshot(&mut d).map_err(|e| e.to_string())?;
+    d.finish().map_err(|e| e.to_string())?;
+
+    let mut restored =
+        SketchEngine::from_snapshot(&decoded, Parallelism::Serial)
+            .map_err(|e| e.to_string())?;
+    let diff = restored.max_state_diff(engine);
+    if diff != 0.0 {
+        return Err(format!("state diff {diff} after roundtrip"));
+    }
+    if restored.memory() != engine.memory() {
+        return Err(format!(
+            "memory {} != {}",
+            restored.memory(),
+            engine.memory()
+        ));
+    }
+    if restored.batch_sizes_seen() != engine.batch_sizes_seen() {
+        return Err("batch sizes diverged".into());
+    }
+    if restored.batches_ingested() != engine.batches_ingested() {
+        return Err("batches_ingested diverged".into());
+    }
+
+    // Continued ingestion + reconstruction stay bitwise identical (the
+    // re-derived projections must equal the originals).
+    let n_b = 3 + rng.below(24) as usize;
+    let acts = random_acts(n_b, dims, rng);
+    engine.ingest(&acts).map_err(|e| e.to_string())?;
+    restored.ingest(&acts).map_err(|e| e.to_string())?;
+    let diff = restored.max_state_diff(engine);
+    if diff != 0.0 {
+        return Err(format!("state diff {diff} after continued ingest"));
+    }
+    for l in 0..dims.len() {
+        let a = engine.reconstruct(l).map_err(|e| e.to_string())?;
+        let b = restored.reconstruct(l).map_err(|e| e.to_string())?;
+        if a.max_abs_diff(&b) != 0.0 {
+            return Err(format!("reconstruction diverged at layer {l}"));
+        }
+    }
+    Ok(())
+}
+
+#[test]
+fn engine_snapshot_roundtrip_hetero_widths_and_tail_batches() {
+    Prop::new(16).check("engine_roundtrip", |rng, i| {
+        let dims = random_dims(rng);
+        let rank = 1 + i % 5;
+        let mut engine = SketchConfig::builder()
+            .layer_dims(&dims)
+            .rank(rank)
+            .beta(0.85)
+            .seed(1000 + i as u64)
+            .build_engine()
+            .map_err(|e| e.to_string())?;
+        // A nominal batch size, a repeat, and a smaller tail batch.
+        let n_b = 8 + rng.below(24) as usize;
+        let tail = 1 + rng.below(n_b as u64 / 2) as usize;
+        for &b in &[n_b, n_b, tail] {
+            let acts = random_acts(b, &dims, rng);
+            engine.ingest(&acts).map_err(|e| e.to_string())?;
+        }
+        check_engine_roundtrip(&mut engine, &dims, rng)
+    });
+}
+
+#[test]
+fn engine_snapshot_roundtrip_after_set_rank() {
+    Prop::new(12).check("set_rank_roundtrip", |rng, i| {
+        let dims = random_dims(rng);
+        let mut engine = SketchConfig::builder()
+            .layer_dims(&dims)
+            .rank(2)
+            .beta(0.9)
+            .seed(2000 + i as u64)
+            .build_engine()
+            .map_err(|e| e.to_string())?;
+        let n_b = 6 + rng.below(12) as usize;
+        engine
+            .ingest(&random_acts(n_b, &dims, rng))
+            .map_err(|e| e.to_string())?;
+        // Algorithm-1 rank change resets sketches and resamples Psi; the
+        // snapshot must capture the *new* rank's state.
+        let new_rank = 1 + rng.below(6) as usize;
+        engine.set_rank(new_rank);
+        if i % 2 == 0 {
+            // Half the cases snapshot a freshly-reset engine, half after
+            // re-accumulating at the new rank.
+            engine
+                .ingest(&random_acts(n_b, &dims, rng))
+                .map_err(|e| e.to_string())?;
+        }
+        let snap = engine.snapshot();
+        if snap.rank != new_rank.max(1) {
+            return Err(format!("snapshot rank {} != {new_rank}", snap.rank));
+        }
+        check_engine_roundtrip(&mut engine, &dims, rng)
+    });
+}
+
+#[test]
+fn service_state_roundtrip_through_codec() {
+    Prop::new(16).check("service_roundtrip", |rng, i| {
+        let n_layers = 1 + rng.below(5) as usize;
+        let cfg = MonitorConfig {
+            window: 5 + rng.below(20) as usize,
+            collapse_frac: 0.1 + 0.4 * rng.uniform(),
+            ..MonitorConfig::for_rank(1 + i % 8)
+        };
+        let mut svc = MonitorService::new(cfg, n_layers);
+        let steps = rng.below(80) as usize;
+        for step in 0..steps {
+            svc.observe(&StepMetrics {
+                loss: (2.0 * (-0.02 * step as f64).exp()) as f32,
+                z_norm: vec![rng.uniform() as f32 * 50.0; n_layers],
+                stable_rank: vec![rng.uniform() as f32 * 9.0; n_layers],
+                ..Default::default()
+            });
+        }
+        let st = svc.state();
+        let mut e = Enc::new();
+        enc_service_state(&mut e, &st);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        let back = dec_service_state(&mut d).map_err(|e| e.to_string())?;
+        d.finish().map_err(|e| e.to_string())?;
+
+        let mut restored = MonitorService::from_state(&back);
+        if restored.diagnose() != svc.diagnose() {
+            return Err("diagnosis diverged after roundtrip".into());
+        }
+        if restored.steps_seen != svc.steps_seen {
+            return Err("steps_seen diverged".into());
+        }
+        if restored.monitor_bytes() != svc.monitor_bytes() {
+            return Err("monitor_bytes diverged".into());
+        }
+        // Continued observation (ring-buffer head included) matches.
+        let m = StepMetrics {
+            loss: 0.5,
+            z_norm: vec![7.0; n_layers],
+            stable_rank: vec![4.0; n_layers],
+            ..Default::default()
+        };
+        svc.observe(&m);
+        restored.observe(&m);
+        if restored.diagnose() != svc.diagnose() {
+            return Err("diagnosis diverged after continued observe".into());
+        }
+        Ok(())
+    });
+}
+
+/// Hub-level: session states restored into a fresh hub aggregate to the
+/// same report.
+#[test]
+fn hub_session_states_restore_to_identical_report() {
+    let cfg = MonitorConfig {
+        window: 10,
+        collapse_frac: 0.5,
+        ..MonitorConfig::for_rank(4)
+    };
+    let mut hub = MonitorHub::new();
+    let mut ids = Vec::new();
+    for i in 0..3 {
+        ids.push(hub.register(&format!("t{i}"), cfg.clone(), 2).unwrap());
+    }
+    for step in 0..60 {
+        for (i, &id) in ids.iter().enumerate() {
+            let healthy = i != 1;
+            let m = if healthy {
+                StepMetrics {
+                    loss: 2.0 * (-0.05 * step as f32).exp(),
+                    z_norm: vec![40.0 + (step % 3) as f32; 2],
+                    stable_rank: vec![8.0; 2],
+                    ..Default::default()
+                }
+            } else {
+                StepMetrics {
+                    loss: 2.3,
+                    z_norm: vec![9.0; 2],
+                    stable_rank: vec![1.2; 2],
+                    ..Default::default()
+                }
+            };
+            hub.observe(id, &m).unwrap();
+        }
+        hub.report_sketch_bytes(ids[0], 1000).unwrap();
+    }
+
+    let mut restored = MonitorHub::new();
+    for s in hub.sessions() {
+        restored.restore_session(&s.state()).unwrap();
+    }
+    let (a, b) = (hub.aggregate(), restored.aggregate());
+    assert_eq!(a.sessions, b.sessions);
+    assert_eq!(a.healthy, b.healthy);
+    assert_eq!(a.flagged.len(), b.flagged.len());
+    assert_eq!(a.monitor_bytes, b.monitor_bytes);
+    assert_eq!(a.sketch_bytes, b.sketch_bytes);
+    assert_eq!(a.steps_seen, b.steps_seen);
+    for ((ia, na, da), (ib, nb, db)) in a.flagged.iter().zip(&b.flagged) {
+        assert_eq!((ia, na), (ib, nb));
+        assert_eq!(da, db);
+    }
+}
