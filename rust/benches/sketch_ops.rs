@@ -1,13 +1,17 @@
-//! Micro-benchmarks for the native sketching substrate hot paths: engine
-//! ingest (EMA triplet update) serial vs threaded, fused vs unfused
-//! reconstruction, and the monitoring metric kernels.
+//! Micro-benchmarks for the native sketching substrate hot paths: fused
+//! zero-allocation engine ingest serial vs pooled vs the PR3-era
+//! reference path (allocating unfused contributions + spawn-per-call
+//! scoped threads), fused vs unfused reconstruction, the persistent-pool
+//! handoff vs a thread spawn, and the monitoring metric kernels.
 //!
 //! Run: `cargo bench --bench sketch_ops` (add `-- --quick` for the cheap
-//! CI sizing).  Always writes `BENCH_sketch.json` — ns/op per bench plus
-//! `ingest_speedup_2t/4t` summary scalars — which the CI `bench-smoke`
-//! job uploads and gates on.  The parallel path is also numerically
-//! cross-checked against serial here (<= 1e-12, expected bitwise) so a
-//! kernel regression fails the bench run itself.
+//! CI sizing).  Always writes `BENCH_sketch.json` **at the repository
+//! root** (so the benchmark trajectory accumulates across PRs) — ns/op
+//! per bench plus summary scalars (`ingest_speedup_2t/4t`,
+//! `fused_speedup_vs_pr3`, `pool_reuse_speedup`, ...) — which the CI
+//! `bench-smoke` job uploads and gates on.  The parallel path is also
+//! numerically cross-checked against serial here (<= 1e-12, expected
+//! bitwise) so a kernel regression fails the bench run itself.
 
 use sketchgrad::benchkit::{quick_requested, Bench};
 use sketchgrad::config::ServeConfig;
@@ -15,10 +19,16 @@ use sketchgrad::monitor::{step_metrics, MonitorHub};
 use sketchgrad::serve::{monitor_config, Daemon, SessionSpec, SketchClient};
 use sketchgrad::sketch::metrics::stable_rank_power;
 use sketchgrad::sketch::reconstruct::reconstruct_batch_unfused;
-use sketchgrad::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
+use sketchgrad::sketch::{
+    kernel, Mat, Pool, Projections, SketchConfig, SketchEngine,
+    SketchTriplet, Sketcher,
+};
 use sketchgrad::util::rng::Rng;
 
-const BENCH_JSON: &str = "BENCH_sketch.json";
+/// Written at the repository root (the bench runs with CWD = rust/), so
+/// the cross-PR benchmark trajectory accumulates in one place.
+const BENCH_JSON: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_sketch.json");
 
 /// The default shape the CI perf gate compares at: enough layers for the
 /// per-layer fan-out to occupy 4 workers, wide enough that each triplet
@@ -117,12 +127,69 @@ fn main() {
         );
     }
 
+    // --- fused ingest vs the PR3 reference path at the same shape ---
+    // The reference replays PR3 exactly: three allocated contribution
+    // matrices per layer per step (t_matmul -> scale_cols -> ema_blend)
+    // through the spawn-per-call scoped kernels.  Serial-vs-serial is
+    // the cleanest read on the tiling + fusion + zero-alloc win (no
+    // scheduler noise); the threaded pair adds the pool-vs-spawn win.
+    {
+        let mut proj_rng = Rng::new(42);
+        let proj = Projections::sample(
+            BENCH_NB,
+            BENCH_DIMS.len(),
+            BENCH_RANK,
+            &mut proj_rng,
+        );
+        for threads in [1usize, 4] {
+            let mut layers: Vec<SketchTriplet> = BENCH_DIMS
+                .iter()
+                .map(|&d| SketchTriplet::zeros(d, BENCH_RANK, 0.95))
+                .collect();
+            let suffix = if threads == 1 {
+                "serial".to_string()
+            } else {
+                format!("threads{threads}")
+            };
+            bench.run_bytes(
+                &format!("ingest_pr3_{suffix}"),
+                Some((1.0, "updates/s")),
+                Some(act_bytes),
+                || {
+                    for (l, t) in layers.iter_mut().enumerate() {
+                        let a_in = if l == 0 { &acts[1] } else { &acts[l] };
+                        t.update_scoped(a_in, &acts[l + 1], &proj, l, threads);
+                    }
+                },
+            );
+        }
+    }
+
+    // --- persistent-pool handoff vs spawn-per-call, same tiled math ---
+    // One EMA-shaped product per op: the gap between these two is the
+    // dispatch cost the pool amortises away (plus the PR3 scalar loop
+    // for the scoped side, which is why the gate only requires >= 1).
+    {
+        let a = Mat::gaussian(BENCH_NB, 512, &mut rng);
+        let b = Mat::gaussian(BENCH_NB, 2 * BENCH_RANK + 1, &mut rng);
+        let pool = Pool::with_lanes(4);
+        bench.run("t_matmul_pool4", Some((1.0, "ops/s")), || {
+            let _ = kernel::t_matmul(&a, &b, &pool);
+        });
+        bench.run("t_matmul_scoped4", Some((1.0, "ops/s")), || {
+            let _ = kernel::scoped::t_matmul(&a, &b, 4);
+        });
+    }
+
     let speedup = |a: &str, b: &str| {
         bench.result(a).unwrap().ns_per_op() / bench.result(b).unwrap().ns_per_op()
     };
     let ingest_2t = speedup("ingest_serial", "ingest_threads2");
     let ingest_4t = speedup("ingest_serial", "ingest_threads4");
     let recon_4t = speedup("reconstruct_serial", "reconstruct_threads4");
+    let fused_vs_pr3 = speedup("ingest_pr3_serial", "ingest_serial");
+    let fused_vs_pr3_4t = speedup("ingest_pr3_threads4", "ingest_threads4");
+    let pool_reuse = speedup("t_matmul_scoped4", "t_matmul_pool4");
     let divergence = max_parallel_divergence();
 
     // --- the original per-rank micro-benches ---
@@ -243,8 +310,10 @@ fn main() {
     bench.report("sketch substrate micro-benches (native rust)");
     println!(
         "\ningest speedup: 2t {ingest_2t:.2}x, 4t {ingest_4t:.2}x | \
-         reconstruct 4t {recon_4t:.2}x | parallel divergence {divergence:.2e} \
-         | loopback overhead {loopback_overhead:.2}x"
+         fused vs PR3 {fused_vs_pr3:.2}x (4t {fused_vs_pr3_4t:.2}x) | \
+         pool reuse {pool_reuse:.2}x | reconstruct 4t {recon_4t:.2}x | \
+         parallel divergence {divergence:.2e} | loopback overhead \
+         {loopback_overhead:.2}x"
     );
     bench
         .write_json(
@@ -254,6 +323,9 @@ fn main() {
                 ("ingest_speedup_2t", ingest_2t),
                 ("ingest_speedup_4t", ingest_4t),
                 ("reconstruct_speedup_4t", recon_4t),
+                ("fused_speedup_vs_pr3", fused_vs_pr3),
+                ("fused_speedup_vs_pr3_4t", fused_vs_pr3_4t),
+                ("pool_reuse_speedup", pool_reuse),
                 ("parallel_max_abs_diff", divergence),
                 ("loopback_overhead_x", loopback_overhead),
             ],

@@ -11,7 +11,9 @@ use anyhow::{bail, Result};
 use sketchgrad::coordinator::{open_runtime, Trainer};
 use sketchgrad::data::{make_chunks, synth_mnist, ActStream, Init};
 use sketchgrad::monitor::{step_metrics, MonitorConfig, MonitorHub};
-use sketchgrad::sketch::{Mat, Parallelism, SketchConfig, Sketcher};
+use sketchgrad::sketch::{
+    Mat, Parallelism, Pool, SketchConfig, SketchEngine, Sketcher,
+};
 use sketchgrad::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -82,8 +84,11 @@ fn native_probe() -> Result<()> {
         );
     }
 
-    // Hub fan-out: 8 tenants of synthetic streams, parallel diagnosis.
-    let mut hub = MonitorHub::with_parallelism(Parallelism::Threads(4));
+    // Hub fan-out: 8 tenants of synthetic streams sharing ONE persistent
+    // pool (the sketchd wiring — engines + hub diagnosis on the same
+    // parked threads), parallel diagnosis.
+    let pool = Pool::new(Parallelism::Threads(4));
+    let mut hub = MonitorHub::with_pool(pool.clone());
     let hub_dims = [64usize, 48, 32];
     for i in 0..8 {
         let id = hub.register(
@@ -94,11 +99,14 @@ fn native_probe() -> Result<()> {
             },
             hub_dims.len(),
         )?;
-        let mut engine = SketchConfig::builder()
-            .layer_dims(&hub_dims)
-            .rank(4)
-            .seed(i as u64)
-            .build_engine()?;
+        let mut engine = SketchEngine::with_pool(
+            SketchConfig::builder()
+                .layer_dims(&hub_dims)
+                .rank(4)
+                .seed(i as u64)
+                .build()?,
+            pool.clone(),
+        );
         let mut stream = ActStream::new(&hub_dims, i == 7, i as u64);
         for step in 0..40 {
             engine.ingest(&stream.next_batch(32))?;

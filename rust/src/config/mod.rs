@@ -11,9 +11,12 @@ use crate::sketch::SketchConfigBuilder;
 use crate::util::toml::Toml;
 
 /// Resolve a thread-count knob: `0` means "auto" and maps to the host's
-/// available parallelism (never a zero-worker pool); any other value is
+/// available parallelism (never a zero-lane pool); any other value is
 /// taken literally (1 = serial).  Both the TOML `threads = 0` and the CLI
-/// `--threads 0` spellings route through here.
+/// `--threads 0` spellings route through here.  The resolved count sizes
+/// a *persistent* `sketch::kernel::Pool` (`n - 1` parked workers plus
+/// the calling thread), created once per engine/hub — or once per
+/// process by `sketchd` — and reused for every kernel call.
 pub fn resolve_threads(n: usize) -> usize {
     if n == 0 {
         std::thread::available_parallelism()
@@ -60,10 +63,10 @@ pub struct ExperimentConfig {
     pub rank: usize,
     /// EMA decay for the sketch triplets (paper §4.1).
     pub beta: f64,
-    /// Kernel worker-pool width for the native sketch substrate (1 =
-    /// serial; `0` in TOML/CLI input is resolved to the host's available
-    /// parallelism by [`resolve_threads`] before it lands here).
-    /// Numerics are identical at any setting.
+    /// Persistent kernel worker-pool width for the native sketch
+    /// substrate (1 = serial; `0` in TOML/CLI input is resolved to the
+    /// host's available parallelism by [`resolve_threads`] before it
+    /// lands here).  Numerics are identical at any setting.
     pub threads: usize,
     pub adaptive: bool,
     pub adaptive_cfg: AdaptiveConfig,
@@ -195,7 +198,9 @@ pub struct ServeConfig {
     pub session_quota_bytes: usize,
     /// Durable snapshot file (written atomically via rename).
     pub snapshot_path: String,
-    /// Worker-pool width for daemon-side engine kernels (0 = auto).
+    /// Width of the daemon's single process-lifetime worker pool, shared
+    /// by every tenant engine and the hub's cross-tenant diagnosis
+    /// (0 = auto).
     pub threads: usize,
 }
 

@@ -11,10 +11,11 @@
 
 use std::collections::BTreeMap;
 use std::fmt;
+use std::sync::Arc;
 
 use crate::coordinator::StepMetrics;
 use crate::sketch::metrics::LayerMetrics;
-use crate::sketch::Parallelism;
+use crate::sketch::{Parallelism, Pool};
 
 use super::service::{
     Diagnosis, MonitorConfig, MonitorService, ServiceState,
@@ -145,13 +146,27 @@ pub struct HubReport {
 }
 
 /// The multiplexer: owns every session, routes observations by id.
-#[derive(Default)]
 pub struct MonitorHub {
     sessions: BTreeMap<SessionId, MonitorSession>,
     next_id: u64,
-    /// Worker pool for cross-tenant fan-out (diagnosis/aggregation).
-    /// Verdicts are identical to the serial path; only wall-clock changes.
+    /// Config-surface record of the requested fan-out width.
     parallelism: Parallelism,
+    /// Persistent worker pool for cross-tenant fan-out (diagnosis /
+    /// aggregation) — shared with the engines when the daemon wires
+    /// everything onto one process-lifetime pool.  Verdicts are
+    /// identical to the serial path; only wall-clock changes.
+    pool: Arc<Pool>,
+}
+
+impl Default for MonitorHub {
+    fn default() -> Self {
+        MonitorHub {
+            sessions: BTreeMap::new(),
+            next_id: 0,
+            parallelism: Parallelism::Serial,
+            pool: Arc::clone(Pool::serial()),
+        }
+    }
 }
 
 impl MonitorHub {
@@ -159,52 +174,60 @@ impl MonitorHub {
         Self::default()
     }
 
-    /// A hub whose per-session diagnosis work fans out across `par`.
+    /// A hub whose per-session diagnosis work fans out across `par`
+    /// (its own persistent pool).
     pub fn with_parallelism(par: Parallelism) -> Self {
         MonitorHub {
             parallelism: par,
+            pool: Pool::new(par),
+            ..Self::default()
+        }
+    }
+
+    /// A hub fanning out across an existing shared pool — the daemon
+    /// hands the same pool to the hub and every tenant engine.
+    pub fn with_pool(pool: Arc<Pool>) -> Self {
+        MonitorHub {
+            parallelism: Parallelism::from_threads(pool.lanes()),
+            pool,
             ..Self::default()
         }
     }
 
     pub fn set_parallelism(&mut self, par: Parallelism) {
         self.parallelism = par;
+        self.pool = Pool::new(par);
     }
 
     pub fn parallelism(&self) -> Parallelism {
         self.parallelism
     }
 
-    /// Map a read-only closure over every session, fanning contiguous
-    /// session stripes across the worker pool.  Results keep the
-    /// deterministic BTreeMap (registration-id) order regardless of
-    /// worker count.
+    /// The pool cross-tenant fan-out runs on.
+    pub fn pool(&self) -> &Arc<Pool> {
+        &self.pool
+    }
+
+    /// Map a read-only closure over every session, the indices claimed
+    /// across the pool's lanes.  Results keep the deterministic BTreeMap
+    /// (registration-id) order regardless of lane count.
     fn par_map<R, F>(&self, f: F) -> Vec<R>
     where
         R: Send,
         F: Fn(&MonitorSession) -> R + Sync,
     {
         let sessions: Vec<&MonitorSession> = self.sessions.values().collect();
-        let workers = self.parallelism.threads().min(sessions.len());
-        if workers <= 1 {
+        if !self.pool.is_parallel() || sessions.len() <= 1 {
             return sessions.into_iter().map(f).collect();
         }
-        let stripe = sessions.len().div_ceil(workers);
-        std::thread::scope(|s| {
-            let handles: Vec<_> = sessions
-                .chunks(stripe)
-                .map(|chunk| {
-                    let f = &f;
-                    s.spawn(move || {
-                        chunk.iter().map(|sess| f(sess)).collect::<Vec<R>>()
-                    })
-                })
-                .collect();
-            handles
-                .into_iter()
-                .flat_map(|h| h.join().expect("hub worker panicked"))
-                .collect()
-        })
+        let mut slots: Vec<Option<R>> =
+            (0..sessions.len()).map(|_| None).collect();
+        self.pool
+            .for_each_mut(&mut slots, |i, slot| *slot = Some(f(sessions[i])));
+        slots
+            .into_iter()
+            .map(|r| r.expect("pool fan-out filled every slot"))
+            .collect()
     }
 
     /// Admit a tenant; `n_layers` sizes its per-layer rolling stats.

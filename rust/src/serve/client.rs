@@ -19,10 +19,11 @@ use crate::data::ActStream;
 use crate::monitor::{step_metrics, MonitorHub, SessionId};
 use crate::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
 
+use super::codec::Enc;
 use super::daemon::recon_errors;
 use super::proto::{
-    monitor_config, read_frame, write_frame, ErrorCode, Request, Response,
-    SessionSpec, PROTO_VERSION,
+    self, monitor_config, read_frame_reusing, write_frame_reusing,
+    ErrorCode, Request, Response, SessionSpec, PROTO_VERSION,
 };
 
 /// Typed client-side failures.
@@ -88,9 +89,15 @@ pub struct DiagnoseReply {
     pub monitor_bytes: u64,
 }
 
-/// Blocking sketchd client over one TCP connection.
+/// Blocking sketchd client over one TCP connection.  Request encoding,
+/// frame assembly and response payloads all run through per-connection
+/// reusable buffers, so a monitored step's round trip allocates no
+/// fresh frame buffers in steady state.
 pub struct SketchClient {
     stream: TcpStream,
+    enc: Enc,
+    frame: Vec<u8>,
+    payload: Vec<u8>,
 }
 
 impl SketchClient {
@@ -103,7 +110,12 @@ impl SketchClient {
             match TcpStream::connect(addr) {
                 Ok(stream) => {
                     stream.set_nodelay(true)?;
-                    let mut client = SketchClient { stream };
+                    let mut client = SketchClient {
+                        stream,
+                        enc: Enc::new(),
+                        frame: Vec::new(),
+                        payload: Vec::new(),
+                    };
                     let info = client.hello()?;
                     return Ok((client, info));
                 }
@@ -120,15 +132,28 @@ impl SketchClient {
     }
 
     fn round_trip(&mut self, req: &Request) -> Result<Response, ServeError> {
-        write_frame(&mut self.stream, req.msg_type(), &req.encode())?;
-        let (header, payload) = read_frame(&mut self.stream)?;
+        self.enc.reset();
+        req.encode_into(&mut self.enc);
+        self.send_encoded(req.msg_type())
+    }
+
+    /// Send whatever is in `self.enc` as a `msg` frame and read the
+    /// response, mapping `Busy`/`Error` to typed failures.
+    fn send_encoded(&mut self, msg: u8) -> Result<Response, ServeError> {
+        write_frame_reusing(
+            &mut self.stream,
+            msg,
+            self.enc.bytes(),
+            &mut self.frame,
+        )?;
+        let header = read_frame_reusing(&mut self.stream, &mut self.payload)?;
         if header.version != PROTO_VERSION {
             return Err(ServeError::Protocol(format!(
                 "response frame version {} (expected {PROTO_VERSION})",
                 header.version
             )));
         }
-        let resp = Response::decode(header.msg, &payload)
+        let resp = Response::decode(header.msg, &self.payload)
             .map_err(|e| ServeError::Protocol(e.to_string()))?;
         match resp {
             Response::Busy { used, limit } => {
@@ -171,7 +196,10 @@ impl SketchClient {
         }
     }
 
-    /// One monitored training step (see [`Request::Ingest`]).
+    /// One monitored training step (see [`Request::Ingest`]).  The
+    /// activations are encoded straight from the borrowed slice into
+    /// the connection's reusable buffer — no clone, no per-step frame
+    /// allocation.
     pub fn ingest(
         &mut self,
         session: u64,
@@ -179,12 +207,9 @@ impl SketchClient {
         acts: &[Mat],
         want_recon: bool,
     ) -> Result<IngestReply, ServeError> {
-        match self.round_trip(&Request::Ingest {
-            session,
-            loss,
-            want_recon,
-            acts: acts.to_vec(),
-        })? {
+        self.enc.reset();
+        proto::enc_ingest(&mut self.enc, session, loss, want_recon, acts);
+        match self.send_encoded(proto::msg::INGEST)? {
             Response::IngestOk {
                 batches,
                 engine_bytes,

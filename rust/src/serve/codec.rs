@@ -66,6 +66,19 @@ impl Enc {
         self.buf
     }
 
+    /// Clear for reuse, keeping the grown capacity — long-lived
+    /// connections encode every frame through one `Enc` without
+    /// reallocating in steady state.
+    pub fn reset(&mut self) {
+        self.buf.clear();
+    }
+
+    /// The encoded bytes so far (borrowed; see [`Enc::into_bytes`] for
+    /// the owning form).
+    pub fn bytes(&self) -> &[u8] {
+        &self.buf
+    }
+
     pub fn len(&self) -> usize {
         self.buf.len()
     }

@@ -30,9 +30,12 @@ use anyhow::{Context, Result};
 
 use crate::config::{resolve_threads, ServeConfig};
 use crate::monitor::{step_metrics, HubError, MonitorHub, SessionId};
-use crate::sketch::{Mat, Parallelism, SketchConfig, SketchEngine, Sketcher};
+use crate::sketch::{
+    Mat, Parallelism, Pool, SketchConfig, SketchEngine, Sketcher,
+};
 use crate::util::cli::Args;
 
+use super::codec::Enc;
 use super::proto::{
     self, monitor_config, ErrorCode, FrameHeader, Request, Response,
     FRAME_HEADER_LEN, PROTO_VERSION,
@@ -53,8 +56,12 @@ struct State {
 
 struct Shared {
     cfg: ServeConfig,
-    /// Engine worker pool, resolved once at bind time.
+    /// Requested kernel fan-out width, resolved once at bind time.
     par: Parallelism,
+    /// The process-lifetime worker pool: every tenant engine and the
+    /// hub's cross-tenant diagnosis fan out over these same parked
+    /// threads, so per-request kernel work never pays a thread spawn.
+    pool: Arc<Pool>,
     store: SnapshotStore,
     state: Mutex<State>,
     shutdown: AtomicBool,
@@ -164,20 +171,23 @@ fn handle_request(
                     limit: shared.cfg.max_sessions as u64,
                 };
             }
+            if spec.window == 0 {
+                return invalid("window must be > 0".into());
+            }
             let engine = match SketchConfig::builder()
                 .layer_dims(&spec.layer_dims)
                 .rank(spec.rank)
                 .beta(spec.beta)
                 .seed(spec.seed)
                 .parallelism(shared.par)
-                .build_engine()
+                .build()
             {
-                Ok(e) => e,
+                // All tenants share the daemon's process-lifetime pool.
+                Ok(cfg) => {
+                    SketchEngine::with_pool(cfg, Arc::clone(&shared.pool))
+                }
                 Err(e) => return invalid(format!("bad session spec: {e}")),
             };
-            if spec.window == 0 {
-                return invalid("window must be > 0".into());
-            }
             let id = match st.hub.register(
                 &spec.name,
                 monitor_config(&spec),
@@ -319,13 +329,15 @@ fn handle_request(
     }
 }
 
-/// Read one frame tolerating idle read timeouts: a timeout before any
-/// header byte just polls the shutdown flag; a timeout mid-frame keeps
-/// reading (the client is mid-send).  `Ok(None)` = clean EOF/shutdown.
+/// Read one frame into the connection's reusable `payload` buffer,
+/// tolerating idle read timeouts: a timeout before any header byte just
+/// polls the shutdown flag; a timeout mid-frame keeps reading (the
+/// client is mid-send).  `Ok(None)` = clean EOF/shutdown.
 fn read_frame_idle(
     stream: &mut TcpStream,
     shutdown: &AtomicBool,
-) -> Result<Option<(FrameHeader, Vec<u8>)>> {
+    payload: &mut Vec<u8>,
+) -> Result<Option<FrameHeader>> {
     let mut hdr = [0u8; FRAME_HEADER_LEN];
     let mut got = 0usize;
     while got < hdr.len() {
@@ -351,7 +363,8 @@ fn read_frame_idle(
         }
     }
     let header = FrameHeader::parse(&hdr)?;
-    let mut payload = vec![0u8; header.len as usize];
+    payload.clear();
+    payload.resize(header.len as usize, 0);
     let mut got = 0usize;
     while got < payload.len() {
         if shutdown.load(Ordering::SeqCst) {
@@ -370,18 +383,28 @@ fn read_frame_idle(
             Err(e) => return Err(e.into()),
         }
     }
-    Ok(Some((header, payload)))
+    Ok(Some(header))
 }
 
 fn handle_conn(mut stream: TcpStream, shared: &Shared) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    // Per-connection reusable buffers: request payloads land in
+    // `payload`, responses are encoded into `enc` and framed through
+    // `frame`, so a long-lived client's steady-state traffic allocates
+    // no fresh buffers per frame.
+    let mut payload = Vec::new();
+    let mut enc = Enc::new();
+    let mut frame = Vec::new();
     loop {
-        let (header, payload) =
-            match read_frame_idle(&mut stream, &shared.shutdown) {
-                Ok(Some(f)) => f,
-                Ok(None) | Err(_) => return,
-            };
+        let header = match read_frame_idle(
+            &mut stream,
+            &shared.shutdown,
+            &mut payload,
+        ) {
+            Ok(Some(h)) => h,
+            Ok(None) | Err(_) => return,
+        };
         let resp = if header.version != PROTO_VERSION {
             Response::Error {
                 code: ErrorCode::UnsupportedVersion,
@@ -406,8 +429,15 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
                 ..
             }
         );
-        if proto::write_frame(&mut stream, resp.msg_type(), &resp.encode())
-            .is_err()
+        enc.reset();
+        resp.encode_into(&mut enc);
+        if proto::write_frame_reusing(
+            &mut stream,
+            resp.msg_type(),
+            enc.bytes(),
+            &mut frame,
+        )
+        .is_err()
             || fatal
         {
             return;
@@ -435,11 +465,12 @@ impl Daemon {
             .with_context(|| format!("binding {}", cfg.addr))?;
         listener.set_nonblocking(true)?;
         let store = SnapshotStore::new(cfg.snapshot_path.clone());
+        let par = Parallelism::from_threads(resolve_threads(cfg.threads));
+        let pool = Pool::new(par);
         let mut state = State {
-            hub: MonitorHub::new(),
+            hub: MonitorHub::with_pool(Arc::clone(&pool)),
             tenants: BTreeMap::new(),
         };
-        let par = Parallelism::from_threads(resolve_threads(cfg.threads));
         if let Some(snap) = store
             .load()
             .with_context(|| format!("loading snapshot {}", cfg.snapshot_path))?
@@ -449,7 +480,10 @@ impl Daemon {
                 state.tenants.insert(
                     rec.session.id,
                     Tenant {
-                        engine: SketchEngine::from_snapshot(&rec.engine, par)?,
+                        engine: SketchEngine::from_snapshot_with_pool(
+                            &rec.engine,
+                            Arc::clone(&pool),
+                        )?,
                         quota_used: rec.quota_used,
                     },
                 );
@@ -460,6 +494,7 @@ impl Daemon {
             shared: Arc::new(Shared {
                 cfg,
                 par,
+                pool,
                 store,
                 state: Mutex::new(state),
                 shutdown: AtomicBool::new(false),

@@ -160,18 +160,44 @@ pub fn write_frame(
     write_frame_versioned(w, PROTO_VERSION, msg, payload)
 }
 
+/// [`write_frame`] assembling into the caller's reusable `frame` buffer
+/// (cleared first, capacity kept) — the steady-state daemon/client path,
+/// which allocates nothing per frame once the buffer has grown.
+pub fn write_frame_reusing(
+    w: &mut impl Write,
+    msg: u8,
+    payload: &[u8],
+    frame: &mut Vec<u8>,
+) -> std::io::Result<()> {
+    write_frame_versioned_reusing(w, PROTO_VERSION, msg, payload, frame)
+}
+
 /// [`write_frame`] with an explicit version — used by the
 /// version-negotiation tests to craft mismatched frames.
-///
-/// Rejects payloads over [`MAX_FRAME_LEN`] *before* sending: the peer
-/// would drop the connection at the header (it cannot trust the
-/// framing), which surfaces as an opaque reset mid-write — and a
-/// payload over `u32::MAX` would silently wrap the length field.
 pub fn write_frame_versioned(
     w: &mut impl Write,
     version: u16,
     msg: u8,
     payload: &[u8],
+) -> std::io::Result<()> {
+    let mut frame = Vec::new();
+    write_frame_versioned_reusing(w, version, msg, payload, &mut frame)
+}
+
+/// The general frame writer behind every `write_frame*` form: header +
+/// payload assembled in `frame` (one `write_all`, one syscall with
+/// nodelay).
+///
+/// Rejects payloads over [`MAX_FRAME_LEN`] *before* sending: the peer
+/// would drop the connection at the header (it cannot trust the
+/// framing), which surfaces as an opaque reset mid-write — and a
+/// payload over `u32::MAX` would silently wrap the length field.
+pub fn write_frame_versioned_reusing(
+    w: &mut impl Write,
+    version: u16,
+    msg: u8,
+    payload: &[u8],
+    frame: &mut Vec<u8>,
 ) -> std::io::Result<()> {
     if payload.len() > MAX_FRAME_LEN as usize {
         return Err(std::io::Error::new(
@@ -184,15 +210,15 @@ pub fn write_frame_versioned(
             ),
         ));
     }
-    let mut buf =
-        Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
-    buf.extend_from_slice(&FrameHeader::encode(
+    frame.clear();
+    frame.reserve(FRAME_HEADER_LEN + payload.len());
+    frame.extend_from_slice(&FrameHeader::encode(
         version,
         msg,
         payload.len() as u32,
     ));
-    buf.extend_from_slice(payload);
-    w.write_all(&buf)
+    frame.extend_from_slice(payload);
+    w.write_all(frame)
 }
 
 /// Blocking frame read (client side; the server uses its own
@@ -200,14 +226,26 @@ pub fn write_frame_versioned(
 pub fn read_frame(
     r: &mut impl Read,
 ) -> std::io::Result<(FrameHeader, Vec<u8>)> {
+    let mut payload = Vec::new();
+    let header = read_frame_reusing(r, &mut payload)?;
+    Ok((header, payload))
+}
+
+/// [`read_frame`] into the caller's reusable payload buffer (cleared
+/// first, capacity kept) — no per-frame allocation in steady state.
+pub fn read_frame_reusing(
+    r: &mut impl Read,
+    payload: &mut Vec<u8>,
+) -> std::io::Result<FrameHeader> {
     let mut h = [0u8; FRAME_HEADER_LEN];
     r.read_exact(&mut h)?;
     let header = FrameHeader::parse(&h).map_err(|e| {
         std::io::Error::new(std::io::ErrorKind::InvalidData, e.to_string())
     })?;
-    let mut payload = vec![0u8; header.len as usize];
-    r.read_exact(&mut payload)?;
-    Ok((header, payload))
+    payload.clear();
+    payload.resize(header.len as usize, 0);
+    r.read_exact(payload)?;
+    Ok(header)
 }
 
 /// Parameters a client supplies to open a monitored session.
@@ -282,6 +320,12 @@ impl Request {
 
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Enc::new();
+        self.encode_into(&mut e);
+        e.into_bytes()
+    }
+
+    /// Encode into a caller-owned (reusable) encoder.
+    pub fn encode_into(&self, e: &mut Enc) {
         match self {
             Request::Hello { client } => e.str(client),
             Request::OpenSession(spec) => {
@@ -298,25 +342,16 @@ impl Request {
                 loss,
                 want_recon,
                 acts,
-            } => {
-                e.u64(*session);
-                e.f32(*loss);
-                e.bool(*want_recon);
-                e.len32(acts.len());
-                for a in acts {
-                    e.mat(a);
-                }
-            }
+            } => enc_ingest(e, *session, *loss, *want_recon, acts),
             Request::Observe { session, metrics } => {
                 e.u64(*session);
-                enc_step_metrics(&mut e, metrics);
+                enc_step_metrics(e, metrics);
             }
             Request::Diagnose { session } | Request::Close { session } => {
                 e.u64(*session)
             }
             Request::Snapshot | Request::Shutdown => {}
         }
-        e.into_bytes()
     }
 
     pub fn decode(msg_type: u8, payload: &[u8]) -> Result<Request, CodecError> {
@@ -424,6 +459,12 @@ impl Response {
 
     pub fn encode(&self) -> Vec<u8> {
         let mut e = Enc::new();
+        self.encode_into(&mut e);
+        e.into_bytes()
+    }
+
+    /// Encode into a caller-owned (reusable) encoder.
+    pub fn encode_into(&self, e: &mut Enc) {
         match self {
             Response::HelloOk {
                 server,
@@ -454,7 +495,7 @@ impl Response {
                 engine_bytes,
                 monitor_bytes,
             } => {
-                enc_diagnosis(&mut e, diagnosis);
+                enc_diagnosis(e, diagnosis);
                 e.bool(*healthy);
                 e.u64(*steps_seen);
                 e.u64(*engine_bytes);
@@ -480,7 +521,6 @@ impl Response {
             }
             Response::ShutdownOk { sessions } => e.u64(*sessions),
         }
-        e.into_bytes()
     }
 
     pub fn decode(
@@ -539,6 +579,26 @@ impl Response {
         };
         d.finish()?;
         Ok(resp)
+    }
+}
+
+/// Encode an `Ingest` request payload straight from borrowed
+/// activations — the client's hot path uses this (through its reusable
+/// encoder) so a monitored step never clones the activation matrices
+/// just to build the frame.
+pub fn enc_ingest(
+    e: &mut Enc,
+    session: u64,
+    loss: f32,
+    want_recon: bool,
+    acts: &[Mat],
+) {
+    e.u64(session);
+    e.f32(loss);
+    e.bool(want_recon);
+    e.len32(acts.len());
+    for a in acts {
+        e.mat(a);
     }
 }
 

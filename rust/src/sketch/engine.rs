@@ -28,7 +28,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::util::rng::Rng;
 
-use super::kernel::Parallelism;
+use super::kernel::{Parallelism, Pool};
 use super::matrix::Mat;
 use super::metrics::{all_metrics, LayerMetrics};
 use super::reconstruct::reconstruct_batch_with;
@@ -239,6 +239,42 @@ impl SketchConfigBuilder {
     }
 }
 
+/// Reusable per-engine execution workspace: the persistent worker-pool
+/// handle every fused ingest/reconstruct kernel runs on.
+///
+/// The pool is the *only* resource here by design: the fused EMA kernels
+/// ([`super::kernel::t_matmul_ema`]) accumulate contributions in
+/// registers and write straight into the resident X/Y/Z sketches, so
+/// steady-state ingest needs no scratch buffers at all — and therefore
+/// performs **zero heap allocations** (pinned by the counting-allocator
+/// test).  For the memory accountant the workspace contributes 0 bytes:
+/// pool threads are execution resources, not sketch state.
+///
+/// Cloning shares the pool (an `Arc`); [`Workspace::shared`] is how
+/// `sketchd` hands one process-lifetime pool to every tenant engine.
+#[derive(Clone, Debug)]
+pub struct Workspace {
+    pool: Arc<Pool>,
+}
+
+impl Workspace {
+    /// Workspace with its own pool sized by the config knob.
+    pub fn new(par: Parallelism) -> Workspace {
+        Workspace {
+            pool: Pool::new(par),
+        }
+    }
+
+    /// Workspace over an existing shared pool.
+    pub fn shared(pool: Arc<Pool>) -> Workspace {
+        Workspace { pool }
+    }
+
+    pub fn pool(&self) -> &Arc<Pool> {
+        &self.pool
+    }
+}
+
 /// Plain-data image of one triplet's EMA state ([`EngineSnapshot`]).
 #[derive(Clone, Debug)]
 pub struct TripletState {
@@ -310,21 +346,49 @@ pub struct SketchEngine {
     psi: Arc<Vec<Vec<f64>>>,
     /// Batch projections keyed by observed batch size.
     proj: BTreeMap<usize, Projections>,
+    /// Persistent worker-pool handle for the fused kernels; cloning an
+    /// engine shares the pool.
+    ws: Workspace,
     last_batch: Option<usize>,
     batches_ingested: u64,
 }
 
 impl SketchEngine {
     pub fn new(cfg: SketchConfig) -> Self {
+        let ws = Workspace::new(cfg.parallelism);
+        Self::with_workspace(cfg, ws)
+    }
+
+    /// Engine over a shared worker pool — how `sketchd` multiplexes many
+    /// tenant engines onto one process-lifetime pool.  The pool wins
+    /// over `cfg.parallelism` (which remains the config-surface record
+    /// of the requested width).
+    pub fn with_pool(cfg: SketchConfig, pool: Arc<Pool>) -> Self {
+        Self::with_workspace(cfg, Workspace::shared(pool))
+    }
+
+    fn with_workspace(cfg: SketchConfig, ws: Workspace) -> Self {
         let (layers, psi) = Self::fresh_state(&cfg);
         SketchEngine {
             cfg,
             layers,
             psi,
             proj: BTreeMap::new(),
+            ws,
             last_batch: None,
             batches_ingested: 0,
         }
+    }
+
+    /// The engine's execution workspace (worker-pool handle).
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
+    }
+
+    /// The worker pool ingest/reconstruct kernels run on — share it
+    /// (`Arc::clone`) to run several engines on one set of threads.
+    pub fn pool(&self) -> &Arc<Pool> {
+        self.ws.pool()
     }
 
     fn fresh_state(
@@ -436,6 +500,25 @@ impl SketchEngine {
         snap: &EngineSnapshot,
         par: Parallelism,
     ) -> Result<SketchEngine> {
+        Self::from_snapshot_ws(snap, par, Workspace::new(par))
+    }
+
+    /// [`SketchEngine::from_snapshot`] restoring onto a shared worker
+    /// pool (the daemon's warm-restart path: every resumed tenant lands
+    /// on the one process-lifetime pool).
+    pub fn from_snapshot_with_pool(
+        snap: &EngineSnapshot,
+        pool: Arc<Pool>,
+    ) -> Result<SketchEngine> {
+        let par = Parallelism::from_threads(pool.lanes());
+        Self::from_snapshot_ws(snap, par, Workspace::shared(pool))
+    }
+
+    fn from_snapshot_ws(
+        snap: &EngineSnapshot,
+        par: Parallelism,
+        ws: Workspace,
+    ) -> Result<SketchEngine> {
         let cfg = SketchConfig::builder()
             .layer_dims(&snap.layer_dims)
             .rank(snap.rank)
@@ -470,7 +553,7 @@ impl SketchEngine {
                 );
             }
         }
-        let mut engine = SketchEngine::new(cfg);
+        let mut engine = SketchEngine::with_workspace(cfg, ws);
         for (layer, t) in engine.layers.iter_mut().zip(&snap.triplets) {
             layer.x = t.x.clone();
             layer.y = t.y.clone();
@@ -537,46 +620,30 @@ impl Sketcher for SketchEngine {
             }
         }
         self.ensure_projections(n_b);
+        // Steady state (a previously seen batch size) from here on is
+        // allocation-free: the fused kernels write into the resident
+        // sketches through the workspace pool, and the layer fan-out
+        // below claims indices straight off the activation list — no
+        // job vector, no contribution temporaries, no thread spawns.
         let proj = &self.proj[&n_b];
-        let par = self.cfg.parallelism;
-        // (layer, incoming activation, outgoing activation) per triplet.
-        let jobs: Vec<(usize, &Mat, &Mat)> = (1..acts.len())
-            .map(|j| {
-                let a_in = if j >= 2 { &acts[j - 1] } else { &acts[1] };
-                (j - 1, a_in, &acts[j])
-            })
-            .collect();
-        let workers = par.threads().min(jobs.len());
-        if workers > 1 && par.threads() <= jobs.len() {
-            // At least one layer per worker: fan whole layers out across
+        let pool = self.ws.pool();
+        let lanes = pool.lanes();
+        // Incoming activation for layer l: layer 0 sketches its own
+        // output as input (the seed convention for A^[1]).
+        let a_in = |l: usize| if l == 0 { &acts[1] } else { &acts[l] };
+        if lanes > 1 && lanes <= self.layers.len() {
+            // At least one layer per lane: fan whole layers out across
             // the pool; each triplet update is independent (own X/Y/Z,
-            // shared read-only projections).
-            let stripe = jobs.len().div_ceil(workers);
-            std::thread::scope(|s| {
-                for (layers, jobs) in
-                    self.layers.chunks_mut(stripe).zip(jobs.chunks(stripe))
-                {
-                    s.spawn(move || {
-                        for (t, (l, a_in, a_out)) in
-                            layers.iter_mut().zip(jobs)
-                        {
-                            t.update_with(
-                                a_in,
-                                a_out,
-                                proj,
-                                *l,
-                                Parallelism::Serial,
-                            );
-                        }
-                    });
-                }
+            // shared read-only projections) and runs serial kernels.
+            pool.for_each_mut(&mut self.layers, |l, t| {
+                t.update_with(a_in(l), &acts[l + 1], proj, l, Pool::serial());
             });
         } else {
-            // Serial config, or fewer layers than workers (the per-layer
+            // Serial config, or fewer layers than lanes (the per-layer
             // seam can't fill the pool): run layers sequentially and fan
-            // each projection product across the full pool instead.
-            for (t, (l, a_in, a_out)) in self.layers.iter_mut().zip(&jobs) {
-                t.update_with(a_in, a_out, proj, *l, par);
+            // each fused projection product across the full pool instead.
+            for (l, t) in self.layers.iter_mut().enumerate() {
+                t.update_with(a_in(l), &acts[l + 1], proj, l, pool);
             }
         }
         self.last_batch = Some(n_b);
@@ -598,7 +665,7 @@ impl Sketcher for SketchEngine {
         Ok(reconstruct_batch_with(
             &self.layers[layer],
             &proj.omega,
-            self.cfg.parallelism,
+            self.ws.pool(),
         ))
     }
 

@@ -1,39 +1,80 @@
-//! Cache-blocked, thread-parallel matmul kernels — the ingest hot path.
+//! Register-tiled, pool-parallel matmul kernels — the ingest hot path.
 //!
 //! Every sketch update is one of three product shapes: `A @ B` (matmul),
 //! `A^T @ B` (t_matmul, the EMA projection `A^T Upsilon`) and `A @ B^T`
-//! (matmul_t, the reconstruction's `... Q_X^T`).  All three run through
-//! the same scheme here:
+//! (matmul_t, the reconstruction's `... Q_X^T`), plus the fused in-place
+//! EMA forms [`t_matmul_ema`]/[`t_matmul_ema_scaled`] that write straight
+//! into the resident sketches.  All of them run through the same scheme:
 //!
-//! * **Blocking** — the shared `k` dimension is tiled (`BLOCK_K` rows of
-//!   the B panel) so the panel stays hot in cache while a stripe of output
-//!   rows streams through it.
-//! * **Worker fan-out** — output rows are split into contiguous stripes,
-//!   one per worker, executed on scoped `std::thread`s (rayon is not in
-//!   the dependency closure).  Spawn cost is a few tens of µs, amortised
-//!   over millisecond-scale products; sub-threshold shapes
-//!   (`PAR_MIN_FLOPS`) short-circuit to the serial path.
+//! * **Register tiling** — inner loops produce 4-row x 4-column output
+//!   tiles with explicit accumulators, so each element's sum runs in a
+//!   register FMA chain (16 independent chains per tile) instead of a
+//!   read-modify-write against memory per `k` step.  Unrolling is over
+//!   the output coordinates `i`/`j` only; the shared dimension `k` is
+//!   walked in full, in ascending order, per element.  The shared-`k`
+//!   working band of a tile (4 columns of each operand) is a few KiB for
+//!   every shape this substrate runs (`k` is bounded by `max(n_b, 3k)`),
+//!   so the band stays L1-resident without an explicit cache block — the
+//!   PR3-era `BLOCK_K` panel tiling is retired with it (it survives only
+//!   in [`scoped`], the PR3 reference path).
+//! * **Persistent worker pool** — output rows are split into contiguous
+//!   stripes claimed from a shared [`Pool`] of long-lived parked worker
+//!   threads (rayon is not in the dependency closure).  The pool replaces
+//!   the PR3 `std::thread::scope` spawn-per-call fan-out: a handoff is a
+//!   condvar wake (~1-2 µs) instead of ~30 µs/worker of spawn, which is
+//!   why [`PAR_MIN_FLOPS`] dropped 8x — MNIST-scale per-layer products
+//!   now clear the threshold and parallelise.
+//!
+//! # Pool handoff protocol
+//!
+//! A [`Pool`] owns `lanes - 1` parked workers; the calling thread is the
+//! remaining lane.  [`Pool::run`]`(n, f)` posts one job under the pool
+//! mutex — a raw pointer to the caller's closure, a shared atomic task
+//! counter and the task count — bumps a job sequence number and wakes
+//! every worker.  Workers and the caller then claim task indices with
+//! `fetch_add` until the counter passes `n`; each worker decrements the
+//! job's `active` count when the counter is drained, and the last one
+//! records the completed sequence number and wakes the caller.  `run`
+//! returns only once its own sequence number is marked done, which is
+//! what makes the borrowed-closure handoff sound: no worker can touch the
+//! job pointers after `active` hits zero.  The whole protocol is two
+//! mutex/condvar round-trips and **zero heap allocations** per call —
+//! the property the zero-allocation ingest test pins down.  Posting is
+//! serialised (a second caller parks until the previous job drains), and
+//! a `run` issued *from* a pool worker executes inline on that worker
+//! (nesting the protocol would self-deadlock).  Panics are contained:
+//! workers catch a task panic (staying alive and still decrementing
+//! `active`) and re-raise it on the posting thread once the job drains,
+//! while a panic in the *caller's* own task unwinds through a guard
+//! that waits for the workers first — the erased borrows never dangle
+//! and the pool never wedges.
 //!
 //! **Determinism contract:** every output element is accumulated in
-//! ascending-`k` order regardless of blocking or worker count, so the
-//! parallel kernels are *bitwise identical* to the serial ones.  The
-//! Lemma-4.1 property tests (and the parallel-vs-serial ingest tests)
-//! rely on this: `Parallelism` is a throughput knob, never a numerics
-//! knob.
+//! ascending-`k` order from `0.0` regardless of tiling or lane count, so
+//! the pool kernels are *bitwise identical* to the serial ones — and to
+//! the PR3 [`scoped`] reference on any input free of exact zeros and
+//! non-finite values (the PR3 kernels skipped `a_ik == 0.0` terms, a
+//! branch that pessimised the dense case and is dropped here).  The
+//! Lemma-4.1 property tests and the parallel-vs-serial ingest tests rely
+//! on this: `Parallelism` is a throughput knob, never a numerics knob.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, OnceLock};
+use std::thread;
 
 use super::matrix::Mat;
 
-/// B-panel tile height (f64 elements): 64 rows x up to ~512 columns keeps
-/// the panel within a typical 256 KiB L2 slice alongside the output stripe.
-const BLOCK_K: usize = 64;
-
-/// Madds below which threading overhead exceeds the win; measured spawn
-/// cost is ~30 µs/worker vs ~1 madd/ns serial throughput.
-const PAR_MIN_FLOPS: usize = 64 * 1024;
+/// Madds below which the pool handoff overhead exceeds the win.  The
+/// PR3 spawn-per-call threshold was `64 * 1024` (~30 µs/worker spawn vs
+/// ~1 madd/ns serial throughput); a parked-pool handoff is a condvar
+/// wake (~1-2 µs), so the break-even shrinks 8x and MNIST-scale layer
+/// products (e.g. 128x128 @ 128x9 ≈ 147k madds) now parallelise.
+const PAR_MIN_FLOPS: usize = 8 * 1024;
 
 /// Worker-pool width for the sketch substrate.  `Serial` is the default
-/// and the reference semantics; `Threads(n)` fans work across `n` scoped
-/// workers.  Results are bitwise identical either way (see module docs).
+/// and the reference semantics; `Threads(n)` resolves to a persistent
+/// [`Pool`] of `n` lanes.  Results are bitwise identical either way (see
+/// module docs).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub enum Parallelism {
     #[default]
@@ -73,123 +114,823 @@ impl std::fmt::Display for Parallelism {
     }
 }
 
-/// Split `out`'s rows into one contiguous stripe per worker and run
+// ---------------------------------------------------------------------
+// Persistent worker pool
+// ---------------------------------------------------------------------
+
+/// One posted job: a type-erased pointer to the caller's task closure
+/// plus the shared claim counter.  The pointers borrow the caller's
+/// stack; [`Pool::run`] blocks until the job is drained, which bounds
+/// their lifetime (see the module-level protocol docs).
+#[derive(Clone, Copy)]
+struct Job {
+    f: *const (dyn Fn(usize) + Sync),
+    next: *const AtomicUsize,
+    total: usize,
+}
+
+// Safety: the raw pointers are only dereferenced between job posting and
+// the final `active` decrement, a window during which `Pool::run` keeps
+// the referents alive on the posting thread's stack.
+unsafe impl Send for Job {}
+
+struct PoolState {
+    /// Monotonic id of the most recently posted job.
+    seq: u64,
+    /// Id of the most recently *completed* job.
+    done_seq: u64,
+    /// Workers still draining the current job.
+    active: usize,
+    job: Option<Job>,
+    /// A worker task of the current job panicked (caught; re-raised on
+    /// the posting thread once the job drains).
+    panicked: bool,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Workers park here waiting for `seq` to advance.
+    work_cv: Condvar,
+    /// Posters park here waiting for `done_seq` (or for `active == 0`
+    /// before posting).
+    done_cv: Condvar,
+}
+
+fn lock_state(shared: &PoolShared) -> MutexGuard<'_, PoolState> {
+    // A poisoned lock means a kernel body panicked on some thread; the
+    // counters themselves are plain integers and stay usable.
+    shared.state.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+thread_local! {
+    /// Set for the lifetime of a pool worker thread: a nested `run`
+    /// issued from inside a task executes inline instead of deadlocking
+    /// on the single-job handoff slot.
+    static IN_POOL_WORKER: std::cell::Cell<bool> = std::cell::Cell::new(false);
+}
+
+fn worker_loop(shared: Arc<PoolShared>) {
+    IN_POOL_WORKER.with(|flag| flag.set(true));
+    let mut last_seq = 0u64;
+    loop {
+        let (job, seq) = {
+            let mut st = lock_state(&shared);
+            loop {
+                if st.shutdown {
+                    return;
+                }
+                if st.seq != last_seq {
+                    last_seq = st.seq;
+                    break (st.job.expect("posted job present"), st.seq);
+                }
+                st = shared
+                    .work_cv
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+        };
+        // Safety: `Pool::run` keeps the closure and counter alive until
+        // this job's `done_seq` is recorded below.
+        let f = unsafe { &*job.f };
+        let next = unsafe { &*job.next };
+        // Catch task panics so the worker always decrements `active`
+        // (a missing decrement would wedge every future job) and stays
+        // alive for the next job; the panic is re-raised on the posting
+        // thread via the `panicked` flag.
+        let outcome =
+            std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= job.total {
+                    break;
+                }
+                f(i);
+            }));
+        let mut st = lock_state(&shared);
+        if outcome.is_err() {
+            st.panicked = true;
+        }
+        st.active -= 1;
+        if st.active == 0 {
+            st.done_seq = seq;
+            st.job = None;
+            shared.done_cv.notify_all();
+        }
+    }
+}
+
+/// Persistent worker pool: `lanes - 1` long-lived parked threads plus
+/// the calling thread.  Created once (per engine, or shared process-wide
+/// by the daemon) and reused for every kernel call — see the module docs
+/// for the handoff protocol and its zero-allocation guarantee.
+pub struct Pool {
+    shared: Arc<PoolShared>,
+    handles: Vec<thread::JoinHandle<()>>,
+    lanes: usize,
+}
+
+impl std::fmt::Debug for Pool {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "Pool({} lanes)", self.lanes)
+    }
+}
+
+impl Pool {
+    /// Pool sized by the config knob: `Serial` -> 1 lane (no threads
+    /// spawned), `Threads(n)` -> `n` lanes (`n - 1` parked workers).
+    pub fn new(par: Parallelism) -> Arc<Pool> {
+        Pool::with_lanes(par.threads())
+    }
+
+    /// Pool with an explicit lane count (>= 1; the caller is a lane).
+    pub fn with_lanes(lanes: usize) -> Arc<Pool> {
+        let lanes = lanes.max(1);
+        let shared = Arc::new(PoolShared {
+            state: Mutex::new(PoolState {
+                seq: 0,
+                done_seq: 0,
+                active: 0,
+                job: None,
+                panicked: false,
+                shutdown: false,
+            }),
+            work_cv: Condvar::new(),
+            done_cv: Condvar::new(),
+        });
+        let handles = (1..lanes)
+            .map(|_| {
+                let shared = Arc::clone(&shared);
+                thread::Builder::new()
+                    .name("sketch-pool".into())
+                    .spawn(move || worker_loop(shared))
+                    .expect("spawn pool worker")
+            })
+            .collect();
+        Arc::new(Pool {
+            shared,
+            handles,
+            lanes,
+        })
+    }
+
+    /// The shared single-lane pool — the serial path.  `run` on it is a
+    /// plain inline loop; no threads are ever spawned.
+    pub fn serial() -> &'static Arc<Pool> {
+        static SERIAL: OnceLock<Arc<Pool>> = OnceLock::new();
+        SERIAL.get_or_init(|| Pool::with_lanes(1))
+    }
+
+    /// Parallel lanes available, counting the caller (>= 1).
+    pub fn lanes(&self) -> usize {
+        self.lanes
+    }
+
+    pub fn is_parallel(&self) -> bool {
+        self.lanes > 1
+    }
+
+    /// Run `f(0), f(1), ..., f(total - 1)` across the pool's lanes, each
+    /// index claimed exactly once, returning after all have finished.
+    /// Allocation-free; see the module docs for the handoff protocol.
+    pub fn run(&self, total: usize, f: &(dyn Fn(usize) + Sync)) {
+        if total == 0 {
+            return;
+        }
+        let in_worker = IN_POOL_WORKER.with(|flag| flag.get());
+        if self.handles.is_empty() || total == 1 || in_worker {
+            for i in 0..total {
+                f(i);
+            }
+            return;
+        }
+        let next = AtomicUsize::new(0);
+        // Safety of the lifetime erasure: `run` does not return until the
+        // job's completion is recorded, so the erased borrows outlive
+        // every dereference (module docs).  (A plain `as` cast cannot
+        // extend the trait object's lifetime bound to the `'static` the
+        // pointer type carries, hence the transmute.)
+        #[allow(clippy::useless_transmute)]
+        let fp: *const (dyn Fn(usize) + Sync) = unsafe {
+            std::mem::transmute::<
+                &(dyn Fn(usize) + Sync),
+                *const (dyn Fn(usize) + Sync),
+            >(f)
+        };
+        let my_seq = {
+            let mut st = lock_state(&self.shared);
+            while st.active > 0 {
+                st = self
+                    .shared
+                    .done_cv
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+            st.seq += 1;
+            st.active = self.handles.len();
+            st.panicked = false;
+            st.job = Some(Job {
+                f: fp,
+                next: &next,
+                total,
+            });
+            self.shared.work_cv.notify_all();
+            st.seq
+        };
+        // From here the workers hold erased pointers into this stack
+        // frame, so we MUST NOT leave before the job drains — even by
+        // panic.  The guard performs the completion wait in `drop` when
+        // a panic in the caller's own `f(i)` unwinds this frame (the
+        // workers finish the remaining indices first, then the panic
+        // continues); on the normal path it is disarmed and the wait
+        // happens inline so the panic flag is read under the same lock
+        // acquisition that observes completion.
+        struct JobGuard<'a> {
+            shared: &'a PoolShared,
+            my_seq: u64,
+            armed: bool,
+        }
+        impl Drop for JobGuard<'_> {
+            fn drop(&mut self) {
+                if !self.armed {
+                    return;
+                }
+                let mut st = lock_state(self.shared);
+                while st.done_seq < self.my_seq {
+                    st = self
+                        .shared
+                        .done_cv
+                        .wait(st)
+                        .unwrap_or_else(|p| p.into_inner());
+                }
+            }
+        }
+        let mut guard = JobGuard {
+            shared: &*self.shared,
+            my_seq,
+            armed: true,
+        };
+        // The caller is a lane too: claim indices alongside the workers.
+        loop {
+            let i = next.fetch_add(1, Ordering::Relaxed);
+            if i >= total {
+                break;
+            }
+            f(i);
+        }
+        guard.armed = false;
+        let panicked = {
+            let mut st = lock_state(&self.shared);
+            while st.done_seq < my_seq {
+                st = self
+                    .shared
+                    .done_cv
+                    .wait(st)
+                    .unwrap_or_else(|p| p.into_inner());
+            }
+            st.panicked
+        };
+        if panicked {
+            panic!("pool task panicked");
+        }
+    }
+
+    /// `f(i, &mut items[i])` for every item, indices claimed across the
+    /// pool's lanes.  The safe fan-out primitive `SketchEngine::ingest`
+    /// (whole layers) and `MonitorHub` (per-session diagnosis) build on.
+    pub fn for_each_mut<T, F>(&self, items: &mut [T], f: F)
+    where
+        T: Send,
+        F: Fn(usize, &mut T) + Sync,
+    {
+        let base = SendPtr(items.as_mut_ptr());
+        self.run(items.len(), &|i| {
+            // Safety: `run` hands each index to exactly one lane, so the
+            // `&mut` slots are disjoint.
+            let item = unsafe { &mut *base.0.add(i) };
+            f(i, item);
+        });
+    }
+}
+
+impl Drop for Pool {
+    fn drop(&mut self) {
+        {
+            let mut st = lock_state(&self.shared);
+            st.shutdown = true;
+            self.shared.work_cv.notify_all();
+        }
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Raw-pointer wrapper that may cross lane boundaries; every use hands
+/// out disjoint regions (one stripe / slot per claimed index).
+struct SendPtr<T>(*mut T);
+unsafe impl<T: Send> Send for SendPtr<T> {}
+unsafe impl<T: Send> Sync for SendPtr<T> {}
+
+/// Split `out`'s rows into one contiguous stripe per lane and run
 /// `body(first_row, last_row_exclusive, stripe)` on each.  The serial
 /// path is the single-stripe call, so both paths share one kernel body.
-fn for_row_stripes<F>(out: &mut Mat, par: Parallelism, flops: usize, body: F)
+fn for_row_stripes<F>(out: &mut Mat, pool: &Pool, flops: usize, body: F)
 where
     F: Fn(usize, usize, &mut [f64]) + Sync,
 {
     let (rows, cols) = (out.rows, out.cols);
-    let workers = par.threads().min(rows.max(1));
-    if workers <= 1 || rows * cols == 0 || flops < PAR_MIN_FLOPS {
+    if rows * cols == 0 {
+        return;
+    }
+    let stripes = pool.lanes().min(rows);
+    if stripes <= 1 || flops < PAR_MIN_FLOPS {
         body(0, rows, &mut out.data);
         return;
     }
-    let stripe_rows = rows.div_ceil(workers);
-    std::thread::scope(|s| {
-        for (w, stripe) in out.data.chunks_mut(stripe_rows * cols).enumerate() {
-            let body = &body;
-            s.spawn(move || {
-                let i0 = w * stripe_rows;
-                body(i0, i0 + stripe.len() / cols, stripe);
-            });
+    let stripe_rows = rows.div_ceil(stripes);
+    let base = SendPtr(out.data.as_mut_ptr());
+    pool.run(stripes, &|s| {
+        let i0 = s * stripe_rows;
+        if i0 >= rows {
+            return;
         }
+        let i1 = (i0 + stripe_rows).min(rows);
+        // Safety: stripes are disjoint row ranges of `out.data`, and
+        // `run` hands each stripe index to exactly one lane.
+        let stripe = unsafe {
+            std::slice::from_raw_parts_mut(
+                base.0.add(i0 * cols),
+                (i1 - i0) * cols,
+            )
+        };
+        body(i0, i1, stripe);
     });
 }
 
-/// `a @ b` — blocked over the shared dimension, parallel over output rows.
-pub fn matmul(a: &Mat, b: &Mat, par: Parallelism) -> Mat {
+// ---------------------------------------------------------------------
+// Register-tiled kernel bodies
+// ---------------------------------------------------------------------
+
+/// How a finished 4x4 (or tail) accumulator tile lands in the output.
+#[derive(Clone, Copy)]
+enum Store<'a> {
+    /// `out = acc` — the pure-product kernels (output starts untouched).
+    Assign,
+    /// `out = beta*out + (1-beta)*acc` — the fused EMA update.
+    Ema { beta: f64 },
+    /// `out = beta*out + (1-beta)*(acc*scale[j])` — the Z sketch's
+    /// psi-column-scaled EMA update.
+    EmaScaled { beta: f64, scale: &'a [f64] },
+}
+
+impl Store<'_> {
+    /// Write one element; `j` is the output column (for the psi scale).
+    /// The expression trees mirror the unfused
+    /// `t_matmul` -> `scale_cols` -> `ema_blend` chain exactly, so fused
+    /// and unfused results are bitwise identical.
+    #[inline(always)]
+    fn store(self, out: &mut f64, acc: f64, j: usize) {
+        match self {
+            Store::Assign => *out = acc,
+            Store::Ema { beta } => {
+                *out = beta * *out + (1.0 - beta) * acc;
+            }
+            Store::EmaScaled { beta, scale } => {
+                let scaled = acc * scale[j];
+                *out = beta * *out + (1.0 - beta) * scaled;
+            }
+        }
+    }
+}
+
+/// `a^T @ b` over output rows [i0, i1) (columns of `a`), register-tiled
+/// 4x4.  Element (i, j) accumulates `a[k, i] * b[k, j]` for k ascending
+/// from 0 — per row k, both operands are read as short contiguous spans,
+/// so the shared-k band of a tile is 8 streamed doubles per step.
+fn t_matmul_body(a: &Mat, b: &Mat, i0: usize, i1: usize, stripe: &mut [f64], st: Store<'_>) {
+    let n = b.cols;
+    let m = a.rows;
+    let mut i = i0;
+    while i + 4 <= i1 {
+        let mut j = 0;
+        while j + 4 <= n {
+            let mut acc = [[0.0f64; 4]; 4];
+            for k in 0..m {
+                let ar = &a.row(k)[i..i + 4];
+                let br = &b.row(k)[j..j + 4];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = ar[r];
+                    accr[0] += av * br[0];
+                    accr[1] += av * br[1];
+                    accr[2] += av * br[2];
+                    accr[3] += av * br[3];
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let row = &mut stripe[(i + r - i0) * n + j..];
+                for (c, &v) in accr.iter().enumerate() {
+                    st.store(&mut row[c], v, j + c);
+                }
+            }
+            j += 4;
+        }
+        while j < n {
+            let mut acc = [0.0f64; 4];
+            for k in 0..m {
+                let ar = &a.row(k)[i..i + 4];
+                let bv = b.row(k)[j];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    *accr += ar[r] * bv;
+                }
+            }
+            for (r, &v) in acc.iter().enumerate() {
+                st.store(&mut stripe[(i + r - i0) * n + j], v, j);
+            }
+            j += 1;
+        }
+        i += 4;
+    }
+    while i < i1 {
+        let mut j = 0;
+        while j + 4 <= n {
+            let mut acc = [0.0f64; 4];
+            for k in 0..m {
+                let av = a.row(k)[i];
+                let br = &b.row(k)[j..j + 4];
+                acc[0] += av * br[0];
+                acc[1] += av * br[1];
+                acc[2] += av * br[2];
+                acc[3] += av * br[3];
+            }
+            let row = &mut stripe[(i - i0) * n + j..];
+            for (c, &v) in acc.iter().enumerate() {
+                st.store(&mut row[c], v, j + c);
+            }
+            j += 4;
+        }
+        while j < n {
+            let mut acc = 0.0f64;
+            for k in 0..m {
+                acc += a.row(k)[i] * b.row(k)[j];
+            }
+            st.store(&mut stripe[(i - i0) * n + j], acc, j);
+            j += 1;
+        }
+        i += 1;
+    }
+}
+
+/// `a @ b` over output rows [i0, i1), register-tiled 4x4: element (i, j)
+/// accumulates `a[i, k] * b[k, j]` for k ascending from 0.
+fn matmul_body(a: &Mat, b: &Mat, i0: usize, i1: usize, stripe: &mut [f64]) {
+    let n = b.cols;
+    let m = a.cols;
+    let mut i = i0;
+    while i + 4 <= i1 {
+        let ar: [&[f64]; 4] =
+            [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+        let mut j = 0;
+        while j + 4 <= n {
+            let mut acc = [[0.0f64; 4]; 4];
+            for k in 0..m {
+                let br = &b.row(k)[j..j + 4];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = ar[r][k];
+                    accr[0] += av * br[0];
+                    accr[1] += av * br[1];
+                    accr[2] += av * br[2];
+                    accr[3] += av * br[3];
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let row = &mut stripe[(i + r - i0) * n + j..];
+                row[..4].copy_from_slice(accr);
+            }
+            j += 4;
+        }
+        while j < n {
+            let mut acc = [0.0f64; 4];
+            for k in 0..m {
+                let bv = b.row(k)[j];
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    *accr += ar[r][k] * bv;
+                }
+            }
+            for (r, &v) in acc.iter().enumerate() {
+                stripe[(i + r - i0) * n + j] = v;
+            }
+            j += 1;
+        }
+        i += 4;
+    }
+    while i < i1 {
+        let arow = a.row(i);
+        let mut j = 0;
+        while j + 4 <= n {
+            let mut acc = [0.0f64; 4];
+            for (k, &av) in arow.iter().enumerate() {
+                let br = &b.row(k)[j..j + 4];
+                acc[0] += av * br[0];
+                acc[1] += av * br[1];
+                acc[2] += av * br[2];
+                acc[3] += av * br[3];
+            }
+            stripe[(i - i0) * n + j..(i - i0) * n + j + 4]
+                .copy_from_slice(&acc);
+            j += 4;
+        }
+        while j < n {
+            let mut acc = 0.0f64;
+            for (k, &av) in arow.iter().enumerate() {
+                acc += av * b.row(k)[j];
+            }
+            stripe[(i - i0) * n + j] = acc;
+            j += 1;
+        }
+        i += 1;
+    }
+}
+
+/// `a @ b^T` over output rows [i0, i1), register-tiled 4x4: element
+/// (i, j) is the ascending-k dot of `a.row(i)` and `b.row(j)`.
+fn matmul_t_body(a: &Mat, b: &Mat, i0: usize, i1: usize, stripe: &mut [f64]) {
+    let n = b.rows;
+    let m = a.cols;
+    let mut i = i0;
+    while i + 4 <= i1 {
+        let ar: [&[f64]; 4] =
+            [a.row(i), a.row(i + 1), a.row(i + 2), a.row(i + 3)];
+        let mut j = 0;
+        while j + 4 <= n {
+            let br: [&[f64]; 4] =
+                [b.row(j), b.row(j + 1), b.row(j + 2), b.row(j + 3)];
+            let mut acc = [[0.0f64; 4]; 4];
+            for k in 0..m {
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    let av = ar[r][k];
+                    accr[0] += av * br[0][k];
+                    accr[1] += av * br[1][k];
+                    accr[2] += av * br[2][k];
+                    accr[3] += av * br[3][k];
+                }
+            }
+            for (r, accr) in acc.iter().enumerate() {
+                let row = &mut stripe[(i + r - i0) * n + j..];
+                row[..4].copy_from_slice(accr);
+            }
+            j += 4;
+        }
+        while j < n {
+            let brow = b.row(j);
+            let mut acc = [0.0f64; 4];
+            for (k, &bv) in brow.iter().enumerate() {
+                for (r, accr) in acc.iter_mut().enumerate() {
+                    *accr += ar[r][k] * bv;
+                }
+            }
+            for (r, &v) in acc.iter().enumerate() {
+                stripe[(i + r - i0) * n + j] = v;
+            }
+            j += 1;
+        }
+        i += 4;
+    }
+    while i < i1 {
+        let arow = a.row(i);
+        for j in 0..n {
+            let mut acc = 0.0f64;
+            for (&x, &y) in arow.iter().zip(b.row(j)) {
+                acc += x * y;
+            }
+            stripe[(i - i0) * n + j] = acc;
+        }
+        i += 1;
+    }
+}
+
+// ---------------------------------------------------------------------
+// Public kernels
+// ---------------------------------------------------------------------
+
+/// `a @ b` — register-tiled, parallel over output rows.
+pub fn matmul(a: &Mat, b: &Mat, pool: &Pool) -> Mat {
     assert_eq!(
         a.cols, b.rows,
         "matmul shape mismatch {}x{} @ {}x{}",
         a.rows, a.cols, b.rows, b.cols
     );
     let mut out = Mat::zeros(a.rows, b.cols);
-    let n = b.cols;
-    let flops = a.rows * a.cols * n;
-    for_row_stripes(&mut out, par, flops, |i0, i1, stripe| {
-        for kk in (0..a.cols).step_by(BLOCK_K) {
-            let kend = (kk + BLOCK_K).min(a.cols);
-            for i in i0..i1 {
-                let a_row = a.row(i);
-                let out_row = &mut stripe[(i - i0) * n..(i - i0 + 1) * n];
-                for (k, &a_ik) in a_row[kk..kend].iter().enumerate() {
-                    if a_ik == 0.0 {
-                        continue;
-                    }
-                    let b_row = b.row(kk + k);
-                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                        *o += a_ik * bv;
-                    }
-                }
-            }
-        }
+    let flops = a.rows * a.cols * b.cols;
+    for_row_stripes(&mut out, pool, flops, |i0, i1, stripe| {
+        matmul_body(a, b, i0, i1, stripe);
     });
     out
 }
 
-/// `a^T @ b` without materialising the transpose — the EMA sketch update's
-/// `A^T P` shape.  Blocked over the shared (batch) dimension, parallel
-/// over output rows (columns of `a`).
-pub fn t_matmul(a: &Mat, b: &Mat, par: Parallelism) -> Mat {
+/// `a^T @ b` without materialising the transpose — the EMA sketch
+/// update's `A^T P` shape.  Parallel over output rows (columns of `a`).
+pub fn t_matmul(a: &Mat, b: &Mat, pool: &Pool) -> Mat {
     assert_eq!(
         a.rows, b.rows,
         "t_matmul shape mismatch {}x{}^T @ {}x{}",
         a.rows, a.cols, b.rows, b.cols
     );
     let mut out = Mat::zeros(a.cols, b.cols);
-    let n = b.cols;
-    let flops = a.rows * a.cols * n;
-    for_row_stripes(&mut out, par, flops, |i0, i1, stripe| {
-        for kk in (0..a.rows).step_by(BLOCK_K) {
-            let kend = (kk + BLOCK_K).min(a.rows);
-            for i in i0..i1 {
-                let out_row = &mut stripe[(i - i0) * n..(i - i0 + 1) * n];
-                for k in kk..kend {
-                    let a_ki = a[(k, i)];
-                    if a_ki == 0.0 {
-                        continue;
-                    }
-                    let b_row = b.row(k);
-                    for (o, &bv) in out_row.iter_mut().zip(b_row) {
-                        *o += a_ki * bv;
-                    }
-                }
-            }
-        }
+    let flops = a.rows * a.cols * b.cols;
+    for_row_stripes(&mut out, pool, flops, |i0, i1, stripe| {
+        t_matmul_body(a, b, i0, i1, stripe, Store::Assign);
     });
     out
 }
 
 /// `a @ b^T` without materialising the transpose — the reconstruction's
-/// `... Q_X^T` shape.  Row-by-row dot products (both operands are read
-/// along rows, so this shape is cache-friendly without a k-tile), parallel
-/// over output rows.
-pub fn matmul_t(a: &Mat, b: &Mat, par: Parallelism) -> Mat {
+/// `... Q_X^T` shape.  Parallel over output rows.
+pub fn matmul_t(a: &Mat, b: &Mat, pool: &Pool) -> Mat {
     assert_eq!(
         a.cols, b.cols,
         "matmul_t shape mismatch {}x{} @ {}x{}^T",
         a.rows, a.cols, b.rows, b.cols
     );
     let mut out = Mat::zeros(a.rows, b.rows);
-    let n = b.rows;
-    let flops = a.rows * a.cols * n;
-    for_row_stripes(&mut out, par, flops, |i0, i1, stripe| {
-        for i in i0..i1 {
-            let a_row = a.row(i);
-            let out_row = &mut stripe[(i - i0) * n..(i - i0 + 1) * n];
-            for (j, o) in out_row.iter_mut().enumerate() {
-                let b_row = b.row(j);
-                let mut acc = 0.0;
-                for (&x, &y) in a_row.iter().zip(b_row) {
-                    acc += x * y;
-                }
-                *o = acc;
-            }
-        }
+    let flops = a.rows * a.cols * b.rows;
+    for_row_stripes(&mut out, pool, flops, |i0, i1, stripe| {
+        matmul_t_body(a, b, i0, i1, stripe);
     });
     out
+}
+
+fn assert_ema_shapes(a: &Mat, b: &Mat, out: &Mat) {
+    assert_eq!(
+        a.rows, b.rows,
+        "t_matmul_ema shape mismatch {}x{}^T @ {}x{}",
+        a.rows, a.cols, b.rows, b.cols
+    );
+    assert_eq!(
+        (out.rows, out.cols),
+        (a.cols, b.cols),
+        "t_matmul_ema output is {}x{}, product is {}x{}",
+        out.rows,
+        out.cols,
+        a.cols,
+        b.cols
+    );
+}
+
+/// Fused in-place EMA update `out = beta*out + (1-beta) * a^T @ b`,
+/// writing directly into the resident sketch: no contribution temporary
+/// is ever allocated.  Bitwise identical to
+/// `out.ema_blend(&t_matmul(a, b, pool), beta)` — the per-element chain
+/// (ascending-k product sum from 0, then one blend) is the same.
+pub fn t_matmul_ema(a: &Mat, b: &Mat, out: &mut Mat, beta: f64, pool: &Pool) {
+    assert_ema_shapes(a, b, out);
+    let flops = a.rows * a.cols * b.cols;
+    for_row_stripes(out, pool, flops, |i0, i1, stripe| {
+        t_matmul_body(a, b, i0, i1, stripe, Store::Ema { beta });
+    });
+}
+
+/// [`t_matmul_ema`] with the contribution's columns scaled by `scale`
+/// (the Z sketch's psi weighting) before blending:
+/// `out = beta*out + (1-beta) * ((a^T @ b) * scale[j])`.  Bitwise
+/// identical to the unfused `t_matmul` -> `scale_cols` -> `ema_blend`.
+pub fn t_matmul_ema_scaled(
+    a: &Mat,
+    b: &Mat,
+    scale: &[f64],
+    out: &mut Mat,
+    beta: f64,
+    pool: &Pool,
+) {
+    assert_ema_shapes(a, b, out);
+    assert_eq!(scale.len(), b.cols, "psi scale length mismatch");
+    let flops = a.rows * a.cols * b.cols;
+    for_row_stripes(out, pool, flops, |i0, i1, stripe| {
+        t_matmul_body(a, b, i0, i1, stripe, Store::EmaScaled { beta, scale });
+    });
+}
+
+/// PR3-era reference kernels: cache-blocked scalar inner loops (with the
+/// `a_ik == 0.0` skip) fanned across `std::thread::scope` workers spawned
+/// per call.  Kept verbatim for two jobs: the pool-vs-scoped bitwise
+/// equivalence tests, and the `bench-smoke` perf gate's fused-vs-PR3
+/// ingest baseline.  Not used on any production path.
+pub mod scoped {
+    use super::super::matrix::Mat;
+
+    /// B-panel tile height of the PR3 scheme: 64 rows x up to ~33
+    /// columns (k <= 2*16 + 1 at the largest ladder rank) is a <=17 KiB
+    /// panel, L1-resident alongside the output stripe.  (The PR3 comment
+    /// claimed "~512 columns ≈ 256 KiB L2 slice", sized for a B panel as
+    /// wide as a hidden layer; no sketch product ever has more than
+    /// `3k` output columns, so the panel was always an order of
+    /// magnitude smaller than advertised.)
+    pub const BLOCK_K: usize = 64;
+
+    /// The PR3 spawn-per-call threshold (~30 µs/worker spawn cost).
+    const PAR_MIN_FLOPS: usize = 64 * 1024;
+
+    fn for_row_stripes<F>(out: &mut Mat, threads: usize, flops: usize, body: F)
+    where
+        F: Fn(usize, usize, &mut [f64]) + Sync,
+    {
+        let (rows, cols) = (out.rows, out.cols);
+        let workers = threads.max(1).min(rows.max(1));
+        if workers <= 1 || rows * cols == 0 || flops < PAR_MIN_FLOPS {
+            body(0, rows, &mut out.data);
+            return;
+        }
+        let stripe_rows = rows.div_ceil(workers);
+        std::thread::scope(|s| {
+            for (w, stripe) in
+                out.data.chunks_mut(stripe_rows * cols).enumerate()
+            {
+                let body = &body;
+                s.spawn(move || {
+                    let i0 = w * stripe_rows;
+                    body(i0, i0 + stripe.len() / cols, stripe);
+                });
+            }
+        });
+    }
+
+    /// PR3 `a @ b`: k-blocked scalar loops, spawn-per-call fan-out.
+    pub fn matmul(a: &Mat, b: &Mat, threads: usize) -> Mat {
+        assert_eq!(a.cols, b.rows, "matmul shape mismatch");
+        let mut out = Mat::zeros(a.rows, b.cols);
+        let n = b.cols;
+        let flops = a.rows * a.cols * n;
+        for_row_stripes(&mut out, threads, flops, |i0, i1, stripe| {
+            for kk in (0..a.cols).step_by(BLOCK_K) {
+                let kend = (kk + BLOCK_K).min(a.cols);
+                for i in i0..i1 {
+                    let a_row = a.row(i);
+                    let out_row =
+                        &mut stripe[(i - i0) * n..(i - i0 + 1) * n];
+                    for (k, &a_ik) in a_row[kk..kend].iter().enumerate() {
+                        if a_ik == 0.0 {
+                            continue;
+                        }
+                        let b_row = b.row(kk + k);
+                        for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                            *o += a_ik * bv;
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// PR3 `a^T @ b`: k-blocked scalar loops, spawn-per-call fan-out.
+    pub fn t_matmul(a: &Mat, b: &Mat, threads: usize) -> Mat {
+        assert_eq!(a.rows, b.rows, "t_matmul shape mismatch");
+        let mut out = Mat::zeros(a.cols, b.cols);
+        let n = b.cols;
+        let flops = a.rows * a.cols * n;
+        for_row_stripes(&mut out, threads, flops, |i0, i1, stripe| {
+            for kk in (0..a.rows).step_by(BLOCK_K) {
+                let kend = (kk + BLOCK_K).min(a.rows);
+                for i in i0..i1 {
+                    let out_row =
+                        &mut stripe[(i - i0) * n..(i - i0 + 1) * n];
+                    for k in kk..kend {
+                        let a_ki = a[(k, i)];
+                        if a_ki == 0.0 {
+                            continue;
+                        }
+                        let b_row = b.row(k);
+                        for (o, &bv) in out_row.iter_mut().zip(b_row) {
+                            *o += a_ki * bv;
+                        }
+                    }
+                }
+            }
+        });
+        out
+    }
+
+    /// PR3 `a @ b^T`: row-dot scalar loops, spawn-per-call fan-out.
+    pub fn matmul_t(a: &Mat, b: &Mat, threads: usize) -> Mat {
+        assert_eq!(a.cols, b.cols, "matmul_t shape mismatch");
+        let mut out = Mat::zeros(a.rows, b.rows);
+        let n = b.rows;
+        let flops = a.rows * a.cols * n;
+        for_row_stripes(&mut out, threads, flops, |i0, i1, stripe| {
+            for i in i0..i1 {
+                let a_row = a.row(i);
+                let out_row = &mut stripe[(i - i0) * n..(i - i0 + 1) * n];
+                for (j, o) in out_row.iter_mut().enumerate() {
+                    let b_row = b.row(j);
+                    let mut acc = 0.0;
+                    for (&x, &y) in a_row.iter().zip(b_row) {
+                        acc += x * y;
+                    }
+                    *o = acc;
+                }
+            }
+        });
+        out
+    }
 }
 
 #[cfg(test)]
@@ -212,31 +953,29 @@ mod tests {
     }
 
     #[test]
-    fn blocked_matmul_is_bitwise_naive() {
+    fn tiled_matmul_is_bitwise_naive() {
         let mut rng = Rng::new(11);
-        // Spans multiple k-blocks (>BLOCK_K) and a tail block.
-        let a = Mat::gaussian(9, 2 * BLOCK_K + 7, &mut rng);
-        let b = Mat::gaussian(2 * BLOCK_K + 7, 13, &mut rng);
+        // Off-multiple-of-4 shapes exercise every tail path of the tile.
+        let a = Mat::gaussian(9, 135, &mut rng);
+        let b = Mat::gaussian(135, 13, &mut rng);
         let want = naive_matmul(&a, &b);
-        for par in [
-            Parallelism::Serial,
-            Parallelism::Threads(2),
-            Parallelism::Threads(4),
-        ] {
-            let got = matmul(&a, &b, par);
-            assert_eq!(got.data, want.data, "par={par}");
+        for lanes in [1usize, 2, 4] {
+            let pool = Pool::with_lanes(lanes);
+            let got = matmul(&a, &b, &pool);
+            assert_eq!(got.data, want.data, "lanes={lanes}");
         }
     }
 
     #[test]
     fn t_matmul_matches_transpose_matmul_bitwise() {
         let mut rng = Rng::new(12);
-        let a = Mat::gaussian(BLOCK_K + 5, 17, &mut rng);
-        let b = Mat::gaussian(BLOCK_K + 5, 11, &mut rng);
+        let a = Mat::gaussian(69, 17, &mut rng);
+        let b = Mat::gaussian(69, 11, &mut rng);
         let want = naive_matmul(&a.transpose(), &b);
-        for par in [Parallelism::Serial, Parallelism::Threads(3)] {
-            let got = t_matmul(&a, &b, par);
-            assert_eq!(got.data, want.data, "par={par}");
+        for lanes in [1usize, 3] {
+            let pool = Pool::with_lanes(lanes);
+            let got = t_matmul(&a, &b, &pool);
+            assert_eq!(got.data, want.data, "lanes={lanes}");
         }
     }
 
@@ -246,30 +985,153 @@ mod tests {
         let a = Mat::gaussian(12, 33, &mut rng);
         let b = Mat::gaussian(21, 33, &mut rng);
         let want = naive_matmul(&a, &b.transpose());
-        for par in [Parallelism::Serial, Parallelism::Threads(4)] {
-            let got = matmul_t(&a, &b, par);
+        for lanes in [1usize, 4] {
+            let pool = Pool::with_lanes(lanes);
+            let got = matmul_t(&a, &b, &pool);
             // Same dot-product order per element; identical fp result.
-            assert!(got.max_abs_diff(&want) < 1e-12, "par={par}");
+            assert!(got.max_abs_diff(&want) < 1e-12, "lanes={lanes}");
         }
     }
 
     #[test]
-    fn parallel_handles_more_threads_than_rows() {
+    fn fused_ema_matches_unfused_bitwise() {
+        let mut rng = Rng::new(15);
+        let a = Mat::gaussian(22, 37, &mut rng); // tail rows and cols
+        let b = Mat::gaussian(22, 9, &mut rng);
+        let psi: Vec<f64> = rng.normal_vec(9);
+        let beta = 0.9;
+        let pool4 = Pool::with_lanes(4);
+        for pool in [Pool::serial(), &pool4] {
+            let mut fused = Mat::gaussian(37, 9, &mut rng);
+            let mut unfused = fused.clone();
+            t_matmul_ema(&a, &b, &mut fused, beta, pool);
+            unfused.ema_blend(&t_matmul(&a, &b, Pool::serial()), beta);
+            assert_eq!(fused.data, unfused.data, "{pool:?}");
+
+            let mut fused_z = Mat::gaussian(37, 9, &mut rng);
+            let mut unfused_z = fused_z.clone();
+            t_matmul_ema_scaled(&a, &b, &psi, &mut fused_z, beta, pool);
+            unfused_z.ema_blend(
+                &t_matmul(&a, &b, Pool::serial()).scale_cols(&psi),
+                beta,
+            );
+            assert_eq!(fused_z.data, unfused_z.data, "{pool:?} (scaled)");
+        }
+    }
+
+    #[test]
+    fn pool_matches_scoped_reference_bitwise() {
+        let mut rng = Rng::new(16);
+        // Above both parallel thresholds so every path actually fans out.
+        let a = Mat::gaussian(96, 150, &mut rng);
+        let b = Mat::gaussian(96, 13, &mut rng);
+        let pool = Pool::with_lanes(4);
+        assert_eq!(
+            t_matmul(&a, &b, &pool).data,
+            scoped::t_matmul(&a, &b, 4).data
+        );
+        let c = Mat::gaussian(150, 96, &mut rng);
+        assert_eq!(matmul(&c, &b, &pool).data, scoped::matmul(&c, &b, 4).data);
+        let d = Mat::gaussian(40, 96, &mut rng);
+        assert_eq!(
+            matmul_t(&c, &d, &pool).data,
+            scoped::matmul_t(&c, &d, 4).data
+        );
+    }
+
+    #[test]
+    fn pool_reuse_is_stable() {
+        // Many products through one pool: results never drift and the
+        // handoff protocol survives repeated reuse.
+        let mut rng = Rng::new(17);
+        let a = Mat::gaussian(64, 120, &mut rng);
+        let b = Mat::gaussian(64, 9, &mut rng);
+        let pool = Pool::with_lanes(3);
+        let want = t_matmul(&a, &b, Pool::serial());
+        for round in 0..50 {
+            let got = t_matmul(&a, &b, &pool);
+            assert_eq!(got.data, want.data, "round {round}");
+        }
+    }
+
+    #[test]
+    fn pool_run_covers_every_index_once() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = Pool::with_lanes(4);
+        let hits: Vec<AtomicUsize> =
+            (0..97).map(|_| AtomicUsize::new(0)).collect();
+        for _ in 0..10 {
+            pool.run(hits.len(), &|i| {
+                hits[i].fetch_add(1, Ordering::Relaxed);
+            });
+        }
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 10, "index {i}");
+        }
+    }
+
+    #[test]
+    fn nested_run_executes_inline() {
+        // A task that itself calls `run` must not deadlock: the inner
+        // call detects the worker thread and runs inline.
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = Pool::with_lanes(2);
+        let count = AtomicUsize::new(0);
+        pool.run(4, &|_| {
+            pool.run(3, &|_| {
+                count.fetch_add(1, Ordering::Relaxed);
+            });
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 12);
+    }
+
+    #[test]
+    fn pool_survives_task_panic() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let pool = Pool::with_lanes(3);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(
+            || {
+                pool.run(8, &|i| {
+                    if i == 3 {
+                        panic!("boom");
+                    }
+                });
+            },
+        ));
+        assert!(result.is_err(), "task panic must reach the caller");
+        // The pool is not wedged: later jobs still run to completion.
+        let hits: Vec<AtomicUsize> =
+            (0..16).map(|_| AtomicUsize::new(0)).collect();
+        pool.run(hits.len(), &|i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn parallel_handles_more_lanes_than_rows() {
         let mut rng = Rng::new(14);
         let a = Mat::gaussian(2, 300, &mut rng);
         let b = Mat::gaussian(300, 400, &mut rng);
-        let got = matmul(&a, &b, Parallelism::Threads(16));
-        assert_eq!(got.data, matmul(&a, &b, Parallelism::Serial).data);
+        let pool = Pool::with_lanes(16);
+        let got = matmul(&a, &b, &pool);
+        assert_eq!(got.data, matmul(&a, &b, Pool::serial()).data);
     }
 
     #[test]
     fn degenerate_shapes() {
+        let pool = Pool::with_lanes(4);
         let a = Mat::zeros(0, 5);
         let b = Mat::zeros(5, 3);
-        let out = matmul(&a, &b, Parallelism::Threads(4));
+        let out = matmul(&a, &b, &pool);
         assert_eq!((out.rows, out.cols), (0, 3));
-        let out = t_matmul(&Mat::zeros(4, 0), &Mat::zeros(4, 3), Parallelism::Threads(2));
+        let out = t_matmul(&Mat::zeros(4, 0), &Mat::zeros(4, 3), &pool);
         assert_eq!((out.rows, out.cols), (0, 3));
+        let mut ema = Mat::zeros(0, 3);
+        t_matmul_ema(&Mat::zeros(4, 0), &Mat::zeros(4, 3), &mut ema, 0.9, &pool);
+        assert_eq!((ema.rows, ema.cols), (0, 3));
     }
 
     #[test]
@@ -280,5 +1142,9 @@ mod tests {
         assert_eq!(Parallelism::Threads(0).threads(), 1);
         assert!(!Parallelism::Serial.is_parallel());
         assert_eq!(format!("{}", Parallelism::Threads(4)), "4 threads");
+        assert_eq!(Pool::new(Parallelism::Serial).lanes(), 1);
+        assert_eq!(Pool::new(Parallelism::Threads(4)).lanes(), 4);
+        assert!(!Pool::serial().is_parallel());
+        assert_eq!(format!("{:?}", Pool::with_lanes(2)), "Pool(2 lanes)");
     }
 }

@@ -11,7 +11,7 @@ use std::ops::{Index, IndexMut};
 
 use crate::util::rng::Rng;
 
-use super::kernel::{self, Parallelism};
+use super::kernel::{self, Pool};
 
 #[derive(Clone, PartialEq)]
 pub struct Mat {
@@ -107,32 +107,32 @@ impl Mat {
     }
 
     /// `self @ other` — the substrate's workhorse, delegating to the
-    /// blocked [`kernel`] on the serial path.  Call sites needing the
-    /// worker pool for this shape use `kernel::matmul` directly.
+    /// register-tiled [`kernel`] on the serial path.  Call sites needing
+    /// a worker pool for this shape use `kernel::matmul` directly.
     pub fn matmul(&self, other: &Mat) -> Mat {
-        kernel::matmul(self, other, Parallelism::Serial)
+        kernel::matmul(self, other, Pool::serial())
     }
 
     /// `self^T @ other` without materialising the transpose (the EMA
     /// sketch update's A^T P shape).
     pub fn t_matmul(&self, other: &Mat) -> Mat {
-        kernel::t_matmul(self, other, Parallelism::Serial)
+        kernel::t_matmul(self, other, Pool::serial())
     }
 
     /// `self^T @ other` on the given worker pool.
-    pub fn t_matmul_with(&self, other: &Mat, par: Parallelism) -> Mat {
-        kernel::t_matmul(self, other, par)
+    pub fn t_matmul_with(&self, other: &Mat, pool: &Pool) -> Mat {
+        kernel::t_matmul(self, other, pool)
     }
 
     /// `self @ other^T` without materialising the transpose (the
     /// reconstruction's `... Q_X^T` shape).
     pub fn matmul_t(&self, other: &Mat) -> Mat {
-        kernel::matmul_t(self, other, Parallelism::Serial)
+        kernel::matmul_t(self, other, Pool::serial())
     }
 
     /// `self @ other^T` on the given worker pool.
-    pub fn matmul_t_with(&self, other: &Mat, par: Parallelism) -> Mat {
-        kernel::matmul_t(self, other, par)
+    pub fn matmul_t_with(&self, other: &Mat, pool: &Pool) -> Mat {
+        kernel::matmul_t(self, other, pool)
     }
 
     pub fn scale(&self, s: f64) -> Mat {

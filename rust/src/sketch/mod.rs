@@ -22,8 +22,8 @@ pub mod triplet;
 
 pub use engine::{
     engine_state_bytes, EngineSnapshot, Precision, SketchConfig,
-    SketchConfigBuilder, SketchEngine, Sketcher, TripletState,
+    SketchConfigBuilder, SketchEngine, Sketcher, TripletState, Workspace,
 };
-pub use kernel::Parallelism;
+pub use kernel::{Parallelism, Pool};
 pub use matrix::Mat;
 pub use triplet::{Projections, SketchTriplet};

@@ -6,7 +6,7 @@
 //! form A_tilde = Omega R_Y^{-1} C Q_X^T that never materialises G (the
 //! fusion used on the hot path; tests prove the two agree).
 
-use super::kernel::Parallelism;
+use super::kernel::Pool;
 use super::matrix::Mat;
 use super::qr::{
     householder_q_wide_in, mgs_qr, pinv_tall, solve_lower_triangular,
@@ -46,7 +46,7 @@ pub const CLIP_GAMMA: f64 = 3.0;
 
 /// Eq. 7, fused: A_tilde = Omega R_Y^{-1} C Q_X^T (n_b x d), norm-clipped.
 pub fn reconstruct_batch(t: &SketchTriplet, omega: &Mat) -> Mat {
-    reconstruct_batch_with(t, omega, Parallelism::Serial)
+    reconstruct_batch_with(t, omega, Pool::serial())
 }
 
 /// [`reconstruct_batch`] with the dominant `(n_b, k) @ (d, k)^T` product
@@ -54,12 +54,12 @@ pub fn reconstruct_batch(t: &SketchTriplet, omega: &Mat) -> Mat {
 pub fn reconstruct_batch_with(
     t: &SketchTriplet,
     omega: &Mat,
-    par: Parallelism,
+    pool: &Pool,
 ) -> Mat {
     let core = reconstruct_core(t);
     let ry_inv_c = solve_upper_triangular(&core.r_y, &core.c); // (k, k)
     let coeff = omega.matmul(&ry_inv_c); // (n_b, k)
-    let a_tilde = coeff.matmul_t_with(&core.q_x, par);
+    let a_tilde = coeff.matmul_t_with(&core.q_x, pool);
     let k = t.y.cols as f64;
     let a_norm_est = (t.y.fro_norm().powi(2) / k + 1e-12).sqrt();
     let a_t_norm = a_tilde.fro_norm() + 1e-12;

@@ -12,7 +12,7 @@ use std::sync::Arc;
 
 use crate::util::rng::Rng;
 
-use super::kernel::Parallelism;
+use super::kernel::{self, Pool};
 use super::matrix::Mat;
 
 /// Shared batch projections (Upsilon, Omega, Phi) + per-layer Psi weights.
@@ -130,27 +130,56 @@ impl SketchTriplet {
         proj: &Projections,
         layer: usize,
     ) {
-        self.update_with(a_in, a_out, proj, layer, Parallelism::Serial);
+        self.update_with(a_in, a_out, proj, layer, Pool::serial());
     }
 
-    /// [`SketchTriplet::update`] with the three projection products run on
-    /// the given worker pool — bitwise identical to the serial form (the
-    /// kernel determinism contract), so Lemma 4.1 holds unchanged.
+    /// [`SketchTriplet::update`] with the three projection products fused
+    /// into the resident X/Y/Z sketches ([`kernel::t_matmul_ema`] /
+    /// [`kernel::t_matmul_ema_scaled`]) on the given worker pool: no
+    /// contribution temporaries are ever allocated, and the result is
+    /// bitwise identical to the unfused serial form at any lane count
+    /// (the kernel determinism contract), so Lemma 4.1 holds unchanged.
     pub fn update_with(
         &mut self,
         a_in: &Mat,
         a_out: &Mat,
         proj: &Projections,
         layer: usize,
-        par: Parallelism,
+        pool: &Pool,
     ) {
         let beta = self.beta;
-        let contrib_x = a_in.t_matmul_with(&proj.upsilon, par);
+        kernel::t_matmul_ema(a_in, &proj.upsilon, &mut self.x, beta, pool);
+        kernel::t_matmul_ema(a_out, &proj.omega, &mut self.y, beta, pool);
+        kernel::t_matmul_ema_scaled(
+            a_out,
+            &proj.phi,
+            &proj.psi[layer],
+            &mut self.z,
+            beta,
+            pool,
+        );
+        self.updates += 1;
+    }
+
+    /// PR3-path reference update: allocating unfused contributions
+    /// (`t_matmul` -> `ema_blend`, plus `scale_cols` for Z) through the
+    /// spawn-per-call [`kernel::scoped`] kernels.  Kept as the bitwise
+    /// equivalence witness for [`SketchTriplet::update_with`] and the
+    /// `bench-smoke` perf gate's ingest baseline; not a production path.
+    pub fn update_scoped(
+        &mut self,
+        a_in: &Mat,
+        a_out: &Mat,
+        proj: &Projections,
+        layer: usize,
+        threads: usize,
+    ) {
+        let beta = self.beta;
+        let contrib_x = kernel::scoped::t_matmul(a_in, &proj.upsilon, threads);
         self.x.ema_blend(&contrib_x, beta);
-        let contrib_y = a_out.t_matmul_with(&proj.omega, par);
+        let contrib_y = kernel::scoped::t_matmul(a_out, &proj.omega, threads);
         self.y.ema_blend(&contrib_y, beta);
-        let contrib_z = a_out
-            .t_matmul_with(&proj.phi, par)
+        let contrib_z = kernel::scoped::t_matmul(a_out, &proj.phi, threads)
             .scale_cols(&proj.psi[layer]);
         self.z.ema_blend(&contrib_z, beta);
         self.updates += 1;

@@ -1,0 +1,221 @@
+//! Bitwise equivalence of the fused zero-allocation ingest path against
+//! the PR3-era reference (allocating unfused contributions, spawn-per-
+//! call scoped threads): the fused in-place EMA kernels and the
+//! persistent worker pool are pure throughput changes, never numerics
+//! changes.  Covered matrix: 1/2/4 lanes, heterogeneous widths, tail
+//! batches, repeated pool reuse across many steps, and rank changes.
+
+use sketchgrad::sketch::{
+    Mat, Pool, Projections, SketchConfig, SketchEngine, SketchTriplet,
+    Sketcher,
+};
+use sketchgrad::util::prop::Prop;
+use sketchgrad::util::rng::Rng;
+
+fn engine(dims: &[usize], rank: usize, threads: usize) -> SketchEngine {
+    SketchConfig::builder()
+        .layer_dims(dims)
+        .rank(rank)
+        .beta(0.9)
+        .seed(23)
+        .threads(threads)
+        .build_engine()
+        .unwrap()
+}
+
+fn acts(n_b: usize, dims: &[usize], rng: &mut Rng) -> Vec<Mat> {
+    let mut out = vec![Mat::gaussian(n_b, dims[0], rng)];
+    for &d in dims {
+        out.push(Mat::gaussian(n_b, d, rng));
+    }
+    out
+}
+
+/// A PR3-style engine stand-in: bare triplets updated through the
+/// unfused, allocating, scoped-thread reference path.
+struct ReferenceEngine {
+    layers: Vec<SketchTriplet>,
+    threads: usize,
+}
+
+impl ReferenceEngine {
+    fn like(engine: &SketchEngine, threads: usize) -> ReferenceEngine {
+        let cfg = engine.config();
+        ReferenceEngine {
+            layers: (0..cfg.n_layers())
+                .map(|l| {
+                    SketchTriplet::with_dims(
+                        cfg.d_in(l),
+                        cfg.d_out(l),
+                        cfg.rank,
+                        cfg.beta,
+                    )
+                })
+                .collect(),
+            threads,
+        }
+    }
+
+    fn ingest(&mut self, acts: &[Mat], proj: &Projections) {
+        for (l, t) in self.layers.iter_mut().enumerate() {
+            let a_in = if l == 0 { &acts[1] } else { &acts[l] };
+            t.update_scoped(a_in, &acts[l + 1], proj, l, self.threads);
+        }
+    }
+}
+
+/// Largest |fused - reference| element across all layer sketches.
+fn state_diff(engine: &SketchEngine, reference: &ReferenceEngine) -> f64 {
+    let mut diff: f64 = 0.0;
+    for (f, r) in engine.layers().iter().zip(&reference.layers) {
+        diff = diff
+            .max(f.x.max_abs_diff(&r.x))
+            .max(f.y.max_abs_diff(&r.y))
+            .max(f.z.max_abs_diff(&r.z));
+    }
+    diff
+}
+
+#[test]
+fn fused_ingest_is_bitwise_pr3_reference() {
+    // Heterogeneous widths, a nominal and a tail batch size, 12 steps of
+    // pool reuse, across 1/2/4 lanes — both engine fan-out regimes
+    // (layer fan-out at 2 lanes over 4 layers, intra-kernel at 4+).
+    let dims = [48usize, 32, 24, 16];
+    for threads in [1usize, 2, 4] {
+        let mut fused = engine(&dims, 3, threads);
+        let mut reference = ReferenceEngine::like(&fused, threads);
+        let mut rng = Rng::new(400 + threads as u64);
+        for step in 0..12 {
+            let n_b = if step % 3 == 2 { 7 } else { 20 };
+            let batch = acts(n_b, &dims, &mut rng);
+            fused.ensure_projections(n_b);
+            let proj = fused.projections(n_b).unwrap().clone();
+            fused.ingest(&batch).unwrap();
+            reference.ingest(&batch, &proj);
+            let diff = state_diff(&fused, &reference);
+            assert_eq!(
+                diff, 0.0,
+                "{threads} threads, step {step}: fused diverged by {diff:.2e}"
+            );
+        }
+    }
+}
+
+#[test]
+fn fused_ingest_survives_rank_change_bitwise() {
+    let dims = [40usize, 20];
+    let mut fused = engine(&dims, 2, 4);
+    let mut rng = Rng::new(77);
+    fused.ingest(&acts(16, &dims, &mut rng)).unwrap();
+    fused.set_rank(4);
+    let mut reference = ReferenceEngine::like(&fused, 4);
+    for _ in 0..4 {
+        let batch = acts(16, &dims, &mut rng);
+        fused.ensure_projections(16);
+        let proj = fused.projections(16).unwrap().clone();
+        fused.ingest(&batch).unwrap();
+        reference.ingest(&batch, &proj);
+    }
+    assert_eq!(state_diff(&fused, &reference), 0.0);
+}
+
+#[test]
+fn triplet_fused_update_matches_unfused_property() {
+    let pools = [
+        Pool::with_lanes(1),
+        Pool::with_lanes(2),
+        Pool::with_lanes(4),
+    ];
+    Prop::new(16).check("fused_triplet", |rng, i| {
+        let n_b = 3 + (i * 5) % 24;
+        let (d_in, d_out) = (4 + (i * 7) % 50, 4 + (i * 11) % 50);
+        let rank = 1 + i % 4;
+        let proj = Projections::sample(n_b, 1, rank, rng);
+        let a_in = Mat::gaussian(n_b, d_in, rng);
+        let a_out = Mat::gaussian(n_b, d_out, rng);
+        for pool in &pools {
+            let mut fused = SketchTriplet::with_dims(d_in, d_out, rank, 0.9);
+            let mut unfused = SketchTriplet::with_dims(d_in, d_out, rank, 0.9);
+            // Several EMA steps so the resident-state blend is exercised,
+            // not just the from-zeros first step.
+            for _ in 0..3 {
+                fused.update_with(&a_in, &a_out, &proj, 0, pool);
+                unfused.update_scoped(&a_in, &a_out, &proj, 0, pool.lanes());
+            }
+            let diff = fused
+                .x
+                .max_abs_diff(&unfused.x)
+                .max(fused.y.max_abs_diff(&unfused.y))
+                .max(fused.z.max_abs_diff(&unfused.z));
+            if diff > 0.0 {
+                return Err(format!(
+                    "{} lanes: fused vs unfused diff {diff:.2e}",
+                    pool.lanes()
+                ));
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn engines_share_one_pool_bitwise() {
+    // The sketchd wiring: several engines (and their reconstructions)
+    // multiplexed over one shared pool must match private-pool engines
+    // exactly.
+    let dims_a = [64usize, 32];
+    let dims_b = [24usize, 24, 24];
+    let pool = Pool::with_lanes(4);
+    let mut shared_a = SketchEngine::with_pool(
+        SketchConfig::builder()
+            .layer_dims(&dims_a)
+            .rank(3)
+            .seed(5)
+            .build()
+            .unwrap(),
+        pool.clone(),
+    );
+    let mut shared_b = SketchEngine::with_pool(
+        SketchConfig::builder()
+            .layer_dims(&dims_b)
+            .rank(2)
+            .seed(6)
+            .build()
+            .unwrap(),
+        pool.clone(),
+    );
+    let mut own_a = engine_with(&dims_a, 3, 5);
+    let mut own_b = engine_with(&dims_b, 2, 6);
+    let mut rng = Rng::new(9);
+    for step in 0..6 {
+        let n_b = if step == 5 { 11 } else { 32 };
+        let batch_a = acts(n_b, &dims_a, &mut rng);
+        let batch_b = acts(n_b, &dims_b, &mut rng);
+        shared_a.ingest(&batch_a).unwrap();
+        own_a.ingest(&batch_a).unwrap();
+        shared_b.ingest(&batch_b).unwrap();
+        own_b.ingest(&batch_b).unwrap();
+    }
+    assert_eq!(shared_a.max_state_diff(&own_a), 0.0);
+    assert_eq!(shared_b.max_state_diff(&own_b), 0.0);
+    for l in 0..dims_a.len() {
+        let (s, o) = (
+            shared_a.reconstruct(l).unwrap(),
+            own_a.reconstruct(l).unwrap(),
+        );
+        assert_eq!(s.max_abs_diff(&o), 0.0, "layer {l}");
+    }
+    assert_eq!(shared_a.pool().lanes(), 4);
+    assert!(std::sync::Arc::ptr_eq(shared_a.pool(), shared_b.pool()));
+}
+
+fn engine_with(dims: &[usize], rank: usize, seed: u64) -> SketchEngine {
+    SketchConfig::builder()
+        .layer_dims(dims)
+        .rank(rank)
+        .seed(seed)
+        .threads(4)
+        .build_engine()
+        .unwrap()
+}

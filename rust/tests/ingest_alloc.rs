@@ -1,0 +1,100 @@
+//! Zero-allocation steady-state ingest: once an engine has seen a batch
+//! size (projections cached, pool threads parked, workspace warm), every
+//! further `SketchEngine::ingest` call must perform **no heap
+//! allocations at all** — the fused EMA kernels write into the resident
+//! sketches through register accumulators, the layer fan-out claims
+//! indices straight off the activation list, and the pool handoff is a
+//! condvar protocol over pre-existing state.
+//!
+//! Pinned with a counting global allocator.  This file deliberately
+//! holds a single test: the counter is process-global, and libtest runs
+//! tests in one process (concurrently when there are several).
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use sketchgrad::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
+use sketchgrad::util::rng::Rng;
+
+struct CountingAlloc;
+
+static ALLOCS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+
+    unsafe fn realloc(
+        &self,
+        ptr: *mut u8,
+        layout: Layout,
+        new_size: usize,
+    ) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
+
+fn engine(dims: &[usize], threads: usize) -> SketchEngine {
+    SketchConfig::builder()
+        .layer_dims(dims)
+        .rank(4)
+        .beta(0.9)
+        .seed(11)
+        .threads(threads)
+        .build_engine()
+        .unwrap()
+}
+
+fn acts(n_b: usize, dims: &[usize], rng: &mut Rng) -> Vec<Mat> {
+    let mut out = vec![Mat::gaussian(n_b, dims[0], rng)];
+    for &d in dims {
+        out.push(Mat::gaussian(n_b, d, rng));
+    }
+    out
+}
+
+#[test]
+fn steady_state_ingest_allocates_nothing() {
+    let dims = [48usize, 32, 24, 16];
+    let mut rng = Rng::new(1);
+    let nominal = acts(64, &dims, &mut rng);
+    let tail = acts(21, &dims, &mut rng);
+    // 1 lane = serial inline; 2 lanes = whole-layer fan-out (2 <= 4
+    // layers); 8 lanes = intra-kernel row-stripe fan-out (8 > 4 layers).
+    for threads in [1usize, 2, 8] {
+        let mut e = engine(&dims, threads);
+        // Warm-up: observe both batch sizes so the per-size projections
+        // are cached, the pool threads are spawned and parked, and every
+        // lazy one-time initialisation has happened.
+        for _ in 0..2 {
+            e.ingest(&nominal).unwrap();
+            e.ingest(&tail).unwrap();
+        }
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..5 {
+            e.ingest(&nominal).unwrap();
+            e.ingest(&tail).unwrap();
+        }
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(
+            after - before,
+            0,
+            "steady-state ingest allocated at {threads} thread(s)"
+        );
+    }
+}

@@ -87,6 +87,9 @@ fn single_layer_engine_uses_intra_kernel_parallelism() {
 
 #[test]
 fn kernel_products_match_serial_property() {
+    // One persistent pool per lane count, reused across every property
+    // iteration — repeated pool reuse is part of the property.
+    let pools = [kernel::Pool::with_lanes(2), kernel::Pool::with_lanes(4)];
     Prop::new(24).check("kernel_parity", |rng, i| {
         let m = 1 + (i % 40);
         let k = 1 + (i * 7) % 150;
@@ -94,22 +97,38 @@ fn kernel_products_match_serial_property() {
         let a = Mat::gaussian(m, k, rng);
         let b = Mat::gaussian(k, n, rng);
         let c = Mat::gaussian(m, n, rng);
-        for par in [Parallelism::Threads(2), Parallelism::Threads(4)] {
-            let mm = kernel::matmul(&a, &b, par)
-                .max_abs_diff(&kernel::matmul(&a, &b, Parallelism::Serial));
+        let serial = kernel::Pool::serial();
+        for pool in &pools {
+            let lanes = pool.lanes();
+            let mm = kernel::matmul(&a, &b, pool)
+                .max_abs_diff(&kernel::matmul(&a, &b, serial));
             if mm > 0.0 {
-                return Err(format!("matmul not bitwise at {par}: {mm:.2e}"));
+                return Err(format!(
+                    "matmul not bitwise at {lanes} lanes: {mm:.2e}"
+                ));
             }
-            let tm = kernel::t_matmul(&a, &c, par)
-                .max_abs_diff(&kernel::t_matmul(&a, &c, Parallelism::Serial));
+            let tm = kernel::t_matmul(&a, &c, pool)
+                .max_abs_diff(&kernel::t_matmul(&a, &c, serial));
             if tm > 0.0 {
-                return Err(format!("t_matmul not bitwise at {par}: {tm:.2e}"));
+                return Err(format!(
+                    "t_matmul not bitwise at {lanes} lanes: {tm:.2e}"
+                ));
             }
-            let mt = kernel::matmul_t(&b, &c, par).max_abs_diff(
-                &kernel::matmul_t(&b, &c, Parallelism::Serial),
-            );
+            let mt = kernel::matmul_t(&b, &c, pool)
+                .max_abs_diff(&kernel::matmul_t(&b, &c, serial));
             if mt > 0.0 {
-                return Err(format!("matmul_t not bitwise at {par}: {mt:.2e}"));
+                return Err(format!(
+                    "matmul_t not bitwise at {lanes} lanes: {mt:.2e}"
+                ));
+            }
+            // The persistent-pool kernels must also agree with the
+            // PR3-era spawn-per-call reference bitwise.
+            let sc = kernel::t_matmul(&a, &c, pool)
+                .max_abs_diff(&kernel::scoped::t_matmul(&a, &c, lanes));
+            if sc > 0.0 {
+                return Err(format!(
+                    "pool vs scoped not bitwise at {lanes} lanes: {sc:.2e}"
+                ));
             }
         }
         Ok(())
