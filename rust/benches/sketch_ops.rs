@@ -13,8 +13,9 @@
 //! numerically cross-checked against serial here (<= 1e-12, expected
 //! bitwise) so a kernel regression fails the bench run itself.
 
+use sketchgrad::archive::{archive_record_bytes, SessionArchive};
 use sketchgrad::benchkit::{quick_requested, Bench};
-use sketchgrad::config::ServeConfig;
+use sketchgrad::config::{ArchiveConfig, ServeConfig};
 use sketchgrad::monitor::{step_metrics, MonitorHub};
 use sketchgrad::serve::{monitor_config, Daemon, SessionSpec, SketchClient};
 use sketchgrad::sketch::metrics::stable_rank_power;
@@ -247,6 +248,33 @@ fn main() {
         });
     }
 
+    // --- archive ring: steady-state record + query (DESIGN.md §7) ---
+    // Record benches the in-place slot overwrite a full ring performs on
+    // every sampled ingest interval; the trajectory query is the cheapest
+    // whole-archive analytics pass (per-layer Frobenius norms over every
+    // stored interval) and is the `archive_query_ns` the CI gate tracks.
+    let (archive_query_ns, archive_bytes_per_interval) = {
+        let mut engine = bench_engine(1);
+        let unit = engine.config().precision.bytes();
+        let cap = if quick { 16usize } else { 64 };
+        let mut archive = SessionArchive::new(cap, 1, unit);
+        for _ in 0..cap {
+            engine.ingest(&acts).unwrap();
+            archive.maybe_record(engine.batches_ingested(), 1.0, engine.layers());
+        }
+        assert_eq!(archive.len(), cap, "ring filled before steady-state bench");
+        bench.run("archive_record", Some((1.0, "records/s")), || {
+            archive.maybe_record(engine.batches_ingested(), 1.0, engine.layers());
+        });
+        bench.run("archive_query_trajectory", Some((1.0, "queries/s")), || {
+            let _ = archive.trajectory();
+        });
+        (
+            bench.result("archive_query_trajectory").unwrap().ns_per_op(),
+            archive_record_bytes(&BENCH_DIMS, BENCH_RANK, unit) as f64,
+        )
+    };
+
     // --- ingest over loopback (serve subsystem, DESIGN.md §5) ---
     // One full monitored step through sketchd on 127.0.0.1 vs the same
     // step in-process (engine ingest + metrics + hub observe): the gap
@@ -260,6 +288,7 @@ fn main() {
         session_quota_bytes: 0,
         snapshot_path: snap_path.to_string_lossy().into_owned(),
         threads: 1,
+        archive: ArchiveConfig::default(),
     })
     .expect("bind loopback daemon");
     let addr = daemon.local_addr().unwrap().to_string();
@@ -313,7 +342,8 @@ fn main() {
          fused vs PR3 {fused_vs_pr3:.2}x (4t {fused_vs_pr3_4t:.2}x) | \
          pool reuse {pool_reuse:.2}x | reconstruct 4t {recon_4t:.2}x | \
          parallel divergence {divergence:.2e} | loopback overhead \
-         {loopback_overhead:.2}x"
+         {loopback_overhead:.2}x | archive query {archive_query_ns:.0} ns \
+         ({archive_bytes_per_interval:.0} B/interval)"
     );
     bench
         .write_json(
@@ -328,6 +358,8 @@ fn main() {
                 ("pool_reuse_speedup", pool_reuse),
                 ("parallel_max_abs_diff", divergence),
                 ("loopback_overhead_x", loopback_overhead),
+                ("archive_query_ns", archive_query_ns),
+                ("archive_bytes_per_interval", archive_bytes_per_interval),
             ],
             BENCH_JSON,
         )

@@ -1,0 +1,194 @@
+//! Analytics computed entirely from archived sketches.
+//!
+//! Everything here reads only [`super::SessionArchive`] records and the
+//! existing `sketch::eig` machinery — no access to raw activations or
+//! gradients is needed, which is the point: the retained Z sketches
+//! (gradient-weighted activation sketches, paper Eq. 5c) are a
+//! sufficient statistic for
+//!
+//! * **trajectory** — per-layer Frobenius gradient-norm proxies per
+//!   retained interval,
+//! * **similarity** — cross-step cosine similarity between a layer's
+//!   sketches (candidate training-data attribution scores in the sense
+//!   of Schioppa, arXiv 2402.03994),
+//! * **drift** — top singular value and stable rank of a layer's sketch
+//!   across the run (per-layer invariant scalars à la BASIS).
+//!
+//! All three are deterministic functions of the stored records, so a
+//! warm-restarted daemon whose archive round-tripped through a snapshot
+//! answers bit-identically.
+
+use crate::sketch::{eig, Mat};
+
+use super::ring::SessionArchive;
+
+/// One interval of the gradient-norm trajectory.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TrajectoryPoint {
+    pub step: u64,
+    pub loss: f32,
+    /// `||Z^[l]||_F` per layer — the sketched gradient-energy proxy.
+    pub z_norms: Vec<f64>,
+}
+
+/// One interval of the spectral-drift series for a single layer.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DriftPoint {
+    pub step: u64,
+    /// Top singular value of the layer's Z sketch.
+    pub top_sigma: f64,
+    /// `||Z||_F^2 / sigma_1^2` (0.0 for a zero or empty sketch).
+    pub stable_rank: f64,
+}
+
+impl SessionArchive {
+    /// Gradient-norm trajectory over every retained interval, oldest
+    /// first.
+    pub fn trajectory(&self) -> Vec<TrajectoryPoint> {
+        self.iter()
+            .map(|rec| TrajectoryPoint {
+                step: rec.step,
+                loss: rec.loss,
+                z_norms: rec.zs.iter().map(|z| z.fro_norm()).collect(),
+            })
+            .collect()
+    }
+
+    /// Cross-step cosine similarity of one layer's Z sketch: the (i, j)
+    /// entry is `<Z_i, Z_j>_F / (||Z_i||_F ||Z_j||_F)` between the i-th
+    /// and j-th retained intervals (oldest first).  Returns the interval
+    /// steps alongside the dense n x n matrix.  Pairs involving a zero
+    /// sketch score 0.0; the matrix is exactly symmetric (each pair is
+    /// computed once and mirrored).
+    pub fn similarity(&self, layer: usize) -> (Vec<u64>, Mat) {
+        let recs: Vec<_> = self
+            .iter()
+            .filter(|rec| layer < rec.zs.len())
+            .collect();
+        let n = recs.len();
+        let steps: Vec<u64> = recs.iter().map(|r| r.step).collect();
+        let norms: Vec<f64> =
+            recs.iter().map(|r| r.zs[layer].fro_norm()).collect();
+        let mut sim = Mat::zeros(n, n);
+        for i in 0..n {
+            for j in i..n {
+                let denom = norms[i] * norms[j];
+                let v = if denom == 0.0 {
+                    0.0
+                } else {
+                    let a = &recs[i].zs[layer].data;
+                    let b = &recs[j].zs[layer].data;
+                    let dot: f64 =
+                        a.iter().zip(b).map(|(x, y)| x * y).sum();
+                    dot / denom
+                };
+                sim.data[i * n + j] = v;
+                sim.data[j * n + i] = v;
+            }
+        }
+        (steps, sim)
+    }
+
+    /// Top singular value + stable rank of one layer's Z sketch per
+    /// retained interval, oldest first.  Cold or zero sketches yield
+    /// (0.0, 0.0) — `eig` handles degenerate inputs without panicking.
+    pub fn drift(&self, layer: usize) -> Vec<DriftPoint> {
+        self.iter()
+            .filter(|rec| layer < rec.zs.len())
+            .map(|rec| {
+                let z = &rec.zs[layer];
+                let sv = eig::singular_values(z);
+                let top = sv.first().copied().unwrap_or(0.0);
+                let stable_rank = if top == 0.0 {
+                    0.0
+                } else {
+                    let f = z.fro_norm();
+                    (f * f) / (top * top)
+                };
+                DriftPoint { step: rec.step, top_sigma: top, stable_rank }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SketchTriplet;
+
+    fn layers(dims: &[usize], rank: usize, fill: f64) -> Vec<SketchTriplet> {
+        dims.iter()
+            .map(|&d| {
+                let mut t = SketchTriplet::zeros(d, rank, 0.9);
+                t.z.data.iter_mut().for_each(|v| *v = fill);
+                t
+            })
+            .collect()
+    }
+
+    #[test]
+    fn trajectory_reports_fro_norms_per_layer() {
+        let dims = [3usize, 2];
+        let mut ar = SessionArchive::new(8, 1, 4);
+        ar.maybe_record(1, 0.5, &layers(&dims, 1, 2.0));
+        ar.maybe_record(2, 0.25, &layers(&dims, 1, 0.0));
+        let traj = ar.trajectory();
+        assert_eq!(traj.len(), 2);
+        assert_eq!(traj[0].step, 1);
+        assert_eq!(traj[0].loss, 0.5);
+        // Z is d x k with k = 3; ||fill * ones||_F = fill * sqrt(d * k).
+        let expect = |d: usize| 2.0 * ((d * 3) as f64).sqrt();
+        assert!((traj[0].z_norms[0] - expect(3)).abs() < 1e-12);
+        assert!((traj[0].z_norms[1] - expect(2)).abs() < 1e-12);
+        assert_eq!(traj[1].z_norms, vec![0.0, 0.0]);
+    }
+
+    #[test]
+    fn similarity_is_symmetric_with_unit_diagonal() {
+        let dims = [4usize];
+        let mut ar = SessionArchive::new(8, 1, 4);
+        ar.maybe_record(1, 0.0, &layers(&dims, 1, 1.0));
+        ar.maybe_record(2, 0.0, &layers(&dims, 1, -3.0));
+        ar.maybe_record(3, 0.0, &layers(&dims, 1, 0.0));
+        let (steps, sim) = ar.similarity(0);
+        assert_eq!(steps, vec![1, 2, 3]);
+        assert_eq!(sim.rows, 3);
+        // Parallel fills: cosine is exactly +/-1; zero sketch scores 0.
+        assert!((sim.data[0] - 1.0).abs() < 1e-12);
+        assert!((sim.data[1] + 1.0).abs() < 1e-12);
+        assert_eq!(sim.data[2], 0.0);
+        assert_eq!(sim.data[8], 0.0); // zero-vs-zero diagonal
+        for i in 0..3 {
+            for j in 0..3 {
+                assert_eq!(sim.data[i * 3 + j], sim.data[j * 3 + i]);
+            }
+        }
+    }
+
+    #[test]
+    fn drift_matches_eig_on_stored_sketches() {
+        let dims = [5usize];
+        let mut ar = SessionArchive::new(8, 1, 4);
+        ar.maybe_record(1, 0.0, &layers(&dims, 2, 0.0));
+        ar.maybe_record(2, 0.0, &layers(&dims, 2, 1.5));
+        let drift = ar.drift(0);
+        assert_eq!(drift.len(), 2);
+        // Zero sketch: degenerate but well-defined.
+        assert_eq!(drift[0].top_sigma, 0.0);
+        assert_eq!(drift[0].stable_rank, 0.0);
+        // Rank-1 constant matrix: sigma_1 = ||Z||_F, stable rank 1.
+        let z = &ar.get(1).unwrap().zs[0];
+        assert!((drift[1].top_sigma - z.fro_norm()).abs() < 1e-9);
+        assert!((drift[1].stable_rank - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn out_of_range_layer_yields_empty_results() {
+        let mut ar = SessionArchive::new(4, 1, 4);
+        ar.maybe_record(1, 0.0, &layers(&[3], 1, 1.0));
+        let (steps, sim) = ar.similarity(7);
+        assert!(steps.is_empty());
+        assert_eq!(sim.rows, 0);
+        assert!(ar.drift(7).is_empty());
+    }
+}

@@ -1,0 +1,35 @@
+//! The sketch archive: a queryable per-session history of interval
+//! sketch snapshots, turning the monitor from an alarm into an
+//! analytics service (ROADMAP item 5; Schioppa, arXiv 2402.03994).
+//!
+//! Each monitored session may retain a bounded **ring** of per-ingest
+//! Z-sketch snapshots ([`ring::SessionArchive`]): configurable capacity
+//! and sampling stride, oldest-first eviction, and honest byte
+//! accounting in the same accountant unit the engine charges for its
+//! resident sketches.  Only the Z sketch (the gradient-weighted
+//! activation sketch, paper Eq. 5c) is retained — it alone carries the
+//! gradient-norm, similarity and spectral-drift signals the analytics
+//! layer serves, at a third of the bytes of a full (X, Y, Z) triplet.
+//!
+//! The analytics layer ([`analytics`]) is computed **entirely from the
+//! stored sketches** through the existing [`crate::sketch::eig`]
+//! machinery:
+//!
+//! * gradient-norm trajectories — per-layer `||Z||_F` per interval,
+//! * cross-step sketch cosine similarity (candidate attribution
+//!   scores between training intervals),
+//! * top singular-value / stable-rank drift across a run.
+//!
+//! The serve layer exposes all of it over the wire
+//! (`QueryTrajectory`/`QuerySimilarity`/`QueryDrift`/`ArchiveInfo`,
+//! proto v2) and piggybacks archive persistence on the daemon's
+//! durable snapshots, so query answers survive a warm restart
+//! bit-exactly.  See DESIGN.md §7.
+
+pub mod analytics;
+pub mod ring;
+
+pub use analytics::{DriftPoint, TrajectoryPoint};
+pub use ring::{
+    archive_record_bytes, ArchiveState, IntervalRecord, SessionArchive,
+};

@@ -1,0 +1,305 @@
+//! The per-session snapshot ring: bounded retention of interval
+//! Z-sketches with stride sampling, oldest-first eviction and honest
+//! byte accounting.
+//!
+//! Steady-state recording is **allocation-free**: once the ring is full
+//! every further record overwrites the oldest slot's resident matrices
+//! element-wise (`copy_from_slice`), so the daemon's zero-allocation
+//! ingest hot path (see `tests/ingest_alloc.rs`) is preserved with
+//! archiving enabled.  Allocation only happens while the ring is still
+//! filling (warm-up) or after a rank change reshapes the sketches.
+
+use crate::sketch::{Mat, SketchTriplet};
+
+/// One retained ingest interval: the step counter (engine
+/// `batches_ingested` at capture time), the observed loss and a copy of
+/// every layer's Z sketch (d_out x k).
+#[derive(Clone, Debug, PartialEq)]
+pub struct IntervalRecord {
+    pub step: u64,
+    pub loss: f32,
+    pub zs: Vec<Mat>,
+}
+
+/// Accountant bytes for one interval record at `unit` bytes per sketch
+/// element (the engine's precision width) plus the per-record scalars
+/// (step u64 + loss f32).  Mirrors `sketch::engine_state_bytes`: a
+/// fixed formula, independent of container overheads.
+pub fn archive_record_bytes(
+    layer_dims: &[usize],
+    rank: usize,
+    unit: usize,
+) -> usize {
+    let k = 2 * rank + 1;
+    layer_dims.iter().map(|d| d * k * unit).sum::<usize>() + 12
+}
+
+fn record_bytes(rec: &IntervalRecord, unit: usize) -> usize {
+    rec.zs
+        .iter()
+        .map(|z| z.rows * z.cols * unit)
+        .sum::<usize>()
+        + 12
+}
+
+/// Plain-data image of a [`SessionArchive`] for durable snapshots;
+/// records are stored oldest-first, so a restored archive answers every
+/// query bit-identically to the archive it was captured from.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchiveState {
+    pub capacity: usize,
+    pub stride: usize,
+    pub seen: u64,
+    pub unit: usize,
+    /// Retained records, oldest first.
+    pub records: Vec<IntervalRecord>,
+}
+
+/// Ring buffer of interval sketch snapshots for one monitored session.
+///
+/// * `capacity` bounds retained intervals (0 disables archiving);
+/// * `stride` samples every N-th ingest interval (the first observed
+///   interval is always eligible);
+/// * eviction is strictly oldest-first;
+/// * [`SessionArchive::bytes`] reports retained bytes at the accountant
+///   unit handed in at construction.
+#[derive(Clone, Debug)]
+pub struct SessionArchive {
+    capacity: usize,
+    stride: usize,
+    /// Ingest intervals observed (recorded or skipped by the stride).
+    seen: u64,
+    /// Accountant bytes per sketch element (engine precision width).
+    unit: usize,
+    slots: Vec<IntervalRecord>,
+    /// Index of the oldest record once the ring has wrapped.
+    head: usize,
+}
+
+impl SessionArchive {
+    /// `stride` is clamped to >= 1 (0 would never sample anything and
+    /// is rejected by config validation before it gets here).
+    pub fn new(capacity: usize, stride: usize, unit: usize) -> Self {
+        SessionArchive {
+            capacity,
+            stride: stride.max(1),
+            seen: 0,
+            unit,
+            slots: Vec::new(),
+            head: 0,
+        }
+    }
+
+    /// Observe one ingest interval; record it if the stride selects it.
+    /// Returns whether a record was written.  In steady state (ring
+    /// full, shapes unchanged) this performs no heap allocation: the
+    /// oldest slot is overwritten in place.
+    pub fn maybe_record(
+        &mut self,
+        step: u64,
+        loss: f32,
+        layers: &[SketchTriplet],
+    ) -> bool {
+        if self.capacity == 0 {
+            return false;
+        }
+        let due = self.seen % self.stride as u64 == 0;
+        self.seen += 1;
+        if !due {
+            return false;
+        }
+        if self.slots.len() < self.capacity {
+            self.slots.push(IntervalRecord {
+                step,
+                loss,
+                zs: layers.iter().map(|t| t.z.clone()).collect(),
+            });
+        } else {
+            let slot = &mut self.slots[self.head];
+            slot.step = step;
+            slot.loss = loss;
+            for (dst, t) in slot.zs.iter_mut().zip(layers) {
+                if dst.rows == t.z.rows && dst.cols == t.z.cols {
+                    dst.data.copy_from_slice(&t.z.data);
+                } else {
+                    // Rank change reshaped the sketches — not a
+                    // steady-state path; reallocate the slot.
+                    *dst = t.z.clone();
+                }
+            }
+            self.head = (self.head + 1) % self.capacity;
+        }
+        true
+    }
+
+    /// Retained records.
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.slots.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn stride(&self) -> usize {
+        self.stride
+    }
+
+    /// Ingest intervals observed so far (recorded + stride-skipped).
+    pub fn intervals_seen(&self) -> u64 {
+        self.seen
+    }
+
+    /// Accountant unit (bytes per sketch element).
+    pub fn unit(&self) -> usize {
+        self.unit
+    }
+
+    /// The `i`-th retained record in logical (oldest-first) order.
+    pub fn get(&self, i: usize) -> Option<&IntervalRecord> {
+        if i >= self.slots.len() {
+            return None;
+        }
+        Some(&self.slots[(self.head + i) % self.slots.len()])
+    }
+
+    /// Retained records, oldest first.
+    pub fn iter(&self) -> impl Iterator<Item = &IntervalRecord> {
+        (0..self.slots.len())
+            .map(move |i| &self.slots[(self.head + i) % self.slots.len()])
+    }
+
+    /// Honest retained-bytes accounting: sketch elements at the
+    /// accountant unit plus the per-record scalars.  Bounded by
+    /// `capacity * archive_record_bytes(..)` for fixed layer shapes.
+    pub fn bytes(&self) -> usize {
+        self.slots.iter().map(|r| record_bytes(r, self.unit)).sum()
+    }
+
+    /// Plain-data image (records oldest-first) for durable snapshots.
+    pub fn state(&self) -> ArchiveState {
+        ArchiveState {
+            capacity: self.capacity,
+            stride: self.stride,
+            seen: self.seen,
+            unit: self.unit,
+            records: self.iter().cloned().collect(),
+        }
+    }
+
+    /// Rebuild from a snapshot image.  The restored ring is re-packed
+    /// oldest-first (head 0); logical order — and therefore every query
+    /// answer — is identical to the archive the state was captured from.
+    pub fn from_state(st: &ArchiveState) -> Self {
+        let mut slots = st.records.clone();
+        slots.truncate(st.capacity);
+        SessionArchive {
+            capacity: st.capacity,
+            stride: st.stride.max(1),
+            seen: st.seen,
+            unit: st.unit,
+            slots,
+            head: 0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sketch::SketchTriplet;
+
+    fn layers(dims: &[usize], rank: usize, fill: f64) -> Vec<SketchTriplet> {
+        dims.iter()
+            .map(|&d| {
+                let mut t = SketchTriplet::zeros(d, rank, 0.9);
+                t.z.data.iter_mut().for_each(|v| *v = fill);
+                t
+            })
+            .collect()
+    }
+
+    #[test]
+    fn ring_evicts_oldest_first() {
+        let dims = [6usize, 4];
+        let mut ar = SessionArchive::new(3, 1, 4);
+        for step in 1..=7u64 {
+            assert!(ar.maybe_record(step, step as f32, &layers(&dims, 2, step as f64)));
+        }
+        assert_eq!(ar.len(), 3);
+        let steps: Vec<u64> = ar.iter().map(|r| r.step).collect();
+        assert_eq!(steps, vec![5, 6, 7]);
+        // Payloads travelled with their records.
+        assert_eq!(ar.get(0).unwrap().zs[0].data[0], 5.0);
+        assert_eq!(ar.get(2).unwrap().zs[1].data[0], 7.0);
+        assert!(ar.get(3).is_none());
+    }
+
+    #[test]
+    fn stride_samples_every_nth_interval() {
+        let dims = [4usize];
+        let mut ar = SessionArchive::new(16, 3, 4);
+        let mut recorded = Vec::new();
+        for step in 1..=10u64 {
+            if ar.maybe_record(step, 0.0, &layers(&dims, 1, 0.0)) {
+                recorded.push(step);
+            }
+        }
+        // First interval always eligible, then every 3rd.
+        assert_eq!(recorded, vec![1, 4, 7, 10]);
+        assert_eq!(ar.intervals_seen(), 10);
+        assert_eq!(ar.len(), 4);
+    }
+
+    #[test]
+    fn capacity_zero_disables_recording() {
+        let mut ar = SessionArchive::new(0, 1, 4);
+        assert!(!ar.maybe_record(1, 0.0, &layers(&[4], 1, 1.0)));
+        assert!(ar.is_empty());
+        assert_eq!(ar.bytes(), 0);
+    }
+
+    #[test]
+    fn byte_accounting_matches_fixed_formula_and_caps() {
+        let dims = [8usize, 6, 4];
+        let rank = 2;
+        let unit = 4;
+        let per = archive_record_bytes(&dims, rank, unit);
+        let k = 2 * rank + 1;
+        assert_eq!(per, (8 + 6 + 4) * k * unit + 12);
+        let mut ar = SessionArchive::new(4, 1, unit);
+        for step in 1..=9u64 {
+            ar.maybe_record(step, 0.5, &layers(&dims, rank, 1.0));
+            assert_eq!(ar.bytes(), ar.len() * per);
+        }
+        // Full ring: retained bytes are capped and constant.
+        assert_eq!(ar.bytes(), 4 * per);
+    }
+
+    #[test]
+    fn state_roundtrip_preserves_logical_order() {
+        let dims = [5usize, 3];
+        let mut ar = SessionArchive::new(3, 2, 4);
+        for step in 1..=8u64 {
+            ar.maybe_record(step, step as f32 * 0.1, &layers(&dims, 2, step as f64));
+        }
+        let st = ar.state();
+        let back = SessionArchive::from_state(&st);
+        assert_eq!(back.len(), ar.len());
+        assert_eq!(back.intervals_seen(), ar.intervals_seen());
+        assert_eq!(back.stride(), ar.stride());
+        assert_eq!(back.capacity(), ar.capacity());
+        assert_eq!(back.bytes(), ar.bytes());
+        let a: Vec<&IntervalRecord> = ar.iter().collect();
+        let b: Vec<&IntervalRecord> = back.iter().collect();
+        assert_eq!(a, b);
+        // And recording continues seamlessly after a restore.
+        let mut back = back;
+        back.maybe_record(9, 0.9, &layers(&dims, 2, 9.0));
+        assert_eq!(back.iter().last().unwrap().step, 9);
+    }
+}

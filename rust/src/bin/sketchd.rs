@@ -8,6 +8,7 @@
 //! sketchd [--config serve.toml] [--addr 127.0.0.1:7070]
 //!         [--max-sessions 16] [--snapshot-interval 30]
 //!         [--quota 67108864] [--snapshot-path sketchd.snapshot]
+//!         [--archive-capacity 64] [--archive-stride 1]
 //!         [--threads 1]
 //! ```
 //!

@@ -181,6 +181,27 @@ impl ExperimentConfig {
     }
 }
 
+/// Configuration for the per-session sketch archive (`rust/src/archive`),
+/// loadable from an `[archive]` TOML section with CLI overrides
+/// (`--archive-capacity` / `--archive-stride`).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ArchiveConfig {
+    /// Retained interval snapshots per session (ring capacity; 0
+    /// disables archiving entirely).
+    pub capacity: usize,
+    /// Sample every N-th ingest interval (>= 1; 1 = every interval).
+    pub stride: usize,
+}
+
+impl Default for ArchiveConfig {
+    fn default() -> Self {
+        ArchiveConfig {
+            capacity: 64,
+            stride: 1,
+        }
+    }
+}
+
 /// Configuration for the `sketchd` monitoring daemon (`rust/src/serve`),
 /// loadable from a `[serve]` TOML section with CLI overrides.
 #[derive(Clone, Debug, PartialEq)]
@@ -202,6 +223,8 @@ pub struct ServeConfig {
     /// by every tenant engine and the hub's cross-tenant diagnosis
     /// (0 = auto).
     pub threads: usize,
+    /// Per-session sketch-history retention (`[archive]` section).
+    pub archive: ArchiveConfig,
 }
 
 impl Default for ServeConfig {
@@ -213,6 +236,7 @@ impl Default for ServeConfig {
             session_quota_bytes: 64 << 20,
             snapshot_path: "sketchd.snapshot".into(),
             threads: 1,
+            archive: ArchiveConfig::default(),
         }
     }
 }
@@ -238,6 +262,10 @@ impl ServeConfig {
             )?,
             snapshot_path: t.str_or("serve.snapshot_path", &d.snapshot_path)?,
             threads: resolve_threads(t.usize_or("serve.threads", d.threads)?),
+            archive: ArchiveConfig {
+                capacity: t.usize_or("archive.capacity", d.archive.capacity)?,
+                stride: t.usize_or("archive.stride", d.archive.stride)?,
+            },
         })
     }
 
@@ -250,6 +278,9 @@ impl ServeConfig {
         }
         if self.snapshot_path.is_empty() {
             bail!("serve.snapshot_path must not be empty");
+        }
+        if self.archive.stride == 0 {
+            bail!("archive.stride must be >= 1");
         }
         Ok(())
     }
@@ -356,6 +387,9 @@ snapshot_interval_secs = 5
 session_quota_bytes = 1024
 snapshot_path = "/tmp/snap.bin"
 threads = 2
+[archive]
+capacity = 12
+stride = 3
 "#,
         )
         .unwrap();
@@ -366,17 +400,22 @@ threads = 2
         assert_eq!(c.session_quota_bytes, 1024);
         assert_eq!(c.snapshot_path, "/tmp/snap.bin");
         assert_eq!(c.threads, 2);
+        assert_eq!(c.archive, ArchiveConfig { capacity: 12, stride: 3 });
         c.validate().unwrap();
 
-        // Missing section falls back to defaults entirely.
+        // Missing sections fall back to defaults entirely.
         let empty = Toml::parse("").unwrap();
         assert_eq!(ServeConfig::from_toml(&empty).unwrap(), d);
+        assert_eq!(d.archive, ArchiveConfig { capacity: 64, stride: 1 });
 
         let mut bad = d.clone();
         bad.max_sessions = 0;
         assert!(bad.validate().is_err());
-        bad = d;
+        bad = d.clone();
         bad.addr.clear();
+        assert!(bad.validate().is_err());
+        bad = d;
+        bad.archive.stride = 0;
         assert!(bad.validate().is_err());
     }
 }

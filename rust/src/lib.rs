@@ -16,6 +16,7 @@
 //!
 //! See DESIGN.md for the full system inventory and experiment index.
 
+pub mod archive;
 pub mod baselines;
 pub mod benchkit;
 pub mod config;

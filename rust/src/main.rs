@@ -10,7 +10,8 @@
 //!                 (native substrate — no artifacts needed)
 //!   serve         run the sketchd monitoring daemon in-process
 //!   connect       talk to a sketchd daemon (--probe / --probe-resume N /
-//!                 --shutdown / status)
+//!                 --stats / --query-trajectory N / --query-similarity N /
+//!                 --query-drift N / --archive-info N / --shutdown / status)
 //!   memory-table  §4.7 / §5.3 memory models (TAB-MEM1/2)
 //!   bound-check   Thm 4.2 sqrt(6)·tau_{r+1} validation
 //!   info          manifest + platform summary
@@ -494,12 +495,22 @@ fn run_with_artifact(
 /// `sketchgrad connect`: client-side access to a running sketchd.
 /// `--probe` drives a full mirrored ingest/diagnose/snapshot cycle,
 /// `--probe-resume N` verifies a warm resume after a daemon restart,
+/// `--stats` prints daemon-wide and per-session counters,
+/// `--query-trajectory N` / `--query-similarity N` / `--query-drift N`
+/// (with `--layer L`, default 0) and `--archive-info N` read the
+/// session's archived sketch history (DESIGN.md §7),
 /// `--shutdown` snapshots and stops the daemon; with none of those the
 /// command prints the daemon's capacity status.
 fn cmd_connect(args: &mut Args) -> Result<()> {
     let addr = args.opt_or("addr", "127.0.0.1:7070");
     let probe = args.flag("probe");
     let probe_resume = args.opt("probe-resume");
+    let stats = args.flag("stats");
+    let query_trajectory = args.opt("query-trajectory");
+    let query_similarity = args.opt("query-similarity");
+    let query_drift = args.opt("query-drift");
+    let archive_info = args.opt("archive-info");
+    let layer = args.opt_usize("layer", 0)?;
     let shutdown = args.flag("shutdown");
     args.finish()?;
     let mut acted = false;
@@ -512,6 +523,94 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
             .parse()
             .map_err(|_| anyhow::anyhow!("--probe-resume needs a session id"))?;
         run_probe_resume(&addr, session)?;
+        acted = true;
+    }
+    if stats {
+        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let (daemon, sessions) = client.stats()?;
+        println!(
+            "daemon: {}/{} sessions, {} ingested, {} frames served, {} archived",
+            daemon.sessions,
+            daemon.max_sessions,
+            fmt_bytes(daemon.ingest_bytes as usize),
+            daemon.frames_served,
+            fmt_bytes(daemon.archive_bytes as usize),
+        );
+        for s in &sessions {
+            println!(
+                "  session {} {:?}: {} steps, {} ingested, \
+                 archive {} intervals / {}",
+                s.id,
+                s.name,
+                s.steps_seen,
+                fmt_bytes(s.ingest_bytes as usize),
+                s.archive_intervals,
+                fmt_bytes(s.archive_bytes as usize),
+            );
+        }
+        acted = true;
+    }
+    if let Some(raw) = query_trajectory {
+        let session = parse_session(&raw, "--query-trajectory")?;
+        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let points = client.query_trajectory(session)?;
+        println!("trajectory for session {session} ({} intervals):", points.len());
+        for p in &points {
+            let norms = p
+                .z_norms
+                .iter()
+                .map(|v| format!("{v:.4}"))
+                .collect::<Vec<_>>()
+                .join(" ");
+            println!("  step {:>6}  loss {:.4}  ||Z|| [{}]", p.step, p.loss, norms);
+        }
+        acted = true;
+    }
+    if let Some(raw) = query_similarity {
+        let session = parse_session(&raw, "--query-similarity")?;
+        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let (steps, sim) = client.query_similarity(session, layer)?;
+        println!(
+            "cosine similarity, session {session} layer {layer}, steps {steps:?}:"
+        );
+        for i in 0..sim.rows {
+            let row = (0..sim.cols)
+                .map(|j| format!("{:+.3}", sim.data[i * sim.cols + j]))
+                .collect::<Vec<_>>()
+                .join(" ");
+            println!("  [{row}]");
+        }
+        acted = true;
+    }
+    if let Some(raw) = query_drift {
+        let session = parse_session(&raw, "--query-drift")?;
+        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let points = client.query_drift(session, layer)?;
+        println!("spectral drift, session {session} layer {layer}:");
+        for p in &points {
+            println!(
+                "  step {:>6}  top sigma {:.4}  stable rank {:.3}",
+                p.step, p.top_sigma, p.stable_rank
+            );
+        }
+        acted = true;
+    }
+    if let Some(raw) = archive_info {
+        let session = parse_session(&raw, "--archive-info")?;
+        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let a = client.archive_info(session)?;
+        println!(
+            "archive for session {session}: {}/{} intervals (stride {}, \
+             {} seen), steps {}..{}, {} layers, {}",
+            a.intervals,
+            a.capacity,
+            a.stride,
+            a.seen,
+            a.oldest_step,
+            a.newest_step,
+            a.layers,
+            fmt_bytes(a.bytes as usize),
+        );
         acted = true;
     }
     if shutdown {
@@ -528,6 +627,11 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
         );
     }
     Ok(())
+}
+
+fn parse_session(raw: &str, flag: &str) -> Result<u64> {
+    raw.parse()
+        .map_err(|_| anyhow::anyhow!("{flag} needs a session id"))
 }
 
 fn cmd_memory_table(args: &mut Args) -> Result<()> {

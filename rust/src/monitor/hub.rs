@@ -81,6 +81,9 @@ pub struct MonitorSession {
     /// Last sketch-state bytes the tenant's engine reported (the hub does
     /// not own engines — tenants push their accountant reading).
     pub sketch_bytes: usize,
+    /// Last archive-retained bytes the tenant reported (the hub does not
+    /// own archives either — the daemon pushes the ring's accounting).
+    pub archive_bytes: usize,
 }
 
 impl MonitorSession {
@@ -142,6 +145,8 @@ pub struct HubReport {
     pub monitor_bytes: usize,
     /// Sum of tenant-reported sketch-state bytes.
     pub sketch_bytes: usize,
+    /// Sum of tenant-reported archive-retained bytes.
+    pub archive_bytes: usize,
     pub steps_seen: u64,
 }
 
@@ -253,6 +258,7 @@ impl MonitorHub {
                 name: name.to_string(),
                 svc: MonitorService::new(cfg, n_layers),
                 sketch_bytes: 0,
+                archive_bytes: 0,
             },
         );
         Ok(id)
@@ -281,6 +287,9 @@ impl MonitorHub {
                 name: st.name.clone(),
                 svc: MonitorService::from_state(&st.service),
                 sketch_bytes: st.sketch_bytes as usize,
+                // Re-reported by the owner (the daemon re-derives it
+                // from the restored ring) — not part of SessionState.
+                archive_bytes: 0,
             },
         );
         self.next_id = self.next_id.max(st.id + 1);
@@ -342,6 +351,19 @@ impl MonitorHub {
         Ok(())
     }
 
+    /// Record the tenant's current archive retention (accountant bytes).
+    pub fn report_archive_bytes(
+        &mut self,
+        id: SessionId,
+        bytes: usize,
+    ) -> Result<(), HubError> {
+        self.sessions
+            .get_mut(&id)
+            .ok_or(HubError::NoSuchSession(id))?
+            .archive_bytes = bytes;
+        Ok(())
+    }
+
     pub fn diagnose(&self, id: SessionId) -> Result<Diagnosis, HubError> {
         Ok(self.session(id)?.diagnose())
     }
@@ -367,6 +389,7 @@ impl MonitorHub {
                 s.diagnose(),
                 s.monitor_bytes(),
                 s.sketch_bytes,
+                s.archive_bytes,
                 s.steps_seen(),
             )
         });
@@ -374,7 +397,8 @@ impl MonitorHub {
             sessions: rows.len(),
             ..HubReport::default()
         };
-        for (id, name, d, monitor_bytes, sketch_bytes, steps) in rows {
+        for (id, name, d, monitor_bytes, sketch_bytes, archive, steps) in rows
+        {
             if d.healthy() {
                 report.healthy += 1;
             } else {
@@ -382,6 +406,7 @@ impl MonitorHub {
             }
             report.monitor_bytes += monitor_bytes;
             report.sketch_bytes += sketch_bytes;
+            report.archive_bytes += archive;
             report.steps_seen += steps;
         }
         report
@@ -612,7 +637,15 @@ mod tests {
         let b = hub.register("b", cfg(), 2).unwrap();
         hub.report_sketch_bytes(a, 1000).unwrap();
         hub.report_sketch_bytes(b, 500).unwrap();
-        assert_eq!(hub.aggregate().sketch_bytes, 1500);
+        hub.report_archive_bytes(a, 300).unwrap();
+        hub.report_archive_bytes(b, 200).unwrap();
+        let report = hub.aggregate();
+        assert_eq!(report.sketch_bytes, 1500);
+        assert_eq!(report.archive_bytes, 500);
+        assert_eq!(
+            hub.report_archive_bytes(SessionId::from_raw(42), 1),
+            Err(HubError::NoSuchSession(SessionId::from_raw(42)))
+        );
     }
 
     #[test]

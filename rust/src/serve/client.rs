@@ -1,6 +1,6 @@
 //! Blocking client for the sketchd daemon, plus the deterministic
 //! `--probe` / `--probe-resume` drivers behind `sketchgrad connect` and
-//! the CI `serve-smoke` job.
+//! the CI `archive-smoke` job.
 //!
 //! Every method sends one request frame and reads one response frame;
 //! `Busy` and remote protocol errors surface as typed [`ServeError`]
@@ -14,6 +14,7 @@ use std::time::Duration;
 
 use anyhow::{ensure, Context, Result};
 
+use crate::archive::{DriftPoint, SessionArchive, TrajectoryPoint};
 use crate::coordinator::StepMetrics;
 use crate::data::ActStream;
 use crate::monitor::{step_metrics, MonitorHub, SessionId};
@@ -23,7 +24,8 @@ use super::codec::Enc;
 use super::daemon::recon_errors;
 use super::proto::{
     self, monitor_config, read_frame_reusing, write_frame_reusing,
-    ErrorCode, Request, Response, SessionSpec, PROTO_VERSION,
+    ArchiveInfo, DaemonStats, ErrorCode, Request, Response, SessionSpec,
+    SessionStats, PROTO_VERSION,
 };
 
 /// Typed client-side failures.
@@ -286,6 +288,63 @@ impl SketchClient {
             other => Err(unexpected("ShutdownOk", &other)),
         }
     }
+
+    /// Daemon-wide and per-session observability counters.
+    pub fn stats(
+        &mut self,
+    ) -> Result<(DaemonStats, Vec<SessionStats>), ServeError> {
+        match self.round_trip(&Request::Stats)? {
+            Response::StatsOk { daemon, sessions } => Ok((daemon, sessions)),
+            other => Err(unexpected("StatsOk", &other)),
+        }
+    }
+
+    /// Gradient-norm trajectory over the session's archived intervals.
+    pub fn query_trajectory(
+        &mut self,
+        session: u64,
+    ) -> Result<Vec<TrajectoryPoint>, ServeError> {
+        match self.round_trip(&Request::QueryTrajectory { session })? {
+            Response::Trajectory { points } => Ok(points),
+            other => Err(unexpected("Trajectory", &other)),
+        }
+    }
+
+    /// Cross-step cosine similarity of one layer's archived sketches:
+    /// (interval steps, dense symmetric matrix).
+    pub fn query_similarity(
+        &mut self,
+        session: u64,
+        layer: usize,
+    ) -> Result<(Vec<u64>, Mat), ServeError> {
+        match self.round_trip(&Request::QuerySimilarity { session, layer })? {
+            Response::Similarity { steps, sim } => Ok((steps, sim)),
+            other => Err(unexpected("Similarity", &other)),
+        }
+    }
+
+    /// Top-sigma / stable-rank drift of one layer across the archive.
+    pub fn query_drift(
+        &mut self,
+        session: u64,
+        layer: usize,
+    ) -> Result<Vec<DriftPoint>, ServeError> {
+        match self.round_trip(&Request::QueryDrift { session, layer })? {
+            Response::Drift { points } => Ok(points),
+            other => Err(unexpected("Drift", &other)),
+        }
+    }
+
+    /// Archive shape and occupancy for a session.
+    pub fn archive_info(
+        &mut self,
+        session: u64,
+    ) -> Result<ArchiveInfo, ServeError> {
+        match self.round_trip(&Request::ArchiveInfo { session })? {
+            Response::ArchiveInfoOk(info) => Ok(info),
+            other => Err(unexpected("ArchiveInfoOk", &other)),
+        }
+    }
 }
 
 fn unexpected(want: &str, got: &Response) -> ServeError {
@@ -320,17 +379,22 @@ pub fn probe_spec() -> SessionSpec {
     }
 }
 
-/// In-process replica of a probe session: the same engine + hub setup
-/// the daemon builds for [`probe_spec`].
+/// In-process replica of a probe session: the same engine + hub +
+/// archive setup the daemon builds for [`probe_spec`].  The mirror's
+/// ring parameters come from the daemon's `ArchiveInfo` reply, so the
+/// probe verifies archives under whatever `[archive]` config the daemon
+/// actually runs (the CI smoke uses a small capacity to force
+/// eviction).
 struct Mirror {
     engine: SketchEngine,
     hub: MonitorHub,
     id: SessionId,
     stream: ActStream,
+    archive: SessionArchive,
 }
 
 impl Mirror {
-    fn new() -> Result<Mirror> {
+    fn new(archive_capacity: usize, archive_stride: usize) -> Result<Mirror> {
         let spec = probe_spec();
         let engine = SketchConfig::builder()
             .layer_dims(&spec.layer_dims)
@@ -344,15 +408,23 @@ impl Mirror {
             monitor_config(&spec),
             spec.layer_dims.len(),
         )?;
+        let archive = SessionArchive::new(
+            archive_capacity,
+            archive_stride,
+            engine.config().precision.bytes(),
+        );
         Ok(Mirror {
             engine,
             hub,
             id,
             stream: ActStream::new(&PROBE_DIMS, false, PROBE_SEED),
+            archive,
         })
     }
 
-    /// Generate probe step `step`'s batch and apply it locally.
+    /// Generate probe step `step`'s batch and apply it locally,
+    /// recording the interval into the mirror archive like the daemon
+    /// does.
     fn step(&mut self, step: usize) -> Result<(f32, Vec<Mat>)> {
         let n_b = if step == PROBE_STEPS - 1 {
             PROBE_TAIL
@@ -362,10 +434,62 @@ impl Mirror {
         let acts = self.stream.next_batch(n_b);
         let loss = self.stream.loss_at(step, PROBE_STEPS);
         self.engine.ingest(&acts)?;
+        self.archive.maybe_record(
+            self.engine.batches_ingested(),
+            loss,
+            self.engine.layers(),
+        );
         self.hub
             .observe(self.id, &step_metrics(loss, &self.engine.metrics()))?;
         Ok((loss, acts))
     }
+}
+
+/// Assert every archive query answer the daemon gives for `session` is
+/// bit-for-bit identical to the mirror's locally computed one.
+fn verify_archive_queries(
+    client: &mut SketchClient,
+    session: u64,
+    mirror: &Mirror,
+    what: &str,
+) -> Result<()> {
+    let remote_traj = client.query_trajectory(session)?;
+    let local_traj = mirror.archive.trajectory();
+    ensure!(
+        remote_traj == local_traj,
+        "{what}: trajectory diverged: remote {remote_traj:?} local \
+         {local_traj:?}"
+    );
+    for layer in 0..mirror.engine.n_layers() {
+        let (remote_steps, remote_sim) =
+            client.query_similarity(session, layer)?;
+        let (local_steps, local_sim) = mirror.archive.similarity(layer);
+        ensure!(
+            remote_steps == local_steps
+                && remote_sim.rows == local_sim.rows
+                && remote_sim.max_abs_diff(&local_sim) == 0.0,
+            "{what}: similarity diverged at layer {layer}"
+        );
+        let remote_drift = client.query_drift(session, layer)?;
+        let local_drift = mirror.archive.drift(layer);
+        ensure!(
+            remote_drift == local_drift,
+            "{what}: drift diverged at layer {layer}: remote \
+             {remote_drift:?} local {local_drift:?}"
+        );
+    }
+    let info = client.archive_info(session)?;
+    ensure!(
+        info.intervals == mirror.archive.len() as u64
+            && info.seen == mirror.archive.intervals_seen()
+            && info.bytes == mirror.archive.bytes() as u64,
+        "{what}: archive info diverged: remote {info:?} local \
+         (intervals {}, seen {}, bytes {})",
+        mirror.archive.len(),
+        mirror.archive.intervals_seen(),
+        mirror.archive.bytes()
+    );
+    Ok(())
 }
 
 /// `sketchgrad connect --probe`: drive a fresh monitored session through
@@ -381,7 +505,11 @@ pub fn run_probe(addr: &str) -> Result<u64> {
         info.server, info.proto, info.sessions, info.max_sessions
     );
     let session = client.open_session(&probe_spec())?;
-    let mut mirror = Mirror::new()?;
+    // Mirror the daemon's ring parameters so archive answers can be
+    // compared bit-for-bit under any `[archive]` config.
+    let ainfo = client.archive_info(session)?;
+    let mut mirror =
+        Mirror::new(ainfo.capacity as usize, ainfo.stride as usize)?;
     for step in 0..PROBE_STEPS {
         let want_recon = step == PROBE_STEPS - 1;
         let (loss, acts) = mirror.step(step)?;
@@ -415,22 +543,42 @@ pub fn run_probe(addr: &str) -> Result<u64> {
         "steps_seen {} != {PROBE_STEPS}",
         remote.steps_seen
     );
+    verify_archive_queries(&mut client, session, &mirror, "probe")?;
+    let (stats, per_session) = client.stats()?;
+    ensure!(
+        stats.sessions >= 1 && stats.frames_served > 0,
+        "implausible daemon stats: {stats:?}"
+    );
+    let row = per_session
+        .iter()
+        .find(|s| s.id == session)
+        .context("probe session missing from stats")?;
+    ensure!(
+        row.archive_intervals == mirror.archive.len() as u64
+            && row.archive_bytes == mirror.archive.bytes() as u64,
+        "stats archive counters diverged: {row:?}"
+    );
     let (path, bytes, sessions) = client.snapshot()?;
     println!(
         "probe: session={session} steps={} engine_bytes={} healthy={} \
-         mirror=bit-for-bit-ok snapshot={path} ({bytes} B, {sessions} \
-         sessions)",
-        remote.steps_seen, remote.engine_bytes, remote.healthy
+         archive={}x{}B mirror=bit-for-bit-ok snapshot={path} ({bytes} B, \
+         {sessions} sessions)",
+        remote.steps_seen,
+        remote.engine_bytes,
+        remote.healthy,
+        mirror.archive.len(),
+        mirror.archive.bytes()
     );
     Ok(session)
 }
 
 /// `sketchgrad connect --probe-resume <id>`: after a daemon restart,
 /// rebuild the probe mirror by replaying the probe workload in-process,
-/// verify the resumed session diagnoses identically, then ingest ONE
-/// extra batch on both sides — bit-for-bit equal reconstruction errors
-/// prove the resumed engine state matches (`max_state_diff == 0`).
-/// Closes the session on success.
+/// verify the resumed session diagnoses identically — and that every
+/// archive query answers bit-identically to before the restart — then
+/// ingest ONE extra batch on both sides: bit-for-bit equal
+/// reconstruction errors prove the resumed engine state matches
+/// (`max_state_diff == 0`).  Closes the session on success.
 pub fn run_probe_resume(addr: &str, session: u64) -> Result<()> {
     let (mut client, info) = SketchClient::connect(addr)?;
     ensure!(
@@ -438,10 +586,15 @@ pub fn run_probe_resume(addr: &str, session: u64) -> Result<()> {
         "daemon resumed {} sessions, expected >= 1",
         info.sessions
     );
-    let mut mirror = Mirror::new()?;
+    let ainfo = client.archive_info(session)?;
+    let mut mirror =
+        Mirror::new(ainfo.capacity as usize, ainfo.stride as usize)?;
     for step in 0..PROBE_STEPS {
         mirror.step(step)?;
     }
+    // Archive continuity across the restart: the restored ring answers
+    // every query exactly as the pre-restart daemon would have.
+    verify_archive_queries(&mut client, session, &mirror, "probe-resume")?;
     let remote = client.diagnose(session)?;
     let local = mirror.hub.diagnose(mirror.id)?;
     ensure!(
@@ -471,6 +624,8 @@ pub fn run_probe_resume(addr: &str, session: u64) -> Result<()> {
         reply.recon_err,
         local_err
     );
+    // And recording continued seamlessly on the restored ring.
+    verify_archive_queries(&mut client, session, &mirror, "post-resume")?;
     client
         .close_session(session)
         .context("closing probe session")?;

@@ -14,6 +14,12 @@
 //!   interval, on client request (`Snapshot`) and at shutdown; a daemon
 //!   restarted on the same snapshot path resumes every session warm
 //!   (engine `max_state_diff == 0`, detector verdicts identical).
+//! * **History**: every ingest interval is (stride-sampled) recorded
+//!   into the session's [`SessionArchive`] ring; `QueryTrajectory` /
+//!   `QuerySimilarity` / `QueryDrift` / `ArchiveInfo` answer analytics
+//!   from it and `Stats` reports daemon/session counters.  The archive
+//!   rides in the snapshot, so query answers survive a warm restart
+//!   bit-exactly.
 //!
 //! Sessions outlive connections: a client may disconnect and a later
 //! connection (or a daemon restart) continues the same session id.
@@ -21,13 +27,14 @@
 use std::collections::BTreeMap;
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread;
 use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
+use crate::archive::SessionArchive;
 use crate::config::{resolve_threads, ServeConfig};
 use crate::monitor::{step_metrics, HubError, MonitorHub, SessionId};
 use crate::sketch::{
@@ -37,8 +44,8 @@ use crate::util::cli::Args;
 
 use super::codec::Enc;
 use super::proto::{
-    self, monitor_config, ErrorCode, FrameHeader, Request, Response,
-    FRAME_HEADER_LEN, PROTO_VERSION,
+    self, monitor_config, ArchiveInfo, DaemonStats, ErrorCode, FrameHeader,
+    Request, Response, SessionStats, FRAME_HEADER_LEN, PROTO_VERSION,
 };
 use super::store::{DaemonSnapshot, SessionRecord, SnapshotStore};
 
@@ -47,6 +54,10 @@ struct Tenant {
     engine: SketchEngine,
     /// Ingest payload bytes since the session's last `Diagnose`.
     quota_used: u64,
+    /// Lifetime ingest payload bytes (Stats counter; persisted).
+    ingest_bytes: u64,
+    /// Retained sketch history for archive queries.
+    archive: SessionArchive,
 }
 
 struct State {
@@ -69,6 +80,9 @@ struct Shared {
     /// state lock is held, so `save_snapshot`'s capture-and-clear cannot
     /// lose a concurrent mutation's mark.
     dirty: AtomicBool,
+    /// Response frames written across all connections (Stats counter;
+    /// process-lifetime, not persisted).
+    frames_served: AtomicU64,
 }
 
 fn lock(state: &Mutex<State>) -> MutexGuard<'_, State> {
@@ -132,6 +146,8 @@ fn save_snapshot(shared: &Shared) -> Result<(u64, u64)> {
                 session: s.state(),
                 engine: tenant.engine.snapshot(),
                 quota_used: tenant.quota_used,
+                ingest_bytes: tenant.ingest_bytes,
+                archive: tenant.archive.state(),
             });
         }
         shared.dirty.store(false, Ordering::SeqCst);
@@ -196,11 +212,18 @@ fn handle_request(
                 Ok(id) => id,
                 Err(e) => return hub_error(e),
             };
+            let unit = engine.config().precision.bytes();
             st.tenants.insert(
                 id.raw(),
                 Tenant {
                     engine,
                     quota_used: 0,
+                    ingest_bytes: 0,
+                    archive: SessionArchive::new(
+                        shared.cfg.archive.capacity,
+                        shared.cfg.archive.stride,
+                        unit,
+                    ),
                 },
             );
             shared.dirty.store(true, Ordering::SeqCst);
@@ -230,6 +253,19 @@ fn handle_request(
                 return invalid(format!("ingest rejected: {e}"));
             }
             tenant.quota_used += payload_len as u64;
+            tenant.ingest_bytes += payload_len as u64;
+            // Archive this interval (ring-buffered, stride-sampled) and
+            // push the ring's honest byte accounting into the hub.
+            if tenant.archive.maybe_record(
+                tenant.engine.batches_ingested(),
+                loss,
+                tenant.engine.layers(),
+            ) {
+                let archive_bytes = tenant.archive.bytes();
+                if let Err(e) = hub.report_archive_bytes(id, archive_bytes) {
+                    return hub_error(e);
+                }
+            }
             let metrics = tenant.engine.metrics();
             if let Err(e) = hub.observe(id, &step_metrics(loss, &metrics)) {
                 return hub_error(e);
@@ -325,6 +361,109 @@ fn handle_request(
             };
             shared.shutdown.store(true, Ordering::SeqCst);
             Response::ShutdownOk { sessions }
+        }
+        Request::Stats => {
+            let st = lock(&shared.state);
+            let mut daemon = DaemonStats {
+                sessions: st.hub.len() as u64,
+                max_sessions: shared.cfg.max_sessions as u64,
+                frames_served: shared.frames_served.load(Ordering::SeqCst),
+                ..DaemonStats::default()
+            };
+            let mut sessions = Vec::with_capacity(st.hub.len());
+            for s in st.hub.sessions() {
+                let raw = s.id.raw();
+                let (ingest, ar_bytes, ar_n) = match st.tenants.get(&raw) {
+                    Some(t) => (
+                        t.ingest_bytes,
+                        t.archive.bytes() as u64,
+                        t.archive.len() as u64,
+                    ),
+                    None => (0, 0, 0),
+                };
+                daemon.ingest_bytes += ingest;
+                daemon.archive_bytes += ar_bytes;
+                sessions.push(SessionStats {
+                    id: raw,
+                    name: s.name.clone(),
+                    steps_seen: s.steps_seen(),
+                    ingest_bytes: ingest,
+                    archive_bytes: ar_bytes,
+                    archive_intervals: ar_n,
+                });
+            }
+            Response::StatsOk { daemon, sessions }
+        }
+        Request::QueryTrajectory { session } => {
+            let st = lock(&shared.state);
+            match st.tenants.get(&session) {
+                Some(t) => Response::Trajectory {
+                    points: t.archive.trajectory(),
+                },
+                None => hub_error(HubError::NoSuchSession(
+                    SessionId::from_raw(session),
+                )),
+            }
+        }
+        Request::QuerySimilarity { session, layer } => {
+            let st = lock(&shared.state);
+            let tenant = match st.tenants.get(&session) {
+                Some(t) => t,
+                None => {
+                    return hub_error(HubError::NoSuchSession(
+                        SessionId::from_raw(session),
+                    ))
+                }
+            };
+            if layer >= tenant.engine.n_layers() {
+                return invalid(format!(
+                    "layer {layer} out of range (session has {} layers)",
+                    tenant.engine.n_layers()
+                ));
+            }
+            let (steps, sim) = tenant.archive.similarity(layer);
+            Response::Similarity { steps, sim }
+        }
+        Request::QueryDrift { session, layer } => {
+            let st = lock(&shared.state);
+            let tenant = match st.tenants.get(&session) {
+                Some(t) => t,
+                None => {
+                    return hub_error(HubError::NoSuchSession(
+                        SessionId::from_raw(session),
+                    ))
+                }
+            };
+            if layer >= tenant.engine.n_layers() {
+                return invalid(format!(
+                    "layer {layer} out of range (session has {} layers)",
+                    tenant.engine.n_layers()
+                ));
+            }
+            Response::Drift {
+                points: tenant.archive.drift(layer),
+            }
+        }
+        Request::ArchiveInfo { session } => {
+            let st = lock(&shared.state);
+            match st.tenants.get(&session) {
+                Some(t) => Response::ArchiveInfoOk(ArchiveInfo {
+                    capacity: t.archive.capacity() as u64,
+                    stride: t.archive.stride() as u64,
+                    intervals: t.archive.len() as u64,
+                    seen: t.archive.intervals_seen(),
+                    bytes: t.archive.bytes() as u64,
+                    layers: t.engine.n_layers() as u64,
+                    oldest_step: t.archive.get(0).map_or(0, |r| r.step),
+                    newest_step: t
+                        .archive
+                        .get(t.archive.len().wrapping_sub(1))
+                        .map_or(0, |r| r.step),
+                }),
+                None => hub_error(HubError::NoSuchSession(
+                    SessionId::from_raw(session),
+                )),
+            }
         }
     }
 }
@@ -438,8 +577,11 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
             &mut frame,
         )
         .is_err()
-            || fatal
         {
+            return;
+        }
+        shared.frames_served.fetch_add(1, Ordering::SeqCst);
+        if fatal {
             return;
         }
         if shared.shutdown.load(Ordering::SeqCst) {
@@ -476,7 +618,11 @@ impl Daemon {
             .with_context(|| format!("loading snapshot {}", cfg.snapshot_path))?
         {
             for rec in &snap.sessions {
-                state.hub.restore_session(&rec.session)?;
+                let id = state.hub.restore_session(&rec.session)?;
+                let archive = SessionArchive::from_state(&rec.archive);
+                // The hub does not persist archive accounting; re-derive
+                // it from the restored ring.
+                state.hub.report_archive_bytes(id, archive.bytes())?;
                 state.tenants.insert(
                     rec.session.id,
                     Tenant {
@@ -485,6 +631,8 @@ impl Daemon {
                             Arc::clone(&pool),
                         )?,
                         quota_used: rec.quota_used,
+                        ingest_bytes: rec.ingest_bytes,
+                        archive,
                     },
                 );
             }
@@ -499,6 +647,7 @@ impl Daemon {
                 state: Mutex::new(state),
                 shutdown: AtomicBool::new(false),
                 dirty: AtomicBool::new(false),
+                frames_served: AtomicU64::new(0),
             }),
         })
     }
@@ -604,6 +753,10 @@ pub fn serve_from_args(args: &mut Args) -> Result<()> {
         args.opt_usize("quota", cfg.session_quota_bytes)?;
     cfg.snapshot_path = args.opt_or("snapshot-path", &cfg.snapshot_path);
     cfg.threads = resolve_threads(args.opt_usize("threads", cfg.threads)?);
+    cfg.archive.capacity =
+        args.opt_usize("archive-capacity", cfg.archive.capacity)?;
+    cfg.archive.stride =
+        args.opt_usize("archive-stride", cfg.archive.stride)?;
     args.finish()?;
 
     let daemon = Daemon::bind(cfg)?;

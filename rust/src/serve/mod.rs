@@ -12,7 +12,10 @@
 //!   bounds-checked lengths) + CRC-32.
 //! * [`proto`] — versioned frame header and the
 //!   `Hello`/`OpenSession`/`Ingest`/`Observe`/`Diagnose`/`Snapshot`/
-//!   `Close`/`Shutdown` messages.
+//!   `Close`/`Shutdown` messages, plus the v2 analytics ops
+//!   (`Stats`/`QueryTrajectory`/`QuerySimilarity`/`QueryDrift`/
+//!   `ArchiveInfo`) answered from the per-session archive ring
+//!   ([`crate::archive`]).
 //! * [`store`] — atomic write-rename snapshot files (versioned header,
 //!   CRC-checked payload).
 //! * [`daemon`] — the TCP server: admission caps, per-session byte
@@ -32,7 +35,7 @@ pub use client::{
 };
 pub use daemon::{recon_errors, serve_from_args, Daemon, DaemonHandle};
 pub use proto::{
-    monitor_config, ErrorCode, Request, Response, SessionSpec,
-    PROTO_VERSION,
+    monitor_config, ArchiveInfo, DaemonStats, ErrorCode, Request, Response,
+    SessionSpec, SessionStats, PROTO_VERSION,
 };
 pub use store::{DaemonSnapshot, SessionRecord, SnapshotStore};

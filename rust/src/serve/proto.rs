@@ -10,14 +10,19 @@
 //! ```
 //!
 //! Requests (`Hello`/`OpenSession`/`Ingest`/`Observe`/`Diagnose`/
-//! `Snapshot`/`Close`/`Shutdown`) and responses are encoded with the
-//! explicit little-endian codecs in [`super::codec`]; floats travel as
-//! IEEE-754 bit patterns so a remote session is *bit-for-bit* equivalent
-//! to an in-process one.  The server rejects frames whose header version
-//! differs from [`PROTO_VERSION`] with [`ErrorCode::UnsupportedVersion`].
+//! `Snapshot`/`Close`/`Shutdown`, plus the v2 observability + archive
+//! ops `Stats`/`QueryTrajectory`/`QuerySimilarity`/`QueryDrift`/
+//! `ArchiveInfo`) and responses are encoded with the explicit
+//! little-endian codecs in [`super::codec`]; floats travel as IEEE-754
+//! bit patterns so a remote session is *bit-for-bit* equivalent to an
+//! in-process one — and archive query answers are bit-identical across
+//! a daemon warm restart.  The server rejects frames whose header
+//! version differs from [`PROTO_VERSION`] with
+//! [`ErrorCode::UnsupportedVersion`].
 
 use std::io::{Read, Write};
 
+use crate::archive::{DriftPoint, TrajectoryPoint};
 use crate::coordinator::StepMetrics;
 use crate::monitor::{Diagnosis, MonitorConfig};
 use crate::sketch::Mat;
@@ -26,7 +31,9 @@ use super::codec::{CodecError, Dec, Enc};
 
 /// `b"SKD1"` interpreted little-endian.
 pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"SKD1");
-pub const PROTO_VERSION: u16 = 1;
+/// v2: `Stats` + archive query ops (`QueryTrajectory`/`QuerySimilarity`/
+/// `QueryDrift`/`ArchiveInfo`).
+pub const PROTO_VERSION: u16 = 2;
 pub const FRAME_HEADER_LEN: usize = 12;
 /// Upper bound on a frame payload (a 128-batch, 8x512-layer ingest is
 /// ~5 MB; 64 MiB leaves ample headroom while bounding a hostile header).
@@ -42,6 +49,11 @@ pub mod msg {
     pub const SNAPSHOT: u8 = 6;
     pub const CLOSE: u8 = 7;
     pub const SHUTDOWN: u8 = 8;
+    pub const STATS: u8 = 9;
+    pub const QUERY_TRAJECTORY: u8 = 10;
+    pub const QUERY_SIMILARITY: u8 = 11;
+    pub const QUERY_DRIFT: u8 = 12;
+    pub const ARCHIVE_INFO: u8 = 13;
 
     pub const HELLO_OK: u8 = 128;
     pub const SESSION_OPENED: u8 = 129;
@@ -53,6 +65,11 @@ pub mod msg {
     pub const BUSY: u8 = 135;
     pub const ERROR: u8 = 136;
     pub const SHUTDOWN_OK: u8 = 137;
+    pub const STATS_OK: u8 = 138;
+    pub const TRAJECTORY: u8 = 139;
+    pub const SIMILARITY: u8 = 140;
+    pub const DRIFT: u8 = 141;
+    pub const ARCHIVE_INFO_OK: u8 = 142;
 }
 
 /// Protocol error codes carried by [`Response::Error`].
@@ -272,6 +289,50 @@ pub fn monitor_config(spec: &SessionSpec) -> MonitorConfig {
     }
 }
 
+/// Daemon-wide counters served by [`Request::Stats`].
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DaemonStats {
+    pub sessions: u64,
+    pub max_sessions: u64,
+    /// Total ingest payload bytes accepted since daemon start (restored
+    /// sessions carry their counters across a warm restart).
+    pub ingest_bytes: u64,
+    /// Response frames written since daemon start (not persisted).
+    pub frames_served: u64,
+    /// Archive bytes currently retained across all sessions.
+    pub archive_bytes: u64,
+}
+
+/// Per-session counters served by [`Request::Stats`].
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SessionStats {
+    pub id: u64,
+    pub name: String,
+    pub steps_seen: u64,
+    pub ingest_bytes: u64,
+    pub archive_bytes: u64,
+    /// Interval records currently retained in the session's archive.
+    pub archive_intervals: u64,
+}
+
+/// Archive shape/occupancy answered by [`Request::ArchiveInfo`] — also
+/// how mirrors discover the daemon's ring parameters.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ArchiveInfo {
+    pub capacity: u64,
+    pub stride: u64,
+    /// Retained records.
+    pub intervals: u64,
+    /// Ingest intervals observed (recorded + stride-skipped).
+    pub seen: u64,
+    pub bytes: u64,
+    /// Monitored layers per record.
+    pub layers: u64,
+    /// Step of the oldest / newest retained record (0 when empty).
+    pub oldest_step: u64,
+    pub newest_step: u64,
+}
+
 /// Client -> daemon messages.
 #[derive(Clone, Debug)]
 pub enum Request {
@@ -302,6 +363,16 @@ pub enum Request {
     /// Snapshot and stop the daemon (clean remote shutdown — pure-std
     /// builds have no signal handling).
     Shutdown,
+    /// Daemon-wide + per-session observability counters.
+    Stats,
+    /// Gradient-norm trajectory over the session's archived intervals.
+    QueryTrajectory { session: u64 },
+    /// Cross-step cosine similarity of one layer's archived Z sketches.
+    QuerySimilarity { session: u64, layer: usize },
+    /// Top-sigma / stable-rank drift of one layer across the archive.
+    QueryDrift { session: u64, layer: usize },
+    /// Archive shape and occupancy for a session.
+    ArchiveInfo { session: u64 },
 }
 
 impl Request {
@@ -315,6 +386,11 @@ impl Request {
             Request::Snapshot => msg::SNAPSHOT,
             Request::Close { .. } => msg::CLOSE,
             Request::Shutdown => msg::SHUTDOWN,
+            Request::Stats => msg::STATS,
+            Request::QueryTrajectory { .. } => msg::QUERY_TRAJECTORY,
+            Request::QuerySimilarity { .. } => msg::QUERY_SIMILARITY,
+            Request::QueryDrift { .. } => msg::QUERY_DRIFT,
+            Request::ArchiveInfo { .. } => msg::ARCHIVE_INFO,
         }
     }
 
@@ -347,10 +423,16 @@ impl Request {
                 e.u64(*session);
                 enc_step_metrics(e, metrics);
             }
-            Request::Diagnose { session } | Request::Close { session } => {
-                e.u64(*session)
+            Request::Diagnose { session }
+            | Request::Close { session }
+            | Request::QueryTrajectory { session }
+            | Request::ArchiveInfo { session } => e.u64(*session),
+            Request::QuerySimilarity { session, layer }
+            | Request::QueryDrift { session, layer } => {
+                e.u64(*session);
+                e.len32(*layer);
             }
-            Request::Snapshot | Request::Shutdown => {}
+            Request::Snapshot | Request::Shutdown | Request::Stats => {}
         }
     }
 
@@ -391,6 +473,21 @@ impl Request {
             msg::SNAPSHOT => Request::Snapshot,
             msg::CLOSE => Request::Close { session: d.u64()? },
             msg::SHUTDOWN => Request::Shutdown,
+            msg::STATS => Request::Stats,
+            msg::QUERY_TRAJECTORY => Request::QueryTrajectory {
+                session: d.u64()?,
+            },
+            msg::QUERY_SIMILARITY => Request::QuerySimilarity {
+                session: d.u64()?,
+                layer: d.u32()? as usize,
+            },
+            msg::QUERY_DRIFT => Request::QueryDrift {
+                session: d.u64()?,
+                layer: d.u32()? as usize,
+            },
+            msg::ARCHIVE_INFO => Request::ArchiveInfo {
+                session: d.u64()?,
+            },
             other => {
                 return Err(CodecError::BadTag {
                     what: "request type",
@@ -439,6 +536,19 @@ pub enum Response {
     Busy { used: u64, limit: u64 },
     Error { code: ErrorCode, message: String },
     ShutdownOk { sessions: u64 },
+    StatsOk {
+        daemon: DaemonStats,
+        /// Per-session counters sorted by session id.
+        sessions: Vec<SessionStats>,
+    },
+    /// Archived gradient-norm trajectory, oldest interval first.
+    Trajectory { points: Vec<TrajectoryPoint> },
+    /// Cross-step cosine similarity: `steps[i]` labels row/col `i` of
+    /// the dense symmetric `sim` matrix.
+    Similarity { steps: Vec<u64>, sim: Mat },
+    /// Spectral drift series, oldest interval first.
+    Drift { points: Vec<DriftPoint> },
+    ArchiveInfoOk(ArchiveInfo),
 }
 
 impl Response {
@@ -454,6 +564,11 @@ impl Response {
             Response::Busy { .. } => msg::BUSY,
             Response::Error { .. } => msg::ERROR,
             Response::ShutdownOk { .. } => msg::SHUTDOWN_OK,
+            Response::StatsOk { .. } => msg::STATS_OK,
+            Response::Trajectory { .. } => msg::TRAJECTORY,
+            Response::Similarity { .. } => msg::SIMILARITY,
+            Response::Drift { .. } => msg::DRIFT,
+            Response::ArchiveInfoOk(_) => msg::ARCHIVE_INFO_OK,
         }
     }
 
@@ -520,6 +635,55 @@ impl Response {
                 e.str(message);
             }
             Response::ShutdownOk { sessions } => e.u64(*sessions),
+            Response::StatsOk { daemon, sessions } => {
+                e.u64(daemon.sessions);
+                e.u64(daemon.max_sessions);
+                e.u64(daemon.ingest_bytes);
+                e.u64(daemon.frames_served);
+                e.u64(daemon.archive_bytes);
+                e.len32(sessions.len());
+                for s in sessions {
+                    e.u64(s.id);
+                    e.str(&s.name);
+                    e.u64(s.steps_seen);
+                    e.u64(s.ingest_bytes);
+                    e.u64(s.archive_bytes);
+                    e.u64(s.archive_intervals);
+                }
+            }
+            Response::Trajectory { points } => {
+                e.len32(points.len());
+                for p in points {
+                    e.u64(p.step);
+                    e.f32(p.loss);
+                    e.f64s(&p.z_norms);
+                }
+            }
+            Response::Similarity { steps, sim } => {
+                e.len32(steps.len());
+                for s in steps {
+                    e.u64(*s);
+                }
+                e.mat(sim);
+            }
+            Response::Drift { points } => {
+                e.len32(points.len());
+                for p in points {
+                    e.u64(p.step);
+                    e.f64(p.top_sigma);
+                    e.f64(p.stable_rank);
+                }
+            }
+            Response::ArchiveInfoOk(info) => {
+                e.u64(info.capacity);
+                e.u64(info.stride);
+                e.u64(info.intervals);
+                e.u64(info.seen);
+                e.u64(info.bytes);
+                e.u64(info.layers);
+                e.u64(info.oldest_step);
+                e.u64(info.newest_step);
+            }
         }
     }
 
@@ -570,6 +734,73 @@ impl Response {
             msg::SHUTDOWN_OK => Response::ShutdownOk {
                 sessions: d.u64()?,
             },
+            msg::STATS_OK => {
+                let daemon = DaemonStats {
+                    sessions: d.u64()?,
+                    max_sessions: d.u64()?,
+                    ingest_bytes: d.u64()?,
+                    frames_served: d.u64()?,
+                    archive_bytes: d.u64()?,
+                };
+                let n = d.len32(8 + 4 + 8 * 4)?;
+                let mut sessions = Vec::with_capacity(n);
+                for _ in 0..n {
+                    sessions.push(SessionStats {
+                        id: d.u64()?,
+                        name: d.str()?,
+                        steps_seen: d.u64()?,
+                        ingest_bytes: d.u64()?,
+                        archive_bytes: d.u64()?,
+                        archive_intervals: d.u64()?,
+                    });
+                }
+                Response::StatsOk { daemon, sessions }
+            }
+            msg::TRAJECTORY => {
+                let n = d.len32(8 + 4 + 4)?;
+                let mut points = Vec::with_capacity(n);
+                for _ in 0..n {
+                    points.push(TrajectoryPoint {
+                        step: d.u64()?,
+                        loss: d.f32()?,
+                        z_norms: d.f64s()?,
+                    });
+                }
+                Response::Trajectory { points }
+            }
+            msg::SIMILARITY => {
+                let n = d.len32(8)?;
+                let mut steps = Vec::with_capacity(n);
+                for _ in 0..n {
+                    steps.push(d.u64()?);
+                }
+                Response::Similarity {
+                    steps,
+                    sim: d.mat()?,
+                }
+            }
+            msg::DRIFT => {
+                let n = d.len32(8 + 8 + 8)?;
+                let mut points = Vec::with_capacity(n);
+                for _ in 0..n {
+                    points.push(DriftPoint {
+                        step: d.u64()?,
+                        top_sigma: d.f64()?,
+                        stable_rank: d.f64()?,
+                    });
+                }
+                Response::Drift { points }
+            }
+            msg::ARCHIVE_INFO_OK => Response::ArchiveInfoOk(ArchiveInfo {
+                capacity: d.u64()?,
+                stride: d.u64()?,
+                intervals: d.u64()?,
+                seen: d.u64()?,
+                bytes: d.u64()?,
+                layers: d.u64()?,
+                oldest_step: d.u64()?,
+                newest_step: d.u64()?,
+            }),
             other => {
                 return Err(CodecError::BadTag {
                     what: "response type",
@@ -753,6 +984,35 @@ mod tests {
             roundtrip_req(&Request::Shutdown),
             Request::Shutdown
         ));
+        assert!(matches!(roundtrip_req(&Request::Stats), Request::Stats));
+        assert!(matches!(
+            roundtrip_req(&Request::QueryTrajectory { session: 6 }),
+            Request::QueryTrajectory { session: 6 }
+        ));
+        assert!(matches!(
+            roundtrip_req(&Request::QuerySimilarity {
+                session: 6,
+                layer: 2
+            }),
+            Request::QuerySimilarity {
+                session: 6,
+                layer: 2
+            }
+        ));
+        assert!(matches!(
+            roundtrip_req(&Request::QueryDrift {
+                session: 8,
+                layer: 0
+            }),
+            Request::QueryDrift {
+                session: 8,
+                layer: 0
+            }
+        ));
+        assert!(matches!(
+            roundtrip_req(&Request::ArchiveInfo { session: 4 }),
+            Request::ArchiveInfo { session: 4 }
+        ));
     }
 
     #[test]
@@ -799,6 +1059,61 @@ mod tests {
                 message: "no session s9".into(),
             },
             Response::ShutdownOk { sessions: 2 },
+            Response::StatsOk {
+                daemon: DaemonStats {
+                    sessions: 2,
+                    max_sessions: 16,
+                    ingest_bytes: 123456,
+                    frames_served: 789,
+                    archive_bytes: 4096,
+                },
+                sessions: vec![
+                    SessionStats {
+                        id: 1,
+                        name: "run0".into(),
+                        steps_seen: 40,
+                        ingest_bytes: 100000,
+                        archive_bytes: 2048,
+                        archive_intervals: 8,
+                    },
+                    SessionStats::default(),
+                ],
+            },
+            Response::Trajectory {
+                points: vec![
+                    TrajectoryPoint {
+                        step: 1,
+                        loss: 0.5,
+                        z_norms: vec![1.5, 2.5],
+                    },
+                    TrajectoryPoint {
+                        step: 2,
+                        loss: 0.25,
+                        z_norms: vec![0.0, 3.5],
+                    },
+                ],
+            },
+            Response::Similarity {
+                steps: vec![1, 2],
+                sim: Mat::from_vec(2, 2, vec![1.0, 0.5, 0.5, 1.0]),
+            },
+            Response::Drift {
+                points: vec![DriftPoint {
+                    step: 3,
+                    top_sigma: 2.0,
+                    stable_rank: 1.5,
+                }],
+            },
+            Response::ArchiveInfoOk(ArchiveInfo {
+                capacity: 64,
+                stride: 2,
+                intervals: 8,
+                seen: 15,
+                bytes: 8192,
+                layers: 3,
+                oldest_step: 1,
+                newest_step: 15,
+            }),
         ];
         for r in &rs {
             assert_eq!(&roundtrip_resp(r), r, "{r:?}");

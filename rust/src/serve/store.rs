@@ -13,7 +13,9 @@
 //! The payload is a [`DaemonSnapshot`] encoded with [`super::codec`]:
 //! per session the hub-side [`SessionState`] (detector state), the
 //! engine-side [`EngineSnapshot`] (EMA triplets; projections re-derived
-//! from seed) and the backpressure counter.  Writes are atomic: the
+//! from seed), the backpressure + ingest counters and (v2) the archive
+//! ring ([`ArchiveState`]) — so archive queries answer bit-identically
+//! after a warm restart.  Writes are atomic: the
 //! bytes go to `<path>.tmp`, are fsynced, then renamed over `<path>`, so
 //! a crash mid-write leaves the previous snapshot intact.  `load`
 //! verifies magic, version, length and CRC-32 before decoding.
@@ -24,6 +26,7 @@ use std::path::{Path, PathBuf};
 
 use anyhow::{bail, Context, Result};
 
+use crate::archive::{ArchiveState, IntervalRecord};
 use crate::monitor::{
     MonitorConfig, RollingState, ServiceState, SessionState,
 };
@@ -32,7 +35,8 @@ use crate::sketch::{EngineSnapshot, Precision, TripletState};
 use super::codec::{crc32, CodecError, Dec, Enc};
 
 pub const SNAP_MAGIC: &[u8; 8] = b"SKSNAP01";
-pub const SNAP_VERSION: u16 = 1;
+/// v2: per-session ingest counter + archive ring.
+pub const SNAP_VERSION: u16 = 2;
 pub const SNAP_HEADER_LEN: usize = 20;
 
 /// One tenant's full durable state.
@@ -44,6 +48,10 @@ pub struct SessionRecord {
     pub engine: EngineSnapshot,
     /// Ingested-bytes-since-last-diagnose backpressure counter.
     pub quota_used: u64,
+    /// Lifetime ingest payload bytes (Stats counter).
+    pub ingest_bytes: u64,
+    /// The session's retained sketch history, oldest record first.
+    pub archive: ArchiveState,
 }
 
 /// Everything the daemon persists between restarts.
@@ -60,6 +68,8 @@ impl DaemonSnapshot {
             enc_session_state(&mut e, &rec.session);
             enc_engine_snapshot(&mut e, &rec.engine);
             e.u64(rec.quota_used);
+            e.u64(rec.ingest_bytes);
+            enc_archive_state(&mut e, &rec.archive);
         }
         e.into_bytes()
     }
@@ -72,10 +82,14 @@ impl DaemonSnapshot {
             let session = dec_session_state(&mut d)?;
             let engine = dec_engine_snapshot(&mut d)?;
             let quota_used = d.u64()?;
+            let ingest_bytes = d.u64()?;
+            let archive = dec_archive_state(&mut d)?;
             sessions.push(SessionRecord {
                 session,
                 engine,
                 quota_used,
+                ingest_bytes,
+                archive,
             });
         }
         d.finish()?;
@@ -347,6 +361,48 @@ pub fn dec_engine_snapshot(
     })
 }
 
+pub fn enc_archive_state(e: &mut Enc, a: &ArchiveState) {
+    e.len32(a.capacity);
+    e.len32(a.stride);
+    e.u64(a.seen);
+    e.len32(a.unit);
+    e.len32(a.records.len());
+    for rec in &a.records {
+        e.u64(rec.step);
+        e.f32(rec.loss);
+        e.len32(rec.zs.len());
+        for z in &rec.zs {
+            e.mat(z);
+        }
+    }
+}
+
+pub fn dec_archive_state(d: &mut Dec) -> Result<ArchiveState, CodecError> {
+    let capacity = d.u32()? as usize;
+    let stride = d.u32()? as usize;
+    let seen = d.u64()?;
+    let unit = d.u32()? as usize;
+    let n = d.len32(16)?; // a record is at least step + loss + a prefix
+    let mut records = Vec::with_capacity(n);
+    for _ in 0..n {
+        let step = d.u64()?;
+        let loss = d.f32()?;
+        let m = d.len32(8)?; // a Mat is at least rows+cols
+        let mut zs = Vec::with_capacity(m);
+        for _ in 0..m {
+            zs.push(d.mat()?);
+        }
+        records.push(IntervalRecord { step, loss, zs });
+    }
+    Ok(ArchiveState {
+        capacity,
+        stride,
+        seen,
+        unit,
+        records,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -397,10 +453,16 @@ mod tests {
             .unwrap();
         }
         hub.report_sketch_bytes(id, engine.memory()).unwrap();
+        let mut archive = crate::archive::SessionArchive::new(4, 1, 4);
+        for step in 1..=6u64 {
+            archive.maybe_record(step, 0.5, engine.layers());
+        }
         SessionRecord {
             session: hub.session(id).unwrap().state(),
             engine: engine.snapshot(),
             quota_used: 1234,
+            ingest_bytes: 99999,
+            archive: archive.state(),
         }
     }
 
@@ -422,6 +484,10 @@ mod tests {
             assert_eq!(got.session.id, orig.session.id);
             assert_eq!(got.session.name, orig.session.name);
             assert_eq!(got.quota_used, orig.quota_used);
+            assert_eq!(got.ingest_bytes, orig.ingest_bytes);
+            // Archive rings survive bit-exactly (floats included).
+            assert_eq!(got.archive, orig.archive);
+            assert_eq!(got.archive.records.len(), 4);
             // Engine state restores exactly.
             let a =
                 SketchEngine::from_snapshot(&orig.engine, Parallelism::Serial)

@@ -8,9 +8,14 @@ use super::matrix::Mat;
 /// Eigenvalues of a symmetric matrix via cyclic Jacobi rotations.
 /// Returns eigenvalues sorted descending.  O(n^3) per sweep; converges in
 /// ~log(n) sweeps for the modest n (<= a few hundred) this repo needs.
+/// Degenerate inputs are well-defined: a 0x0 matrix has no eigenvalues
+/// (empty result) and a zero matrix converges on the first sweep.
 pub fn sym_eigenvalues(a: &Mat, max_sweeps: usize) -> Vec<f64> {
     assert_eq!(a.rows, a.cols);
     let n = a.rows;
+    if n == 0 {
+        return Vec::new();
+    }
     let mut m = a.clone();
     for _ in 0..max_sweeps {
         let mut off = 0.0;
@@ -57,7 +62,11 @@ pub fn sym_eigenvalues(a: &Mat, max_sweeps: usize) -> Vec<f64> {
 
 /// Singular values of an arbitrary matrix via the Gram matrix of its
 /// smaller side (sigma_i = sqrt(lambda_i(A^T A))), sorted descending.
+/// An empty matrix (either dimension 0) has no singular values.
 pub fn singular_values(a: &Mat) -> Vec<f64> {
+    if a.rows == 0 || a.cols == 0 {
+        return Vec::new();
+    }
     let gram = if a.rows <= a.cols {
         // A A^T (rows x rows), transpose-free
         a.matmul_t(a)
@@ -148,6 +157,30 @@ mod tests {
         let rel_floor = 1e-7 * a.fro_norm();
         assert!(tail_energy(&a, 2) < rel_floor, "tail {}", tail_energy(&a, 2));
         assert!(tail_energy(&a, 0) > 1.0);
+    }
+
+    #[test]
+    fn degenerate_inputs_are_well_defined() {
+        // Empty matrices: no spectrum, zero norms — not a panic.  The
+        // archive's drift query hits these on cold sessions.
+        let empty_sq = Mat::zeros(0, 0);
+        assert!(sym_eigenvalues(&empty_sq, 10).is_empty());
+        assert!(singular_values(&empty_sq).is_empty());
+        assert!(singular_values(&Mat::zeros(0, 5)).is_empty());
+        assert!(singular_values(&Mat::zeros(5, 0)).is_empty());
+        assert_eq!(spectral_norm(&empty_sq), 0.0);
+        assert_eq!(stable_rank(&empty_sq), 0.0);
+        assert_eq!(tail_energy(&Mat::zeros(0, 3), 1), 0.0);
+
+        // Zero matrices: all-zero spectrum, stable rank 0.0 (not NaN).
+        let z = Mat::zeros(4, 6);
+        let sv = singular_values(&z);
+        assert_eq!(sv.len(), 4);
+        assert!(sv.iter().all(|s| *s == 0.0));
+        assert_eq!(sym_eigenvalues(&Mat::zeros(3, 3), 10), vec![0.0; 3]);
+        assert_eq!(spectral_norm(&z), 0.0);
+        assert_eq!(stable_rank(&z), 0.0);
+        assert_eq!(tail_energy(&z, 2), 0.0);
     }
 
     #[test]

@@ -1,0 +1,240 @@
+//! Loopback integration tests for the archive subsystem (DESIGN.md §7):
+//! a remote session records 64+ sketch intervals through a capacity-48
+//! ring (forcing oldest-first eviction over the wire), every analytics
+//! query — trajectory, similarity, drift, archive info — answers
+//! bit-for-bit identically to an in-process replica, and a daemon
+//! kill -> warm-restart serves the *same* answers from the ring restored
+//! out of the durable snapshot.
+
+use sketchgrad::archive::SessionArchive;
+use sketchgrad::config::{ArchiveConfig, ServeConfig};
+use sketchgrad::data::ActStream;
+use sketchgrad::serve::proto::SessionSpec;
+use sketchgrad::serve::{Daemon, ServeError, SketchClient};
+use sketchgrad::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
+
+const DIMS: [usize; 2] = [20, 10];
+const RANK: usize = 2;
+const STEPS: usize = 70;
+const CAPACITY: usize = 48;
+const N_B: usize = 16;
+const SEED: u64 = 0xA7C4;
+
+fn snapshot_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("sketchd-arc-{tag}-{}.snap", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn config(tag: &str, capacity: usize, stride: usize) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: 4,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: 0,
+        snapshot_path: snapshot_path(tag),
+        threads: 1,
+        archive: ArchiveConfig { capacity, stride },
+    }
+}
+
+fn spec() -> SessionSpec {
+    SessionSpec {
+        name: "archived".into(),
+        layer_dims: DIMS.to_vec(),
+        rank: RANK,
+        beta: 0.9,
+        seed: SEED,
+        window: 10,
+        collapse_frac: 0.25,
+    }
+}
+
+/// In-process replica: same engine, same deterministic stream, same
+/// archive ring parameters as the daemon-side tenant.
+struct Replica {
+    engine: SketchEngine,
+    stream: ActStream,
+    archive: SessionArchive,
+}
+
+impl Replica {
+    fn new(capacity: usize, stride: usize) -> Replica {
+        let engine = SketchConfig::builder()
+            .layer_dims(&DIMS)
+            .rank(RANK)
+            .beta(0.9)
+            .seed(SEED)
+            .build_engine()
+            .unwrap();
+        let archive = SessionArchive::new(
+            capacity,
+            stride,
+            engine.config().precision.bytes(),
+        );
+        Replica {
+            engine,
+            stream: ActStream::new(&DIMS, false, SEED),
+            archive,
+        }
+    }
+
+    fn step(&mut self, step: usize) -> (f32, Vec<Mat>) {
+        let acts = self.stream.next_batch(N_B);
+        let loss = self.stream.loss_at(step, STEPS);
+        self.engine.ingest(&acts).unwrap();
+        self.archive.maybe_record(
+            self.engine.batches_ingested(),
+            loss,
+            self.engine.layers(),
+        );
+        (loss, acts)
+    }
+}
+
+/// ACCEPTANCE: 70 remote intervals through a capacity-48 ring; eviction
+/// over the wire; every query bit-identical to the replica; the restored
+/// ring answers identically after kill -> restart, and keeps recording.
+#[test]
+fn archive_queries_bit_identical_across_eviction_and_restart() {
+    let cfg = config("restart", CAPACITY, 1);
+    let snap_path = cfg.snapshot_path.clone();
+
+    let daemon = Daemon::bind(cfg.clone()).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+
+    let mut replica = Replica::new(CAPACITY, 1);
+    let session;
+    let pre_traj;
+    let mut pre_sims = Vec::new();
+    let mut pre_drifts = Vec::new();
+    let pre_info;
+    {
+        let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+        session = client.open_session(&spec()).unwrap();
+        for step in 0..STEPS {
+            let (loss, acts) = replica.step(step);
+            client.ingest(session, loss, &acts, false).unwrap();
+        }
+
+        // 70 > 64 intervals seen; the ring holds the newest 48 with
+        // oldest-first eviction (batch counter starts at 1).
+        let info = client.archive_info(session).unwrap();
+        assert_eq!(info.seen, STEPS as u64);
+        assert_eq!(info.intervals, CAPACITY as u64);
+        assert_eq!(info.capacity, CAPACITY as u64);
+        assert_eq!(info.stride, 1);
+        assert_eq!(info.layers, DIMS.len() as u64);
+        assert_eq!(info.oldest_step, (STEPS - CAPACITY + 1) as u64);
+        assert_eq!(info.newest_step, STEPS as u64);
+        assert_eq!(info.bytes, replica.archive.bytes() as u64);
+
+        // Every analytics answer bit-identical to the replica.
+        let traj = client.query_trajectory(session).unwrap();
+        assert_eq!(traj, replica.archive.trajectory());
+        assert_eq!(traj.len(), CAPACITY);
+        for layer in 0..DIMS.len() {
+            let (steps, sim) =
+                client.query_similarity(session, layer).unwrap();
+            let (local_steps, local_sim) = replica.archive.similarity(layer);
+            assert_eq!(steps, local_steps, "layer {layer} steps");
+            assert_eq!(sim, local_sim, "layer {layer} similarity");
+            let drift = client.query_drift(session, layer).unwrap();
+            assert_eq!(drift, replica.archive.drift(layer), "layer {layer}");
+            pre_sims.push((steps, sim));
+            pre_drifts.push(drift);
+        }
+        pre_traj = traj;
+        pre_info = info;
+
+        // Out-of-range layer is a typed protocol error, not a hangup.
+        match client.query_drift(session, DIMS.len()) {
+            Err(ServeError::Remote { .. }) => {}
+            other => panic!("expected remote error, got {other:?}"),
+        }
+
+        // Observability counters agree with the replica's accounting.
+        let (daemon_stats, rows) = client.stats().unwrap();
+        assert_eq!(daemon_stats.sessions, 1);
+        assert!(daemon_stats.ingest_bytes > 0);
+        assert!(daemon_stats.frames_served >= STEPS as u64);
+        assert_eq!(
+            daemon_stats.archive_bytes,
+            replica.archive.bytes() as u64
+        );
+        let row = rows.iter().find(|s| s.id == session).unwrap();
+        assert_eq!(row.name, "archived");
+        assert_eq!(row.steps_seen, STEPS as u64);
+        assert_eq!(row.ingest_bytes, daemon_stats.ingest_bytes);
+        assert_eq!(row.archive_intervals, CAPACITY as u64);
+        assert_eq!(row.archive_bytes, replica.archive.bytes() as u64);
+    }
+    handle.stop().unwrap();
+
+    // Kill -> warm restart on the same snapshot path: the restored ring
+    // must answer every query exactly as the pre-restart daemon did.
+    let daemon = Daemon::bind(cfg).unwrap();
+    assert_eq!(daemon.session_count(), 1, "session resumed from snapshot");
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+    {
+        let (mut client, info) = SketchClient::connect(&addr).unwrap();
+        assert_eq!(info.sessions, 1);
+        assert_eq!(client.archive_info(session).unwrap(), pre_info);
+        assert_eq!(client.query_trajectory(session).unwrap(), pre_traj);
+        for layer in 0..DIMS.len() {
+            let (steps, sim) =
+                client.query_similarity(session, layer).unwrap();
+            assert_eq!((steps, sim), pre_sims[layer], "layer {layer}");
+            assert_eq!(
+                client.query_drift(session, layer).unwrap(),
+                pre_drifts[layer],
+                "layer {layer}"
+            );
+        }
+
+        // Recording continues seamlessly on the restored ring.
+        let (loss, acts) = replica.step(STEPS);
+        client.ingest(session, loss, &acts, false).unwrap();
+        let info = client.archive_info(session).unwrap();
+        assert_eq!(info.seen, STEPS as u64 + 1);
+        assert_eq!(info.newest_step, STEPS as u64 + 1);
+        assert_eq!(
+            client.query_trajectory(session).unwrap(),
+            replica.archive.trajectory()
+        );
+    }
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+/// Stride sampling over the wire: a stride-4 daemon records every 4th
+/// ingest interval; the trajectory exposes exactly the sampled steps.
+#[test]
+fn stride_sampling_over_the_wire() {
+    let daemon = Daemon::bind(config("stride", 8, 4)).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let snap_path = snapshot_path("stride");
+    let handle = daemon.spawn().unwrap();
+
+    let mut replica = Replica::new(8, 4);
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    let session = client.open_session(&spec()).unwrap();
+    for step in 0..20 {
+        let (loss, acts) = replica.step(step);
+        client.ingest(session, loss, &acts, false).unwrap();
+    }
+
+    let info = client.archive_info(session).unwrap();
+    assert_eq!(info.seen, 20);
+    assert_eq!(info.intervals, 5);
+    let traj = client.query_trajectory(session).unwrap();
+    let steps: Vec<u64> = traj.iter().map(|p| p.step).collect();
+    assert_eq!(steps, vec![1, 5, 9, 13, 17]);
+    assert_eq!(traj, replica.archive.trajectory());
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}

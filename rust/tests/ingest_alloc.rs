@@ -4,7 +4,10 @@
 //! allocations at all** — the fused EMA kernels write into the resident
 //! sketches through register accumulators, the layer fan-out claims
 //! indices straight off the activation list, and the pool handoff is a
-//! condvar protocol over pre-existing state.
+//! condvar protocol over pre-existing state.  The same holds for archive
+//! recording: once the ring is full, `SessionArchive::maybe_record`
+//! overwrites resident slots in place (`copy_from_slice`) and must not
+//! allocate either.
 //!
 //! Pinned with a counting global allocator.  This file deliberately
 //! holds a single test: the counter is process-global, and libtest runs
@@ -13,6 +16,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
 
+use sketchgrad::archive::SessionArchive;
 use sketchgrad::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
 use sketchgrad::util::rng::Rng;
 
@@ -78,23 +82,31 @@ fn steady_state_ingest_allocates_nothing() {
     // layers); 8 lanes = intra-kernel row-stripe fan-out (8 > 4 layers).
     for threads in [1usize, 2, 8] {
         let mut e = engine(&dims, threads);
+        // Archive ring sized so the warm-up fills it completely; after
+        // that every record is an in-place slot overwrite.
+        let mut archive = SessionArchive::new(4, 1, 4);
         // Warm-up: observe both batch sizes so the per-size projections
         // are cached, the pool threads are spawned and parked, and every
         // lazy one-time initialisation has happened.
         for _ in 0..2 {
             e.ingest(&nominal).unwrap();
+            archive.maybe_record(e.batches_ingested(), 0.5, e.layers());
             e.ingest(&tail).unwrap();
+            archive.maybe_record(e.batches_ingested(), 0.5, e.layers());
         }
+        assert_eq!(archive.len(), archive.capacity(), "ring warmed up full");
         let before = ALLOCS.load(Ordering::Relaxed);
         for _ in 0..5 {
             e.ingest(&nominal).unwrap();
+            archive.maybe_record(e.batches_ingested(), 0.5, e.layers());
             e.ingest(&tail).unwrap();
+            archive.maybe_record(e.batches_ingested(), 0.5, e.layers());
         }
         let after = ALLOCS.load(Ordering::Relaxed);
         assert_eq!(
             after - before,
             0,
-            "steady-state ingest allocated at {threads} thread(s)"
+            "steady-state ingest+record allocated at {threads} thread(s)"
         );
     }
 }

@@ -6,7 +6,7 @@
 
 use std::thread;
 
-use sketchgrad::config::ServeConfig;
+use sketchgrad::config::{ArchiveConfig, ServeConfig};
 use sketchgrad::data::ActStream;
 use sketchgrad::monitor::{step_metrics, MonitorHub, SessionId};
 use sketchgrad::serve::daemon::recon_errors;
@@ -50,6 +50,7 @@ fn test_config(tag: &str, max_sessions: usize, quota: usize) -> ServeConfig {
         session_quota_bytes: quota,
         snapshot_path: unique_snapshot_path(tag),
         threads: 1,
+        archive: ArchiveConfig::default(),
     }
 }
 
