@@ -14,7 +14,9 @@ pub struct BenchResult {
     pub mean: Duration,
     pub p50: Duration,
     pub p95: Duration,
+    pub p99: Duration,
     pub min: Duration,
+    pub max: Duration,
     /// Optional user-supplied throughput unit (e.g. steps/s).
     pub throughput: Option<(f64, &'static str)>,
     /// Optional bytes touched per op (sketch state + activations) for the
@@ -34,7 +36,9 @@ impl BenchResult {
             ("ns_per_op", Json::Num(self.ns_per_op())),
             ("p50_ns", Json::Num(self.p50.as_secs_f64() * 1e9)),
             ("p95_ns", Json::Num(self.p95.as_secs_f64() * 1e9)),
+            ("p99_ns", Json::Num(self.p99.as_secs_f64() * 1e9)),
             ("min_ns", Json::Num(self.min.as_secs_f64() * 1e9)),
+            ("max_ns", Json::Num(self.max.as_secs_f64() * 1e9)),
             ("iters", Json::Num(self.iters as f64)),
         ];
         if let Some(b) = self.bytes {
@@ -142,7 +146,9 @@ impl Bench {
         let mean = times.iter().sum::<Duration>() / times.len() as u32;
         let p50 = times[times.len() / 2];
         let p95 = times[(times.len() * 95 / 100).min(times.len() - 1)];
+        let p99 = times[(times.len() * 99 / 100).min(times.len() - 1)];
         let min = times[0];
+        let max = *times.last().unwrap();
         let throughput = work.map(|(w, unit)| (w / mean.as_secs_f64(), unit));
         self.results.push(BenchResult {
             name: name.to_string(),
@@ -150,7 +156,9 @@ impl Bench {
             mean,
             p50,
             p95,
+            p99,
             min,
+            max,
             throughput,
             bytes,
         });
@@ -226,6 +234,8 @@ mod tests {
         });
         assert!(r.mean >= Duration::from_millis(2));
         assert!(r.p95 >= r.p50);
+        assert!(r.p99 >= r.p95);
+        assert!(r.max >= r.p99 && r.min <= r.p50);
         assert!(r.throughput.unwrap().0 < 100_000.0);
     }
 
@@ -258,6 +268,9 @@ mod tests {
         );
         assert_eq!(results[0].get("bytes").unwrap().as_usize().unwrap(), 4096);
         assert!(results[0].get("ns_per_op").unwrap().as_f64().unwrap() >= 0.0);
+        let p99 = results[0].get("p99_ns").unwrap().as_f64().unwrap();
+        let max = results[0].get("max_ns").unwrap().as_f64().unwrap();
+        assert!(max >= p99 && p99 >= 0.0);
         assert!(results[1].get("bytes").is_err(), "no bytes recorded");
         assert_eq!(
             b.result("ingest_threads4").unwrap().name,

@@ -1,0 +1,156 @@
+//! `loadgen` — scenario-driven load harness for `sketchd`
+//! (DESIGN.md §8; the CI `load-smoke` gate's workload driver).
+//!
+//! ```text
+//! loadgen [--list] [--scenario steady,churn,...] [--addr HOST:PORT]
+//!         [--tenants N] [--intervals N] [--quick] [--threads N]
+//!         [--timeout-ms 30000] [--retries 8] [--out PATH]
+//! ```
+//!
+//! Without `--addr`, each scenario runs against its own fresh
+//! in-process daemon on an ephemeral port with a throwaway snapshot
+//! path — results are then hermetic and the daemon-metrics cross-check
+//! is exact.  With `--addr`, scenarios run against that external
+//! daemon, which must be otherwise idle for the cross-check to hold.
+//!
+//! The default run covers every built-in scenario except the fixed CI
+//! `smoke` workload (32 tenants × 200 intervals), which CI invokes by
+//! name.  Results land in `BENCH_serve.json` at the repo root.
+
+use anyhow::{bail, Context, Result};
+
+use sketchgrad::config::{
+    resolve_threads, ArchiveConfig, ClientConfig, ServeConfig,
+};
+use sketchgrad::loadgen::{
+    print_report, run_scenario, write_report, Scenario, ScenarioReport,
+};
+use sketchgrad::serve::Daemon;
+use sketchgrad::util::cli::Args;
+
+const DEFAULT_OUT: &str =
+    concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serve.json");
+
+fn main() -> Result<()> {
+    let mut args = Args::parse_env()?;
+    let list = args.flag("list");
+    let quick = args.flag("quick")
+        || std::env::var("BENCH_QUICK").as_deref() == Ok("1");
+    let addr = args.opt("addr");
+    let scenario_csv = args.opt("scenario");
+    let tenants = args.opt_usize("tenants", 0)?;
+    let intervals = args.opt_usize("intervals", 0)?;
+    let threads = args.opt_usize("threads", 1)?;
+    let out = args.opt_or("out", DEFAULT_OUT);
+    let d = ClientConfig::default();
+    let net = ClientConfig {
+        io_timeout_ms: args.opt_u64("timeout-ms", d.io_timeout_ms)?,
+        connect_retries: args
+            .opt_usize("retries", d.connect_retries as usize)?
+            as u32,
+        ..d
+    };
+    args.finish()?;
+
+    if list {
+        println!("built-in scenarios:");
+        for s in Scenario::builtin() {
+            println!(
+                "  {:<16} {:>3} tenants x {:>4} intervals | dims {:?} \
+                 batch {} | hz {} query_every {} churn_every {} \
+                 snapshot_every {} quota {}",
+                s.name,
+                s.tenants,
+                s.intervals,
+                s.layer_dims,
+                s.batch,
+                s.hz,
+                s.query_every,
+                s.churn_every,
+                s.snapshot_every,
+                s.quota
+            );
+        }
+        return Ok(());
+    }
+
+    let chosen: Vec<Scenario> = match scenario_csv {
+        Some(csv) => csv
+            .split(',')
+            .map(|n| {
+                Scenario::by_name(n.trim()).with_context(|| {
+                    format!("unknown scenario {n:?} (try --list)")
+                })
+            })
+            .collect::<Result<_>>()?,
+        // Default run: the full matrix minus the CI smoke workload.
+        None => Scenario::builtin()
+            .into_iter()
+            .filter(|s| s.name != "smoke")
+            .collect(),
+    };
+    if chosen.is_empty() {
+        bail!("no scenarios selected");
+    }
+
+    let mut reports: Vec<ScenarioReport> = Vec::new();
+    for sc in chosen {
+        let mut sc = sc.scaled(quick);
+        if tenants > 0 {
+            sc.tenants = tenants;
+        }
+        if intervals > 0 {
+            sc.intervals = intervals;
+        }
+        let rep = match &addr {
+            Some(a) => run_scenario(a, &sc, &net).with_context(|| {
+                format!("scenario {} against {a}", sc.name)
+            })?,
+            None => run_spawned(&sc, threads, &net)?,
+        };
+        print_report(&rep);
+        reports.push(rep);
+    }
+    write_report(&reports, quick, &out)?;
+    println!("\nwrote {out}");
+    Ok(())
+}
+
+/// Run `sc` against a fresh in-process daemon on an ephemeral port with
+/// a throwaway snapshot path (removed before and after, so every
+/// scenario starts cold and leaves nothing behind).
+fn run_spawned(
+    sc: &Scenario,
+    threads: usize,
+    net: &ClientConfig,
+) -> Result<ScenarioReport> {
+    let snap = std::env::temp_dir().join(format!(
+        "loadgen-{}-{}.snap",
+        sc.name,
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&snap);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: sc.tenants * 2 + 4,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: if sc.quota > 0 {
+            sc.quota
+        } else {
+            ServeConfig::default().session_quota_bytes
+        },
+        snapshot_path: snap.to_string_lossy().into_owned(),
+        threads: resolve_threads(threads),
+        archive: ArchiveConfig::default(),
+    };
+    let daemon = Daemon::bind(cfg)
+        .with_context(|| format!("spawning daemon for {}", sc.name))?;
+    let addr = daemon.local_addr()?.to_string();
+    let handle = daemon.spawn()?;
+    let res = run_scenario(&addr, sc, net);
+    let stopped = handle.stop();
+    let _ = std::fs::remove_file(&snap);
+    let rep = res.with_context(|| format!("scenario {}", sc.name))?;
+    stopped.context("stopping the spawned daemon")?;
+    Ok(rep)
+}

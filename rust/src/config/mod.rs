@@ -286,6 +286,62 @@ impl ServeConfig {
     }
 }
 
+/// Network robustness knobs for [`crate::serve::SketchClient`],
+/// loadable from a `[client]` TOML section with CLI overrides
+/// (`--timeout-ms` / `--retries` on `connect` and `loadgen`).
+///
+/// All durations are milliseconds; `0` means "no deadline" (OS-default
+/// connect behaviour / block forever on reads).  Connect attempts retry
+/// up to `connect_retries` extra times with a doubling backoff starting
+/// at `retry_backoff_ms` and capped at one second — covering both a
+/// daemon that is still binding (CI spawn races) and transient refusals
+/// under churn.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClientConfig {
+    /// TCP connect deadline per attempt (ms; 0 = OS default).
+    pub connect_timeout_ms: u64,
+    /// Socket read/write deadline per frame (ms; 0 = block forever).
+    pub io_timeout_ms: u64,
+    /// Extra connect attempts after the first failure.
+    pub connect_retries: u32,
+    /// First inter-attempt sleep; doubles per retry, capped at 1000ms.
+    pub retry_backoff_ms: u64,
+}
+
+impl Default for ClientConfig {
+    fn default() -> Self {
+        ClientConfig {
+            connect_timeout_ms: 2000,
+            io_timeout_ms: 30_000,
+            connect_retries: 8,
+            retry_backoff_ms: 50,
+        }
+    }
+}
+
+impl ClientConfig {
+    pub fn from_toml(t: &Toml) -> Result<ClientConfig> {
+        let d = ClientConfig::default();
+        Ok(ClientConfig {
+            connect_timeout_ms: t.usize_or(
+                "client.connect_timeout_ms",
+                d.connect_timeout_ms as usize,
+            )? as u64,
+            io_timeout_ms: t
+                .usize_or("client.io_timeout_ms", d.io_timeout_ms as usize)?
+                as u64,
+            connect_retries: t.usize_or(
+                "client.connect_retries",
+                d.connect_retries as usize,
+            )? as u32,
+            retry_backoff_ms: t.usize_or(
+                "client.retry_backoff_ms",
+                d.retry_backoff_ms as usize,
+            )? as u64,
+        })
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -417,5 +473,39 @@ stride = 3
         bad = d;
         bad.archive.stride = 0;
         assert!(bad.validate().is_err());
+    }
+
+    #[test]
+    fn client_config_from_toml() {
+        let d = ClientConfig::default();
+        assert_eq!(d.connect_timeout_ms, 2000);
+        assert_eq!(d.io_timeout_ms, 30_000);
+        assert_eq!(d.connect_retries, 8);
+        assert_eq!(d.retry_backoff_ms, 50);
+
+        let t = Toml::parse(
+            r#"
+[client]
+connect_timeout_ms = 500
+io_timeout_ms = 0
+connect_retries = 2
+retry_backoff_ms = 10
+"#,
+        )
+        .unwrap();
+        let c = ClientConfig::from_toml(&t).unwrap();
+        assert_eq!(
+            c,
+            ClientConfig {
+                connect_timeout_ms: 500,
+                io_timeout_ms: 0,
+                connect_retries: 2,
+                retry_backoff_ms: 10,
+            }
+        );
+
+        // Missing section falls back to defaults entirely.
+        let empty = Toml::parse("").unwrap();
+        assert_eq!(ClientConfig::from_toml(&empty).unwrap(), d);
     }
 }

@@ -22,6 +22,7 @@ pub mod benchkit;
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod loadgen;
 pub mod memory;
 pub mod monitor;
 pub mod pinn;

@@ -1,0 +1,529 @@
+//! Scenario-driven load harness for `sketchd` (DESIGN.md §8).
+//!
+//! A [`Scenario`] describes a synthetic tenant population — how many,
+//! how fast they ingest, layer widths (payload size), how often they
+//! query, churn sessions or force snapshots — and [`run_scenario`]
+//! drives it against a live daemon with one OS thread per tenant,
+//! recording *client-observed* latency into the same log-bucket
+//! [`Histogram`] the daemon uses server-side.  Per-tenant reports are
+//! folded into one [`ScenarioReport`] via [`Histogram::merge`] (the
+//! per-session → global aggregation path running in production).
+//!
+//! When the daemon speaks proto v3 the harness fetches its `Metrics`
+//! report before and after the run and cross-checks the daemon-side
+//! ingest-frame delta against the client-side attempt count — the two
+//! views must agree exactly (the daemon must be otherwise idle, which
+//! spawned daemons always are).  The run **fails** on disagreement;
+//! `BENCH_serve.json`'s `<scenario>_metrics_verified = 1` records that
+//! the check ran and passed.
+//!
+//! [`write_report`] emits `BENCH_serve.json` through the [`benchkit`]
+//! reporter: one `<scenario>_ingest` / `<scenario>_query` result each
+//! (mean/p50/p95/p99/min/max from the merged histograms) plus flat
+//! summary scalars (`<scenario>_throughput`, `<scenario>_busy_rate`,
+//! `<scenario>_p99_ms`, …) that the CI `load-smoke` gate reads.
+//!
+//! [`benchkit`]: crate::benchkit
+
+mod worker;
+
+pub use worker::TenantReport;
+
+use std::sync::Barrier;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, ensure, Context, Result};
+
+use crate::benchkit::{fmt_dur, Bench, BenchResult};
+use crate::config::ClientConfig;
+use crate::serve::{Histogram, SketchClient, METRICS_MIN_VERSION};
+
+/// One load-test configuration: a tenant population and its traffic mix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Scenario {
+    pub name: String,
+    /// Concurrent tenants, one OS thread + TCP connection each.
+    pub tenants: usize,
+    /// Monitored training intervals (ingest attempts) per tenant.
+    pub intervals: usize,
+    /// Hidden-layer widths of the synthetic model (payload size knob:
+    /// one f64 activation matrix per layer plus the 32-wide input).
+    pub layer_dims: Vec<usize>,
+    /// Batch rows per ingest.
+    pub batch: usize,
+    /// Sketch rank each session opens with.
+    pub rank: usize,
+    /// Target ingest rate per tenant in Hz (0 = unpaced, full speed).
+    pub hz: f64,
+    /// Every N-th interval also runs Diagnose + QueryTrajectory
+    /// (0 = ingest-only; note Busy recovery adds its own Diagnose).
+    pub query_every: usize,
+    /// Every N-th interval the tenant closes and reopens its session
+    /// (0 = no churn).
+    pub churn_every: usize,
+    /// Every N-th interval tenant 0 forces a durable snapshot,
+    /// measuring snapshot-pause impact on everyone else (0 = never).
+    pub snapshot_every: usize,
+    /// Ask for reconstruction errors on every ingest (heavier replies).
+    pub want_recon: bool,
+    /// Per-session ingest quota for a *spawned* daemon (bytes between
+    /// Diagnose calls; 0 = the daemon default).  Ignored for `--addr`.
+    pub quota: usize,
+}
+
+impl Default for Scenario {
+    fn default() -> Self {
+        Scenario {
+            name: String::new(),
+            tenants: 4,
+            intervals: 20,
+            layer_dims: vec![32, 16],
+            batch: 8,
+            rank: 3,
+            hz: 0.0,
+            query_every: 0,
+            churn_every: 0,
+            snapshot_every: 0,
+            want_recon: false,
+            quota: 0,
+        }
+    }
+}
+
+impl Scenario {
+    /// The built-in scenario matrix.  `smoke` is the fixed CI workload
+    /// (32 tenants × 200 intervals) and is excluded from the default
+    /// `loadgen` run — CI invokes it by name.
+    pub fn builtin() -> Vec<Scenario> {
+        vec![
+            Scenario {
+                name: "steady".into(),
+                tenants: 8,
+                intervals: 60,
+                layer_dims: vec![64, 32],
+                batch: 16,
+                rank: 4,
+                hz: 100.0,
+                ..Scenario::default()
+            },
+            Scenario {
+                name: "mixed_query".into(),
+                tenants: 6,
+                intervals: 50,
+                layer_dims: vec![48, 24, 12],
+                batch: 12,
+                rank: 4,
+                query_every: 5,
+                ..Scenario::default()
+            },
+            Scenario {
+                name: "churn".into(),
+                tenants: 8,
+                intervals: 40,
+                churn_every: 10,
+                ..Scenario::default()
+            },
+            Scenario {
+                name: "backpressure".into(),
+                tenants: 4,
+                intervals: 40,
+                layer_dims: vec![64],
+                batch: 16,
+                // ~12.3 KB/ingest against a 32 KB quota: every third
+                // ingest goes Busy and recovers via Diagnose.
+                quota: 32 << 10,
+                ..Scenario::default()
+            },
+            Scenario {
+                name: "snapshot_pause".into(),
+                tenants: 6,
+                intervals: 50,
+                layer_dims: vec![64, 32],
+                batch: 16,
+                rank: 4,
+                snapshot_every: 10,
+                ..Scenario::default()
+            },
+            Scenario {
+                name: "smoke".into(),
+                tenants: 32,
+                intervals: 200,
+                query_every: 20,
+                ..Scenario::default()
+            },
+        ]
+    }
+
+    pub fn by_name(name: &str) -> Option<Scenario> {
+        Scenario::builtin().into_iter().find(|s| s.name == name)
+    }
+
+    /// CI-friendly sizing: `quick` shrinks the population and run
+    /// length the same way `Bench::sized` shrinks iteration counts.
+    pub fn scaled(mut self, quick: bool) -> Scenario {
+        if quick {
+            self.tenants = self.tenants.min(4);
+            self.intervals = (self.intervals / 5).max(5);
+        }
+        self
+    }
+}
+
+/// Daemon-side counter deltas over one scenario (proto v3 only).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct DaemonDelta {
+    /// Ingest frames the daemon handled (its ingest histogram count).
+    pub ingest_frames: u64,
+    pub frames_served: u64,
+    pub ingest_bytes: u64,
+    /// Busy replies (admission + quota).
+    pub busy: u64,
+    pub snapshot_count: u64,
+    pub snapshot_pause: Duration,
+}
+
+/// Aggregated outcome of one scenario run.
+#[derive(Clone, Debug)]
+pub struct ScenarioReport {
+    pub name: String,
+    pub tenants: usize,
+    pub intervals: usize,
+    /// Barrier-release to last-tenant-done, excluding connect/open.
+    pub wall: Duration,
+    pub ingests_ok: u64,
+    /// Ingest frames written, including Busy-answered ones and retries.
+    pub ingest_frames_sent: u64,
+    pub busy: u64,
+    /// Ingests abandoned after the one post-Diagnose retry also hit
+    /// Busy.
+    pub dropped: u64,
+    pub queries: u64,
+    pub reopens: u64,
+    pub snapshots: u64,
+    pub bytes_sent: u64,
+    /// Client-observed ingest round-trip latency, merged across
+    /// tenants.
+    pub ingest_hist: Histogram,
+    /// Client-observed Diagnose/QueryTrajectory latency.
+    pub query_hist: Histogram,
+    /// Daemon metrics delta; `None` against a pre-v3 daemon.  When
+    /// `Some`, the frame-count cross-check has already passed.
+    pub daemon: Option<DaemonDelta>,
+}
+
+impl ScenarioReport {
+    /// Successful ingests per wall-clock second across all tenants.
+    pub fn throughput(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.ingests_ok as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    /// Fraction of ingest frames answered `Busy`.
+    pub fn busy_rate(&self) -> f64 {
+        if self.ingest_frames_sent == 0 {
+            0.0
+        } else {
+            self.busy as f64 / self.ingest_frames_sent as f64
+        }
+    }
+}
+
+/// Drive `sc` against the daemon at `addr`.  Fails if any tenant hits
+/// a non-`Busy` error, or if the daemon's v3 metrics disagree with the
+/// client-side frame/byte counts.
+pub fn run_scenario(
+    addr: &str,
+    sc: &Scenario,
+    net: &ClientConfig,
+) -> Result<ScenarioReport> {
+    ensure!(
+        sc.tenants > 0 && sc.intervals > 0 && sc.batch > 0,
+        "scenario {:?}: tenants, intervals and batch must be > 0",
+        sc.name
+    );
+    let (mut control, _info) = SketchClient::connect_with(addr, net)
+        .with_context(|| format!("connecting control client to {addr}"))?;
+    let before = if control.proto_version() >= METRICS_MIN_VERSION {
+        Some(control.metrics().context("metrics before run")?)
+    } else {
+        None
+    };
+
+    let start = Barrier::new(sc.tenants + 1);
+    let start_ref = &start;
+    let mut reports: Vec<TenantReport> = Vec::with_capacity(sc.tenants);
+    let mut wall = Duration::ZERO;
+    thread::scope(|s| -> Result<()> {
+        let handles: Vec<_> = (0..sc.tenants)
+            .map(|tenant| {
+                s.spawn(move || {
+                    worker::run_tenant(addr, sc, tenant, start_ref, net)
+                })
+            })
+            .collect();
+        // All tenants are connected with sessions open; release them
+        // together and time only the traffic phase.
+        start_ref.wait();
+        let t0 = Instant::now();
+        for (tenant, h) in handles.into_iter().enumerate() {
+            match h.join() {
+                Ok(r) => reports.push(
+                    r.with_context(|| format!("tenant {tenant} failed"))?,
+                ),
+                Err(_) => bail!("tenant {tenant} panicked"),
+            }
+        }
+        wall = t0.elapsed();
+        Ok(())
+    })?;
+
+    let mut agg = TenantReport::default();
+    for r in &reports {
+        agg.merge(r);
+    }
+
+    let daemon = match before {
+        Some(b) => {
+            let a = control.metrics().context("metrics after run")?;
+            let delta = DaemonDelta {
+                ingest_frames: a.ingest.count.saturating_sub(b.ingest.count),
+                frames_served: a
+                    .frames_served
+                    .saturating_sub(b.frames_served),
+                ingest_bytes: a.ingest_bytes.saturating_sub(b.ingest_bytes),
+                busy: a.busy_total().saturating_sub(b.busy_total()),
+                snapshot_count: a
+                    .snapshot_count
+                    .saturating_sub(b.snapshot_count),
+                snapshot_pause: Duration::from_nanos(
+                    a.snapshot_pause_ns.saturating_sub(b.snapshot_pause_ns),
+                ),
+            };
+            // The acceptance cross-check: the daemon's view of the run
+            // must agree exactly with what the clients observed.
+            ensure!(
+                delta.ingest_frames == agg.ingest_frames_sent,
+                "scenario {}: daemon handled {} ingest frames but \
+                 clients sent {}",
+                sc.name,
+                delta.ingest_frames,
+                agg.ingest_frames_sent
+            );
+            ensure!(
+                delta.ingest_bytes == agg.bytes_sent,
+                "scenario {}: daemon accepted {} ingest bytes but \
+                 clients recorded {}",
+                sc.name,
+                delta.ingest_bytes,
+                agg.bytes_sent
+            );
+            Some(delta)
+        }
+        None => None,
+    };
+
+    Ok(ScenarioReport {
+        name: sc.name.clone(),
+        tenants: sc.tenants,
+        intervals: sc.intervals,
+        wall,
+        ingests_ok: agg.ingests_ok,
+        ingest_frames_sent: agg.ingest_frames_sent,
+        busy: agg.busy,
+        dropped: agg.dropped,
+        queries: agg.queries,
+        reopens: agg.reopens,
+        snapshots: agg.snapshots,
+        bytes_sent: agg.bytes_sent,
+        ingest_hist: agg.ingest_hist,
+        query_hist: agg.query_hist,
+        daemon,
+    })
+}
+
+/// Turn a merged latency histogram into a [`BenchResult`] row
+/// (quantiles carry the histogram's ≤ √2 relative error).
+pub fn bench_from_hist(
+    name: &str,
+    h: &Histogram,
+    throughput: Option<(f64, &'static str)>,
+    bytes: Option<usize>,
+) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: h.count as usize,
+        mean: Duration::from_nanos(h.mean_ns() as u64),
+        p50: Duration::from_nanos(h.quantile(0.50) as u64),
+        p95: Duration::from_nanos(h.quantile(0.95) as u64),
+        p99: Duration::from_nanos(h.quantile(0.99) as u64),
+        min: Duration::from_nanos(h.min_ns),
+        max: Duration::from_nanos(h.max_ns),
+        throughput,
+        bytes,
+    }
+}
+
+/// Write `BENCH_serve.json`: per-scenario ingest/query latency rows
+/// plus the flat summary scalars the CI `load-smoke` gate reads.
+pub fn write_report(
+    reports: &[ScenarioReport],
+    quick: bool,
+    path: &str,
+) -> Result<()> {
+    let mut b = Bench::new(0, 0);
+    let mut summary: Vec<(String, f64)> = Vec::new();
+    for r in reports {
+        let per_ingest = (r.ingests_ok > 0)
+            .then(|| (r.bytes_sent / r.ingests_ok) as usize);
+        b.results.push(bench_from_hist(
+            &format!("{}_ingest", r.name),
+            &r.ingest_hist,
+            Some((r.throughput(), "ingests/s")),
+            per_ingest,
+        ));
+        if r.query_hist.count > 0 {
+            b.results.push(bench_from_hist(
+                &format!("{}_query", r.name),
+                &r.query_hist,
+                None,
+                None,
+            ));
+        }
+        summary.push((format!("{}_throughput", r.name), r.throughput()));
+        summary.push((format!("{}_busy_rate", r.name), r.busy_rate()));
+        summary.push((
+            format!("{}_p99_ms", r.name),
+            r.ingest_hist.quantile(0.99) / 1e6,
+        ));
+        summary.push((
+            format!("{}_metrics_verified", r.name),
+            if r.daemon.is_some() { 1.0 } else { 0.0 },
+        ));
+        if let Some(d) = &r.daemon {
+            summary.push((
+                format!("{}_snapshot_pause_ms", r.name),
+                d.snapshot_pause.as_secs_f64() * 1e3,
+            ));
+        }
+    }
+    summary.push(("scenarios".to_string(), reports.len() as f64));
+    let pairs: Vec<(&str, f64)> =
+        summary.iter().map(|(k, v)| (k.as_str(), *v)).collect();
+    b.write_json("serve_load", quick, &pairs, path)
+        .with_context(|| format!("writing {path}"))
+}
+
+/// Human-readable per-scenario summary (the bench-table analogue).
+pub fn print_report(r: &ScenarioReport) {
+    println!(
+        "\n## scenario {} ({} tenants x {} intervals)\n",
+        r.name, r.tenants, r.intervals
+    );
+    println!(
+        "wall {} | {:.1} ingests/s | ok {} / sent {} | busy {} \
+         (rate {:.3}) | dropped {} | queries {} | reopens {} | \
+         snapshots {}",
+        fmt_dur(r.wall),
+        r.throughput(),
+        r.ingests_ok,
+        r.ingest_frames_sent,
+        r.busy,
+        r.busy_rate(),
+        r.dropped,
+        r.queries,
+        r.reopens,
+        r.snapshots
+    );
+    let h = &r.ingest_hist;
+    println!(
+        "ingest p50 {} p95 {} p99 {} max {}",
+        fmt_dur(Duration::from_nanos(h.quantile(0.50) as u64)),
+        fmt_dur(Duration::from_nanos(h.quantile(0.95) as u64)),
+        fmt_dur(Duration::from_nanos(h.quantile(0.99) as u64)),
+        fmt_dur(Duration::from_nanos(h.max_ns)),
+    );
+    if r.query_hist.count > 0 {
+        let q = &r.query_hist;
+        println!(
+            "query  p50 {} p95 {} p99 {} max {}",
+            fmt_dur(Duration::from_nanos(q.quantile(0.50) as u64)),
+            fmt_dur(Duration::from_nanos(q.quantile(0.95) as u64)),
+            fmt_dur(Duration::from_nanos(q.quantile(0.99) as u64)),
+            fmt_dur(Duration::from_nanos(q.max_ns)),
+        );
+    }
+    match &r.daemon {
+        Some(d) => println!(
+            "daemon: ingest_frames {} | frames_served {} | busy {} | \
+             snapshots {} (pause {}) | metrics verified",
+            d.ingest_frames,
+            d.frames_served,
+            d.busy,
+            d.snapshot_count,
+            fmt_dur(d.snapshot_pause),
+        ),
+        None => println!("daemon: pre-v3, no metrics cross-check"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builtin_scenarios_are_well_formed() {
+        let all = Scenario::builtin();
+        assert!(all.len() >= 4, "need >= 3 scenarios plus smoke");
+        let mut names: Vec<_> =
+            all.iter().map(|s| s.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        assert_eq!(names.len(), all.len(), "duplicate scenario names");
+        for s in &all {
+            assert!(s.tenants > 0 && s.intervals > 0 && s.batch > 0);
+            assert!(!s.layer_dims.is_empty());
+        }
+        let smoke = Scenario::by_name("smoke").unwrap();
+        assert_eq!((smoke.tenants, smoke.intervals), (32, 200));
+        assert!(Scenario::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn scaled_quick_shrinks() {
+        let s = Scenario::by_name("smoke").unwrap().scaled(true);
+        assert_eq!((s.tenants, s.intervals), (4, 40));
+        let s = Scenario::by_name("smoke").unwrap().scaled(false);
+        assert_eq!((s.tenants, s.intervals), (32, 200));
+    }
+
+    #[test]
+    fn report_rates() {
+        let mut r = ScenarioReport {
+            name: "t".into(),
+            tenants: 1,
+            intervals: 1,
+            wall: Duration::from_secs(2),
+            ingests_ok: 100,
+            ingest_frames_sent: 125,
+            busy: 25,
+            dropped: 0,
+            queries: 0,
+            reopens: 0,
+            snapshots: 0,
+            bytes_sent: 0,
+            ingest_hist: Histogram::new(),
+            query_hist: Histogram::new(),
+            daemon: None,
+        };
+        assert_eq!(r.throughput(), 50.0);
+        assert_eq!(r.busy_rate(), 0.2);
+        r.wall = Duration::ZERO;
+        r.ingest_frames_sent = 0;
+        assert_eq!(r.throughput(), 0.0);
+        assert_eq!(r.busy_rate(), 0.0);
+    }
+}

@@ -1,0 +1,275 @@
+//! One synthetic tenant: a [`SketchClient`] driving its own session
+//! through a [`Scenario`]'s traffic mix on its own OS thread.
+//!
+//! Activations are generated *outside* the timed window — the harness
+//! measures the daemon, not the synthetic data generator.  `Busy`
+//! replies follow the protocol's documented remedy (Diagnose drains the
+//! quota) and retry once; a second `Busy` drops the interval.  Any
+//! other error aborts the tenant, which fails the whole scenario.
+
+use std::sync::Barrier;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ClientConfig;
+use crate::data::ActStream;
+use crate::serve::{
+    Histogram, ServeError, SessionSpec, SketchClient,
+};
+use crate::sketch::Mat;
+
+use super::Scenario;
+
+/// Client-observed counters for one tenant's run.
+#[derive(Clone, Debug, Default)]
+pub struct TenantReport {
+    pub ingests_ok: u64,
+    /// Every ingest frame written, including Busy-answered + retries.
+    pub ingest_frames_sent: u64,
+    pub busy: u64,
+    /// Intervals abandoned after the post-Diagnose retry also hit Busy.
+    pub dropped: u64,
+    pub queries: u64,
+    pub reopens: u64,
+    pub snapshots: u64,
+    /// Payload bytes of *accepted* ingests (mirrors the daemon's
+    /// `ingest_bytes` counter).
+    pub bytes_sent: u64,
+    pub ingest_hist: Histogram,
+    pub query_hist: Histogram,
+}
+
+impl TenantReport {
+    /// Fold another tenant's counters into this aggregate — the same
+    /// per-session → global [`Histogram::merge`] the daemon relies on.
+    pub fn merge(&mut self, other: &TenantReport) {
+        self.ingests_ok += other.ingests_ok;
+        self.ingest_frames_sent += other.ingest_frames_sent;
+        self.busy += other.busy;
+        self.dropped += other.dropped;
+        self.queries += other.queries;
+        self.reopens += other.reopens;
+        self.snapshots += other.snapshots;
+        self.bytes_sent += other.bytes_sent;
+        self.ingest_hist.merge(&other.ingest_hist);
+        self.query_hist.merge(&other.query_hist);
+    }
+}
+
+/// Wire payload bytes of one `Ingest` frame for `acts` (see
+/// `proto::enc_ingest`): session u64 + loss f32 + flag + count prefix,
+/// then per-mat rows/cols prefixes and f64 cells.  Must track the
+/// daemon's `payload_len` accounting exactly for the byte cross-check.
+fn ingest_payload_bytes(acts: &[Mat]) -> u64 {
+    17 + acts
+        .iter()
+        .map(|m| 8 + (m.rows * m.cols * 8) as u64)
+        .sum::<u64>()
+}
+
+fn spec(sc: &Scenario, tenant: usize, gen: usize) -> SessionSpec {
+    SessionSpec {
+        name: format!("{}-t{tenant}-g{gen}", sc.name),
+        layer_dims: sc.layer_dims.clone(),
+        rank: sc.rank,
+        beta: 0.9,
+        seed: 0xB00 + (tenant as u64) * 131 + gen as u64,
+        window: 8,
+        collapse_frac: 0.25,
+    }
+}
+
+fn acts_seed(tenant: usize, gen: usize) -> u64 {
+    0xACC + tenant as u64 + ((gen as u64) << 32)
+}
+
+pub(super) fn run_tenant(
+    addr: &str,
+    sc: &Scenario,
+    tenant: usize,
+    start: &Barrier,
+    net: &ClientConfig,
+) -> Result<TenantReport> {
+    let mut rep = TenantReport::default();
+    let (mut client, _info) = SketchClient::connect_with(addr, net)
+        .with_context(|| format!("tenant {tenant}: connect {addr}"))?;
+    let mut gen = 0usize;
+    let mut session = client
+        .open_session(&spec(sc, tenant, gen))
+        .with_context(|| format!("tenant {tenant}: open session"))?;
+    let mut stream =
+        ActStream::new(&sc.layer_dims, false, acts_seed(tenant, gen));
+
+    // Everyone connects and opens before anyone ingests.
+    start.wait();
+    let period =
+        (sc.hz > 0.0).then(|| Duration::from_secs_f64(1.0 / sc.hz));
+    let t0 = Instant::now();
+    let mut next_due = Duration::ZERO;
+    for interval in 0..sc.intervals {
+        if let Some(p) = period {
+            let now = t0.elapsed();
+            if next_due > now {
+                std::thread::sleep(next_due - now);
+            }
+            next_due += p;
+        }
+        let acts = stream.next_batch(sc.batch);
+        let loss = stream.loss_at(interval, sc.intervals);
+        let bytes = ingest_payload_bytes(&acts);
+
+        rep.ingest_frames_sent += 1;
+        let t = Instant::now();
+        match client.ingest(session, loss, &acts, sc.want_recon) {
+            Ok(_) => {
+                rep.ingest_hist.record_duration(t.elapsed());
+                rep.ingests_ok += 1;
+                rep.bytes_sent += bytes;
+            }
+            Err(ServeError::Busy { .. }) => {
+                rep.busy += 1;
+                let tq = Instant::now();
+                client.diagnose(session).with_context(|| {
+                    format!(
+                        "tenant {tenant} interval {interval}: \
+                         quota-drain diagnose"
+                    )
+                })?;
+                rep.query_hist.record_duration(tq.elapsed());
+                rep.queries += 1;
+                rep.ingest_frames_sent += 1;
+                let t = Instant::now();
+                match client.ingest(session, loss, &acts, sc.want_recon) {
+                    Ok(_) => {
+                        rep.ingest_hist.record_duration(t.elapsed());
+                        rep.ingests_ok += 1;
+                        rep.bytes_sent += bytes;
+                    }
+                    Err(ServeError::Busy { .. }) => rep.dropped += 1,
+                    Err(e) => bail!(
+                        "tenant {tenant} interval {interval}: \
+                         ingest retry failed: {e}"
+                    ),
+                }
+            }
+            Err(e) => bail!(
+                "tenant {tenant} interval {interval}: ingest failed: {e}"
+            ),
+        }
+
+        if sc.query_every > 0 && (interval + 1) % sc.query_every == 0 {
+            let t = Instant::now();
+            client.diagnose(session).with_context(|| {
+                format!("tenant {tenant} interval {interval}: diagnose")
+            })?;
+            rep.query_hist.record_duration(t.elapsed());
+            let t = Instant::now();
+            client.query_trajectory(session).with_context(|| {
+                format!("tenant {tenant} interval {interval}: trajectory")
+            })?;
+            rep.query_hist.record_duration(t.elapsed());
+            rep.queries += 2;
+        }
+
+        if sc.snapshot_every > 0
+            && tenant == 0
+            && (interval + 1) % sc.snapshot_every == 0
+        {
+            client.snapshot().with_context(|| {
+                format!("tenant {tenant} interval {interval}: snapshot")
+            })?;
+            rep.snapshots += 1;
+        }
+
+        if sc.churn_every > 0
+            && (interval + 1) % sc.churn_every == 0
+            && interval + 1 < sc.intervals
+        {
+            client.close_session(session).with_context(|| {
+                format!("tenant {tenant} interval {interval}: close")
+            })?;
+            gen += 1;
+            rep.reopens += 1;
+            session = client
+                .open_session(&spec(sc, tenant, gen))
+                .with_context(|| {
+                    format!("tenant {tenant} interval {interval}: reopen")
+                })?;
+            stream =
+                ActStream::new(&sc.layer_dims, false, acts_seed(tenant, gen));
+        }
+    }
+    client
+        .close_session(session)
+        .with_context(|| format!("tenant {tenant}: final close"))?;
+    Ok(rep)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn payload_bytes_match_encoder() {
+        use crate::serve::codec::Enc;
+        use crate::serve::proto::enc_ingest;
+        use crate::util::rng::Rng;
+
+        let mut rng = Rng::new(7);
+        let acts = vec![
+            Mat::gaussian(8, 32, &mut rng),
+            Mat::gaussian(8, 16, &mut rng),
+        ];
+        let mut e = Enc::new();
+        enc_ingest(&mut e, 42, 0.5, false, &acts);
+        assert_eq!(ingest_payload_bytes(&acts), e.bytes().len() as u64);
+    }
+
+    #[test]
+    fn report_merge_sums_counters() {
+        let mut a = TenantReport {
+            ingests_ok: 3,
+            ingest_frames_sent: 4,
+            busy: 1,
+            bytes_sent: 100,
+            ..TenantReport::default()
+        };
+        a.ingest_hist.record(1_000);
+        let mut b = TenantReport {
+            ingests_ok: 2,
+            ingest_frames_sent: 2,
+            queries: 5,
+            bytes_sent: 50,
+            ..TenantReport::default()
+        };
+        b.ingest_hist.record(3_000);
+        b.query_hist.record(500);
+        a.merge(&b);
+        assert_eq!(a.ingests_ok, 5);
+        assert_eq!(a.ingest_frames_sent, 6);
+        assert_eq!(a.busy, 1);
+        assert_eq!(a.queries, 5);
+        assert_eq!(a.bytes_sent, 150);
+        assert_eq!(a.ingest_hist.count, 2);
+        assert_eq!(a.ingest_hist.min_ns, 1_000);
+        assert_eq!(a.ingest_hist.max_ns, 3_000);
+        assert_eq!(a.query_hist.count, 1);
+    }
+
+    #[test]
+    fn session_specs_are_distinct_across_tenants_and_gens() {
+        let sc = Scenario {
+            name: "churn".into(),
+            ..Scenario::default()
+        };
+        let a = spec(&sc, 0, 0);
+        let b = spec(&sc, 1, 0);
+        let c = spec(&sc, 0, 1);
+        assert_ne!(a.name, b.name);
+        assert_ne!(a.name, c.name);
+        assert_ne!(a.seed, b.seed);
+        assert_ne!(a.seed, c.seed);
+        assert_ne!(acts_seed(0, 1), acts_seed(1, 0));
+    }
+}

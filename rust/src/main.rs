@@ -10,18 +10,24 @@
 //!                 (native substrate — no artifacts needed)
 //!   serve         run the sketchd monitoring daemon in-process
 //!   connect       talk to a sketchd daemon (--probe / --probe-resume N /
-//!                 --stats / --query-trajectory N / --query-similarity N /
-//!                 --query-drift N / --archive-info N / --shutdown / status)
+//!                 --stats / --metrics / --query-trajectory N /
+//!                 --query-similarity N / --query-drift N /
+//!                 --archive-info N / --shutdown / status; --timeout-ms /
+//!                 --retries tune client deadlines)
 //!   memory-table  §4.7 / §5.3 memory models (TAB-MEM1/2)
 //!   bound-check   Thm 4.2 sqrt(6)·tau_{r+1} validation
 //!   info          manifest + platform summary
 
 use std::sync::mpsc;
 use std::thread;
+use std::time::Duration;
 
 use anyhow::{bail, Result};
 
-use sketchgrad::config::{resolve_threads, ExperimentConfig, Variant};
+use sketchgrad::benchkit::fmt_dur;
+use sketchgrad::config::{
+    resolve_threads, ClientConfig, ExperimentConfig, Variant,
+};
 use sketchgrad::coordinator::experiments::curve_table;
 use sketchgrad::coordinator::{
     diagnose_run, figure_table, open_runtime, run_classifier, run_pinn,
@@ -496,22 +502,34 @@ fn run_with_artifact(
 /// `--probe` drives a full mirrored ingest/diagnose/snapshot cycle,
 /// `--probe-resume N` verifies a warm resume after a daemon restart,
 /// `--stats` prints daemon-wide and per-session counters,
+/// `--metrics` prints the v3 observability report (lifetime counters +
+/// ingest/diagnose/query latency percentiles, DESIGN.md §8),
 /// `--query-trajectory N` / `--query-similarity N` / `--query-drift N`
 /// (with `--layer L`, default 0) and `--archive-info N` read the
 /// session's archived sketch history (DESIGN.md §7),
 /// `--shutdown` snapshots and stops the daemon; with none of those the
-/// command prints the daemon's capacity status.
+/// command prints the daemon's capacity status.  `--timeout-ms` and
+/// `--retries` tune the client's socket deadline and connect retries.
 fn cmd_connect(args: &mut Args) -> Result<()> {
     let addr = args.opt_or("addr", "127.0.0.1:7070");
     let probe = args.flag("probe");
     let probe_resume = args.opt("probe-resume");
     let stats = args.flag("stats");
+    let metrics = args.flag("metrics");
     let query_trajectory = args.opt("query-trajectory");
     let query_similarity = args.opt("query-similarity");
     let query_drift = args.opt("query-drift");
     let archive_info = args.opt("archive-info");
     let layer = args.opt_usize("layer", 0)?;
     let shutdown = args.flag("shutdown");
+    let dnet = ClientConfig::default();
+    let net = ClientConfig {
+        io_timeout_ms: args.opt_u64("timeout-ms", dnet.io_timeout_ms)?,
+        connect_retries: args
+            .opt_usize("retries", dnet.connect_retries as usize)?
+            as u32,
+        ..dnet
+    };
     args.finish()?;
     let mut acted = false;
     if probe {
@@ -526,33 +544,91 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
         acted = true;
     }
     if stats {
-        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
         let (daemon, sessions) = client.stats()?;
         println!(
-            "daemon: {}/{} sessions, {} ingested, {} frames served, {} archived",
+            "daemon: {}/{} sessions, {} ingested, {} frames served, \
+             {} busy rejections, {} archived",
             daemon.sessions,
             daemon.max_sessions,
             fmt_bytes(daemon.ingest_bytes as usize),
             daemon.frames_served,
+            daemon.busy_rejections,
             fmt_bytes(daemon.archive_bytes as usize),
         );
         for s in &sessions {
+            let quota = if s.quota_limit == 0 {
+                "unlimited".to_string()
+            } else {
+                format!(
+                    "{}/{}",
+                    fmt_bytes(s.quota_used as usize),
+                    fmt_bytes(s.quota_limit as usize)
+                )
+            };
             println!(
                 "  session {} {:?}: {} steps, {} ingested, \
-                 archive {} intervals / {}",
+                 archive {} intervals / {}, quota {quota}, {} busy",
                 s.id,
                 s.name,
                 s.steps_seen,
                 fmt_bytes(s.ingest_bytes as usize),
                 s.archive_intervals,
                 fmt_bytes(s.archive_bytes as usize),
+                s.busy_rejections,
+            );
+        }
+        acted = true;
+    }
+    if metrics {
+        let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
+        let m = client.metrics()?;
+        println!(
+            "uptime {:.1}s | sessions {} open / {} peak / {} opened",
+            m.uptime_ms as f64 / 1e3,
+            m.sessions_open,
+            m.sessions_peak,
+            m.sessions_opened
+        );
+        println!(
+            "ingested {} ({}/s) over {} ingest frames; {} frames served",
+            fmt_bytes(m.ingest_bytes as usize),
+            fmt_bytes(m.ingest_bytes_per_sec() as usize),
+            m.ingest.count,
+            m.frames_served
+        );
+        println!(
+            "busy: {} admission + {} quota = {}",
+            m.busy_admission,
+            m.busy_quota,
+            m.busy_total()
+        );
+        println!(
+            "snapshots: {} ({} total pause)",
+            m.snapshot_count,
+            fmt_dur(Duration::from_nanos(m.snapshot_pause_ns))
+        );
+        println!("| op | count | p50 | p95 | p99 | max |");
+        println!("|---|---|---|---|---|---|");
+        for (op, h) in [
+            ("ingest", &m.ingest),
+            ("diagnose", &m.diagnose),
+            ("query", &m.query),
+        ] {
+            println!(
+                "| {op} | {} | {} | {} | {} | {} |",
+                h.count,
+                fmt_dur(Duration::from_nanos(h.quantile(0.50) as u64)),
+                fmt_dur(Duration::from_nanos(h.quantile(0.95) as u64)),
+                fmt_dur(Duration::from_nanos(h.quantile(0.99) as u64)),
+                fmt_dur(Duration::from_nanos(h.max_ns)),
             );
         }
         acted = true;
     }
     if let Some(raw) = query_trajectory {
         let session = parse_session(&raw, "--query-trajectory")?;
-        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
         let points = client.query_trajectory(session)?;
         println!("trajectory for session {session} ({} intervals):", points.len());
         for p in &points {
@@ -568,7 +644,7 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     }
     if let Some(raw) = query_similarity {
         let session = parse_session(&raw, "--query-similarity")?;
-        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
         let (steps, sim) = client.query_similarity(session, layer)?;
         println!(
             "cosine similarity, session {session} layer {layer}, steps {steps:?}:"
@@ -584,7 +660,7 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     }
     if let Some(raw) = query_drift {
         let session = parse_session(&raw, "--query-drift")?;
-        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
         let points = client.query_drift(session, layer)?;
         println!("spectral drift, session {session} layer {layer}:");
         for p in &points {
@@ -597,7 +673,7 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     }
     if let Some(raw) = archive_info {
         let session = parse_session(&raw, "--archive-info")?;
-        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
         let a = client.archive_info(session)?;
         println!(
             "archive for session {session}: {}/{} intervals (stride {}, \
@@ -614,13 +690,13 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
         acted = true;
     }
     if shutdown {
-        let (mut client, _info) = SketchClient::connect(&addr)?;
+        let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
         let sessions = client.shutdown_daemon()?;
         println!("daemon shutting down ({sessions} sessions snapshotted)");
         acted = true;
     }
     if !acted {
-        let (_client, info) = SketchClient::connect(&addr)?;
+        let (_client, info) = SketchClient::connect_with(&addr, &net)?;
         println!(
             "{} proto v{} — {}/{} sessions",
             info.server, info.proto, info.sessions, info.max_sessions

@@ -5,16 +5,25 @@
 //! Every method sends one request frame and reads one response frame;
 //! `Busy` and remote protocol errors surface as typed [`ServeError`]
 //! variants so callers (and the backpressure tests) can branch on them.
+//!
+//! Connection establishment honours a [`ClientConfig`]: a connect
+//! timeout, bounded retry-with-backoff, and a socket read/write timeout
+//! so a hung daemon yields [`ServeError::Timeout`] instead of blocking
+//! the caller forever.  [`SketchClient::connect_with`] negotiates the
+//! protocol version: it speaks [`PROTO_VERSION`] first and, if the
+//! daemon rejects it as unsupported, reconnects once at
+//! [`PROTO_MIN_VERSION`].
 
 use std::fmt;
 use std::io;
-use std::net::TcpStream;
+use std::net::{TcpStream, ToSocketAddrs};
 use std::thread;
 use std::time::Duration;
 
 use anyhow::{ensure, Context, Result};
 
 use crate::archive::{DriftPoint, SessionArchive, TrajectoryPoint};
+use crate::config::ClientConfig;
 use crate::coordinator::StepMetrics;
 use crate::data::ActStream;
 use crate::monitor::{step_metrics, MonitorHub, SessionId};
@@ -22,10 +31,12 @@ use crate::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
 
 use super::codec::Enc;
 use super::daemon::recon_errors;
+use super::metrics::MetricsReport;
 use super::proto::{
-    self, monitor_config, read_frame_reusing, write_frame_reusing,
-    ArchiveInfo, DaemonStats, ErrorCode, Request, Response, SessionSpec,
-    SessionStats, PROTO_VERSION,
+    self, monitor_config, read_frame_reusing,
+    write_frame_versioned_reusing, ArchiveInfo, DaemonStats, ErrorCode,
+    Request, Response, SessionSpec, SessionStats, METRICS_MIN_VERSION,
+    PROTO_MIN_VERSION, PROTO_VERSION,
 };
 
 /// Typed client-side failures.
@@ -38,6 +49,8 @@ pub enum ServeError {
     Remote { code: ErrorCode, message: String },
     /// The daemon replied with an unexpected message or malformed bytes.
     Protocol(String),
+    /// A connect/read/write deadline expired (see [`ClientConfig`]).
+    Timeout(io::Error),
     Io(io::Error),
 }
 
@@ -51,6 +64,7 @@ impl fmt::Display for ServeError {
                 write!(f, "remote error [{code}]: {message}")
             }
             ServeError::Protocol(m) => write!(f, "protocol error: {m}"),
+            ServeError::Timeout(e) => write!(f, "timed out: {e}"),
             ServeError::Io(e) => write!(f, "io error: {e}"),
         }
     }
@@ -60,7 +74,14 @@ impl std::error::Error for ServeError {}
 
 impl From<io::Error> for ServeError {
     fn from(e: io::Error) -> ServeError {
-        ServeError::Io(e)
+        // Read timeouts surface as TimedOut on most platforms but as
+        // WouldBlock on some Unixes; fold both into the typed variant.
+        match e.kind() {
+            io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => {
+                ServeError::Timeout(e)
+            }
+            _ => ServeError::Io(e),
+        }
     }
 }
 
@@ -97,40 +118,124 @@ pub struct DiagnoseReply {
 /// fresh frame buffers in steady state.
 pub struct SketchClient {
     stream: TcpStream,
+    /// Protocol version negotiated for this connection; every request
+    /// frame carries it and replies are decoded against the version the
+    /// daemon echoes back.
+    version: u16,
     enc: Enc,
     frame: Vec<u8>,
     payload: Vec<u8>,
 }
 
-impl SketchClient {
-    /// Connect and complete the `Hello` handshake.  Connection refusals
-    /// are retried briefly so freshly spawned daemons (CI scripts,
-    /// in-process tests) don't race the bind.
-    pub fn connect(addr: &str) -> Result<(SketchClient, ServerInfo), ServeError> {
-        let mut last: Option<io::Error> = None;
-        for _ in 0..20 {
-            match TcpStream::connect(addr) {
-                Ok(stream) => {
-                    stream.set_nodelay(true)?;
-                    let mut client = SketchClient {
-                        stream,
-                        enc: Enc::new(),
-                        frame: Vec::new(),
-                        payload: Vec::new(),
-                    };
-                    let info = client.hello()?;
-                    return Ok((client, info));
-                }
-                Err(e) if e.kind() == io::ErrorKind::ConnectionRefused => {
-                    last = Some(e);
-                    thread::sleep(Duration::from_millis(100));
-                }
-                Err(e) => return Err(e.into()),
-            }
+/// Errors worth another connect attempt: the daemon isn't up yet
+/// (refused) or the connect deadline expired (transient under load).
+fn retryable_connect(e: &io::Error) -> bool {
+    matches!(
+        e.kind(),
+        io::ErrorKind::ConnectionRefused
+            | io::ErrorKind::TimedOut
+            | io::ErrorKind::WouldBlock
+    )
+}
+
+/// Open the TCP stream per `net`: connect timeout (0 = OS default),
+/// bounded retries with doubling backoff (capped at 1s), and socket
+/// read/write timeouts (0 = block forever).
+fn connect_stream(
+    addr: &str,
+    net: &ClientConfig,
+) -> Result<TcpStream, ServeError> {
+    let connect_timeout = Duration::from_millis(net.connect_timeout_ms);
+    let mut backoff = Duration::from_millis(net.retry_backoff_ms.max(1));
+    let mut last: Option<io::Error> = None;
+    for attempt in 0..=net.connect_retries {
+        if attempt > 0 {
+            thread::sleep(backoff);
+            backoff = (backoff * 2).min(Duration::from_millis(1000));
         }
-        Err(ServeError::Io(last.unwrap_or_else(|| {
-            io::Error::new(io::ErrorKind::ConnectionRefused, "connect failed")
-        })))
+        let conn = if connect_timeout.is_zero() {
+            TcpStream::connect(addr)
+        } else {
+            // `connect_timeout` needs a resolved SocketAddr.
+            match addr.to_socket_addrs().map(|mut it| it.next()) {
+                Ok(Some(sa)) => {
+                    TcpStream::connect_timeout(&sa, connect_timeout)
+                }
+                Ok(None) => Err(io::Error::new(
+                    io::ErrorKind::InvalidInput,
+                    format!("no address found for {addr}"),
+                )),
+                Err(e) => Err(e),
+            }
+        };
+        match conn {
+            Ok(stream) => {
+                stream.set_nodelay(true)?;
+                if net.io_timeout_ms > 0 {
+                    let t = Duration::from_millis(net.io_timeout_ms);
+                    stream.set_read_timeout(Some(t))?;
+                    stream.set_write_timeout(Some(t))?;
+                }
+                return Ok(stream);
+            }
+            Err(e) if retryable_connect(&e) => last = Some(e),
+            Err(e) => return Err(e.into()),
+        }
+    }
+    Err(last.map(ServeError::from).unwrap_or_else(|| {
+        ServeError::Io(io::Error::new(
+            io::ErrorKind::ConnectionRefused,
+            "connect failed",
+        ))
+    }))
+}
+
+impl SketchClient {
+    /// Connect with default [`ClientConfig`] timeouts and complete the
+    /// `Hello` handshake.
+    pub fn connect(addr: &str) -> Result<(SketchClient, ServerInfo), ServeError> {
+        SketchClient::connect_with(addr, &ClientConfig::default())
+    }
+
+    /// Connect per `net` and complete the `Hello` handshake, negotiating
+    /// the protocol version downward if the daemon is older.  A version
+    /// rejection is fatal per-connection (the daemon closes the socket
+    /// after replying), so the downgrade retry reconnects.
+    pub fn connect_with(
+        addr: &str,
+        net: &ClientConfig,
+    ) -> Result<(SketchClient, ServerInfo), ServeError> {
+        let stream = connect_stream(addr, net)?;
+        let mut client = SketchClient::from_stream(stream, PROTO_VERSION);
+        match client.hello() {
+            Ok(info) => Ok((client, info)),
+            Err(ServeError::Remote {
+                code: ErrorCode::UnsupportedVersion,
+                ..
+            }) if PROTO_MIN_VERSION < PROTO_VERSION => {
+                let stream = connect_stream(addr, net)?;
+                let mut client =
+                    SketchClient::from_stream(stream, PROTO_MIN_VERSION);
+                let info = client.hello()?;
+                Ok((client, info))
+            }
+            Err(e) => Err(e),
+        }
+    }
+
+    fn from_stream(stream: TcpStream, version: u16) -> SketchClient {
+        SketchClient {
+            stream,
+            version,
+            enc: Enc::new(),
+            frame: Vec::new(),
+            payload: Vec::new(),
+        }
+    }
+
+    /// The protocol version this connection negotiated.
+    pub fn proto_version(&self) -> u16 {
+        self.version
     }
 
     fn round_trip(&mut self, req: &Request) -> Result<Response, ServeError> {
@@ -142,21 +247,24 @@ impl SketchClient {
     /// Send whatever is in `self.enc` as a `msg` frame and read the
     /// response, mapping `Busy`/`Error` to typed failures.
     fn send_encoded(&mut self, msg: u8) -> Result<Response, ServeError> {
-        write_frame_reusing(
+        write_frame_versioned_reusing(
             &mut self.stream,
+            self.version,
             msg,
             self.enc.bytes(),
             &mut self.frame,
         )?;
         let header = read_frame_reusing(&mut self.stream, &mut self.payload)?;
-        if header.version != PROTO_VERSION {
+        if !(PROTO_MIN_VERSION..=PROTO_VERSION).contains(&header.version) {
             return Err(ServeError::Protocol(format!(
-                "response frame version {} (expected {PROTO_VERSION})",
+                "response frame version {} (expected \
+                 {PROTO_MIN_VERSION}..={PROTO_VERSION})",
                 header.version
             )));
         }
-        let resp = Response::decode(header.msg, &self.payload)
-            .map_err(|e| ServeError::Protocol(e.to_string()))?;
+        let resp =
+            Response::decode_v(header.msg, &self.payload, header.version)
+                .map_err(|e| ServeError::Protocol(e.to_string()))?;
         match resp {
             Response::Busy { used, limit } => {
                 Err(ServeError::Busy { used, limit })
@@ -296,6 +404,23 @@ impl SketchClient {
         match self.round_trip(&Request::Stats)? {
             Response::StatsOk { daemon, sessions } => Ok((daemon, sessions)),
             other => Err(unexpected("StatsOk", &other)),
+        }
+    }
+
+    /// Daemon observability report: lifetime counters plus the
+    /// ingest/diagnose/query latency histograms (proto v3; a v2
+    /// connection fails client-side before touching the wire).
+    pub fn metrics(&mut self) -> Result<MetricsReport, ServeError> {
+        if self.version < METRICS_MIN_VERSION {
+            return Err(ServeError::Protocol(format!(
+                "Metrics requires proto v{METRICS_MIN_VERSION}, \
+                 connection negotiated v{}",
+                self.version
+            )));
+        }
+        match self.round_trip(&Request::Metrics)? {
+            Response::MetricsOk(report) => Ok(report),
+            other => Err(unexpected("MetricsOk", &other)),
         }
     }
 

@@ -149,6 +149,13 @@ impl Enc {
         }
     }
 
+    pub fn u64s(&mut self, xs: &[u64]) {
+        self.len32(xs.len());
+        for &x in xs {
+            self.u64(x);
+        }
+    }
+
     pub fn opt_f64(&mut self, v: Option<f64>) {
         match v {
             Some(x) => {
@@ -273,6 +280,11 @@ impl<'a> Dec<'a> {
         (0..n).map(|_| Ok(self.u32()? as usize)).collect()
     }
 
+    pub fn u64s(&mut self) -> Result<Vec<u64>, CodecError> {
+        let n = self.len32(8)?;
+        (0..n).map(|_| self.u64()).collect()
+    }
+
     pub fn opt_f64(&mut self) -> Result<Option<f64>, CodecError> {
         match self.u8()? {
             0 => Ok(None),
@@ -376,6 +388,7 @@ mod tests {
         e.f64s(&[1.0, -2.5]);
         e.f32s(&[0.5]);
         e.usizes(&[3, 0, 9]);
+        e.u64s(&[u64::MAX, 0, 17]);
         e.opt_f64(Some(2.0));
         e.opt_f64(None);
         e.opt_usize(Some(5));
@@ -393,6 +406,7 @@ mod tests {
         assert_eq!(d.f64s().unwrap(), vec![1.0, -2.5]);
         assert_eq!(d.f32s().unwrap(), vec![0.5]);
         assert_eq!(d.usizes().unwrap(), vec![3, 0, 9]);
+        assert_eq!(d.u64s().unwrap(), vec![u64::MAX, 0, 17]);
         assert_eq!(d.opt_f64().unwrap(), Some(2.0));
         assert_eq!(d.opt_f64().unwrap(), None);
         assert_eq!(d.opt_usize().unwrap(), Some(5));

@@ -20,6 +20,11 @@
 //!   from it and `Stats` reports daemon/session counters.  The archive
 //!   rides in the snapshot, so query answers survive a warm restart
 //!   bit-exactly.
+//! * **Observability**: every handled frame's latency lands in a
+//!   lock-free [`ServeMetrics`] histogram (ingest/diagnose/query), with
+//!   counters for Busy rejections, bytes, sessions and snapshot pauses;
+//!   the v3 `Metrics` op serves the report and the lifetime pieces ride
+//!   in the snapshot.
 //!
 //! Sessions outlive connections: a client may disconnect and a later
 //! connection (or a daemon restart) continues the same session id.
@@ -27,7 +32,7 @@
 use std::collections::BTreeMap;
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Mutex, MutexGuard};
 use std::thread;
 use std::time::{Duration, Instant};
@@ -43,9 +48,11 @@ use crate::sketch::{
 use crate::util::cli::Args;
 
 use super::codec::Enc;
+use super::metrics::ServeMetrics;
 use super::proto::{
     self, monitor_config, ArchiveInfo, DaemonStats, ErrorCode, FrameHeader,
-    Request, Response, SessionStats, FRAME_HEADER_LEN, PROTO_VERSION,
+    Request, Response, SessionStats, FRAME_HEADER_LEN, METRICS_MIN_VERSION,
+    PROTO_MIN_VERSION, PROTO_VERSION,
 };
 use super::store::{DaemonSnapshot, SessionRecord, SnapshotStore};
 
@@ -56,6 +63,8 @@ struct Tenant {
     quota_used: u64,
     /// Lifetime ingest payload bytes (Stats counter; persisted).
     ingest_bytes: u64,
+    /// Lifetime quota-Busy rejections this session absorbed (persisted).
+    busy_rejections: u64,
     /// Retained sketch history for archive queries.
     archive: SessionArchive,
 }
@@ -80,9 +89,10 @@ struct Shared {
     /// state lock is held, so `save_snapshot`'s capture-and-clear cannot
     /// lose a concurrent mutation's mark.
     dirty: AtomicBool,
-    /// Response frames written across all connections (Stats counter;
-    /// process-lifetime, not persisted).
-    frames_served: AtomicU64,
+    /// Lock-free observability counters + latency histograms, updated by
+    /// every connection thread outside the state lock. Lifetime pieces
+    /// ride in the snapshot; `frames_served` stays process-scoped.
+    metrics: ServeMetrics,
 }
 
 fn lock(state: &Mutex<State>) -> MutexGuard<'_, State> {
@@ -133,6 +143,7 @@ fn invalid(message: String) -> Response {
 /// be wiped) and re-set if the write fails, so un-persisted state is
 /// always retried at the next opportunity.
 fn save_snapshot(shared: &Shared) -> Result<(u64, u64)> {
+    let t0 = Instant::now();
     let snap = {
         let st = lock(&shared.state);
         let mut sessions = Vec::with_capacity(st.hub.len());
@@ -147,15 +158,24 @@ fn save_snapshot(shared: &Shared) -> Result<(u64, u64)> {
                 engine: tenant.engine.snapshot(),
                 quota_used: tenant.quota_used,
                 ingest_bytes: tenant.ingest_bytes,
+                busy_rejections: tenant.busy_rejections,
                 archive: tenant.archive.state(),
             });
         }
         shared.dirty.store(false, Ordering::SeqCst);
-        DaemonSnapshot { sessions }
+        DaemonSnapshot {
+            sessions,
+            metrics: shared.metrics.state(),
+        }
     };
     let count = snap.sessions.len() as u64;
     match shared.store.save(&snap) {
-        Ok(bytes) => Ok((bytes, count)),
+        Ok(bytes) => {
+            // Wall time of capture + write; the lock-held capture above
+            // is the slice that stalls concurrent ingest.
+            shared.metrics.note_snapshot(t0.elapsed());
+            Ok((bytes, count))
+        }
         Err(e) => {
             shared.dirty.store(true, Ordering::SeqCst);
             Err(e)
@@ -182,6 +202,7 @@ fn handle_request(
         Request::OpenSession(spec) => {
             let mut st = lock(&shared.state);
             if st.hub.len() >= shared.cfg.max_sessions {
+                shared.metrics.note_busy_admission();
                 return Response::Busy {
                     used: st.hub.len() as u64,
                     limit: shared.cfg.max_sessions as u64,
@@ -219,6 +240,7 @@ fn handle_request(
                     engine,
                     quota_used: 0,
                     ingest_bytes: 0,
+                    busy_rejections: 0,
                     archive: SessionArchive::new(
                         shared.cfg.archive.capacity,
                         shared.cfg.archive.stride,
@@ -227,6 +249,7 @@ fn handle_request(
                 },
             );
             shared.dirty.store(true, Ordering::SeqCst);
+            shared.metrics.note_session_open(st.hub.len() as u64);
             Response::SessionOpened { session: id.raw() }
         }
         Request::Ingest {
@@ -244,6 +267,8 @@ fn handle_request(
             };
             let quota = shared.cfg.session_quota_bytes as u64;
             if quota > 0 && tenant.quota_used + payload_len as u64 > quota {
+                tenant.busy_rejections += 1;
+                shared.metrics.note_busy_quota();
                 return Response::Busy {
                     used: tenant.quota_used,
                     limit: quota,
@@ -254,6 +279,7 @@ fn handle_request(
             }
             tenant.quota_used += payload_len as u64;
             tenant.ingest_bytes += payload_len as u64;
+            shared.metrics.note_ingest_bytes(payload_len as u64);
             // Archive this interval (ring-buffered, stride-sampled) and
             // push the ring's honest byte accounting into the hub.
             if tenant.archive.maybe_record(
@@ -367,20 +393,25 @@ fn handle_request(
             let mut daemon = DaemonStats {
                 sessions: st.hub.len() as u64,
                 max_sessions: shared.cfg.max_sessions as u64,
-                frames_served: shared.frames_served.load(Ordering::SeqCst),
+                frames_served: shared.metrics.frames_served(),
+                busy_rejections: shared.metrics.busy_total(),
                 ..DaemonStats::default()
             };
+            let quota_limit = shared.cfg.session_quota_bytes as u64;
             let mut sessions = Vec::with_capacity(st.hub.len());
             for s in st.hub.sessions() {
                 let raw = s.id.raw();
-                let (ingest, ar_bytes, ar_n) = match st.tenants.get(&raw) {
-                    Some(t) => (
-                        t.ingest_bytes,
-                        t.archive.bytes() as u64,
-                        t.archive.len() as u64,
-                    ),
-                    None => (0, 0, 0),
-                };
+                let (ingest, ar_bytes, ar_n, busy, quota_used) =
+                    match st.tenants.get(&raw) {
+                        Some(t) => (
+                            t.ingest_bytes,
+                            t.archive.bytes() as u64,
+                            t.archive.len() as u64,
+                            t.busy_rejections,
+                            t.quota_used,
+                        ),
+                        None => (0, 0, 0, 0, 0),
+                    };
                 daemon.ingest_bytes += ingest;
                 daemon.archive_bytes += ar_bytes;
                 sessions.push(SessionStats {
@@ -390,9 +421,16 @@ fn handle_request(
                     ingest_bytes: ingest,
                     archive_bytes: ar_bytes,
                     archive_intervals: ar_n,
+                    busy_rejections: busy,
+                    quota_used,
+                    quota_limit,
                 });
             }
             Response::StatsOk { daemon, sessions }
+        }
+        Request::Metrics => {
+            let open = lock(&shared.state).hub.len() as u64;
+            Response::MetricsOk(shared.metrics.report(open))
         }
         Request::QueryTrajectory { session } => {
             let st = lock(&shared.state);
@@ -544,17 +582,36 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
             Ok(Some(h)) => h,
             Ok(None) | Err(_) => return,
         };
-        let resp = if header.version != PROTO_VERSION {
+        let version_ok = (PROTO_MIN_VERSION..=PROTO_VERSION)
+            .contains(&header.version);
+        let resp = if !version_ok {
             Response::Error {
                 code: ErrorCode::UnsupportedVersion,
                 message: format!(
-                    "server speaks proto v{PROTO_VERSION}, frame is v{}",
+                    "server speaks proto v{PROTO_MIN_VERSION}..v{PROTO_VERSION}, \
+                     frame is v{}",
+                    header.version
+                ),
+            }
+        } else if header.msg == proto::msg::METRICS
+            && header.version < METRICS_MIN_VERSION
+        {
+            Response::Error {
+                code: ErrorCode::UnsupportedVersion,
+                message: format!(
+                    "Metrics requires proto v{METRICS_MIN_VERSION}, \
+                     frame is v{}",
                     header.version
                 ),
             }
         } else {
             match Request::decode(header.msg, &payload) {
-                Ok(req) => handle_request(shared, req, payload.len()),
+                Ok(req) => {
+                    let t0 = Instant::now();
+                    let resp = handle_request(shared, req, payload.len());
+                    shared.metrics.observe_request(header.msg, t0.elapsed());
+                    resp
+                }
                 Err(e) => Response::Error {
                     code: ErrorCode::BadFrame,
                     message: e.to_string(),
@@ -568,10 +625,16 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
                 ..
             }
         );
+        // Echo the request's version on the reply (clamped into range for
+        // rejections of out-of-range frames) so version-gated response
+        // fields match what the peer can decode.
+        let reply_version =
+            header.version.clamp(PROTO_MIN_VERSION, PROTO_VERSION);
         enc.reset();
-        resp.encode_into(&mut enc);
-        if proto::write_frame_reusing(
+        resp.encode_into_v(&mut enc, reply_version);
+        if proto::write_frame_versioned_reusing(
             &mut stream,
+            reply_version,
             resp.msg_type(),
             enc.bytes(),
             &mut frame,
@@ -580,7 +643,7 @@ fn handle_conn(mut stream: TcpStream, shared: &Shared) {
         {
             return;
         }
-        shared.frames_served.fetch_add(1, Ordering::SeqCst);
+        shared.metrics.note_frame_served();
         if fatal {
             return;
         }
@@ -613,10 +676,14 @@ impl Daemon {
             hub: MonitorHub::with_pool(Arc::clone(&pool)),
             tenants: BTreeMap::new(),
         };
+        let metrics = ServeMetrics::new();
         if let Some(snap) = store
             .load()
             .with_context(|| format!("loading snapshot {}", cfg.snapshot_path))?
         {
+            // Lifetime observability counters resume where the snapshot
+            // left them (uptime + frames_served stay process-scoped).
+            metrics.restore(&snap.metrics);
             for rec in &snap.sessions {
                 let id = state.hub.restore_session(&rec.session)?;
                 let archive = SessionArchive::from_state(&rec.archive);
@@ -632,6 +699,7 @@ impl Daemon {
                         )?,
                         quota_used: rec.quota_used,
                         ingest_bytes: rec.ingest_bytes,
+                        busy_rejections: rec.busy_rejections,
                         archive,
                     },
                 );
@@ -647,7 +715,7 @@ impl Daemon {
                 state: Mutex::new(state),
                 shutdown: AtomicBool::new(false),
                 dirty: AtomicBool::new(false),
-                frames_served: AtomicU64::new(0),
+                metrics,
             }),
         })
     }

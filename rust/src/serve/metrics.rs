@@ -1,0 +1,803 @@
+//! Daemon observability: lock-cheap counters + log-scale latency histograms.
+//!
+//! Everything in this module is designed to sit on the daemon's hot path
+//! without widening the big `State` mutex: all counters are relaxed
+//! atomics updated outside the lock, and the latency histograms use a
+//! fixed power-of-two bucket layout so recording a sample is one
+//! `leading_zeros` plus one `fetch_add`.
+//!
+//! ## Bucket scheme
+//!
+//! `NUM_BUCKETS` = 40 buckets over nanoseconds. Bucket 0 covers `[0, 2)`;
+//! bucket `i >= 1` covers `[2^i, 2^(i+1))`; the last bucket is open-ended
+//! (its finite lower bound, 2^39 ns, is ~9 minutes — far beyond any sane
+//! frame latency). Quantiles are estimated by walking the cumulative
+//! counts to the target rank and returning the geometric mean of the
+//! bucket bounds, clamped into the observed `[min_ns, max_ns]` range;
+//! within the last (open) bucket the recorded maximum is returned. For
+//! any sample distribution the estimate of a quantile is within a factor
+//! of sqrt(2) of the true order statistic (the geometric mean of `[2^i,
+//! 2^(i+1))` is off by at most sqrt(2) from any point inside the bucket,
+//! and clamping can only move the estimate toward the true value).
+//!
+//! ## Lifetime semantics
+//!
+//! `ServeMetrics` counters and histograms are *lifetime* totals: they are
+//! persisted in the snapshot (see `serve::store`, SNAP v3) and restored
+//! on warm restart, so operators see a monotone trajectory across daemon
+//! restarts. Two exceptions are process-scoped by design: `uptime_ms`
+//! (wall time since this process started) and `frames_served` (documented
+//! process-lifetime in `DaemonStats` and asserted on by the probe).
+//!
+//! Per-histogram fields are read individually with relaxed ordering; a
+//! snapshot taken while writers are active may be torn by a few in-flight
+//! samples (count vs. buckets). That is acceptable for monitoring and
+//! keeps the ingest path free of synchronization.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use super::codec::{CodecError, Dec, Enc};
+use super::proto::msg;
+
+/// Number of log2 latency buckets (see module docs for the layout).
+pub const NUM_BUCKETS: usize = 40;
+
+/// Map a nanosecond sample to its bucket index.
+#[inline]
+pub fn bucket_index(ns: u64) -> usize {
+    if ns < 2 {
+        0
+    } else {
+        ((63 - ns.leading_zeros()) as usize).min(NUM_BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower / exclusive upper bound of bucket `i` in nanoseconds.
+/// The last bucket reports `u64::MAX` as its (open) upper bound.
+pub fn bucket_bounds(i: usize) -> (u64, u64) {
+    assert!(i < NUM_BUCKETS);
+    let lo = if i == 0 { 0 } else { 1u64 << i };
+    let hi = if i == NUM_BUCKETS - 1 {
+        u64::MAX
+    } else {
+        1u64 << (i + 1)
+    };
+    (lo, hi)
+}
+
+#[inline]
+fn duration_ns(d: Duration) -> u64 {
+    d.as_nanos().min(u64::MAX as u128) as u64
+}
+
+/// Plain (single-threaded) latency histogram. Used client-side by
+/// `loadgen` and as the snapshot/wire representation of the daemon's
+/// [`AtomicHistogram`]s.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    pub count: u64,
+    pub sum_ns: u64,
+    /// Smallest recorded sample; 0 when the histogram is empty.
+    pub min_ns: u64,
+    pub max_ns: u64,
+    /// Always exactly `NUM_BUCKETS` entries.
+    pub buckets: Vec<u64>,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            count: 0,
+            sum_ns: 0,
+            min_ns: 0,
+            max_ns: 0,
+            buckets: vec![0; NUM_BUCKETS],
+        }
+    }
+
+    pub fn record(&mut self, ns: u64) {
+        if self.count == 0 {
+            self.min_ns = ns;
+            self.max_ns = ns;
+        } else {
+            self.min_ns = self.min_ns.min(ns);
+            self.max_ns = self.max_ns.max(ns);
+        }
+        self.count += 1;
+        self.sum_ns = self.sum_ns.saturating_add(ns);
+        self.buckets[bucket_index(ns)] += 1;
+    }
+
+    pub fn record_duration(&mut self, d: Duration) {
+        self.record(duration_ns(d));
+    }
+
+    /// Fold `other` into `self` (per-session → global aggregation).
+    pub fn merge(&mut self, other: &Histogram) {
+        if other.count == 0 {
+            return;
+        }
+        if self.count == 0 {
+            self.min_ns = other.min_ns;
+            self.max_ns = other.max_ns;
+        } else {
+            self.min_ns = self.min_ns.min(other.min_ns);
+            self.max_ns = self.max_ns.max(other.max_ns);
+        }
+        self.count += other.count;
+        self.sum_ns = self.sum_ns.saturating_add(other.sum_ns);
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += *b;
+        }
+    }
+
+    /// Estimated `q`-quantile in nanoseconds (0.0 for an empty
+    /// histogram). See the module docs for the sqrt(2) error bound.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let q = q.clamp(0.0, 1.0);
+        let rank = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                if i == NUM_BUCKETS - 1 {
+                    return self.max_ns as f64;
+                }
+                let (lo, hi) = bucket_bounds(i);
+                let est = ((lo.max(1) as f64) * (hi as f64)).sqrt();
+                return est.clamp(self.min_ns as f64, self.max_ns as f64);
+            }
+        }
+        self.max_ns as f64
+    }
+
+    pub fn mean_ns(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum_ns as f64 / self.count as f64
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.count == 0
+    }
+}
+
+/// Concurrent histogram: identical layout to [`Histogram`], all fields
+/// relaxed atomics so many connection threads can record without a lock.
+#[derive(Debug)]
+pub struct AtomicHistogram {
+    count: AtomicU64,
+    sum_ns: AtomicU64,
+    /// `u64::MAX` until the first sample (so `fetch_min` works).
+    min_ns: AtomicU64,
+    max_ns: AtomicU64,
+    buckets: [AtomicU64; NUM_BUCKETS],
+}
+
+impl Default for AtomicHistogram {
+    fn default() -> Self {
+        AtomicHistogram::new()
+    }
+}
+
+impl AtomicHistogram {
+    pub fn new() -> AtomicHistogram {
+        AtomicHistogram {
+            count: AtomicU64::new(0),
+            sum_ns: AtomicU64::new(0),
+            min_ns: AtomicU64::new(u64::MAX),
+            max_ns: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    pub fn record(&self, ns: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum_ns.fetch_add(ns, Ordering::Relaxed);
+        self.min_ns.fetch_min(ns, Ordering::Relaxed);
+        self.max_ns.fetch_max(ns, Ordering::Relaxed);
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn record_duration(&self, d: Duration) {
+        self.record(duration_ns(d));
+    }
+
+    /// Copy the current state into a plain histogram (may be torn by a
+    /// few in-flight samples under concurrent writers; fine for
+    /// monitoring).
+    pub fn snapshot(&self) -> Histogram {
+        let count = self.count.load(Ordering::Relaxed);
+        let min = self.min_ns.load(Ordering::Relaxed);
+        Histogram {
+            count,
+            sum_ns: self.sum_ns.load(Ordering::Relaxed),
+            min_ns: if count == 0 || min == u64::MAX { 0 } else { min },
+            max_ns: self.max_ns.load(Ordering::Relaxed),
+            buckets: self
+                .buckets
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect(),
+        }
+    }
+
+    /// Overwrite state from a persisted histogram (warm restart).
+    pub fn restore(&self, h: &Histogram) {
+        self.count.store(h.count, Ordering::Relaxed);
+        self.sum_ns.store(h.sum_ns, Ordering::Relaxed);
+        let min = if h.count == 0 { u64::MAX } else { h.min_ns };
+        self.min_ns.store(min, Ordering::Relaxed);
+        self.max_ns.store(h.max_ns, Ordering::Relaxed);
+        for (a, v) in self.buckets.iter().zip(&h.buckets) {
+            a.store(*v, Ordering::Relaxed);
+        }
+    }
+}
+
+/// Everything the daemon tracks. One instance per daemon, shared across
+/// connection threads; every mutation is a relaxed atomic op.
+#[derive(Debug)]
+pub struct ServeMetrics {
+    started: Instant,
+    ingest_bytes: AtomicU64,
+    sessions_peak: AtomicU64,
+    sessions_opened: AtomicU64,
+    busy_admission: AtomicU64,
+    busy_quota: AtomicU64,
+    snapshot_count: AtomicU64,
+    snapshot_pause_ns: AtomicU64,
+    /// Process-lifetime (deliberately NOT persisted; `run_probe` relies
+    /// on it restarting from zero).
+    frames_served: AtomicU64,
+    /// Handle latency of Ingest frames. `ingest.count` IS the number of
+    /// ingest frames the daemon has handled (accepted, Busy, or error) —
+    /// there is no separate frame counter.
+    pub ingest: AtomicHistogram,
+    /// Handle latency of Diagnose frames.
+    pub diagnose: AtomicHistogram,
+    /// Handle latency of read-only frames (Stats/Query*/ArchiveInfo/
+    /// Metrics). A Metrics request records itself only after its reply is
+    /// built, so a report never includes the request that fetched it.
+    pub query: AtomicHistogram,
+}
+
+impl Default for ServeMetrics {
+    fn default() -> Self {
+        ServeMetrics::new()
+    }
+}
+
+impl ServeMetrics {
+    pub fn new() -> ServeMetrics {
+        ServeMetrics {
+            started: Instant::now(),
+            ingest_bytes: AtomicU64::new(0),
+            sessions_peak: AtomicU64::new(0),
+            sessions_opened: AtomicU64::new(0),
+            busy_admission: AtomicU64::new(0),
+            busy_quota: AtomicU64::new(0),
+            snapshot_count: AtomicU64::new(0),
+            snapshot_pause_ns: AtomicU64::new(0),
+            frames_served: AtomicU64::new(0),
+            ingest: AtomicHistogram::new(),
+            diagnose: AtomicHistogram::new(),
+            query: AtomicHistogram::new(),
+        }
+    }
+
+    /// A session was admitted; `open_now` is the post-insert open count.
+    pub fn note_session_open(&self, open_now: u64) {
+        self.sessions_opened.fetch_add(1, Ordering::Relaxed);
+        self.sessions_peak.fetch_max(open_now, Ordering::Relaxed);
+    }
+
+    pub fn note_busy_admission(&self) {
+        self.busy_admission.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_busy_quota(&self) {
+        self.busy_quota.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn note_ingest_bytes(&self, bytes: u64) {
+        self.ingest_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// `pause` is the wall time of one snapshot save (state capture under
+    /// the lock + atomic file write); the lock-held capture is the part
+    /// that stalls concurrent ingest.
+    pub fn note_snapshot(&self, pause: Duration) {
+        self.snapshot_count.fetch_add(1, Ordering::Relaxed);
+        self.snapshot_pause_ns
+            .fetch_add(duration_ns(pause), Ordering::Relaxed);
+    }
+
+    pub fn note_frame_served(&self) {
+        self.frames_served.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn frames_served(&self) -> u64 {
+        self.frames_served.load(Ordering::Relaxed)
+    }
+
+    pub fn busy_total(&self) -> u64 {
+        self.busy_admission.load(Ordering::Relaxed) + self.busy_quota.load(Ordering::Relaxed)
+    }
+
+    /// Route a handled request's latency to the matching histogram.
+    pub fn observe_request(&self, msg_type: u8, elapsed: Duration) {
+        let ns = duration_ns(elapsed);
+        match msg_type {
+            msg::INGEST => self.ingest.record(ns),
+            msg::DIAGNOSE => self.diagnose.record(ns),
+            msg::STATS
+            | msg::QUERY_TRAJECTORY
+            | msg::QUERY_SIMILARITY
+            | msg::QUERY_DRIFT
+            | msg::ARCHIVE_INFO
+            | msg::METRICS => self.query.record(ns),
+            _ => {}
+        }
+    }
+
+    /// Build the wire report. `sessions_open` comes from the caller (it
+    /// lives under the state lock, which this module never takes).
+    pub fn report(&self, sessions_open: u64) -> MetricsReport {
+        MetricsReport {
+            uptime_ms: self.started.elapsed().as_millis() as u64,
+            sessions_open,
+            sessions_peak: self.sessions_peak.load(Ordering::Relaxed),
+            sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
+            ingest_bytes: self.ingest_bytes.load(Ordering::Relaxed),
+            frames_served: self.frames_served(),
+            busy_admission: self.busy_admission.load(Ordering::Relaxed),
+            busy_quota: self.busy_quota.load(Ordering::Relaxed),
+            snapshot_count: self.snapshot_count.load(Ordering::Relaxed),
+            snapshot_pause_ns: self.snapshot_pause_ns.load(Ordering::Relaxed),
+            ingest: self.ingest.snapshot(),
+            diagnose: self.diagnose.snapshot(),
+            query: self.query.snapshot(),
+        }
+    }
+
+    /// The persisted subset (lifetime counters; excludes uptime and
+    /// `frames_served`, which are process-scoped).
+    pub fn state(&self) -> MetricsState {
+        MetricsState {
+            ingest_bytes: self.ingest_bytes.load(Ordering::Relaxed),
+            sessions_peak: self.sessions_peak.load(Ordering::Relaxed),
+            sessions_opened: self.sessions_opened.load(Ordering::Relaxed),
+            busy_admission: self.busy_admission.load(Ordering::Relaxed),
+            busy_quota: self.busy_quota.load(Ordering::Relaxed),
+            snapshot_count: self.snapshot_count.load(Ordering::Relaxed),
+            snapshot_pause_ns: self.snapshot_pause_ns.load(Ordering::Relaxed),
+            ingest: self.ingest.snapshot(),
+            diagnose: self.diagnose.snapshot(),
+            query: self.query.snapshot(),
+        }
+    }
+
+    /// Warm-restart restore of the persisted subset.
+    pub fn restore(&self, s: &MetricsState) {
+        self.ingest_bytes.store(s.ingest_bytes, Ordering::Relaxed);
+        self.sessions_peak.store(s.sessions_peak, Ordering::Relaxed);
+        self.sessions_opened
+            .store(s.sessions_opened, Ordering::Relaxed);
+        self.busy_admission
+            .store(s.busy_admission, Ordering::Relaxed);
+        self.busy_quota.store(s.busy_quota, Ordering::Relaxed);
+        self.snapshot_count
+            .store(s.snapshot_count, Ordering::Relaxed);
+        self.snapshot_pause_ns
+            .store(s.snapshot_pause_ns, Ordering::Relaxed);
+        self.ingest.restore(&s.ingest);
+        self.diagnose.restore(&s.diagnose);
+        self.query.restore(&s.query);
+    }
+}
+
+/// Wire payload of the `Metrics` op (proto v3+).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsReport {
+    /// Wall milliseconds since this daemon *process* started.
+    pub uptime_ms: u64,
+    pub sessions_open: u64,
+    pub sessions_peak: u64,
+    pub sessions_opened: u64,
+    pub ingest_bytes: u64,
+    /// Process-lifetime reply count (resets on restart).
+    pub frames_served: u64,
+    pub busy_admission: u64,
+    pub busy_quota: u64,
+    pub snapshot_count: u64,
+    pub snapshot_pause_ns: u64,
+    pub ingest: Histogram,
+    pub diagnose: Histogram,
+    pub query: Histogram,
+}
+
+impl MetricsReport {
+    pub fn busy_total(&self) -> u64 {
+        self.busy_admission + self.busy_quota
+    }
+
+    /// Average ingest bandwidth over this process's uptime.
+    pub fn ingest_bytes_per_sec(&self) -> f64 {
+        if self.uptime_ms == 0 {
+            0.0
+        } else {
+            self.ingest_bytes as f64 * 1e3 / self.uptime_ms as f64
+        }
+    }
+}
+
+/// The subset of [`ServeMetrics`] persisted in snapshots (SNAP v3).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsState {
+    pub ingest_bytes: u64,
+    pub sessions_peak: u64,
+    pub sessions_opened: u64,
+    pub busy_admission: u64,
+    pub busy_quota: u64,
+    pub snapshot_count: u64,
+    pub snapshot_pause_ns: u64,
+    pub ingest: Histogram,
+    pub diagnose: Histogram,
+    pub query: Histogram,
+}
+
+pub fn enc_histogram(e: &mut Enc, h: &Histogram) {
+    e.u64(h.count);
+    e.u64(h.sum_ns);
+    e.u64(h.min_ns);
+    e.u64(h.max_ns);
+    e.u64s(&h.buckets);
+}
+
+pub fn dec_histogram(d: &mut Dec) -> Result<Histogram, CodecError> {
+    let count = d.u64()?;
+    let sum_ns = d.u64()?;
+    let min_ns = d.u64()?;
+    let max_ns = d.u64()?;
+    let buckets = d.u64s()?;
+    if buckets.len() != NUM_BUCKETS {
+        return Err(CodecError::BadLength {
+            len: buckets.len(),
+            have: NUM_BUCKETS,
+        });
+    }
+    Ok(Histogram {
+        count,
+        sum_ns,
+        min_ns,
+        max_ns,
+        buckets,
+    })
+}
+
+pub fn enc_metrics_report(e: &mut Enc, m: &MetricsReport) {
+    e.u64(m.uptime_ms);
+    e.u64(m.sessions_open);
+    e.u64(m.sessions_peak);
+    e.u64(m.sessions_opened);
+    e.u64(m.ingest_bytes);
+    e.u64(m.frames_served);
+    e.u64(m.busy_admission);
+    e.u64(m.busy_quota);
+    e.u64(m.snapshot_count);
+    e.u64(m.snapshot_pause_ns);
+    enc_histogram(e, &m.ingest);
+    enc_histogram(e, &m.diagnose);
+    enc_histogram(e, &m.query);
+}
+
+pub fn dec_metrics_report(d: &mut Dec) -> Result<MetricsReport, CodecError> {
+    Ok(MetricsReport {
+        uptime_ms: d.u64()?,
+        sessions_open: d.u64()?,
+        sessions_peak: d.u64()?,
+        sessions_opened: d.u64()?,
+        ingest_bytes: d.u64()?,
+        frames_served: d.u64()?,
+        busy_admission: d.u64()?,
+        busy_quota: d.u64()?,
+        snapshot_count: d.u64()?,
+        snapshot_pause_ns: d.u64()?,
+        ingest: dec_histogram(d)?,
+        diagnose: dec_histogram(d)?,
+        query: dec_histogram(d)?,
+    })
+}
+
+pub fn enc_metrics_state(e: &mut Enc, s: &MetricsState) {
+    e.u64(s.ingest_bytes);
+    e.u64(s.sessions_peak);
+    e.u64(s.sessions_opened);
+    e.u64(s.busy_admission);
+    e.u64(s.busy_quota);
+    e.u64(s.snapshot_count);
+    e.u64(s.snapshot_pause_ns);
+    enc_histogram(e, &s.ingest);
+    enc_histogram(e, &s.diagnose);
+    enc_histogram(e, &s.query);
+}
+
+pub fn dec_metrics_state(d: &mut Dec) -> Result<MetricsState, CodecError> {
+    Ok(MetricsState {
+        ingest_bytes: d.u64()?,
+        sessions_peak: d.u64()?,
+        sessions_opened: d.u64()?,
+        busy_admission: d.u64()?,
+        busy_quota: d.u64()?,
+        snapshot_count: d.u64()?,
+        snapshot_pause_ns: d.u64()?,
+        ingest: dec_histogram(d)?,
+        diagnose: dec_histogram(d)?,
+        query: dec_histogram(d)?,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bucket_boundaries() {
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(3), 1);
+        assert_eq!(bucket_index(4), 2);
+        assert_eq!(bucket_index(7), 2);
+        assert_eq!(bucket_index(8), 3);
+        assert_eq!(bucket_index(1 << 20), 20);
+        assert_eq!(bucket_index((1 << 21) - 1), 20);
+        assert_eq!(bucket_index(u64::MAX), NUM_BUCKETS - 1);
+        // Every bucket's bounds agree with bucket_index at the edges.
+        for i in 0..NUM_BUCKETS {
+            let (lo, hi) = bucket_bounds(i);
+            assert_eq!(bucket_index(lo), i, "lower edge of bucket {i}");
+            if hi != u64::MAX {
+                assert_eq!(bucket_index(hi - 1), i, "upper edge of bucket {i}");
+                assert_eq!(bucket_index(hi), i + 1);
+            }
+        }
+        assert_eq!(bucket_bounds(0), (0, 2));
+        assert_eq!(bucket_bounds(1), (2, 4));
+        assert_eq!(bucket_bounds(NUM_BUCKETS - 1).1, u64::MAX);
+    }
+
+    #[test]
+    fn record_tracks_count_sum_min_max() {
+        let mut h = Histogram::new();
+        assert!(h.is_empty());
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.mean_ns(), 0.0);
+        for ns in [100u64, 7, 350_000, 9_000, 7] {
+            h.record(ns);
+        }
+        assert_eq!(h.count, 5);
+        assert_eq!(h.sum_ns, 100 + 7 + 350_000 + 9_000 + 7);
+        assert_eq!(h.min_ns, 7);
+        assert_eq!(h.max_ns, 350_000);
+        assert_eq!(h.buckets.iter().sum::<u64>(), 5);
+        assert!((h.mean_ns() - h.sum_ns as f64 / 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn merge_equals_combined_recording() {
+        let mut rng = Rng::new(0x5E7);
+        let (mut a, mut b, mut c) = (Histogram::new(), Histogram::new(), Histogram::new());
+        for i in 0..2000 {
+            let ns = (10f64.powf(rng.uniform_in(1.0, 8.0))) as u64;
+            if i % 3 == 0 {
+                a.record(ns);
+            } else {
+                b.record(ns);
+            }
+            c.record(ns);
+        }
+        let mut merged = Histogram::new();
+        merged.merge(&a);
+        merged.merge(&b);
+        assert_eq!(merged, c);
+        // Merging an empty histogram is a no-op; merging into empty copies.
+        let snapshot = merged.clone();
+        merged.merge(&Histogram::new());
+        assert_eq!(merged, snapshot);
+        let mut fresh = Histogram::new();
+        fresh.merge(&c);
+        assert_eq!(fresh, c);
+    }
+
+    /// The quantile estimate must stay within sqrt(2) of the true order
+    /// statistic on synthetic distributions spanning several decades.
+    #[test]
+    fn quantile_error_bound() {
+        let sqrt2 = 2f64.sqrt() * 1.000001; // tiny slack for fp rounding
+        let mut rng = Rng::new(0xBEEF);
+        let cases: Vec<Vec<u64>> = vec![
+            // log-uniform over [10, 10^8) ns
+            (0..5000)
+                .map(|_| 10f64.powf(rng.uniform_in(1.0, 8.0)) as u64)
+                .collect(),
+            // two-point distribution
+            (0..1000)
+                .map(|i| if i % 10 == 0 { 1_000_000 } else { 500 })
+                .collect(),
+            // linear ramp
+            (1..=4096u64).map(|i| i * 37).collect(),
+        ];
+        for samples in cases {
+            let mut h = Histogram::new();
+            let mut sorted = samples.clone();
+            for &s in &samples {
+                h.record(s);
+            }
+            sorted.sort_unstable();
+            for q in [0.5, 0.9, 0.95, 0.99] {
+                let rank = ((q * sorted.len() as f64).ceil() as usize)
+                    .clamp(1, sorted.len());
+                let truth = sorted[rank - 1] as f64;
+                let est = h.quantile(q);
+                assert!(
+                    est >= truth / sqrt2 && est <= truth * sqrt2,
+                    "q={q}: est {est} vs truth {truth} (n={})",
+                    sorted.len()
+                );
+            }
+            // Quantiles are monotone and bracketed by min/max.
+            assert!(h.quantile(0.5) <= h.quantile(0.95));
+            assert!(h.quantile(0.95) <= h.quantile(0.99));
+            assert!(h.quantile(0.0) >= h.min_ns as f64);
+            assert!(h.quantile(1.0) <= h.max_ns as f64);
+        }
+    }
+
+    #[test]
+    fn atomic_histogram_matches_plain_and_restores() {
+        let mut rng = Rng::new(42);
+        let atomic = AtomicHistogram::new();
+        let mut plain = Histogram::new();
+        for _ in 0..500 {
+            let ns = rng.below(1 << 30);
+            atomic.record(ns);
+            plain.record(ns);
+        }
+        assert_eq!(atomic.snapshot(), plain);
+        // restore() round-trips, including empty histograms.
+        let fresh = AtomicHistogram::new();
+        fresh.restore(&plain);
+        assert_eq!(fresh.snapshot(), plain);
+        fresh.restore(&Histogram::new());
+        assert_eq!(fresh.snapshot(), Histogram::new());
+        // An empty atomic histogram snapshots with min_ns 0, not MAX.
+        assert_eq!(AtomicHistogram::new().snapshot().min_ns, 0);
+    }
+
+    #[test]
+    fn serve_metrics_routing_and_state_roundtrip() {
+        let m = ServeMetrics::new();
+        m.observe_request(msg::INGEST, Duration::from_micros(120));
+        m.observe_request(msg::INGEST, Duration::from_micros(80));
+        m.observe_request(msg::DIAGNOSE, Duration::from_micros(400));
+        m.observe_request(msg::STATS, Duration::from_micros(15));
+        m.observe_request(msg::METRICS, Duration::from_micros(10));
+        m.observe_request(msg::HELLO, Duration::from_micros(5)); // unrouted
+        m.note_ingest_bytes(1024);
+        m.note_session_open(1);
+        m.note_session_open(2);
+        m.note_busy_quota();
+        m.note_busy_admission();
+        m.note_snapshot(Duration::from_millis(3));
+        m.note_frame_served();
+
+        let r = m.report(2);
+        assert_eq!(r.ingest.count, 2);
+        assert_eq!(r.diagnose.count, 1);
+        assert_eq!(r.query.count, 2);
+        assert_eq!(r.sessions_open, 2);
+        assert_eq!(r.sessions_peak, 2);
+        assert_eq!(r.sessions_opened, 2);
+        assert_eq!(r.ingest_bytes, 1024);
+        assert_eq!(r.busy_total(), 2);
+        assert_eq!(r.snapshot_count, 1);
+        assert!(r.snapshot_pause_ns >= 3_000_000);
+        assert_eq!(r.frames_served, 1);
+
+        // state() -> restore() preserves the persisted subset exactly;
+        // frames_served is process-scoped and resets.
+        let state = m.state();
+        let restored = ServeMetrics::new();
+        restored.restore(&state);
+        assert_eq!(restored.state(), state);
+        assert_eq!(restored.frames_served(), 0);
+    }
+
+    #[test]
+    fn wire_roundtrips() {
+        let mut h = Histogram::new();
+        for ns in [3u64, 900, 1 << 22, u64::MAX] {
+            h.record(ns);
+        }
+        let mut e = Enc::new();
+        enc_histogram(&mut e, &h);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(dec_histogram(&mut d).unwrap(), h);
+        d.finish().unwrap();
+
+        let report = MetricsReport {
+            uptime_ms: 1234,
+            sessions_open: 3,
+            sessions_peak: 7,
+            sessions_opened: 11,
+            ingest_bytes: 1 << 30,
+            frames_served: 999,
+            busy_admission: 1,
+            busy_quota: 2,
+            snapshot_count: 4,
+            snapshot_pause_ns: 5_000_000,
+            ingest: h.clone(),
+            diagnose: Histogram::new(),
+            query: h.clone(),
+        };
+        let mut e = Enc::new();
+        enc_metrics_report(&mut e, &report);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(dec_metrics_report(&mut d).unwrap(), report);
+        d.finish().unwrap();
+
+        let state = MetricsState {
+            ingest_bytes: 77,
+            sessions_peak: 2,
+            sessions_opened: 9,
+            busy_admission: 0,
+            busy_quota: 3,
+            snapshot_count: 1,
+            snapshot_pause_ns: 42,
+            ingest: h.clone(),
+            diagnose: h.clone(),
+            query: Histogram::new(),
+        };
+        let mut e = Enc::new();
+        enc_metrics_state(&mut e, &state);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(dec_metrics_state(&mut d).unwrap(), state);
+        d.finish().unwrap();
+
+        // Truncated histogram payloads yield typed errors, not panics.
+        let mut e = Enc::new();
+        enc_histogram(&mut e, &h);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes[..bytes.len() - 3]);
+        assert!(dec_histogram(&mut d).is_err());
+    }
+
+    #[test]
+    fn ingest_bandwidth_report() {
+        let r = MetricsReport {
+            uptime_ms: 2000,
+            ingest_bytes: 4096,
+            ..MetricsReport::default()
+        };
+        assert!((r.ingest_bytes_per_sec() - 2048.0).abs() < 1e-9);
+        assert_eq!(MetricsReport::default().ingest_bytes_per_sec(), 0.0);
+    }
+}

@@ -18,14 +18,19 @@
 //!   ([`crate::archive`]).
 //! * [`store`] — atomic write-rename snapshot files (versioned header,
 //!   CRC-checked payload).
+//! * [`metrics`] — lock-cheap observability: atomic counters +
+//!   log-scale latency histograms behind the v3 `Metrics` op
+//!   (DESIGN.md §8), lifetime pieces persisted via [`store`].
 //! * [`daemon`] — the TCP server: admission caps, per-session byte
 //!   quotas with `Busy` backpressure, interval/shutdown snapshots.
-//! * [`client`] — the blocking [`SketchClient`] plus the deterministic
-//!   probe behind `sketchgrad connect --probe[-resume]`.
+//! * [`client`] — the blocking [`SketchClient`] (configurable timeouts
+//!   + bounded connect retries) plus the deterministic probe behind
+//!   `sketchgrad connect --probe[-resume]`.
 
 pub mod client;
 pub mod codec;
 pub mod daemon;
+pub mod metrics;
 pub mod proto;
 pub mod store;
 
@@ -34,8 +39,10 @@ pub use client::{
     ServerInfo, SketchClient,
 };
 pub use daemon::{recon_errors, serve_from_args, Daemon, DaemonHandle};
+pub use metrics::{Histogram, MetricsReport, MetricsState, ServeMetrics};
 pub use proto::{
     monitor_config, ArchiveInfo, DaemonStats, ErrorCode, Request, Response,
-    SessionSpec, SessionStats, PROTO_VERSION,
+    SessionSpec, SessionStats, METRICS_MIN_VERSION, PROTO_MIN_VERSION,
+    PROTO_VERSION,
 };
 pub use store::{DaemonSnapshot, SessionRecord, SnapshotStore};

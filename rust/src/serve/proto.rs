@@ -16,9 +16,17 @@
 //! little-endian codecs in [`super::codec`]; floats travel as IEEE-754
 //! bit patterns so a remote session is *bit-for-bit* equivalent to an
 //! in-process one — and archive query answers are bit-identical across
-//! a daemon warm restart.  The server rejects frames whose header
-//! version differs from [`PROTO_VERSION`] with
-//! [`ErrorCode::UnsupportedVersion`].
+//! a daemon warm restart.
+//!
+//! Version negotiation (v3): the server accepts any frame version in
+//! `[PROTO_MIN_VERSION, PROTO_VERSION]` and echoes the request's version
+//! on the reply, encoding version-gated response fields only when the
+//! frame version carries them (see [`Response::encode_into_v`]). Frames
+//! outside that range are rejected with
+//! [`ErrorCode::UnsupportedVersion`] (the reply is clamped into the
+//! supported range so any peer can decode it). The `Metrics` op requires
+//! a v3 frame ([`METRICS_MIN_VERSION`]); sending it at v2 is an
+//! unsupported-version error.
 
 use std::io::{Read, Write};
 
@@ -28,12 +36,19 @@ use crate::monitor::{Diagnosis, MonitorConfig};
 use crate::sketch::Mat;
 
 use super::codec::{CodecError, Dec, Enc};
+use super::metrics::{dec_metrics_report, enc_metrics_report, MetricsReport};
 
 /// `b"SKD1"` interpreted little-endian.
 pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"SKD1");
 /// v2: `Stats` + archive query ops (`QueryTrajectory`/`QuerySimilarity`/
-/// `QueryDrift`/`ArchiveInfo`).
-pub const PROTO_VERSION: u16 = 2;
+/// `QueryDrift`/`ArchiveInfo`). v3: `Metrics` op + backpressure fields
+/// in `StatsOk` (daemon + per-session Busy counts, quota usage).
+pub const PROTO_VERSION: u16 = 3;
+/// Oldest frame version the daemon still speaks (v2 clients keep
+/// working; their replies omit the v3 fields).
+pub const PROTO_MIN_VERSION: u16 = 2;
+/// The `Metrics` op only exists from this frame version on.
+pub const METRICS_MIN_VERSION: u16 = 3;
 pub const FRAME_HEADER_LEN: usize = 12;
 /// Upper bound on a frame payload (a 128-batch, 8x512-layer ingest is
 /// ~5 MB; 64 MiB leaves ample headroom while bounding a hostile header).
@@ -54,6 +69,7 @@ pub mod msg {
     pub const QUERY_SIMILARITY: u8 = 11;
     pub const QUERY_DRIFT: u8 = 12;
     pub const ARCHIVE_INFO: u8 = 13;
+    pub const METRICS: u8 = 14;
 
     pub const HELLO_OK: u8 = 128;
     pub const SESSION_OPENED: u8 = 129;
@@ -70,6 +86,7 @@ pub mod msg {
     pub const SIMILARITY: u8 = 140;
     pub const DRIFT: u8 = 141;
     pub const ARCHIVE_INFO_OK: u8 = 142;
+    pub const METRICS_OK: u8 = 143;
 }
 
 /// Protocol error codes carried by [`Response::Error`].
@@ -301,6 +318,10 @@ pub struct DaemonStats {
     pub frames_served: u64,
     /// Archive bytes currently retained across all sessions.
     pub archive_bytes: u64,
+    /// Busy replies issued since daemon start (admission + quota;
+    /// persisted across warm restarts). v3 field — zero when talking to
+    /// a v2 peer.
+    pub busy_rejections: u64,
 }
 
 /// Per-session counters served by [`Request::Stats`].
@@ -313,6 +334,13 @@ pub struct SessionStats {
     pub archive_bytes: u64,
     /// Interval records currently retained in the session's archive.
     pub archive_intervals: u64,
+    /// Quota-Busy rejections this session has absorbed (persisted). v3
+    /// field — zero when talking to a v2 peer.
+    pub busy_rejections: u64,
+    /// Quota bytes consumed since the last `Diagnose` drain (v3 field).
+    pub quota_used: u64,
+    /// The daemon's per-session quota limit, 0 = unlimited (v3 field).
+    pub quota_limit: u64,
 }
 
 /// Archive shape/occupancy answered by [`Request::ArchiveInfo`] — also
@@ -373,6 +401,9 @@ pub enum Request {
     QueryDrift { session: u64, layer: usize },
     /// Archive shape and occupancy for a session.
     ArchiveInfo { session: u64 },
+    /// Daemon observability report: counters + latency histograms
+    /// (requires a v3 frame; see [`METRICS_MIN_VERSION`]).
+    Metrics,
 }
 
 impl Request {
@@ -391,6 +422,7 @@ impl Request {
             Request::QuerySimilarity { .. } => msg::QUERY_SIMILARITY,
             Request::QueryDrift { .. } => msg::QUERY_DRIFT,
             Request::ArchiveInfo { .. } => msg::ARCHIVE_INFO,
+            Request::Metrics => msg::METRICS,
         }
     }
 
@@ -432,7 +464,7 @@ impl Request {
                 e.u64(*session);
                 e.len32(*layer);
             }
-            Request::Snapshot | Request::Shutdown | Request::Stats => {}
+            Request::Snapshot | Request::Shutdown | Request::Stats | Request::Metrics => {}
         }
     }
 
@@ -488,6 +520,7 @@ impl Request {
             msg::ARCHIVE_INFO => Request::ArchiveInfo {
                 session: d.u64()?,
             },
+            msg::METRICS => Request::Metrics,
             other => {
                 return Err(CodecError::BadTag {
                     what: "request type",
@@ -549,6 +582,8 @@ pub enum Response {
     /// Spectral drift series, oldest interval first.
     Drift { points: Vec<DriftPoint> },
     ArchiveInfoOk(ArchiveInfo),
+    /// Daemon observability report (v3+).
+    MetricsOk(MetricsReport),
 }
 
 impl Response {
@@ -569,6 +604,7 @@ impl Response {
             Response::Similarity { .. } => msg::SIMILARITY,
             Response::Drift { .. } => msg::DRIFT,
             Response::ArchiveInfoOk(_) => msg::ARCHIVE_INFO_OK,
+            Response::MetricsOk(_) => msg::METRICS_OK,
         }
     }
 
@@ -578,8 +614,17 @@ impl Response {
         e.into_bytes()
     }
 
-    /// Encode into a caller-owned (reusable) encoder.
+    /// Encode into a caller-owned (reusable) encoder at the current
+    /// protocol version.
     pub fn encode_into(&self, e: &mut Enc) {
+        self.encode_into_v(e, PROTO_VERSION);
+    }
+
+    /// Version-aware encode: fields introduced after `version` are
+    /// omitted entirely, because v2 decoders reject trailing payload
+    /// bytes. The daemon calls this with the version echoed from the
+    /// request frame.
+    pub fn encode_into_v(&self, e: &mut Enc, version: u16) {
         match self {
             Response::HelloOk {
                 server,
@@ -641,6 +686,9 @@ impl Response {
                 e.u64(daemon.ingest_bytes);
                 e.u64(daemon.frames_served);
                 e.u64(daemon.archive_bytes);
+                if version >= 3 {
+                    e.u64(daemon.busy_rejections);
+                }
                 e.len32(sessions.len());
                 for s in sessions {
                     e.u64(s.id);
@@ -649,6 +697,11 @@ impl Response {
                     e.u64(s.ingest_bytes);
                     e.u64(s.archive_bytes);
                     e.u64(s.archive_intervals);
+                    if version >= 3 {
+                        e.u64(s.busy_rejections);
+                        e.u64(s.quota_used);
+                        e.u64(s.quota_limit);
+                    }
                 }
             }
             Response::Trajectory { points } => {
@@ -684,12 +737,24 @@ impl Response {
                 e.u64(info.oldest_step);
                 e.u64(info.newest_step);
             }
+            Response::MetricsOk(report) => enc_metrics_report(e, report),
         }
     }
 
     pub fn decode(
         msg_type: u8,
         payload: &[u8],
+    ) -> Result<Response, CodecError> {
+        Response::decode_v(msg_type, payload, PROTO_VERSION)
+    }
+
+    /// Version-aware decode; `version` is the reply frame's header
+    /// version (v2 replies omit the v3 `StatsOk` fields, which decode
+    /// as zero).
+    pub fn decode_v(
+        msg_type: u8,
+        payload: &[u8],
+        version: u16,
     ) -> Result<Response, CodecError> {
         let mut d = Dec::new(payload);
         let resp = match msg_type {
@@ -741,6 +806,7 @@ impl Response {
                     ingest_bytes: d.u64()?,
                     frames_served: d.u64()?,
                     archive_bytes: d.u64()?,
+                    busy_rejections: if version >= 3 { d.u64()? } else { 0 },
                 };
                 let n = d.len32(8 + 4 + 8 * 4)?;
                 let mut sessions = Vec::with_capacity(n);
@@ -752,6 +818,9 @@ impl Response {
                         ingest_bytes: d.u64()?,
                         archive_bytes: d.u64()?,
                         archive_intervals: d.u64()?,
+                        busy_rejections: if version >= 3 { d.u64()? } else { 0 },
+                        quota_used: if version >= 3 { d.u64()? } else { 0 },
+                        quota_limit: if version >= 3 { d.u64()? } else { 0 },
                     });
                 }
                 Response::StatsOk { daemon, sessions }
@@ -801,6 +870,7 @@ impl Response {
                 oldest_step: d.u64()?,
                 newest_step: d.u64()?,
             }),
+            msg::METRICS_OK => Response::MetricsOk(dec_metrics_report(&mut d)?),
             other => {
                 return Err(CodecError::BadTag {
                     what: "response type",
@@ -1013,6 +1083,7 @@ mod tests {
             roundtrip_req(&Request::ArchiveInfo { session: 4 }),
             Request::ArchiveInfo { session: 4 }
         ));
+        assert!(matches!(roundtrip_req(&Request::Metrics), Request::Metrics));
     }
 
     #[test]
@@ -1066,6 +1137,7 @@ mod tests {
                     ingest_bytes: 123456,
                     frames_served: 789,
                     archive_bytes: 4096,
+                    busy_rejections: 5,
                 },
                 sessions: vec![
                     SessionStats {
@@ -1075,6 +1147,9 @@ mod tests {
                         ingest_bytes: 100000,
                         archive_bytes: 2048,
                         archive_intervals: 8,
+                        busy_rejections: 3,
+                        quota_used: 51200,
+                        quota_limit: 65536,
                     },
                     SessionStats::default(),
                 ],
@@ -1114,10 +1189,88 @@ mod tests {
                 oldest_step: 1,
                 newest_step: 15,
             }),
+            Response::MetricsOk(sample_metrics_report()),
         ];
         for r in &rs {
             assert_eq!(&roundtrip_resp(r), r, "{r:?}");
         }
+    }
+
+    fn sample_metrics_report() -> MetricsReport {
+        let mut h = crate::serve::metrics::Histogram::new();
+        for ns in [900u64, 40_000, 2_000_000] {
+            h.record(ns);
+        }
+        MetricsReport {
+            uptime_ms: 60_000,
+            sessions_open: 2,
+            sessions_peak: 4,
+            sessions_opened: 9,
+            ingest_bytes: 1 << 24,
+            frames_served: 5000,
+            busy_admission: 1,
+            busy_quota: 7,
+            snapshot_count: 3,
+            snapshot_pause_ns: 9_000_000,
+            ingest: h.clone(),
+            diagnose: crate::serve::metrics::Histogram::new(),
+            query: h,
+        }
+    }
+
+    /// v2 peers must receive a `StatsOk` without the v3 fields (their
+    /// decoders reject trailing bytes), and a v2 payload must decode
+    /// with the v3 fields zeroed.
+    #[test]
+    fn stats_ok_versioned_encoding() {
+        let full = Response::StatsOk {
+            daemon: DaemonStats {
+                sessions: 1,
+                max_sessions: 8,
+                ingest_bytes: 777,
+                frames_served: 42,
+                archive_bytes: 512,
+                busy_rejections: 6,
+            },
+            sessions: vec![SessionStats {
+                id: 3,
+                name: "t".into(),
+                steps_seen: 10,
+                ingest_bytes: 700,
+                archive_bytes: 256,
+                archive_intervals: 4,
+                busy_rejections: 2,
+                quota_used: 100,
+                quota_limit: 1000,
+            }],
+        };
+        let mut e = Enc::new();
+        full.encode_into_v(&mut e, 2);
+        let v2_bytes = e.into_bytes();
+        // A strict v2 decode (finish() included) accepts the payload...
+        let back = Response::decode_v(msg::STATS_OK, &v2_bytes, 2).unwrap();
+        match back {
+            Response::StatsOk { daemon, sessions } => {
+                assert_eq!(daemon.ingest_bytes, 777);
+                assert_eq!(daemon.busy_rejections, 0, "v3 field dropped at v2");
+                assert_eq!(sessions[0].steps_seen, 10);
+                assert_eq!(sessions[0].busy_rejections, 0);
+                assert_eq!(sessions[0].quota_limit, 0);
+            }
+            other => panic!("{other:?}"),
+        }
+        // ...and mistaking a v2 payload for v3 (or vice versa) is a
+        // typed decode error, never a panic.
+        assert!(Response::decode_v(msg::STATS_OK, &v2_bytes, 3).is_err());
+        let mut e = Enc::new();
+        full.encode_into_v(&mut e, 3);
+        let v3_bytes = e.into_bytes();
+        assert!(v3_bytes.len() > v2_bytes.len());
+        assert_eq!(
+            Response::decode_v(msg::STATS_OK, &v3_bytes, 3).unwrap(),
+            full
+        );
+        assert!(Response::decode_v(msg::STATS_OK, &v3_bytes, 2).is_err());
     }
 
     #[test]

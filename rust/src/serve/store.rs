@@ -13,12 +13,16 @@
 //! The payload is a [`DaemonSnapshot`] encoded with [`super::codec`]:
 //! per session the hub-side [`SessionState`] (detector state), the
 //! engine-side [`EngineSnapshot`] (EMA triplets; projections re-derived
-//! from seed), the backpressure + ingest counters and (v2) the archive
+//! from seed), the backpressure + ingest counters, (v2) the archive
 //! ring ([`ArchiveState`]) — so archive queries answer bit-identically
-//! after a warm restart.  Writes are atomic: the
+//! after a warm restart — and (v3) the per-session Busy-rejection
+//! counter plus the daemon-wide [`MetricsState`] (lifetime latency
+//! histograms and counters).  Writes are atomic: the
 //! bytes go to `<path>.tmp`, are fsynced, then renamed over `<path>`, so
 //! a crash mid-write leaves the previous snapshot intact.  `load`
-//! verifies magic, version, length and CRC-32 before decoding.
+//! verifies magic, version, length and CRC-32 before decoding; versions
+//! [`SNAP_MIN_VERSION`]..=[`SNAP_VERSION`] are accepted, with the v3
+//! fields zeroed when reading a v2 file.
 
 use std::fs;
 use std::io::Write as _;
@@ -33,10 +37,14 @@ use crate::monitor::{
 use crate::sketch::{EngineSnapshot, Precision, TripletState};
 
 use super::codec::{crc32, CodecError, Dec, Enc};
+use super::metrics::{dec_metrics_state, enc_metrics_state, MetricsState};
 
 pub const SNAP_MAGIC: &[u8; 8] = b"SKSNAP01";
 /// v2: per-session ingest counter + archive ring.
-pub const SNAP_VERSION: u16 = 2;
+/// v3: per-session Busy-rejection counter + daemon-wide metrics state.
+pub const SNAP_VERSION: u16 = 3;
+/// Oldest snapshot version `load` still understands.
+pub const SNAP_MIN_VERSION: u16 = 2;
 pub const SNAP_HEADER_LEN: usize = 20;
 
 /// One tenant's full durable state.
@@ -50,6 +58,8 @@ pub struct SessionRecord {
     pub quota_used: u64,
     /// Lifetime ingest payload bytes (Stats counter).
     pub ingest_bytes: u64,
+    /// Lifetime quota-Busy rejections (v3; zero when read from v2).
+    pub busy_rejections: u64,
     /// The session's retained sketch history, oldest record first.
     pub archive: ArchiveState,
 }
@@ -58,10 +68,20 @@ pub struct SessionRecord {
 #[derive(Clone, Debug, Default)]
 pub struct DaemonSnapshot {
     pub sessions: Vec<SessionRecord>,
+    /// Daemon-wide lifetime counters + latency histograms (v3; default
+    /// when read from v2).
+    pub metrics: MetricsState,
 }
 
 impl DaemonSnapshot {
     pub fn encode(&self) -> Vec<u8> {
+        self.encode_versioned(SNAP_VERSION)
+    }
+
+    /// Encode at a specific snapshot version (v2 omits the v3 fields).
+    /// Exists so tests can fabricate old-format files; `save` always
+    /// writes [`SNAP_VERSION`].
+    pub fn encode_versioned(&self, version: u16) -> Vec<u8> {
         let mut e = Enc::new();
         e.len32(self.sessions.len());
         for rec in &self.sessions {
@@ -69,12 +89,21 @@ impl DaemonSnapshot {
             enc_engine_snapshot(&mut e, &rec.engine);
             e.u64(rec.quota_used);
             e.u64(rec.ingest_bytes);
+            if version >= 3 {
+                e.u64(rec.busy_rejections);
+            }
             enc_archive_state(&mut e, &rec.archive);
+        }
+        if version >= 3 {
+            enc_metrics_state(&mut e, &self.metrics);
         }
         e.into_bytes()
     }
 
-    pub fn decode(payload: &[u8]) -> Result<DaemonSnapshot, CodecError> {
+    pub fn decode(
+        payload: &[u8],
+        version: u16,
+    ) -> Result<DaemonSnapshot, CodecError> {
         let mut d = Dec::new(payload);
         let n = d.len32(1)?;
         let mut sessions = Vec::with_capacity(n);
@@ -83,17 +112,25 @@ impl DaemonSnapshot {
             let engine = dec_engine_snapshot(&mut d)?;
             let quota_used = d.u64()?;
             let ingest_bytes = d.u64()?;
+            let busy_rejections =
+                if version >= 3 { d.u64()? } else { 0 };
             let archive = dec_archive_state(&mut d)?;
             sessions.push(SessionRecord {
                 session,
                 engine,
                 quota_used,
                 ingest_bytes,
+                busy_rejections,
                 archive,
             });
         }
+        let metrics = if version >= 3 {
+            dec_metrics_state(&mut d)?
+        } else {
+            MetricsState::default()
+        };
         d.finish()?;
-        Ok(DaemonSnapshot { sessions })
+        Ok(DaemonSnapshot { sessions, metrics })
     }
 }
 
@@ -167,8 +204,11 @@ impl SnapshotStore {
             bail!("snapshot has wrong magic");
         }
         let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
-        if version != SNAP_VERSION {
-            bail!("snapshot version {version} (expected {SNAP_VERSION})");
+        if !(SNAP_MIN_VERSION..=SNAP_VERSION).contains(&version) {
+            bail!(
+                "snapshot version {version} (expected \
+                 {SNAP_MIN_VERSION}..={SNAP_VERSION})"
+            );
         }
         let len =
             u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
@@ -184,7 +224,7 @@ impl SnapshotStore {
         if actual != crc {
             bail!("snapshot CRC mismatch ({actual:08x} != {crc:08x})");
         }
-        let snap = DaemonSnapshot::decode(payload)
+        let snap = DaemonSnapshot::decode(payload, version)
             .context("decoding snapshot payload")?;
         Ok(Some(snap))
     }
@@ -462,8 +502,26 @@ mod tests {
             engine: engine.snapshot(),
             quota_used: 1234,
             ingest_bytes: 99999,
+            busy_rejections: 77,
             archive: archive.state(),
         }
+    }
+
+    fn sample_metrics() -> MetricsState {
+        let mut m = MetricsState {
+            sessions_peak: 4,
+            sessions_opened: 9,
+            ingest_bytes: 1 << 20,
+            busy_quota: 3,
+            snapshot_count: 2,
+            snapshot_pause_ns: 5_000_000,
+            ..MetricsState::default()
+        };
+        for ns in [800, 2_500, 40_000, 1_000_000] {
+            m.ingest.record(ns);
+        }
+        m.query.record(12_000);
+        m
     }
 
     #[test]
@@ -474,17 +532,21 @@ mod tests {
 
         let snap = DaemonSnapshot {
             sessions: vec![sample_record(7), sample_record(8)],
+            metrics: sample_metrics(),
         };
         let bytes = store.save(&snap).unwrap();
         assert!(bytes > SNAP_HEADER_LEN as u64);
 
         let back = store.load().unwrap().expect("snapshot present");
         assert_eq!(back.sessions.len(), 2);
+        // v3 extras survive bit-exactly.
+        assert_eq!(back.metrics, snap.metrics);
         for (orig, got) in snap.sessions.iter().zip(&back.sessions) {
             assert_eq!(got.session.id, orig.session.id);
             assert_eq!(got.session.name, orig.session.name);
             assert_eq!(got.quota_used, orig.quota_used);
             assert_eq!(got.ingest_bytes, orig.ingest_bytes);
+            assert_eq!(got.busy_rejections, orig.busy_rejections);
             // Archive rings survive bit-exactly (floats included).
             assert_eq!(got.archive, orig.archive);
             assert_eq!(got.archive.records.len(), 4);
@@ -511,6 +573,7 @@ mod tests {
         let store = SnapshotStore::new(&path);
         let snap = DaemonSnapshot {
             sessions: vec![sample_record(9)],
+            metrics: MetricsState::default(),
         };
         store.save(&snap).unwrap();
 
@@ -533,6 +596,44 @@ mod tests {
         assert!(store.load().is_err());
         let _ = fs::remove_file(&path);
         let _ = fs::remove_file(path.with_extension("tmp"));
+    }
+
+    #[test]
+    fn v2_snapshots_still_load() {
+        // A pre-metrics (v2) file decodes with the v3 fields zeroed —
+        // fabricated via `encode_versioned` plus a hand-built header.
+        let path = temp_path("v2compat");
+        let snap = DaemonSnapshot {
+            sessions: vec![sample_record(11)],
+            metrics: sample_metrics(), // must NOT survive a v2 encode
+        };
+        let payload = snap.encode_versioned(2);
+        let mut file = Vec::with_capacity(SNAP_HEADER_LEN + payload.len());
+        file.extend_from_slice(SNAP_MAGIC);
+        file.extend_from_slice(&2u16.to_le_bytes());
+        file.extend_from_slice(&0u16.to_le_bytes());
+        file.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        file.extend_from_slice(&crc32(&payload).to_le_bytes());
+        file.extend_from_slice(&payload);
+        fs::write(&path, &file).unwrap();
+
+        let store = SnapshotStore::new(&path);
+        let back = store.load().unwrap().expect("v2 snapshot loads");
+        assert_eq!(back.sessions.len(), 1);
+        assert_eq!(back.sessions[0].quota_used, 1234);
+        assert_eq!(back.sessions[0].busy_rejections, 0, "zeroed from v2");
+        assert_eq!(back.metrics, MetricsState::default());
+        assert_eq!(back.sessions[0].archive, snap.sessions[0].archive);
+
+        // v2 bytes do not parse as v3 (the layouts differ).
+        assert!(DaemonSnapshot::decode(&payload, 3).is_err());
+        // Unknown future versions are rejected at the header.
+        let mut future = file.clone();
+        future[8..10].copy_from_slice(&9u16.to_le_bytes());
+        fs::write(&path, &future).unwrap();
+        let err = store.load().unwrap_err().to_string();
+        assert!(err.contains("snapshot version 9"), "{err}");
+        let _ = fs::remove_file(&path);
     }
 
     #[test]

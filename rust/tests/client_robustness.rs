@@ -1,0 +1,112 @@
+//! Client-side robustness: connect/read timeouts and bounded
+//! retry-with-backoff must turn dead or unresponsive peers into prompt
+//! typed errors — never an indefinite hang.  A real daemon behind the
+//! same timeout configuration keeps working normally.
+
+use std::net::TcpListener;
+use std::time::{Duration, Instant};
+
+use sketchgrad::config::{ArchiveConfig, ClientConfig, ServeConfig};
+use sketchgrad::serve::{Daemon, ServeError, SketchClient};
+
+fn impatient(retries: u32) -> ClientConfig {
+    ClientConfig {
+        connect_timeout_ms: 1000,
+        io_timeout_ms: 200,
+        connect_retries: retries,
+        retry_backoff_ms: 10,
+    }
+}
+
+/// A listener that accepts the TCP connection but never replies: the
+/// Hello round trip must fail with `ServeError::Timeout` once the read
+/// deadline passes, in bounded wall time.
+#[test]
+fn unresponsive_listener_times_out_with_typed_error() {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let sink = std::thread::spawn(move || {
+        // Hold the accepted socket without ever writing a byte; drop it
+        // once the client has long since given up.
+        if let Ok((stream, _)) = listener.accept() {
+            std::thread::sleep(Duration::from_secs(2));
+            drop(stream);
+        }
+    });
+
+    let t0 = Instant::now();
+    let res = SketchClient::connect_with(&addr, &impatient(0));
+    let elapsed = t0.elapsed();
+    match res {
+        Err(ServeError::Timeout(_)) => {}
+        Err(other) => panic!("expected Timeout, got {other:?}"),
+        Ok(_) => panic!("connected to a server that never spoke"),
+    }
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "timeout not bounded: {elapsed:?}"
+    );
+    sink.join().unwrap();
+}
+
+/// Nothing listening on the port: bounded retries with backoff, then a
+/// typed error — the attempt loop must not spin forever.
+#[test]
+fn refused_connection_fails_after_bounded_retries() {
+    // Bind then drop to get a loopback port that refuses connections.
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+
+    let net = ClientConfig {
+        retry_backoff_ms: 20,
+        ..impatient(2)
+    };
+    let t0 = Instant::now();
+    let res = SketchClient::connect_with(&addr, &net);
+    let elapsed = t0.elapsed();
+    match res {
+        Err(ServeError::Io(_)) | Err(ServeError::Timeout(_)) => {}
+        Err(other) => panic!("expected Io/Timeout, got {other:?}"),
+        Ok(_) => panic!("connected to a dropped listener"),
+    }
+    assert!(
+        elapsed < Duration::from_secs(5),
+        "retry loop not bounded: {elapsed:?}"
+    );
+}
+
+/// The same timeout configuration against a live daemon changes
+/// nothing: handshake, metrics and clean close all succeed.
+#[test]
+fn timeouts_do_not_disturb_a_healthy_daemon() {
+    let snap = std::env::temp_dir()
+        .join(format!("sketchd-rb-{}.snap", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let daemon = Daemon::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: 2,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: 0,
+        snapshot_path: snap.clone(),
+        threads: 1,
+        archive: ArchiveConfig::default(),
+    })
+    .unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+
+    let net = ClientConfig {
+        io_timeout_ms: 5000,
+        ..impatient(1)
+    };
+    let (mut client, info) = SketchClient::connect_with(&addr, &net).unwrap();
+    assert!(info.max_sessions == 2);
+    let m = client.metrics().unwrap();
+    assert_eq!(m.sessions_open, 0);
+    assert!(m.frames_served >= 1);
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap);
+}

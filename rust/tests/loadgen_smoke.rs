@@ -1,0 +1,199 @@
+//! End-to-end smoke tests for the loadgen harness: tiny scenarios
+//! against a real in-process daemon must account for every frame
+//! (client counters vs the daemon's v3 metrics, cross-checked inside
+//! `run_scenario`), exercise the Busy/retry path under a tiny quota,
+//! and emit a `BENCH_serve.json` whose keys the CI gate can read.
+
+use sketchgrad::config::{ArchiveConfig, ClientConfig, ServeConfig};
+use sketchgrad::loadgen::{
+    run_scenario, write_report, DaemonDelta, Scenario, ScenarioReport,
+};
+use sketchgrad::serve::{Daemon, Histogram};
+use sketchgrad::util::json::Json;
+
+/// Run `sc` against a fresh daemon on an ephemeral port (quota from
+/// `sc.quota`, throwaway snapshot path).
+fn run_on_spawned(sc: &Scenario) -> ScenarioReport {
+    let snap = std::env::temp_dir()
+        .join(format!(
+            "sketchd-lg-{}-{}.snap",
+            sc.name,
+            std::process::id()
+        ))
+        .to_string_lossy()
+        .into_owned();
+    let _ = std::fs::remove_file(&snap);
+    let daemon = Daemon::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: sc.tenants * 2 + 4,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: sc.quota,
+        snapshot_path: snap.clone(),
+        threads: 1,
+        archive: ArchiveConfig::default(),
+    })
+    .unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+    let rep = run_scenario(&addr, sc, &ClientConfig::default()).unwrap();
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap);
+    rep
+}
+
+/// Unthrottled steady traffic: every interval lands, nothing is Busy,
+/// and the daemon-metrics cross-check inside `run_scenario` holds.
+#[test]
+fn tiny_steady_scenario_accounts_for_every_frame() {
+    let sc = Scenario {
+        name: "it-steady".into(),
+        tenants: 3,
+        intervals: 8,
+        layer_dims: vec![16, 8],
+        batch: 4,
+        hz: 0.0,
+        ..Scenario::default()
+    };
+    let rep = run_on_spawned(&sc);
+    assert_eq!(rep.ingests_ok, 24);
+    assert_eq!(rep.ingest_frames_sent, 24);
+    assert_eq!(rep.busy, 0);
+    assert_eq!(rep.dropped, 0);
+    assert_eq!(rep.ingest_hist.count, 24);
+    assert!(rep.throughput() > 0.0);
+    assert!(rep.bytes_sent > 0);
+    let delta = rep.daemon.expect("v3 daemon must yield a metrics delta");
+    assert_eq!(delta.ingest_frames, 24);
+    assert_eq!(delta.ingest_bytes, rep.bytes_sent);
+    assert_eq!(delta.busy, 0);
+    assert!(delta.frames_served >= 24, "at least the ingest replies");
+}
+
+/// A quota small enough to trip every few intervals: Busy shows up in
+/// the client counters, the post-Diagnose retry always lands, and the
+/// byte cross-check still balances (rejected frames carry no bytes).
+#[test]
+fn tiny_quota_scenario_exercises_busy_retry_path() {
+    let sc = Scenario {
+        name: "it-busy".into(),
+        tenants: 2,
+        intervals: 10,
+        layer_dims: vec![16, 8],
+        batch: 4,
+        hz: 0.0,
+        quota: 4096,
+        ..Scenario::default()
+    };
+    let rep = run_on_spawned(&sc);
+    assert!(rep.busy > 0, "workload must actually trip the quota");
+    assert_eq!(rep.ingests_ok, 20, "every interval lands after retry");
+    assert_eq!(rep.dropped, 0);
+    assert!(rep.busy_rate() > 0.0 && rep.busy_rate() < 1.0);
+    // Each Busy forced a quota-draining diagnose.
+    assert!(rep.queries >= rep.busy);
+    let delta = rep.daemon.unwrap();
+    assert_eq!(delta.busy, rep.busy);
+    assert_eq!(delta.ingest_bytes, rep.bytes_sent);
+}
+
+/// Churn, periodic queries and snapshot requests all ride along without
+/// breaking the frame/byte accounting.
+#[test]
+fn churn_query_snapshot_mix_keeps_accounting_exact() {
+    let sc = Scenario {
+        name: "it-mix".into(),
+        tenants: 2,
+        intervals: 9,
+        layer_dims: vec![16, 8],
+        batch: 4,
+        hz: 0.0,
+        query_every: 2,
+        churn_every: 3,
+        snapshot_every: 4,
+        ..Scenario::default()
+    };
+    let rep = run_on_spawned(&sc);
+    assert_eq!(rep.ingests_ok, 18);
+    assert!(rep.queries > 0);
+    assert_eq!(rep.reopens, 2 * 2, "two churns per tenant (not the last)");
+    assert!(rep.snapshots >= 1, "tenant 0 snapshots every 4 intervals");
+    let delta = rep.daemon.unwrap();
+    assert!(delta.snapshot_count >= rep.snapshots);
+    assert_eq!(delta.ingest_frames, rep.ingest_frames_sent);
+}
+
+/// `write_report` emits the exact keys the CI `load-smoke` gate greps:
+/// per-scenario latency rows with p99/max and the flat summary scalars.
+#[test]
+fn report_json_has_the_keys_the_ci_gate_reads() {
+    let mut ingest_hist = Histogram::default();
+    for ns in [900u64, 2_000, 15_000, 1_200_000] {
+        ingest_hist.record(ns);
+    }
+    let mut query_hist = Histogram::default();
+    query_hist.record(30_000);
+    let rep = ScenarioReport {
+        name: "x".into(),
+        tenants: 2,
+        intervals: 2,
+        wall: std::time::Duration::from_millis(80),
+        ingests_ok: 4,
+        ingest_frames_sent: 5,
+        busy: 1,
+        dropped: 0,
+        queries: 1,
+        reopens: 0,
+        snapshots: 1,
+        bytes_sent: 4096,
+        ingest_hist,
+        query_hist,
+        daemon: Some(DaemonDelta {
+            ingest_frames: 5,
+            frames_served: 12,
+            ingest_bytes: 4096,
+            busy: 1,
+            snapshot_count: 1,
+            snapshot_pause: std::time::Duration::from_millis(3),
+        }),
+    };
+    let path = std::env::temp_dir()
+        .join(format!("bench-serve-it-{}.json", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    write_report(&[rep], true, &path).unwrap();
+
+    let parsed =
+        Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+    assert_eq!(parsed.get("title").unwrap().as_str().unwrap(), "serve_load");
+    assert_eq!(parsed.get("quick").unwrap(), &Json::Bool(true));
+    assert_eq!(
+        parsed.get("scenarios").unwrap().as_f64().unwrap(),
+        1.0
+    );
+    assert!(parsed.get("x_throughput").unwrap().as_f64().unwrap() > 0.0);
+    let busy_rate = parsed.get("x_busy_rate").unwrap().as_f64().unwrap();
+    assert!((busy_rate - 0.2).abs() < 1e-9, "1 busy of 5 frames");
+    assert!(parsed.get("x_p99_ms").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        parsed.get("x_metrics_verified").unwrap().as_f64().unwrap(),
+        1.0
+    );
+    assert!(
+        parsed.get("x_snapshot_pause_ms").unwrap().as_f64().unwrap() > 0.0
+    );
+    let results = parsed.get("results").unwrap().as_arr().unwrap();
+    assert_eq!(results.len(), 2, "ingest + query rows");
+    assert_eq!(
+        results[0].get("name").unwrap().as_str().unwrap(),
+        "x_ingest"
+    );
+    let p99 = results[0].get("p99_ns").unwrap().as_f64().unwrap();
+    let max = results[0].get("max_ns").unwrap().as_f64().unwrap();
+    assert!(max >= p99 && p99 > 0.0);
+    assert!(results[0].get("throughput").unwrap().as_f64().unwrap() > 0.0);
+    assert_eq!(
+        results[1].get("name").unwrap().as_str().unwrap(),
+        "x_query"
+    );
+    let _ = std::fs::remove_file(&path);
+}

@@ -1,0 +1,282 @@
+//! Codec error paths, both directions: a daemon fed garbage, oversized
+//! or truncated frames must reply with a typed `BadFrame` (when the
+//! framing is still trustworthy) or drop the connection — never panic —
+//! and keep serving fresh clients; a client fed malformed replies must
+//! surface typed `ServeError`s, never hang or panic.  Snapshot files
+//! with a flipped payload bit must be rejected by CRC at bind time.
+
+use std::io::{Read, Write};
+use std::net::{Shutdown, TcpListener, TcpStream};
+use std::time::Duration;
+
+use sketchgrad::config::{ArchiveConfig, ClientConfig, ServeConfig};
+use sketchgrad::data::ActStream;
+use sketchgrad::serve::proto::{
+    self, ErrorCode, FrameHeader, Response, SessionSpec, FRAME_HEADER_LEN,
+    MAX_FRAME_LEN, PROTO_VERSION,
+};
+use sketchgrad::serve::{Daemon, ServeError, SketchClient};
+
+fn test_config(tag: &str, quota: usize) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: 4,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: quota,
+        snapshot_path: std::env::temp_dir()
+            .join(format!("sketchd-ce-{tag}-{}.snap", std::process::id()))
+            .to_string_lossy()
+            .into_owned(),
+        threads: 1,
+        archive: ArchiveConfig::default(),
+    }
+}
+
+/// The peer hung up on us (EOF or reset) — the daemon's response to an
+/// untrustworthy frame.  A timeout means it is still holding the
+/// connection open, which would hang real clients.
+fn assert_closed(stream: &mut TcpStream) {
+    stream
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let mut buf = [0u8; 64];
+    loop {
+        match stream.read(&mut buf) {
+            Ok(0) => return,
+            Ok(_) => continue, // drain any in-flight reply bytes
+            Err(e) => match e.kind() {
+                std::io::ErrorKind::TimedOut
+                | std::io::ErrorKind::WouldBlock => {
+                    panic!("daemon kept a poisoned connection open")
+                }
+                _ => return, // reset/aborted: also closed
+            },
+        }
+    }
+}
+
+/// Frames the daemon cannot trust (bad magic, oversized length prefix,
+/// truncated payload) close the connection without a reply; frames with
+/// sound framing but undecodable payloads get a typed `BadFrame` reply.
+/// The daemon survives all of it and keeps serving fresh clients.
+#[test]
+fn daemon_rejects_malformed_frames_without_panicking() {
+    let cfg = test_config("daemon", 0);
+    let snap_path = cfg.snapshot_path.clone();
+    let daemon = Daemon::bind(cfg).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+
+    // Garbage where the frame magic should be: silent close.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    s.write_all(&[0xAAu8; FRAME_HEADER_LEN]).unwrap();
+    assert_closed(&mut s);
+
+    // Valid magic, length prefix over the protocol cap: the daemon
+    // must refuse to allocate and close instead.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let header =
+        FrameHeader::encode(PROTO_VERSION, proto::msg::DIAGNOSE, MAX_FRAME_LEN + 1);
+    s.write_all(&header).unwrap();
+    assert_closed(&mut s);
+
+    // Header promises 100 payload bytes, the peer sends 10 and hangs
+    // up: the partial frame is dropped, the connection closed.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let header = FrameHeader::encode(PROTO_VERSION, proto::msg::DIAGNOSE, 100);
+    s.write_all(&header).unwrap();
+    s.write_all(&[0u8; 10]).unwrap();
+    s.shutdown(Shutdown::Write).unwrap();
+    assert_closed(&mut s);
+
+    // Sound framing, undecodable OpenSession payload (string length
+    // prefix pointing past the end): typed BadFrame reply, then close.
+    let mut s = TcpStream::connect(&addr).unwrap();
+    proto::write_frame_versioned(
+        &mut s,
+        PROTO_VERSION,
+        proto::msg::OPEN_SESSION,
+        &[7, 0, 0, 0],
+    )
+    .unwrap();
+    let (header, payload) = proto::read_frame(&mut s).unwrap();
+    match Response::decode_v(header.msg, &payload, header.version).unwrap() {
+        Response::Error { code, .. } => assert_eq!(code, ErrorCode::BadFrame),
+        other => panic!("expected BadFrame, got {other:?}"),
+    }
+    assert_closed(&mut s);
+
+    // A trailing byte after a well-formed Diagnose body is also a
+    // framing lie -> BadFrame (strict decode, no silent slack).
+    let mut s = TcpStream::connect(&addr).unwrap();
+    let mut body = 1u64.to_le_bytes().to_vec();
+    body.push(0);
+    proto::write_frame_versioned(&mut s, PROTO_VERSION, proto::msg::DIAGNOSE, &body)
+        .unwrap();
+    let (header, payload) = proto::read_frame(&mut s).unwrap();
+    match Response::decode_v(header.msg, &payload, header.version).unwrap() {
+        Response::Error { code, message } => {
+            assert_eq!(code, ErrorCode::BadFrame);
+            assert!(message.contains("trailing"), "{message}");
+        }
+        other => panic!("expected BadFrame, got {other:?}"),
+    }
+    assert_closed(&mut s);
+
+    // After all that abuse, a fresh well-behaved client still works.
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    let session = client
+        .open_session(&SessionSpec {
+            name: "survivor".into(),
+            layer_dims: vec![16, 8],
+            rank: 3,
+            beta: 0.9,
+            seed: 1,
+            window: 8,
+            collapse_frac: 0.25,
+        })
+        .unwrap();
+    client.diagnose(session).unwrap();
+    client.close_session(session).unwrap();
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+/// A fake server that reads the client's Hello frame, writes `reply`
+/// verbatim, then closes.
+fn fake_server(reply: Vec<u8>) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || {
+        if let Ok((mut s, _)) = listener.accept() {
+            let mut hdr = [0u8; FRAME_HEADER_LEN];
+            if s.read_exact(&mut hdr).is_err() {
+                return;
+            }
+            let len =
+                u32::from_le_bytes(hdr[8..12].try_into().unwrap()) as usize;
+            let mut payload = vec![0u8; len.min(MAX_FRAME_LEN as usize)];
+            if s.read_exact(&mut payload).is_err() {
+                return;
+            }
+            let _ = s.write_all(&reply);
+            let _ = s.flush();
+            std::thread::sleep(Duration::from_millis(100));
+        }
+    });
+    (addr, h)
+}
+
+fn impatient() -> ClientConfig {
+    ClientConfig {
+        connect_timeout_ms: 1000,
+        io_timeout_ms: 1000,
+        connect_retries: 0,
+        retry_backoff_ms: 10,
+    }
+}
+
+/// Malformed replies surface as typed client errors — Io for broken
+/// framing, Protocol for out-of-range versions and undecodable
+/// payloads — never a panic or hang.
+#[test]
+fn client_turns_malformed_replies_into_typed_errors() {
+    // Garbage where the reply's frame magic should be.
+    let (addr, h) = fake_server(vec![0xAA; FRAME_HEADER_LEN]);
+    match SketchClient::connect_with(&addr, &impatient()) {
+        Err(ServeError::Io(_)) => {}
+        other => panic!("bad magic: expected Io, got {other:?}"),
+    }
+    h.join().unwrap();
+
+    // Valid framing claiming protocol version 99.
+    let hdr = FrameHeader::encode(99, proto::msg::HELLO_OK, 0);
+    let (addr, h) = fake_server(hdr.to_vec());
+    match SketchClient::connect_with(&addr, &impatient()) {
+        Err(ServeError::Protocol(msg)) => {
+            assert!(msg.contains("version"), "{msg}")
+        }
+        other => panic!("version 99: expected Protocol, got {other:?}"),
+    }
+    h.join().unwrap();
+
+    // Header promises 50 bytes, the server sends 10 and closes.
+    let mut reply =
+        FrameHeader::encode(PROTO_VERSION, proto::msg::HELLO_OK, 50).to_vec();
+    reply.extend_from_slice(&[0u8; 10]);
+    let (addr, h) = fake_server(reply);
+    match SketchClient::connect_with(&addr, &impatient()) {
+        Err(ServeError::Io(_)) | Err(ServeError::Timeout(_)) => {}
+        other => panic!("truncated reply: expected Io, got {other:?}"),
+    }
+    h.join().unwrap();
+
+    // Sound framing, undecodable HelloOk payload.
+    let mut reply =
+        FrameHeader::encode(PROTO_VERSION, proto::msg::HELLO_OK, 4).to_vec();
+    reply.extend_from_slice(&[0xFF, 0xFF, 0xFF, 0xFF]);
+    let (addr, h) = fake_server(reply);
+    match SketchClient::connect_with(&addr, &impatient()) {
+        Err(ServeError::Protocol(_)) => {}
+        other => panic!("garbage payload: expected Protocol, got {other:?}"),
+    }
+    h.join().unwrap();
+
+    // An oversized request payload is rejected client-side before any
+    // bytes hit the wire (the peer could not trust the framing).
+    let payload = vec![0u8; MAX_FRAME_LEN as usize + 1];
+    let mut sink = Vec::new();
+    let err = proto::write_frame_versioned(
+        &mut sink,
+        PROTO_VERSION,
+        proto::msg::HELLO_OK,
+        &payload,
+    )
+    .unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput);
+    assert!(sink.is_empty(), "nothing may be written for a rejected frame");
+}
+
+/// A flipped payload byte in the snapshot file fails the CRC check at
+/// bind time with a diagnosable error instead of resurrecting corrupt
+/// session state.
+#[test]
+fn corrupt_snapshot_fails_bind_with_crc_error() {
+    let cfg = test_config("crc", 0);
+    let snap_path = cfg.snapshot_path.clone();
+    let _ = std::fs::remove_file(&snap_path);
+
+    let daemon = Daemon::bind(cfg.clone()).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    let session = client
+        .open_session(&SessionSpec {
+            name: "crc".into(),
+            layer_dims: vec![16, 8],
+            rank: 3,
+            beta: 0.9,
+            seed: 9,
+            window: 8,
+            collapse_frac: 0.25,
+        })
+        .unwrap();
+    let mut stream = ActStream::new(&[16, 8], false, 9);
+    let acts = stream.next_batch(4);
+    client.ingest(session, 0.5, &acts, false).unwrap();
+    drop(client);
+    handle.stop().unwrap(); // writes the shutdown snapshot
+
+    let mut bytes = std::fs::read(&snap_path).unwrap();
+    let last = bytes.len() - 1;
+    bytes[last] ^= 0xFF;
+    std::fs::write(&snap_path, &bytes).unwrap();
+
+    let err = match Daemon::bind(cfg) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("bind accepted a corrupt snapshot"),
+    };
+    assert!(err.contains("CRC"), "{err}");
+    let _ = std::fs::remove_file(&snap_path);
+}

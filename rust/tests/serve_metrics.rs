@@ -1,0 +1,317 @@
+//! Loopback tests for the v3 `Metrics` op and the observability
+//! counters behind it: histogram/counter agreement with client-observed
+//! traffic, per-session backpressure accounting in `Stats`, lifetime
+//! counters surviving a daemon restart, and raw v2-frame compatibility
+//! (old clients keep working, `Metrics` is cleanly version-gated).
+
+use sketchgrad::config::{ArchiveConfig, ServeConfig};
+use sketchgrad::data::ActStream;
+use sketchgrad::serve::proto::{
+    self, ErrorCode, Request, Response, SessionSpec, PROTO_VERSION,
+};
+use sketchgrad::serve::{Daemon, ServeError, SketchClient};
+use sketchgrad::sketch::Mat;
+
+fn unique_snapshot_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("sketchd-mt-{tag}-{}.snap", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn test_config(tag: &str, max_sessions: usize, quota: usize) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: quota,
+        snapshot_path: unique_snapshot_path(tag),
+        threads: 1,
+        archive: ArchiveConfig::default(),
+    }
+}
+
+fn spec(name: &str, dims: &[usize], seed: u64) -> SessionSpec {
+    SessionSpec {
+        name: name.into(),
+        layer_dims: dims.to_vec(),
+        rank: 3,
+        beta: 0.9,
+        seed,
+        window: 8,
+        collapse_frac: 0.25,
+    }
+}
+
+/// Wire payload bytes of one `Ingest` frame (must mirror the daemon's
+/// `payload_len` accounting): session u64 + loss f32 + recon flag +
+/// acts count u32, then rows/cols prefixes and f64 cells per matrix.
+fn ingest_payload_bytes(acts: &[Mat]) -> u64 {
+    17 + acts
+        .iter()
+        .map(|m| 8 + (m.rows * m.cols * 8) as u64)
+        .sum::<u64>()
+}
+
+/// The metrics report agrees with client-observed traffic: histogram
+/// counts per op class, exact ingest byte accounting across two
+/// sessions, and `frames_served` equal to the replies this client has
+/// actually read.  A second `Metrics` call sees the first one recorded
+/// in the query histogram (a report never includes its own frame).
+#[test]
+fn metrics_report_matches_client_observed_traffic() {
+    const DIMS: &[usize] = &[32, 16];
+    let daemon = Daemon::bind(test_config("counts", 4, 0)).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let snap_path = unique_snapshot_path("counts");
+    let handle = daemon.spawn().unwrap();
+
+    let (mut client, info) = SketchClient::connect(&addr).unwrap();
+    assert_eq!(info.proto, PROTO_VERSION);
+    let s1 = client.open_session(&spec("m-a", DIMS, 11)).unwrap();
+    let s2 = client.open_session(&spec("m-b", DIMS, 22)).unwrap();
+
+    let mut stream_a = ActStream::new(DIMS, false, 11);
+    let mut stream_b = ActStream::new(DIMS, false, 22);
+    let mut bytes = 0u64;
+    let mut ingests = 0u64;
+    for step in 0..6 {
+        let acts = stream_a.next_batch(8);
+        bytes += ingest_payload_bytes(&acts);
+        client
+            .ingest(s1, stream_a.loss_at(step, 6), &acts, false)
+            .unwrap();
+        ingests += 1;
+        if step % 2 == 0 {
+            let acts = stream_b.next_batch(5);
+            bytes += ingest_payload_bytes(&acts);
+            client
+                .ingest(s2, stream_b.loss_at(step, 6), &acts, false)
+                .unwrap();
+            ingests += 1;
+        }
+    }
+    client.diagnose(s1).unwrap();
+    client.diagnose(s2).unwrap();
+    client.query_trajectory(s1).unwrap();
+
+    // Replies read so far: hello + 2 opens + ingests + 2 diagnoses +
+    // 1 trajectory.  The metrics reply itself is not yet counted.
+    let frames_before_metrics = 1 + 2 + ingests + 2 + 1;
+    let m = client.metrics().unwrap();
+    assert_eq!(m.sessions_open, 2);
+    assert_eq!(m.sessions_peak, 2);
+    assert_eq!(m.sessions_opened, 2);
+    assert_eq!(m.ingest_bytes, bytes);
+    assert_eq!(m.frames_served, frames_before_metrics);
+    assert_eq!(m.ingest.count, ingests);
+    assert_eq!(m.diagnose.count, 2);
+    // Query histogram: the trajectory query only — a Metrics request is
+    // recorded after its own report is built.
+    assert_eq!(m.query.count, 1);
+    assert_eq!(m.busy_total(), 0);
+    assert!(m.ingest.sum_ns > 0, "ingest latency must be recorded");
+    assert!(m.ingest.min_ns <= m.ingest.max_ns);
+    let p99 = m.ingest.quantile(0.99);
+    assert!(p99 >= m.ingest.quantile(0.5));
+
+    let m2 = client.metrics().unwrap();
+    assert_eq!(m2.frames_served, frames_before_metrics + 1);
+    assert_eq!(m2.query.count, 2, "first Metrics call lands in query hist");
+    assert_eq!(m2.ingest.count, ingests, "ingest hist unchanged");
+
+    client.close_session(s1).unwrap();
+    client.close_session(s2).unwrap();
+    let m3 = client.metrics().unwrap();
+    assert_eq!(m3.sessions_open, 0);
+    assert_eq!(m3.sessions_peak, 2, "peak is a high-water mark");
+    assert_eq!(m3.sessions_opened, 2, "opened is a lifetime counter");
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+/// Quota backpressure is visible end to end: the daemon's Busy replies,
+/// the per-session `Stats` fields (busy_rejections / quota_used /
+/// quota_limit) and the metrics `busy_quota` counter all agree with the
+/// client's own count, and `Diagnose` drains the quota so the retry
+/// succeeds.
+#[test]
+fn busy_accounting_agrees_across_stats_and_metrics() {
+    const DIMS: &[usize] = &[16, 8];
+    const QUOTA: usize = 4096;
+    let daemon = Daemon::bind(test_config("busy", 2, QUOTA)).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let snap_path = unique_snapshot_path("busy");
+    let handle = daemon.spawn().unwrap();
+
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    let session = client.open_session(&spec("bp", DIMS, 7)).unwrap();
+    let mut stream = ActStream::new(DIMS, false, 7);
+
+    let mut busy = 0u64;
+    let mut quota_model = 0u64; // bytes since the last Diagnose
+    for step in 0..12 {
+        let acts = stream.next_batch(4);
+        let loss = stream.loss_at(step, 12);
+        let bytes = ingest_payload_bytes(&acts);
+        match client.ingest(session, loss, &acts, false) {
+            Ok(_) => quota_model += bytes,
+            Err(ServeError::Busy { used, limit }) => {
+                busy += 1;
+                assert_eq!(used, quota_model);
+                assert_eq!(limit, QUOTA as u64);
+                assert!(used + bytes > limit, "Busy only past the quota");
+                client.diagnose(session).unwrap();
+                quota_model = 0;
+                client.ingest(session, loss, &acts, false).unwrap();
+                quota_model += bytes;
+            }
+            Err(e) => panic!("unexpected ingest error: {e}"),
+        }
+    }
+    assert!(busy > 0, "workload must actually trip the quota");
+
+    let (daemon_stats, sessions) = client.stats().unwrap();
+    assert_eq!(daemon_stats.busy_rejections, busy);
+    assert_eq!(sessions.len(), 1);
+    assert_eq!(sessions[0].busy_rejections, busy);
+    assert_eq!(sessions[0].quota_used, quota_model);
+    assert_eq!(sessions[0].quota_limit, QUOTA as u64);
+
+    let m = client.metrics().unwrap();
+    assert_eq!(m.busy_quota, busy);
+    assert_eq!(m.busy_admission, 0);
+    assert_eq!(m.busy_total(), busy);
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+/// Lifetime observability counters ride the snapshot: a stop/rebind
+/// cycle preserves ingest bytes, histogram contents and session
+/// counters, while the process-scoped `frames_served` resets — and the
+/// restored counters keep counting.
+#[test]
+fn metrics_survive_restart_except_process_scoped_pieces() {
+    const DIMS: &[usize] = &[24, 12];
+    let cfg = test_config("persist", 4, 0);
+    let snap_path = cfg.snapshot_path.clone();
+    let _ = std::fs::remove_file(&snap_path);
+
+    let daemon = Daemon::bind(cfg.clone()).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    let session = client.open_session(&spec("pp", DIMS, 3)).unwrap();
+    let mut stream = ActStream::new(DIMS, false, 3);
+    let mut bytes = 0u64;
+    for step in 0..5 {
+        let acts = stream.next_batch(6);
+        bytes += ingest_payload_bytes(&acts);
+        client
+            .ingest(session, stream.loss_at(step, 5), &acts, false)
+            .unwrap();
+    }
+    client.diagnose(session).unwrap();
+    let before = client.metrics().unwrap();
+    assert_eq!(before.ingest.count, 5);
+    assert_eq!(before.ingest_bytes, bytes);
+    drop(client);
+    // stop() writes the shutdown snapshot, metrics state included.
+    handle.stop().unwrap();
+
+    let daemon = Daemon::bind(cfg).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+    let (mut client, info) = SketchClient::connect(&addr).unwrap();
+    assert_eq!(info.sessions, 1, "session restored from snapshot");
+
+    let after = client.metrics().unwrap();
+    assert_eq!(after.ingest.count, 5, "ingest histogram restored");
+    assert_eq!(after.ingest.sum_ns, before.ingest.sum_ns);
+    assert_eq!(after.ingest.min_ns, before.ingest.min_ns);
+    assert_eq!(after.ingest.max_ns, before.ingest.max_ns);
+    assert_eq!(after.ingest_bytes, bytes);
+    assert_eq!(after.sessions_opened, 1);
+    assert_eq!(after.sessions_peak, 1);
+    assert_eq!(after.diagnose.count, 1);
+    // Process-scoped: only this connection's hello has been served.
+    assert_eq!(after.frames_served, 1);
+    assert!(after.uptime_ms <= before.uptime_ms + 60_000);
+
+    // Restored counters continue counting, not restart from zero.
+    let acts = stream.next_batch(6);
+    let more = ingest_payload_bytes(&acts);
+    client.ingest(session, 0.1, &acts, false).unwrap();
+    let cont = client.metrics().unwrap();
+    assert_eq!(cont.ingest.count, 6);
+    assert_eq!(cont.ingest_bytes, bytes + more);
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+/// Raw v2 frames keep working against a v3 daemon: replies echo v2 and
+/// decode strictly at v2, `Stats` drops the version-gated fields, and a
+/// v2 `Metrics` frame gets a typed `UnsupportedVersion` error instead
+/// of a hangup mid-frame.
+#[test]
+fn v2_frames_remain_compatible_and_metrics_is_gated() {
+    let daemon = Daemon::bind(test_config("v2", 2, 0)).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let snap_path = unique_snapshot_path("v2");
+    let handle = daemon.spawn().unwrap();
+
+    let mut raw = std::net::TcpStream::connect(&addr).unwrap();
+    let hello = Request::Hello {
+        client: "legacy".into(),
+    };
+    proto::write_frame_versioned(&mut raw, 2, hello.msg_type(), &hello.encode())
+        .unwrap();
+    let (header, payload) = proto::read_frame(&mut raw).unwrap();
+    assert_eq!(header.version, 2, "reply echoes the request's version");
+    match Response::decode_v(header.msg, &payload, 2).unwrap() {
+        Response::HelloOk { proto, .. } => assert_eq!(proto, PROTO_VERSION),
+        other => panic!("expected HelloOk, got {other:?}"),
+    }
+
+    // v2 Stats: the reply must decode strictly at v2 (no v3 fields on
+    // the wire), with the gated counters defaulted.
+    let stats = Request::Stats;
+    proto::write_frame_versioned(&mut raw, 2, stats.msg_type(), &stats.encode())
+        .unwrap();
+    let (header, payload) = proto::read_frame(&mut raw).unwrap();
+    assert_eq!(header.version, 2);
+    match Response::decode_v(header.msg, &payload, 2).unwrap() {
+        Response::StatsOk { daemon, .. } => {
+            assert_eq!(daemon.busy_rejections, 0, "v3 field absent at v2")
+        }
+        other => panic!("expected StatsOk, got {other:?}"),
+    }
+
+    // v2 Metrics: typed rejection (the op only exists from v3 on).
+    let metrics = Request::Metrics;
+    proto::write_frame_versioned(
+        &mut raw,
+        2,
+        metrics.msg_type(),
+        &metrics.encode(),
+    )
+    .unwrap();
+    let (header, payload) = proto::read_frame(&mut raw).unwrap();
+    match Response::decode_v(header.msg, &payload, header.version).unwrap() {
+        Response::Error { code, .. } => {
+            assert_eq!(code, ErrorCode::UnsupportedVersion)
+        }
+        other => panic!("expected Error, got {other:?}"),
+    }
+
+    // The daemon still serves fresh connections afterwards.
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    assert!(client.metrics().unwrap().frames_served >= 1);
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
