@@ -169,7 +169,7 @@ fn run_remote(addr: &str, seed: u64) -> Result<()> {
 
     let mut sessions = Vec::new();
     for (label, problematic) in [("healthy", false), ("problematic", true)] {
-        let session = client.open_session(&SessionSpec {
+        let mut sess = client.open_session(&SessionSpec {
             name: label.into(),
             layer_dims: dims.to_vec(),
             rank: 4,
@@ -182,15 +182,15 @@ fn run_remote(addr: &str, seed: u64) -> Result<()> {
         for step in 0..STEPS {
             let nb = if step == STEPS - 1 { N_B / 3 } else { N_B };
             let loss = stream.loss_at(step, STEPS);
-            client.ingest(session, loss, &stream.next_batch(nb), false)?;
+            sess.ingest(loss, &stream.next_batch(nb), false)?;
         }
-        sessions.push((label, problematic, session));
+        sessions.push((label, problematic, sess.id()));
     }
 
     println!("\n| session | steps | engine bytes | monitor bytes | healthy |");
     println!("|---|---|---|---|---|");
     for (label, problematic, session) in &sessions {
-        let d = client.diagnose(*session)?;
+        let d = client.session(*session).diagnose()?;
         println!(
             "| {label} | {} | {} | {} | {} |",
             d.steps_seen,
@@ -211,7 +211,7 @@ fn run_remote(addr: &str, seed: u64) -> Result<()> {
         fmt_bytes(bytes as usize)
     );
     for (_, _, session) in &sessions {
-        client.close_session(*session)?;
+        client.session(*session).close()?;
     }
     println!("remote gradient_monitoring driver OK");
     Ok(())

@@ -1,21 +1,25 @@
 //! `loadgen` — scenario-driven load harness for `sketchd`
-//! (DESIGN.md §8; the CI `load-smoke` gate's workload driver).
+//! (DESIGN.md §8; the CI `shard-smoke` gate's workload driver).
 //!
 //! ```text
-//! loadgen [--list] [--scenario steady,churn,...] [--addr HOST:PORT]
-//!         [--tenants N] [--intervals N] [--quick] [--threads N]
-//!         [--timeout-ms 30000] [--retries 8] [--out PATH]
+//! loadgen [--list-scenarios] [--scenario steady,churn,...]
+//!         [--addr HOST:PORT] [--tenants N] [--intervals N] [--quick]
+//!         [--threads N] [--shards N] [--timeout-ms 30000]
+//!         [--retries 8] [--out PATH]
 //! ```
 //!
 //! Without `--addr`, each scenario runs against its own fresh
 //! in-process daemon on an ephemeral port with a throwaway snapshot
 //! path — results are then hermetic and the daemon-metrics cross-check
-//! is exact.  With `--addr`, scenarios run against that external
-//! daemon, which must be otherwise idle for the cross-check to hold.
+//! is exact.  `--shards N` sizes that spawned daemon's connection-shard
+//! count (DESIGN.md §9); with `--addr`, scenarios run against that
+//! external daemon (whatever sharding it was started with), which must
+//! be otherwise idle for the cross-check to hold.
 //!
 //! The default run covers every built-in scenario except the fixed CI
-//! `smoke` workload (32 tenants × 200 intervals), which CI invokes by
-//! name.  Results land in `BENCH_serve.json` at the repo root.
+//! workloads — `smoke` (32 tenants × 200 intervals) and `churn_1k`
+//! (1000-tenant churn) — which CI invokes by name.  Results land in
+//! `BENCH_serve.json` at the repo root.
 
 use anyhow::{bail, Context, Result};
 
@@ -33,7 +37,8 @@ const DEFAULT_OUT: &str =
 
 fn main() -> Result<()> {
     let mut args = Args::parse_env()?;
-    let list = args.flag("list");
+    // `--list` kept as a short alias of the documented name.
+    let list = args.flag("list-scenarios") || args.flag("list");
     let quick = args.flag("quick")
         || std::env::var("BENCH_QUICK").as_deref() == Ok("1");
     let addr = args.opt("addr");
@@ -41,6 +46,7 @@ fn main() -> Result<()> {
     let tenants = args.opt_usize("tenants", 0)?;
     let intervals = args.opt_usize("intervals", 0)?;
     let threads = args.opt_usize("threads", 1)?;
+    let shards = args.opt_usize("shards", 1)?.max(1);
     let out = args.opt_or("out", DEFAULT_OUT);
     let d = ClientConfig::default();
     let net = ClientConfig {
@@ -83,10 +89,10 @@ fn main() -> Result<()> {
                 })
             })
             .collect::<Result<_>>()?,
-        // Default run: the full matrix minus the CI smoke workload.
+        // Default run: the full matrix minus the CI-only workloads.
         None => Scenario::builtin()
             .into_iter()
-            .filter(|s| s.name != "smoke")
+            .filter(|s| !matches!(s.name.as_str(), "smoke" | "churn_1k"))
             .collect(),
     };
     if chosen.is_empty() {
@@ -106,7 +112,7 @@ fn main() -> Result<()> {
             Some(a) => run_scenario(a, &sc, &net).with_context(|| {
                 format!("scenario {} against {a}", sc.name)
             })?,
-            None => run_spawned(&sc, threads, &net)?,
+            None => run_spawned(&sc, threads, shards, &net)?,
         };
         print_report(&rep);
         reports.push(rep);
@@ -122,6 +128,7 @@ fn main() -> Result<()> {
 fn run_spawned(
     sc: &Scenario,
     threads: usize,
+    shards: usize,
     net: &ClientConfig,
 ) -> Result<ScenarioReport> {
     let snap = std::env::temp_dir().join(format!(
@@ -141,6 +148,7 @@ fn run_spawned(
         },
         snapshot_path: snap.to_string_lossy().into_owned(),
         threads: resolve_threads(threads),
+        shards,
         archive: ArchiveConfig::default(),
     };
     let daemon = Daemon::bind(cfg)

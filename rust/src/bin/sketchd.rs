@@ -9,8 +9,11 @@
 //!         [--max-sessions 16] [--snapshot-interval 30]
 //!         [--quota 67108864] [--snapshot-path sketchd.snapshot]
 //!         [--archive-capacity 64] [--archive-stride 1]
-//!         [--threads 1]
+//!         [--threads 1] [--shards 1]
 //! ```
+//!
+//! `--shards N` sizes the nonblocking connection-shard count
+//! (DESIGN.md §9; 0 = auto-size from the CPU count).
 //!
 //! The daemon snapshots on the interval, on client `Snapshot` requests
 //! and at shutdown; a restart on the same `--snapshot-path` resumes all

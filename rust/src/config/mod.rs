@@ -219,10 +219,14 @@ pub struct ServeConfig {
     pub session_quota_bytes: usize,
     /// Durable snapshot file (written atomically via rename).
     pub snapshot_path: String,
-    /// Width of the daemon's single process-lifetime worker pool, shared
-    /// by every tenant engine and the hub's cross-tenant diagnosis
-    /// (0 = auto).
+    /// Width of each shard's worker pool, shared by every tenant engine
+    /// and hub registered on that shard (0 = auto).
     pub threads: usize,
+    /// Connection shards: independent event-loop threads, each owning a
+    /// slice of sessions (`session_id % shards`), its own kernel pool
+    /// and its own metrics (0 = auto from available parallelism).  See
+    /// DESIGN.md §9.
+    pub shards: usize,
     /// Per-session sketch-history retention (`[archive]` section).
     pub archive: ArchiveConfig,
 }
@@ -236,6 +240,7 @@ impl Default for ServeConfig {
             session_quota_bytes: 64 << 20,
             snapshot_path: "sketchd.snapshot".into(),
             threads: 1,
+            shards: 1,
             archive: ArchiveConfig::default(),
         }
     }
@@ -262,6 +267,7 @@ impl ServeConfig {
             )?,
             snapshot_path: t.str_or("serve.snapshot_path", &d.snapshot_path)?,
             threads: resolve_threads(t.usize_or("serve.threads", d.threads)?),
+            shards: resolve_threads(t.usize_or("serve.shards", d.shards)?),
             archive: ArchiveConfig {
                 capacity: t.usize_or("archive.capacity", d.archive.capacity)?,
                 stride: t.usize_or("archive.stride", d.archive.stride)?,
@@ -278,6 +284,12 @@ impl ServeConfig {
         }
         if self.snapshot_path.is_empty() {
             bail!("serve.snapshot_path must not be empty");
+        }
+        if self.shards == 0 {
+            bail!(
+                "serve.shards must be > 0 (0 is only valid in TOML, \
+                 where it resolves to available parallelism)"
+            );
         }
         if self.archive.stride == 0 {
             bail!("archive.stride must be >= 1");
@@ -443,6 +455,7 @@ snapshot_interval_secs = 5
 session_quota_bytes = 1024
 snapshot_path = "/tmp/snap.bin"
 threads = 2
+shards = 3
 [archive]
 capacity = 12
 stride = 3
@@ -456,8 +469,13 @@ stride = 3
         assert_eq!(c.session_quota_bytes, 1024);
         assert_eq!(c.snapshot_path, "/tmp/snap.bin");
         assert_eq!(c.threads, 2);
+        assert_eq!(c.shards, 3);
         assert_eq!(c.archive, ArchiveConfig { capacity: 12, stride: 3 });
         c.validate().unwrap();
+
+        // shards = 0 in TOML resolves to available parallelism ...
+        let auto = Toml::parse("[serve]\nshards = 0\n").unwrap();
+        assert!(ServeConfig::from_toml(&auto).unwrap().shards >= 1);
 
         // Missing sections fall back to defaults entirely.
         let empty = Toml::parse("").unwrap();
@@ -469,6 +487,10 @@ stride = 3
         assert!(bad.validate().is_err());
         bad = d.clone();
         bad.addr.clear();
+        assert!(bad.validate().is_err());
+        // ... but a literal shards = 0 never survives validation.
+        bad = d.clone();
+        bad.shards = 0;
         assert!(bad.validate().is_err());
         bad = d;
         bad.archive.stride = 0;

@@ -21,7 +21,7 @@
 //! reporter: one `<scenario>_ingest` / `<scenario>_query` result each
 //! (mean/p50/p95/p99/min/max from the merged histograms) plus flat
 //! summary scalars (`<scenario>_throughput`, `<scenario>_busy_rate`,
-//! `<scenario>_p99_ms`, …) that the CI `load-smoke` gate reads.
+//! `<scenario>_p99_ms`, …) that the CI `shard-smoke` gate reads.
 //!
 //! [`benchkit`]: crate::benchkit
 
@@ -37,7 +37,9 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::benchkit::{fmt_dur, Bench, BenchResult};
 use crate::config::ClientConfig;
-use crate::serve::{Histogram, SketchClient, METRICS_MIN_VERSION};
+use crate::serve::{
+    Histogram, ShardStats, SketchClient, METRICS_MIN_VERSION,
+};
 
 /// One load-test configuration: a tenant population and its traffic mix.
 #[derive(Clone, Debug, PartialEq)]
@@ -92,9 +94,10 @@ impl Default for Scenario {
 }
 
 impl Scenario {
-    /// The built-in scenario matrix.  `smoke` is the fixed CI workload
-    /// (32 tenants × 200 intervals) and is excluded from the default
-    /// `loadgen` run — CI invokes it by name.
+    /// The built-in scenario matrix.  `smoke` (the fixed CI workload,
+    /// 32 tenants × 200 intervals) and `churn_1k` (the 1000-tenant
+    /// churn accounting stress) are excluded from the default `loadgen`
+    /// run — CI invokes them by name.
     pub fn builtin() -> Vec<Scenario> {
         vec![
             Scenario {
@@ -150,6 +153,20 @@ impl Scenario {
                 tenants: 32,
                 intervals: 200,
                 query_every: 20,
+                ..Scenario::default()
+            },
+            // 1000 sessions opening, churning and closing across every
+            // shard: small payloads, short run — the point is the
+            // exact frame/byte accounting cross-check at scale, not
+            // latency.  CI-only (excluded from the default matrix).
+            Scenario {
+                name: "churn_1k".into(),
+                tenants: 1000,
+                intervals: 8,
+                layer_dims: vec![16, 8],
+                batch: 4,
+                rank: 2,
+                churn_every: 3,
                 ..Scenario::default()
             },
         ]
@@ -210,6 +227,10 @@ pub struct ScenarioReport {
     /// Daemon metrics delta; `None` against a pre-v3 daemon.  When
     /// `Some`, the frame-count cross-check has already passed.
     pub daemon: Option<DaemonDelta>,
+    /// Post-run per-shard rows from the v4 `Stats` reply (empty
+    /// against a pre-v4 daemon).  Lifetime counters, not deltas —
+    /// exact for spawned daemons, cumulative for `--addr`.
+    pub shard_stats: Vec<ShardStats>,
 }
 
 impl ScenarioReport {
@@ -229,6 +250,25 @@ impl ScenarioReport {
         } else {
             self.busy as f64 / self.ingest_frames_sent as f64
         }
+    }
+
+    /// Per-shard ingest-p99 skew: max/min ingest p99 across the shards
+    /// that handled ingests.  1.0 means perfectly even; `None` when
+    /// fewer than two shards ingested (nothing to skew) or the daemon
+    /// predates per-shard stats.
+    pub fn shard_p99_skew(&self) -> Option<f64> {
+        let p99s: Vec<u64> = self
+            .shard_stats
+            .iter()
+            .filter(|s| s.ingest_frames > 0)
+            .map(|s| s.ingest_p99_ns)
+            .collect();
+        if p99s.len() < 2 {
+            return None;
+        }
+        let max = *p99s.iter().max().unwrap();
+        let min = *p99s.iter().min().unwrap();
+        (min > 0).then(|| max as f64 / min as f64)
     }
 }
 
@@ -326,6 +366,10 @@ pub fn run_scenario(
         None => None,
     };
 
+    // Per-shard balance view — v4 `Stats` rows (empty from older
+    // daemons, which simply don't report shards).
+    let shard_stats = control.stats().context("stats after run")?.shards;
+
     Ok(ScenarioReport {
         name: sc.name.clone(),
         tenants: sc.tenants,
@@ -342,6 +386,7 @@ pub fn run_scenario(
         ingest_hist: agg.ingest_hist,
         query_hist: agg.query_hist,
         daemon,
+        shard_stats,
     })
 }
 
@@ -368,7 +413,7 @@ pub fn bench_from_hist(
 }
 
 /// Write `BENCH_serve.json`: per-scenario ingest/query latency rows
-/// plus the flat summary scalars the CI `load-smoke` gate reads.
+/// plus the flat summary scalars the CI `shard-smoke` gate reads.
 pub fn write_report(
     reports: &[ScenarioReport],
     quick: bool,
@@ -408,6 +453,15 @@ pub fn write_report(
                 format!("{}_snapshot_pause_ms", r.name),
                 d.snapshot_pause.as_secs_f64() * 1e3,
             ));
+        }
+        if !r.shard_stats.is_empty() {
+            summary.push((
+                format!("{}_shards", r.name),
+                r.shard_stats.len() as f64,
+            ));
+        }
+        if let Some(skew) = r.shard_p99_skew() {
+            summary.push((format!("{}_shard_p99_skew", r.name), skew));
         }
     }
     summary.push(("scenarios".to_string(), reports.len() as f64));
@@ -468,6 +522,22 @@ pub fn print_report(r: &ScenarioReport) {
         ),
         None => println!("daemon: pre-v3, no metrics cross-check"),
     }
+    for s in &r.shard_stats {
+        println!(
+            "shard {}: sessions {} | ingest_frames {} | bytes {} | \
+             ingest p50 {} p99 {} | frames_served {}",
+            s.shard,
+            s.sessions,
+            s.ingest_frames,
+            s.ingest_bytes,
+            fmt_dur(Duration::from_nanos(s.ingest_p50_ns)),
+            fmt_dur(Duration::from_nanos(s.ingest_p99_ns)),
+            s.frames_served,
+        );
+    }
+    if let Some(skew) = r.shard_p99_skew() {
+        println!("shard ingest p99 skew (max/min): {skew:.2}");
+    }
 }
 
 #[cfg(test)]
@@ -518,6 +588,7 @@ mod tests {
             ingest_hist: Histogram::new(),
             query_hist: Histogram::new(),
             daemon: None,
+            shard_stats: Vec::new(),
         };
         assert_eq!(r.throughput(), 50.0);
         assert_eq!(r.busy_rate(), 0.2);
@@ -525,5 +596,30 @@ mod tests {
         r.ingest_frames_sent = 0;
         assert_eq!(r.throughput(), 0.0);
         assert_eq!(r.busy_rate(), 0.0);
+
+        // Skew: undefined below two ingesting shards, max/min above.
+        assert_eq!(r.shard_p99_skew(), None);
+        let shard = |i: u64, frames: u64, p99: u64| ShardStats {
+            shard: i,
+            ingest_frames: frames,
+            ingest_p99_ns: p99,
+            ..ShardStats::default()
+        };
+        r.shard_stats = vec![shard(0, 10, 4_000)];
+        assert_eq!(r.shard_p99_skew(), None);
+        r.shard_stats =
+            vec![shard(0, 10, 4_000), shard(1, 12, 1_000), shard(2, 0, 0)];
+        assert_eq!(r.shard_p99_skew(), Some(4.0));
+    }
+
+    #[test]
+    fn churn_1k_is_a_wide_churn_scenario() {
+        let s = Scenario::by_name("churn_1k").unwrap();
+        assert_eq!(s.tenants, 1000);
+        assert!(s.churn_every > 0);
+        assert!(
+            s.layer_dims.iter().product::<usize>() <= 256,
+            "churn_1k must stay small per tenant"
+        );
     }
 }

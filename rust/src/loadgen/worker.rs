@@ -14,9 +14,7 @@ use anyhow::{bail, Context, Result};
 
 use crate::config::ClientConfig;
 use crate::data::ActStream;
-use crate::serve::{
-    Histogram, ServeError, SessionSpec, SketchClient,
-};
+use crate::serve::{Error, Histogram, SessionSpec, SketchClient};
 use crate::sketch::Mat;
 
 use super::Scenario;
@@ -95,7 +93,7 @@ pub(super) fn run_tenant(
     let (mut client, _info) = SketchClient::connect_with(addr, net)
         .with_context(|| format!("tenant {tenant}: connect {addr}"))?;
     let mut gen = 0usize;
-    let mut session = client
+    let mut sess = client
         .open_session(&spec(sc, tenant, gen))
         .with_context(|| format!("tenant {tenant}: open session"))?;
     let mut stream =
@@ -121,16 +119,16 @@ pub(super) fn run_tenant(
 
         rep.ingest_frames_sent += 1;
         let t = Instant::now();
-        match client.ingest(session, loss, &acts, sc.want_recon) {
+        match sess.ingest(loss, &acts, sc.want_recon) {
             Ok(_) => {
                 rep.ingest_hist.record_duration(t.elapsed());
                 rep.ingests_ok += 1;
                 rep.bytes_sent += bytes;
             }
-            Err(ServeError::Busy { .. }) => {
+            Err(Error::Busy { .. }) => {
                 rep.busy += 1;
                 let tq = Instant::now();
-                client.diagnose(session).with_context(|| {
+                sess.diagnose().with_context(|| {
                     format!(
                         "tenant {tenant} interval {interval}: \
                          quota-drain diagnose"
@@ -140,13 +138,13 @@ pub(super) fn run_tenant(
                 rep.queries += 1;
                 rep.ingest_frames_sent += 1;
                 let t = Instant::now();
-                match client.ingest(session, loss, &acts, sc.want_recon) {
+                match sess.ingest(loss, &acts, sc.want_recon) {
                     Ok(_) => {
                         rep.ingest_hist.record_duration(t.elapsed());
                         rep.ingests_ok += 1;
                         rep.bytes_sent += bytes;
                     }
-                    Err(ServeError::Busy { .. }) => rep.dropped += 1,
+                    Err(Error::Busy { .. }) => rep.dropped += 1,
                     Err(e) => bail!(
                         "tenant {tenant} interval {interval}: \
                          ingest retry failed: {e}"
@@ -160,12 +158,12 @@ pub(super) fn run_tenant(
 
         if sc.query_every > 0 && (interval + 1) % sc.query_every == 0 {
             let t = Instant::now();
-            client.diagnose(session).with_context(|| {
+            sess.diagnose().with_context(|| {
                 format!("tenant {tenant} interval {interval}: diagnose")
             })?;
             rep.query_hist.record_duration(t.elapsed());
             let t = Instant::now();
-            client.query_trajectory(session).with_context(|| {
+            sess.query_trajectory().with_context(|| {
                 format!("tenant {tenant} interval {interval}: trajectory")
             })?;
             rep.query_hist.record_duration(t.elapsed());
@@ -176,7 +174,7 @@ pub(super) fn run_tenant(
             && tenant == 0
             && (interval + 1) % sc.snapshot_every == 0
         {
-            client.snapshot().with_context(|| {
+            sess.client().snapshot().with_context(|| {
                 format!("tenant {tenant} interval {interval}: snapshot")
             })?;
             rep.snapshots += 1;
@@ -186,12 +184,12 @@ pub(super) fn run_tenant(
             && (interval + 1) % sc.churn_every == 0
             && interval + 1 < sc.intervals
         {
-            client.close_session(session).with_context(|| {
+            sess.close().with_context(|| {
                 format!("tenant {tenant} interval {interval}: close")
             })?;
             gen += 1;
             rep.reopens += 1;
-            session = client
+            sess = client
                 .open_session(&spec(sc, tenant, gen))
                 .with_context(|| {
                     format!("tenant {tenant} interval {interval}: reopen")
@@ -200,8 +198,7 @@ pub(super) fn run_tenant(
                 ActStream::new(&sc.layer_dims, false, acts_seed(tenant, gen));
         }
     }
-    client
-        .close_session(session)
+    sess.close()
         .with_context(|| format!("tenant {tenant}: final close"))?;
     Ok(rep)
 }

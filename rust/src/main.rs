@@ -545,18 +545,33 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     }
     if stats {
         let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
-        let (daemon, sessions) = client.stats()?;
+        let reply = client.stats()?;
+        let daemon = &reply.daemon;
         println!(
             "daemon: {}/{} sessions, {} ingested, {} frames served, \
-             {} busy rejections, {} archived",
+             {} busy rejections, {} archived, {} shards",
             daemon.sessions,
             daemon.max_sessions,
             fmt_bytes(daemon.ingest_bytes as usize),
             daemon.frames_served,
             daemon.busy_rejections,
             fmt_bytes(daemon.archive_bytes as usize),
+            daemon.shards.max(1),
         );
-        for s in &sessions {
+        for sh in &reply.shards {
+            println!(
+                "  shard {}: {} sessions, {} ingest frames ({}), \
+                 ingest p50 {} p99 {}, {} frames served",
+                sh.shard,
+                sh.sessions,
+                sh.ingest_frames,
+                fmt_bytes(sh.ingest_bytes as usize),
+                fmt_dur(Duration::from_nanos(sh.ingest_p50_ns)),
+                fmt_dur(Duration::from_nanos(sh.ingest_p99_ns)),
+                sh.frames_served,
+            );
+        }
+        for s in &reply.sessions {
             let quota = if s.quota_limit == 0 {
                 "unlimited".to_string()
             } else {
@@ -629,7 +644,7 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     if let Some(raw) = query_trajectory {
         let session = parse_session(&raw, "--query-trajectory")?;
         let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
-        let points = client.query_trajectory(session)?;
+        let points = client.session(session).query_trajectory()?;
         println!("trajectory for session {session} ({} intervals):", points.len());
         for p in &points {
             let norms = p
@@ -645,7 +660,7 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     if let Some(raw) = query_similarity {
         let session = parse_session(&raw, "--query-similarity")?;
         let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
-        let (steps, sim) = client.query_similarity(session, layer)?;
+        let (steps, sim) = client.session(session).query_similarity(layer)?;
         println!(
             "cosine similarity, session {session} layer {layer}, steps {steps:?}:"
         );
@@ -661,7 +676,7 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     if let Some(raw) = query_drift {
         let session = parse_session(&raw, "--query-drift")?;
         let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
-        let points = client.query_drift(session, layer)?;
+        let points = client.session(session).query_drift(layer)?;
         println!("spectral drift, session {session} layer {layer}:");
         for p in &points {
             println!(
@@ -674,7 +689,7 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     if let Some(raw) = archive_info {
         let session = parse_session(&raw, "--archive-info")?;
         let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
-        let a = client.archive_info(session)?;
+        let a = client.session(session).archive_info()?;
         println!(
             "archive for session {session}: {}/{} intervals (stride {}, \
              {} seen), steps {}..{}, {} layers, {}",

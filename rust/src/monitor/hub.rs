@@ -264,6 +264,41 @@ impl MonitorHub {
         Ok(id)
     }
 
+    /// Admit a tenant under a caller-chosen id.  The sharded daemon
+    /// allocates session ids itself (per-shard strided counters, so
+    /// `id % shards` names the owning shard — DESIGN.md §9) and each
+    /// shard's hub records them verbatim.  Rejects an id the hub
+    /// already holds or the reserved sentinel; on success the internal
+    /// allocator is advanced past `raw` so interleaved `register`
+    /// calls cannot collide with it.
+    pub fn register_with_id(
+        &mut self,
+        raw: u64,
+        name: &str,
+        cfg: MonitorConfig,
+        n_layers: usize,
+    ) -> Result<SessionId, HubError> {
+        if raw == u64::MAX {
+            return Err(HubError::SessionsExhausted);
+        }
+        let id = SessionId(raw);
+        if self.sessions.contains_key(&id) {
+            return Err(HubError::DuplicateSession(id));
+        }
+        self.sessions.insert(
+            id,
+            MonitorSession {
+                id,
+                name: name.to_string(),
+                svc: MonitorService::new(cfg, n_layers),
+                sketch_bytes: 0,
+                archive_bytes: 0,
+            },
+        );
+        self.next_id = self.next_id.max(raw + 1);
+        Ok(id)
+    }
+
     /// Re-admit a snapshotted session under its original id.  Rejects an
     /// id the hub already holds (`DuplicateSession`) or the reserved
     /// sentinel (`SessionsExhausted`); on success the id allocator is

@@ -3,18 +3,24 @@
 //! the CI `archive-smoke` job.
 //!
 //! Every method sends one request frame and reads one response frame;
-//! `Busy` and remote protocol errors surface as typed [`ServeError`]
+//! `Busy` and remote protocol errors surface as typed [`Error`]
 //! variants so callers (and the backpressure tests) can branch on them.
+//!
+//! Session-scoped traffic goes through an owned [`SessionHandle`]
+//! returned by [`SketchClient::open_session`] (or re-adopted with
+//! [`SketchClient::session`] after a resume): the handle carries the
+//! session id so callers stop threading raw u64 ids through every
+//! call.  The id-threading methods on [`SketchClient`] remain one
+//! release as deprecated shims.
 //!
 //! Connection establishment honours a [`ClientConfig`]: a connect
 //! timeout, bounded retry-with-backoff, and a socket read/write timeout
-//! so a hung daemon yields [`ServeError::Timeout`] instead of blocking
+//! so a hung daemon yields [`Error::Timeout`] instead of blocking
 //! the caller forever.  [`SketchClient::connect_with`] negotiates the
 //! protocol version: it speaks [`PROTO_VERSION`] first and, if the
 //! daemon rejects it as unsupported, reconnects once at
 //! [`PROTO_MIN_VERSION`].
 
-use std::fmt;
 use std::io;
 use std::net::{TcpStream, ToSocketAddrs};
 use std::thread;
@@ -31,59 +37,14 @@ use crate::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
 
 use super::codec::Enc;
 use super::daemon::recon_errors;
+use super::error::Error;
 use super::metrics::MetricsReport;
 use super::proto::{
     self, monitor_config, read_frame_reusing,
-    write_frame_versioned_reusing, ArchiveInfo, DaemonStats, ErrorCode,
-    Request, Response, SessionSpec, SessionStats, METRICS_MIN_VERSION,
+    write_frame_versioned_reusing, ArchiveInfo, DaemonStats, Request,
+    Response, SessionSpec, SessionStats, ShardStats, METRICS_MIN_VERSION,
     PROTO_MIN_VERSION, PROTO_VERSION,
 };
-
-/// Typed client-side failures.
-#[derive(Debug)]
-pub enum ServeError {
-    /// Daemon backpressure: admission cap or session quota hit.  Retry
-    /// after a `Diagnose` (quota) or a `Close` elsewhere (admission).
-    Busy { used: u64, limit: u64 },
-    /// The daemon replied with a protocol error.
-    Remote { code: ErrorCode, message: String },
-    /// The daemon replied with an unexpected message or malformed bytes.
-    Protocol(String),
-    /// A connect/read/write deadline expired (see [`ClientConfig`]).
-    Timeout(io::Error),
-    Io(io::Error),
-}
-
-impl fmt::Display for ServeError {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        match self {
-            ServeError::Busy { used, limit } => {
-                write!(f, "daemon busy ({used}/{limit})")
-            }
-            ServeError::Remote { code, message } => {
-                write!(f, "remote error [{code}]: {message}")
-            }
-            ServeError::Protocol(m) => write!(f, "protocol error: {m}"),
-            ServeError::Timeout(e) => write!(f, "timed out: {e}"),
-            ServeError::Io(e) => write!(f, "io error: {e}"),
-        }
-    }
-}
-
-impl std::error::Error for ServeError {}
-
-impl From<io::Error> for ServeError {
-    fn from(e: io::Error) -> ServeError {
-        // Read timeouts surface as TimedOut on most platforms but as
-        // WouldBlock on some Unixes; fold both into the typed variant.
-        match e.kind() {
-            io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => {
-                ServeError::Timeout(e)
-            }
-            _ => ServeError::Io(e),
-        }
-    }
-}
 
 /// Capacity info from the `Hello` handshake.
 #[derive(Clone, Debug)]
@@ -110,6 +71,16 @@ pub struct DiagnoseReply {
     pub steps_seen: u64,
     pub engine_bytes: u64,
     pub monitor_bytes: u64,
+}
+
+/// One `Stats` reply: daemon-wide counters, one row per session, and
+/// (against a v4 daemon) one row per connection shard.  `shards` is
+/// empty when the connection negotiated v3 or older.
+#[derive(Clone, Debug)]
+pub struct StatsReply {
+    pub daemon: DaemonStats,
+    pub sessions: Vec<SessionStats>,
+    pub shards: Vec<ShardStats>,
 }
 
 /// Blocking sketchd client over one TCP connection.  Request encoding,
@@ -144,7 +115,7 @@ fn retryable_connect(e: &io::Error) -> bool {
 fn connect_stream(
     addr: &str,
     net: &ClientConfig,
-) -> Result<TcpStream, ServeError> {
+) -> Result<TcpStream, Error> {
     let connect_timeout = Duration::from_millis(net.connect_timeout_ms);
     let mut backoff = Duration::from_millis(net.retry_backoff_ms.max(1));
     let mut last: Option<io::Error> = None;
@@ -182,8 +153,8 @@ fn connect_stream(
             Err(e) => return Err(e.into()),
         }
     }
-    Err(last.map(ServeError::from).unwrap_or_else(|| {
-        ServeError::Io(io::Error::new(
+    Err(last.map(Error::from).unwrap_or_else(|| {
+        Error::Io(io::Error::new(
             io::ErrorKind::ConnectionRefused,
             "connect failed",
         ))
@@ -193,7 +164,7 @@ fn connect_stream(
 impl SketchClient {
     /// Connect with default [`ClientConfig`] timeouts and complete the
     /// `Hello` handshake.
-    pub fn connect(addr: &str) -> Result<(SketchClient, ServerInfo), ServeError> {
+    pub fn connect(addr: &str) -> Result<(SketchClient, ServerInfo), Error> {
         SketchClient::connect_with(addr, &ClientConfig::default())
     }
 
@@ -204,15 +175,14 @@ impl SketchClient {
     pub fn connect_with(
         addr: &str,
         net: &ClientConfig,
-    ) -> Result<(SketchClient, ServerInfo), ServeError> {
+    ) -> Result<(SketchClient, ServerInfo), Error> {
         let stream = connect_stream(addr, net)?;
         let mut client = SketchClient::from_stream(stream, PROTO_VERSION);
         match client.hello() {
             Ok(info) => Ok((client, info)),
-            Err(ServeError::Remote {
-                code: ErrorCode::UnsupportedVersion,
-                ..
-            }) if PROTO_MIN_VERSION < PROTO_VERSION => {
+            Err(Error::UnsupportedVersion(_))
+                if PROTO_MIN_VERSION < PROTO_VERSION =>
+            {
                 let stream = connect_stream(addr, net)?;
                 let mut client =
                     SketchClient::from_stream(stream, PROTO_MIN_VERSION);
@@ -238,15 +208,16 @@ impl SketchClient {
         self.version
     }
 
-    fn round_trip(&mut self, req: &Request) -> Result<Response, ServeError> {
+    fn round_trip(&mut self, req: &Request) -> Result<Response, Error> {
         self.enc.reset();
         req.encode_into(&mut self.enc);
         self.send_encoded(req.msg_type())
     }
 
     /// Send whatever is in `self.enc` as a `msg` frame and read the
-    /// response, mapping `Busy`/`Error` to typed failures.
-    fn send_encoded(&mut self, msg: u8) -> Result<Response, ServeError> {
+    /// response, mapping `Busy`/`Error` to typed failures through the
+    /// single [`Error::from_code`] table.
+    fn send_encoded(&mut self, msg: u8) -> Result<Response, Error> {
         write_frame_versioned_reusing(
             &mut self.stream,
             self.version,
@@ -256,7 +227,7 @@ impl SketchClient {
         )?;
         let header = read_frame_reusing(&mut self.stream, &mut self.payload)?;
         if !(PROTO_MIN_VERSION..=PROTO_VERSION).contains(&header.version) {
-            return Err(ServeError::Protocol(format!(
+            return Err(Error::Protocol(format!(
                 "response frame version {} (expected \
                  {PROTO_MIN_VERSION}..={PROTO_VERSION})",
                 header.version
@@ -264,19 +235,19 @@ impl SketchClient {
         }
         let resp =
             Response::decode_v(header.msg, &self.payload, header.version)
-                .map_err(|e| ServeError::Protocol(e.to_string()))?;
+                .map_err(|e| Error::Protocol(e.to_string()))?;
         match resp {
             Response::Busy { used, limit } => {
-                Err(ServeError::Busy { used, limit })
+                Err(Error::Busy { used, limit })
             }
             Response::Error { code, message } => {
-                Err(ServeError::Remote { code, message })
+                Err(Error::from_code(code, message))
             }
             other => Ok(other),
         }
     }
 
-    fn hello(&mut self) -> Result<ServerInfo, ServeError> {
+    fn hello(&mut self) -> Result<ServerInfo, Error> {
         match self.round_trip(&Request::Hello {
             client: concat!("sketchgrad/", env!("CARGO_PKG_VERSION"))
                 .to_string(),
@@ -296,27 +267,95 @@ impl SketchClient {
         }
     }
 
+    /// Open a session and return the owned [`SessionHandle`] for it.
+    /// Dropping the handle does NOT close the session (sessions outlive
+    /// connections by design) — call [`SessionHandle::close`], or
+    /// re-adopt the id later with [`SketchClient::session`].
     pub fn open_session(
         &mut self,
         spec: &SessionSpec,
-    ) -> Result<u64, ServeError> {
+    ) -> Result<SessionHandle<'_>, Error> {
         match self.round_trip(&Request::OpenSession(spec.clone()))? {
-            Response::SessionOpened { session } => Ok(session),
+            Response::SessionOpened { session } => Ok(SessionHandle {
+                client: self,
+                id: session,
+            }),
             other => Err(unexpected("SessionOpened", &other)),
         }
     }
 
-    /// One monitored training step (see [`Request::Ingest`]).  The
-    /// activations are encoded straight from the borrowed slice into
-    /// the connection's reusable buffer — no clone, no per-step frame
-    /// allocation.
-    pub fn ingest(
+    /// Adopt an existing session id (e.g. one persisted across a daemon
+    /// restart) as a [`SessionHandle`] on this connection.  No frame is
+    /// sent; a stale id surfaces as [`Error::UnknownSession`] on the
+    /// first call through the handle.
+    pub fn session(&mut self, id: u64) -> SessionHandle<'_> {
+        SessionHandle { client: self, id }
+    }
+
+    /// Force a durable snapshot; returns (path, file bytes, sessions).
+    pub fn snapshot(&mut self) -> Result<(String, u64, u64), Error> {
+        match self.round_trip(&Request::Snapshot)? {
+            Response::SnapshotOk {
+                path,
+                bytes,
+                sessions,
+            } => Ok((path, bytes, sessions)),
+            other => Err(unexpected("SnapshotOk", &other)),
+        }
+    }
+
+    /// Snapshot + stop the daemon; returns sessions snapshotted.
+    pub fn shutdown_daemon(&mut self) -> Result<u64, Error> {
+        match self.round_trip(&Request::Shutdown)? {
+            Response::ShutdownOk { sessions } => Ok(sessions),
+            other => Err(unexpected("ShutdownOk", &other)),
+        }
+    }
+
+    /// Daemon-wide, per-session and (v4) per-shard observability
+    /// counters.
+    pub fn stats(&mut self) -> Result<StatsReply, Error> {
+        match self.round_trip(&Request::Stats)? {
+            Response::StatsOk {
+                daemon,
+                sessions,
+                shards,
+            } => Ok(StatsReply {
+                daemon,
+                sessions,
+                shards,
+            }),
+            other => Err(unexpected("StatsOk", &other)),
+        }
+    }
+
+    /// Daemon observability report: lifetime counters plus the
+    /// ingest/diagnose/query latency histograms (proto v3; a v2
+    /// connection fails client-side before touching the wire).
+    pub fn metrics(&mut self) -> Result<MetricsReport, Error> {
+        if self.version < METRICS_MIN_VERSION {
+            return Err(Error::Protocol(format!(
+                "Metrics requires proto v{METRICS_MIN_VERSION}, \
+                 connection negotiated v{}",
+                self.version
+            )));
+        }
+        match self.round_trip(&Request::Metrics)? {
+            Response::MetricsOk(report) => Ok(report),
+            other => Err(unexpected("MetricsOk", &other)),
+        }
+    }
+
+    // -- session-scoped wire calls (shared by SessionHandle and the
+    //    deprecated id-threading shims) --------------------------------
+
+    fn ingest_raw(
         &mut self,
         session: u64,
         loss: f32,
         acts: &[Mat],
         want_recon: bool,
-    ) -> Result<IngestReply, ServeError> {
+    ) -> Result<IngestReply, Error> {
         self.enc.reset();
         proto::enc_ingest(&mut self.enc, session, loss, want_recon, acts);
         match self.send_encoded(proto::msg::INGEST)? {
@@ -333,12 +372,11 @@ impl SketchClient {
         }
     }
 
-    /// Push externally computed metrics (no daemon-side engine update).
-    pub fn observe(
+    fn observe_raw(
         &mut self,
         session: u64,
         metrics: &StepMetrics,
-    ) -> Result<u64, ServeError> {
+    ) -> Result<u64, Error> {
         match self.round_trip(&Request::Observe {
             session,
             metrics: metrics.clone(),
@@ -348,10 +386,7 @@ impl SketchClient {
         }
     }
 
-    pub fn diagnose(
-        &mut self,
-        session: u64,
-    ) -> Result<DiagnoseReply, ServeError> {
+    fn diagnose_raw(&mut self, session: u64) -> Result<DiagnoseReply, Error> {
         match self.round_trip(&Request::Diagnose { session })? {
             Response::Diagnosis {
                 diagnosis,
@@ -370,110 +405,261 @@ impl SketchClient {
         }
     }
 
-    /// Force a durable snapshot; returns (path, file bytes, sessions).
-    pub fn snapshot(&mut self) -> Result<(String, u64, u64), ServeError> {
-        match self.round_trip(&Request::Snapshot)? {
-            Response::SnapshotOk {
-                path,
-                bytes,
-                sessions,
-            } => Ok((path, bytes, sessions)),
-            other => Err(unexpected("SnapshotOk", &other)),
-        }
-    }
-
-    pub fn close_session(&mut self, session: u64) -> Result<(), ServeError> {
+    fn close_raw(&mut self, session: u64) -> Result<(), Error> {
         match self.round_trip(&Request::Close { session })? {
             Response::Closed { .. } => Ok(()),
             other => Err(unexpected("Closed", &other)),
         }
     }
 
-    /// Snapshot + stop the daemon; returns sessions snapshotted.
-    pub fn shutdown_daemon(&mut self) -> Result<u64, ServeError> {
-        match self.round_trip(&Request::Shutdown)? {
-            Response::ShutdownOk { sessions } => Ok(sessions),
-            other => Err(unexpected("ShutdownOk", &other)),
-        }
-    }
-
-    /// Daemon-wide and per-session observability counters.
-    pub fn stats(
-        &mut self,
-    ) -> Result<(DaemonStats, Vec<SessionStats>), ServeError> {
-        match self.round_trip(&Request::Stats)? {
-            Response::StatsOk { daemon, sessions } => Ok((daemon, sessions)),
-            other => Err(unexpected("StatsOk", &other)),
-        }
-    }
-
-    /// Daemon observability report: lifetime counters plus the
-    /// ingest/diagnose/query latency histograms (proto v3; a v2
-    /// connection fails client-side before touching the wire).
-    pub fn metrics(&mut self) -> Result<MetricsReport, ServeError> {
-        if self.version < METRICS_MIN_VERSION {
-            return Err(ServeError::Protocol(format!(
-                "Metrics requires proto v{METRICS_MIN_VERSION}, \
-                 connection negotiated v{}",
-                self.version
-            )));
-        }
-        match self.round_trip(&Request::Metrics)? {
-            Response::MetricsOk(report) => Ok(report),
-            other => Err(unexpected("MetricsOk", &other)),
-        }
-    }
-
-    /// Gradient-norm trajectory over the session's archived intervals.
-    pub fn query_trajectory(
+    fn query_trajectory_raw(
         &mut self,
         session: u64,
-    ) -> Result<Vec<TrajectoryPoint>, ServeError> {
+    ) -> Result<Vec<TrajectoryPoint>, Error> {
         match self.round_trip(&Request::QueryTrajectory { session })? {
             Response::Trajectory { points } => Ok(points),
             other => Err(unexpected("Trajectory", &other)),
         }
     }
 
-    /// Cross-step cosine similarity of one layer's archived sketches:
-    /// (interval steps, dense symmetric matrix).
-    pub fn query_similarity(
+    fn query_similarity_raw(
         &mut self,
         session: u64,
         layer: usize,
-    ) -> Result<(Vec<u64>, Mat), ServeError> {
+    ) -> Result<(Vec<u64>, Mat), Error> {
         match self.round_trip(&Request::QuerySimilarity { session, layer })? {
             Response::Similarity { steps, sim } => Ok((steps, sim)),
             other => Err(unexpected("Similarity", &other)),
         }
     }
 
-    /// Top-sigma / stable-rank drift of one layer across the archive.
-    pub fn query_drift(
+    fn query_drift_raw(
         &mut self,
         session: u64,
         layer: usize,
-    ) -> Result<Vec<DriftPoint>, ServeError> {
+    ) -> Result<Vec<DriftPoint>, Error> {
         match self.round_trip(&Request::QueryDrift { session, layer })? {
             Response::Drift { points } => Ok(points),
             other => Err(unexpected("Drift", &other)),
         }
     }
 
-    /// Archive shape and occupancy for a session.
-    pub fn archive_info(
+    fn archive_info_raw(
         &mut self,
         session: u64,
-    ) -> Result<ArchiveInfo, ServeError> {
+    ) -> Result<ArchiveInfo, Error> {
         match self.round_trip(&Request::ArchiveInfo { session })? {
             Response::ArchiveInfoOk(info) => Ok(info),
             other => Err(unexpected("ArchiveInfoOk", &other)),
         }
     }
+
+    // -- deprecated id-threading shims (one release) -------------------
+
+    /// One monitored training step against an explicit session id.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use SessionHandle::ingest via open_session()/session()"
+    )]
+    pub fn ingest(
+        &mut self,
+        session: u64,
+        loss: f32,
+        acts: &[Mat],
+        want_recon: bool,
+    ) -> Result<IngestReply, Error> {
+        self.ingest_raw(session, loss, acts, want_recon)
+    }
+
+    /// Push externally computed metrics against an explicit session id.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use SessionHandle::observe via open_session()/session()"
+    )]
+    pub fn observe(
+        &mut self,
+        session: u64,
+        metrics: &StepMetrics,
+    ) -> Result<u64, Error> {
+        self.observe_raw(session, metrics)
+    }
+
+    /// Diagnose an explicit session id.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use SessionHandle::diagnose via open_session()/session()"
+    )]
+    pub fn diagnose(&mut self, session: u64) -> Result<DiagnoseReply, Error> {
+        self.diagnose_raw(session)
+    }
+
+    /// Close an explicit session id.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use SessionHandle::close via open_session()/session()"
+    )]
+    pub fn close_session(&mut self, session: u64) -> Result<(), Error> {
+        self.close_raw(session)
+    }
+
+    /// Trajectory query against an explicit session id.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use SessionHandle::query_trajectory via \
+                open_session()/session()"
+    )]
+    pub fn query_trajectory(
+        &mut self,
+        session: u64,
+    ) -> Result<Vec<TrajectoryPoint>, Error> {
+        self.query_trajectory_raw(session)
+    }
+
+    /// Similarity query against an explicit session id.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use SessionHandle::query_similarity via \
+                open_session()/session()"
+    )]
+    pub fn query_similarity(
+        &mut self,
+        session: u64,
+        layer: usize,
+    ) -> Result<(Vec<u64>, Mat), Error> {
+        self.query_similarity_raw(session, layer)
+    }
+
+    /// Drift query against an explicit session id.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use SessionHandle::query_drift via \
+                open_session()/session()"
+    )]
+    pub fn query_drift(
+        &mut self,
+        session: u64,
+        layer: usize,
+    ) -> Result<Vec<DriftPoint>, Error> {
+        self.query_drift_raw(session, layer)
+    }
+
+    /// Archive info against an explicit session id.
+    #[deprecated(
+        since = "0.3.0",
+        note = "use SessionHandle::archive_info via \
+                open_session()/session()"
+    )]
+    pub fn archive_info(
+        &mut self,
+        session: u64,
+    ) -> Result<ArchiveInfo, Error> {
+        self.archive_info_raw(session)
+    }
 }
 
-fn unexpected(want: &str, got: &Response) -> ServeError {
-    ServeError::Protocol(format!("expected {want}, got {got:?}"))
+/// Owned handle to one daemon session on one connection: every
+/// session-scoped operation without threading the raw id.  Obtained
+/// from [`SketchClient::open_session`] (fresh) or
+/// [`SketchClient::session`] (adopting a persisted id).
+///
+/// The handle borrows the connection, so one session is driven at a
+/// time per connection — matching the daemon's one-frame-at-a-time
+/// connection semantics.  Dropping the handle leaves the session open
+/// on the daemon (sessions outlive connections); [`SessionHandle::close`]
+/// consumes the handle and deregisters the session.
+pub struct SessionHandle<'c> {
+    client: &'c mut SketchClient,
+    id: u64,
+}
+
+impl SessionHandle<'_> {
+    /// The daemon-issued session id (persist it to re-adopt the session
+    /// after a reconnect or daemon restart).
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Escape hatch to the underlying connection for connection-wide
+    /// ops (`stats`, `metrics`, `snapshot`, `shutdown_daemon`) while
+    /// the session stays open.
+    pub fn client(&mut self) -> &mut SketchClient {
+        self.client
+    }
+
+    /// One monitored training step (see [`Request::Ingest`]).  The
+    /// activations are encoded straight from the borrowed slice into
+    /// the connection's reusable buffer — no clone, no per-step frame
+    /// allocation.
+    pub fn ingest(
+        &mut self,
+        loss: f32,
+        acts: &[Mat],
+        want_recon: bool,
+    ) -> Result<IngestReply, Error> {
+        self.client.ingest_raw(self.id, loss, acts, want_recon)
+    }
+
+    /// Push externally computed metrics (no daemon-side engine update).
+    pub fn observe(&mut self, metrics: &StepMetrics) -> Result<u64, Error> {
+        self.client.observe_raw(self.id, metrics)
+    }
+
+    pub fn diagnose(&mut self) -> Result<DiagnoseReply, Error> {
+        self.client.diagnose_raw(self.id)
+    }
+
+    /// This session's row from the daemon's `Stats` reply.
+    pub fn stats(&mut self) -> Result<SessionStats, Error> {
+        let reply = self.client.stats()?;
+        reply
+            .sessions
+            .into_iter()
+            .find(|s| s.id == self.id)
+            .ok_or_else(|| {
+                Error::UnknownSession(format!(
+                    "no session {} in daemon stats",
+                    self.id
+                ))
+            })
+    }
+
+    /// Gradient-norm trajectory over the session's archived intervals.
+    pub fn query_trajectory(
+        &mut self,
+    ) -> Result<Vec<TrajectoryPoint>, Error> {
+        self.client.query_trajectory_raw(self.id)
+    }
+
+    /// Cross-step cosine similarity of one layer's archived sketches:
+    /// (interval steps, dense symmetric matrix).
+    pub fn query_similarity(
+        &mut self,
+        layer: usize,
+    ) -> Result<(Vec<u64>, Mat), Error> {
+        self.client.query_similarity_raw(self.id, layer)
+    }
+
+    /// Top-sigma / stable-rank drift of one layer across the archive.
+    pub fn query_drift(
+        &mut self,
+        layer: usize,
+    ) -> Result<Vec<DriftPoint>, Error> {
+        self.client.query_drift_raw(self.id, layer)
+    }
+
+    /// Archive shape and occupancy for this session.
+    pub fn archive_info(&mut self) -> Result<ArchiveInfo, Error> {
+        self.client.archive_info_raw(self.id)
+    }
+
+    /// Deregister the session on the daemon, consuming the handle.
+    pub fn close(self) -> Result<(), Error> {
+        self.client.close_raw(self.id)
+    }
+}
+
+fn unexpected(want: &str, got: &Response) -> Error {
+    Error::Protocol(format!("expected {want}, got {got:?}"))
 }
 
 // ---------------------------------------------------------------------
@@ -570,15 +756,15 @@ impl Mirror {
     }
 }
 
-/// Assert every archive query answer the daemon gives for `session` is
-/// bit-for-bit identical to the mirror's locally computed one.
+/// Assert every archive query answer the daemon gives for the handle's
+/// session is bit-for-bit identical to the mirror's locally computed
+/// one.
 fn verify_archive_queries(
-    client: &mut SketchClient,
-    session: u64,
+    sess: &mut SessionHandle<'_>,
     mirror: &Mirror,
     what: &str,
 ) -> Result<()> {
-    let remote_traj = client.query_trajectory(session)?;
+    let remote_traj = sess.query_trajectory()?;
     let local_traj = mirror.archive.trajectory();
     ensure!(
         remote_traj == local_traj,
@@ -586,8 +772,7 @@ fn verify_archive_queries(
          {local_traj:?}"
     );
     for layer in 0..mirror.engine.n_layers() {
-        let (remote_steps, remote_sim) =
-            client.query_similarity(session, layer)?;
+        let (remote_steps, remote_sim) = sess.query_similarity(layer)?;
         let (local_steps, local_sim) = mirror.archive.similarity(layer);
         ensure!(
             remote_steps == local_steps
@@ -595,7 +780,7 @@ fn verify_archive_queries(
                 && remote_sim.max_abs_diff(&local_sim) == 0.0,
             "{what}: similarity diverged at layer {layer}"
         );
-        let remote_drift = client.query_drift(session, layer)?;
+        let remote_drift = sess.query_drift(layer)?;
         let local_drift = mirror.archive.drift(layer);
         ensure!(
             remote_drift == local_drift,
@@ -603,7 +788,7 @@ fn verify_archive_queries(
              {remote_drift:?} local {local_drift:?}"
         );
     }
-    let info = client.archive_info(session)?;
+    let info = sess.archive_info()?;
     ensure!(
         info.intervals == mirror.archive.len() as u64
             && info.seen == mirror.archive.intervals_seen()
@@ -629,16 +814,17 @@ pub fn run_probe(addr: &str) -> Result<u64> {
         "connected to {} (proto v{}, {}/{} sessions)",
         info.server, info.proto, info.sessions, info.max_sessions
     );
-    let session = client.open_session(&probe_spec())?;
+    let mut sess = client.open_session(&probe_spec())?;
+    let session = sess.id();
     // Mirror the daemon's ring parameters so archive answers can be
     // compared bit-for-bit under any `[archive]` config.
-    let ainfo = client.archive_info(session)?;
+    let ainfo = sess.archive_info()?;
     let mut mirror =
         Mirror::new(ainfo.capacity as usize, ainfo.stride as usize)?;
     for step in 0..PROBE_STEPS {
         let want_recon = step == PROBE_STEPS - 1;
         let (loss, acts) = mirror.step(step)?;
-        let reply = client.ingest(session, loss, &acts, want_recon)?;
+        let reply = sess.ingest(loss, &acts, want_recon)?;
         ensure!(
             reply.engine_bytes == mirror.engine.memory() as u64,
             "engine bytes diverged at step {step}: remote {} local {}",
@@ -655,7 +841,7 @@ pub fn run_probe(addr: &str) -> Result<u64> {
             );
         }
     }
-    let remote = client.diagnose(session)?;
+    let remote = sess.diagnose()?;
     let local = mirror.hub.diagnose(mirror.id)?;
     ensure!(
         remote.diagnosis == local,
@@ -668,22 +854,20 @@ pub fn run_probe(addr: &str) -> Result<u64> {
         "steps_seen {} != {PROBE_STEPS}",
         remote.steps_seen
     );
-    verify_archive_queries(&mut client, session, &mirror, "probe")?;
-    let (stats, per_session) = client.stats()?;
-    ensure!(
-        stats.sessions >= 1 && stats.frames_served > 0,
-        "implausible daemon stats: {stats:?}"
-    );
-    let row = per_session
-        .iter()
-        .find(|s| s.id == session)
-        .context("probe session missing from stats")?;
+    verify_archive_queries(&mut sess, &mirror, "probe")?;
+    let row = sess.stats()?;
     ensure!(
         row.archive_intervals == mirror.archive.len() as u64
             && row.archive_bytes == mirror.archive.bytes() as u64,
         "stats archive counters diverged: {row:?}"
     );
-    let (path, bytes, sessions) = client.snapshot()?;
+    let stats = sess.client().stats()?;
+    ensure!(
+        stats.daemon.sessions >= 1 && stats.daemon.frames_served > 0,
+        "implausible daemon stats: {:?}",
+        stats.daemon
+    );
+    let (path, bytes, sessions) = sess.client().snapshot()?;
     println!(
         "probe: session={session} steps={} engine_bytes={} healthy={} \
          archive={}x{}B mirror=bit-for-bit-ok snapshot={path} ({bytes} B, \
@@ -711,7 +895,8 @@ pub fn run_probe_resume(addr: &str, session: u64) -> Result<()> {
         "daemon resumed {} sessions, expected >= 1",
         info.sessions
     );
-    let ainfo = client.archive_info(session)?;
+    let mut sess = client.session(session);
+    let ainfo = sess.archive_info()?;
     let mut mirror =
         Mirror::new(ainfo.capacity as usize, ainfo.stride as usize)?;
     for step in 0..PROBE_STEPS {
@@ -719,8 +904,8 @@ pub fn run_probe_resume(addr: &str, session: u64) -> Result<()> {
     }
     // Archive continuity across the restart: the restored ring answers
     // every query exactly as the pre-restart daemon would have.
-    verify_archive_queries(&mut client, session, &mirror, "probe-resume")?;
-    let remote = client.diagnose(session)?;
+    verify_archive_queries(&mut sess, &mirror, "probe-resume")?;
+    let remote = sess.diagnose()?;
     let local = mirror.hub.diagnose(mirror.id)?;
     ensure!(
         remote.diagnosis == local,
@@ -741,7 +926,7 @@ pub fn run_probe_resume(addr: &str, session: u64) -> Result<()> {
     );
     // The decisive warm-resume check: one more EMA step on both sides.
     let (loss, acts) = mirror.step(PROBE_STEPS)?;
-    let reply = client.ingest(session, loss, &acts, true)?;
+    let reply = sess.ingest(loss, &acts, true)?;
     let local_err = recon_errors(&mirror.engine, &acts)?;
     ensure!(
         reply.recon_err == local_err,
@@ -750,10 +935,8 @@ pub fn run_probe_resume(addr: &str, session: u64) -> Result<()> {
         local_err
     );
     // And recording continued seamlessly on the restored ring.
-    verify_archive_queries(&mut client, session, &mirror, "post-resume")?;
-    client
-        .close_session(session)
-        .context("closing probe session")?;
+    verify_archive_queries(&mut sess, &mirror, "post-resume")?;
+    sess.close().context("closing probe session")?;
     println!(
         "probe-resume: session={session} steps={} resumed warm \
          (diagnosis + reconstruction bit-for-bit, state diff 0)",

@@ -1,39 +1,50 @@
 //! The `sketchd` daemon: a multi-tenant sketch-monitoring service over
-//! TCP (std-only: `TcpListener` + scoped worker threads).
+//! TCP, served by a sharded nonblocking event loop (DESIGN.md §9).
 //!
-//! One daemon owns one [`MonitorHub`] plus a [`SketchEngine`] per remote
-//! session; clients multiplex through the length-prefixed binary
-//! protocol in [`super::proto`].  Responsibilities:
+//! One acceptor thread hands connections round-robin to N *shards*.
+//! Each shard is a thread running a readiness loop ([`super::poll`]:
+//! epoll on Linux, a portable hint-based fallback elsewhere) over its
+//! slice of connections, and owns a slice of the sessions: session id
+//! `s` lives on shard `s % N`, with per-shard strided id allocators
+//! (shard `k` mints `k, k+N, k+2N, ...`) so a session opened over a
+//! connection is owned by that connection's shard.  A request naming a
+//! session on another shard locks that shard's state — one lock at a
+//! time, never nested, so cross-shard requests are slower but can
+//! never deadlock.  Each shard also owns its own kernel [`Pool`] and
+//! its own [`ServeMetrics`]; daemon-wide views (`Stats`, `Metrics`,
+//! snapshots) aggregate across shards ([`MetricsState::merge`] is
+//! exact, so the loadgen frame/byte cross-checks still balance).
 //!
-//! * **Admission**: `OpenSession` beyond `max_sessions` gets `Busy`.
+//! Responsibilities (unchanged from the single-threaded daemon):
+//!
+//! * **Admission**: `OpenSession` beyond `max_sessions` gets `Busy`
+//!   (one global atomic admission counter across shards).
 //! * **Backpressure**: each session accrues its ingest payload bytes; a
 //!   tenant that streams more than `session_quota_bytes` without an
 //!   intervening `Diagnose` (the "consume your diagnostics" contract)
 //!   gets `Busy` until it does.  `Diagnose` drains the counter.
 //! * **Durability**: state snapshots to [`SnapshotStore`] on an
-//!   interval, on client request (`Snapshot`) and at shutdown; a daemon
-//!   restarted on the same snapshot path resumes every session warm
-//!   (engine `max_state_diff == 0`, detector verdicts identical).
+//!   interval, on client request (`Snapshot`) and at shutdown; the
+//!   snapshot format is unchanged (sessions sorted by id, one merged
+//!   metrics record), so pre-shard snapshots restore cleanly — ids
+//!   re-route to `id % N` and the merged metrics land on shard 0.
 //! * **History**: every ingest interval is (stride-sampled) recorded
 //!   into the session's [`SessionArchive`] ring; `QueryTrajectory` /
 //!   `QuerySimilarity` / `QueryDrift` / `ArchiveInfo` answer analytics
-//!   from it and `Stats` reports daemon/session counters.  The archive
-//!   rides in the snapshot, so query answers survive a warm restart
-//!   bit-exactly.
-//! * **Observability**: every handled frame's latency lands in a
-//!   lock-free [`ServeMetrics`] histogram (ingest/diagnose/query), with
-//!   counters for Busy rejections, bytes, sessions and snapshot pauses;
-//!   the v3 `Metrics` op serves the report and the lifetime pieces ride
-//!   in the snapshot.
+//!   from it and `Stats` reports daemon/session/shard counters.
+//! * **Observability**: every handled frame's latency lands in the
+//!   owning shard's lock-free [`ServeMetrics`] histograms; the v3
+//!   `Metrics` op serves the merged report, and the v4 `Stats` op adds
+//!   per-shard rows so skew across shards is visible.
 //!
 //! Sessions outlive connections: a client may disconnect and a later
 //! connection (or a daemon restart) continues the same session id.
 
 use std::collections::BTreeMap;
-use std::io::Read;
+use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicBool, Ordering};
-use std::sync::{Arc, Mutex, MutexGuard};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::thread;
 use std::time::{Duration, Instant};
 
@@ -48,15 +59,18 @@ use crate::sketch::{
 use crate::util::cli::Args;
 
 use super::codec::Enc;
-use super::metrics::ServeMetrics;
+use super::error::Error;
+use super::metrics::{MetricsState, ServeMetrics};
+use super::poll::{Event, Interest, Poller};
 use super::proto::{
-    self, monitor_config, ArchiveInfo, DaemonStats, ErrorCode, FrameHeader,
-    Request, Response, SessionStats, FRAME_HEADER_LEN, METRICS_MIN_VERSION,
-    PROTO_MIN_VERSION, PROTO_VERSION,
+    self, monitor_config, ArchiveInfo, DaemonStats, FrameHeader, Request,
+    Response, SessionStats, ShardStats, FRAME_HEADER_LEN,
+    METRICS_MIN_VERSION, PROTO_MIN_VERSION, PROTO_VERSION,
 };
 use super::store::{DaemonSnapshot, SessionRecord, SnapshotStore};
 
-/// Per-session sketch-side state (the monitor side lives in the hub).
+/// Per-session sketch-side state (the monitor side lives in the shard's
+/// hub).
 struct Tenant {
     engine: SketchEngine,
     /// Ingest payload bytes since the session's last `Diagnose`.
@@ -69,30 +83,56 @@ struct Tenant {
     archive: SessionArchive,
 }
 
+/// One shard's slice of the session space.
 struct State {
     hub: MonitorHub,
     tenants: BTreeMap<u64, Tenant>,
+}
+
+/// One connection shard: a slice of sessions behind its own lock, its
+/// own kernel pool and its own metrics.  Session `s` is owned by shard
+/// `s % shards.len()`.
+struct Shard {
+    state: Mutex<State>,
+    /// This shard's persistent worker pool: its tenant engines and its
+    /// hub's cross-tenant diagnosis fan out over these parked threads.
+    pool: Arc<Pool>,
+    /// Lock-free counters + latency histograms for work owned by this
+    /// shard.  The daemon-wide view is the exact merge across shards.
+    metrics: ServeMetrics,
+    /// Strided session-id allocator: shard `k` of `N` mints ids
+    /// `k, k+N, k+2N, ...`, so freshly opened sessions are owned by
+    /// the shard of the connection that opened them.
+    next_id: AtomicU64,
 }
 
 struct Shared {
     cfg: ServeConfig,
     /// Requested kernel fan-out width, resolved once at bind time.
     par: Parallelism,
-    /// The process-lifetime worker pool: every tenant engine and the
-    /// hub's cross-tenant diagnosis fan out over these same parked
-    /// threads, so per-request kernel work never pays a thread spawn.
-    pool: Arc<Pool>,
+    shards: Vec<Shard>,
     store: SnapshotStore,
-    state: Mutex<State>,
     shutdown: AtomicBool,
-    /// State changed since the last snapshot.  Only mutated while the
-    /// state lock is held, so `save_snapshot`'s capture-and-clear cannot
-    /// lose a concurrent mutation's mark.
+    /// State changed since the last snapshot.  Set under a shard lock
+    /// by every mutation; cleared by `save_snapshot` *before* capture,
+    /// so a mutation racing the capture either lands in the snapshot or
+    /// re-marks the flag for the next one.
     dirty: AtomicBool,
-    /// Lock-free observability counters + latency histograms, updated by
-    /// every connection thread outside the state lock. Lifetime pieces
-    /// ride in the snapshot; `frames_served` stays process-scoped.
-    metrics: ServeMetrics,
+    /// Global admission counter (sessions open across all shards).
+    sessions_open: AtomicU64,
+    /// Process start, for the merged report's `uptime_ms`.
+    started: Instant,
+}
+
+impl Shared {
+    fn n_shards(&self) -> u64 {
+        self.shards.len() as u64
+    }
+
+    /// The shard owning `session` (`session % N`).
+    fn owner(&self, session: u64) -> &Shard {
+        &self.shards[(session % self.n_shards()) as usize]
+    }
 }
 
 fn lock(state: &Mutex<State>) -> MutexGuard<'_, State> {
@@ -118,35 +158,21 @@ pub fn recon_errors(engine: &SketchEngine, acts: &[Mat]) -> Result<Vec<f64>> {
         .collect()
 }
 
-fn hub_error(e: HubError) -> Response {
-    let code = match e {
-        HubError::NoSuchSession(_) => ErrorCode::UnknownSession,
-        HubError::DuplicateSession(_) => ErrorCode::DuplicateSession,
-        HubError::SessionsExhausted => ErrorCode::SessionsExhausted,
-    };
-    Response::Error {
-        code,
-        message: e.to_string(),
-    }
-}
-
-fn invalid(message: String) -> Response {
-    Response::Error {
-        code: ErrorCode::Invalid,
-        message,
-    }
-}
-
-/// Build the durable snapshot under the state lock and write it out.
-/// The dirty flag is cleared at capture time *under the lock* (every
-/// mutation also happens under it, so no concurrent change's mark can
-/// be wiped) and re-set if the write fails, so un-persisted state is
-/// always retried at the next opportunity.
+/// Build the durable snapshot (shard by shard, one lock at a time) and
+/// write it out.  The dirty flag is cleared *before* capture: a
+/// mutation concurrent with the capture either happens-before its
+/// shard's lock (and is captured) or re-sets the flag afterwards (and
+/// is retried at the next opportunity).  The flag is re-set if the
+/// write fails.  Sessions are sorted by id and the per-shard metrics
+/// are merged into one record, so the snapshot format is byte-wise
+/// indistinguishable from the pre-shard daemon's.
 fn save_snapshot(shared: &Shared) -> Result<(u64, u64)> {
     let t0 = Instant::now();
-    let snap = {
-        let st = lock(&shared.state);
-        let mut sessions = Vec::with_capacity(st.hub.len());
+    shared.dirty.store(false, Ordering::SeqCst);
+    let mut sessions = Vec::new();
+    let mut metrics = MetricsState::default();
+    for shard in &shared.shards {
+        let st = lock(&shard.state);
         for s in st.hub.sessions() {
             let raw = s.id.raw();
             let tenant = st
@@ -162,18 +188,19 @@ fn save_snapshot(shared: &Shared) -> Result<(u64, u64)> {
                 archive: tenant.archive.state(),
             });
         }
-        shared.dirty.store(false, Ordering::SeqCst);
-        DaemonSnapshot {
-            sessions,
-            metrics: shared.metrics.state(),
-        }
-    };
+        drop(st);
+        metrics.merge(&shard.metrics.state());
+    }
+    sessions.sort_by_key(|r| r.session.id);
+    let snap = DaemonSnapshot { sessions, metrics };
     let count = snap.sessions.len() as u64;
     match shared.store.save(&snap) {
         Ok(bytes) => {
-            // Wall time of capture + write; the lock-held capture above
-            // is the slice that stalls concurrent ingest.
-            shared.metrics.note_snapshot(t0.elapsed());
+            // Wall time of capture + write; the per-shard lock-held
+            // captures are the slices that stall concurrent ingest.
+            // Snapshot accounting lives on shard 0 (where a restored
+            // merged record also lands).
+            shared.shards[0].metrics.note_snapshot(t0.elapsed());
             Ok((bytes, count))
         }
         Err(e) => {
@@ -183,34 +210,43 @@ fn save_snapshot(shared: &Shared) -> Result<(u64, u64)> {
     }
 }
 
+/// Handle one decoded request.  `home` is the shard of the connection
+/// the request arrived on: global ops (`OpenSession` admission Busy,
+/// `Hello`) account there, session-scoped ops account on — and lock —
+/// the owning shard.  At most one shard lock is held at any point.
 fn handle_request(
     shared: &Shared,
+    home: usize,
     req: Request,
     payload_len: usize,
-) -> Response {
+) -> Result<Response, Error> {
     match req {
-        Request::Hello { client: _ } => {
-            let st = lock(&shared.state);
-            Response::HelloOk {
-                server: concat!("sketchd/", env!("CARGO_PKG_VERSION"))
-                    .to_string(),
-                proto: PROTO_VERSION,
-                sessions: st.hub.len() as u64,
-                max_sessions: shared.cfg.max_sessions as u64,
-            }
-        }
+        Request::Hello { client: _ } => Ok(Response::HelloOk {
+            server: concat!("sketchd/", env!("CARGO_PKG_VERSION"))
+                .to_string(),
+            proto: PROTO_VERSION,
+            sessions: shared.sessions_open.load(Ordering::SeqCst),
+            max_sessions: shared.cfg.max_sessions as u64,
+        }),
         Request::OpenSession(spec) => {
-            let mut st = lock(&shared.state);
-            if st.hub.len() >= shared.cfg.max_sessions {
-                shared.metrics.note_busy_admission();
-                return Response::Busy {
-                    used: st.hub.len() as u64,
-                    limit: shared.cfg.max_sessions as u64,
-                };
+            let limit = shared.cfg.max_sessions as u64;
+            // Optimistic global admission: claim a slot, undo on any
+            // failure below.  `prev` is the pre-claim open count.
+            let prev =
+                shared.sessions_open.fetch_add(1, Ordering::SeqCst);
+            if prev >= limit {
+                shared.sessions_open.fetch_sub(1, Ordering::SeqCst);
+                shared.shards[home].metrics.note_busy_admission();
+                return Err(Error::Busy { used: prev, limit });
             }
+            let undo_admission = || {
+                shared.sessions_open.fetch_sub(1, Ordering::SeqCst);
+            };
             if spec.window == 0 {
-                return invalid("window must be > 0".into());
+                undo_admission();
+                return Err(Error::Invalid("window must be > 0".into()));
             }
+            let shard = &shared.shards[home];
             let engine = match SketchConfig::builder()
                 .layer_dims(&spec.layer_dims)
                 .rank(spec.rank)
@@ -219,23 +255,39 @@ fn handle_request(
                 .parallelism(shared.par)
                 .build()
             {
-                // All tenants share the daemon's process-lifetime pool.
+                // All of a shard's tenants share that shard's pool.
                 Ok(cfg) => {
-                    SketchEngine::with_pool(cfg, Arc::clone(&shared.pool))
+                    SketchEngine::with_pool(cfg, Arc::clone(&shard.pool))
                 }
-                Err(e) => return invalid(format!("bad session spec: {e}")),
+                Err(e) => {
+                    undo_admission();
+                    return Err(Error::Invalid(format!(
+                        "bad session spec: {e}"
+                    )));
+                }
             };
-            let id = match st.hub.register(
+            // Strided mint: the id is congruent to `home` mod N, so the
+            // opening connection's shard owns the session.
+            let raw = shard
+                .next_id
+                .fetch_add(shared.n_shards(), Ordering::SeqCst);
+            let mut st = lock(&shard.state);
+            let id = match st.hub.register_with_id(
+                raw,
                 &spec.name,
                 monitor_config(&spec),
                 spec.layer_dims.len(),
             ) {
                 Ok(id) => id,
-                Err(e) => return hub_error(e),
+                Err(e) => {
+                    drop(st);
+                    undo_admission();
+                    return Err(e.into());
+                }
             };
             let unit = engine.config().precision.bytes();
             st.tenants.insert(
-                id.raw(),
+                raw,
                 Tenant {
                     engine,
                     quota_used: 0,
@@ -249,8 +301,10 @@ fn handle_request(
                 },
             );
             shared.dirty.store(true, Ordering::SeqCst);
-            shared.metrics.note_session_open(st.hub.len() as u64);
-            Response::SessionOpened { session: id.raw() }
+            // Record the *global* open count, so the merged peak (a max
+            // across shards) is the true daemon-wide peak.
+            shard.metrics.note_session_open(prev + 1);
+            Ok(Response::SessionOpened { session: id.raw() })
         }
         Request::Ingest {
             session,
@@ -258,28 +312,28 @@ fn handle_request(
             want_recon,
             acts,
         } => {
-            let mut st = lock(&shared.state);
+            let shard = shared.owner(session);
+            let mut st = lock(&shard.state);
             let State { hub, tenants } = &mut *st;
             let id = SessionId::from_raw(session);
-            let tenant = match tenants.get_mut(&session) {
-                Some(t) => t,
-                None => return hub_error(HubError::NoSuchSession(id)),
-            };
+            let tenant = tenants
+                .get_mut(&session)
+                .ok_or(HubError::NoSuchSession(id))?;
             let quota = shared.cfg.session_quota_bytes as u64;
             if quota > 0 && tenant.quota_used + payload_len as u64 > quota {
                 tenant.busy_rejections += 1;
-                shared.metrics.note_busy_quota();
-                return Response::Busy {
+                shard.metrics.note_busy_quota();
+                return Err(Error::Busy {
                     used: tenant.quota_used,
                     limit: quota,
-                };
+                });
             }
-            if let Err(e) = tenant.engine.ingest(&acts) {
-                return invalid(format!("ingest rejected: {e}"));
-            }
+            tenant.engine.ingest(&acts).map_err(|e| {
+                Error::Invalid(format!("ingest rejected: {e}"))
+            })?;
             tenant.quota_used += payload_len as u64;
             tenant.ingest_bytes += payload_len as u64;
-            shared.metrics.note_ingest_bytes(payload_len as u64);
+            shard.metrics.note_ingest_bytes(payload_len as u64);
             // Archive this interval (ring-buffered, stride-sampled) and
             // push the ring's honest byte accounting into the hub.
             if tenant.archive.maybe_record(
@@ -288,54 +342,44 @@ fn handle_request(
                 tenant.engine.layers(),
             ) {
                 let archive_bytes = tenant.archive.bytes();
-                if let Err(e) = hub.report_archive_bytes(id, archive_bytes) {
-                    return hub_error(e);
-                }
+                hub.report_archive_bytes(id, archive_bytes)?;
             }
             let metrics = tenant.engine.metrics();
-            if let Err(e) = hub.observe(id, &step_metrics(loss, &metrics)) {
-                return hub_error(e);
-            }
+            hub.observe(id, &step_metrics(loss, &metrics))?;
             let engine_bytes = tenant.engine.memory();
-            if let Err(e) = hub.report_sketch_bytes(id, engine_bytes) {
-                return hub_error(e);
-            }
+            hub.report_sketch_bytes(id, engine_bytes)?;
             let recon_err = if want_recon {
-                match recon_errors(&tenant.engine, &acts) {
-                    Ok(v) => v,
-                    Err(e) => {
-                        return invalid(format!("reconstruction failed: {e}"))
-                    }
-                }
+                recon_errors(&tenant.engine, &acts).map_err(|e| {
+                    Error::Invalid(format!("reconstruction failed: {e}"))
+                })?
             } else {
                 Vec::new()
             };
             shared.dirty.store(true, Ordering::SeqCst);
-            Response::IngestOk {
+            Ok(Response::IngestOk {
                 batches: tenant.engine.batches_ingested(),
                 engine_bytes: engine_bytes as u64,
                 recon_err,
-            }
+            })
         }
         Request::Observe { session, metrics } => {
-            let mut st = lock(&shared.state);
+            let shard = shared.owner(session);
+            let mut st = lock(&shard.state);
             let id = SessionId::from_raw(session);
-            if let Err(e) = st.hub.observe(id, &metrics) {
-                return hub_error(e);
-            }
+            st.hub.observe(id, &metrics)?;
             shared.dirty.store(true, Ordering::SeqCst);
             let steps_seen =
                 st.hub.session(id).map(|s| s.steps_seen()).unwrap_or(0);
-            Response::ObserveOk { steps_seen }
+            Ok(Response::ObserveOk { steps_seen })
         }
         Request::Diagnose { session } => {
-            let mut st = lock(&shared.state);
+            let shard = shared.owner(session);
+            let mut st = lock(&shard.state);
             let id = SessionId::from_raw(session);
-            let (diagnosis, steps_seen, monitor_bytes) =
-                match st.hub.session(id) {
-                    Ok(s) => (s.diagnose(), s.steps_seen(), s.monitor_bytes()),
-                    Err(e) => return hub_error(e),
-                };
+            let (diagnosis, steps_seen, monitor_bytes) = {
+                let s = st.hub.session(id)?;
+                (s.diagnose(), s.steps_seen(), s.monitor_bytes())
+            };
             let engine_bytes = match st.tenants.get_mut(&session) {
                 Some(t) => {
                     // Diagnose is the tenant's check-in: drain the
@@ -346,146 +390,167 @@ fn handle_request(
                 None => 0,
             };
             let healthy = diagnosis.healthy();
-            Response::Diagnosis {
+            Ok(Response::Diagnosis {
                 diagnosis,
                 healthy,
                 steps_seen,
                 engine_bytes: engine_bytes as u64,
                 monitor_bytes: monitor_bytes as u64,
-            }
+            })
         }
         Request::Snapshot => match save_snapshot(shared) {
-            Ok((bytes, sessions)) => Response::SnapshotOk {
+            Ok((bytes, sessions)) => Ok(Response::SnapshotOk {
                 path: shared.cfg.snapshot_path.clone(),
                 bytes,
                 sessions,
-            },
-            Err(e) => Response::Error {
-                code: ErrorCode::Internal,
-                message: format!("snapshot failed: {e:#}"),
-            },
+            }),
+            Err(e) => {
+                Err(Error::Internal(format!("snapshot failed: {e:#}")))
+            }
         },
         Request::Close { session } => {
-            let mut st = lock(&shared.state);
+            let shard = shared.owner(session);
+            let mut st = lock(&shard.state);
             let id = SessionId::from_raw(session);
-            if let Err(e) = st.hub.deregister(id) {
-                return hub_error(e);
-            }
+            st.hub.deregister(id)?;
             st.tenants.remove(&session);
             shared.dirty.store(true, Ordering::SeqCst);
-            Response::Closed { session }
+            drop(st);
+            shared.sessions_open.fetch_sub(1, Ordering::SeqCst);
+            Ok(Response::Closed { session })
         }
         Request::Shutdown => {
-            let sessions = match save_snapshot(shared) {
-                Ok((_, n)) => n,
-                Err(e) => {
-                    return Response::Error {
-                        code: ErrorCode::Internal,
-                        message: format!("shutdown snapshot failed: {e:#}"),
-                    }
-                }
-            };
+            let sessions = save_snapshot(shared).map_err(|e| {
+                Error::Internal(format!("shutdown snapshot failed: {e:#}"))
+            })?;
             shared.shutdown.store(true, Ordering::SeqCst);
-            Response::ShutdownOk { sessions }
+            Ok(Response::ShutdownOk {
+                sessions: sessions.1,
+            })
         }
         Request::Stats => {
-            let st = lock(&shared.state);
+            let quota_limit = shared.cfg.session_quota_bytes as u64;
             let mut daemon = DaemonStats {
-                sessions: st.hub.len() as u64,
+                sessions: shared.sessions_open.load(Ordering::SeqCst),
                 max_sessions: shared.cfg.max_sessions as u64,
-                frames_served: shared.metrics.frames_served(),
-                busy_rejections: shared.metrics.busy_total(),
+                shards: shared.n_shards(),
                 ..DaemonStats::default()
             };
-            let quota_limit = shared.cfg.session_quota_bytes as u64;
-            let mut sessions = Vec::with_capacity(st.hub.len());
-            for s in st.hub.sessions() {
-                let raw = s.id.raw();
-                let (ingest, ar_bytes, ar_n, busy, quota_used) =
-                    match st.tenants.get(&raw) {
-                        Some(t) => (
-                            t.ingest_bytes,
-                            t.archive.bytes() as u64,
-                            t.archive.len() as u64,
-                            t.busy_rejections,
-                            t.quota_used,
-                        ),
-                        None => (0, 0, 0, 0, 0),
-                    };
-                daemon.ingest_bytes += ingest;
-                daemon.archive_bytes += ar_bytes;
-                sessions.push(SessionStats {
-                    id: raw,
-                    name: s.name.clone(),
-                    steps_seen: s.steps_seen(),
-                    ingest_bytes: ingest,
-                    archive_bytes: ar_bytes,
-                    archive_intervals: ar_n,
-                    busy_rejections: busy,
-                    quota_used,
-                    quota_limit,
+            let mut sessions = Vec::new();
+            let mut shard_rows = Vec::with_capacity(shared.shards.len());
+            for (i, shard) in shared.shards.iter().enumerate() {
+                let st = lock(&shard.state);
+                for s in st.hub.sessions() {
+                    let raw = s.id.raw();
+                    let (ingest, ar_bytes, ar_n, busy, quota_used) =
+                        match st.tenants.get(&raw) {
+                            Some(t) => (
+                                t.ingest_bytes,
+                                t.archive.bytes() as u64,
+                                t.archive.len() as u64,
+                                t.busy_rejections,
+                                t.quota_used,
+                            ),
+                            None => (0, 0, 0, 0, 0),
+                        };
+                    daemon.ingest_bytes += ingest;
+                    daemon.archive_bytes += ar_bytes;
+                    sessions.push(SessionStats {
+                        id: raw,
+                        name: s.name.clone(),
+                        steps_seen: s.steps_seen(),
+                        ingest_bytes: ingest,
+                        archive_bytes: ar_bytes,
+                        archive_intervals: ar_n,
+                        busy_rejections: busy,
+                        quota_used,
+                        quota_limit,
+                    });
+                }
+                let shard_sessions = st.hub.len() as u64;
+                drop(st);
+                let ms = shard.metrics.state();
+                let frames = shard.metrics.frames_served();
+                daemon.frames_served += frames;
+                daemon.busy_rejections += shard.metrics.busy_total();
+                shard_rows.push(ShardStats {
+                    shard: i as u64,
+                    sessions: shard_sessions,
+                    ingest_frames: ms.ingest.count,
+                    ingest_bytes: ms.ingest_bytes,
+                    ingest_p50_ns: ms.ingest.quantile(0.5) as u64,
+                    ingest_p99_ns: ms.ingest.quantile(0.99) as u64,
+                    frames_served: frames,
                 });
             }
-            Response::StatsOk { daemon, sessions }
+            // Shards interleave the id space; present rows in global
+            // session-id order as the protocol documents.
+            sessions.sort_by_key(|s| s.id);
+            Ok(Response::StatsOk {
+                daemon,
+                sessions,
+                shards: shard_rows,
+            })
         }
         Request::Metrics => {
-            let open = lock(&shared.state).hub.len() as u64;
-            Response::MetricsOk(shared.metrics.report(open))
+            let mut state = MetricsState::default();
+            let mut frames_served = 0u64;
+            for shard in &shared.shards {
+                state.merge(&shard.metrics.state());
+                frames_served += shard.metrics.frames_served();
+            }
+            let open = shared.sessions_open.load(Ordering::SeqCst);
+            Ok(Response::MetricsOk(state.into_report(
+                shared.started.elapsed().as_millis() as u64,
+                open,
+                frames_served,
+            )))
         }
         Request::QueryTrajectory { session } => {
-            let st = lock(&shared.state);
+            let st = lock(&shared.owner(session).state);
             match st.tenants.get(&session) {
-                Some(t) => Response::Trajectory {
+                Some(t) => Ok(Response::Trajectory {
                     points: t.archive.trajectory(),
-                },
-                None => hub_error(HubError::NoSuchSession(
-                    SessionId::from_raw(session),
-                )),
+                }),
+                None => Err(HubError::NoSuchSession(SessionId::from_raw(
+                    session,
+                ))
+                .into()),
             }
         }
         Request::QuerySimilarity { session, layer } => {
-            let st = lock(&shared.state);
-            let tenant = match st.tenants.get(&session) {
-                Some(t) => t,
-                None => {
-                    return hub_error(HubError::NoSuchSession(
-                        SessionId::from_raw(session),
-                    ))
-                }
-            };
+            let st = lock(&shared.owner(session).state);
+            let tenant = st.tenants.get(&session).ok_or_else(|| {
+                HubError::NoSuchSession(SessionId::from_raw(session))
+            })?;
             if layer >= tenant.engine.n_layers() {
-                return invalid(format!(
+                return Err(Error::Invalid(format!(
                     "layer {layer} out of range (session has {} layers)",
                     tenant.engine.n_layers()
-                ));
+                )));
             }
             let (steps, sim) = tenant.archive.similarity(layer);
-            Response::Similarity { steps, sim }
+            Ok(Response::Similarity { steps, sim })
         }
         Request::QueryDrift { session, layer } => {
-            let st = lock(&shared.state);
-            let tenant = match st.tenants.get(&session) {
-                Some(t) => t,
-                None => {
-                    return hub_error(HubError::NoSuchSession(
-                        SessionId::from_raw(session),
-                    ))
-                }
-            };
+            let st = lock(&shared.owner(session).state);
+            let tenant = st.tenants.get(&session).ok_or_else(|| {
+                HubError::NoSuchSession(SessionId::from_raw(session))
+            })?;
             if layer >= tenant.engine.n_layers() {
-                return invalid(format!(
+                return Err(Error::Invalid(format!(
                     "layer {layer} out of range (session has {} layers)",
                     tenant.engine.n_layers()
-                ));
+                )));
             }
-            Response::Drift {
+            Ok(Response::Drift {
                 points: tenant.archive.drift(layer),
-            }
+            })
         }
         Request::ArchiveInfo { session } => {
-            let st = lock(&shared.state);
+            let st = lock(&shared.owner(session).state);
             match st.tenants.get(&session) {
-                Some(t) => Response::ArchiveInfoOk(ArchiveInfo {
+                Some(t) => Ok(Response::ArchiveInfoOk(ArchiveInfo {
                     capacity: t.archive.capacity() as u64,
                     stride: t.archive.stride() as u64,
                     intervals: t.archive.len() as u64,
@@ -497,159 +562,373 @@ fn handle_request(
                         .archive
                         .get(t.archive.len().wrapping_sub(1))
                         .map_or(0, |r| r.step),
-                }),
-                None => hub_error(HubError::NoSuchSession(
-                    SessionId::from_raw(session),
-                )),
+                })),
+                None => Err(HubError::NoSuchSession(SessionId::from_raw(
+                    session,
+                ))
+                .into()),
             }
         }
     }
 }
 
-/// Read one frame into the connection's reusable `payload` buffer,
-/// tolerating idle read timeouts: a timeout before any header byte just
-/// polls the shutdown flag; a timeout mid-frame keeps reading (the
-/// client is mid-send).  `Ok(None)` = clean EOF/shutdown.
-fn read_frame_idle(
-    stream: &mut TcpStream,
-    shutdown: &AtomicBool,
-    payload: &mut Vec<u8>,
-) -> Result<Option<FrameHeader>> {
-    let mut hdr = [0u8; FRAME_HEADER_LEN];
-    let mut got = 0usize;
-    while got < hdr.len() {
-        if shutdown.load(Ordering::SeqCst) {
-            return Ok(None);
+/// The shard whose metrics should record a request's handle latency:
+/// the owning shard for session-scoped ops, the connection's shard for
+/// global ops.
+fn metrics_shard(shared: &Shared, home: usize, req: &Request) -> usize {
+    let session = match req {
+        Request::Ingest { session, .. }
+        | Request::Observe { session, .. }
+        | Request::Diagnose { session }
+        | Request::QueryTrajectory { session }
+        | Request::QuerySimilarity { session, .. }
+        | Request::QueryDrift { session, .. }
+        | Request::ArchiveInfo { session } => *session,
+        _ => return home,
+    };
+    (session % shared.n_shards()) as usize
+}
+
+/// Staged-read outcome for one nonblocking read pass.
+enum ReadStep {
+    /// A complete frame is staged in `hdr`/`payload`.
+    Frame,
+    /// Out of bytes for now; revisit on the next readiness event.
+    NotReady,
+    /// EOF, unrecoverable transport error, or untrusted framing.
+    Closed,
+}
+
+/// One nonblocking connection owned by a shard's event loop.
+struct Conn {
+    stream: TcpStream,
+    hdr: [u8; FRAME_HEADER_LEN],
+    hdr_got: usize,
+    header: Option<FrameHeader>,
+    payload: Vec<u8>,
+    payload_got: usize,
+    /// Outbound bytes not yet accepted by the kernel (`out_pos` is the
+    /// flushed prefix).
+    out: Vec<u8>,
+    out_pos: usize,
+    /// Reply queued for a fatal protocol error: close once flushed.
+    close_after_flush: bool,
+    /// Whether the poller registration currently includes writability.
+    interest_rw: bool,
+    enc: Enc,
+    frame: Vec<u8>,
+}
+
+impl Conn {
+    fn new(stream: TcpStream) -> Conn {
+        Conn {
+            stream,
+            hdr: [0u8; FRAME_HEADER_LEN],
+            hdr_got: 0,
+            header: None,
+            payload: Vec::new(),
+            payload_got: 0,
+            out: Vec::new(),
+            out_pos: 0,
+            close_after_flush: false,
+            interest_rw: false,
+            enc: Enc::new(),
+            frame: Vec::new(),
         }
-        match stream.read(&mut hdr[got..]) {
-            Ok(0) => {
-                if got == 0 {
-                    return Ok(None);
+    }
+
+    fn out_is_empty(&self) -> bool {
+        self.out_pos >= self.out.len()
+    }
+
+    /// Advance the staged read as far as the socket allows.
+    fn read_step(&mut self) -> ReadStep {
+        if self.header.is_none() {
+            while self.hdr_got < FRAME_HEADER_LEN {
+                match self.stream.read(&mut self.hdr[self.hdr_got..]) {
+                    Ok(0) => return ReadStep::Closed,
+                    Ok(n) => self.hdr_got += n,
+                    Err(e)
+                        if e.kind() == io::ErrorKind::Interrupted => {}
+                    Err(e)
+                        if e.kind() == io::ErrorKind::WouldBlock =>
+                    {
+                        return ReadStep::NotReady
+                    }
+                    Err(_) => return ReadStep::Closed,
                 }
-                anyhow::bail!("connection closed mid-header");
             }
-            Ok(n) => got += n,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                        | std::io::ErrorKind::Interrupted
-                ) => {}
-            Err(e) => return Err(e.into()),
+            match FrameHeader::parse(&self.hdr) {
+                Ok(h) => {
+                    self.payload.clear();
+                    self.payload.resize(h.len as usize, 0);
+                    self.payload_got = 0;
+                    self.header = Some(h);
+                }
+                // Bad magic / oversized length: framing can't be
+                // trusted, so no reply is possible — drop the peer.
+                Err(_) => return ReadStep::Closed,
+            }
         }
+        while self.payload_got < self.payload.len() {
+            match self.stream.read(&mut self.payload[self.payload_got..]) {
+                Ok(0) => return ReadStep::Closed,
+                Ok(n) => self.payload_got += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                    return ReadStep::NotReady
+                }
+                Err(_) => return ReadStep::Closed,
+            }
+        }
+        ReadStep::Frame
     }
-    let header = FrameHeader::parse(&hdr)?;
-    payload.clear();
-    payload.resize(header.len as usize, 0);
-    let mut got = 0usize;
-    while got < payload.len() {
-        if shutdown.load(Ordering::SeqCst) {
-            return Ok(None);
-        }
-        match stream.read(&mut payload[got..]) {
-            Ok(0) => anyhow::bail!("connection closed mid-payload"),
-            Ok(n) => got += n,
-            Err(e)
-                if matches!(
-                    e.kind(),
-                    std::io::ErrorKind::WouldBlock
-                        | std::io::ErrorKind::TimedOut
-                        | std::io::ErrorKind::Interrupted
-                ) => {}
-            Err(e) => return Err(e.into()),
-        }
+
+    /// Consume the staged header (the payload stays readable until the
+    /// next `read_step` begins a new frame).
+    fn take_header(&mut self) -> FrameHeader {
+        self.hdr_got = 0;
+        self.header.take().expect("take_header without staged frame")
     }
-    Ok(Some(header))
+
+    /// Push queued bytes into the kernel until done or `WouldBlock`.
+    fn flush(&mut self) -> io::Result<()> {
+        while self.out_pos < self.out.len() {
+            match self.stream.write(&self.out[self.out_pos..]) {
+                Ok(0) => {
+                    return Err(io::Error::from(io::ErrorKind::WriteZero))
+                }
+                Ok(n) => self.out_pos += n,
+                Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+                Err(e) if e.kind() == io::ErrorKind::WouldBlock => break,
+                Err(e) => return Err(e),
+            }
+        }
+        if self.out_pos >= self.out.len() {
+            self.out.clear();
+            self.out_pos = 0;
+        }
+        Ok(())
+    }
 }
 
-fn handle_conn(mut stream: TcpStream, shared: &Shared) {
-    let _ = stream.set_nodelay(true);
-    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
-    // Per-connection reusable buffers: request payloads land in
-    // `payload`, responses are encoded into `enc` and framed through
-    // `frame`, so a long-lived client's steady-state traffic allocates
-    // no fresh buffers per frame.
-    let mut payload = Vec::new();
-    let mut enc = Enc::new();
-    let mut frame = Vec::new();
+/// Decode, dispatch and encode one staged frame; the reply is appended
+/// to `conn.out` (not yet flushed).  `Ok(fatal)` tells the caller
+/// whether the connection must close once the reply drains; `Err(())`
+/// means the reply could not even be framed (oversized) and the
+/// connection should drop.
+fn process_frame(
+    shared: &Shared,
+    home: usize,
+    conn: &mut Conn,
+    header: FrameHeader,
+) -> std::result::Result<bool, ()> {
+    let version_ok =
+        (PROTO_MIN_VERSION..=PROTO_VERSION).contains(&header.version);
+    let outcome: std::result::Result<Response, Error> = if !version_ok {
+        Err(Error::UnsupportedVersion(format!(
+            "server speaks proto v{PROTO_MIN_VERSION}..v{PROTO_VERSION}, \
+             frame is v{}",
+            header.version
+        )))
+    } else if header.msg == proto::msg::METRICS
+        && header.version < METRICS_MIN_VERSION
+    {
+        Err(Error::UnsupportedVersion(format!(
+            "Metrics requires proto v{METRICS_MIN_VERSION}, frame is v{}",
+            header.version
+        )))
+    } else {
+        match Request::decode(header.msg, &conn.payload) {
+            Ok(req) => {
+                let shard = metrics_shard(shared, home, &req);
+                let t0 = Instant::now();
+                let r =
+                    handle_request(shared, home, req, conn.payload.len());
+                shared.shards[shard]
+                    .metrics
+                    .observe_request(header.msg, t0.elapsed());
+                r
+            }
+            Err(e) => Err(Error::BadFrame(e.to_string())),
+        }
+    };
+    let (resp, fatal) = match outcome {
+        Ok(r) => (r, false),
+        Err(e) => {
+            let fatal = e.is_fatal();
+            (e.response(), fatal)
+        }
+    };
+    // Echo the request's version on the reply (clamped into range for
+    // rejections of out-of-range frames) so version-gated response
+    // fields match what the peer can decode.
+    let reply_version =
+        header.version.clamp(PROTO_MIN_VERSION, PROTO_VERSION);
+    conn.enc.reset();
+    resp.encode_into_v(&mut conn.enc, reply_version);
+    if proto::write_frame_versioned_reusing(
+        &mut conn.out,
+        reply_version,
+        resp.msg_type(),
+        conn.enc.bytes(),
+        &mut conn.frame,
+    )
+    .is_err()
+    {
+        return Err(());
+    }
+    shared.shards[home].metrics.note_frame_served();
+    Ok(fatal)
+}
+
+/// Service a readable connection: read frames until the socket runs
+/// dry, handling each complete frame as it lands.  Returns whether the
+/// connection stays alive.
+fn service_readable(shared: &Shared, home: usize, conn: &mut Conn) -> bool {
     loop {
-        let header = match read_frame_idle(
-            &mut stream,
-            &shared.shutdown,
-            &mut payload,
-        ) {
-            Ok(Some(h)) => h,
-            Ok(None) | Err(_) => return,
-        };
-        let version_ok = (PROTO_MIN_VERSION..=PROTO_VERSION)
-            .contains(&header.version);
-        let resp = if !version_ok {
-            Response::Error {
-                code: ErrorCode::UnsupportedVersion,
-                message: format!(
-                    "server speaks proto v{PROTO_MIN_VERSION}..v{PROTO_VERSION}, \
-                     frame is v{}",
-                    header.version
-                ),
-            }
-        } else if header.msg == proto::msg::METRICS
-            && header.version < METRICS_MIN_VERSION
-        {
-            Response::Error {
-                code: ErrorCode::UnsupportedVersion,
-                message: format!(
-                    "Metrics requires proto v{METRICS_MIN_VERSION}, \
-                     frame is v{}",
-                    header.version
-                ),
-            }
-        } else {
-            match Request::decode(header.msg, &payload) {
-                Ok(req) => {
-                    let t0 = Instant::now();
-                    let resp = handle_request(shared, req, payload.len());
-                    shared.metrics.observe_request(header.msg, t0.elapsed());
-                    resp
+        match conn.read_step() {
+            ReadStep::Frame => {
+                let header = conn.take_header();
+                match process_frame(shared, home, conn, header) {
+                    Ok(fatal) => {
+                        if conn.flush().is_err() {
+                            return false;
+                        }
+                        if fatal {
+                            conn.close_after_flush = true;
+                            // Keep the conn only if the goodbye reply
+                            // still needs draining.
+                            return !conn.out_is_empty();
+                        }
+                        if shared.shutdown.load(Ordering::SeqCst) {
+                            // Stop consuming requests; the shard loop
+                            // drains pending replies and exits.
+                            return true;
+                        }
+                    }
+                    Err(()) => return false,
                 }
-                Err(e) => Response::Error {
-                    code: ErrorCode::BadFrame,
-                    message: e.to_string(),
-                },
             }
-        };
-        let fatal = matches!(
-            resp,
-            Response::Error {
-                code: ErrorCode::UnsupportedVersion | ErrorCode::BadFrame,
-                ..
-            }
-        );
-        // Echo the request's version on the reply (clamped into range for
-        // rejections of out-of-range frames) so version-gated response
-        // fields match what the peer can decode.
-        let reply_version =
-            header.version.clamp(PROTO_MIN_VERSION, PROTO_VERSION);
-        enc.reset();
-        resp.encode_into_v(&mut enc, reply_version);
-        if proto::write_frame_versioned_reusing(
-            &mut stream,
-            reply_version,
-            resp.msg_type(),
-            enc.bytes(),
-            &mut frame,
-        )
-        .is_err()
-        {
+            ReadStep::NotReady => return true,
+            ReadStep::Closed => return false,
+        }
+    }
+}
+
+/// One shard's event loop: admit connections from the acceptor, wait
+/// for readiness, and service reads/writes nonblockingly.  The poller
+/// is treated as a *hint* source (level-triggered epoll or the
+/// portable fallback): a spurious "ready" just costs one `WouldBlock`.
+fn shard_loop(shared: &Shared, home: usize, rx: mpsc::Receiver<TcpStream>) {
+    let mut poller = match Poller::new() {
+        Ok(p) => p,
+        Err(e) => {
+            eprintln!("sketchd: shard {home}: poller init failed: {e}");
             return;
         }
-        shared.metrics.note_frame_served();
-        if fatal {
-            return;
+    };
+    let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
+    let mut next_token: u64 = 1;
+    let mut events: Vec<Event> = Vec::new();
+    let mut dead: Vec<u64> = Vec::new();
+    loop {
+        // Admit handed-off connections.
+        loop {
+            match rx.try_recv() {
+                Ok(stream) => {
+                    if stream.set_nonblocking(true).is_err() {
+                        continue;
+                    }
+                    let _ = stream.set_nodelay(true);
+                    let token = next_token;
+                    next_token += 1;
+                    if poller
+                        .register(&stream, token, Interest::READ)
+                        .is_err()
+                    {
+                        continue;
+                    }
+                    conns.insert(token, Conn::new(stream));
+                }
+                Err(mpsc::TryRecvError::Empty)
+                | Err(mpsc::TryRecvError::Disconnected) => break,
+            }
         }
         if shared.shutdown.load(Ordering::SeqCst) {
-            return;
+            break;
         }
+        if poller.wait(&mut events, 20).is_err() {
+            thread::sleep(Duration::from_millis(5));
+            continue;
+        }
+        dead.clear();
+        for ev in &events {
+            let conn = match conns.get_mut(&ev.token) {
+                Some(c) => c,
+                None => continue,
+            };
+            let mut alive = true;
+            if ev.writable && conn.flush().is_err() {
+                alive = false;
+            }
+            if alive && ev.readable {
+                alive = service_readable(shared, home, conn);
+            }
+            if alive && ev.closed && !ev.readable {
+                // Peer hung up with nothing left to read.
+                alive = false;
+            }
+            if alive && conn.close_after_flush && conn.out_is_empty() {
+                alive = false;
+            }
+            if alive {
+                // Ask for writability only while bytes are queued.
+                let want_rw = !conn.out_is_empty();
+                if want_rw != conn.interest_rw {
+                    let interest = if want_rw {
+                        Interest::READ_WRITE
+                    } else {
+                        Interest::READ
+                    };
+                    if poller
+                        .modify(&conn.stream, ev.token, interest)
+                        .is_ok()
+                    {
+                        conn.interest_rw = want_rw;
+                    }
+                }
+            } else {
+                dead.push(ev.token);
+            }
+        }
+        for &token in &dead {
+            if let Some(conn) = conns.remove(&token) {
+                // Deregister while the fd is still open, then drop.
+                let _ = poller.deregister(&conn.stream, token);
+            }
+        }
+    }
+    // Shutdown: bounded grace to drain queued replies (e.g. the
+    // ShutdownOk that triggered this) before dropping connections.
+    let deadline = Instant::now() + Duration::from_millis(500);
+    loop {
+        let mut pending = false;
+        for conn in conns.values_mut() {
+            if conn.out_is_empty() {
+                continue;
+            }
+            if conn.flush().is_err() {
+                conn.out.clear();
+                conn.out_pos = 0;
+            } else if !conn.out_is_empty() {
+                pending = true;
+            }
+        }
+        if !pending || Instant::now() >= deadline {
+            break;
+        }
+        thread::sleep(Duration::from_millis(5));
     }
 }
 
@@ -662,8 +941,10 @@ pub struct Daemon {
 }
 
 impl Daemon {
-    /// Bind the listen socket and, if a snapshot exists at
-    /// `cfg.snapshot_path`, restore every session from it.
+    /// Bind the listen socket, build the shards and, if a snapshot
+    /// exists at `cfg.snapshot_path`, restore every session from it
+    /// (session `s` routes to shard `s % shards`; the merged metrics
+    /// record restores into shard 0).
     pub fn bind(cfg: ServeConfig) -> Result<Daemon> {
         cfg.validate()?;
         let listener = TcpListener::bind(&cfg.addr)
@@ -671,31 +952,43 @@ impl Daemon {
         listener.set_nonblocking(true)?;
         let store = SnapshotStore::new(cfg.snapshot_path.clone());
         let par = Parallelism::from_threads(resolve_threads(cfg.threads));
-        let pool = Pool::new(par);
-        let mut state = State {
-            hub: MonitorHub::with_pool(Arc::clone(&pool)),
-            tenants: BTreeMap::new(),
-        };
-        let metrics = ServeMetrics::new();
-        if let Some(snap) = store
-            .load()
-            .with_context(|| format!("loading snapshot {}", cfg.snapshot_path))?
-        {
+        let n_shards = cfg.shards.max(1);
+        let mut shards = Vec::with_capacity(n_shards);
+        for s in 0..n_shards {
+            let pool = Pool::new(par);
+            shards.push(Shard {
+                state: Mutex::new(State {
+                    hub: MonitorHub::with_pool(Arc::clone(&pool)),
+                    tenants: BTreeMap::new(),
+                }),
+                pool,
+                metrics: ServeMetrics::new(),
+                next_id: AtomicU64::new(s as u64),
+            });
+        }
+        let mut restored = 0u64;
+        if let Some(snap) = store.load().with_context(|| {
+            format!("loading snapshot {}", cfg.snapshot_path)
+        })? {
             // Lifetime observability counters resume where the snapshot
-            // left them (uptime + frames_served stay process-scoped).
-            metrics.restore(&snap.metrics);
+            // left them; the (merged) record lands on shard 0, keeping
+            // the cross-shard totals exact.
+            shards[0].metrics.restore(&snap.metrics);
             for rec in &snap.sessions {
-                let id = state.hub.restore_session(&rec.session)?;
+                let shard =
+                    &shards[(rec.session.id % n_shards as u64) as usize];
+                let mut st = lock(&shard.state);
+                let id = st.hub.restore_session(&rec.session)?;
                 let archive = SessionArchive::from_state(&rec.archive);
                 // The hub does not persist archive accounting; re-derive
                 // it from the restored ring.
-                state.hub.report_archive_bytes(id, archive.bytes())?;
-                state.tenants.insert(
+                st.hub.report_archive_bytes(id, archive.bytes())?;
+                st.tenants.insert(
                     rec.session.id,
                     Tenant {
                         engine: SketchEngine::from_snapshot_with_pool(
                             &rec.engine,
-                            Arc::clone(&pool),
+                            Arc::clone(&shard.pool),
                         )?,
                         quota_used: rec.quota_used,
                         ingest_bytes: rec.ingest_bytes,
@@ -703,6 +996,14 @@ impl Daemon {
                         archive,
                     },
                 );
+                drop(st);
+                // Advance the strided allocator past the restored id
+                // (pre-shard snapshots have dense ids; `id + N` keeps
+                // the id ≡ shard (mod N) invariant).
+                shard
+                    .next_id
+                    .fetch_max(rec.session.id + n_shards as u64, Ordering::SeqCst);
+                restored += 1;
             }
         }
         Ok(Daemon {
@@ -710,12 +1011,12 @@ impl Daemon {
             shared: Arc::new(Shared {
                 cfg,
                 par,
-                pool,
+                shards,
                 store,
-                state: Mutex::new(state),
                 shutdown: AtomicBool::new(false),
                 dirty: AtomicBool::new(false),
-                metrics,
+                sessions_open: AtomicU64::new(restored),
+                started: Instant::now(),
             }),
         })
     }
@@ -724,17 +1025,43 @@ impl Daemon {
         Ok(self.listener.local_addr()?)
     }
 
-    /// Sessions currently held (restored + live).
+    /// Sessions currently held (restored + live) across all shards.
     pub fn session_count(&self) -> usize {
-        lock(&self.shared.state).hub.len()
+        self.shared.sessions_open.load(Ordering::SeqCst) as usize
+    }
+
+    /// Connection shards this daemon serves with.
+    pub fn shard_count(&self) -> usize {
+        self.shared.shards.len()
     }
 
     /// Serve until the shutdown flag is set (by a `Shutdown` frame or a
     /// [`DaemonHandle`]), then write a final snapshot if state changed.
     pub fn run(self) -> Result<()> {
         let shared: &Shared = &self.shared;
+        let n = shared.shards.len();
         let mut last_snapshot = Instant::now();
         thread::scope(|s| {
+            let mut senders = Vec::with_capacity(n);
+            for home in 0..n {
+                let (tx, rx) = mpsc::channel::<TcpStream>();
+                senders.push(tx);
+                s.spawn(move || shard_loop(shared, home, rx));
+            }
+            // Event-driven accept when the poller is available; plain
+            // paced accept otherwise.
+            let mut poller = Poller::new().ok();
+            let registered = match poller.as_mut() {
+                Some(p) => p
+                    .register(&self.listener, 0, Interest::READ)
+                    .is_ok(),
+                None => false,
+            };
+            if !registered {
+                poller = None;
+            }
+            let mut events: Vec<Event> = Vec::new();
+            let mut next = 0usize;
             loop {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     break;
@@ -745,26 +1072,41 @@ impl Daemon {
                 {
                     if shared.dirty.load(Ordering::SeqCst) {
                         if let Err(e) = save_snapshot(shared) {
-                            eprintln!("sketchd: periodic snapshot failed: {e:#}");
+                            eprintln!(
+                                "sketchd: periodic snapshot failed: {e:#}"
+                            );
                         }
                     }
                     last_snapshot = Instant::now();
                 }
-                match self.listener.accept() {
-                    Ok((stream, _peer)) => {
-                        s.spawn(move || handle_conn(stream, shared));
+                match poller.as_mut() {
+                    Some(p) => {
+                        let _ = p.wait(&mut events, 50);
                     }
-                    Err(e)
-                        if e.kind() == std::io::ErrorKind::WouldBlock =>
-                    {
-                        thread::sleep(Duration::from_millis(10));
-                    }
-                    Err(e) => {
-                        eprintln!("sketchd: accept failed: {e}");
-                        thread::sleep(Duration::from_millis(50));
+                    None => thread::sleep(Duration::from_millis(10)),
+                }
+                loop {
+                    match self.listener.accept() {
+                        Ok((stream, _peer)) => {
+                            // Round-robin hand-off to the shards.
+                            let _ = senders[next % n].send(stream);
+                            next = next.wrapping_add(1);
+                        }
+                        Err(e)
+                            if e.kind()
+                                == std::io::ErrorKind::WouldBlock =>
+                        {
+                            break;
+                        }
+                        Err(e) => {
+                            eprintln!("sketchd: accept failed: {e}");
+                            thread::sleep(Duration::from_millis(50));
+                            break;
+                        }
                     }
                 }
             }
+            drop(senders);
         });
         if shared.dirty.load(Ordering::SeqCst) {
             save_snapshot(shared)?;
@@ -821,6 +1163,7 @@ pub fn serve_from_args(args: &mut Args) -> Result<()> {
         args.opt_usize("quota", cfg.session_quota_bytes)?;
     cfg.snapshot_path = args.opt_or("snapshot-path", &cfg.snapshot_path);
     cfg.threads = resolve_threads(args.opt_usize("threads", cfg.threads)?);
+    cfg.shards = resolve_threads(args.opt_usize("shards", cfg.shards)?);
     cfg.archive.capacity =
         args.opt_usize("archive-capacity", cfg.archive.capacity)?;
     cfg.archive.stride =
@@ -829,9 +1172,11 @@ pub fn serve_from_args(args: &mut Args) -> Result<()> {
 
     let daemon = Daemon::bind(cfg)?;
     println!(
-        "sketchd listening on {} ({} resumed sessions, snapshots -> {})",
+        "sketchd listening on {} ({} resumed sessions, {} shards, \
+         snapshots -> {})",
         daemon.local_addr()?,
         daemon.session_count(),
+        daemon.shard_count(),
         daemon.shared.cfg.snapshot_path,
     );
     daemon.run()

@@ -1,0 +1,283 @@
+//! The serve subsystem's single error vocabulary.
+//!
+//! Before the shard rewrite the daemon translated
+//! [`HubError`](crate::monitor::HubError) into protocol codes in
+//! `daemon.rs`, the client re-materialised those codes as a
+//! `Remote { code, message }` catch-all, and both sides kept their own
+//! ad-hoc `invalid(..)` helpers.  [`Error`] collapses all three
+//! vocabularies: every wire [`ErrorCode`] has exactly one variant, and
+//! the [`Error::code`] / [`Error::from_code`] pair is the *only*
+//! mapping table — daemon encode and client decode go through it, so a
+//! new code can't silently diverge between the two sides
+//! (`error_code_round_trip` pins the bijection).
+//!
+//! Three variants never cross the wire as codes: [`Error::Busy`] has
+//! its own protocol frame (it is backpressure, not failure — it
+//! carries the quota numbers a client needs for the documented
+//! Diagnose-drain remedy), while [`Error::Timeout`] / [`Error::Io`] /
+//! [`Error::Protocol`] are client-side transport observations.
+
+use std::fmt;
+use std::io;
+
+use crate::monitor::HubError;
+
+use super::proto::{ErrorCode, Response};
+
+/// Everything that can go wrong in the serve subsystem, daemon- or
+/// client-side.  `ServeError` remains as a deprecated alias.
+#[derive(Debug)]
+pub enum Error {
+    /// Backpressure (admission cap or session quota): retryable after
+    /// the documented remedy (wait, or Diagnose to drain the quota).
+    Busy { used: u64, limit: u64 },
+    /// Frame-layer violation: bad magic, oversized length, or an
+    /// undecodable payload.  Fatal — the connection closes after the
+    /// reply because framing can no longer be trusted.
+    BadFrame(String),
+    /// Protocol version outside the daemon's accepted range (also
+    /// per-op gates, e.g. `Metrics` below v3).  Fatal like `BadFrame`.
+    UnsupportedVersion(String),
+    /// Request named a session id the daemon doesn't have.
+    UnknownSession(String),
+    /// `OpenSession` raced an identical registration.
+    DuplicateSession(String),
+    /// The hub ran out of session ids (u64 exhaustion sentinel).
+    SessionsExhausted(String),
+    /// Semantically invalid request (zero window, layer out of range).
+    Invalid(String),
+    /// Daemon-side invariant failure; nothing the client can fix.
+    Internal(String),
+    /// Client-side: the reply violated the protocol (wrong message
+    /// type, undecodable payload).
+    Protocol(String),
+    /// Client-side: a socket deadline expired.
+    Timeout(io::Error),
+    /// Client-side: any other transport failure.
+    Io(io::Error),
+}
+
+/// The deprecated name for [`Error`], kept one release for callers
+/// that imported it before the unification.
+#[deprecated(since = "0.3.0", note = "use serve::Error")]
+pub type ServeError = Error;
+
+impl Error {
+    /// The wire code for this error, or `None` for the three variants
+    /// that never travel as an `Error` frame (`Busy` has its own frame;
+    /// `Protocol`/`Timeout`/`Io` are client-side observations).
+    ///
+    /// This table and [`Error::from_code`] are intentionally the only
+    /// two places that know the variant ↔ code pairing.
+    pub fn code(&self) -> Option<ErrorCode> {
+        Some(match self {
+            Error::BadFrame(_) => ErrorCode::BadFrame,
+            Error::UnsupportedVersion(_) => ErrorCode::UnsupportedVersion,
+            Error::UnknownSession(_) => ErrorCode::UnknownSession,
+            Error::DuplicateSession(_) => ErrorCode::DuplicateSession,
+            Error::SessionsExhausted(_) => ErrorCode::SessionsExhausted,
+            Error::Invalid(_) => ErrorCode::Invalid,
+            Error::Internal(_) => ErrorCode::Internal,
+            Error::Busy { .. }
+            | Error::Protocol(_)
+            | Error::Timeout(_)
+            | Error::Io(_) => return None,
+        })
+    }
+
+    /// Inverse of [`Error::code`]: materialise a received wire code.
+    pub fn from_code(code: ErrorCode, message: String) -> Error {
+        match code {
+            ErrorCode::BadFrame => Error::BadFrame(message),
+            ErrorCode::UnsupportedVersion => {
+                Error::UnsupportedVersion(message)
+            }
+            ErrorCode::UnknownSession => Error::UnknownSession(message),
+            ErrorCode::DuplicateSession => Error::DuplicateSession(message),
+            ErrorCode::SessionsExhausted => {
+                Error::SessionsExhausted(message)
+            }
+            ErrorCode::Invalid => Error::Invalid(message),
+            ErrorCode::Internal => Error::Internal(message),
+        }
+    }
+
+    /// The human-readable detail carried by this error.
+    pub fn message(&self) -> String {
+        match self {
+            Error::Busy { used, limit } => {
+                format!("busy: {used}/{limit}")
+            }
+            Error::BadFrame(m)
+            | Error::UnsupportedVersion(m)
+            | Error::UnknownSession(m)
+            | Error::DuplicateSession(m)
+            | Error::SessionsExhausted(m)
+            | Error::Invalid(m)
+            | Error::Internal(m)
+            | Error::Protocol(m) => m.clone(),
+            Error::Timeout(e) | Error::Io(e) => e.to_string(),
+        }
+    }
+
+    /// Whether the daemon must close the connection after replying:
+    /// once framing or version negotiation is broken, later bytes on
+    /// the same socket can't be trusted.
+    pub fn is_fatal(&self) -> bool {
+        matches!(
+            self,
+            Error::BadFrame(_) | Error::UnsupportedVersion(_)
+        )
+    }
+
+    /// The daemon's reply frame for this error.  `Busy` keeps its
+    /// dedicated backpressure frame; everything else becomes the coded
+    /// `Error` frame (client-side-only variants fold to `Internal`,
+    /// which a daemon never constructs from them in practice).
+    pub fn response(&self) -> Response {
+        match self {
+            Error::Busy { used, limit } => Response::Busy {
+                used: *used,
+                limit: *limit,
+            },
+            other => Response::Error {
+                code: other.code().unwrap_or(ErrorCode::Internal),
+                message: other.message(),
+            },
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Busy { used, limit } => write!(
+                f,
+                "daemon busy (used {used} of {limit}); retry after \
+                 Diagnose or wait"
+            ),
+            Error::Timeout(e) => write!(f, "timed out: {e}"),
+            Error::Io(e) => write!(f, "transport error: {e}"),
+            Error::Protocol(m) => write!(f, "protocol violation: {m}"),
+            other => match other.code() {
+                Some(code) => write!(f, "{code}: {}", other.message()),
+                None => unreachable!("non-coded variants matched above"),
+            },
+        }
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<HubError> for Error {
+    fn from(e: HubError) -> Error {
+        match e {
+            HubError::NoSuchSession(id) => {
+                Error::UnknownSession(format!("no session {}", id.raw()))
+            }
+            HubError::DuplicateSession(id) => Error::DuplicateSession(
+                format!("session {} already registered", id.raw()),
+            ),
+            HubError::SessionsExhausted => {
+                Error::SessionsExhausted("session ids exhausted".into())
+            }
+        }
+    }
+}
+
+impl From<io::Error> for Error {
+    fn from(e: io::Error) -> Error {
+        match e.kind() {
+            io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock => {
+                Error::Timeout(e)
+            }
+            _ => Error::Io(e),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const ALL_CODES: [ErrorCode; 7] = [
+        ErrorCode::BadFrame,
+        ErrorCode::UnsupportedVersion,
+        ErrorCode::UnknownSession,
+        ErrorCode::DuplicateSession,
+        ErrorCode::SessionsExhausted,
+        ErrorCode::Invalid,
+        ErrorCode::Internal,
+    ];
+
+    #[test]
+    fn error_code_round_trip() {
+        // Every wire code maps to exactly one variant and back: the
+        // daemon's encode table IS the client's decode table.
+        for code in ALL_CODES {
+            let err = Error::from_code(code, format!("ctx for {code}"));
+            assert_eq!(err.code(), Some(code), "{code} round-trips");
+            assert_eq!(err.message(), format!("ctx for {code}"));
+            match err.response() {
+                Response::Error { code: c, message } => {
+                    assert_eq!(c, code);
+                    assert_eq!(message, format!("ctx for {code}"));
+                }
+                other => panic!("coded error became {other:?}"),
+            }
+        }
+        // Codes are distinct variants (the mapping is a bijection).
+        let discriminants: Vec<_> = ALL_CODES
+            .iter()
+            .map(|&c| {
+                std::mem::discriminant(&Error::from_code(c, String::new()))
+            })
+            .collect();
+        for (i, a) in discriminants.iter().enumerate() {
+            for b in &discriminants[i + 1..] {
+                assert_ne!(a, b, "two codes collapsed to one variant");
+            }
+        }
+    }
+
+    #[test]
+    fn non_coded_variants_have_no_code() {
+        assert_eq!(Error::Busy { used: 1, limit: 2 }.code(), None);
+        assert_eq!(Error::Protocol("x".into()).code(), None);
+        let t: Error = io::Error::from(io::ErrorKind::TimedOut).into();
+        assert!(matches!(t, Error::Timeout(_)));
+        assert_eq!(t.code(), None);
+        let o: Error = io::Error::from(io::ErrorKind::BrokenPipe).into();
+        assert!(matches!(o, Error::Io(_)));
+    }
+
+    #[test]
+    fn busy_keeps_its_own_frame() {
+        match (Error::Busy { used: 7, limit: 9 }).response() {
+            Response::Busy { used, limit } => {
+                assert_eq!((used, limit), (7, 9));
+            }
+            other => panic!("Busy became {other:?}"),
+        }
+    }
+
+    #[test]
+    fn hub_errors_map_through_the_table() {
+        use crate::monitor::SessionId;
+        let e: Error = HubError::NoSuchSession(SessionId::from_raw(4)).into();
+        assert_eq!(e.code(), Some(ErrorCode::UnknownSession));
+        let e: Error =
+            HubError::DuplicateSession(SessionId::from_raw(4)).into();
+        assert_eq!(e.code(), Some(ErrorCode::DuplicateSession));
+        let e: Error = HubError::SessionsExhausted.into();
+        assert_eq!(e.code(), Some(ErrorCode::SessionsExhausted));
+    }
+
+    #[test]
+    fn fatality_matches_the_daemon_close_rule() {
+        assert!(Error::BadFrame("m".into()).is_fatal());
+        assert!(Error::UnsupportedVersion("m".into()).is_fatal());
+        assert!(!Error::UnknownSession("m".into()).is_fatal());
+        assert!(!Error::Busy { used: 0, limit: 0 }.is_fatal());
+    }
+}

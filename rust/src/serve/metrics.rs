@@ -445,6 +445,11 @@ impl MetricsReport {
 }
 
 /// The subset of [`ServeMetrics`] persisted in snapshots (SNAP v3).
+///
+/// Since the shard rewrite (DESIGN.md §9) this is also the cross-shard
+/// aggregation unit: each shard keeps its own [`ServeMetrics`], and the
+/// daemon folds the per-shard states together with [`MetricsState::merge`]
+/// for the `Metrics` reply and the (single, merged) snapshot record.
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct MetricsState {
     pub ingest_bytes: u64,
@@ -457,6 +462,52 @@ pub struct MetricsState {
     pub ingest: Histogram,
     pub diagnose: Histogram,
     pub query: Histogram,
+}
+
+impl MetricsState {
+    /// Fold another shard's lifetime view into this one.  Counters and
+    /// histograms add exactly (bucketwise, like [`Histogram::merge`] —
+    /// the loadgen frame/byte cross-checks stay exact across shards);
+    /// `sessions_peak` takes the max, which is the true daemon-wide
+    /// peak because every shard records the *global* open count at
+    /// admission time (see the daemon's `note_session_open` call).
+    pub fn merge(&mut self, other: &MetricsState) {
+        self.ingest_bytes += other.ingest_bytes;
+        self.sessions_peak = self.sessions_peak.max(other.sessions_peak);
+        self.sessions_opened += other.sessions_opened;
+        self.busy_admission += other.busy_admission;
+        self.busy_quota += other.busy_quota;
+        self.snapshot_count += other.snapshot_count;
+        self.snapshot_pause_ns += other.snapshot_pause_ns;
+        self.ingest.merge(&other.ingest);
+        self.diagnose.merge(&other.diagnose);
+        self.query.merge(&other.query);
+    }
+
+    /// Promote a (merged) state to the wire report, supplying the three
+    /// process-scoped pieces a state does not carry.
+    pub fn into_report(
+        self,
+        uptime_ms: u64,
+        sessions_open: u64,
+        frames_served: u64,
+    ) -> MetricsReport {
+        MetricsReport {
+            uptime_ms,
+            sessions_open,
+            sessions_peak: self.sessions_peak,
+            sessions_opened: self.sessions_opened,
+            ingest_bytes: self.ingest_bytes,
+            frames_served,
+            busy_admission: self.busy_admission,
+            busy_quota: self.busy_quota,
+            snapshot_count: self.snapshot_count,
+            snapshot_pause_ns: self.snapshot_pause_ns,
+            ingest: self.ingest,
+            diagnose: self.diagnose,
+            query: self.query,
+        }
+    }
 }
 
 pub fn enc_histogram(e: &mut Enc, h: &Histogram) {
@@ -788,6 +839,54 @@ mod tests {
         let bytes = e.into_bytes();
         let mut d = Dec::new(&bytes[..bytes.len() - 3]);
         assert!(dec_histogram(&mut d).is_err());
+    }
+
+    #[test]
+    fn metrics_state_merge_is_exact() {
+        let mut rng = Rng::new(0xA11);
+        let mut shards: Vec<MetricsState> = Vec::new();
+        let mut combined = MetricsState::default();
+        // Simulate 3 shards recording disjoint traffic; the merged view
+        // must equal recording everything into one state (except peak,
+        // which is max — each shard saw the same global open count).
+        for s in 0..3u64 {
+            let mut st = MetricsState {
+                ingest_bytes: 100 * (s + 1),
+                sessions_peak: 4, // global count, identical across shards
+                sessions_opened: s + 1,
+                busy_admission: s,
+                busy_quota: 2 * s,
+                snapshot_count: s,
+                snapshot_pause_ns: 1000 * s,
+                ..MetricsState::default()
+            };
+            for _ in 0..200 {
+                let ns = rng.below(1 << 28);
+                st.ingest.record(ns);
+                combined.ingest.record(ns);
+            }
+            combined.ingest_bytes += st.ingest_bytes;
+            combined.sessions_opened += st.sessions_opened;
+            combined.busy_admission += st.busy_admission;
+            combined.busy_quota += st.busy_quota;
+            combined.snapshot_count += st.snapshot_count;
+            combined.snapshot_pause_ns += st.snapshot_pause_ns;
+            shards.push(st);
+        }
+        combined.sessions_peak = 4;
+        let mut merged = MetricsState::default();
+        for st in &shards {
+            merged.merge(st);
+        }
+        assert_eq!(merged, combined);
+
+        let rep = merged.clone().into_report(5000, 3, 777);
+        assert_eq!(rep.uptime_ms, 5000);
+        assert_eq!(rep.sessions_open, 3);
+        assert_eq!(rep.frames_served, 777);
+        assert_eq!(rep.sessions_peak, 4);
+        assert_eq!(rep.ingest_bytes, merged.ingest_bytes);
+        assert_eq!(rep.ingest, merged.ingest);
     }
 
     #[test]

@@ -20,29 +20,43 @@
 //!   CRC-checked payload).
 //! * [`metrics`] — lock-cheap observability: atomic counters +
 //!   log-scale latency histograms behind the v3 `Metrics` op
-//!   (DESIGN.md §8), lifetime pieces persisted via [`store`].
-//! * [`daemon`] — the TCP server: admission caps, per-session byte
-//!   quotas with `Busy` backpressure, interval/shutdown snapshots.
+//!   (DESIGN.md §8), lifetime pieces persisted via [`store`],
+//!   merged exactly across shards.
+//! * [`poll`] — std-only readiness: epoll on Linux, a portable
+//!   hint-based fallback elsewhere (DESIGN.md §9).
+//! * [`error`] — the one serve [`Error`] vocabulary; wire codes map
+//!   through the single `code()`/`from_code()` table.
+//! * [`daemon`] — the sharded nonblocking TCP server: N connection
+//!   shards each owning a slice of sessions, admission caps,
+//!   per-session byte quotas with `Busy` backpressure,
+//!   interval/shutdown snapshots (DESIGN.md §9).
 //! * [`client`] — the blocking [`SketchClient`] (configurable timeouts
-//!   + bounded connect retries) plus the deterministic probe behind
+//!   + bounded connect retries) with the session-scoped
+//!   [`SessionHandle`] API, plus the deterministic probe behind
 //!   `sketchgrad connect --probe[-resume]`.
 
 pub mod client;
 pub mod codec;
 pub mod daemon;
+pub mod error;
 pub mod metrics;
+pub mod poll;
 pub mod proto;
 pub mod store;
 
 pub use client::{
-    run_probe, run_probe_resume, DiagnoseReply, IngestReply, ServeError,
-    ServerInfo, SketchClient,
+    run_probe, run_probe_resume, DiagnoseReply, IngestReply, ServerInfo,
+    SessionHandle, SketchClient, StatsReply,
 };
 pub use daemon::{recon_errors, serve_from_args, Daemon, DaemonHandle};
+pub use error::Error;
+#[allow(deprecated)]
+pub use error::ServeError;
 pub use metrics::{Histogram, MetricsReport, MetricsState, ServeMetrics};
+pub use poll::{Event, Interest, Poller};
 pub use proto::{
     monitor_config, ArchiveInfo, DaemonStats, ErrorCode, Request, Response,
-    SessionSpec, SessionStats, METRICS_MIN_VERSION, PROTO_MIN_VERSION,
-    PROTO_VERSION,
+    SessionSpec, SessionStats, ShardStats, METRICS_MIN_VERSION,
+    PROTO_MIN_VERSION, PROTO_VERSION,
 };
 pub use store::{DaemonSnapshot, SessionRecord, SnapshotStore};

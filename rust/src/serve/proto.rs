@@ -43,9 +43,11 @@ pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"SKD1");
 /// v2: `Stats` + archive query ops (`QueryTrajectory`/`QuerySimilarity`/
 /// `QueryDrift`/`ArchiveInfo`). v3: `Metrics` op + backpressure fields
 /// in `StatsOk` (daemon + per-session Busy counts, quota usage).
-pub const PROTO_VERSION: u16 = 3;
+/// v4: sharded serve — `StatsOk` grows the shard count plus one
+/// [`ShardStats`] row per connection shard (DESIGN.md §9).
+pub const PROTO_VERSION: u16 = 4;
 /// Oldest frame version the daemon still speaks (v2 clients keep
-/// working; their replies omit the v3 fields).
+/// working; their replies omit the v3/v4 fields).
 pub const PROTO_MIN_VERSION: u16 = 2;
 /// The `Metrics` op only exists from this frame version on.
 pub const METRICS_MIN_VERSION: u16 = 3;
@@ -322,6 +324,9 @@ pub struct DaemonStats {
     /// persisted across warm restarts). v3 field — zero when talking to
     /// a v2 peer.
     pub busy_rejections: u64,
+    /// Connection shards serving this daemon (v4 field — zero when
+    /// talking to a v3-or-older peer).
+    pub shards: u64,
 }
 
 /// Per-session counters served by [`Request::Stats`].
@@ -341,6 +346,28 @@ pub struct SessionStats {
     pub quota_used: u64,
     /// The daemon's per-session quota limit, 0 = unlimited (v3 field).
     pub quota_limit: u64,
+}
+
+/// Per-shard counters served by [`Request::Stats`] from v4 on — one row
+/// per connection shard, so a client (or `loadgen`) can see how evenly
+/// sessions and ingest latency spread across shards (DESIGN.md §9).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ShardStats {
+    /// Shard index in `0..DaemonStats::shards`.
+    pub shard: u64,
+    /// Sessions currently owned by this shard.
+    pub sessions: u64,
+    /// Ingest frames this shard has served since daemon start.
+    pub ingest_frames: u64,
+    /// Ingest payload bytes this shard has accepted (persisted counters
+    /// restore into shard 0 after a warm restart).
+    pub ingest_bytes: u64,
+    /// Ingest latency p50 in nanoseconds (0 until the first ingest).
+    pub ingest_p50_ns: u64,
+    /// Ingest latency p99 in nanoseconds (0 until the first ingest).
+    pub ingest_p99_ns: u64,
+    /// Response frames this shard has written since daemon start.
+    pub frames_served: u64,
 }
 
 /// Archive shape/occupancy answered by [`Request::ArchiveInfo`] — also
@@ -573,6 +600,9 @@ pub enum Response {
         daemon: DaemonStats,
         /// Per-session counters sorted by session id.
         sessions: Vec<SessionStats>,
+        /// Per-shard counters sorted by shard index (v4+ — empty when
+        /// talking to a v3-or-older peer).
+        shards: Vec<ShardStats>,
     },
     /// Archived gradient-norm trajectory, oldest interval first.
     Trajectory { points: Vec<TrajectoryPoint> },
@@ -680,7 +710,11 @@ impl Response {
                 e.str(message);
             }
             Response::ShutdownOk { sessions } => e.u64(*sessions),
-            Response::StatsOk { daemon, sessions } => {
+            Response::StatsOk {
+                daemon,
+                sessions,
+                shards,
+            } => {
                 e.u64(daemon.sessions);
                 e.u64(daemon.max_sessions);
                 e.u64(daemon.ingest_bytes);
@@ -688,6 +722,9 @@ impl Response {
                 e.u64(daemon.archive_bytes);
                 if version >= 3 {
                     e.u64(daemon.busy_rejections);
+                }
+                if version >= 4 {
+                    e.u64(daemon.shards);
                 }
                 e.len32(sessions.len());
                 for s in sessions {
@@ -701,6 +738,18 @@ impl Response {
                         e.u64(s.busy_rejections);
                         e.u64(s.quota_used);
                         e.u64(s.quota_limit);
+                    }
+                }
+                if version >= 4 {
+                    e.len32(shards.len());
+                    for s in shards {
+                        e.u64(s.shard);
+                        e.u64(s.sessions);
+                        e.u64(s.ingest_frames);
+                        e.u64(s.ingest_bytes);
+                        e.u64(s.ingest_p50_ns);
+                        e.u64(s.ingest_p99_ns);
+                        e.u64(s.frames_served);
                     }
                 }
             }
@@ -807,6 +856,7 @@ impl Response {
                     frames_served: d.u64()?,
                     archive_bytes: d.u64()?,
                     busy_rejections: if version >= 3 { d.u64()? } else { 0 },
+                    shards: if version >= 4 { d.u64()? } else { 0 },
                 };
                 let n = d.len32(8 + 4 + 8 * 4)?;
                 let mut sessions = Vec::with_capacity(n);
@@ -823,7 +873,27 @@ impl Response {
                         quota_limit: if version >= 3 { d.u64()? } else { 0 },
                     });
                 }
-                Response::StatsOk { daemon, sessions }
+                let mut shards = Vec::new();
+                if version >= 4 {
+                    let n = d.len32(8 * 7)?;
+                    shards.reserve(n);
+                    for _ in 0..n {
+                        shards.push(ShardStats {
+                            shard: d.u64()?,
+                            sessions: d.u64()?,
+                            ingest_frames: d.u64()?,
+                            ingest_bytes: d.u64()?,
+                            ingest_p50_ns: d.u64()?,
+                            ingest_p99_ns: d.u64()?,
+                            frames_served: d.u64()?,
+                        });
+                    }
+                }
+                Response::StatsOk {
+                    daemon,
+                    sessions,
+                    shards,
+                }
             }
             msg::TRAJECTORY => {
                 let n = d.len32(8 + 4 + 4)?;
@@ -1138,6 +1208,7 @@ mod tests {
                     frames_served: 789,
                     archive_bytes: 4096,
                     busy_rejections: 5,
+                    shards: 2,
                 },
                 sessions: vec![
                     SessionStats {
@@ -1152,6 +1223,26 @@ mod tests {
                         quota_limit: 65536,
                     },
                     SessionStats::default(),
+                ],
+                shards: vec![
+                    ShardStats {
+                        shard: 0,
+                        sessions: 1,
+                        ingest_frames: 40,
+                        ingest_bytes: 100000,
+                        ingest_p50_ns: 1_000,
+                        ingest_p99_ns: 9_000,
+                        frames_served: 400,
+                    },
+                    ShardStats {
+                        shard: 1,
+                        sessions: 1,
+                        ingest_frames: 0,
+                        ingest_bytes: 23456,
+                        ingest_p50_ns: 0,
+                        ingest_p99_ns: 0,
+                        frames_served: 389,
+                    },
                 ],
             },
             Response::Trajectory {
@@ -1218,9 +1309,9 @@ mod tests {
         }
     }
 
-    /// v2 peers must receive a `StatsOk` without the v3 fields (their
-    /// decoders reject trailing bytes), and a v2 payload must decode
-    /// with the v3 fields zeroed.
+    /// Older peers must receive a `StatsOk` without the newer fields
+    /// (their decoders reject trailing bytes), and an old payload must
+    /// decode with those fields zeroed/empty.
     #[test]
     fn stats_ok_versioned_encoding() {
         let full = Response::StatsOk {
@@ -1231,6 +1322,7 @@ mod tests {
                 frames_served: 42,
                 archive_bytes: 512,
                 busy_rejections: 6,
+                shards: 2,
             },
             sessions: vec![SessionStats {
                 id: 3,
@@ -1243,34 +1335,73 @@ mod tests {
                 quota_used: 100,
                 quota_limit: 1000,
             }],
+            shards: vec![
+                ShardStats {
+                    shard: 0,
+                    sessions: 1,
+                    ingest_frames: 10,
+                    ingest_bytes: 700,
+                    ingest_p50_ns: 2_000,
+                    ingest_p99_ns: 8_000,
+                    frames_served: 30,
+                },
+                ShardStats {
+                    shard: 1,
+                    ..ShardStats::default()
+                },
+            ],
         };
-        let mut e = Enc::new();
-        full.encode_into_v(&mut e, 2);
-        let v2_bytes = e.into_bytes();
+        let enc_at = |version| {
+            let mut e = Enc::new();
+            full.encode_into_v(&mut e, version);
+            e.into_bytes()
+        };
+        let v2_bytes = enc_at(2);
         // A strict v2 decode (finish() included) accepts the payload...
         let back = Response::decode_v(msg::STATS_OK, &v2_bytes, 2).unwrap();
         match back {
-            Response::StatsOk { daemon, sessions } => {
+            Response::StatsOk {
+                daemon,
+                sessions,
+                shards,
+            } => {
                 assert_eq!(daemon.ingest_bytes, 777);
                 assert_eq!(daemon.busy_rejections, 0, "v3 field dropped at v2");
+                assert_eq!(daemon.shards, 0, "v4 field dropped at v2");
                 assert_eq!(sessions[0].steps_seen, 10);
                 assert_eq!(sessions[0].busy_rejections, 0);
                 assert_eq!(sessions[0].quota_limit, 0);
+                assert!(shards.is_empty(), "v4 rows dropped at v2");
             }
             other => panic!("{other:?}"),
         }
-        // ...and mistaking a v2 payload for v3 (or vice versa) is a
-        // typed decode error, never a panic.
+        // ...and mistaking a payload for a different version is a typed
+        // decode error, never a panic.
         assert!(Response::decode_v(msg::STATS_OK, &v2_bytes, 3).is_err());
-        let mut e = Enc::new();
-        full.encode_into_v(&mut e, 3);
-        let v3_bytes = e.into_bytes();
+        let v3_bytes = enc_at(3);
         assert!(v3_bytes.len() > v2_bytes.len());
+        match Response::decode_v(msg::STATS_OK, &v3_bytes, 3).unwrap() {
+            Response::StatsOk {
+                daemon,
+                sessions,
+                shards,
+            } => {
+                assert_eq!(daemon.busy_rejections, 6, "v3 field survives");
+                assert_eq!(daemon.shards, 0, "v4 field dropped at v3");
+                assert_eq!(sessions[0].quota_limit, 1000);
+                assert!(shards.is_empty(), "v4 rows dropped at v3");
+            }
+            other => panic!("{other:?}"),
+        }
+        assert!(Response::decode_v(msg::STATS_OK, &v3_bytes, 2).is_err());
+        assert!(Response::decode_v(msg::STATS_OK, &v3_bytes, 4).is_err());
+        let v4_bytes = enc_at(4);
+        assert!(v4_bytes.len() > v3_bytes.len());
         assert_eq!(
-            Response::decode_v(msg::STATS_OK, &v3_bytes, 3).unwrap(),
+            Response::decode_v(msg::STATS_OK, &v4_bytes, 4).unwrap(),
             full
         );
-        assert!(Response::decode_v(msg::STATS_OK, &v3_bytes, 2).is_err());
+        assert!(Response::decode_v(msg::STATS_OK, &v4_bytes, 3).is_err());
     }
 
     #[test]

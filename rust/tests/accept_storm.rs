@@ -1,0 +1,127 @@
+//! Accept-storm stress: 256 clients connect to a 4-shard daemon at the
+//! same instant (DESIGN.md §9 acceptance).  Every connection must be
+//! accepted, round-robined to a shard, and fully served — open, two
+//! ingests, diagnose, close — with unique session ids, exact frame
+//! accounting afterwards, and work landing on all four shards.
+
+use std::sync::Barrier;
+use std::thread;
+
+use anyhow::{ensure, Result};
+
+use sketchgrad::config::{ArchiveConfig, ClientConfig, ServeConfig};
+use sketchgrad::data::ActStream;
+use sketchgrad::serve::proto::SessionSpec;
+use sketchgrad::serve::{Daemon, SketchClient};
+
+const CONNS: usize = 256;
+const SHARDS: usize = 4;
+const DIMS: [usize; 2] = [12, 6];
+
+fn storm_tenant(addr: &str, i: usize, net: &ClientConfig) -> Result<u64> {
+    let (mut client, _info) = SketchClient::connect_with(addr, net)?;
+    let mut sess = client.open_session(&SessionSpec {
+        name: format!("storm-{i}"),
+        layer_dims: DIMS.to_vec(),
+        rank: 2,
+        beta: 0.9,
+        seed: 7_000 + i as u64,
+        window: 4,
+        collapse_frac: 0.25,
+    })?;
+    let mut stream = ActStream::new(&DIMS, false, 7_000 + i as u64);
+    for step in 0..2 {
+        let loss = stream.loss_at(step, 2);
+        let acts = stream.next_batch(3);
+        sess.ingest(loss, &acts, false)?;
+    }
+    let d = sess.diagnose()?;
+    ensure!(d.steps_seen == 2, "tenant {i}: steps {}", d.steps_seen);
+    let id = sess.id();
+    sess.close()?;
+    Ok(id)
+}
+
+#[test]
+fn storm_of_256_concurrent_connections_is_fully_served() {
+    let snap = std::env::temp_dir()
+        .join(format!("sketchd-storm-{}.snap", std::process::id()))
+        .to_string_lossy()
+        .into_owned();
+    let _ = std::fs::remove_file(&snap);
+    let daemon = Daemon::bind(ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: CONNS * 2,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: 0,
+        snapshot_path: snap.clone(),
+        threads: 1,
+        shards: SHARDS,
+        archive: ArchiveConfig::default(),
+    })
+    .unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+
+    // Generous deadlines + retries: a simultaneous storm can overflow
+    // the accept backlog, and retried connects must still land.
+    let net = ClientConfig {
+        connect_timeout_ms: 10_000,
+        io_timeout_ms: 30_000,
+        connect_retries: 8,
+        retry_backoff_ms: 25,
+    };
+    let start = Barrier::new(CONNS);
+    let start_ref = &start;
+    let mut ids: Vec<u64> = thread::scope(|s| {
+        let handles: Vec<_> = (0..CONNS)
+            .map(|i| {
+                let addr = addr.clone();
+                let net = net.clone();
+                s.spawn(move || {
+                    start_ref.wait();
+                    storm_tenant(&addr, i, &net)
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .enumerate()
+            .map(|(i, h)| {
+                h.join()
+                    .unwrap_or_else(|_| panic!("tenant {i} panicked"))
+                    .unwrap_or_else(|e| panic!("tenant {i} failed: {e:#}"))
+            })
+            .collect()
+    });
+
+    // Every session id handed out under the storm was unique.
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), CONNS, "duplicate session ids under storm");
+
+    // The daemon is intact: zero sessions left open, every frame
+    // accounted for, and the round-robin spread all four shards.
+    let (mut control, info) = SketchClient::connect_with(&addr, &net).unwrap();
+    assert_eq!(info.sessions, 0);
+    let m = control.metrics().unwrap();
+    assert_eq!(m.sessions_open, 0);
+    assert_eq!(m.sessions_opened, CONNS as u64);
+    assert_eq!(m.ingest.count, (CONNS * 2) as u64);
+    assert_eq!(m.diagnose.count, CONNS as u64);
+    assert_eq!(m.busy_total(), 0);
+
+    let stats = control.stats().unwrap();
+    assert_eq!(stats.daemon.shards, SHARDS as u64);
+    assert_eq!(stats.shards.len(), SHARDS);
+    assert!(
+        stats.shards.iter().all(|sh| sh.ingest_frames > 0),
+        "every shard must have carried ingest traffic: {:?}",
+        stats.shards
+    );
+    let per_shard: u64 = stats.shards.iter().map(|sh| sh.ingest_frames).sum();
+    assert_eq!(per_shard, (CONNS * 2) as u64, "per-shard sum must balance");
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap);
+}

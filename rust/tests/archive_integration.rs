@@ -10,7 +10,7 @@ use sketchgrad::archive::SessionArchive;
 use sketchgrad::config::{ArchiveConfig, ServeConfig};
 use sketchgrad::data::ActStream;
 use sketchgrad::serve::proto::SessionSpec;
-use sketchgrad::serve::{Daemon, ServeError, SketchClient};
+use sketchgrad::serve::{Daemon, Error, SketchClient};
 use sketchgrad::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
 
 const DIMS: [usize; 2] = [20, 10];
@@ -35,6 +35,7 @@ fn config(tag: &str, capacity: usize, stride: usize) -> ServeConfig {
         session_quota_bytes: 0,
         snapshot_path: snapshot_path(tag),
         threads: 1,
+        shards: 1,
         archive: ArchiveConfig { capacity, stride },
     }
 }
@@ -113,15 +114,16 @@ fn archive_queries_bit_identical_across_eviction_and_restart() {
     let pre_info;
     {
         let (mut client, _info) = SketchClient::connect(&addr).unwrap();
-        session = client.open_session(&spec()).unwrap();
+        let mut sess = client.open_session(&spec()).unwrap();
+        session = sess.id();
         for step in 0..STEPS {
             let (loss, acts) = replica.step(step);
-            client.ingest(session, loss, &acts, false).unwrap();
+            sess.ingest(loss, &acts, false).unwrap();
         }
 
         // 70 > 64 intervals seen; the ring holds the newest 48 with
         // oldest-first eviction (batch counter starts at 1).
-        let info = client.archive_info(session).unwrap();
+        let info = sess.archive_info().unwrap();
         assert_eq!(info.seen, STEPS as u64);
         assert_eq!(info.intervals, CAPACITY as u64);
         assert_eq!(info.capacity, CAPACITY as u64);
@@ -132,16 +134,15 @@ fn archive_queries_bit_identical_across_eviction_and_restart() {
         assert_eq!(info.bytes, replica.archive.bytes() as u64);
 
         // Every analytics answer bit-identical to the replica.
-        let traj = client.query_trajectory(session).unwrap();
+        let traj = sess.query_trajectory().unwrap();
         assert_eq!(traj, replica.archive.trajectory());
         assert_eq!(traj.len(), CAPACITY);
         for layer in 0..DIMS.len() {
-            let (steps, sim) =
-                client.query_similarity(session, layer).unwrap();
+            let (steps, sim) = sess.query_similarity(layer).unwrap();
             let (local_steps, local_sim) = replica.archive.similarity(layer);
             assert_eq!(steps, local_steps, "layer {layer} steps");
             assert_eq!(sim, local_sim, "layer {layer} similarity");
-            let drift = client.query_drift(session, layer).unwrap();
+            let drift = sess.query_drift(layer).unwrap();
             assert_eq!(drift, replica.archive.drift(layer), "layer {layer}");
             pre_sims.push((steps, sim));
             pre_drifts.push(drift);
@@ -150,24 +151,24 @@ fn archive_queries_bit_identical_across_eviction_and_restart() {
         pre_info = info;
 
         // Out-of-range layer is a typed protocol error, not a hangup.
-        match client.query_drift(session, DIMS.len()) {
-            Err(ServeError::Remote { .. }) => {}
-            other => panic!("expected remote error, got {other:?}"),
+        match sess.query_drift(DIMS.len()) {
+            Err(Error::Invalid(_)) => {}
+            other => panic!("expected Invalid, got {other:?}"),
         }
 
         // Observability counters agree with the replica's accounting.
-        let (daemon_stats, rows) = client.stats().unwrap();
-        assert_eq!(daemon_stats.sessions, 1);
-        assert!(daemon_stats.ingest_bytes > 0);
-        assert!(daemon_stats.frames_served >= STEPS as u64);
+        let stats = sess.client().stats().unwrap();
+        assert_eq!(stats.daemon.sessions, 1);
+        assert!(stats.daemon.ingest_bytes > 0);
+        assert!(stats.daemon.frames_served >= STEPS as u64);
         assert_eq!(
-            daemon_stats.archive_bytes,
+            stats.daemon.archive_bytes,
             replica.archive.bytes() as u64
         );
-        let row = rows.iter().find(|s| s.id == session).unwrap();
+        let row = stats.sessions.iter().find(|s| s.id == session).unwrap();
         assert_eq!(row.name, "archived");
         assert_eq!(row.steps_seen, STEPS as u64);
-        assert_eq!(row.ingest_bytes, daemon_stats.ingest_bytes);
+        assert_eq!(row.ingest_bytes, stats.daemon.ingest_bytes);
         assert_eq!(row.archive_intervals, CAPACITY as u64);
         assert_eq!(row.archive_bytes, replica.archive.bytes() as u64);
     }
@@ -182,14 +183,14 @@ fn archive_queries_bit_identical_across_eviction_and_restart() {
     {
         let (mut client, info) = SketchClient::connect(&addr).unwrap();
         assert_eq!(info.sessions, 1);
-        assert_eq!(client.archive_info(session).unwrap(), pre_info);
-        assert_eq!(client.query_trajectory(session).unwrap(), pre_traj);
+        let mut sess = client.session(session);
+        assert_eq!(sess.archive_info().unwrap(), pre_info);
+        assert_eq!(sess.query_trajectory().unwrap(), pre_traj);
         for layer in 0..DIMS.len() {
-            let (steps, sim) =
-                client.query_similarity(session, layer).unwrap();
+            let (steps, sim) = sess.query_similarity(layer).unwrap();
             assert_eq!((steps, sim), pre_sims[layer], "layer {layer}");
             assert_eq!(
-                client.query_drift(session, layer).unwrap(),
+                sess.query_drift(layer).unwrap(),
                 pre_drifts[layer],
                 "layer {layer}"
             );
@@ -197,12 +198,12 @@ fn archive_queries_bit_identical_across_eviction_and_restart() {
 
         // Recording continues seamlessly on the restored ring.
         let (loss, acts) = replica.step(STEPS);
-        client.ingest(session, loss, &acts, false).unwrap();
-        let info = client.archive_info(session).unwrap();
+        sess.ingest(loss, &acts, false).unwrap();
+        let info = sess.archive_info().unwrap();
         assert_eq!(info.seen, STEPS as u64 + 1);
         assert_eq!(info.newest_step, STEPS as u64 + 1);
         assert_eq!(
-            client.query_trajectory(session).unwrap(),
+            sess.query_trajectory().unwrap(),
             replica.archive.trajectory()
         );
     }
@@ -221,16 +222,16 @@ fn stride_sampling_over_the_wire() {
 
     let mut replica = Replica::new(8, 4);
     let (mut client, _info) = SketchClient::connect(&addr).unwrap();
-    let session = client.open_session(&spec()).unwrap();
+    let mut sess = client.open_session(&spec()).unwrap();
     for step in 0..20 {
         let (loss, acts) = replica.step(step);
-        client.ingest(session, loss, &acts, false).unwrap();
+        sess.ingest(loss, &acts, false).unwrap();
     }
 
-    let info = client.archive_info(session).unwrap();
+    let info = sess.archive_info().unwrap();
     assert_eq!(info.seen, 20);
     assert_eq!(info.intervals, 5);
-    let traj = client.query_trajectory(session).unwrap();
+    let traj = sess.query_trajectory().unwrap();
     let steps: Vec<u64> = traj.iter().map(|p| p.step).collect();
     assert_eq!(steps, vec![1, 5, 9, 13, 17]);
     assert_eq!(traj, replica.archive.trajectory());

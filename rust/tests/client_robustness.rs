@@ -7,7 +7,7 @@ use std::net::TcpListener;
 use std::time::{Duration, Instant};
 
 use sketchgrad::config::{ArchiveConfig, ClientConfig, ServeConfig};
-use sketchgrad::serve::{Daemon, ServeError, SketchClient};
+use sketchgrad::serve::{Daemon, Error, SketchClient};
 
 fn impatient(retries: u32) -> ClientConfig {
     ClientConfig {
@@ -19,7 +19,7 @@ fn impatient(retries: u32) -> ClientConfig {
 }
 
 /// A listener that accepts the TCP connection but never replies: the
-/// Hello round trip must fail with `ServeError::Timeout` once the read
+/// Hello round trip must fail with `Error::Timeout` once the read
 /// deadline passes, in bounded wall time.
 #[test]
 fn unresponsive_listener_times_out_with_typed_error() {
@@ -38,7 +38,7 @@ fn unresponsive_listener_times_out_with_typed_error() {
     let res = SketchClient::connect_with(&addr, &impatient(0));
     let elapsed = t0.elapsed();
     match res {
-        Err(ServeError::Timeout(_)) => {}
+        Err(Error::Timeout(_)) => {}
         Err(other) => panic!("expected Timeout, got {other:?}"),
         Ok(_) => panic!("connected to a server that never spoke"),
     }
@@ -66,7 +66,7 @@ fn refused_connection_fails_after_bounded_retries() {
     let res = SketchClient::connect_with(&addr, &net);
     let elapsed = t0.elapsed();
     match res {
-        Err(ServeError::Io(_)) | Err(ServeError::Timeout(_)) => {}
+        Err(Error::Io(_)) | Err(Error::Timeout(_)) => {}
         Err(other) => panic!("expected Io/Timeout, got {other:?}"),
         Ok(_) => panic!("connected to a dropped listener"),
     }
@@ -91,6 +91,7 @@ fn timeouts_do_not_disturb_a_healthy_daemon() {
         session_quota_bytes: 0,
         snapshot_path: snap.clone(),
         threads: 1,
+        shards: 1,
         archive: ArchiveConfig::default(),
     })
     .unwrap();

@@ -8,12 +8,12 @@ use sketchgrad::config::{ArchiveConfig, ClientConfig, ServeConfig};
 use sketchgrad::loadgen::{
     run_scenario, write_report, DaemonDelta, Scenario, ScenarioReport,
 };
-use sketchgrad::serve::{Daemon, Histogram};
+use sketchgrad::serve::{Daemon, Histogram, ShardStats};
 use sketchgrad::util::json::Json;
 
 /// Run `sc` against a fresh daemon on an ephemeral port (quota from
-/// `sc.quota`, throwaway snapshot path).
-fn run_on_spawned(sc: &Scenario) -> ScenarioReport {
+/// `sc.quota`, throwaway snapshot path, `shards` connection shards).
+fn run_on_spawned(sc: &Scenario, shards: usize) -> ScenarioReport {
     let snap = std::env::temp_dir()
         .join(format!(
             "sketchd-lg-{}-{}.snap",
@@ -30,6 +30,7 @@ fn run_on_spawned(sc: &Scenario) -> ScenarioReport {
         session_quota_bytes: sc.quota,
         snapshot_path: snap.clone(),
         threads: 1,
+        shards,
         archive: ArchiveConfig::default(),
     })
     .unwrap();
@@ -54,7 +55,7 @@ fn tiny_steady_scenario_accounts_for_every_frame() {
         hz: 0.0,
         ..Scenario::default()
     };
-    let rep = run_on_spawned(&sc);
+    let rep = run_on_spawned(&sc, 1);
     assert_eq!(rep.ingests_ok, 24);
     assert_eq!(rep.ingest_frames_sent, 24);
     assert_eq!(rep.busy, 0);
@@ -67,6 +68,45 @@ fn tiny_steady_scenario_accounts_for_every_frame() {
     assert_eq!(delta.ingest_bytes, rep.bytes_sent);
     assert_eq!(delta.busy, 0);
     assert!(delta.frames_served >= 24, "at least the ingest replies");
+    assert_eq!(rep.shard_stats.len(), 1, "v4 daemon reports its shard");
+    assert_eq!(rep.shard_stats[0].ingest_frames, 24);
+    assert_eq!(rep.shard_p99_skew(), None, "one shard has no skew");
+}
+
+/// A 4-shard daemon under mixed churn traffic: the frame/byte
+/// cross-check still balances exactly, per-shard ingest frames sum to
+/// the client total, and every shard carried work (round-robin accept
+/// spreads the tenants).
+#[test]
+fn four_shard_daemon_keeps_accounting_exact_and_balanced() {
+    let sc = Scenario {
+        name: "it-shards".into(),
+        tenants: 8,
+        intervals: 6,
+        layer_dims: vec![16, 8],
+        batch: 4,
+        hz: 0.0,
+        churn_every: 3,
+        ..Scenario::default()
+    };
+    let rep = run_on_spawned(&sc, 4);
+    assert_eq!(rep.ingests_ok, 48);
+    let delta = rep.daemon.expect("metrics cross-check must run");
+    assert_eq!(delta.ingest_frames, rep.ingest_frames_sent);
+    assert_eq!(delta.ingest_bytes, rep.bytes_sent);
+    assert_eq!(rep.shard_stats.len(), 4);
+    let summed: u64 =
+        rep.shard_stats.iter().map(|s| s.ingest_frames).sum();
+    assert_eq!(
+        summed, rep.ingest_frames_sent,
+        "per-shard ingest frames must sum to the client total"
+    );
+    assert!(
+        rep.shard_stats.iter().all(|s| s.ingest_frames > 0),
+        "round-robin accept must land tenants on every shard: {:?}",
+        rep.shard_stats
+    );
+    assert!(rep.shard_p99_skew().is_some(), "4 active shards have skew");
 }
 
 /// A quota small enough to trip every few intervals: Busy shows up in
@@ -84,7 +124,7 @@ fn tiny_quota_scenario_exercises_busy_retry_path() {
         quota: 4096,
         ..Scenario::default()
     };
-    let rep = run_on_spawned(&sc);
+    let rep = run_on_spawned(&sc, 1);
     assert!(rep.busy > 0, "workload must actually trip the quota");
     assert_eq!(rep.ingests_ok, 20, "every interval lands after retry");
     assert_eq!(rep.dropped, 0);
@@ -112,7 +152,7 @@ fn churn_query_snapshot_mix_keeps_accounting_exact() {
         snapshot_every: 4,
         ..Scenario::default()
     };
-    let rep = run_on_spawned(&sc);
+    let rep = run_on_spawned(&sc, 1);
     assert_eq!(rep.ingests_ok, 18);
     assert!(rep.queries > 0);
     assert_eq!(rep.reopens, 2 * 2, "two churns per tenant (not the last)");
@@ -122,7 +162,7 @@ fn churn_query_snapshot_mix_keeps_accounting_exact() {
     assert_eq!(delta.ingest_frames, rep.ingest_frames_sent);
 }
 
-/// `write_report` emits the exact keys the CI `load-smoke` gate greps:
+/// `write_report` emits the exact keys the CI `shard-smoke` gate greps:
 /// per-scenario latency rows with p99/max and the flat summary scalars.
 #[test]
 fn report_json_has_the_keys_the_ci_gate_reads() {
@@ -155,6 +195,20 @@ fn report_json_has_the_keys_the_ci_gate_reads() {
             snapshot_count: 1,
             snapshot_pause: std::time::Duration::from_millis(3),
         }),
+        shard_stats: vec![
+            ShardStats {
+                shard: 0,
+                ingest_frames: 3,
+                ingest_p99_ns: 9_000,
+                ..ShardStats::default()
+            },
+            ShardStats {
+                shard: 1,
+                ingest_frames: 2,
+                ingest_p99_ns: 3_000,
+                ..ShardStats::default()
+            },
+        ],
     };
     let path = std::env::temp_dir()
         .join(format!("bench-serve-it-{}.json", std::process::id()))
@@ -181,6 +235,9 @@ fn report_json_has_the_keys_the_ci_gate_reads() {
     assert!(
         parsed.get("x_snapshot_pause_ms").unwrap().as_f64().unwrap() > 0.0
     );
+    assert_eq!(parsed.get("x_shards").unwrap().as_f64().unwrap(), 2.0);
+    let skew = parsed.get("x_shard_p99_skew").unwrap().as_f64().unwrap();
+    assert!((skew - 3.0).abs() < 1e-9, "9us/3us skew, got {skew}");
     let results = parsed.get("results").unwrap().as_arr().unwrap();
     assert_eq!(results.len(), 2, "ingest + query rows");
     assert_eq!(

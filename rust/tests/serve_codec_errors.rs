@@ -2,7 +2,7 @@
 //! or truncated frames must reply with a typed `BadFrame` (when the
 //! framing is still trustworthy) or drop the connection — never panic —
 //! and keep serving fresh clients; a client fed malformed replies must
-//! surface typed `ServeError`s, never hang or panic.  Snapshot files
+//! surface typed serve `Error`s, never hang or panic.  Snapshot files
 //! with a flipped payload bit must be rejected by CRC at bind time.
 
 use std::io::{Read, Write};
@@ -15,7 +15,7 @@ use sketchgrad::serve::proto::{
     self, ErrorCode, FrameHeader, Response, SessionSpec, FRAME_HEADER_LEN,
     MAX_FRAME_LEN, PROTO_VERSION,
 };
-use sketchgrad::serve::{Daemon, ServeError, SketchClient};
+use sketchgrad::serve::{Daemon, Error, SketchClient};
 
 fn test_config(tag: &str, quota: usize) -> ServeConfig {
     ServeConfig {
@@ -28,6 +28,7 @@ fn test_config(tag: &str, quota: usize) -> ServeConfig {
             .to_string_lossy()
             .into_owned(),
         threads: 1,
+        shards: 1,
         archive: ArchiveConfig::default(),
     }
 }
@@ -125,7 +126,7 @@ fn daemon_rejects_malformed_frames_without_panicking() {
 
     // After all that abuse, a fresh well-behaved client still works.
     let (mut client, _info) = SketchClient::connect(&addr).unwrap();
-    let session = client
+    let mut sess = client
         .open_session(&SessionSpec {
             name: "survivor".into(),
             layer_dims: vec![16, 8],
@@ -136,8 +137,8 @@ fn daemon_rejects_malformed_frames_without_panicking() {
             collapse_frac: 0.25,
         })
         .unwrap();
-    client.diagnose(session).unwrap();
-    client.close_session(session).unwrap();
+    sess.diagnose().unwrap();
+    sess.close().unwrap();
 
     handle.stop().unwrap();
     let _ = std::fs::remove_file(&snap_path);
@@ -185,7 +186,7 @@ fn client_turns_malformed_replies_into_typed_errors() {
     // Garbage where the reply's frame magic should be.
     let (addr, h) = fake_server(vec![0xAA; FRAME_HEADER_LEN]);
     match SketchClient::connect_with(&addr, &impatient()) {
-        Err(ServeError::Io(_)) => {}
+        Err(Error::Io(_)) => {}
         other => panic!("bad magic: expected Io, got {other:?}"),
     }
     h.join().unwrap();
@@ -194,7 +195,7 @@ fn client_turns_malformed_replies_into_typed_errors() {
     let hdr = FrameHeader::encode(99, proto::msg::HELLO_OK, 0);
     let (addr, h) = fake_server(hdr.to_vec());
     match SketchClient::connect_with(&addr, &impatient()) {
-        Err(ServeError::Protocol(msg)) => {
+        Err(Error::Protocol(msg)) => {
             assert!(msg.contains("version"), "{msg}")
         }
         other => panic!("version 99: expected Protocol, got {other:?}"),
@@ -207,7 +208,7 @@ fn client_turns_malformed_replies_into_typed_errors() {
     reply.extend_from_slice(&[0u8; 10]);
     let (addr, h) = fake_server(reply);
     match SketchClient::connect_with(&addr, &impatient()) {
-        Err(ServeError::Io(_)) | Err(ServeError::Timeout(_)) => {}
+        Err(Error::Io(_)) | Err(Error::Timeout(_)) => {}
         other => panic!("truncated reply: expected Io, got {other:?}"),
     }
     h.join().unwrap();
@@ -218,7 +219,7 @@ fn client_turns_malformed_replies_into_typed_errors() {
     reply.extend_from_slice(&[0xFF, 0xFF, 0xFF, 0xFF]);
     let (addr, h) = fake_server(reply);
     match SketchClient::connect_with(&addr, &impatient()) {
-        Err(ServeError::Protocol(_)) => {}
+        Err(Error::Protocol(_)) => {}
         other => panic!("garbage payload: expected Protocol, got {other:?}"),
     }
     h.join().unwrap();
@@ -251,7 +252,7 @@ fn corrupt_snapshot_fails_bind_with_crc_error() {
     let addr = daemon.local_addr().unwrap().to_string();
     let handle = daemon.spawn().unwrap();
     let (mut client, _info) = SketchClient::connect(&addr).unwrap();
-    let session = client
+    let mut sess = client
         .open_session(&SessionSpec {
             name: "crc".into(),
             layer_dims: vec![16, 8],
@@ -264,7 +265,7 @@ fn corrupt_snapshot_fails_bind_with_crc_error() {
         .unwrap();
     let mut stream = ActStream::new(&[16, 8], false, 9);
     let acts = stream.next_batch(4);
-    client.ingest(session, 0.5, &acts, false).unwrap();
+    sess.ingest(0.5, &acts, false).unwrap();
     drop(client);
     handle.stop().unwrap(); // writes the shutdown snapshot
 

@@ -14,7 +14,7 @@ use sketchgrad::serve::proto::{
     self, monitor_config, ErrorCode, Request, Response, SessionSpec,
 };
 use sketchgrad::serve::{
-    Daemon, ServeError, SketchClient, SnapshotStore,
+    Daemon, Error, SketchClient, SnapshotStore,
 };
 use sketchgrad::sketch::{
     Mat, Parallelism, SketchConfig, SketchEngine, Sketcher,
@@ -50,6 +50,7 @@ fn test_config(tag: &str, max_sessions: usize, quota: usize) -> ServeConfig {
         session_quota_bytes: quota,
         snapshot_path: unique_snapshot_path(tag),
         threads: 1,
+        shards: 1,
         archive: ArchiveConfig::default(),
     }
 }
@@ -128,7 +129,7 @@ fn four_concurrent_remote_sessions_match_in_process_bit_for_bit() {
                 s.spawn(move || {
                     let (mut client, _info) =
                         SketchClient::connect(&addr).unwrap();
-                    let session = client
+                    let mut sess = client
                         .open_session(&spec_for(idx, &format!("run{idx}")))
                         .unwrap();
                     // The client generates the same deterministic stream
@@ -145,15 +146,14 @@ fn four_concurrent_remote_sessions_match_in_process_bit_for_bit() {
                         let acts = stream.next_batch(n_b);
                         let loss = stream.loss_at(step, STEPS);
                         let want = step == STEPS - 1;
-                        let reply = client
-                            .ingest(session, loss, &acts, want)
-                            .unwrap();
+                        let reply =
+                            sess.ingest(loss, &acts, want).unwrap();
                         if want {
                             last_recon = reply.recon_err;
                         }
                     }
-                    let diag = client.diagnose(session).unwrap();
-                    (idx, session, last_recon, diag)
+                    let diag = sess.diagnose().unwrap();
+                    (idx, sess.id(), last_recon, diag)
                 })
             })
             .collect();
@@ -220,14 +220,14 @@ fn kill_restart_resumes_sessions_with_zero_state_diff() {
         let (mut client, info) = SketchClient::connect(&addr1).unwrap();
         assert_eq!(info.sessions, 0);
         for (idx, mirror) in mirrors.iter_mut().enumerate() {
-            let session = client
+            let mut sess = client
                 .open_session(&spec_for(idx, &format!("run{idx}")))
                 .unwrap();
             for step in 0..first_half {
                 let (loss, acts) = mirror.step(step, STEPS);
-                client.ingest(session, loss, &acts, false).unwrap();
+                sess.ingest(loss, &acts, false).unwrap();
             }
-            sessions.push(session);
+            sessions.push(sess.id());
         }
     }
     handle.stop().unwrap();
@@ -261,13 +261,12 @@ fn kill_restart_resumes_sessions_with_zero_state_diff() {
         let (mut client, info) = SketchClient::connect(&addr2).unwrap();
         assert_eq!(info.sessions, 2);
         for (idx, mirror) in mirrors.iter_mut().enumerate() {
-            let session = sessions[idx];
+            let mut sess = client.session(sessions[idx]);
             let mut last_reply = None;
             for step in first_half..STEPS {
                 let (loss, acts) = mirror.step(step, STEPS);
                 let want = step == STEPS - 1;
-                let reply =
-                    client.ingest(session, loss, &acts, want).unwrap();
+                let reply = sess.ingest(loss, &acts, want).unwrap();
                 assert_eq!(
                     reply.engine_bytes,
                     mirror.engine.memory() as u64,
@@ -288,7 +287,7 @@ fn kill_restart_resumes_sessions_with_zero_state_diff() {
                 STEPS as u64,
                 "run {idx}: batch count lost across restart"
             );
-            let diag = client.diagnose(session).unwrap();
+            let diag = sess.diagnose().unwrap();
             let local = mirror.hub.diagnose(mirror.id).unwrap();
             assert_eq!(diag.steps_seen, STEPS as u64);
             assert_eq!(
@@ -315,7 +314,7 @@ fn backpressure_busy_then_drained_by_diagnose() {
 
     let (mut client, _info) = SketchClient::connect(&addr).unwrap();
     let dims: &[usize] = &[16];
-    let session = client
+    let mut sess = client
         .open_session(&SessionSpec {
             name: "throttled".into(),
             layer_dims: dims.to_vec(),
@@ -331,9 +330,9 @@ fn backpressure_busy_then_drained_by_diagnose() {
     let mut accepted = 0usize;
     let busy = loop {
         let acts = stream.next_batch(8);
-        match client.ingest(session, 1.0, &acts, false) {
+        match sess.ingest(1.0, &acts, false) {
             Ok(_) => accepted += 1,
-            Err(ServeError::Busy { used, limit }) => break (used, limit),
+            Err(Error::Busy { used, limit }) => break (used, limit),
             Err(e) => panic!("unexpected error: {e}"),
         }
         assert!(accepted < 100, "quota never triggered");
@@ -343,9 +342,9 @@ fn backpressure_busy_then_drained_by_diagnose() {
     assert!(busy.0 <= quota as u64);
 
     // Diagnose drains the counter; the same ingest now succeeds.
-    client.diagnose(session).unwrap();
+    sess.diagnose().unwrap();
     let acts = stream.next_batch(8);
-    client.ingest(session, 1.0, &acts, false).unwrap();
+    sess.ingest(1.0, &acts, false).unwrap();
 
     handle.stop().unwrap();
     let _ = std::fs::remove_file(&snap_path);
@@ -364,10 +363,8 @@ fn wire_errors_admission_and_version_negotiation() {
     assert_eq!(info.max_sessions, 1);
 
     // Unknown session -> typed remote error.
-    match client.diagnose(999) {
-        Err(ServeError::Remote { code, .. }) => {
-            assert_eq!(code, ErrorCode::UnknownSession)
-        }
+    match client.session(999).diagnose() {
+        Err(Error::UnknownSession(_)) => {}
         other => panic!("expected UnknownSession, got {other:?}"),
     }
 
@@ -381,14 +378,15 @@ fn wire_errors_admission_and_version_negotiation() {
         window: 5,
         collapse_frac: 0.25,
     };
-    let session = client.open_session(&spec).unwrap();
+    let first = client.open_session(&spec).unwrap().id();
     match client.open_session(&spec) {
-        Err(ServeError::Busy { used, limit }) => {
+        Err(Error::Busy { used, limit }) => {
             assert_eq!((used, limit), (1, 1))
         }
-        other => panic!("expected Busy, got {other:?}"),
+        Err(other) => panic!("expected Busy, got {other}"),
+        Ok(_) => panic!("second open_session must hit the admission cap"),
     }
-    client.close_session(session).unwrap();
+    client.session(first).close().unwrap();
     client.open_session(&spec).unwrap();
 
     // A frame with a future protocol version gets UnsupportedVersion.

@@ -9,7 +9,7 @@ use sketchgrad::data::ActStream;
 use sketchgrad::serve::proto::{
     self, ErrorCode, Request, Response, SessionSpec, PROTO_VERSION,
 };
-use sketchgrad::serve::{Daemon, ServeError, SketchClient};
+use sketchgrad::serve::{Daemon, Error, SketchClient};
 use sketchgrad::sketch::Mat;
 
 fn unique_snapshot_path(tag: &str) -> String {
@@ -27,6 +27,7 @@ fn test_config(tag: &str, max_sessions: usize, quota: usize) -> ServeConfig {
         session_quota_bytes: quota,
         snapshot_path: unique_snapshot_path(tag),
         threads: 1,
+        shards: 1,
         archive: ArchiveConfig::default(),
     }
 }
@@ -68,8 +69,8 @@ fn metrics_report_matches_client_observed_traffic() {
 
     let (mut client, info) = SketchClient::connect(&addr).unwrap();
     assert_eq!(info.proto, PROTO_VERSION);
-    let s1 = client.open_session(&spec("m-a", DIMS, 11)).unwrap();
-    let s2 = client.open_session(&spec("m-b", DIMS, 22)).unwrap();
+    let s1 = client.open_session(&spec("m-a", DIMS, 11)).unwrap().id();
+    let s2 = client.open_session(&spec("m-b", DIMS, 22)).unwrap().id();
 
     let mut stream_a = ActStream::new(DIMS, false, 11);
     let mut stream_b = ActStream::new(DIMS, false, 22);
@@ -79,21 +80,23 @@ fn metrics_report_matches_client_observed_traffic() {
         let acts = stream_a.next_batch(8);
         bytes += ingest_payload_bytes(&acts);
         client
-            .ingest(s1, stream_a.loss_at(step, 6), &acts, false)
+            .session(s1)
+            .ingest(stream_a.loss_at(step, 6), &acts, false)
             .unwrap();
         ingests += 1;
         if step % 2 == 0 {
             let acts = stream_b.next_batch(5);
             bytes += ingest_payload_bytes(&acts);
             client
-                .ingest(s2, stream_b.loss_at(step, 6), &acts, false)
+                .session(s2)
+                .ingest(stream_b.loss_at(step, 6), &acts, false)
                 .unwrap();
             ingests += 1;
         }
     }
-    client.diagnose(s1).unwrap();
-    client.diagnose(s2).unwrap();
-    client.query_trajectory(s1).unwrap();
+    client.session(s1).diagnose().unwrap();
+    client.session(s2).diagnose().unwrap();
+    client.session(s1).query_trajectory().unwrap();
 
     // Replies read so far: hello + 2 opens + ingests + 2 diagnoses +
     // 1 trajectory.  The metrics reply itself is not yet counted.
@@ -120,8 +123,8 @@ fn metrics_report_matches_client_observed_traffic() {
     assert_eq!(m2.query.count, 2, "first Metrics call lands in query hist");
     assert_eq!(m2.ingest.count, ingests, "ingest hist unchanged");
 
-    client.close_session(s1).unwrap();
-    client.close_session(s2).unwrap();
+    client.session(s1).close().unwrap();
+    client.session(s2).close().unwrap();
     let m3 = client.metrics().unwrap();
     assert_eq!(m3.sessions_open, 0);
     assert_eq!(m3.sessions_peak, 2, "peak is a high-water mark");
@@ -146,7 +149,7 @@ fn busy_accounting_agrees_across_stats_and_metrics() {
     let handle = daemon.spawn().unwrap();
 
     let (mut client, _info) = SketchClient::connect(&addr).unwrap();
-    let session = client.open_session(&spec("bp", DIMS, 7)).unwrap();
+    let mut sess = client.open_session(&spec("bp", DIMS, 7)).unwrap();
     let mut stream = ActStream::new(DIMS, false, 7);
 
     let mut busy = 0u64;
@@ -155,16 +158,16 @@ fn busy_accounting_agrees_across_stats_and_metrics() {
         let acts = stream.next_batch(4);
         let loss = stream.loss_at(step, 12);
         let bytes = ingest_payload_bytes(&acts);
-        match client.ingest(session, loss, &acts, false) {
+        match sess.ingest(loss, &acts, false) {
             Ok(_) => quota_model += bytes,
-            Err(ServeError::Busy { used, limit }) => {
+            Err(Error::Busy { used, limit }) => {
                 busy += 1;
                 assert_eq!(used, quota_model);
                 assert_eq!(limit, QUOTA as u64);
                 assert!(used + bytes > limit, "Busy only past the quota");
-                client.diagnose(session).unwrap();
+                sess.diagnose().unwrap();
                 quota_model = 0;
-                client.ingest(session, loss, &acts, false).unwrap();
+                sess.ingest(loss, &acts, false).unwrap();
                 quota_model += bytes;
             }
             Err(e) => panic!("unexpected ingest error: {e}"),
@@ -172,12 +175,12 @@ fn busy_accounting_agrees_across_stats_and_metrics() {
     }
     assert!(busy > 0, "workload must actually trip the quota");
 
-    let (daemon_stats, sessions) = client.stats().unwrap();
-    assert_eq!(daemon_stats.busy_rejections, busy);
-    assert_eq!(sessions.len(), 1);
-    assert_eq!(sessions[0].busy_rejections, busy);
-    assert_eq!(sessions[0].quota_used, quota_model);
-    assert_eq!(sessions[0].quota_limit, QUOTA as u64);
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.daemon.busy_rejections, busy);
+    assert_eq!(stats.sessions.len(), 1);
+    assert_eq!(stats.sessions[0].busy_rejections, busy);
+    assert_eq!(stats.sessions[0].quota_used, quota_model);
+    assert_eq!(stats.sessions[0].quota_limit, QUOTA as u64);
 
     let m = client.metrics().unwrap();
     assert_eq!(m.busy_quota, busy);
@@ -204,17 +207,16 @@ fn metrics_survive_restart_except_process_scoped_pieces() {
     let handle = daemon.spawn().unwrap();
 
     let (mut client, _info) = SketchClient::connect(&addr).unwrap();
-    let session = client.open_session(&spec("pp", DIMS, 3)).unwrap();
+    let mut sess = client.open_session(&spec("pp", DIMS, 3)).unwrap();
+    let session = sess.id();
     let mut stream = ActStream::new(DIMS, false, 3);
     let mut bytes = 0u64;
     for step in 0..5 {
         let acts = stream.next_batch(6);
         bytes += ingest_payload_bytes(&acts);
-        client
-            .ingest(session, stream.loss_at(step, 5), &acts, false)
-            .unwrap();
+        sess.ingest(stream.loss_at(step, 5), &acts, false).unwrap();
     }
-    client.diagnose(session).unwrap();
+    sess.diagnose().unwrap();
     let before = client.metrics().unwrap();
     assert_eq!(before.ingest.count, 5);
     assert_eq!(before.ingest_bytes, bytes);
@@ -244,7 +246,7 @@ fn metrics_survive_restart_except_process_scoped_pieces() {
     // Restored counters continue counting, not restart from zero.
     let acts = stream.next_batch(6);
     let more = ingest_payload_bytes(&acts);
-    client.ingest(session, 0.1, &acts, false).unwrap();
+    client.session(session).ingest(0.1, &acts, false).unwrap();
     let cont = client.metrics().unwrap();
     assert_eq!(cont.ingest.count, 6);
     assert_eq!(cont.ingest_bytes, bytes + more);

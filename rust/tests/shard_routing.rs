@@ -1,0 +1,278 @@
+//! Shard-routing properties of the sharded daemon (DESIGN.md §9):
+//! session ownership is `id % shards` and *stays* that way across a
+//! snapshot/restart cycle, analytics queries answer bit-identically no
+//! matter which shard the querying connection lands on, and a
+//! pre-shard (single-shard, snapshot v3) snapshot warm-restarts into a
+//! multi-shard daemon with bit-identical archive queries and intact
+//! lifetime metrics.
+
+use sketchgrad::archive::TrajectoryPoint;
+use sketchgrad::config::{ArchiveConfig, ServeConfig};
+use sketchgrad::data::ActStream;
+use sketchgrad::serve::proto::SessionSpec;
+use sketchgrad::serve::{Daemon, SketchClient};
+
+const DIMS: [usize; 2] = [24, 12];
+const SHARDS: usize = 4;
+const TENANTS: usize = 8;
+const STEPS: usize = 12;
+
+fn snapshot_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("sketchd-sr-{tag}-{}.snap", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+fn config(tag: &str, shards: usize) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: 32,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: 0,
+        snapshot_path: snapshot_path(tag),
+        threads: 1,
+        shards,
+        archive: ArchiveConfig::default(),
+    }
+}
+
+fn spec(i: usize) -> SessionSpec {
+    SessionSpec {
+        name: format!("route-{i}"),
+        layer_dims: DIMS.to_vec(),
+        rank: 3,
+        beta: 0.9,
+        seed: 900 + i as u64,
+        window: 8,
+        collapse_frac: 0.25,
+    }
+}
+
+/// Open one session per fresh connection (connections round-robin over
+/// shards, so ids stride the shard allocators), ingest its
+/// deterministic stream, and return `(id, trajectory)` pairs.
+fn populate(addr: &str) -> Vec<(u64, Vec<TrajectoryPoint>)> {
+    (0..TENANTS)
+        .map(|i| {
+            let (mut client, _info) = SketchClient::connect(addr).unwrap();
+            let mut sess = client.open_session(&spec(i)).unwrap();
+            let mut stream = ActStream::new(&DIMS, false, 900 + i as u64);
+            for step in 0..STEPS {
+                let loss = stream.loss_at(step, STEPS);
+                let acts = stream.next_batch(6);
+                sess.ingest(loss, &acts, false).unwrap();
+            }
+            (sess.id(), sess.query_trajectory().unwrap())
+        })
+        .collect()
+}
+
+/// PROPERTY: owner shard is `id % shards`, every query answers
+/// bit-identically from any connection (any home shard), and both
+/// facts survive a snapshot/restart cycle; post-restart allocations
+/// never collide with restored ids.
+#[test]
+fn routing_is_stable_across_shards_and_restart() {
+    let cfg = config("stable", SHARDS);
+    let snap = cfg.snapshot_path.clone();
+    let _ = std::fs::remove_file(&snap);
+
+    let daemon = Daemon::bind(cfg.clone()).unwrap();
+    assert_eq!(daemon.shard_count(), SHARDS);
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+
+    let sessions = populate(&addr);
+    let mut ids: Vec<u64> = sessions.iter().map(|(id, _)| *id).collect();
+    ids.sort_unstable();
+    ids.dedup();
+    assert_eq!(ids.len(), TENANTS, "session ids must be unique");
+    // Sequential connections round-robin over 4 shards, and each
+    // shard's allocator strides by the shard count, so the 8 ids cover
+    // every residue class.
+    let mut residues: Vec<u64> =
+        ids.iter().map(|id| id % SHARDS as u64).collect();
+    residues.sort_unstable();
+    residues.dedup();
+    assert_eq!(residues.len(), SHARDS, "ids cover every shard: {ids:?}");
+
+    // The per-shard Stats rows pin the ownership rule directly.
+    let check_ownership = |addr: &str| {
+        let (mut control, _info) = SketchClient::connect(addr).unwrap();
+        let stats = control.stats().unwrap();
+        assert_eq!(stats.daemon.shards, SHARDS as u64);
+        assert_eq!(stats.shards.len(), SHARDS);
+        for sh in &stats.shards {
+            let owned = sessions
+                .iter()
+                .filter(|(id, _)| id % SHARDS as u64 == sh.shard)
+                .count() as u64;
+            assert_eq!(
+                sh.sessions, owned,
+                "shard {} must own exactly the id % {SHARDS} sessions",
+                sh.shard
+            );
+        }
+    };
+    check_ownership(&addr);
+
+    // Query every session from several fresh connections: each lands
+    // on a different home shard, yet the owner-routed answers are
+    // bit-identical every time.
+    for round in 0..SHARDS {
+        let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+        for (id, traj) in &sessions {
+            assert_eq!(
+                &client.session(*id).query_trajectory().unwrap(),
+                traj,
+                "round {round}: session {id} answered differently"
+            );
+        }
+    }
+
+    // Restart on the shutdown snapshot: same ids, same owners, same
+    // answers.
+    handle.stop().unwrap();
+    let daemon = Daemon::bind(cfg).unwrap();
+    assert_eq!(daemon.session_count(), TENANTS);
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+
+    check_ownership(&addr);
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    for (id, traj) in &sessions {
+        assert_eq!(
+            &client.session(*id).query_trajectory().unwrap(),
+            traj,
+            "session {id} diverged across restart"
+        );
+    }
+
+    // New allocations resume *past* every restored id on every shard
+    // (fetch_max keeps each allocator id-congruent and ahead).
+    let fresh = client.open_session(&spec(99)).unwrap().id();
+    assert!(
+        !ids.contains(&fresh),
+        "post-restart id {fresh} collides with restored ids {ids:?}"
+    );
+    client.session(fresh).close().unwrap();
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap);
+}
+
+/// COMPAT: a snapshot written by a single-shard daemon (bytewise the
+/// pre-shard v3 format: sessions sorted by id, one merged metrics
+/// block) warm-restarts into a 4-shard daemon — sessions route to
+/// `id % 4`, every archive query answers bit-identically, lifetime
+/// metrics survive the merge, and ingest continues cleanly.
+#[test]
+fn pre_shard_snapshot_restores_into_sharded_daemon() {
+    const N: usize = 3;
+    let one = config("preshard", 1);
+    let snap = one.snapshot_path.clone();
+    let _ = std::fs::remove_file(&snap);
+
+    // Phase 1: a 1-shard daemon (the pre-shard serve path) builds the
+    // snapshot.
+    let daemon = Daemon::bind(one.clone()).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+    let mut sessions = Vec::new();
+    {
+        let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+        for i in 0..N {
+            let mut sess = client.open_session(&spec(i)).unwrap();
+            let mut stream = ActStream::new(&DIMS, false, 900 + i as u64);
+            for step in 0..STEPS {
+                let loss = stream.loss_at(step, STEPS);
+                let acts = stream.next_batch(6);
+                sess.ingest(loss, &acts, false).unwrap();
+            }
+            let id = sess.id();
+            let traj = sess.query_trajectory().unwrap();
+            let info = sess.archive_info().unwrap();
+            let sims: Vec<_> = (0..DIMS.len())
+                .map(|l| sess.query_similarity(l).unwrap())
+                .collect();
+            let drifts: Vec<_> = (0..DIMS.len())
+                .map(|l| sess.query_drift(l).unwrap())
+                .collect();
+            sessions.push((id, traj, info, sims, drifts));
+        }
+    }
+    let before = {
+        let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+        client.metrics().unwrap()
+    };
+    handle.stop().unwrap();
+
+    // Phase 2: the same snapshot boots a 4-shard daemon.
+    let four = ServeConfig {
+        shards: SHARDS,
+        ..one
+    };
+    let daemon = Daemon::bind(four).unwrap();
+    assert_eq!(daemon.session_count(), N);
+    assert_eq!(daemon.shard_count(), SHARDS);
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+
+    let (mut client, info) = SketchClient::connect(&addr).unwrap();
+    assert_eq!(info.sessions, N as u64);
+    for (id, traj, arch, sims, drifts) in &sessions {
+        let mut sess = client.session(*id);
+        assert_eq!(&sess.query_trajectory().unwrap(), traj, "id {id}");
+        assert_eq!(&sess.archive_info().unwrap(), arch, "id {id}");
+        for l in 0..DIMS.len() {
+            assert_eq!(
+                sess.query_similarity(l).unwrap(),
+                sims[l],
+                "id {id} layer {l} similarity"
+            );
+            assert_eq!(
+                sess.query_drift(l).unwrap(),
+                drifts[l],
+                "id {id} layer {l} drift"
+            );
+        }
+    }
+
+    // Restored 1-shard ids 0..N route to shards 0..N; the remaining
+    // shard owns nothing.
+    let stats = client.stats().unwrap();
+    assert_eq!(stats.shards.len(), SHARDS);
+    for sh in &stats.shards {
+        let owned = sessions
+            .iter()
+            .filter(|(id, ..)| id % SHARDS as u64 == sh.shard)
+            .count() as u64;
+        assert_eq!(sh.sessions, owned, "shard {}", sh.shard);
+    }
+
+    // The merged lifetime metrics survived the format unchanged;
+    // frames_served is process-scoped and restarted near zero.
+    let after = client.metrics().unwrap();
+    assert_eq!(after.ingest.count, before.ingest.count);
+    assert_eq!(after.ingest_bytes, before.ingest_bytes);
+    assert_eq!(after.sessions_opened, before.sessions_opened);
+    assert!(after.frames_served < before.frames_served);
+
+    // Sessions keep ingesting on their new owner shards, and a new
+    // session gets a never-used id.
+    for (i, (id, ..)) in sessions.iter().enumerate() {
+        let mut stream = ActStream::new(&DIMS, false, 777 + i as u64);
+        let acts = stream.next_batch(6);
+        let reply = client.session(*id).ingest(0.25, &acts, false).unwrap();
+        assert_eq!(reply.batches, STEPS as u64 + 1, "id {id}");
+    }
+    let fresh = client.open_session(&spec(98)).unwrap().id();
+    assert!(
+        sessions.iter().all(|(id, ..)| id != &fresh),
+        "fresh id {fresh} collides with a restored session"
+    );
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap);
+}
