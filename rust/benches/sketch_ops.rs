@@ -15,7 +15,7 @@
 
 use sketchgrad::archive::{archive_record_bytes, SessionArchive};
 use sketchgrad::benchkit::{quick_requested, Bench};
-use sketchgrad::config::{ArchiveConfig, ServeConfig};
+use sketchgrad::config::{ArchiveConfig, ObsConfig, ServeConfig};
 use sketchgrad::monitor::{step_metrics, MonitorHub};
 use sketchgrad::serve::{monitor_config, Daemon, SessionSpec, SketchClient};
 use sketchgrad::sketch::metrics::stable_rank_power;
@@ -289,6 +289,7 @@ fn main() {
         snapshot_path: snap_path.to_string_lossy().into_owned(),
         threads: 1,
         archive: ArchiveConfig::default(),
+        obs: ObsConfig::default(),
     })
     .expect("bind loopback daemon");
     let addr = daemon.local_addr().unwrap().to_string();

@@ -24,7 +24,7 @@
 use anyhow::{bail, Context, Result};
 
 use sketchgrad::config::{
-    resolve_threads, ArchiveConfig, ClientConfig, ServeConfig,
+    resolve_threads, ArchiveConfig, ClientConfig, ObsConfig, ServeConfig,
 };
 use sketchgrad::loadgen::{
     print_report, run_scenario, write_report, Scenario, ScenarioReport,
@@ -150,6 +150,7 @@ fn run_spawned(
         threads: resolve_threads(threads),
         shards,
         archive: ArchiveConfig::default(),
+        obs: ObsConfig::default(),
     };
     let daemon = Daemon::bind(cfg)
         .with_context(|| format!("spawning daemon for {}", sc.name))?;

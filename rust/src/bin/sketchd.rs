@@ -10,10 +10,22 @@
 //!         [--quota 67108864] [--snapshot-path sketchd.snapshot]
 //!         [--archive-capacity 64] [--archive-stride 1]
 //!         [--threads 1] [--shards 1]
+//!         [--obs-addr 127.0.0.1:9090] [--obs-window-ms 1000]
+//!         [--obs-window-count 120] [--obs-journal-capacity 4096]
+//!         [--obs-slow-ms 250]
 //! ```
 //!
 //! `--shards N` sizes the nonblocking connection-shard count
 //! (DESIGN.md §9; 0 = auto-size from the CPU count).
+//!
+//! `--obs-addr` enables the HTTP/1.1 text exposition endpoint
+//! (DESIGN.md §10): `GET /metrics` serves Prometheus-format counters,
+//! windowed time-series balance gauges and per-session sketch-health
+//! gauges; `GET /events` dumps the merged event journal.  The
+//! remaining `--obs-*` flags size the journal ring, the window ring,
+//! and the slow-request journaling threshold.  Structured stderr
+//! logging is gated by `SKETCHD_LOG=error|info|debug` (silent when
+//! unset).
 //!
 //! The daemon snapshots on the interval, on client `Snapshot` requests
 //! and at shutdown; a restart on the same `--snapshot-path` resumes all

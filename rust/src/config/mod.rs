@@ -202,6 +202,38 @@ impl Default for ArchiveConfig {
     }
 }
 
+/// Configuration for the daemon's observability layer
+/// (`rust/src/serve/obs`), loadable from an `[obs]` TOML section with
+/// CLI overrides (`--obs-addr` / `--obs-window-ms` / ...).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ObsConfig {
+    /// HTTP exposition listen address (`GET /metrics`, `GET /events`);
+    /// empty = endpoint disabled.  Port 0 binds an ephemeral port.
+    pub addr: String,
+    /// Width of each time-series window bucket in milliseconds.
+    pub window_ms: u64,
+    /// Closed window buckets retained in the ring.
+    pub window_count: usize,
+    /// Event-journal capacity per writer (control plane + one per
+    /// shard); older events are overwritten and counted as dropped.
+    pub journal_capacity: usize,
+    /// Requests taking at least this long are journaled as
+    /// `slow-request` events (0 journals every request).
+    pub slow_ms: u64,
+}
+
+impl Default for ObsConfig {
+    fn default() -> Self {
+        ObsConfig {
+            addr: String::new(),
+            window_ms: 1000,
+            window_count: 120,
+            journal_capacity: 4096,
+            slow_ms: 250,
+        }
+    }
+}
+
 /// Configuration for the `sketchd` monitoring daemon (`rust/src/serve`),
 /// loadable from a `[serve]` TOML section with CLI overrides.
 #[derive(Clone, Debug, PartialEq)]
@@ -229,6 +261,9 @@ pub struct ServeConfig {
     pub shards: usize,
     /// Per-session sketch-history retention (`[archive]` section).
     pub archive: ArchiveConfig,
+    /// Observability layer: event journal, window ring, exposition
+    /// endpoint (`[obs]` section).
+    pub obs: ObsConfig,
 }
 
 impl Default for ServeConfig {
@@ -242,6 +277,7 @@ impl Default for ServeConfig {
             threads: 1,
             shards: 1,
             archive: ArchiveConfig::default(),
+            obs: ObsConfig::default(),
         }
     }
 }
@@ -272,6 +308,20 @@ impl ServeConfig {
                 capacity: t.usize_or("archive.capacity", d.archive.capacity)?,
                 stride: t.usize_or("archive.stride", d.archive.stride)?,
             },
+            obs: ObsConfig {
+                addr: t.str_or("obs.addr", &d.obs.addr)?,
+                window_ms: t
+                    .usize_or("obs.window_ms", d.obs.window_ms as usize)?
+                    as u64,
+                window_count: t
+                    .usize_or("obs.window_count", d.obs.window_count)?,
+                journal_capacity: t.usize_or(
+                    "obs.journal_capacity",
+                    d.obs.journal_capacity,
+                )?,
+                slow_ms: t.usize_or("obs.slow_ms", d.obs.slow_ms as usize)?
+                    as u64,
+            },
         })
     }
 
@@ -293,6 +343,15 @@ impl ServeConfig {
         }
         if self.archive.stride == 0 {
             bail!("archive.stride must be >= 1");
+        }
+        if self.obs.window_ms == 0 {
+            bail!("obs.window_ms must be >= 1");
+        }
+        if self.obs.window_count == 0 {
+            bail!("obs.window_count must be >= 1");
+        }
+        if self.obs.journal_capacity == 0 {
+            bail!("obs.journal_capacity must be >= 1");
         }
         Ok(())
     }
@@ -459,6 +518,12 @@ shards = 3
 [archive]
 capacity = 12
 stride = 3
+[obs]
+addr = "127.0.0.1:0"
+window_ms = 250
+window_count = 8
+journal_capacity = 32
+slow_ms = 10
 "#,
         )
         .unwrap();
@@ -471,6 +536,16 @@ stride = 3
         assert_eq!(c.threads, 2);
         assert_eq!(c.shards, 3);
         assert_eq!(c.archive, ArchiveConfig { capacity: 12, stride: 3 });
+        assert_eq!(
+            c.obs,
+            ObsConfig {
+                addr: "127.0.0.1:0".into(),
+                window_ms: 250,
+                window_count: 8,
+                journal_capacity: 32,
+                slow_ms: 10,
+            }
+        );
         c.validate().unwrap();
 
         // shards = 0 in TOML resolves to available parallelism ...
@@ -492,8 +567,20 @@ stride = 3
         bad = d.clone();
         bad.shards = 0;
         assert!(bad.validate().is_err());
-        bad = d;
+        bad = d.clone();
         bad.archive.stride = 0;
+        assert!(bad.validate().is_err());
+        // Obs defaults: endpoint disabled, knobs validated when set.
+        assert_eq!(d.obs, ObsConfig::default());
+        assert!(d.obs.addr.is_empty());
+        bad = d.clone();
+        bad.obs.window_ms = 0;
+        assert!(bad.validate().is_err());
+        bad = d.clone();
+        bad.obs.window_count = 0;
+        assert!(bad.validate().is_err());
+        bad = d;
+        bad.obs.journal_capacity = 0;
         assert!(bad.validate().is_err());
     }
 

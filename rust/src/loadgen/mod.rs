@@ -15,7 +15,12 @@
 //! views must agree exactly (the daemon must be otherwise idle, which
 //! spawned daemons always are).  The run **fails** on disagreement;
 //! `BENCH_serve.json`'s `<scenario>_metrics_verified = 1` records that
-//! the check ran and passed.
+//! the check ran and passed.  Against a v5 daemon the harness also
+//! fetches the `MetricsWindow` report and fails the run unless the
+//! window-series sums (baseline + evicted + retained + open) equal the
+//! lifetime counters exactly (`<scenario>_window_verified = 1`), and
+//! records the client-side per-window throughput series
+//! (`<scenario>_win<k>_ingests_per_s`).
 //!
 //! [`write_report`] emits `BENCH_serve.json` through the [`benchkit`]
 //! reporter: one `<scenario>_ingest` / `<scenario>_query` result each
@@ -27,7 +32,7 @@
 
 mod worker;
 
-pub use worker::TenantReport;
+pub use worker::{TenantReport, CLIENT_WINDOW_MS};
 
 use std::sync::Barrier;
 use std::thread;
@@ -37,8 +42,10 @@ use anyhow::{bail, ensure, Context, Result};
 
 use crate::benchkit::{fmt_dur, Bench, BenchResult};
 use crate::config::ClientConfig;
+use crate::serve::obs::WindowReport;
 use crate::serve::{
     Histogram, ShardStats, SketchClient, METRICS_MIN_VERSION,
+    OBS_MIN_VERSION,
 };
 
 /// One load-test configuration: a tenant population and its traffic mix.
@@ -231,6 +238,14 @@ pub struct ScenarioReport {
     /// against a pre-v4 daemon).  Lifetime counters, not deltas —
     /// exact for spawned daemons, cumulative for `--addr`.
     pub shard_stats: Vec<ShardStats>,
+    /// Successful ingests per [`CLIENT_WINDOW_MS`] window since the
+    /// traffic barrier released, merged across tenants.  The series
+    /// sums to `ingests_ok` exactly.
+    pub win_ok: Vec<u64>,
+    /// Post-run v5 `MetricsWindow` report; `None` against a pre-v5
+    /// daemon.  When `Some`, the window-sum == lifetime-counter check
+    /// has already passed.
+    pub daemon_windows: Option<WindowReport>,
 }
 
 impl ScenarioReport {
@@ -370,6 +385,36 @@ pub fn run_scenario(
     // daemons, which simply don't report shards).
     let shard_stats = control.stats().context("stats after run")?.shards;
 
+    // v5 window-series cross-check: the report's telescoped total
+    // (baseline + evicted + retained windows + open) must equal the
+    // daemon's lifetime counters at the same instant.  The ingest and
+    // busy counters are exact because the control connection itself
+    // never ingests or trips Busy; frames_served keeps moving with
+    // every control round trip, so it is deliberately not compared.
+    let daemon_windows = if control.proto_version() >= OBS_MIN_VERSION {
+        let w = control.metrics_window().context("metrics window")?;
+        let lifetime = control.metrics().context("metrics at window check")?;
+        let total = w.report.total();
+        ensure!(
+            total.ingest_frames == lifetime.ingest.count
+                && total.ingest_bytes == lifetime.ingest_bytes
+                && total.busy == lifetime.busy_total(),
+            "scenario {}: window series sums (frames {}, bytes {}, busy \
+             {}) disagree with lifetime counters (frames {}, bytes {}, \
+             busy {})",
+            sc.name,
+            total.ingest_frames,
+            total.ingest_bytes,
+            total.busy,
+            lifetime.ingest.count,
+            lifetime.ingest_bytes,
+            lifetime.busy_total()
+        );
+        Some(w.report)
+    } else {
+        None
+    };
+
     Ok(ScenarioReport {
         name: sc.name.clone(),
         tenants: sc.tenants,
@@ -387,6 +432,8 @@ pub fn run_scenario(
         query_hist: agg.query_hist,
         daemon,
         shard_stats,
+        win_ok: agg.win_ok,
+        daemon_windows,
     })
 }
 
@@ -463,6 +510,23 @@ pub fn write_report(
         if let Some(skew) = r.shard_p99_skew() {
             summary.push((format!("{}_shard_p99_skew", r.name), skew));
         }
+        // Client-side throughput shape: one key per CLIENT_WINDOW_MS
+        // window (capped so pathological stalls can't bloat the file).
+        summary.push((
+            format!("{}_window_verified", r.name),
+            if r.daemon_windows.is_some() { 1.0 } else { 0.0 },
+        ));
+        summary.push((
+            format!("{}_client_windows", r.name),
+            r.win_ok.len() as f64,
+        ));
+        let secs = CLIENT_WINDOW_MS as f64 / 1e3;
+        for (k, &n) in r.win_ok.iter().take(30).enumerate() {
+            summary.push((
+                format!("{}_win{}_ingests_per_s", r.name, k),
+                n as f64 / secs,
+            ));
+        }
     }
     summary.push(("scenarios".to_string(), reports.len() as f64));
     let pairs: Vec<(&str, f64)> =
@@ -538,6 +602,34 @@ pub fn print_report(r: &ScenarioReport) {
     if let Some(skew) = r.shard_p99_skew() {
         println!("shard ingest p99 skew (max/min): {skew:.2}");
     }
+    if !r.win_ok.is_empty() {
+        let secs = CLIENT_WINDOW_MS as f64 / 1e3;
+        let series = r
+            .win_ok
+            .iter()
+            .map(|&n| format!("{:.0}", n as f64 / secs))
+            .collect::<Vec<_>>()
+            .join(" ");
+        println!(
+            "client windows ({}ms): [{series}] ingests/s",
+            CLIENT_WINDOW_MS
+        );
+    }
+    if let Some(w) = &r.daemon_windows {
+        let t = w.total();
+        let retained: u64 = w.buckets.iter().map(|b| b.ingest_frames).sum();
+        println!(
+            "daemon windows: {} x {}ms retained | lifetime frames {} = \
+             baseline {} + evicted {} + windows {retained} + open {} | \
+             window sums verified",
+            w.buckets.len(),
+            w.interval_ms,
+            t.ingest_frames,
+            w.baseline.ingest_frames,
+            w.evicted.ingest_frames,
+            w.open.ingest_frames,
+        );
+    }
 }
 
 #[cfg(test)]
@@ -589,6 +681,8 @@ mod tests {
             query_hist: Histogram::new(),
             daemon: None,
             shard_stats: Vec::new(),
+            win_ok: Vec::new(),
+            daemon_windows: None,
         };
         assert_eq!(r.throughput(), 50.0);
         assert_eq!(r.busy_rate(), 0.2);

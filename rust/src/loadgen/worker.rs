@@ -19,6 +19,12 @@ use crate::sketch::Mat;
 
 use super::Scenario;
 
+/// Width of the client-side throughput windows every tenant buckets
+/// its successful ingests into (relative to the shared barrier
+/// release).  Independent of the daemon's `[obs] window_ms` — this is
+/// the *client's* view of the run's shape.
+pub const CLIENT_WINDOW_MS: u64 = 1000;
+
 /// Client-observed counters for one tenant's run.
 #[derive(Clone, Debug, Default)]
 pub struct TenantReport {
@@ -34,6 +40,9 @@ pub struct TenantReport {
     /// Payload bytes of *accepted* ingests (mirrors the daemon's
     /// `ingest_bytes` counter).
     pub bytes_sent: u64,
+    /// Successful ingests per [`CLIENT_WINDOW_MS`] window since the
+    /// traffic barrier released (index 0 = first window).
+    pub win_ok: Vec<u64>,
     pub ingest_hist: Histogram,
     pub query_hist: Histogram,
 }
@@ -50,8 +59,25 @@ impl TenantReport {
         self.reopens += other.reopens;
         self.snapshots += other.snapshots;
         self.bytes_sent += other.bytes_sent;
+        if self.win_ok.len() < other.win_ok.len() {
+            self.win_ok.resize(other.win_ok.len(), 0);
+        }
+        for (i, &n) in other.win_ok.iter().enumerate() {
+            self.win_ok[i] += n;
+        }
         self.ingest_hist.merge(&other.ingest_hist);
         self.query_hist.merge(&other.query_hist);
+    }
+
+    /// Count one successful ingest into the client window that
+    /// `elapsed` (since barrier release) falls in.
+    fn note_ok_at(&mut self, elapsed: Duration) {
+        let w = (elapsed.as_millis() as u64 / CLIENT_WINDOW_MS) as usize;
+        if self.win_ok.len() <= w {
+            self.win_ok.resize(w + 1, 0);
+        }
+        self.win_ok[w] += 1;
+        self.ingests_ok += 1;
     }
 }
 
@@ -122,7 +148,7 @@ pub(super) fn run_tenant(
         match sess.ingest(loss, &acts, sc.want_recon) {
             Ok(_) => {
                 rep.ingest_hist.record_duration(t.elapsed());
-                rep.ingests_ok += 1;
+                rep.note_ok_at(t0.elapsed());
                 rep.bytes_sent += bytes;
             }
             Err(Error::Busy { .. }) => {
@@ -141,7 +167,7 @@ pub(super) fn run_tenant(
                 match sess.ingest(loss, &acts, sc.want_recon) {
                     Ok(_) => {
                         rep.ingest_hist.record_duration(t.elapsed());
-                        rep.ingests_ok += 1;
+                        rep.note_ok_at(t0.elapsed());
                         rep.bytes_sent += bytes;
                     }
                     Err(Error::Busy { .. }) => rep.dropped += 1,
@@ -230,6 +256,7 @@ mod tests {
             ingest_frames_sent: 4,
             busy: 1,
             bytes_sent: 100,
+            win_ok: vec![2, 1],
             ..TenantReport::default()
         };
         a.ingest_hist.record(1_000);
@@ -238,6 +265,7 @@ mod tests {
             ingest_frames_sent: 2,
             queries: 5,
             bytes_sent: 50,
+            win_ok: vec![1, 0, 1],
             ..TenantReport::default()
         };
         b.ingest_hist.record(3_000);
@@ -248,10 +276,24 @@ mod tests {
         assert_eq!(a.busy, 1);
         assert_eq!(a.queries, 5);
         assert_eq!(a.bytes_sent, 150);
+        assert_eq!(a.win_ok, vec![3, 1, 1]);
         assert_eq!(a.ingest_hist.count, 2);
         assert_eq!(a.ingest_hist.min_ns, 1_000);
         assert_eq!(a.ingest_hist.max_ns, 3_000);
         assert_eq!(a.query_hist.count, 1);
+    }
+
+    #[test]
+    fn window_bucketing_tracks_elapsed_time() {
+        let mut r = TenantReport::default();
+        r.note_ok_at(Duration::from_millis(10));
+        r.note_ok_at(Duration::from_millis(999));
+        r.note_ok_at(Duration::from_millis(1000));
+        r.note_ok_at(Duration::from_millis(3500));
+        assert_eq!(r.ingests_ok, 4);
+        assert_eq!(r.win_ok, vec![2, 1, 0, 1]);
+        // The window series always sums to the ok count.
+        assert_eq!(r.win_ok.iter().sum::<u64>(), r.ingests_ok);
     }
 
     #[test]

@@ -10,9 +10,11 @@
 //!                 (native substrate — no artifacts needed)
 //!   serve         run the sketchd monitoring daemon in-process
 //!   connect       talk to a sketchd daemon (--probe / --probe-resume N /
-//!                 --stats / --metrics / --query-trajectory N /
-//!                 --query-similarity N / --query-drift N /
-//!                 --archive-info N / --shutdown / status; --timeout-ms /
+//!                 --stats / --metrics / --events N / --windows /
+//!                 --query-trajectory N / --query-similarity N /
+//!                 --query-drift N / --archive-info N / --shutdown /
+//!                 status; --json for machine-readable --stats /
+//!                 --metrics / --events / --windows output; --timeout-ms /
 //!                 --retries tune client deadlines)
 //!   memory-table  §4.7 / §5.3 memory models (TAB-MEM1/2)
 //!   bound-check   Thm 4.2 sqrt(6)·tau_{r+1} validation
@@ -40,10 +42,12 @@ use sketchgrad::monitor::{step_metrics, MonitorConfig, MonitorHub};
 use sketchgrad::pinn::field_summary;
 use sketchgrad::runtime::{Runtime, Tensor};
 use sketchgrad::serve::{
-    run_probe, run_probe_resume, serve_from_args, SketchClient,
+    run_probe, run_probe_resume, serve_from_args, Histogram, MetricsReport,
+    MetricsWindowReply, SketchClient, StatsReply,
 };
 use sketchgrad::sketch::{eig, engine_state_bytes, Mat, Parallelism, SketchConfig, Sketcher};
 use sketchgrad::util::cli::Args;
+use sketchgrad::util::json::{obj, Json};
 use sketchgrad::util::rng::Rng;
 
 fn main() -> Result<()> {
@@ -504,11 +508,16 @@ fn run_with_artifact(
 /// `--stats` prints daemon-wide and per-session counters,
 /// `--metrics` prints the v3 observability report (lifetime counters +
 /// ingest/diagnose/query latency percentiles, DESIGN.md §8),
+/// `--events N` dumps the newest N journal events (0 = all) and
+/// `--windows` the windowed time-series report + sketch-health gauges
+/// (both v5, DESIGN.md §10),
 /// `--query-trajectory N` / `--query-similarity N` / `--query-drift N`
 /// (with `--layer L`, default 0) and `--archive-info N` read the
 /// session's archived sketch history (DESIGN.md §7),
 /// `--shutdown` snapshots and stops the daemon; with none of those the
-/// command prints the daemon's capacity status.  `--timeout-ms` and
+/// command prints the daemon's capacity status.  `--json` switches
+/// `--metrics` / `--stats` / `--events` / `--windows` output to a
+/// single machine-readable JSON object on stdout.  `--timeout-ms` and
 /// `--retries` tune the client's socket deadline and connect retries.
 fn cmd_connect(args: &mut Args) -> Result<()> {
     let addr = args.opt_or("addr", "127.0.0.1:7070");
@@ -516,6 +525,9 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     let probe_resume = args.opt("probe-resume");
     let stats = args.flag("stats");
     let metrics = args.flag("metrics");
+    let events = args.opt("events");
+    let windows = args.flag("windows");
+    let json_out = args.flag("json");
     let query_trajectory = args.opt("query-trajectory");
     let query_similarity = args.opt("query-similarity");
     let query_drift = args.opt("query-drift");
@@ -546,98 +558,72 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
     if stats {
         let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
         let reply = client.stats()?;
-        let daemon = &reply.daemon;
-        println!(
-            "daemon: {}/{} sessions, {} ingested, {} frames served, \
-             {} busy rejections, {} archived, {} shards",
-            daemon.sessions,
-            daemon.max_sessions,
-            fmt_bytes(daemon.ingest_bytes as usize),
-            daemon.frames_served,
-            daemon.busy_rejections,
-            fmt_bytes(daemon.archive_bytes as usize),
-            daemon.shards.max(1),
-        );
-        for sh in &reply.shards {
-            println!(
-                "  shard {}: {} sessions, {} ingest frames ({}), \
-                 ingest p50 {} p99 {}, {} frames served",
-                sh.shard,
-                sh.sessions,
-                sh.ingest_frames,
-                fmt_bytes(sh.ingest_bytes as usize),
-                fmt_dur(Duration::from_nanos(sh.ingest_p50_ns)),
-                fmt_dur(Duration::from_nanos(sh.ingest_p99_ns)),
-                sh.frames_served,
-            );
-        }
-        for s in &reply.sessions {
-            let quota = if s.quota_limit == 0 {
-                "unlimited".to_string()
-            } else {
-                format!(
-                    "{}/{}",
-                    fmt_bytes(s.quota_used as usize),
-                    fmt_bytes(s.quota_limit as usize)
-                )
-            };
-            println!(
-                "  session {} {:?}: {} steps, {} ingested, \
-                 archive {} intervals / {}, quota {quota}, {} busy",
-                s.id,
-                s.name,
-                s.steps_seen,
-                fmt_bytes(s.ingest_bytes as usize),
-                s.archive_intervals,
-                fmt_bytes(s.archive_bytes as usize),
-                s.busy_rejections,
-            );
+        if json_out {
+            println!("{}", stats_json(&reply).to_string());
+        } else {
+            print_stats_human(&reply);
         }
         acted = true;
     }
     if metrics {
         let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
         let m = client.metrics()?;
-        println!(
-            "uptime {:.1}s | sessions {} open / {} peak / {} opened",
-            m.uptime_ms as f64 / 1e3,
-            m.sessions_open,
-            m.sessions_peak,
-            m.sessions_opened
-        );
-        println!(
-            "ingested {} ({}/s) over {} ingest frames; {} frames served",
-            fmt_bytes(m.ingest_bytes as usize),
-            fmt_bytes(m.ingest_bytes_per_sec() as usize),
-            m.ingest.count,
-            m.frames_served
-        );
-        println!(
-            "busy: {} admission + {} quota = {}",
-            m.busy_admission,
-            m.busy_quota,
-            m.busy_total()
-        );
-        println!(
-            "snapshots: {} ({} total pause)",
-            m.snapshot_count,
-            fmt_dur(Duration::from_nanos(m.snapshot_pause_ns))
-        );
-        println!("| op | count | p50 | p95 | p99 | max |");
-        println!("|---|---|---|---|---|---|");
-        for (op, h) in [
-            ("ingest", &m.ingest),
-            ("diagnose", &m.diagnose),
-            ("query", &m.query),
-        ] {
+        if json_out {
+            println!("{}", metrics_json(&m).to_string());
+        } else {
+            print_metrics_human(&m);
+        }
+        acted = true;
+    }
+    if let Some(raw) = events {
+        let max: u32 = raw
+            .parse()
+            .map_err(|_| anyhow::anyhow!("--events needs a max count (0 = all)"))?;
+        let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
+        let reply = client.events(max)?;
+        if json_out {
+            let rows = reply
+                .events
+                .iter()
+                .map(|ev| {
+                    obj(vec![
+                        ("ts_ns", Json::Num(ev.ts_ns as f64)),
+                        ("slot", Json::Num(ev.slot as f64)),
+                        ("what", Json::Str(ev.describe())),
+                    ])
+                })
+                .collect();
+            let out = obj(vec![
+                ("dropped", Json::Num(reply.dropped as f64)),
+                ("base_unix_ms", Json::Num(reply.base_unix_ms as f64)),
+                ("events", Json::Arr(rows)),
+            ]);
+            println!("{}", out.to_string());
+        } else {
             println!(
-                "| {op} | {} | {} | {} | {} | {} |",
-                h.count,
-                fmt_dur(Duration::from_nanos(h.quantile(0.50) as u64)),
-                fmt_dur(Duration::from_nanos(h.quantile(0.95) as u64)),
-                fmt_dur(Duration::from_nanos(h.quantile(0.99) as u64)),
-                fmt_dur(Duration::from_nanos(h.max_ns)),
+                "event journal: {} retained, {} dropped, base_unix_ms {}",
+                reply.events.len(),
+                reply.dropped,
+                reply.base_unix_ms
             );
+            for ev in &reply.events {
+                println!(
+                    "  [{:>12.6}s w{}] {}",
+                    ev.ts_ns as f64 / 1e9,
+                    ev.slot,
+                    ev.describe()
+                );
+            }
+        }
+        acted = true;
+    }
+    if windows {
+        let (mut client, _info) = SketchClient::connect_with(&addr, &net)?;
+        let reply = client.metrics_window()?;
+        if json_out {
+            println!("{}", windows_json(&reply).to_string());
+        } else {
+            print_windows_human(&reply);
         }
         acted = true;
     }
@@ -723,6 +709,289 @@ fn cmd_connect(args: &mut Args) -> Result<()> {
 fn parse_session(raw: &str, flag: &str) -> Result<u64> {
     raw.parse()
         .map_err(|_| anyhow::anyhow!("{flag} needs a session id"))
+}
+
+fn print_stats_human(reply: &StatsReply) {
+    let daemon = &reply.daemon;
+    println!(
+        "daemon: {}/{} sessions, {} ingested, {} frames served, \
+         {} busy rejections, {} archived, {} shards",
+        daemon.sessions,
+        daemon.max_sessions,
+        fmt_bytes(daemon.ingest_bytes as usize),
+        daemon.frames_served,
+        daemon.busy_rejections,
+        fmt_bytes(daemon.archive_bytes as usize),
+        daemon.shards.max(1),
+    );
+    for sh in &reply.shards {
+        println!(
+            "  shard {}: {} sessions, {} ingest frames ({}), \
+             ingest p50 {} p99 {}, {} frames served",
+            sh.shard,
+            sh.sessions,
+            sh.ingest_frames,
+            fmt_bytes(sh.ingest_bytes as usize),
+            fmt_dur(Duration::from_nanos(sh.ingest_p50_ns)),
+            fmt_dur(Duration::from_nanos(sh.ingest_p99_ns)),
+            sh.frames_served,
+        );
+    }
+    for s in &reply.sessions {
+        let quota = if s.quota_limit == 0 {
+            "unlimited".to_string()
+        } else {
+            format!(
+                "{}/{}",
+                fmt_bytes(s.quota_used as usize),
+                fmt_bytes(s.quota_limit as usize)
+            )
+        };
+        println!(
+            "  session {} {:?}: {} steps, {} ingested, \
+             archive {} intervals / {}, quota {quota}, {} busy",
+            s.id,
+            s.name,
+            s.steps_seen,
+            fmt_bytes(s.ingest_bytes as usize),
+            s.archive_intervals,
+            fmt_bytes(s.archive_bytes as usize),
+            s.busy_rejections,
+        );
+    }
+}
+
+fn stats_json(reply: &StatsReply) -> Json {
+    let d = &reply.daemon;
+    let num = |v: u64| Json::Num(v as f64);
+    let shards = reply
+        .shards
+        .iter()
+        .map(|sh| {
+            obj(vec![
+                ("shard", num(sh.shard)),
+                ("sessions", num(sh.sessions)),
+                ("ingest_frames", num(sh.ingest_frames)),
+                ("ingest_bytes", num(sh.ingest_bytes)),
+                ("ingest_p50_ns", num(sh.ingest_p50_ns)),
+                ("ingest_p99_ns", num(sh.ingest_p99_ns)),
+                ("frames_served", num(sh.frames_served)),
+            ])
+        })
+        .collect();
+    let sessions = reply
+        .sessions
+        .iter()
+        .map(|s| {
+            obj(vec![
+                ("id", num(s.id)),
+                ("name", Json::Str(s.name.clone())),
+                ("steps_seen", num(s.steps_seen)),
+                ("ingest_bytes", num(s.ingest_bytes)),
+                ("archive_bytes", num(s.archive_bytes)),
+                ("archive_intervals", num(s.archive_intervals)),
+                ("busy_rejections", num(s.busy_rejections)),
+                ("quota_used", num(s.quota_used)),
+                ("quota_limit", num(s.quota_limit)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        (
+            "daemon",
+            obj(vec![
+                ("sessions", num(d.sessions)),
+                ("max_sessions", num(d.max_sessions)),
+                ("ingest_bytes", num(d.ingest_bytes)),
+                ("frames_served", num(d.frames_served)),
+                ("archive_bytes", num(d.archive_bytes)),
+                ("busy_rejections", num(d.busy_rejections)),
+                ("shards", num(d.shards)),
+            ]),
+        ),
+        ("shards", Json::Arr(shards)),
+        ("sessions", Json::Arr(sessions)),
+    ])
+}
+
+fn print_metrics_human(m: &MetricsReport) {
+    println!(
+        "uptime {:.1}s | sessions {} open / {} peak / {} opened",
+        m.uptime_ms as f64 / 1e3,
+        m.sessions_open,
+        m.sessions_peak,
+        m.sessions_opened
+    );
+    println!(
+        "ingested {} ({}/s) over {} ingest frames; {} frames served",
+        fmt_bytes(m.ingest_bytes as usize),
+        fmt_bytes(m.ingest_bytes_per_sec() as usize),
+        m.ingest.count,
+        m.frames_served
+    );
+    println!(
+        "busy: {} admission + {} quota = {}",
+        m.busy_admission,
+        m.busy_quota,
+        m.busy_total()
+    );
+    println!(
+        "snapshots: {} ({} total pause)",
+        m.snapshot_count,
+        fmt_dur(Duration::from_nanos(m.snapshot_pause_ns))
+    );
+    println!("| op | count | p50 | p95 | p99 | max |");
+    println!("|---|---|---|---|---|---|");
+    for (op, h) in [
+        ("ingest", &m.ingest),
+        ("diagnose", &m.diagnose),
+        ("query", &m.query),
+    ] {
+        println!(
+            "| {op} | {} | {} | {} | {} | {} |",
+            h.count,
+            fmt_dur(Duration::from_nanos(h.quantile(0.50) as u64)),
+            fmt_dur(Duration::from_nanos(h.quantile(0.95) as u64)),
+            fmt_dur(Duration::from_nanos(h.quantile(0.99) as u64)),
+            fmt_dur(Duration::from_nanos(h.max_ns)),
+        );
+    }
+}
+
+fn hist_json(h: &Histogram) -> Json {
+    let num = |v: u64| Json::Num(v as f64);
+    obj(vec![
+        ("count", num(h.count)),
+        ("p50_ns", Json::Num(h.quantile(0.50))),
+        ("p95_ns", Json::Num(h.quantile(0.95))),
+        ("p99_ns", Json::Num(h.quantile(0.99))),
+        ("max_ns", num(h.max_ns)),
+    ])
+}
+
+fn metrics_json(m: &MetricsReport) -> Json {
+    let num = |v: u64| Json::Num(v as f64);
+    obj(vec![
+        ("uptime_ms", num(m.uptime_ms)),
+        ("sessions_open", num(m.sessions_open)),
+        ("sessions_peak", num(m.sessions_peak)),
+        ("sessions_opened", num(m.sessions_opened)),
+        ("ingest_bytes", num(m.ingest_bytes)),
+        ("ingest_frames", num(m.ingest.count)),
+        ("frames_served", num(m.frames_served)),
+        ("busy_admission", num(m.busy_admission)),
+        ("busy_quota", num(m.busy_quota)),
+        ("snapshot_count", num(m.snapshot_count)),
+        ("snapshot_pause_ns", num(m.snapshot_pause_ns)),
+        ("ingest", hist_json(&m.ingest)),
+        ("diagnose", hist_json(&m.diagnose)),
+        ("query", hist_json(&m.query)),
+    ])
+}
+
+fn windows_json(reply: &MetricsWindowReply) -> Json {
+    let num = |v: u64| Json::Num(v as f64);
+    let r = &reply.report;
+    let totals = |t: &sketchgrad::serve::obs::WindowTotals| {
+        obj(vec![
+            ("ingest_frames", num(t.ingest_frames)),
+            ("ingest_bytes", num(t.ingest_bytes)),
+            ("busy", num(t.busy)),
+            ("frames_served", num(t.frames_served)),
+        ])
+    };
+    let buckets = r
+        .buckets
+        .iter()
+        .map(|b| {
+            obj(vec![
+                ("index", num(b.index)),
+                ("start_ms", num(b.start_ms)),
+                ("dur_ms", num(b.dur_ms)),
+                ("ingest_frames", num(b.ingest_frames)),
+                ("ingest_bytes", num(b.ingest_bytes)),
+                ("busy", num(b.busy)),
+                ("frames_served", num(b.frames_served)),
+                ("ingest_p50_ns", num(b.ingest_p50_ns)),
+                ("ingest_p99_ns", num(b.ingest_p99_ns)),
+                ("throughput", Json::Num(b.throughput())),
+            ])
+        })
+        .collect();
+    let health = reply
+        .health
+        .iter()
+        .map(|s| {
+            let layers = s
+                .layers
+                .iter()
+                .map(|l| {
+                    obj(vec![
+                        ("z_norm", Json::Num(l.z_norm)),
+                        ("top_sigma", Json::Num(l.top_sigma)),
+                        ("stable_rank", Json::Num(l.stable_rank)),
+                    ])
+                })
+                .collect();
+            obj(vec![
+                ("session", num(s.session)),
+                ("name", Json::Str(s.name.clone())),
+                ("layers", Json::Arr(layers)),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("interval_ms", num(r.interval_ms)),
+        ("capacity", num(r.capacity)),
+        ("baseline", totals(&r.baseline)),
+        ("evicted", totals(&r.evicted)),
+        ("open", totals(&r.open.totals())),
+        ("total", totals(&r.total())),
+        ("buckets", Json::Arr(buckets)),
+        ("health", Json::Arr(health)),
+    ])
+}
+
+fn print_windows_human(reply: &MetricsWindowReply) {
+    let r = &reply.report;
+    let t = r.total();
+    println!(
+        "windows: {} x {}ms retained; lifetime ingest frames {} \
+         (baseline {} + evicted {} + windows {} + open {})",
+        r.buckets.len(),
+        r.interval_ms,
+        t.ingest_frames,
+        r.baseline.ingest_frames,
+        r.evicted.ingest_frames,
+        t.ingest_frames
+            .saturating_sub(r.baseline.ingest_frames)
+            .saturating_sub(r.evicted.ingest_frames)
+            .saturating_sub(r.open.ingest_frames),
+        r.open.ingest_frames,
+    );
+    for b in &r.buckets {
+        println!(
+            "  [{:>8}ms +{:>5}ms] {:>6} frames ({:.1}/s), {} busy, \
+             ingest p50 {} p99 {}",
+            b.start_ms,
+            b.dur_ms,
+            b.ingest_frames,
+            b.throughput(),
+            b.busy,
+            fmt_dur(Duration::from_nanos(b.ingest_p50_ns)),
+            fmt_dur(Duration::from_nanos(b.ingest_p99_ns)),
+        );
+    }
+    for s in &reply.health {
+        println!("  session {} {:?}:", s.session, s.name);
+        for (i, l) in s.layers.iter().enumerate() {
+            println!(
+                "    layer {i}: ||Z||_F {:.4}, top sigma {:.4}, \
+                 stable rank {:.3}",
+                l.z_norm, l.top_sigma, l.stable_rank
+            );
+        }
+    }
 }
 
 fn cmd_memory_table(args: &mut Args) -> Result<()> {

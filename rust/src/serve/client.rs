@@ -39,11 +39,12 @@ use super::codec::Enc;
 use super::daemon::recon_errors;
 use super::error::Error;
 use super::metrics::MetricsReport;
+use super::obs::{Event, SessionHealth, WindowReport};
 use super::proto::{
     self, monitor_config, read_frame_reusing,
     write_frame_versioned_reusing, ArchiveInfo, DaemonStats, Request,
     Response, SessionSpec, SessionStats, ShardStats, METRICS_MIN_VERSION,
-    PROTO_MIN_VERSION, PROTO_VERSION,
+    OBS_MIN_VERSION, PROTO_MIN_VERSION, PROTO_VERSION,
 };
 
 /// Capacity info from the `Hello` handshake.
@@ -71,6 +72,25 @@ pub struct DiagnoseReply {
     pub steps_seen: u64,
     pub engine_bytes: u64,
     pub monitor_bytes: u64,
+}
+
+/// One `Events` reply: the daemon's merged event journal, newest-last.
+#[derive(Clone, Debug)]
+pub struct EventsReply {
+    /// Events overwritten before they could ever be read (exact count).
+    pub dropped: u64,
+    /// Unix epoch milliseconds at daemon start; add `ts_ns` to place an
+    /// event on the wall clock.
+    pub base_unix_ms: u64,
+    pub events: Vec<Event>,
+}
+
+/// One `MetricsWindow` reply: the windowed time-series ring plus the
+/// per-session sketch-health gauges captured at the same instant.
+#[derive(Clone, Debug)]
+pub struct MetricsWindowReply {
+    pub report: WindowReport,
+    pub health: Vec<SessionHealth>,
 }
 
 /// One `Stats` reply: daemon-wide counters, one row per session, and
@@ -343,6 +363,52 @@ impl SketchClient {
         match self.round_trip(&Request::Metrics)? {
             Response::MetricsOk(report) => Ok(report),
             other => Err(unexpected("MetricsOk", &other)),
+        }
+    }
+
+    /// Sanity check for the v5 observability ops, mirroring the
+    /// `metrics()` gate: fail client-side on an older connection
+    /// instead of burning a round trip on a typed rejection.
+    fn require_obs(&self, op: &str) -> Result<(), Error> {
+        if self.version < OBS_MIN_VERSION {
+            return Err(Error::Protocol(format!(
+                "{op} requires proto v{OBS_MIN_VERSION}, connection \
+                 negotiated v{}",
+                self.version
+            )));
+        }
+        Ok(())
+    }
+
+    /// Merged event-journal dump (proto v5).  `max == 0` returns every
+    /// retained event; otherwise the newest `max` survive the merge.
+    pub fn events(&mut self, max: u32) -> Result<EventsReply, Error> {
+        self.require_obs("Events")?;
+        match self.round_trip(&Request::Events { max })? {
+            Response::EventsOk {
+                dropped,
+                base_unix_ms,
+                events,
+            } => Ok(EventsReply {
+                dropped,
+                base_unix_ms,
+                events,
+            }),
+            other => Err(unexpected("EventsOk", &other)),
+        }
+    }
+
+    /// Windowed time-series report plus per-session sketch-health
+    /// gauges (proto v5).  The report's retained-bucket sums, baseline,
+    /// evicted totals and open-bucket partials add up exactly to the
+    /// daemon's lifetime counters at the capture instant.
+    pub fn metrics_window(&mut self) -> Result<MetricsWindowReply, Error> {
+        self.require_obs("MetricsWindow")?;
+        match self.round_trip(&Request::MetricsWindow)? {
+            Response::MetricsWindowOk { report, health } => {
+                Ok(MetricsWindowReply { report, health })
+            }
+            other => Err(unexpected("MetricsWindowOk", &other)),
         }
     }
 

@@ -61,11 +61,16 @@ use crate::util::cli::Args;
 use super::codec::Enc;
 use super::error::Error;
 use super::metrics::{MetricsState, ServeMetrics};
+use super::obs::events::log_tag;
+use super::obs::{
+    expo, layer_health, EventKind, JournalWriter, Level, Obs, Sample,
+    SessionHealth,
+};
 use super::poll::{Event, Interest, Poller};
 use super::proto::{
     self, monitor_config, ArchiveInfo, DaemonStats, FrameHeader, Request,
     Response, SessionStats, ShardStats, FRAME_HEADER_LEN,
-    METRICS_MIN_VERSION, PROTO_MIN_VERSION, PROTO_VERSION,
+    METRICS_MIN_VERSION, OBS_MIN_VERSION, PROTO_MIN_VERSION, PROTO_VERSION,
 };
 use super::store::{DaemonSnapshot, SessionRecord, SnapshotStore};
 
@@ -73,6 +78,9 @@ use super::store::{DaemonSnapshot, SessionRecord, SnapshotStore};
 /// hub).
 struct Tenant {
     engine: SketchEngine,
+    /// Sketch rank last journaled for this session; an ingest that
+    /// observes a different engine rank emits a `rank-change` event.
+    rank: u32,
     /// Ingest payload bytes since the session's last `Diagnose`.
     quota_used: u64,
     /// Lifetime ingest payload bytes (Stats counter; persisted).
@@ -122,6 +130,9 @@ struct Shared {
     sessions_open: AtomicU64,
     /// Process start, for the merged report's `uptime_ms`.
     started: Instant,
+    /// Observability layer: event journal (writer 0 = control plane,
+    /// `1 + k` = shard `k`), window ring, log filter (DESIGN.md §10).
+    obs: Obs,
 }
 
 impl Shared {
@@ -139,6 +150,97 @@ fn lock(state: &Mutex<State>) -> MutexGuard<'_, State> {
     // A poisoned lock means a handler panicked; the state itself is a
     // BTreeMap of value types and stays usable.
     state.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// Exact cross-shard merge of the lifetime counters plus the summed
+/// (process-scoped) reply count — the one capture every daemon-wide
+/// view (`Metrics`, window ticks, the exposition endpoint) is built
+/// from, so they all agree by construction.
+fn merge_shard_metrics(shards: &[Shard]) -> (MetricsState, u64) {
+    let mut state = MetricsState::default();
+    let mut frames_served = 0u64;
+    for shard in shards {
+        state.merge(&shard.metrics.state());
+        frames_served += shard.metrics.frames_served();
+    }
+    (state, frames_served)
+}
+
+fn merged_sample(shared: &Shared) -> Sample {
+    let (state, frames_served) = merge_shard_metrics(&shared.shards);
+    Sample::from_state(&state, frames_served)
+}
+
+/// Per-session sketch-health gauges, one shard lock at a time, sorted
+/// by session id.  The gauges are recomputed from the resident Z
+/// sketches on demand — health is polled (scrapes, v5 ops), not paid
+/// for on the ingest path.
+fn collect_health(shared: &Shared) -> Vec<SessionHealth> {
+    let mut out = Vec::new();
+    for shard in &shared.shards {
+        let st = lock(&shard.state);
+        for s in st.hub.sessions() {
+            let raw = s.id.raw();
+            let Some(tenant) = st.tenants.get(&raw) else {
+                continue;
+            };
+            out.push(SessionHealth {
+                session: raw,
+                name: s.name.clone(),
+                layers: tenant
+                    .engine
+                    .layers()
+                    .iter()
+                    .map(|t| layer_health(&t.z))
+                    .collect(),
+            });
+        }
+    }
+    out.sort_by_key(|h| h.session);
+    out
+}
+
+/// Per-shard counter rows (the v4 `Stats` rows, also scraped via
+/// `/metrics`).
+fn shard_rows(shared: &Shared) -> Vec<ShardStats> {
+    let mut rows = Vec::with_capacity(shared.shards.len());
+    for (i, shard) in shared.shards.iter().enumerate() {
+        let sessions = lock(&shard.state).hub.len() as u64;
+        let ms = shard.metrics.state();
+        rows.push(ShardStats {
+            shard: i as u64,
+            sessions,
+            ingest_frames: ms.ingest.count,
+            ingest_bytes: ms.ingest_bytes,
+            ingest_p50_ns: ms.ingest.quantile(0.5) as u64,
+            ingest_p99_ns: ms.ingest.quantile(0.99) as u64,
+            frames_served: shard.metrics.frames_served(),
+        });
+    }
+    rows
+}
+
+/// Assemble everything `GET /metrics` renders.  Same underlying
+/// captures as the protocol ops, so scraper and client cross-check to
+/// exact equality.
+fn expo_snapshot(shared: &Shared) -> expo::ExpoSnapshot {
+    let (state, frames_served) = merge_shard_metrics(&shared.shards);
+    let current = Sample::from_state(&state, frames_served);
+    let now_ms = shared.started.elapsed().as_millis() as u64;
+    let windows = shared.obs.windows.report(now_ms, &current);
+    let report = state.into_report(
+        now_ms,
+        shared.sessions_open.load(Ordering::SeqCst),
+        frames_served,
+    );
+    expo::ExpoSnapshot {
+        report,
+        shards: shard_rows(shared),
+        windows,
+        health: collect_health(shared),
+        journal_total: shared.obs.journal.total(),
+        journal_dropped: shared.obs.journal.dropped(),
+    }
 }
 
 /// Per-layer relative reconstruction errors for a just-ingested batch:
@@ -166,7 +268,10 @@ pub fn recon_errors(engine: &SketchEngine, acts: &[Mat]) -> Result<Vec<f64>> {
 /// write fails.  Sessions are sorted by id and the per-shard metrics
 /// are merged into one record, so the snapshot format is byte-wise
 /// indistinguishable from the pre-shard daemon's.
-fn save_snapshot(shared: &Shared) -> Result<(u64, u64)> {
+fn save_snapshot(
+    shared: &Shared,
+    journal: &JournalWriter<'_>,
+) -> Result<(u64, u64)> {
     let t0 = Instant::now();
     shared.dirty.store(false, Ordering::SeqCst);
     let mut sessions = Vec::new();
@@ -200,7 +305,12 @@ fn save_snapshot(shared: &Shared) -> Result<(u64, u64)> {
             // captures are the slices that stall concurrent ingest.
             // Snapshot accounting lives on shard 0 (where a restored
             // merged record also lands).
-            shared.shards[0].metrics.note_snapshot(t0.elapsed());
+            let pause = t0.elapsed();
+            shared.shards[0].metrics.note_snapshot(pause);
+            journal.emit(EventKind::Snapshot {
+                sessions: count,
+                pause_ns: pause.as_nanos().min(u64::MAX as u128) as u64,
+            });
             Ok((bytes, count))
         }
         Err(e) => {
@@ -220,6 +330,11 @@ fn handle_request(
     req: Request,
     payload_len: usize,
 ) -> Result<Response, Error> {
+    // This thread's journal writer: handle_request always runs on the
+    // connection's home shard thread (cross-shard requests lock the
+    // owner's state but execute here), so `home`'s slot keeps its
+    // single-writer guarantee.
+    let journal = shared.obs.shard(home);
     match req {
         Request::Hello { client: _ } => Ok(Response::HelloOk {
             server: concat!("sketchd/", env!("CARGO_PKG_VERSION"))
@@ -237,6 +352,7 @@ fn handle_request(
             if prev >= limit {
                 shared.sessions_open.fetch_sub(1, Ordering::SeqCst);
                 shared.shards[home].metrics.note_busy_admission();
+                journal.emit(EventKind::BusyAdmission { used: prev, limit });
                 return Err(Error::Busy { used: prev, limit });
             }
             let undo_admission = || {
@@ -290,6 +406,7 @@ fn handle_request(
                 raw,
                 Tenant {
                     engine,
+                    rank: spec.rank as u32,
                     quota_used: 0,
                     ingest_bytes: 0,
                     busy_rejections: 0,
@@ -304,6 +421,7 @@ fn handle_request(
             // Record the *global* open count, so the merged peak (a max
             // across shards) is the true daemon-wide peak.
             shard.metrics.note_session_open(prev + 1);
+            journal.emit(EventKind::SessionOpen { session: id.raw() });
             Ok(Response::SessionOpened { session: id.raw() })
         }
         Request::Ingest {
@@ -323,6 +441,10 @@ fn handle_request(
             if quota > 0 && tenant.quota_used + payload_len as u64 > quota {
                 tenant.busy_rejections += 1;
                 shard.metrics.note_busy_quota();
+                journal.emit(EventKind::BusyQuota {
+                    session,
+                    used: tenant.quota_used,
+                });
                 return Err(Error::Busy {
                     used: tenant.quota_used,
                     limit: quota,
@@ -331,6 +453,18 @@ fn handle_request(
             tenant.engine.ingest(&acts).map_err(|e| {
                 Error::Invalid(format!("ingest rejected: {e}"))
             })?;
+            // Journal a rank transition if the engine's rank moved
+            // (future adaptive-rank resizing; static engines never
+            // trigger this).
+            let engine_rank = tenant.engine.config().rank as u32;
+            if engine_rank != tenant.rank {
+                journal.emit(EventKind::RankChange {
+                    session,
+                    from: tenant.rank,
+                    to: engine_rank,
+                });
+                tenant.rank = engine_rank;
+            }
             tenant.quota_used += payload_len as u64;
             tenant.ingest_bytes += payload_len as u64;
             shard.metrics.note_ingest_bytes(payload_len as u64);
@@ -398,7 +532,7 @@ fn handle_request(
                 monitor_bytes: monitor_bytes as u64,
             })
         }
-        Request::Snapshot => match save_snapshot(shared) {
+        Request::Snapshot => match save_snapshot(shared, &journal) {
             Ok((bytes, sessions)) => Ok(Response::SnapshotOk {
                 path: shared.cfg.snapshot_path.clone(),
                 bytes,
@@ -417,10 +551,11 @@ fn handle_request(
             shared.dirty.store(true, Ordering::SeqCst);
             drop(st);
             shared.sessions_open.fetch_sub(1, Ordering::SeqCst);
+            journal.emit(EventKind::SessionClose { session });
             Ok(Response::Closed { session })
         }
         Request::Shutdown => {
-            let sessions = save_snapshot(shared).map_err(|e| {
+            let sessions = save_snapshot(shared, &journal).map_err(|e| {
                 Error::Internal(format!("shutdown snapshot failed: {e:#}"))
             })?;
             shared.shutdown.store(true, Ordering::SeqCst);
@@ -493,18 +628,31 @@ fn handle_request(
             })
         }
         Request::Metrics => {
-            let mut state = MetricsState::default();
-            let mut frames_served = 0u64;
-            for shard in &shared.shards {
-                state.merge(&shard.metrics.state());
-                frames_served += shard.metrics.frames_served();
-            }
+            let (state, frames_served) =
+                merge_shard_metrics(&shared.shards);
             let open = shared.sessions_open.load(Ordering::SeqCst);
             Ok(Response::MetricsOk(state.into_report(
                 shared.started.elapsed().as_millis() as u64,
                 open,
                 frames_served,
             )))
+        }
+        Request::Events { max } => {
+            let (events, dropped) = shared.obs.journal.merged(max as usize);
+            Ok(Response::EventsOk {
+                dropped,
+                base_unix_ms: shared.obs.journal.base_unix_ms(),
+                events,
+            })
+        }
+        Request::MetricsWindow => {
+            let current = merged_sample(shared);
+            let now_ms = shared.started.elapsed().as_millis() as u64;
+            let report = shared.obs.windows.report(now_ms, &current);
+            Ok(Response::MetricsWindowOk {
+                report,
+                health: collect_health(shared),
+            })
         }
         Request::QueryTrajectory { session } => {
             let st = lock(&shared.owner(session).state);
@@ -738,6 +886,15 @@ fn process_frame(
             "Metrics requires proto v{METRICS_MIN_VERSION}, frame is v{}",
             header.version
         )))
+    } else if (header.msg == proto::msg::EVENTS
+        || header.msg == proto::msg::METRICS_WINDOW)
+        && header.version < OBS_MIN_VERSION
+    {
+        Err(Error::UnsupportedVersion(format!(
+            "Events/MetricsWindow require proto v{OBS_MIN_VERSION}, \
+             frame is v{}",
+            header.version
+        )))
     } else {
         match Request::decode(header.msg, &conn.payload) {
             Ok(req) => {
@@ -745,9 +902,18 @@ fn process_frame(
                 let t0 = Instant::now();
                 let r =
                     handle_request(shared, home, req, conn.payload.len());
+                let elapsed = t0.elapsed();
                 shared.shards[shard]
                     .metrics
-                    .observe_request(header.msg, t0.elapsed());
+                    .observe_request(header.msg, elapsed);
+                let elapsed_ns =
+                    elapsed.as_nanos().min(u64::MAX as u128) as u64;
+                if elapsed_ns >= shared.obs.slow_ns {
+                    shared.obs.shard(home).emit(EventKind::SlowRequest {
+                        msg: header.msg,
+                        elapsed_ns,
+                    });
+                }
                 r
             }
             Err(e) => Err(Error::BadFrame(e.to_string())),
@@ -821,13 +987,21 @@ fn service_readable(shared: &Shared, home: usize, conn: &mut Conn) -> bool {
 /// is treated as a *hint* source (level-triggered epoll or the
 /// portable fallback): a spurious "ready" just costs one `WouldBlock`.
 fn shard_loop(shared: &Shared, home: usize, rx: mpsc::Receiver<TcpStream>) {
+    let journal = shared.obs.shard(home);
     let mut poller = match Poller::new() {
         Ok(p) => p,
         Err(e) => {
-            eprintln!("sketchd: shard {home}: poller init failed: {e}");
+            shared.obs.log(
+                &journal,
+                Level::Error,
+                log_tag::POLLER_INIT_FAILED,
+                home as u64,
+                || format!("shard {home}: poller init failed: {e}"),
+            );
             return;
         }
     };
+    let mut accepted: u64 = 0;
     let mut conns: BTreeMap<u64, Conn> = BTreeMap::new();
     let mut next_token: u64 = 1;
     let mut events: Vec<Event> = Vec::new();
@@ -850,6 +1024,8 @@ fn shard_loop(shared: &Shared, home: usize, rx: mpsc::Receiver<TcpStream>) {
                         continue;
                     }
                     conns.insert(token, Conn::new(stream));
+                    accepted += 1;
+                    journal.emit(EventKind::ShardAccept { conn: accepted });
                 }
                 Err(mpsc::TryRecvError::Empty)
                 | Err(mpsc::TryRecvError::Disconnected) => break,
@@ -937,6 +1113,8 @@ fn shard_loop(shared: &Shared, home: usize, rx: mpsc::Receiver<TcpStream>) {
 /// before serving starts.
 pub struct Daemon {
     listener: TcpListener,
+    /// Bound HTTP exposition socket (`cfg.obs.addr`; None = disabled).
+    obs_listener: Option<TcpListener>,
     shared: Arc<Shared>,
 }
 
@@ -983,13 +1161,16 @@ impl Daemon {
                 // The hub does not persist archive accounting; re-derive
                 // it from the restored ring.
                 st.hub.report_archive_bytes(id, archive.bytes())?;
+                let engine = SketchEngine::from_snapshot_with_pool(
+                    &rec.engine,
+                    Arc::clone(&shard.pool),
+                )?;
+                let rank = engine.config().rank as u32;
                 st.tenants.insert(
                     rec.session.id,
                     Tenant {
-                        engine: SketchEngine::from_snapshot_with_pool(
-                            &rec.engine,
-                            Arc::clone(&shard.pool),
-                        )?,
+                        engine,
+                        rank,
                         quota_used: rec.quota_used,
                         ingest_bytes: rec.ingest_bytes,
                         busy_rejections: rec.busy_rejections,
@@ -1006,8 +1187,26 @@ impl Daemon {
                 restored += 1;
             }
         }
+        // The window ring's baseline is the lifetime capture right
+        // here — restored counters never show up as a fake first
+        // window's traffic.
+        let (state, frames_served) = merge_shard_metrics(&shards);
+        let obs = Obs::new(
+            &cfg.obs,
+            n_shards,
+            Sample::from_state(&state, frames_served),
+        );
+        let obs_listener = if cfg.obs.addr.is_empty() {
+            None
+        } else {
+            let l = TcpListener::bind(&cfg.obs.addr).with_context(|| {
+                format!("binding obs endpoint {}", cfg.obs.addr)
+            })?;
+            Some(l)
+        };
         Ok(Daemon {
             listener,
+            obs_listener,
             shared: Arc::new(Shared {
                 cfg,
                 par,
@@ -1017,12 +1216,20 @@ impl Daemon {
                 dirty: AtomicBool::new(false),
                 sessions_open: AtomicU64::new(restored),
                 started: Instant::now(),
+                obs,
             }),
         })
     }
 
     pub fn local_addr(&self) -> Result<SocketAddr> {
         Ok(self.listener.local_addr()?)
+    }
+
+    /// The bound exposition-endpoint address (None when disabled).
+    pub fn obs_local_addr(&self) -> Option<SocketAddr> {
+        self.obs_listener
+            .as_ref()
+            .and_then(|l| l.local_addr().ok())
     }
 
     /// Sessions currently held (restored + live) across all shards.
@@ -1037,7 +1244,8 @@ impl Daemon {
 
     /// Serve until the shutdown flag is set (by a `Shutdown` frame or a
     /// [`DaemonHandle`]), then write a final snapshot if state changed.
-    pub fn run(self) -> Result<()> {
+    pub fn run(mut self) -> Result<()> {
+        let obs_listener = self.obs_listener.take();
         let shared: &Shared = &self.shared;
         let n = shared.shards.len();
         let mut last_snapshot = Instant::now();
@@ -1047,6 +1255,28 @@ impl Daemon {
                 let (tx, rx) = mpsc::channel::<TcpStream>();
                 senders.push(tx);
                 s.spawn(move || shard_loop(shared, home, rx));
+            }
+            // Exposition listener: one thread, GET-only, renders from
+            // the same merged captures as the protocol ops.
+            if let Some(listener) = obs_listener {
+                s.spawn(move || {
+                    let handler = |path: &str| match path {
+                        "/metrics" => Some(expo::render_metrics(
+                            &expo_snapshot(shared),
+                        )),
+                        "/events" => {
+                            let (events, dropped) =
+                                shared.obs.journal.merged(0);
+                            Some(expo::render_events(
+                                &events,
+                                dropped,
+                                shared.obs.journal.base_unix_ms(),
+                            ))
+                        }
+                        _ => None,
+                    };
+                    expo::serve(listener, &shared.shutdown, &handler);
+                });
             }
             // Event-driven accept when the poller is available; plain
             // paced accept otherwise.
@@ -1066,14 +1296,34 @@ impl Daemon {
                 if shared.shutdown.load(Ordering::SeqCst) {
                     break;
                 }
+                // Close a time-series window whenever one is due; the
+                // poller wait below bounds the tick jitter to ~50ms.
+                let now_ms =
+                    shared.started.elapsed().as_millis() as u64;
+                if shared.obs.windows.due(now_ms) {
+                    shared
+                        .obs
+                        .windows
+                        .tick(now_ms, merged_sample(shared));
+                }
                 let interval = shared.cfg.snapshot_interval_secs;
                 if interval > 0
                     && last_snapshot.elapsed().as_secs() >= interval
                 {
                     if shared.dirty.load(Ordering::SeqCst) {
-                        if let Err(e) = save_snapshot(shared) {
-                            eprintln!(
-                                "sketchd: periodic snapshot failed: {e:#}"
+                        if let Err(e) =
+                            save_snapshot(shared, &shared.obs.control())
+                        {
+                            shared.obs.log(
+                                &shared.obs.control(),
+                                Level::Error,
+                                log_tag::SNAPSHOT_FAILED,
+                                0,
+                                || {
+                                    format!(
+                                        "periodic snapshot failed: {e:#}"
+                                    )
+                                },
                             );
                         }
                     }
@@ -1099,7 +1349,13 @@ impl Daemon {
                             break;
                         }
                         Err(e) => {
-                            eprintln!("sketchd: accept failed: {e}");
+                            shared.obs.log(
+                                &shared.obs.control(),
+                                Level::Error,
+                                log_tag::ACCEPT_FAILED,
+                                0,
+                                || format!("accept failed: {e}"),
+                            );
                             thread::sleep(Duration::from_millis(50));
                             break;
                         }
@@ -1109,7 +1365,7 @@ impl Daemon {
             drop(senders);
         });
         if shared.dirty.load(Ordering::SeqCst) {
-            save_snapshot(shared)?;
+            save_snapshot(shared, &shared.obs.control())?;
         }
         Ok(())
     }
@@ -1119,15 +1375,22 @@ impl Daemon {
     /// loopback tests and benches.
     pub fn spawn(self) -> Result<DaemonHandle> {
         let addr = self.local_addr()?;
+        let obs_addr = self.obs_local_addr();
         let shared = Arc::clone(&self.shared);
         let join = thread::spawn(move || self.run());
-        Ok(DaemonHandle { addr, shared, join })
+        Ok(DaemonHandle {
+            addr,
+            obs_addr,
+            shared,
+            join,
+        })
     }
 }
 
 /// Handle to an in-process daemon spawned with [`Daemon::spawn`].
 pub struct DaemonHandle {
     addr: SocketAddr,
+    obs_addr: Option<SocketAddr>,
     shared: Arc<Shared>,
     join: thread::JoinHandle<Result<()>>,
 }
@@ -1135,6 +1398,11 @@ pub struct DaemonHandle {
 impl DaemonHandle {
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The exposition endpoint's bound address (None when disabled).
+    pub fn obs_addr(&self) -> Option<SocketAddr> {
+        self.obs_addr
     }
 
     /// Request shutdown and wait for the final snapshot to land.
@@ -1168,6 +1436,13 @@ pub fn serve_from_args(args: &mut Args) -> Result<()> {
         args.opt_usize("archive-capacity", cfg.archive.capacity)?;
     cfg.archive.stride =
         args.opt_usize("archive-stride", cfg.archive.stride)?;
+    cfg.obs.addr = args.opt_or("obs-addr", &cfg.obs.addr);
+    cfg.obs.window_ms = args.opt_u64("obs-window-ms", cfg.obs.window_ms)?;
+    cfg.obs.window_count =
+        args.opt_usize("obs-window-count", cfg.obs.window_count)?;
+    cfg.obs.journal_capacity = args
+        .opt_usize("obs-journal-capacity", cfg.obs.journal_capacity)?;
+    cfg.obs.slow_ms = args.opt_u64("obs-slow-ms", cfg.obs.slow_ms)?;
     args.finish()?;
 
     let daemon = Daemon::bind(cfg)?;
@@ -1179,5 +1454,8 @@ pub fn serve_from_args(args: &mut Args) -> Result<()> {
         daemon.shard_count(),
         daemon.shared.cfg.snapshot_path,
     );
+    if let Some(obs) = daemon.obs_local_addr() {
+        println!("sketchd obs endpoint on http://{obs} (/metrics, /events)");
+    }
     daemon.run()
 }

@@ -899,4 +899,121 @@ mod tests {
         assert!((r.ingest_bytes_per_sec() - 2048.0).abs() < 1e-9);
         assert_eq!(MetricsReport::default().ingest_bytes_per_sec(), 0.0);
     }
+
+    /// Build one randomized shard-lifetime state: counters plus traffic
+    /// in all three histograms spanning several decades of latency.
+    fn random_state(rng: &mut Rng) -> MetricsState {
+        let mut st = MetricsState {
+            ingest_bytes: rng.below(1 << 30),
+            sessions_peak: rng.below(64),
+            sessions_opened: rng.below(1000),
+            busy_admission: rng.below(50),
+            busy_quota: rng.below(50),
+            snapshot_count: rng.below(10),
+            snapshot_pause_ns: rng.below(1 << 30),
+            ..MetricsState::default()
+        };
+        for _ in 0..rng.below(300) {
+            st.ingest
+                .record(10f64.powf(rng.uniform_in(1.0, 8.0)) as u64);
+        }
+        for _ in 0..rng.below(100) {
+            st.diagnose
+                .record(10f64.powf(rng.uniform_in(1.0, 7.0)) as u64);
+        }
+        for _ in 0..rng.below(100) {
+            st.query
+                .record(10f64.powf(rng.uniform_in(1.0, 7.0)) as u64);
+        }
+        st
+    }
+
+    /// Property: merging shard histograms is order-independent — every
+    /// permutation of the same shard set folds to the identical
+    /// histogram, bit for bit.  The daemon's Metrics/Stats/snapshot
+    /// paths iterate shards in whatever order the lock dance yields, so
+    /// commutativity is what makes the merged report well-defined.
+    #[test]
+    fn histogram_merge_is_commutative_across_shard_orders() {
+        let mut rng = Rng::new(0xC0117);
+        for trial in 0..20 {
+            let shards: Vec<Histogram> = (0..5)
+                .map(|_| {
+                    let mut h = Histogram::new();
+                    for _ in 0..rng.below(400) {
+                        h.record(10f64.powf(rng.uniform_in(0.0, 9.0)) as u64);
+                    }
+                    h
+                })
+                .collect();
+            let fold = |order: &[usize]| {
+                let mut m = Histogram::new();
+                for &i in order {
+                    m.merge(&shards[i]);
+                }
+                m
+            };
+            let mut order: Vec<usize> = (0..shards.len()).collect();
+            let reference = fold(&order);
+            for _ in 0..6 {
+                rng.shuffle(&mut order);
+                assert_eq!(
+                    fold(&order),
+                    reference,
+                    "trial {trial}: merge order {order:?} changed the \
+                     merged histogram"
+                );
+            }
+            // Exactness: merged totals are the sums of the parts.
+            assert_eq!(
+                reference.count,
+                shards.iter().map(|h| h.count).sum::<u64>()
+            );
+            assert_eq!(
+                reference.sum_ns,
+                shards.iter().map(|h| h.sum_ns).sum::<u64>()
+            );
+        }
+    }
+
+    /// The same order-independence property for whole shard
+    /// [`MetricsState`]s, which is what the daemon actually merges.
+    #[test]
+    fn metrics_state_merge_is_commutative_across_shard_orders() {
+        let mut rng = Rng::new(0xD157);
+        for trial in 0..10 {
+            let shards: Vec<MetricsState> =
+                (0..4).map(|_| random_state(&mut rng)).collect();
+            let fold = |order: &[usize]| {
+                let mut m = MetricsState::default();
+                for &i in order {
+                    m.merge(&shards[i]);
+                }
+                m
+            };
+            let mut order: Vec<usize> = (0..shards.len()).collect();
+            let reference = fold(&order);
+            for _ in 0..6 {
+                rng.shuffle(&mut order);
+                assert_eq!(
+                    fold(&order),
+                    reference,
+                    "trial {trial}: shard order {order:?} changed the \
+                     merged state"
+                );
+            }
+            assert_eq!(
+                reference.ingest_bytes,
+                shards.iter().map(|s| s.ingest_bytes).sum::<u64>()
+            );
+            assert_eq!(
+                reference.sessions_peak,
+                shards.iter().map(|s| s.sessions_peak).max().unwrap()
+            );
+            assert_eq!(
+                reference.ingest.count,
+                shards.iter().map(|s| s.ingest.count).sum::<u64>()
+            );
+        }
+    }
 }

@@ -24,6 +24,12 @@
 //!   merged exactly across shards.
 //! * [`poll`] — std-only readiness: epoll on Linux, a portable
 //!   hint-based fallback elsewhere (DESIGN.md §9).
+//! * [`obs`] — the observability layer (DESIGN.md §10): lock-free
+//!   event journal, windowed time-series ring whose sums equal
+//!   lifetime-counter deltas exactly, per-session sketch-health
+//!   gauges, and the std-only HTTP exposition endpoint
+//!   (`--obs-addr`), mirrored by the v5 `Events` / `MetricsWindow`
+//!   protocol ops.
 //! * [`error`] — the one serve [`Error`] vocabulary; wire codes map
 //!   through the single `code()`/`from_code()` table.
 //! * [`daemon`] — the sharded nonblocking TCP server: N connection
@@ -40,13 +46,14 @@ pub mod codec;
 pub mod daemon;
 pub mod error;
 pub mod metrics;
+pub mod obs;
 pub mod poll;
 pub mod proto;
 pub mod store;
 
 pub use client::{
-    run_probe, run_probe_resume, DiagnoseReply, IngestReply, ServerInfo,
-    SessionHandle, SketchClient, StatsReply,
+    run_probe, run_probe_resume, DiagnoseReply, EventsReply, IngestReply,
+    MetricsWindowReply, ServerInfo, SessionHandle, SketchClient, StatsReply,
 };
 pub use daemon::{recon_errors, serve_from_args, Daemon, DaemonHandle};
 pub use error::Error;
@@ -54,9 +61,10 @@ pub use error::Error;
 pub use error::ServeError;
 pub use metrics::{Histogram, MetricsReport, MetricsState, ServeMetrics};
 pub use poll::{Event, Interest, Poller};
+pub use obs::{LayerHealth, SessionHealth};
 pub use proto::{
     monitor_config, ArchiveInfo, DaemonStats, ErrorCode, Request, Response,
     SessionSpec, SessionStats, ShardStats, METRICS_MIN_VERSION,
-    PROTO_MIN_VERSION, PROTO_VERSION,
+    OBS_MIN_VERSION, PROTO_MIN_VERSION, PROTO_VERSION,
 };
 pub use store::{DaemonSnapshot, SessionRecord, SnapshotStore};

@@ -1,0 +1,524 @@
+//! Std-only HTTP/1.1 text exposition endpoint (DESIGN.md §10).
+//!
+//! One listener thread (`sketchd --obs-addr`), two routes:
+//!
+//! - `GET /metrics` — Prometheus text exposition (version 0.0.4):
+//!   the merged lifetime counters, latency summaries, per-shard
+//!   counters, window-ring balance terms, journal totals, and the
+//!   per-session sketch-health gauges.
+//! - `GET /events` — the merged chronological journal dump, one event
+//!   per line, headed by the exact totals.
+//!
+//! The protocol surface (v5 `Events` / `MetricsWindow`) serves the
+//! same data, so a scraper and a protocol client can be cross-checked
+//! to equality — which is exactly what the CI scrape leg does.
+//!
+//! The server is deliberately minimal: GET only, `Connection: close`,
+//! bounded request read (8 KiB / 2 s), no keep-alive, no TLS.  It
+//! renders from an [`ExpoSnapshot`] assembled by the daemon, so this
+//! module owns formatting and transport but no daemon state.
+
+use std::io::{Read, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use super::events::Event;
+use super::window::WindowReport;
+use super::SessionHealth;
+use crate::serve::metrics::MetricsReport;
+use crate::serve::proto::ShardStats;
+
+/// Everything `/metrics` renders, assembled by the daemon outside this
+/// module (one shard lock at a time, never under the listener).
+#[derive(Clone, Debug, Default)]
+pub struct ExpoSnapshot {
+    /// Merged lifetime report (same payload as the v3 `Metrics` op).
+    pub report: MetricsReport,
+    /// Per-shard counters (same rows as the v4 `Stats` op).
+    pub shards: Vec<ShardStats>,
+    /// Window ring + open window (same payload as v5 `MetricsWindow`).
+    pub windows: WindowReport,
+    /// Per-session sketch-health gauges.
+    pub health: Vec<SessionHealth>,
+    pub journal_total: u64,
+    pub journal_dropped: u64,
+}
+
+fn sanitize_label(s: &str) -> String {
+    s.chars()
+        .map(|c| match c {
+            '"' | '\\' | '\n' => '_',
+            c => c,
+        })
+        .collect()
+}
+
+/// Render the Prometheus text body for `GET /metrics`.
+pub fn render_metrics(s: &ExpoSnapshot) -> String {
+    let mut o = String::with_capacity(4096);
+    let r = &s.report;
+    let push = |o: &mut String, name: &str, ty: &str, val: String| {
+        o.push_str(&format!("# TYPE {name} {ty}\n{name} {val}\n"));
+    };
+    push(
+        &mut o,
+        "sketchd_uptime_seconds",
+        "gauge",
+        format!("{}", r.uptime_ms as f64 / 1e3),
+    );
+    push(
+        &mut o,
+        "sketchd_sessions_open",
+        "gauge",
+        r.sessions_open.to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_sessions_peak",
+        "gauge",
+        r.sessions_peak.to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_sessions_opened_total",
+        "counter",
+        r.sessions_opened.to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_ingest_frames_total",
+        "counter",
+        r.ingest.count.to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_ingest_bytes_total",
+        "counter",
+        r.ingest_bytes.to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_frames_served_total",
+        "counter",
+        r.frames_served.to_string(),
+    );
+    o.push_str("# TYPE sketchd_busy_total counter\n");
+    o.push_str(&format!(
+        "sketchd_busy_total{{cause=\"admission\"}} {}\n",
+        r.busy_admission
+    ));
+    o.push_str(&format!(
+        "sketchd_busy_total{{cause=\"quota\"}} {}\n",
+        r.busy_quota
+    ));
+    push(
+        &mut o,
+        "sketchd_snapshots_total",
+        "counter",
+        r.snapshot_count.to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_snapshot_pause_seconds_total",
+        "counter",
+        format!("{}", r.snapshot_pause_ns as f64 / 1e9),
+    );
+
+    o.push_str("# TYPE sketchd_request_latency_seconds summary\n");
+    for (op, h) in [
+        ("ingest", &r.ingest),
+        ("diagnose", &r.diagnose),
+        ("query", &r.query),
+    ] {
+        for q in [0.5, 0.95, 0.99] {
+            o.push_str(&format!(
+                "sketchd_request_latency_seconds{{op=\"{op}\",quantile=\"{q}\"}} {}\n",
+                h.quantile(q) / 1e9
+            ));
+        }
+        o.push_str(&format!(
+            "sketchd_request_latency_seconds_count{{op=\"{op}\"}} {}\n",
+            h.count
+        ));
+        o.push_str(&format!(
+            "sketchd_request_latency_seconds_sum{{op=\"{op}\"}} {}\n",
+            h.sum_ns as f64 / 1e9
+        ));
+    }
+
+    o.push_str("# TYPE sketchd_shard_ingest_frames_total counter\n");
+    for sh in &s.shards {
+        o.push_str(&format!(
+            "sketchd_shard_ingest_frames_total{{shard=\"{}\"}} {}\n",
+            sh.shard, sh.ingest_frames
+        ));
+    }
+    o.push_str("# TYPE sketchd_shard_sessions gauge\n");
+    for sh in &s.shards {
+        o.push_str(&format!(
+            "sketchd_shard_sessions{{shard=\"{}\"}} {}\n",
+            sh.shard, sh.sessions
+        ));
+    }
+
+    // Window-ring balance terms: baseline + evicted + retained + open
+    // must equal sketchd_ingest_frames_total exactly (the CI scrape
+    // leg asserts this equality from outside).
+    let w = &s.windows;
+    let retained: u64 = w.buckets.iter().map(|b| b.ingest_frames).sum();
+    push(
+        &mut o,
+        "sketchd_window_interval_seconds",
+        "gauge",
+        format!("{}", w.interval_ms as f64 / 1e3),
+    );
+    push(
+        &mut o,
+        "sketchd_windows_retained",
+        "gauge",
+        w.buckets.len().to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_window_frames_baseline",
+        "gauge",
+        w.baseline.ingest_frames.to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_window_frames_evicted",
+        "gauge",
+        w.evicted.ingest_frames.to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_window_frames_retained",
+        "gauge",
+        retained.to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_window_frames_open",
+        "gauge",
+        w.open.ingest_frames.to_string(),
+    );
+    if let Some(last) = w.buckets.last() {
+        push(
+            &mut o,
+            "sketchd_window_last_throughput",
+            "gauge",
+            format!("{}", last.throughput()),
+        );
+        push(
+            &mut o,
+            "sketchd_window_last_ingest_p99_seconds",
+            "gauge",
+            format!("{}", last.ingest_p99_ns as f64 / 1e9),
+        );
+    }
+
+    push(
+        &mut o,
+        "sketchd_journal_events_total",
+        "counter",
+        s.journal_total.to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_journal_dropped_total",
+        "counter",
+        s.journal_dropped.to_string(),
+    );
+
+    o.push_str("# TYPE sketchd_session_z_norm gauge\n");
+    o.push_str("# TYPE sketchd_session_top_sigma gauge\n");
+    o.push_str("# TYPE sketchd_session_stable_rank gauge\n");
+    for h in &s.health {
+        let name = sanitize_label(&h.name);
+        for (l, lh) in h.layers.iter().enumerate() {
+            let labels = format!(
+                "{{session=\"{}\",name=\"{name}\",layer=\"{l}\"}}",
+                h.session
+            );
+            o.push_str(&format!(
+                "sketchd_session_z_norm{labels} {}\n",
+                lh.z_norm
+            ));
+            o.push_str(&format!(
+                "sketchd_session_top_sigma{labels} {}\n",
+                lh.top_sigma
+            ));
+            o.push_str(&format!(
+                "sketchd_session_stable_rank{labels} {}\n",
+                lh.stable_rank
+            ));
+        }
+    }
+    o
+}
+
+/// Render the text body for `GET /events`.
+pub fn render_events(events: &[Event], dropped: u64, base_unix_ms: u64) -> String {
+    let mut o = String::with_capacity(256 + events.len() * 64);
+    o.push_str(&format!(
+        "# sketchd event journal: {} retained, {} dropped, base_unix_ms {}\n",
+        events.len(),
+        dropped,
+        base_unix_ms
+    ));
+    for e in events {
+        o.push_str(&e.describe());
+        o.push('\n');
+    }
+    o
+}
+
+fn http_response(status: &str, body: &str) -> Vec<u8> {
+    format!(
+        "HTTP/1.1 {status}\r\nContent-Type: text/plain; version=0.0.4; \
+         charset=utf-8\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{body}",
+        body.len()
+    )
+    .into_bytes()
+}
+
+/// Parse the request line and headers of one bounded HTTP request and
+/// return the GET path, or an error status string.
+fn read_request(stream: &mut TcpStream) -> Result<String, &'static str> {
+    let mut buf = [0u8; 8192];
+    let mut n = 0usize;
+    loop {
+        match stream.read(&mut buf[n..]) {
+            Ok(0) => break,
+            Ok(k) => {
+                n += k;
+                if buf[..n].windows(4).any(|w| w == b"\r\n\r\n") {
+                    break;
+                }
+                if n == buf.len() {
+                    return Err("431 Request Header Fields Too Large");
+                }
+            }
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                return Err("408 Request Timeout")
+            }
+            Err(_) => return Err("400 Bad Request"),
+        }
+    }
+    let text = String::from_utf8_lossy(&buf[..n]);
+    let mut parts = text.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("");
+    let target = parts.next().unwrap_or("");
+    if method != "GET" {
+        return Err("405 Method Not Allowed");
+    }
+    // Strip any query string; the endpoint takes no parameters.
+    Ok(target.split('?').next().unwrap_or("").to_string())
+}
+
+fn handle_conn(
+    mut stream: TcpStream,
+    handler: &(dyn Fn(&str) -> Option<String> + Sync),
+) {
+    let _ = stream.set_read_timeout(Some(Duration::from_secs(2)));
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let reply = match read_request(&mut stream) {
+        Ok(path) => match handler(&path) {
+            Some(body) => http_response("200 OK", &body),
+            None => http_response("404 Not Found", "not found\n"),
+        },
+        Err(status) => http_response(status, ""),
+    };
+    let _ = stream.write_all(&reply);
+    let _ = stream.flush();
+    let _ = stream.shutdown(std::net::Shutdown::Both);
+}
+
+/// Run the listener loop until `shutdown` is set.  `handler` maps a
+/// GET path to a response body (None = 404); it is invoked on the
+/// listener thread, one request at a time — scrapes are rare and
+/// cheap, so there is no per-connection thread.
+pub fn serve(
+    listener: TcpListener,
+    shutdown: &AtomicBool,
+    handler: &(dyn Fn(&str) -> Option<String> + Sync),
+) {
+    let _ = listener.set_nonblocking(true);
+    while !shutdown.load(Ordering::SeqCst) {
+        match listener.accept() {
+            Ok((stream, _)) => {
+                let _ = stream.set_nonblocking(false);
+                handle_conn(stream, handler);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(20));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(20)),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::obs::events::EventKind;
+    use crate::serve::obs::window::{WindowBucket, WindowTotals};
+    use crate::serve::obs::LayerHealth;
+
+    fn snapshot() -> ExpoSnapshot {
+        let mut report = MetricsReport {
+            uptime_ms: 2500,
+            sessions_open: 2,
+            sessions_peak: 3,
+            sessions_opened: 5,
+            ingest_bytes: 123_456,
+            frames_served: 900,
+            busy_admission: 1,
+            busy_quota: 4,
+            snapshot_count: 2,
+            snapshot_pause_ns: 3_000_000,
+            ..MetricsReport::default()
+        };
+        for ns in [1000u64, 2000, 50_000] {
+            report.ingest.record(ns);
+        }
+        ExpoSnapshot {
+            report,
+            shards: vec![
+                ShardStats {
+                    shard: 0,
+                    sessions: 1,
+                    ingest_frames: 2,
+                    ..ShardStats::default()
+                },
+                ShardStats {
+                    shard: 1,
+                    sessions: 1,
+                    ingest_frames: 1,
+                    ..ShardStats::default()
+                },
+            ],
+            windows: WindowReport {
+                interval_ms: 1000,
+                capacity: 120,
+                baseline: WindowTotals::default(),
+                evicted: WindowTotals::default(),
+                buckets: vec![WindowBucket {
+                    index: 0,
+                    dur_ms: 1000,
+                    ingest_frames: 2,
+                    ingest_p99_ns: 50_000,
+                    ..WindowBucket::default()
+                }],
+                open: WindowBucket {
+                    index: 1,
+                    ingest_frames: 1,
+                    ..WindowBucket::default()
+                },
+            },
+            health: vec![SessionHealth {
+                session: 7,
+                name: "t\"0".into(),
+                layers: vec![LayerHealth {
+                    z_norm: 1.5,
+                    top_sigma: 1.2,
+                    stable_rank: 1.5625,
+                }],
+            }],
+            journal_total: 42,
+            journal_dropped: 0,
+        }
+    }
+
+    #[test]
+    fn metrics_rendering_carries_the_balance_terms() {
+        let body = render_metrics(&snapshot());
+        assert!(body.contains("sketchd_ingest_frames_total 3\n"));
+        assert!(body.contains("sketchd_ingest_bytes_total 123456\n"));
+        assert!(body.contains("sketchd_busy_total{cause=\"quota\"} 4\n"));
+        assert!(body.contains("sketchd_window_frames_retained 2\n"));
+        assert!(body.contains("sketchd_window_frames_open 1\n"));
+        assert!(body.contains("sketchd_window_frames_baseline 0\n"));
+        assert!(body.contains("sketchd_window_frames_evicted 0\n"));
+        assert!(body.contains("sketchd_journal_dropped_total 0\n"));
+        assert!(body
+            .contains("sketchd_shard_ingest_frames_total{shard=\"1\"} 1\n"));
+        assert!(body.contains(
+            "sketchd_request_latency_seconds_count{op=\"ingest\"} 3\n"
+        ));
+        // Labels are sanitized (no raw quote from the session name).
+        assert!(body.contains("name=\"t_0\""));
+        assert!(body.contains("sketchd_session_stable_rank"));
+        // Balance: baseline + evicted + retained + open == lifetime.
+        assert_eq!(0 + 0 + 2 + 1, 3u64);
+    }
+
+    #[test]
+    fn events_rendering_is_line_per_event() {
+        let ev = |ts, k: EventKind| {
+            let (kind, code, a, b) = k.pack();
+            Event {
+                ts_ns: ts,
+                slot: 1,
+                kind,
+                code,
+                a,
+                b,
+            }
+        };
+        let events = vec![
+            ev(1_000_000, EventKind::SessionOpen { session: 3 }),
+            ev(2_000_000, EventKind::SlowRequest {
+                msg: 3,
+                elapsed_ns: 400_000_000,
+            }),
+        ];
+        let body = render_events(&events, 7, 1_700_000_000_000);
+        assert!(body.starts_with("# sketchd event journal: 2 retained, 7 dropped"));
+        assert_eq!(body.lines().count(), 3);
+        assert!(body.contains("session-open session=3"));
+        assert!(body.contains("slow-request msg=3"));
+    }
+
+    #[test]
+    fn listener_serves_routes_and_shuts_down() {
+        use std::sync::atomic::AtomicBool;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let shutdown = AtomicBool::new(false);
+        std::thread::scope(|scope| {
+            let shutdown = &shutdown;
+            scope.spawn(move || {
+                serve(listener, shutdown, &|path| match path {
+                    "/metrics" => Some("metric 1\n".to_string()),
+                    _ => None,
+                });
+            });
+            let get = |path: &str| {
+                let mut s = TcpStream::connect(addr).unwrap();
+                write!(s, "GET {path} HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+                let mut out = String::new();
+                s.read_to_string(&mut out).unwrap();
+                out
+            };
+            let ok = get("/metrics");
+            assert!(ok.starts_with("HTTP/1.1 200 OK\r\n"), "{ok}");
+            assert!(ok.ends_with("metric 1\n"));
+            assert!(ok.contains("Content-Length: 9\r\n"));
+            let ok_query = get("/metrics?x=1");
+            assert!(ok_query.starts_with("HTTP/1.1 200 OK\r\n"));
+            let missing = get("/nope");
+            assert!(missing.starts_with("HTTP/1.1 404"));
+            let mut s = TcpStream::connect(addr).unwrap();
+            write!(s, "POST /metrics HTTP/1.1\r\n\r\n").unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            assert!(out.starts_with("HTTP/1.1 405"));
+            shutdown.store(true, Ordering::SeqCst);
+        });
+    }
+}

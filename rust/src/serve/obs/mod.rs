@@ -1,0 +1,256 @@
+//! `serve::obs` — the daemon's observability layer (DESIGN.md §10).
+//!
+//! Three surfaces over one set of primitives:
+//!
+//! - [`events`]: a bounded lock-free event journal — per-shard writer
+//!   rings, merged chronological reads, an exact `dropped` counter.
+//! - [`window`]: a fixed ring of per-interval metric buckets whose
+//!   sums provably equal the lifetime-counter deltas of
+//!   `serve::metrics`.
+//! - [`expo`]: a std-only HTTP/1.1 text exposition endpoint
+//!   (`sketchd --obs-addr`; `GET /metrics` in Prometheus text format,
+//!   `GET /events` as a journal dump).
+//!
+//! The same data is served in-protocol by the v5 `Events` /
+//! `MetricsWindow` ops, so protocol clients and external scrapers see
+//! one truth.  This module also carries the per-session sketch-health
+//! gauges (per-layer ‖Z‖_F, top-σ, stable rank — the BASIS-style
+//! invariant scalars) and the `SKETCHD_LOG`-filtered structured
+//! logger that replaced the daemon's ad-hoc `eprintln!`s.
+
+pub mod events;
+pub mod expo;
+pub mod window;
+
+pub use events::{Event, EventJournal, EventKind, JournalWriter};
+pub use expo::ExpoSnapshot;
+pub use window::{
+    Sample, WindowBucket, WindowReport, WindowTotals, Windows,
+};
+
+use crate::config::ObsConfig;
+use crate::serve::codec::{CodecError, Dec, Enc};
+use crate::sketch::{metrics as skmetrics, Mat};
+
+/// Power iterations for the health-gauge spectral norm (same ballpark
+/// as the archive drift analytics; the gauges are monitoring signals,
+/// not reconstruction inputs).
+const HEALTH_POWER_ITERS: usize = 24;
+
+/// Per-layer sketch-health scalars computed from the resident Z sketch
+/// (Eq. 5c's gradient-weighted sketch): Frobenius norm as the
+/// gradient-magnitude proxy, top singular value, and the stable rank
+/// ‖Z‖_F² / σ₁² as the gradient-diversity estimate.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LayerHealth {
+    pub z_norm: f64,
+    pub top_sigma: f64,
+    pub stable_rank: f64,
+}
+
+/// One session's health gauges, one row per layer.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SessionHealth {
+    pub session: u64,
+    pub name: String,
+    pub layers: Vec<LayerHealth>,
+}
+
+/// Compute the health scalars for one layer's Z sketch.
+pub fn layer_health(z: &Mat) -> LayerHealth {
+    let z_norm = z.fro_norm();
+    if z_norm == 0.0 {
+        return LayerHealth::default();
+    }
+    let top_sigma = skmetrics::spectral_norm_power(z, HEALTH_POWER_ITERS);
+    LayerHealth {
+        z_norm,
+        top_sigma,
+        stable_rank: (z_norm * z_norm) / (top_sigma * top_sigma).max(1e-300),
+    }
+}
+
+pub fn enc_session_health(e: &mut Enc, s: &SessionHealth) {
+    e.u64(s.session);
+    e.str(&s.name);
+    e.len32(s.layers.len());
+    for l in &s.layers {
+        e.f64(l.z_norm);
+        e.f64(l.top_sigma);
+        e.f64(l.stable_rank);
+    }
+}
+
+pub fn dec_session_health(d: &mut Dec) -> Result<SessionHealth, CodecError> {
+    let session = d.u64()?;
+    let name = d.str()?;
+    let n = d.len32(24)?;
+    let mut layers = Vec::with_capacity(n);
+    for _ in 0..n {
+        layers.push(LayerHealth {
+            z_norm: d.f64()?,
+            top_sigma: d.f64()?,
+            stable_rank: d.f64()?,
+        });
+    }
+    Ok(SessionHealth {
+        session,
+        name,
+        layers,
+    })
+}
+
+/// Log severities for the journal-backed structured logger.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Error = 1,
+    Info = 2,
+    Debug = 3,
+}
+
+/// Stderr verbosity filter, parsed once from `SKETCHD_LOG`
+/// (`error` / `info` / `debug`; anything else or unset = silent, so
+/// test and CI output stays clean).  The journal always records the
+/// typed event regardless of the filter — the filter only gates the
+/// human-readable stderr line.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LogFilter {
+    max: u8,
+}
+
+impl LogFilter {
+    pub fn from_env() -> LogFilter {
+        Self::parse(std::env::var("SKETCHD_LOG").as_deref().unwrap_or(""))
+    }
+
+    pub fn parse(s: &str) -> LogFilter {
+        let max = match s.trim().to_ascii_lowercase().as_str() {
+            "error" => 1,
+            "info" => 2,
+            "debug" => 3,
+            _ => 0,
+        };
+        LogFilter { max }
+    }
+
+    /// Should a record at `level` be written to stderr?
+    pub fn on(&self, level: Level) -> bool {
+        (level as u8) <= self.max
+    }
+}
+
+/// Everything the daemon's observability layer owns, constructed once
+/// at bind time and shared (by reference) with every shard, the run
+/// loop, and the exposition listener.
+pub struct Obs {
+    pub journal: EventJournal,
+    pub windows: Windows,
+    pub log: LogFilter,
+    /// Requests slower than this are journaled as `slow-request`.
+    pub slow_ns: u64,
+}
+
+impl Obs {
+    /// `initial` is the merged lifetime capture at bind (post-restore),
+    /// which seeds the window ring's baseline.
+    pub fn new(cfg: &ObsConfig, shards: usize, initial: Sample) -> Obs {
+        Obs {
+            journal: EventJournal::new(1 + shards, cfg.journal_capacity),
+            windows: Windows::new(cfg.window_ms, cfg.window_count, initial),
+            log: LogFilter::from_env(),
+            slow_ns: cfg.slow_ms.saturating_mul(1_000_000),
+        }
+    }
+
+    /// The control plane's writer (acceptor / snapshot / run loop).
+    pub fn control(&self) -> JournalWriter<'_> {
+        self.journal.writer(0)
+    }
+
+    /// Shard `k`'s writer.
+    pub fn shard(&self, k: usize) -> JournalWriter<'_> {
+        self.journal.writer(1 + k)
+    }
+
+    /// Structured log record: always journaled as a typed `Log` event;
+    /// the human-readable line (built lazily) goes to stderr only when
+    /// `SKETCHD_LOG` admits the level.
+    pub fn log(
+        &self,
+        w: &JournalWriter<'_>,
+        level: Level,
+        tag: u8,
+        detail: u64,
+        text: impl FnOnce() -> String,
+    ) {
+        w.emit(EventKind::Log {
+            tag,
+            level: level as u64,
+            detail,
+        });
+        if self.log.on(level) {
+            eprintln!("sketchd: {}", text());
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn log_filter_parses_levels_and_defaults_silent() {
+        let off = LogFilter::parse("");
+        assert!(!off.on(Level::Error));
+        let garbage = LogFilter::parse("loud");
+        assert!(!garbage.on(Level::Error));
+        let err = LogFilter::parse("error");
+        assert!(err.on(Level::Error) && !err.on(Level::Info));
+        let info = LogFilter::parse(" INFO ");
+        assert!(info.on(Level::Error) && info.on(Level::Info));
+        assert!(!info.on(Level::Debug));
+        let dbg = LogFilter::parse("debug");
+        assert!(dbg.on(Level::Debug));
+    }
+
+    #[test]
+    fn layer_health_matches_reference_metrics() {
+        let mut rng = Rng::new(0x4EA1);
+        let z = Mat::gaussian(24, 7, &mut rng);
+        let h = layer_health(&z);
+        assert!((h.z_norm - z.fro_norm()).abs() < 1e-12);
+        let sr = skmetrics::stable_rank_power(&z, HEALTH_POWER_ITERS);
+        assert!(
+            (h.stable_rank - sr).abs() / sr < 1e-9,
+            "stable rank {} vs reference {sr}",
+            h.stable_rank
+        );
+        assert!(h.top_sigma > 0.0 && h.stable_rank >= 1.0 - 1e-9);
+        // Zero sketch: all-zero gauges, no NaN.
+        let zero = layer_health(&Mat::zeros(8, 3));
+        assert_eq!(zero, LayerHealth::default());
+    }
+
+    #[test]
+    fn session_health_wire_roundtrip() {
+        let s = SessionHealth {
+            session: 42,
+            name: "tenant-a".into(),
+            layers: vec![
+                LayerHealth {
+                    z_norm: 1.5,
+                    top_sigma: 1.2,
+                    stable_rank: 1.5625,
+                },
+                LayerHealth::default(),
+            ],
+        };
+        let mut e = Enc::new();
+        enc_session_health(&mut e, &s);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(dec_session_health(&mut d).unwrap(), s);
+        d.finish().unwrap();
+    }
+}

@@ -1,0 +1,566 @@
+//! Windowed time-series metrics (DESIGN.md §10).
+//!
+//! A fixed ring of per-interval buckets layered on the lifetime
+//! counters of `serve::metrics`.  The daemon's run loop closes a
+//! bucket every `interval_ms` by capturing the merged cross-shard
+//! [`Sample`] and differencing it against the previous capture, so a
+//! bucket's counters are *exact deltas between two snapshots of the
+//! same monotone lifetime counters* — no second accounting path that
+//! could drift.
+//!
+//! ## The sum == lifetime-delta invariant
+//!
+//! Consecutive-capture deltas telescope.  With `baseline` the lifetime
+//! counters at ring creation (non-zero after a warm restart),
+//! `evicted` the running sum of buckets pushed out of the bounded
+//! ring, and `open` the in-progress window (current capture minus the
+//! last closed boundary):
+//!
+//! ```text
+//! baseline + evicted + Σ retained buckets + open == current lifetime
+//! ```
+//!
+//! holds *exactly*, always — not just when the ring hasn't wrapped.
+//! `loadgen` fails a run if this equality breaks, and the CI scrape
+//! leg re-checks it from the exposition endpoint.
+//!
+//! Per-window latency quantiles come from bucketwise histogram
+//! subtraction (exact, since merge is bucketwise addition and every
+//! bucket is monotone); the delta histogram's min/max are widened to
+//! the enclosing bucket bounds, which keeps the quantile estimate
+//! within the same sqrt(2) factor as the lifetime histograms.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::serve::codec::{CodecError, Dec, Enc};
+use crate::serve::metrics::{
+    bucket_bounds, Histogram, MetricsState, NUM_BUCKETS,
+};
+
+/// A point-in-time capture of the merged lifetime counters the window
+/// ring tracks.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Sample {
+    pub ingest_frames: u64,
+    pub ingest_bytes: u64,
+    pub busy: u64,
+    pub frames_served: u64,
+    pub ingest: Histogram,
+}
+
+impl Sample {
+    /// Build from a merged [`MetricsState`] plus the (process-scoped)
+    /// reply count, which a state does not carry.
+    pub fn from_state(s: &MetricsState, frames_served: u64) -> Sample {
+        Sample {
+            ingest_frames: s.ingest.count,
+            ingest_bytes: s.ingest_bytes,
+            busy: s.busy_admission + s.busy_quota,
+            frames_served,
+            ingest: s.ingest.clone(),
+        }
+    }
+}
+
+/// The additive counter subset (everything in a bucket except the
+/// latency quantiles), used for the telescoping-sum bookkeeping.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct WindowTotals {
+    pub ingest_frames: u64,
+    pub ingest_bytes: u64,
+    pub busy: u64,
+    pub frames_served: u64,
+}
+
+impl WindowTotals {
+    pub fn add(&mut self, other: &WindowTotals) {
+        self.ingest_frames += other.ingest_frames;
+        self.ingest_bytes += other.ingest_bytes;
+        self.busy += other.busy;
+        self.frames_served += other.frames_served;
+    }
+}
+
+/// One closed (or, in a report, the open) window.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WindowBucket {
+    /// Window sequence number since daemon start (never reused).
+    pub index: u64,
+    /// Window start, milliseconds since daemon start.
+    pub start_ms: u64,
+    /// Actual covered duration — the nominal interval unless the
+    /// ticker stalled (e.g. behind a long snapshot pause).
+    pub dur_ms: u64,
+    pub ingest_frames: u64,
+    pub ingest_bytes: u64,
+    pub busy: u64,
+    pub frames_served: u64,
+    pub ingest_p50_ns: u64,
+    pub ingest_p99_ns: u64,
+}
+
+impl WindowBucket {
+    pub fn totals(&self) -> WindowTotals {
+        WindowTotals {
+            ingest_frames: self.ingest_frames,
+            ingest_bytes: self.ingest_bytes,
+            busy: self.busy,
+            frames_served: self.frames_served,
+        }
+    }
+
+    /// Frames per second over the actual window duration.
+    pub fn throughput(&self) -> f64 {
+        if self.dur_ms == 0 {
+            0.0
+        } else {
+            self.ingest_frames as f64 * 1e3 / self.dur_ms as f64
+        }
+    }
+}
+
+/// Exact bucketwise difference `cur - prev` of two cumulative
+/// histograms (`prev` must be an earlier capture of the same
+/// histogram). min/max are widened to the bounds of the outermost
+/// non-empty delta buckets — the tightest recoverable range.
+pub fn histogram_delta(cur: &Histogram, prev: &Histogram) -> Histogram {
+    let mut d = Histogram::new();
+    d.count = cur.count.saturating_sub(prev.count);
+    d.sum_ns = cur.sum_ns.saturating_sub(prev.sum_ns);
+    for i in 0..NUM_BUCKETS {
+        d.buckets[i] = cur.buckets[i].saturating_sub(prev.buckets[i]);
+    }
+    if d.count > 0 {
+        if let Some(first) = d.buckets.iter().position(|&c| c > 0) {
+            d.min_ns = bucket_bounds(first).0;
+        }
+        if let Some(last) = d.buckets.iter().rposition(|&c| c > 0) {
+            let (_, hi) = bucket_bounds(last);
+            d.max_ns = if hi == u64::MAX {
+                cur.max_ns
+            } else {
+                hi - 1
+            };
+        }
+    }
+    d
+}
+
+struct Inner {
+    /// Lifetime counters at ring creation (restored snapshot values on
+    /// a warm restart).
+    baseline: WindowTotals,
+    /// Running sum of buckets evicted from the bounded ring.
+    evicted: WindowTotals,
+    /// Capture at the last closed window boundary.
+    prev: Sample,
+    /// When `prev` was captured, ms since daemon start.
+    prev_ms: u64,
+    next_index: u64,
+    ring: VecDeque<WindowBucket>,
+}
+
+/// The daemon's window ring. Ticked by the run loop; read by any
+/// thread (shard threads serving v5 ops, the exposition listener).
+pub struct Windows {
+    interval_ms: u64,
+    capacity: usize,
+    inner: Mutex<Inner>,
+}
+
+impl Windows {
+    /// `initial` is the lifetime capture at daemon bind (it becomes
+    /// the baseline, so restored counters don't show up as a giant
+    /// first window).
+    pub fn new(interval_ms: u64, capacity: usize, initial: Sample) -> Windows {
+        Windows {
+            interval_ms: interval_ms.max(1),
+            capacity: capacity.max(1),
+            inner: Mutex::new(Inner {
+                baseline: WindowTotals {
+                    ingest_frames: initial.ingest_frames,
+                    ingest_bytes: initial.ingest_bytes,
+                    busy: initial.busy,
+                    frames_served: initial.frames_served,
+                },
+                evicted: WindowTotals::default(),
+                prev: initial,
+                prev_ms: 0,
+                next_index: 0,
+                ring: VecDeque::new(),
+            }),
+        }
+    }
+
+    pub fn interval_ms(&self) -> u64 {
+        self.interval_ms
+    }
+
+    /// Has the next window boundary passed?
+    pub fn due(&self, now_ms: u64) -> bool {
+        let inner = self.inner.lock().unwrap();
+        now_ms >= inner.prev_ms + self.interval_ms
+    }
+
+    fn close_bucket(
+        inner: &mut Inner,
+        now_ms: u64,
+        current: &Sample,
+    ) -> WindowBucket {
+        let hist = histogram_delta(&current.ingest, &inner.prev.ingest);
+        WindowBucket {
+            index: inner.next_index,
+            start_ms: inner.prev_ms,
+            dur_ms: now_ms.saturating_sub(inner.prev_ms),
+            ingest_frames: current
+                .ingest_frames
+                .saturating_sub(inner.prev.ingest_frames),
+            ingest_bytes: current
+                .ingest_bytes
+                .saturating_sub(inner.prev.ingest_bytes),
+            busy: current.busy.saturating_sub(inner.prev.busy),
+            frames_served: current
+                .frames_served
+                .saturating_sub(inner.prev.frames_served),
+            ingest_p50_ns: hist.quantile(0.50) as u64,
+            ingest_p99_ns: hist.quantile(0.99) as u64,
+        }
+    }
+
+    /// Close the in-progress window at `now_ms` using the fresh merged
+    /// capture `current`.
+    pub fn tick(&self, now_ms: u64, current: Sample) {
+        let mut inner = self.inner.lock().unwrap();
+        let bucket = Self::close_bucket(&mut inner, now_ms, &current);
+        inner.next_index += 1;
+        inner.prev = current;
+        inner.prev_ms = now_ms;
+        inner.ring.push_back(bucket);
+        while inner.ring.len() > self.capacity {
+            let gone = inner.ring.pop_front().unwrap();
+            let t = gone.totals();
+            inner.evicted.add(&t);
+        }
+    }
+
+    /// Snapshot the ring plus the open window measured against
+    /// `current`. `WindowReport::total()` equals `current`'s lifetime
+    /// counters exactly (see module docs).
+    pub fn report(&self, now_ms: u64, current: &Sample) -> WindowReport {
+        let mut inner = self.inner.lock().unwrap();
+        let open = Self::close_bucket(&mut inner, now_ms, current);
+        WindowReport {
+            interval_ms: self.interval_ms,
+            capacity: self.capacity as u64,
+            baseline: inner.baseline,
+            evicted: inner.evicted,
+            buckets: inner.ring.iter().cloned().collect(),
+            open,
+        }
+    }
+}
+
+/// Wire payload of the v5 `MetricsWindow` op (minus the health gauges,
+/// which ride alongside in the response).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct WindowReport {
+    pub interval_ms: u64,
+    pub capacity: u64,
+    pub baseline: WindowTotals,
+    pub evicted: WindowTotals,
+    /// Closed windows, oldest first.
+    pub buckets: Vec<WindowBucket>,
+    /// The in-progress window at report time.
+    pub open: WindowBucket,
+}
+
+impl WindowReport {
+    /// `baseline + evicted + Σ buckets + open` — equal to the lifetime
+    /// counters at the moment the report was taken.
+    pub fn total(&self) -> WindowTotals {
+        let mut t = self.baseline;
+        t.add(&self.evicted);
+        for b in &self.buckets {
+            let bt = b.totals();
+            t.add(&bt);
+        }
+        let ot = self.open.totals();
+        t.add(&ot);
+        t
+    }
+}
+
+pub fn enc_window_totals(e: &mut Enc, t: &WindowTotals) {
+    e.u64(t.ingest_frames);
+    e.u64(t.ingest_bytes);
+    e.u64(t.busy);
+    e.u64(t.frames_served);
+}
+
+pub fn dec_window_totals(d: &mut Dec) -> Result<WindowTotals, CodecError> {
+    Ok(WindowTotals {
+        ingest_frames: d.u64()?,
+        ingest_bytes: d.u64()?,
+        busy: d.u64()?,
+        frames_served: d.u64()?,
+    })
+}
+
+pub fn enc_window_bucket(e: &mut Enc, b: &WindowBucket) {
+    e.u64(b.index);
+    e.u64(b.start_ms);
+    e.u64(b.dur_ms);
+    e.u64(b.ingest_frames);
+    e.u64(b.ingest_bytes);
+    e.u64(b.busy);
+    e.u64(b.frames_served);
+    e.u64(b.ingest_p50_ns);
+    e.u64(b.ingest_p99_ns);
+}
+
+pub fn dec_window_bucket(d: &mut Dec) -> Result<WindowBucket, CodecError> {
+    Ok(WindowBucket {
+        index: d.u64()?,
+        start_ms: d.u64()?,
+        dur_ms: d.u64()?,
+        ingest_frames: d.u64()?,
+        ingest_bytes: d.u64()?,
+        busy: d.u64()?,
+        frames_served: d.u64()?,
+        ingest_p50_ns: d.u64()?,
+        ingest_p99_ns: d.u64()?,
+    })
+}
+
+pub fn enc_window_report(e: &mut Enc, r: &WindowReport) {
+    e.u64(r.interval_ms);
+    e.u64(r.capacity);
+    enc_window_totals(e, &r.baseline);
+    enc_window_totals(e, &r.evicted);
+    e.len32(r.buckets.len());
+    for b in &r.buckets {
+        enc_window_bucket(e, b);
+    }
+    enc_window_bucket(e, &r.open);
+}
+
+pub fn dec_window_report(d: &mut Dec) -> Result<WindowReport, CodecError> {
+    let interval_ms = d.u64()?;
+    let capacity = d.u64()?;
+    let baseline = dec_window_totals(d)?;
+    let evicted = dec_window_totals(d)?;
+    let n = d.len32(9 * 8)?;
+    let mut buckets = Vec::with_capacity(n);
+    for _ in 0..n {
+        buckets.push(dec_window_bucket(d)?);
+    }
+    let open = dec_window_bucket(d)?;
+    Ok(WindowReport {
+        interval_ms,
+        capacity,
+        baseline,
+        evicted,
+        buckets,
+        open,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn sample(frames: u64, bytes: u64, busy: u64, hist: &Histogram) -> Sample {
+        Sample {
+            ingest_frames: frames,
+            ingest_bytes: bytes,
+            busy,
+            frames_served: frames + busy,
+            ingest: hist.clone(),
+        }
+    }
+
+    #[test]
+    fn histogram_delta_is_exact_and_quantiles_hold() {
+        let mut rng = Rng::new(0xD1FF);
+        let mut early = Histogram::new();
+        for _ in 0..500 {
+            early.record(rng.below(1 << 24));
+        }
+        let mut late = early.clone();
+        let mut alone = Histogram::new();
+        for _ in 0..700 {
+            let ns = rng.below(1 << 26);
+            late.record(ns);
+            alone.record(ns);
+        }
+        let delta = histogram_delta(&late, &early);
+        assert_eq!(delta.count, alone.count);
+        assert_eq!(delta.sum_ns, alone.sum_ns);
+        assert_eq!(delta.buckets, alone.buckets);
+        // Widened bounds still bracket the true extrema...
+        assert!(delta.min_ns <= alone.min_ns);
+        assert!(delta.max_ns >= alone.max_ns);
+        // ...within one bucket (factor-of-two) on each side.
+        assert!(delta.min_ns * 2 > alone.min_ns);
+        assert!(delta.max_ns < alone.max_ns.saturating_mul(2));
+        // Quantiles stay within sqrt(2) of the exact-only histogram's.
+        for q in [0.5, 0.99] {
+            let (a, b) = (delta.quantile(q), alone.quantile(q));
+            assert!(a <= b * 2f64.sqrt() * 1.000001 && a * 2f64.sqrt() * 1.000001 >= b);
+        }
+        // Empty delta.
+        let none = histogram_delta(&late, &late);
+        assert!(none.is_empty());
+        assert_eq!(none.min_ns, 0);
+        assert_eq!(none.max_ns, 0);
+    }
+
+    /// The signature invariant: however the lifetime counters advance
+    /// and whenever ticks land, every report's total() equals the
+    /// lifetime counters at report time exactly — including after the
+    /// bounded ring has evicted buckets.
+    #[test]
+    fn window_sums_equal_lifetime_deltas_exactly() {
+        let mut rng = Rng::new(0x77);
+        // Warm-restart shape: non-zero baseline.
+        let mut hist = Histogram::new();
+        for _ in 0..37 {
+            hist.record(rng.below(1 << 20));
+        }
+        let mut cur = sample(37, 12_345, 3, &hist);
+        let w = Windows::new(10, 4, cur.clone());
+
+        let mut now = 0u64;
+        for step in 0..40u64 {
+            // Random traffic between ticks.
+            for _ in 0..rng.below(50) {
+                let ns = rng.below(1 << 22);
+                cur.ingest.record(ns);
+                cur.ingest_frames += 1;
+                cur.ingest_bytes += 100 + ns % 1000;
+                cur.frames_served += 1;
+            }
+            if rng.below(4) == 0 {
+                cur.busy += 1;
+                cur.frames_served += 1;
+            }
+            now += 5 + rng.below(20);
+            if w.due(now) {
+                w.tick(now, cur.clone());
+            }
+            // Report at arbitrary instants, mid-window included.
+            let probe = now + rng.below(7);
+            let rep = w.report(probe, &cur);
+            let t = rep.total();
+            assert_eq!(t.ingest_frames, cur.ingest_frames, "step {step}");
+            assert_eq!(t.ingest_bytes, cur.ingest_bytes);
+            assert_eq!(t.busy, cur.busy);
+            assert_eq!(t.frames_served, cur.frames_served);
+            assert!(rep.buckets.len() <= 4, "ring is bounded");
+        }
+        // The ring genuinely wrapped (40 steps x >=5ms vs 10ms window,
+        // capacity 4), so eviction was exercised, not vacuous.
+        let rep = w.report(now, &cur);
+        assert!(rep.evicted.ingest_frames > 0 || rep.evicted.busy > 0);
+        assert_eq!(rep.baseline.ingest_frames, 37);
+        // Window indices are consecutive and never reused.
+        for pair in rep.buckets.windows(2) {
+            assert_eq!(pair[0].index + 1, pair[1].index);
+        }
+    }
+
+    #[test]
+    fn bucket_covers_actual_duration_and_throughput() {
+        let cur0 = sample(0, 0, 0, &Histogram::new());
+        let w = Windows::new(100, 8, cur0);
+        let mut hist = Histogram::new();
+        for _ in 0..50 {
+            hist.record(1000);
+        }
+        let cur = sample(50, 5000, 0, &hist);
+        // Tick lands late: the bucket must cover the true 250ms.
+        w.tick(250, cur.clone());
+        let rep = w.report(250, &cur);
+        assert_eq!(rep.buckets.len(), 1);
+        let b = &rep.buckets[0];
+        assert_eq!(b.dur_ms, 250);
+        assert_eq!(b.ingest_frames, 50);
+        assert!((b.throughput() - 200.0).abs() < 1e-9, "50 / 0.25s");
+        assert!(b.ingest_p50_ns > 0 && b.ingest_p99_ns >= b.ingest_p50_ns);
+        // Open window right at the boundary is empty.
+        assert_eq!(rep.open.ingest_frames, 0);
+        assert_eq!(rep.open.dur_ms, 0);
+        assert_eq!(WindowBucket::default().throughput(), 0.0);
+    }
+
+    #[test]
+    fn sample_from_state_pulls_the_lifetime_counters() {
+        let mut st = MetricsState {
+            ingest_bytes: 4096,
+            busy_admission: 2,
+            busy_quota: 3,
+            ..MetricsState::default()
+        };
+        for ns in [10u64, 20, 30] {
+            st.ingest.record(ns);
+        }
+        let s = Sample::from_state(&st, 99);
+        assert_eq!(s.ingest_frames, 3);
+        assert_eq!(s.ingest_bytes, 4096);
+        assert_eq!(s.busy, 5);
+        assert_eq!(s.frames_served, 99);
+        assert_eq!(s.ingest, st.ingest);
+    }
+
+    #[test]
+    fn window_report_wire_roundtrip() {
+        let mut hist = Histogram::new();
+        hist.record(5000);
+        let rep = WindowReport {
+            interval_ms: 1000,
+            capacity: 120,
+            baseline: WindowTotals {
+                ingest_frames: 1,
+                ingest_bytes: 2,
+                busy: 3,
+                frames_served: 4,
+            },
+            evicted: WindowTotals::default(),
+            buckets: vec![
+                WindowBucket {
+                    index: 0,
+                    start_ms: 0,
+                    dur_ms: 1000,
+                    ingest_frames: 10,
+                    ingest_bytes: 1000,
+                    busy: 0,
+                    frames_served: 11,
+                    ingest_p50_ns: 700,
+                    ingest_p99_ns: 9000,
+                },
+                WindowBucket {
+                    index: 1,
+                    ..WindowBucket::default()
+                },
+            ],
+            open: WindowBucket {
+                index: 2,
+                start_ms: 2000,
+                dur_ms: 381,
+                ingest_frames: 4,
+                ..WindowBucket::default()
+            },
+        };
+        let mut e = Enc::new();
+        enc_window_report(&mut e, &rep);
+        let bytes = e.into_bytes();
+        let mut d = Dec::new(&bytes);
+        assert_eq!(dec_window_report(&mut d).unwrap(), rep);
+        d.finish().unwrap();
+        // Truncation is a typed error.
+        let mut d = Dec::new(&bytes[..bytes.len() - 2]);
+        assert!(dec_window_report(&mut d).is_err());
+    }
+}

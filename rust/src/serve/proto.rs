@@ -37,6 +37,10 @@ use crate::sketch::Mat;
 
 use super::codec::{CodecError, Dec, Enc};
 use super::metrics::{dec_metrics_report, enc_metrics_report, MetricsReport};
+use super::obs::window::{dec_window_report, enc_window_report, WindowReport};
+use super::obs::{
+    dec_session_health, enc_session_health, Event, SessionHealth,
+};
 
 /// `b"SKD1"` interpreted little-endian.
 pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"SKD1");
@@ -45,12 +49,18 @@ pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"SKD1");
 /// in `StatsOk` (daemon + per-session Busy counts, quota usage).
 /// v4: sharded serve — `StatsOk` grows the shard count plus one
 /// [`ShardStats`] row per connection shard (DESIGN.md §9).
-pub const PROTO_VERSION: u16 = 4;
+/// v5: observability — the `Events` / `MetricsWindow` ops (event
+/// journal dump, window-ring report + per-session sketch-health
+/// gauges; DESIGN.md §10). No pre-v5 payload changes shape.
+pub const PROTO_VERSION: u16 = 5;
 /// Oldest frame version the daemon still speaks (v2 clients keep
 /// working; their replies omit the v3/v4 fields).
 pub const PROTO_MIN_VERSION: u16 = 2;
 /// The `Metrics` op only exists from this frame version on.
 pub const METRICS_MIN_VERSION: u16 = 3;
+/// The `Events` / `MetricsWindow` ops only exist from this frame
+/// version on.
+pub const OBS_MIN_VERSION: u16 = 5;
 pub const FRAME_HEADER_LEN: usize = 12;
 /// Upper bound on a frame payload (a 128-batch, 8x512-layer ingest is
 /// ~5 MB; 64 MiB leaves ample headroom while bounding a hostile header).
@@ -72,6 +82,8 @@ pub mod msg {
     pub const QUERY_DRIFT: u8 = 12;
     pub const ARCHIVE_INFO: u8 = 13;
     pub const METRICS: u8 = 14;
+    pub const EVENTS: u8 = 15;
+    pub const METRICS_WINDOW: u8 = 16;
 
     pub const HELLO_OK: u8 = 128;
     pub const SESSION_OPENED: u8 = 129;
@@ -89,6 +101,8 @@ pub mod msg {
     pub const DRIFT: u8 = 141;
     pub const ARCHIVE_INFO_OK: u8 = 142;
     pub const METRICS_OK: u8 = 143;
+    pub const EVENTS_OK: u8 = 144;
+    pub const METRICS_WINDOW_OK: u8 = 145;
 }
 
 /// Protocol error codes carried by [`Response::Error`].
@@ -431,6 +445,11 @@ pub enum Request {
     /// Daemon observability report: counters + latency histograms
     /// (requires a v3 frame; see [`METRICS_MIN_VERSION`]).
     Metrics,
+    /// Merged event-journal dump, newest `max` events (0 = all
+    /// retained; requires a v5 frame, see [`OBS_MIN_VERSION`]).
+    Events { max: u32 },
+    /// Window-ring report + per-session sketch-health gauges (v5).
+    MetricsWindow,
 }
 
 impl Request {
@@ -450,6 +469,8 @@ impl Request {
             Request::QueryDrift { .. } => msg::QUERY_DRIFT,
             Request::ArchiveInfo { .. } => msg::ARCHIVE_INFO,
             Request::Metrics => msg::METRICS,
+            Request::Events { .. } => msg::EVENTS,
+            Request::MetricsWindow => msg::METRICS_WINDOW,
         }
     }
 
@@ -491,7 +512,12 @@ impl Request {
                 e.u64(*session);
                 e.len32(*layer);
             }
-            Request::Snapshot | Request::Shutdown | Request::Stats | Request::Metrics => {}
+            Request::Events { max } => e.u32(*max),
+            Request::Snapshot
+            | Request::Shutdown
+            | Request::Stats
+            | Request::Metrics
+            | Request::MetricsWindow => {}
         }
     }
 
@@ -548,6 +574,8 @@ impl Request {
                 session: d.u64()?,
             },
             msg::METRICS => Request::Metrics,
+            msg::EVENTS => Request::Events { max: d.u32()? },
+            msg::METRICS_WINDOW => Request::MetricsWindow,
             other => {
                 return Err(CodecError::BadTag {
                     what: "request type",
@@ -614,6 +642,20 @@ pub enum Response {
     ArchiveInfoOk(ArchiveInfo),
     /// Daemon observability report (v3+).
     MetricsOk(MetricsReport),
+    /// Merged event-journal dump (v5+): retained events oldest first,
+    /// the exact dropped total, and the journal's wall-clock base
+    /// (`base_unix_ms + ts_ns / 1e6` = absolute event time).
+    EventsOk {
+        dropped: u64,
+        base_unix_ms: u64,
+        events: Vec<Event>,
+    },
+    /// Window-ring report + per-session sketch-health gauges (v5+).
+    MetricsWindowOk {
+        report: WindowReport,
+        /// One row per open session, sorted by session id.
+        health: Vec<SessionHealth>,
+    },
 }
 
 impl Response {
@@ -635,6 +677,8 @@ impl Response {
             Response::Drift { .. } => msg::DRIFT,
             Response::ArchiveInfoOk(_) => msg::ARCHIVE_INFO_OK,
             Response::MetricsOk(_) => msg::METRICS_OK,
+            Response::EventsOk { .. } => msg::EVENTS_OK,
+            Response::MetricsWindowOk { .. } => msg::METRICS_WINDOW_OK,
         }
     }
 
@@ -787,6 +831,30 @@ impl Response {
                 e.u64(info.newest_step);
             }
             Response::MetricsOk(report) => enc_metrics_report(e, report),
+            Response::EventsOk {
+                dropped,
+                base_unix_ms,
+                events,
+            } => {
+                e.u64(*dropped);
+                e.u64(*base_unix_ms);
+                e.len32(events.len());
+                for ev in events {
+                    e.u64(ev.ts_ns);
+                    e.u32(ev.slot);
+                    e.u8(ev.kind);
+                    e.u8(ev.code);
+                    e.u64(ev.a);
+                    e.u64(ev.b);
+                }
+            }
+            Response::MetricsWindowOk { report, health } => {
+                enc_window_report(e, report);
+                e.len32(health.len());
+                for h in health {
+                    enc_session_health(e, h);
+                }
+            }
         }
     }
 
@@ -941,6 +1009,36 @@ impl Response {
                 newest_step: d.u64()?,
             }),
             msg::METRICS_OK => Response::MetricsOk(dec_metrics_report(&mut d)?),
+            msg::EVENTS_OK => {
+                let dropped = d.u64()?;
+                let base_unix_ms = d.u64()?;
+                let n = d.len32(8 + 4 + 1 + 1 + 8 + 8)?;
+                let mut events = Vec::with_capacity(n);
+                for _ in 0..n {
+                    events.push(Event {
+                        ts_ns: d.u64()?,
+                        slot: d.u32()?,
+                        kind: d.u8()?,
+                        code: d.u8()?,
+                        a: d.u64()?,
+                        b: d.u64()?,
+                    });
+                }
+                Response::EventsOk {
+                    dropped,
+                    base_unix_ms,
+                    events,
+                }
+            }
+            msg::METRICS_WINDOW_OK => {
+                let report = dec_window_report(&mut d)?;
+                let n = d.len32(8 + 4 + 4)?;
+                let mut health = Vec::with_capacity(n);
+                for _ in 0..n {
+                    health.push(dec_session_health(&mut d)?);
+                }
+                Response::MetricsWindowOk { report, health }
+            }
             other => {
                 return Err(CodecError::BadTag {
                     what: "response type",
@@ -1154,6 +1252,14 @@ mod tests {
             Request::ArchiveInfo { session: 4 }
         ));
         assert!(matches!(roundtrip_req(&Request::Metrics), Request::Metrics));
+        assert!(matches!(
+            roundtrip_req(&Request::Events { max: 50 }),
+            Request::Events { max: 50 }
+        ));
+        assert!(matches!(
+            roundtrip_req(&Request::MetricsWindow),
+            Request::MetricsWindow
+        ));
     }
 
     #[test]
@@ -1281,6 +1387,44 @@ mod tests {
                 newest_step: 15,
             }),
             Response::MetricsOk(sample_metrics_report()),
+            Response::EventsOk {
+                dropped: 3,
+                base_unix_ms: 1_754_600_000_000,
+                events: vec![
+                    Event {
+                        ts_ns: 1_000_000,
+                        slot: 0,
+                        kind: crate::serve::obs::events::kind::SESSION_OPEN,
+                        code: 0,
+                        a: 7,
+                        b: 0,
+                    },
+                    Event {
+                        ts_ns: 2_000_000,
+                        slot: 2,
+                        kind: crate::serve::obs::events::kind::SLOW_REQUEST,
+                        code: msg::INGEST,
+                        a: 300_000_000,
+                        b: 0,
+                    },
+                ],
+            },
+            Response::MetricsWindowOk {
+                report: WindowReport {
+                    interval_ms: 1000,
+                    capacity: 120,
+                    ..WindowReport::default()
+                },
+                health: vec![SessionHealth {
+                    session: 1,
+                    name: "run0".into(),
+                    layers: vec![crate::serve::obs::LayerHealth {
+                        z_norm: 2.0,
+                        top_sigma: 1.5,
+                        stable_rank: 16.0 / 9.0,
+                    }],
+                }],
+            },
         ];
         for r in &rs {
             assert_eq!(&roundtrip_resp(r), r, "{r:?}");

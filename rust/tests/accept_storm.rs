@@ -9,7 +9,7 @@ use std::thread;
 
 use anyhow::{ensure, Result};
 
-use sketchgrad::config::{ArchiveConfig, ClientConfig, ServeConfig};
+use sketchgrad::config::{ArchiveConfig, ClientConfig, ObsConfig, ServeConfig};
 use sketchgrad::data::ActStream;
 use sketchgrad::serve::proto::SessionSpec;
 use sketchgrad::serve::{Daemon, SketchClient};
@@ -58,6 +58,7 @@ fn storm_of_256_concurrent_connections_is_fully_served() {
         threads: 1,
         shards: SHARDS,
         archive: ArchiveConfig::default(),
+        obs: ObsConfig::default(),
     })
     .unwrap();
     let addr = daemon.local_addr().unwrap().to_string();

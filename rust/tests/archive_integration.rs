@@ -7,7 +7,7 @@
 //! out of the durable snapshot.
 
 use sketchgrad::archive::SessionArchive;
-use sketchgrad::config::{ArchiveConfig, ServeConfig};
+use sketchgrad::config::{ArchiveConfig, ObsConfig, ServeConfig};
 use sketchgrad::data::ActStream;
 use sketchgrad::serve::proto::SessionSpec;
 use sketchgrad::serve::{Daemon, Error, SketchClient};
@@ -37,6 +37,7 @@ fn config(tag: &str, capacity: usize, stride: usize) -> ServeConfig {
         threads: 1,
         shards: 1,
         archive: ArchiveConfig { capacity, stride },
+        obs: ObsConfig::default(),
     }
 }
 

@@ -6,7 +6,7 @@
 use std::net::TcpListener;
 use std::time::{Duration, Instant};
 
-use sketchgrad::config::{ArchiveConfig, ClientConfig, ServeConfig};
+use sketchgrad::config::{ArchiveConfig, ClientConfig, ObsConfig, ServeConfig};
 use sketchgrad::serve::{Daemon, Error, SketchClient};
 
 fn impatient(retries: u32) -> ClientConfig {
@@ -93,6 +93,7 @@ fn timeouts_do_not_disturb_a_healthy_daemon() {
         threads: 1,
         shards: 1,
         archive: ArchiveConfig::default(),
+        obs: ObsConfig::default(),
     })
     .unwrap();
     let addr = daemon.local_addr().unwrap().to_string();

@@ -4,10 +4,11 @@
 //! `run_scenario`), exercise the Busy/retry path under a tiny quota,
 //! and emit a `BENCH_serve.json` whose keys the CI gate can read.
 
-use sketchgrad::config::{ArchiveConfig, ClientConfig, ServeConfig};
+use sketchgrad::config::{ArchiveConfig, ClientConfig, ObsConfig, ServeConfig};
 use sketchgrad::loadgen::{
     run_scenario, write_report, DaemonDelta, Scenario, ScenarioReport,
 };
+use sketchgrad::serve::obs::{WindowBucket, WindowReport, WindowTotals};
 use sketchgrad::serve::{Daemon, Histogram, ShardStats};
 use sketchgrad::util::json::Json;
 
@@ -32,6 +33,7 @@ fn run_on_spawned(sc: &Scenario, shards: usize) -> ScenarioReport {
         threads: 1,
         shards,
         archive: ArchiveConfig::default(),
+        obs: ObsConfig::default(),
     })
     .unwrap();
     let addr = daemon.local_addr().unwrap().to_string();
@@ -71,6 +73,15 @@ fn tiny_steady_scenario_accounts_for_every_frame() {
     assert_eq!(rep.shard_stats.len(), 1, "v4 daemon reports its shard");
     assert_eq!(rep.shard_stats[0].ingest_frames, 24);
     assert_eq!(rep.shard_p99_skew(), None, "one shard has no skew");
+    // v5: the client window series accounts for every successful
+    // ingest, and run_scenario already proved the daemon's window-ring
+    // sums equal its lifetime counters (else it would have failed).
+    assert_eq!(rep.win_ok.iter().sum::<u64>(), rep.ingests_ok);
+    let w = rep
+        .daemon_windows
+        .as_ref()
+        .expect("v5 daemon must yield a window report");
+    assert_eq!(w.total().ingest_frames, 24);
 }
 
 /// A 4-shard daemon under mixed churn traffic: the frame/byte
@@ -209,6 +220,23 @@ fn report_json_has_the_keys_the_ci_gate_reads() {
                 ..ShardStats::default()
             },
         ],
+        win_ok: vec![3, 1],
+        daemon_windows: Some(WindowReport {
+            interval_ms: 1000,
+            capacity: 120,
+            baseline: WindowTotals::default(),
+            evicted: WindowTotals::default(),
+            buckets: vec![WindowBucket {
+                index: 0,
+                dur_ms: 1000,
+                ingest_frames: 5,
+                ..WindowBucket::default()
+            }],
+            open: WindowBucket {
+                index: 1,
+                ..WindowBucket::default()
+            },
+        }),
     };
     let path = std::env::temp_dir()
         .join(format!("bench-serve-it-{}.json", std::process::id()))
@@ -238,6 +266,30 @@ fn report_json_has_the_keys_the_ci_gate_reads() {
     assert_eq!(parsed.get("x_shards").unwrap().as_f64().unwrap(), 2.0);
     let skew = parsed.get("x_shard_p99_skew").unwrap().as_f64().unwrap();
     assert!((skew - 3.0).abs() < 1e-9, "9us/3us skew, got {skew}");
+    assert_eq!(
+        parsed.get("x_window_verified").unwrap().as_f64().unwrap(),
+        1.0
+    );
+    assert_eq!(
+        parsed.get("x_client_windows").unwrap().as_f64().unwrap(),
+        2.0
+    );
+    assert_eq!(
+        parsed
+            .get("x_win0_ingests_per_s")
+            .unwrap()
+            .as_f64()
+            .unwrap(),
+        3.0
+    );
+    assert_eq!(
+        parsed
+            .get("x_win1_ingests_per_s")
+            .unwrap()
+            .as_f64()
+            .unwrap(),
+        1.0
+    );
     let results = parsed.get("results").unwrap().as_arr().unwrap();
     assert_eq!(results.len(), 2, "ingest + query rows");
     assert_eq!(

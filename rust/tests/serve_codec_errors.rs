@@ -9,7 +9,7 @@ use std::io::{Read, Write};
 use std::net::{Shutdown, TcpListener, TcpStream};
 use std::time::Duration;
 
-use sketchgrad::config::{ArchiveConfig, ClientConfig, ServeConfig};
+use sketchgrad::config::{ArchiveConfig, ClientConfig, ObsConfig, ServeConfig};
 use sketchgrad::data::ActStream;
 use sketchgrad::serve::proto::{
     self, ErrorCode, FrameHeader, Response, SessionSpec, FRAME_HEADER_LEN,
@@ -30,6 +30,7 @@ fn test_config(tag: &str, quota: usize) -> ServeConfig {
         threads: 1,
         shards: 1,
         archive: ArchiveConfig::default(),
+        obs: ObsConfig::default(),
     }
 }
 

@@ -6,7 +6,7 @@
 
 use std::thread;
 
-use sketchgrad::config::{ArchiveConfig, ServeConfig};
+use sketchgrad::config::{ArchiveConfig, ObsConfig, ServeConfig};
 use sketchgrad::data::ActStream;
 use sketchgrad::monitor::{step_metrics, MonitorHub, SessionId};
 use sketchgrad::serve::daemon::recon_errors;
@@ -52,6 +52,7 @@ fn test_config(tag: &str, max_sessions: usize, quota: usize) -> ServeConfig {
         threads: 1,
         shards: 1,
         archive: ArchiveConfig::default(),
+        obs: ObsConfig::default(),
     }
 }
 

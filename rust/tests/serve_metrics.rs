@@ -4,7 +4,7 @@
 //! counters surviving a daemon restart, and raw v2-frame compatibility
 //! (old clients keep working, `Metrics` is cleanly version-gated).
 
-use sketchgrad::config::{ArchiveConfig, ServeConfig};
+use sketchgrad::config::{ArchiveConfig, ObsConfig, ServeConfig};
 use sketchgrad::data::ActStream;
 use sketchgrad::serve::proto::{
     self, ErrorCode, Request, Response, SessionSpec, PROTO_VERSION,
@@ -29,6 +29,7 @@ fn test_config(tag: &str, max_sessions: usize, quota: usize) -> ServeConfig {
         threads: 1,
         shards: 1,
         archive: ArchiveConfig::default(),
+        obs: ObsConfig::default(),
     }
 }
 

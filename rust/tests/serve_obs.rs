@@ -1,0 +1,419 @@
+//! Loopback tests for the v5 observability surfaces (DESIGN.md §10):
+//! the typed `Events` / `MetricsWindow` ops, the HTTP exposition
+//! endpoint, and the exactness guarantees behind them — window-ring
+//! sums equal to lifetime counters on every surface, per-session
+//! sketch-health agreement between protocol and scrape, exact journal
+//! drop accounting under a tiny ring, and clean v5 version gating.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+
+use sketchgrad::config::{ArchiveConfig, ObsConfig, ServeConfig};
+use sketchgrad::data::ActStream;
+use sketchgrad::serve::obs::{events::kind, EventKind};
+use sketchgrad::serve::proto::{
+    self, ErrorCode, Request, Response, SessionSpec,
+};
+use sketchgrad::serve::{Daemon, SketchClient};
+use sketchgrad::sketch::Mat;
+
+fn unique_snapshot_path(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("sketchd-obs-{tag}-{}.snap", std::process::id()))
+        .to_string_lossy()
+        .into_owned()
+}
+
+/// Config with the exposition endpoint on an ephemeral port, fast
+/// window ticks and a slow-request threshold high enough that no
+/// legitimate request journals as slow (keeps event counts exact).
+fn test_config(tag: &str, shards: usize, obs: ObsConfig) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: 16,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: 0,
+        snapshot_path: unique_snapshot_path(tag),
+        threads: 1,
+        shards,
+        archive: ArchiveConfig::default(),
+        obs,
+    }
+}
+
+fn obs_on() -> ObsConfig {
+    ObsConfig {
+        addr: "127.0.0.1:0".into(),
+        window_ms: 50,
+        window_count: 16,
+        slow_ms: 600_000,
+        ..ObsConfig::default()
+    }
+}
+
+fn spec(name: &str, dims: &[usize], seed: u64) -> SessionSpec {
+    SessionSpec {
+        name: name.into(),
+        layer_dims: dims.to_vec(),
+        rank: 3,
+        beta: 0.9,
+        seed,
+        window: 8,
+        collapse_frac: 0.25,
+    }
+}
+
+/// Wire payload bytes of one `Ingest` frame (mirrors the daemon's
+/// `payload_len` accounting).
+fn ingest_payload_bytes(acts: &[Mat]) -> u64 {
+    17 + acts
+        .iter()
+        .map(|m| 8 + (m.rows * m.cols * 8) as u64)
+        .sum::<u64>()
+}
+
+/// Minimal HTTP/1.1 GET against the exposition endpoint; returns the
+/// status line and the body (the server always closes after one reply).
+fn http_get(addr: SocketAddr, path: &str) -> (String, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    write!(
+        s,
+        "GET {path} HTTP/1.1\r\nHost: sketchd\r\nConnection: close\r\n\r\n"
+    )
+    .unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let (head, body) = buf.split_once("\r\n\r\n").expect("header/body split");
+    (
+        head.lines().next().unwrap_or("").to_string(),
+        body.to_string(),
+    )
+}
+
+/// Value of an unlabeled metric line (`name value`).
+fn metric(body: &str, name: &str) -> u64 {
+    body.lines()
+        .find_map(|l| l.strip_prefix(name)?.strip_prefix(' '))
+        .unwrap_or_else(|| panic!("metric {name} missing:\n{body}"))
+        .trim()
+        .parse::<u64>()
+        .unwrap_or_else(|e| panic!("metric {name} not a u64: {e}"))
+}
+
+/// Sum of every sample of a labeled metric (`name{...} value`).
+fn labeled_sum(body: &str, name: &str) -> u64 {
+    body.lines()
+        .filter_map(|l| l.strip_prefix(name)?.strip_prefix('{'))
+        .map(|rest| {
+            rest.split_once("} ")
+                .unwrap_or_else(|| panic!("bad labeled line for {name}"))
+                .1
+                .trim()
+                .parse::<u64>()
+                .unwrap()
+        })
+        .sum()
+}
+
+/// One daemon, two ingesting sessions: the v5 `MetricsWindow` report,
+/// the v3 lifetime counters and the `/metrics` scrape all report the
+/// same exact frame/byte totals; the window balance terms published on
+/// the scrape telescope to the lifetime counter; health gauges carry
+/// the same values on both surfaces; the journal records the session
+/// lifecycle with zero drops.
+#[test]
+fn obs_surfaces_agree_on_exact_counters() {
+    const DIMS: &[usize] = &[32, 16];
+    let daemon = Daemon::bind(test_config("agree", 1, obs_on())).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let snap_path = unique_snapshot_path("agree");
+    let handle = daemon.spawn().unwrap();
+    let obs_addr = handle.obs_addr().expect("obs endpoint enabled");
+
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    let s1 = client.open_session(&spec("obs-a", DIMS, 11)).unwrap().id();
+    let s2 = client.open_session(&spec("obs-b", DIMS, 22)).unwrap().id();
+    let mut stream_a = ActStream::new(DIMS, false, 11);
+    let mut stream_b = ActStream::new(DIMS, false, 22);
+    let mut bytes = 0u64;
+    for step in 0..6 {
+        let acts = stream_a.next_batch(8);
+        bytes += ingest_payload_bytes(&acts);
+        client
+            .session(s1)
+            .ingest(stream_a.loss_at(step, 6), &acts, false)
+            .unwrap();
+        if step % 2 == 0 {
+            let acts = stream_b.next_batch(5);
+            bytes += ingest_payload_bytes(&acts);
+            client
+                .session(s2)
+                .ingest(stream_b.loss_at(step, 6), &acts, false)
+                .unwrap();
+        }
+    }
+    client.session(s1).diagnose().unwrap();
+
+    // Window report first: its open bucket closes at the capture, so
+    // its total is the lifetime capture at that instant; the ingest
+    // counters cannot move afterwards (this client is the only tenant
+    // and only sends control traffic from here on).
+    let w = client.metrics_window().unwrap();
+    let m = client.metrics().unwrap();
+    let total = w.report.total();
+    assert_eq!(total.ingest_frames, 9);
+    assert_eq!(m.ingest.count, 9);
+    assert_eq!(total.ingest_bytes, bytes);
+    assert_eq!(m.ingest_bytes, bytes);
+    assert_eq!(total.busy, 0);
+    assert_eq!(w.report.interval_ms, 50);
+
+    // Health rides the same reply: both sessions, one row per layer,
+    // with the documented gauge invariants.
+    assert_eq!(w.health.len(), 2);
+    assert_eq!(w.health[0].session, s1.min(s2), "sorted by session id");
+    for h in &w.health {
+        assert_eq!(h.layers.len(), DIMS.len());
+        for l in &h.layers {
+            assert!(l.z_norm > 0.0, "ingested sketch must be nonzero");
+            assert!(l.top_sigma > 0.0 && l.top_sigma <= l.z_norm * (1.0 + 1e-9));
+            assert!(l.stable_rank >= 1.0 - 1e-9);
+        }
+    }
+
+    // The journal saw the lifecycle: the connection accept and both
+    // opens, in timestamp order, nothing dropped.
+    let ev = client.events(0).unwrap();
+    assert_eq!(ev.dropped, 0);
+    assert!(ev.base_unix_ms > 0);
+    let opens = ev
+        .events
+        .iter()
+        .filter(|e| e.kind == kind::SESSION_OPEN)
+        .count();
+    assert_eq!(opens, 2);
+    assert!(ev
+        .events
+        .iter()
+        .any(|e| matches!(e.unpack(), Some(EventKind::ShardAccept { .. }))));
+    assert!(
+        ev.events.windows(2).all(|p| p[0].ts_ns <= p[1].ts_ns),
+        "merged journal must be chronological"
+    );
+
+    // Scrape: same exact totals, and the window balance terms the CI
+    // leg asserts telescope to the lifetime counter.
+    let (status, body) = http_get(obs_addr, "/metrics");
+    assert_eq!(status, "HTTP/1.1 200 OK");
+    assert_eq!(metric(&body, "sketchd_ingest_frames_total"), 9);
+    assert_eq!(metric(&body, "sketchd_ingest_bytes_total"), bytes);
+    assert_eq!(metric(&body, "sketchd_sessions_open"), 2);
+    assert_eq!(labeled_sum(&body, "sketchd_busy_total"), 0);
+    let balance = metric(&body, "sketchd_window_frames_baseline")
+        + metric(&body, "sketchd_window_frames_evicted")
+        + metric(&body, "sketchd_window_frames_retained")
+        + metric(&body, "sketchd_window_frames_open");
+    assert_eq!(balance, 9, "window terms must telescope to the counter");
+    assert_eq!(
+        metric(&body, "sketchd_journal_dropped_total"),
+        0,
+        "nothing dropped in a roomy journal"
+    );
+    // The scrape recomputes health from the same resident sketches, so
+    // the gauge values match the protocol reply bit for bit.
+    for h in &w.health {
+        let line = format!(
+            "sketchd_session_z_norm{{session=\"{}\",name=\"{}\",layer=\"0\"}} {}",
+            h.session, h.name, h.layers[0].z_norm
+        );
+        assert!(body.contains(&line), "missing {line:?} in:\n{body}");
+    }
+
+    let (status, events_body) = http_get(obs_addr, "/events");
+    assert_eq!(status, "HTTP/1.1 200 OK");
+    assert!(events_body.starts_with("# sketchd event journal:"));
+    assert!(events_body.contains(&format!("session-open session={s1}")));
+
+    let (status, _) = http_get(obs_addr, "/nope");
+    assert_eq!(status, "HTTP/1.1 404 Not Found");
+
+    client.session(s1).close().unwrap();
+    client.session(s2).close().unwrap();
+    let ev = client.events(0).unwrap();
+    let closes = ev
+        .events
+        .iter()
+        .filter(|e| e.kind == kind::SESSION_CLOSE)
+        .count();
+    assert_eq!(closes, 2);
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+/// A journal ring of 4 slots per writer under 12 open/close cycles:
+/// retention is exactly the ring capacity, the dropped counter is the
+/// exact overflow, and the scrape's journal totals agree with the
+/// protocol reply (`retained + dropped == emitted`).
+#[test]
+fn tiny_journal_drops_exactly_and_totals_balance() {
+    const DIMS: &[usize] = &[16, 8];
+    let obs = ObsConfig {
+        journal_capacity: 4,
+        ..obs_on()
+    };
+    let daemon = Daemon::bind(test_config("drops", 1, obs)).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let snap_path = unique_snapshot_path("drops");
+    let handle = daemon.spawn().unwrap();
+    let obs_addr = handle.obs_addr().unwrap();
+
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    for i in 0..12 {
+        let id = client
+            .open_session(&spec(&format!("churn-{i}"), DIMS, i))
+            .unwrap()
+            .id();
+        client.session(id).close().unwrap();
+    }
+
+    // Shard 0's writer has seen exactly 1 accept + 12 opens + 12
+    // closes; the control writer is idle (no snapshots, no failures).
+    let ev = client.events(0).unwrap();
+    assert_eq!(ev.events.len(), 4, "retention is exactly the capacity");
+    assert_eq!(ev.dropped, 25 - 4, "dropped is the exact overflow");
+
+    let (_, body) = http_get(obs_addr, "/metrics");
+    assert_eq!(metric(&body, "sketchd_journal_events_total"), 25);
+    assert_eq!(metric(&body, "sketchd_journal_dropped_total"), 21);
+
+    // `max` caps from the newest side.
+    let ev2 = client.events(2).unwrap();
+    assert_eq!(ev2.events.len(), 2);
+    assert_eq!(
+        ev2.events.last().map(|e| (e.ts_ns, e.kind, e.a)),
+        ev.events.last().map(|e| (e.ts_ns, e.kind, e.a)),
+        "capped read keeps the newest events"
+    );
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+/// Four shards, five connections: accounting stays exact across the
+/// sharded journal and windows — per-shard scrape counters and the
+/// window ring both sum to the client's frame total, and every shard's
+/// writer journaled its accepts.
+#[test]
+fn four_shard_obs_accounting_stays_exact() {
+    const DIMS: &[usize] = &[16, 8];
+    let daemon = Daemon::bind(test_config("shards", 4, obs_on())).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let snap_path = unique_snapshot_path("shards");
+    let handle = daemon.spawn().unwrap();
+    let obs_addr = handle.obs_addr().unwrap();
+
+    // Four tenant connections (round-robin lands one per shard), three
+    // ingests each, all complete before the control captures.
+    let mut bytes = 0u64;
+    for t in 0..4u64 {
+        let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+        let id = client
+            .open_session(&spec(&format!("t{t}"), DIMS, t))
+            .unwrap()
+            .id();
+        let mut stream = ActStream::new(DIMS, false, t);
+        for step in 0..3 {
+            let acts = stream.next_batch(4);
+            bytes += ingest_payload_bytes(&acts);
+            client
+                .session(id)
+                .ingest(stream.loss_at(step, 3), &acts, false)
+                .unwrap();
+        }
+    }
+
+    let (mut control, _info) = SketchClient::connect(&addr).unwrap();
+    let w = control.metrics_window().unwrap();
+    let m = control.metrics().unwrap();
+    assert_eq!(w.report.total().ingest_frames, 12);
+    assert_eq!(m.ingest.count, 12);
+    assert_eq!(w.report.total().ingest_bytes, bytes);
+    assert_eq!(w.health.len(), 4, "sessions outlive their connections");
+
+    let ev = control.events(0).unwrap();
+    assert_eq!(ev.dropped, 0);
+    let accept_slots: std::collections::BTreeSet<u32> = ev
+        .events
+        .iter()
+        .filter(|e| e.kind == kind::SHARD_ACCEPT)
+        .map(|e| e.slot)
+        .collect();
+    assert_eq!(
+        accept_slots.len(),
+        4,
+        "round-robin accept must journal on every shard: {accept_slots:?}"
+    );
+
+    let (_, body) = http_get(obs_addr, "/metrics");
+    assert_eq!(
+        labeled_sum(&body, "sketchd_shard_ingest_frames_total"),
+        12,
+        "per-shard scrape counters must sum to the client total"
+    );
+    let balance = metric(&body, "sketchd_window_frames_baseline")
+        + metric(&body, "sketchd_window_frames_evicted")
+        + metric(&body, "sketchd_window_frames_retained")
+        + metric(&body, "sketchd_window_frames_open");
+    assert_eq!(balance, 12);
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}
+
+/// The v5 ops are cleanly version-gated: raw v4 `Events` and
+/// `MetricsWindow` frames get a typed `UnsupportedVersion` error (not
+/// a hangup), while v4 `Metrics` on the same connection still works.
+#[test]
+fn obs_ops_are_version_gated_below_v5() {
+    let daemon =
+        Daemon::bind(test_config("gate", 1, ObsConfig::default())).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let snap_path = unique_snapshot_path("gate");
+    let handle = daemon.spawn().unwrap();
+
+    let mut raw = TcpStream::connect(&addr).unwrap();
+    for req in [Request::Events { max: 0 }, Request::MetricsWindow] {
+        proto::write_frame_versioned(&mut raw, 4, req.msg_type(), &req.encode())
+            .unwrap();
+        let (header, payload) = proto::read_frame(&mut raw).unwrap();
+        assert_eq!(header.version, 4, "reply echoes the request version");
+        match Response::decode_v(header.msg, &payload, header.version).unwrap()
+        {
+            Response::Error { code, .. } => {
+                assert_eq!(code, ErrorCode::UnsupportedVersion)
+            }
+            other => panic!("expected Error, got {other:?}"),
+        }
+    }
+
+    // The same v4 connection keeps working for v4-era ops.
+    let metrics = Request::Metrics;
+    proto::write_frame_versioned(
+        &mut raw,
+        4,
+        metrics.msg_type(),
+        &metrics.encode(),
+    )
+    .unwrap();
+    let (header, payload) = proto::read_frame(&mut raw).unwrap();
+    match Response::decode_v(header.msg, &payload, header.version).unwrap() {
+        Response::MetricsOk(report) => {
+            assert!(report.frames_served >= 2, "the two rejections counted")
+        }
+        other => panic!("expected MetricsOk, got {other:?}"),
+    }
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap_path);
+}

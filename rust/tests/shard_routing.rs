@@ -7,7 +7,7 @@
 //! lifetime metrics.
 
 use sketchgrad::archive::TrajectoryPoint;
-use sketchgrad::config::{ArchiveConfig, ServeConfig};
+use sketchgrad::config::{ArchiveConfig, ObsConfig, ServeConfig};
 use sketchgrad::data::ActStream;
 use sketchgrad::serve::proto::SessionSpec;
 use sketchgrad::serve::{Daemon, SketchClient};
@@ -34,6 +34,7 @@ fn config(tag: &str, shards: usize) -> ServeConfig {
         threads: 1,
         shards,
         archive: ArchiveConfig::default(),
+        obs: ObsConfig::default(),
     }
 }
 
