@@ -290,6 +290,7 @@ fn main() {
         threads: 1,
         archive: ArchiveConfig::default(),
         obs: ObsConfig::default(),
+        fault: String::new(),
     })
     .expect("bind loopback daemon");
     let addr = daemon.local_addr().unwrap().to_string();

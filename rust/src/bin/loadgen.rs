@@ -17,9 +17,11 @@
 //! be otherwise idle for the cross-check to hold.
 //!
 //! The default run covers every built-in scenario except the fixed CI
-//! workloads — `smoke` (32 tenants × 200 intervals) and `churn_1k`
-//! (1000-tenant churn) — which CI invokes by name.  Results land in
-//! `BENCH_serve.json` at the repo root.
+//! workloads — `smoke` (32 tenants × 200 intervals), `churn_1k`
+//! (1000-tenant churn) and `chaos` (the kill-and-resume crash-safety
+//! gate, which always spawns its own daemon so it can kill and restart
+//! it) — which CI invokes by name.  Results land in `BENCH_serve.json`
+//! at the repo root.
 
 use anyhow::{bail, Context, Result};
 
@@ -27,7 +29,8 @@ use sketchgrad::config::{
     resolve_threads, ArchiveConfig, ClientConfig, ObsConfig, ServeConfig,
 };
 use sketchgrad::loadgen::{
-    print_report, run_scenario, write_report, Scenario, ScenarioReport,
+    print_report, run_chaos, run_scenario, write_report, Scenario,
+    ScenarioReport,
 };
 use sketchgrad::serve::Daemon;
 use sketchgrad::util::cli::Args;
@@ -92,7 +95,9 @@ fn main() -> Result<()> {
         // Default run: the full matrix minus the CI-only workloads.
         None => Scenario::builtin()
             .into_iter()
-            .filter(|s| !matches!(s.name.as_str(), "smoke" | "churn_1k"))
+            .filter(|s| {
+                !matches!(s.name.as_str(), "smoke" | "churn_1k" | "chaos")
+            })
             .collect(),
     };
     if chosen.is_empty() {
@@ -108,11 +113,22 @@ fn main() -> Result<()> {
         if intervals > 0 {
             sc.intervals = intervals;
         }
-        let rep = match &addr {
-            Some(a) => run_scenario(a, &sc, &net).with_context(|| {
-                format!("scenario {} against {a}", sc.name)
-            })?,
-            None => run_spawned(&sc, threads, shards, &net)?,
+        let rep = if sc.name == "chaos" {
+            if addr.is_some() {
+                bail!(
+                    "the chaos scenario kills and restarts its own \
+                     daemon; drop --addr"
+                );
+            }
+            run_chaos(&sc, threads, shards, &net)
+                .context("chaos scenario")?
+        } else {
+            match &addr {
+                Some(a) => run_scenario(a, &sc, &net).with_context(
+                    || format!("scenario {} against {a}", sc.name),
+                )?,
+                None => run_spawned(&sc, threads, shards, &net)?,
+            }
         };
         print_report(&rep);
         reports.push(rep);
@@ -151,6 +167,7 @@ fn run_spawned(
         shards,
         archive: ArchiveConfig::default(),
         obs: ObsConfig::default(),
+        fault: String::new(),
     };
     let daemon = Daemon::bind(cfg)
         .with_context(|| format!("spawning daemon for {}", sc.name))?;

@@ -12,7 +12,7 @@
 //!         [--threads 1] [--shards 1]
 //!         [--obs-addr 127.0.0.1:9090] [--obs-window-ms 1000]
 //!         [--obs-window-count 120] [--obs-journal-capacity 4096]
-//!         [--obs-slow-ms 250]
+//!         [--obs-slow-ms 250] [--fault "site=action[@sched];..."]
 //! ```
 //!
 //! `--shards N` sizes the nonblocking connection-shard count
@@ -26,6 +26,12 @@
 //! and the slow-request journaling threshold.  Structured stderr
 //! logging is gated by `SKETCHD_LOG=error|info|debug` (silent when
 //! unset).
+//!
+//! `--fault` (or the `SKETCHD_FAULT` env var, which is applied on top)
+//! arms deterministic failpoints for robustness testing — e.g.
+//! `conn.read=wouldblock@every:50;snapshot.rename=err@oneshot` — see
+//! `serve::fault` for the site list and schedule grammar.  Unarmed
+//! sites cost one relaxed atomic load.
 //!
 //! The daemon snapshots on the interval, on client `Snapshot` requests
 //! and at shutdown; a restart on the same `--snapshot-path` resumes all

@@ -264,6 +264,11 @@ pub struct ServeConfig {
     /// Observability layer: event journal, window ring, exposition
     /// endpoint (`[obs]` section).
     pub obs: ObsConfig,
+    /// Failpoint spec armed at bind (DESIGN.md §11), e.g.
+    /// `"conn.write=err@every:200;handler=panic@oneshot"`.  Empty =
+    /// nothing armed (zero-cost checks).  `SKETCHD_FAULT` entries are
+    /// merged on top at bind.
+    pub fault: String,
 }
 
 impl Default for ServeConfig {
@@ -278,6 +283,7 @@ impl Default for ServeConfig {
             shards: 1,
             archive: ArchiveConfig::default(),
             obs: ObsConfig::default(),
+            fault: String::new(),
         }
     }
 }
@@ -322,6 +328,7 @@ impl ServeConfig {
                 slow_ms: t.usize_or("obs.slow_ms", d.obs.slow_ms as usize)?
                     as u64,
             },
+            fault: t.str_or("serve.fault", &d.fault)?,
         })
     }
 
@@ -352,6 +359,15 @@ impl ServeConfig {
         }
         if self.obs.journal_capacity == 0 {
             bail!("obs.journal_capacity must be >= 1");
+        }
+        if !self.fault.is_empty() {
+            // Parse onto a throwaway registry so a typoed failpoint
+            // spec fails at config load, not silently at bind.
+            if let Err(e) =
+                crate::serve::fault::FaultRegistry::new().arm(&self.fault)
+            {
+                bail!("serve.fault: {e}");
+            }
         }
         Ok(())
     }
@@ -515,6 +531,7 @@ session_quota_bytes = 1024
 snapshot_path = "/tmp/snap.bin"
 threads = 2
 shards = 3
+fault = "handler=panic@oneshot"
 [archive]
 capacity = 12
 stride = 3
@@ -535,6 +552,7 @@ slow_ms = 10
         assert_eq!(c.snapshot_path, "/tmp/snap.bin");
         assert_eq!(c.threads, 2);
         assert_eq!(c.shards, 3);
+        assert_eq!(c.fault, "handler=panic@oneshot");
         assert_eq!(c.archive, ArchiveConfig { capacity: 12, stride: 3 });
         assert_eq!(
             c.obs,
@@ -579,8 +597,12 @@ slow_ms = 10
         bad = d.clone();
         bad.obs.window_count = 0;
         assert!(bad.validate().is_err());
-        bad = d;
+        bad = d.clone();
         bad.obs.journal_capacity = 0;
+        assert!(bad.validate().is_err());
+        // Fault specs are validated at config load.
+        bad = d;
+        bad.fault = "handler=frobnicate".into();
         assert!(bad.validate().is_err());
     }
 

@@ -41,11 +41,13 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, ensure, Context, Result};
 
 use crate::benchkit::{fmt_dur, Bench, BenchResult};
-use crate::config::ClientConfig;
+use crate::config::{
+    resolve_threads, ArchiveConfig, ClientConfig, ObsConfig, ServeConfig,
+};
 use crate::serve::obs::WindowReport;
 use crate::serve::{
-    Histogram, ShardStats, SketchClient, METRICS_MIN_VERSION,
-    OBS_MIN_VERSION,
+    Daemon, DaemonHandle, Error as ServeErr, Histogram, ShardStats,
+    SketchClient, METRICS_MIN_VERSION, OBS_MIN_VERSION,
 };
 
 /// One load-test configuration: a tenant population and its traffic mix.
@@ -102,9 +104,10 @@ impl Default for Scenario {
 
 impl Scenario {
     /// The built-in scenario matrix.  `smoke` (the fixed CI workload,
-    /// 32 tenants × 200 intervals) and `churn_1k` (the 1000-tenant
-    /// churn accounting stress) are excluded from the default `loadgen`
-    /// run — CI invokes them by name.
+    /// 32 tenants × 200 intervals), `churn_1k` (the 1000-tenant churn
+    /// accounting stress) and `chaos` (the kill-and-resume
+    /// crash-safety gate, see [`run_chaos`]) are excluded from the
+    /// default `loadgen` run — CI invokes them by name.
     pub fn builtin() -> Vec<Scenario> {
         vec![
             Scenario {
@@ -174,6 +177,24 @@ impl Scenario {
                 batch: 4,
                 rank: 2,
                 churn_every: 3,
+                ..Scenario::default()
+            },
+            // Crash-safety workload ([`run_chaos`], CI-only): paced so
+            // the daemon kill+restart lands mid-run, with an
+            // effectively unlimited quota so replays never trip Busy.
+            // The run FAILS unless every tenant's final ack shows
+            // exactly `intervals` applied ingests — zero lost, zero
+            // duplicated — across the crash and the injected torn
+            // replies.
+            Scenario {
+                name: "chaos".into(),
+                tenants: 6,
+                intervals: 120,
+                layer_dims: vec![32, 16],
+                batch: 8,
+                rank: 3,
+                hz: 30.0,
+                quota: 1 << 40,
                 ..Scenario::default()
             },
         ]
@@ -434,6 +455,209 @@ pub fn run_scenario(
         shard_stats,
         win_ok: agg.win_ok,
         daemon_windows,
+    })
+}
+
+/// Drive the crash-safety scenario: spawn a daemon, open resumable
+/// sessions, force a durable snapshot, arm torn-reply faults, **kill
+/// the daemon mid-run** (no final snapshot — a crash, not a shutdown),
+/// restart it on the same address from the same snapshot, and let the
+/// tenants' replay rings close the gap.
+///
+/// The run fails unless
+/// - every tenant's final `IngestOk` reports exactly `intervals`
+///   applied batches AND `acked_seq == intervals` (zero lost, zero
+///   duplicated ingests across the crash),
+/// - every tenant performed at least one reconnect-and-replay (the
+///   kill actually landed mid-run),
+/// - an injected handler panic after the run is isolated to one typed
+///   error reply: the next request on the same connection succeeds and
+///   the daemon's `handler_panics` counter records it.
+pub fn run_chaos(
+    sc: &Scenario,
+    threads: usize,
+    shards: usize,
+    net: &ClientConfig,
+) -> Result<ScenarioReport> {
+    ensure!(
+        sc.tenants > 0 && sc.intervals > 0 && sc.batch > 0,
+        "scenario {:?}: tenants, intervals and batch must be > 0",
+        sc.name
+    );
+    ensure!(
+        sc.hz > 0.0,
+        "chaos scenario must be paced (hz > 0) so the kill lands mid-run"
+    );
+    let snap = std::env::temp_dir().join(format!(
+        "loadgen-chaos-{}.snap",
+        std::process::id()
+    ));
+    let _ = std::fs::remove_file(&snap);
+    let cfg = ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: sc.tenants * 2 + 4,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: if sc.quota > 0 {
+            sc.quota
+        } else {
+            ServeConfig::default().session_quota_bytes
+        },
+        snapshot_path: snap.to_string_lossy().into_owned(),
+        threads: resolve_threads(threads),
+        shards,
+        archive: ArchiveConfig::default(),
+        obs: ObsConfig::default(),
+        fault: String::new(),
+    };
+    let daemon = Daemon::bind(cfg.clone()).context("spawning chaos daemon")?;
+    let addr = daemon.local_addr()?.to_string();
+    let handle = daemon.spawn()?;
+
+    let start = Barrier::new(sc.tenants + 1);
+    let start_ref = &start;
+    let addr_ref = addr.as_str();
+    let mut outcomes = Vec::with_capacity(sc.tenants);
+    let mut wall = Duration::ZERO;
+    let mut survivor: Option<DaemonHandle> = None;
+    let run = thread::scope(|s| -> Result<()> {
+        let workers: Vec<_> = (0..sc.tenants)
+            .map(|tenant| {
+                s.spawn(move || {
+                    worker::run_chaos_tenant(
+                        addr_ref, sc, tenant, start_ref, net,
+                    )
+                })
+            })
+            .collect();
+        start_ref.wait();
+        let t0 = Instant::now();
+        // Sessions are open; make them durable before the crash so the
+        // restarted daemon restores them — the tenants' replay rings
+        // then close the gap between the snapshot's acked_seq and the
+        // frames applied after it.
+        let (mut control, _) = SketchClient::connect_with(addr_ref, net)
+            .context("chaos control client")?;
+        control.snapshot().context("pre-kill durability snapshot")?;
+        // Beyond the single kill, tear every 61st reply frame mid-write
+        // and drop the connection: at-least-once delivery that the seq
+        // dedup must collapse back to exactly-once.
+        handle
+            .faults()
+            .arm("conn.truncate=truncate@every:61")
+            .map_err(anyhow::Error::msg)?;
+        let expected = Duration::from_secs_f64(sc.intervals as f64 / sc.hz);
+        thread::sleep(expected.mul_f64(0.35));
+        handle.kill().context("killing chaos daemon mid-run")?;
+        let mut cfg2 = cfg.clone();
+        cfg2.addr = addr_ref.to_string();
+        let daemon2 = Daemon::bind(cfg2)
+            .context("restarting chaos daemon on the same address")?;
+        survivor = Some(daemon2.spawn()?);
+        for (tenant, h) in workers.into_iter().enumerate() {
+            match h.join() {
+                Ok(r) => outcomes.push(r.with_context(|| {
+                    format!("chaos tenant {tenant} failed")
+                })?),
+                Err(_) => bail!("chaos tenant {tenant} panicked"),
+            }
+        }
+        wall = t0.elapsed();
+        Ok(())
+    });
+    if let Err(e) = run {
+        if let Some(h) = survivor {
+            let _ = h.stop();
+        }
+        let _ = std::fs::remove_file(&snap);
+        return Err(e);
+    }
+    let handle2 = survivor
+        .ok_or_else(|| anyhow::anyhow!("restarted chaos daemon missing"))?;
+
+    // Exactly-once accounting: the daemon's applied-ingest count and
+    // highest acked seq must both equal the client's interval count for
+    // every tenant — a lost frame shows as a shortfall, a re-applied
+    // replay as an overshoot.
+    let mut agg = TenantReport::default();
+    let mut replays_total = 0u64;
+    for oc in &outcomes {
+        ensure!(
+            oc.final_batches == sc.intervals as u64
+                && oc.final_acked == sc.intervals as u64,
+            "chaos: session {} finished with {} applied batches, \
+             acked_seq {} (want {} each) — ingests were lost or \
+             duplicated across the crash",
+            oc.session,
+            oc.final_batches,
+            oc.final_acked,
+            sc.intervals
+        );
+        ensure!(
+            oc.replays >= 1,
+            "chaos: session {} never replayed — the kill did not land \
+             mid-run",
+            oc.session
+        );
+        replays_total += oc.replays;
+        agg.merge(&oc.rep);
+    }
+
+    // Panic isolation on the survivor: one injected handler panic must
+    // cost exactly one typed error reply — the connection and shard
+    // keep serving, and the daemon counts the panic.
+    handle2.faults().disarm_all();
+    let (mut control, _) = SketchClient::connect_with(&addr, net)
+        .context("post-chaos control client")?;
+    handle2
+        .faults()
+        .arm("handler=panic@oneshot")
+        .map_err(anyhow::Error::msg)?;
+    match control.metrics() {
+        Err(ServeErr::Internal(_)) => {}
+        Ok(_) => bail!("armed handler panic did not surface as an error"),
+        Err(e) => bail!("expected Internal after injected panic, got {e}"),
+    }
+    let m = control
+        .metrics()
+        .context("metrics on the same connection after injected panic")?;
+    ensure!(
+        m.handler_panics >= 1,
+        "handler_panics counter not bumped after injected panic"
+    );
+    let shard_stats = control.stats().context("post-chaos stats")?.shards;
+
+    handle2.stop().context("stopping restarted chaos daemon")?;
+    let _ = std::fs::remove_file(&snap);
+
+    println!(
+        "chaos: {} tenants x {} intervals | 1 kill+restart | {} replay \
+         recoveries | {} injected handler panic(s) | exactly-once \
+         accounting verified",
+        sc.tenants, sc.intervals, replays_total, m.handler_panics
+    );
+
+    Ok(ScenarioReport {
+        name: sc.name.clone(),
+        tenants: sc.tenants,
+        intervals: sc.intervals,
+        wall,
+        ingests_ok: agg.ingests_ok,
+        ingest_frames_sent: agg.ingest_frames_sent,
+        busy: agg.busy,
+        dropped: agg.dropped,
+        queries: agg.queries,
+        reopens: agg.reopens,
+        snapshots: agg.snapshots,
+        bytes_sent: agg.bytes_sent,
+        ingest_hist: agg.ingest_hist,
+        query_hist: agg.query_hist,
+        // Replays make the daemon's frame counters legitimately exceed
+        // the client's interval counts, so the steady-state metrics
+        // cross-check does not apply here.
+        daemon: None,
+        shard_stats,
+        win_ok: agg.win_ok,
+        daemon_windows: None,
     })
 }
 

@@ -83,10 +83,11 @@ impl TenantReport {
 
 /// Wire payload bytes of one `Ingest` frame for `acts` (see
 /// `proto::enc_ingest`): session u64 + loss f32 + flag + count prefix,
-/// then per-mat rows/cols prefixes and f64 cells.  Must track the
-/// daemon's `payload_len` accounting exactly for the byte cross-check.
+/// then per-mat rows/cols prefixes and f64 cells, then the trailing v6
+/// resume seq u64.  Must track the daemon's `payload_len` accounting
+/// exactly for the byte cross-check.
 fn ingest_payload_bytes(acts: &[Mat]) -> u64 {
-    17 + acts
+    25 + acts
         .iter()
         .map(|m| 8 + (m.rows * m.cols * 8) as u64)
         .sum::<u64>()
@@ -229,6 +230,86 @@ pub(super) fn run_tenant(
     Ok(rep)
 }
 
+/// Client-observed outcome of one chaos tenant: the standard traffic
+/// counters plus the exactly-once evidence from the final ack.
+pub(super) struct ChaosOutcome {
+    pub rep: TenantReport,
+    pub session: u64,
+    /// `batches` from the final `IngestOk` — the daemon's count of
+    /// *applied* ingests for this session.
+    pub final_batches: u64,
+    /// `acked_seq` from the final `IngestOk`.
+    pub final_acked: u64,
+    /// Reconnect-and-replay recoveries this tenant performed.
+    pub replays: u64,
+}
+
+/// One chaos tenant: the steady traffic loop over a crash-safe
+/// [`ResumableSession`].  No Busy handling (the chaos scenario runs
+/// with an effectively unlimited quota) and no churn — every transport
+/// failure is recovered *inside* `ingest` via reconnect + replay, so
+/// any error that reaches this loop fails the scenario.
+pub(super) fn run_chaos_tenant(
+    addr: &str,
+    sc: &Scenario,
+    tenant: usize,
+    start: &Barrier,
+    net: &ClientConfig,
+) -> Result<ChaosOutcome> {
+    let mut rep = TenantReport::default();
+    let (mut client, _info) = SketchClient::connect_with(addr, net)
+        .with_context(|| format!("chaos tenant {tenant}: connect {addr}"))?;
+    let mut sess = client
+        .open_session(&spec(sc, tenant, 0))
+        .with_context(|| format!("chaos tenant {tenant}: open session"))?
+        // Retain every frame of the run: acks from a daemon that then
+        // crashes are not durable, so the whole run must stay
+        // replayable.
+        .resumable(sc.intervals + 8)
+        .with_context(|| format!("chaos tenant {tenant}: resumable"))?;
+    let session = sess.id();
+    let mut stream =
+        ActStream::new(&sc.layer_dims, false, acts_seed(tenant, 0));
+
+    start.wait();
+    let period =
+        (sc.hz > 0.0).then(|| Duration::from_secs_f64(1.0 / sc.hz));
+    let t0 = Instant::now();
+    let mut next_due = Duration::ZERO;
+    let mut last = None;
+    for interval in 0..sc.intervals {
+        if let Some(p) = period {
+            let now = t0.elapsed();
+            if next_due > now {
+                std::thread::sleep(next_due - now);
+            }
+            next_due += p;
+        }
+        let acts = stream.next_batch(sc.batch);
+        let loss = stream.loss_at(interval, sc.intervals);
+        let bytes = ingest_payload_bytes(&acts);
+        rep.ingest_frames_sent += 1;
+        let t = Instant::now();
+        let reply =
+            sess.ingest(loss, &acts, sc.want_recon).with_context(|| {
+                format!("chaos tenant {tenant} interval {interval}: ingest")
+            })?;
+        rep.ingest_hist.record_duration(t.elapsed());
+        rep.note_ok_at(t0.elapsed());
+        rep.bytes_sent += bytes;
+        last = Some(reply);
+    }
+    let last = last.expect("chaos scenario has intervals > 0");
+    let replays = sess.replays();
+    Ok(ChaosOutcome {
+        rep,
+        session,
+        final_batches: last.batches,
+        final_acked: last.acked_seq,
+        replays,
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -245,7 +326,7 @@ mod tests {
             Mat::gaussian(8, 16, &mut rng),
         ];
         let mut e = Enc::new();
-        enc_ingest(&mut e, 42, 0.5, false, &acts);
+        enc_ingest(&mut e, 42, 7, 0.5, false, &acts);
         assert_eq!(ingest_payload_bytes(&acts), e.bytes().len() as u64);
     }
 

@@ -14,13 +14,26 @@
 //! release as deprecated shims.
 //!
 //! Connection establishment honours a [`ClientConfig`]: a connect
-//! timeout, bounded retry-with-backoff, and a socket read/write timeout
-//! so a hung daemon yields [`Error::Timeout`] instead of blocking
-//! the caller forever.  [`SketchClient::connect_with`] negotiates the
-//! protocol version: it speaks [`PROTO_VERSION`] first and, if the
-//! daemon rejects it as unsupported, reconnects once at
-//! [`PROTO_MIN_VERSION`].
+//! timeout, bounded retry-with-backoff (with seeded full jitter so a
+//! thundering herd of restarting clients decorrelates), and a socket
+//! read/write timeout so a hung daemon yields [`Error::Timeout`]
+//! instead of blocking the caller forever.
+//! [`SketchClient::connect_with`] negotiates the protocol version: it
+//! speaks [`PROTO_VERSION`] first and, if the daemon rejects it as
+//! unsupported, reconnects once at [`PROTO_MIN_VERSION`].
+//!
+//! Crash-safe ingest rides on [`ResumableSession`] (proto v6): every
+//! ingest carries a monotonically increasing client sequence number and
+//! is retained in a bounded replay ring — deliberately *past* the live
+//! ack, since a crash rolls the daemon's acked seq back to its last
+//! snapshot.  When the transport fails mid-run — daemon killed, frame
+//! torn, socket timeout — the session reconnects and replays the ring
+//! in order; the daemon dedupes already-applied frames by seq, so a
+//! daemon kill→restart is invisible to the training loop.
 
+use std::collections::hash_map::DefaultHasher;
+use std::collections::VecDeque;
+use std::hash::{Hash, Hasher};
 use std::io;
 use std::net::{TcpStream, ToSocketAddrs};
 use std::thread;
@@ -34,6 +47,7 @@ use crate::coordinator::StepMetrics;
 use crate::data::ActStream;
 use crate::monitor::{step_metrics, MonitorHub, SessionId};
 use crate::sketch::{Mat, SketchConfig, SketchEngine, Sketcher};
+use crate::util::rng::Rng;
 
 use super::codec::Enc;
 use super::daemon::recon_errors;
@@ -62,6 +76,9 @@ pub struct IngestReply {
     pub batches: u64,
     pub engine_bytes: u64,
     pub recon_err: Vec<f64>,
+    /// Highest client sequence number the daemon has applied for this
+    /// session (0 on pre-v6 connections or seq-less ingests).
+    pub acked_seq: u64,
 }
 
 /// One `Diagnose` reply.
@@ -113,6 +130,9 @@ pub struct SketchClient {
     /// frame carries it and replies are decoded against the version the
     /// daemon echoes back.
     version: u16,
+    /// Daemon address and net config retained for [`Self::reconnect`].
+    addr: String,
+    net: ClientConfig,
     enc: Enc,
     frame: Vec<u8>,
     payload: Vec<u8>,
@@ -129,19 +149,39 @@ fn retryable_connect(e: &io::Error) -> bool {
     )
 }
 
+/// Full jitter over the upper half of the backoff window: a uniform
+/// draw in `[backoff/2, backoff]`.  Keeps the expected wait close to
+/// the nominal schedule while decorrelating clients that all observed
+/// the same daemon crash at the same instant.
+fn jittered(backoff: Duration, rng: &mut Rng) -> Duration {
+    let ns = backoff.as_nanos().min(u64::MAX as u128) as u64;
+    let half = ns / 2;
+    Duration::from_nanos(half + rng.below(half.max(1) + 1))
+}
+
+/// Deterministic per-(addr, thread) jitter seed, so retry timing is
+/// reproducible within a worker but distinct across the fleet.
+fn jitter_seed(addr: &str) -> u64 {
+    let mut h = DefaultHasher::new();
+    addr.hash(&mut h);
+    thread::current().id().hash(&mut h);
+    h.finish()
+}
+
 /// Open the TCP stream per `net`: connect timeout (0 = OS default),
-/// bounded retries with doubling backoff (capped at 1s), and socket
-/// read/write timeouts (0 = block forever).
+/// bounded retries with doubling backoff (capped at 1s, jittered), and
+/// socket read/write timeouts (0 = block forever).
 fn connect_stream(
     addr: &str,
     net: &ClientConfig,
 ) -> Result<TcpStream, Error> {
     let connect_timeout = Duration::from_millis(net.connect_timeout_ms);
     let mut backoff = Duration::from_millis(net.retry_backoff_ms.max(1));
+    let mut rng = Rng::new(jitter_seed(addr));
     let mut last: Option<io::Error> = None;
     for attempt in 0..=net.connect_retries {
         if attempt > 0 {
-            thread::sleep(backoff);
+            thread::sleep(jittered(backoff, &mut rng));
             backoff = (backoff * 2).min(Duration::from_millis(1000));
         }
         let conn = if connect_timeout.is_zero() {
@@ -197,30 +237,55 @@ impl SketchClient {
         net: &ClientConfig,
     ) -> Result<(SketchClient, ServerInfo), Error> {
         let stream = connect_stream(addr, net)?;
-        let mut client = SketchClient::from_stream(stream, PROTO_VERSION);
-        match client.hello() {
-            Ok(info) => Ok((client, info)),
+        let mut client =
+            SketchClient::from_stream(stream, PROTO_VERSION, addr, net);
+        let info = client.negotiate()?;
+        Ok((client, info))
+    }
+
+    fn from_stream(
+        stream: TcpStream,
+        version: u16,
+        addr: &str,
+        net: &ClientConfig,
+    ) -> SketchClient {
+        SketchClient {
+            stream,
+            version,
+            addr: addr.to_string(),
+            net: net.clone(),
+            enc: Enc::new(),
+            frame: Vec::new(),
+            payload: Vec::new(),
+        }
+    }
+
+    /// Complete the `Hello` handshake on the current stream, downgrading
+    /// to [`PROTO_MIN_VERSION`] over a fresh connection if the daemon
+    /// rejects [`PROTO_VERSION`] (a version rejection is fatal
+    /// per-connection: the daemon closes the socket after replying).
+    fn negotiate(&mut self) -> Result<ServerInfo, Error> {
+        match self.hello() {
+            Ok(info) => Ok(info),
             Err(Error::UnsupportedVersion(_))
                 if PROTO_MIN_VERSION < PROTO_VERSION =>
             {
-                let stream = connect_stream(addr, net)?;
-                let mut client =
-                    SketchClient::from_stream(stream, PROTO_MIN_VERSION);
-                let info = client.hello()?;
-                Ok((client, info))
+                self.stream = connect_stream(&self.addr, &self.net)?;
+                self.version = PROTO_MIN_VERSION;
+                self.hello()
             }
             Err(e) => Err(e),
         }
     }
 
-    fn from_stream(stream: TcpStream, version: u16) -> SketchClient {
-        SketchClient {
-            stream,
-            version,
-            enc: Enc::new(),
-            frame: Vec::new(),
-            payload: Vec::new(),
-        }
+    /// Tear down the current stream and re-establish the connection to
+    /// the same daemon address (full connect retry/backoff schedule,
+    /// fresh `Hello` negotiation).  Session state lives daemon-side, so
+    /// ids held by [`SessionHandle`]s stay valid across the reconnect.
+    pub fn reconnect(&mut self) -> Result<ServerInfo, Error> {
+        self.stream = connect_stream(&self.addr, &self.net)?;
+        self.version = PROTO_VERSION;
+        self.negotiate()
     }
 
     /// The protocol version this connection negotiated.
@@ -245,6 +310,27 @@ impl SketchClient {
             self.enc.bytes(),
             &mut self.frame,
         )?;
+        self.read_response()
+    }
+
+    /// Send a pre-encoded payload (the replay ring stores frames as
+    /// owned byte vectors) and read the response.
+    fn send_payload(
+        &mut self,
+        msg: u8,
+        payload: &[u8],
+    ) -> Result<Response, Error> {
+        write_frame_versioned_reusing(
+            &mut self.stream,
+            self.version,
+            msg,
+            payload,
+            &mut self.frame,
+        )?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> Result<Response, Error> {
         let header = read_frame_reusing(&mut self.stream, &mut self.payload)?;
         if !(PROTO_MIN_VERSION..=PROTO_VERSION).contains(&header.version) {
             return Err(Error::Protocol(format!(
@@ -296,9 +382,10 @@ impl SketchClient {
         spec: &SessionSpec,
     ) -> Result<SessionHandle<'_>, Error> {
         match self.round_trip(&Request::OpenSession(spec.clone()))? {
-            Response::SessionOpened { session } => Ok(SessionHandle {
+            Response::SessionOpened { session, epoch } => Ok(SessionHandle {
                 client: self,
                 id: session,
+                epoch,
             }),
             other => Err(unexpected("SessionOpened", &other)),
         }
@@ -309,7 +396,11 @@ impl SketchClient {
     /// sent; a stale id surfaces as [`Error::UnknownSession`] on the
     /// first call through the handle.
     pub fn session(&mut self, id: u64) -> SessionHandle<'_> {
-        SessionHandle { client: self, id }
+        SessionHandle {
+            client: self,
+            id,
+            epoch: 0,
+        }
     }
 
     /// Force a durable snapshot; returns (path, file bytes, sessions).
@@ -423,16 +514,29 @@ impl SketchClient {
         want_recon: bool,
     ) -> Result<IngestReply, Error> {
         self.enc.reset();
-        proto::enc_ingest(&mut self.enc, session, loss, want_recon, acts);
+        // seq 0 opts out of resume dedup — plain handles keep the
+        // legacy at-most-once semantics; use ResumableSession for
+        // exactly-once across daemon restarts.
+        proto::enc_ingest_v(
+            &mut self.enc,
+            session,
+            0,
+            loss,
+            want_recon,
+            acts,
+            self.version,
+        );
         match self.send_encoded(proto::msg::INGEST)? {
             Response::IngestOk {
                 batches,
                 engine_bytes,
                 recon_err,
+                acked_seq,
             } => Ok(IngestReply {
                 batches,
                 engine_bytes,
                 recon_err,
+                acked_seq,
             }),
             other => Err(unexpected("IngestOk", &other)),
         }
@@ -636,13 +740,47 @@ impl SketchClient {
 pub struct SessionHandle<'c> {
     client: &'c mut SketchClient,
     id: u64,
+    /// Resume epoch from `SessionOpened` (1 for a fresh session, bumped
+    /// on every snapshot restore; 0 when the handle was adopted via
+    /// [`SketchClient::session`] or the connection is pre-v6).
+    epoch: u64,
 }
 
-impl SessionHandle<'_> {
+impl<'c> SessionHandle<'c> {
     /// The daemon-issued session id (persist it to re-adopt the session
     /// after a reconnect or daemon restart).
     pub fn id(&self) -> u64 {
         self.id
+    }
+
+    /// The session's resume epoch (see [`Response::SessionOpened`]).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Upgrade to a crash-safe [`ResumableSession`]: ingests carry
+    /// sequence numbers and are retained in a replay ring of at most
+    /// `ring_cap` frames until acked.  Requires a proto-v6 connection.
+    pub fn resumable(
+        self,
+        ring_cap: usize,
+    ) -> Result<ResumableSession<'c>, Error> {
+        if self.client.version < RESUME_MIN_VERSION {
+            return Err(Error::Protocol(format!(
+                "resumable sessions require proto \
+                 v{RESUME_MIN_VERSION}, connection negotiated v{}",
+                self.client.version
+            )));
+        }
+        Ok(ResumableSession {
+            client: self.client,
+            id: self.id,
+            epoch: self.epoch,
+            next_seq: 1,
+            ring: VecDeque::new(),
+            ring_cap: ring_cap.max(1),
+            replays: 0,
+        })
     }
 
     /// Escape hatch to the underlying connection for connection-wide
@@ -721,6 +859,181 @@ impl SessionHandle<'_> {
     /// Deregister the session on the daemon, consuming the handle.
     pub fn close(self) -> Result<(), Error> {
         self.client.close_raw(self.id)
+    }
+}
+
+/// Minimum protocol version carrying the resume fields (`Ingest.seq`,
+/// `SessionOpened.epoch`, `IngestOk.acked_seq`).
+pub const RESUME_MIN_VERSION: u16 = 6;
+
+/// Crash-safe session handle: every ingest carries a client sequence
+/// number and the encoded frame is retained in a bounded replay ring.
+/// A transport failure mid-ingest — daemon killed, torn frame, socket
+/// timeout — triggers a reconnect followed by an in-order replay of
+/// the whole ring; the daemon re-acks frames at or below its restored
+/// `acked_seq` without re-applying them, so the caller observes
+/// exactly-once ingest semantics across daemon restarts.
+///
+/// The ring deliberately retains the most recent `ring_cap` frames
+/// even after the live daemon acks them: an in-memory ack is not
+/// durable, and a crash rolls `acked_seq` back to the last snapshot.
+/// Size the ring to cover the ingests between snapshots; if the daemon
+/// restores from a snapshot older than the oldest retained frame,
+/// replay surfaces the daemon's seq-gap error ([`Error::Invalid`])
+/// instead of silently losing steps.
+pub struct ResumableSession<'c> {
+    client: &'c mut SketchClient,
+    id: u64,
+    epoch: u64,
+    next_seq: u64,
+    /// Most recent frames, oldest first: (seq, encoded ingest payload).
+    ring: VecDeque<(u64, Vec<u8>)>,
+    ring_cap: usize,
+    replays: u64,
+}
+
+impl ResumableSession<'_> {
+    /// The daemon-issued session id.
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Resume epoch at open time (0 for adopted handles).
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// How many reconnect-and-replay recoveries this session has done.
+    pub fn replays(&self) -> u64 {
+        self.replays
+    }
+
+    /// Frames currently retained for replay.
+    pub fn retained(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Escape hatch to the underlying connection (e.g. for `metrics`).
+    pub fn client(&mut self) -> &mut SketchClient {
+        self.client
+    }
+
+    /// One monitored training step with crash-safe delivery: assigns
+    /// the next sequence number, retains the encoded frame until acked,
+    /// and transparently reconnects + replays on transport failure.
+    pub fn ingest(
+        &mut self,
+        loss: f32,
+        acts: &[Mat],
+        want_recon: bool,
+    ) -> Result<IngestReply, Error> {
+        let seq = self.next_seq;
+        self.next_seq += 1;
+        let mut e = Enc::new();
+        proto::enc_ingest_v(
+            &mut e,
+            self.id,
+            seq,
+            loss,
+            want_recon,
+            acts,
+            self.client.version,
+        );
+        if self.ring.len() == self.ring_cap {
+            self.ring.pop_front();
+        }
+        self.ring.push_back((seq, e.bytes().to_vec()));
+        let sent = {
+            let payload = &self.ring.back().expect("just pushed").1;
+            self.client.send_payload(proto::msg::INGEST, payload)
+        };
+        match sent {
+            Ok(resp) => ingest_reply(resp),
+            Err(e) if transport_error(&e) => self.recover(),
+            Err(e) => Err(e),
+        }
+    }
+
+    /// Diagnose through the underlying connection (not replayed —
+    /// read-only, safe to simply retry at the caller's discretion).
+    pub fn diagnose(&mut self) -> Result<DiagnoseReply, Error> {
+        self.client.diagnose_raw(self.id)
+    }
+
+    /// Deregister the session on the daemon, consuming the handle.
+    pub fn close(self) -> Result<(), Error> {
+        self.client.close_raw(self.id)
+    }
+
+    /// Reconnect and replay every retained frame in order.  The daemon
+    /// dedupes the already-applied prefix by seq; the reply to the last
+    /// replayed frame carries the authoritative `acked_seq`.  Retries
+    /// the whole cycle a few times so a daemon that dies again
+    /// mid-replay still resolves once it is back.
+    fn recover(&mut self) -> Result<IngestReply, Error> {
+        let mut last_err = None;
+        for _ in 0..RECOVER_ATTEMPTS {
+            match self.try_replay() {
+                Ok(reply) => {
+                    self.replays += 1;
+                    return Ok(reply);
+                }
+                Err(e) if transport_error(&e) => last_err = Some(e),
+                Err(e) => return Err(e),
+            }
+        }
+        Err(last_err.unwrap_or_else(|| {
+            Error::Protocol("replay ring empty during recovery".into())
+        }))
+    }
+
+    fn try_replay(&mut self) -> Result<IngestReply, Error> {
+        self.client.reconnect()?;
+        if self.client.version < RESUME_MIN_VERSION {
+            return Err(Error::Protocol(format!(
+                "daemon downgraded to proto v{} mid-session; cannot \
+                 replay unacked ingests",
+                self.client.version
+            )));
+        }
+        let mut last = None;
+        for (_, payload) in &self.ring {
+            let resp =
+                self.client.send_payload(proto::msg::INGEST, payload)?;
+            last = Some(ingest_reply(resp)?);
+        }
+        last.ok_or_else(|| {
+            Error::Protocol("replay ring empty during recovery".into())
+        })
+    }
+}
+
+const RECOVER_ATTEMPTS: usize = 3;
+
+/// Errors that indicate the connection (not the request) failed, and a
+/// reconnect + replay can recover: I/O failures, socket timeouts, and
+/// torn/garbled frames from a daemon killed mid-write.
+fn transport_error(e: &Error) -> bool {
+    matches!(
+        e,
+        Error::Io(_) | Error::Timeout(_) | Error::Protocol(_)
+    )
+}
+
+fn ingest_reply(resp: Response) -> Result<IngestReply, Error> {
+    match resp {
+        Response::IngestOk {
+            batches,
+            engine_bytes,
+            recon_err,
+            acked_seq,
+        } => Ok(IngestReply {
+            batches,
+            engine_bytes,
+            recon_err,
+            acked_seq,
+        }),
+        other => Err(unexpected("IngestOk", &other)),
     }
 }
 
@@ -1009,4 +1322,62 @@ pub fn run_probe_resume(addr: &str, session: u64) -> Result<()> {
         remote.steps_seen + 1
     );
     Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Jittered backoff stays inside [backoff/2, backoff] and actually
+    /// varies across draws (full jitter, not a fixed offset).
+    #[test]
+    fn jitter_bounds_and_spread() {
+        let mut rng = Rng::new(0x7177E2);
+        let backoff = Duration::from_millis(400);
+        let mut distinct = std::collections::HashSet::new();
+        for _ in 0..64 {
+            let d = jittered(backoff, &mut rng);
+            assert!(d >= backoff / 2, "{d:?} below half-backoff");
+            assert!(d <= backoff, "{d:?} above backoff");
+            distinct.insert(d.as_nanos());
+        }
+        assert!(
+            distinct.len() > 32,
+            "jitter draws barely vary: {} distinct of 64",
+            distinct.len()
+        );
+    }
+
+    /// The jitter seed is stable for the same (addr, thread) and the
+    /// resulting schedule is reproducible.
+    #[test]
+    fn jitter_seed_deterministic_per_thread() {
+        let s1 = jitter_seed("127.0.0.1:7700");
+        let s2 = jitter_seed("127.0.0.1:7700");
+        assert_eq!(s1, s2);
+        let a: Vec<_> = {
+            let mut rng = Rng::new(s1);
+            (0..8)
+                .map(|_| jittered(Duration::from_millis(100), &mut rng))
+                .collect()
+        };
+        let b: Vec<_> = {
+            let mut rng = Rng::new(s2);
+            (0..8)
+                .map(|_| jittered(Duration::from_millis(100), &mut rng))
+                .collect()
+        };
+        assert_eq!(a, b);
+    }
+
+    /// A 1ms floor backoff must not panic (below(0) is asserted
+    /// against) and still lands in-range.
+    #[test]
+    fn jitter_tiny_backoff() {
+        let mut rng = Rng::new(1);
+        for _ in 0..16 {
+            let d = jittered(Duration::from_nanos(1), &mut rng);
+            assert!(d <= Duration::from_nanos(1));
+        }
+    }
 }

@@ -36,6 +36,15 @@
 //!   owning shard's lock-free [`ServeMetrics`] histograms; the v3
 //!   `Metrics` op serves the merged report, and the v4 `Stats` op adds
 //!   per-shard rows so skew across shards is visible.
+//! * **Supervision** (DESIGN.md §11): request dispatch runs inside a
+//!   `catch_unwind` boundary — a panicking handler answers that one
+//!   request with a typed `Internal` error, bumps `handler_panics`,
+//!   journals a `handler-panic` event and the shard keeps serving.
+//!   The shared [`FaultRegistry`] threads deterministic failpoints
+//!   through the socket, snapshot and handler paths, and the v6
+//!   ingest-seq protocol lets a client resume a session exactly
+//!   across a daemon crash (replays deduped against the persisted
+//!   `acked_seq`).
 //!
 //! Sessions outlive connections: a client may disconnect and a later
 //! connection (or a daemon restart) continues the same session id.
@@ -43,6 +52,7 @@
 use std::collections::BTreeMap;
 use std::io::{self, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Mutex, MutexGuard};
 use std::thread;
@@ -60,6 +70,7 @@ use crate::util::cli::Args;
 
 use super::codec::Enc;
 use super::error::Error;
+use super::fault::{self, FaultRegistry};
 use super::metrics::{MetricsState, ServeMetrics};
 use super::obs::events::log_tag;
 use super::obs::{
@@ -87,6 +98,14 @@ struct Tenant {
     ingest_bytes: u64,
     /// Lifetime quota-Busy rejections this session absorbed (persisted).
     busy_rejections: u64,
+    /// Resume epoch: 1 at open, bumped each time the daemon restores
+    /// the session from snapshot (persisted; DESIGN.md §11).
+    epoch: u64,
+    /// Highest applied client ingest seq (persisted *with* the engine
+    /// state, so both restore from the same snapshot and a resuming
+    /// client replays exactly the unacked suffix).  0 while the client
+    /// opts out of numbering.
+    acked_seq: u64,
     /// Retained sketch history for archive queries.
     archive: SessionArchive,
 }
@@ -133,6 +152,14 @@ struct Shared {
     /// Observability layer: event journal (writer 0 = control plane,
     /// `1 + k` = shard `k`), window ring, log filter (DESIGN.md §10).
     obs: Obs,
+    /// Armed failpoints shared by the shard loops, the snapshot store
+    /// and request dispatch (DESIGN.md §11).  Empty in production:
+    /// every site check is one relaxed atomic load.
+    faults: Arc<FaultRegistry>,
+    /// Set by [`DaemonHandle::kill`]: skip the final shutdown snapshot
+    /// so the stop is indistinguishable from a crash (the chaos
+    /// harness relies on this).
+    skip_final_snapshot: AtomicBool,
 }
 
 impl Shared {
@@ -290,6 +317,8 @@ fn save_snapshot(
                 quota_used: tenant.quota_used,
                 ingest_bytes: tenant.ingest_bytes,
                 busy_rejections: tenant.busy_rejections,
+                epoch: tenant.epoch,
+                acked_seq: tenant.acked_seq,
                 archive: tenant.archive.state(),
             });
         }
@@ -315,6 +344,17 @@ fn save_snapshot(
         }
         Err(e) => {
             shared.dirty.store(true, Ordering::SeqCst);
+            // Every failure path — periodic, client-requested,
+            // shutdown — counts on shard 0 (same slot as snapshot
+            // accounting) and lands one journaled error.
+            shared.shards[0].metrics.note_snapshot_failure();
+            shared.obs.log(
+                journal,
+                Level::Error,
+                log_tag::SNAPSHOT_FAILED,
+                0,
+                || format!("snapshot save failed: {e:#}"),
+            );
             Err(e)
         }
     }
@@ -410,6 +450,8 @@ fn handle_request(
                     quota_used: 0,
                     ingest_bytes: 0,
                     busy_rejections: 0,
+                    epoch: 1,
+                    acked_seq: 0,
                     archive: SessionArchive::new(
                         shared.cfg.archive.capacity,
                         shared.cfg.archive.stride,
@@ -422,10 +464,14 @@ fn handle_request(
             // across shards) is the true daemon-wide peak.
             shard.metrics.note_session_open(prev + 1);
             journal.emit(EventKind::SessionOpen { session: id.raw() });
-            Ok(Response::SessionOpened { session: id.raw() })
+            Ok(Response::SessionOpened {
+                session: id.raw(),
+                epoch: 1,
+            })
         }
         Request::Ingest {
             session,
+            seq,
             loss,
             want_recon,
             acts,
@@ -437,6 +483,31 @@ fn handle_request(
             let tenant = tenants
                 .get_mut(&session)
                 .ok_or(HubError::NoSuchSession(id))?;
+            // Crash-safe resumption (seq > 0 only; pre-v6 peers and
+            // opted-out clients send 0).  A replay of an already-acked
+            // seq — a client resending its unacked window after a
+            // reconnect — is re-acked with *no* engine, quota or
+            // archive side effects, so a kill→restart mid-run never
+            // double-ingests.  A gap past acked+1 means frames were
+            // lost (e.g. the client's replay ring overflowed); reject
+            // loudly rather than silently corrupt the sketch.
+            if seq > 0 {
+                if seq <= tenant.acked_seq {
+                    return Ok(Response::IngestOk {
+                        batches: tenant.engine.batches_ingested(),
+                        engine_bytes: tenant.engine.memory() as u64,
+                        recon_err: Vec::new(),
+                        acked_seq: tenant.acked_seq,
+                    });
+                }
+                if seq != tenant.acked_seq + 1 {
+                    return Err(Error::Invalid(format!(
+                        "ingest seq gap: got {seq}, expected {} — \
+                         frames were lost beyond the replay window",
+                        tenant.acked_seq + 1
+                    )));
+                }
+            }
             let quota = shared.cfg.session_quota_bytes as u64;
             if quota > 0 && tenant.quota_used + payload_len as u64 > quota {
                 tenant.busy_rejections += 1;
@@ -489,11 +560,15 @@ fn handle_request(
             } else {
                 Vec::new()
             };
+            if seq > 0 {
+                tenant.acked_seq = seq;
+            }
             shared.dirty.store(true, Ordering::SeqCst);
             Ok(Response::IngestOk {
                 batches: tenant.engine.batches_ingested(),
                 engine_bytes: engine_bytes as u64,
                 recon_err,
+                acked_seq: tenant.acked_seq,
             })
         }
         Request::Observe { session, metrics } => {
@@ -737,6 +812,34 @@ fn metrics_shard(shared: &Shared, home: usize, req: &Request) -> usize {
     (session % shared.n_shards()) as usize
 }
 
+/// The session a request names (0 for global ops) — journaled with
+/// handler-panic events so a blast radius is attributable.
+fn request_session(req: &Request) -> u64 {
+    match req {
+        Request::Ingest { session, .. }
+        | Request::Observe { session, .. }
+        | Request::Diagnose { session }
+        | Request::Close { session }
+        | Request::QueryTrajectory { session }
+        | Request::QuerySimilarity { session, .. }
+        | Request::QueryDrift { session, .. }
+        | Request::ArchiveInfo { session } => *session,
+        _ => 0,
+    }
+}
+
+/// Render a caught panic payload (almost always a `&str` or `String`
+/// from `panic!`/`assert!`) for the error reply and the journal.
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
 /// Staged-read outcome for one nonblocking read pass.
 enum ReadStep {
     /// A complete frame is staged in `hdr`/`payload`.
@@ -790,7 +893,17 @@ impl Conn {
     }
 
     /// Advance the staged read as far as the socket allows.
-    fn read_step(&mut self) -> ReadStep {
+    fn read_step(&mut self, faults: &FaultRegistry) -> ReadStep {
+        // `conn.read` failpoint: an injected error drops the peer, an
+        // injected WouldBlock is a spurious-readiness storm (the loop
+        // just revisits on the next event).
+        match faults.check_io(fault::site::CONN_READ) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                return ReadStep::NotReady
+            }
+            Err(_) => return ReadStep::Closed,
+        }
         if self.header.is_none() {
             while self.hdr_got < FRAME_HEADER_LEN {
                 match self.stream.read(&mut self.hdr[self.hdr_got..]) {
@@ -840,7 +953,16 @@ impl Conn {
     }
 
     /// Push queued bytes into the kernel until done or `WouldBlock`.
-    fn flush(&mut self) -> io::Result<()> {
+    fn flush(&mut self, faults: &FaultRegistry) -> io::Result<()> {
+        // `conn.write` failpoint: WouldBlock leaves the bytes queued
+        // for the next writable event; other errors kill the conn.
+        match faults.check_io(fault::site::CONN_WRITE) {
+            Ok(()) => {}
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => {
+                return Ok(())
+            }
+            Err(e) => return Err(e),
+        }
         while self.out_pos < self.out.len() {
             match self.stream.write(&self.out[self.out_pos..]) {
                 Ok(0) => {
@@ -896,12 +1018,40 @@ fn process_frame(
             header.version
         )))
     } else {
-        match Request::decode(header.msg, &conn.payload) {
+        match Request::decode_v(header.msg, &conn.payload, header.version) {
             Ok(req) => {
                 let shard = metrics_shard(shared, home, &req);
+                let session = request_session(&req);
+                let payload_len = conn.payload.len();
                 let t0 = Instant::now();
-                let r =
-                    handle_request(shared, home, req, conn.payload.len());
+                // Panic isolation (DESIGN.md §11): a handler panic —
+                // injected or real — becomes a typed Internal error on
+                // this one request; the shard keeps serving (the state
+                // lock recovers from poisoning in `lock`).  The
+                // `handler` failpoint lives inside the boundary so
+                // `handler=panic` exercises exactly this path.
+                let r = catch_unwind(AssertUnwindSafe(|| {
+                    shared
+                        .faults
+                        .check_io(fault::site::HANDLER)
+                        .map_err(|e| {
+                            Error::Internal(format!(
+                                "injected handler fault: {e}"
+                            ))
+                        })?;
+                    handle_request(shared, home, req, payload_len)
+                }))
+                .unwrap_or_else(|panic| {
+                    shared.shards[home].metrics.note_handler_panic();
+                    shared.obs.shard(home).emit(EventKind::HandlerPanic {
+                        msg: header.msg,
+                        session,
+                    });
+                    Err(Error::Internal(format!(
+                        "handler panicked: {}",
+                        panic_message(panic.as_ref())
+                    )))
+                });
                 let elapsed = t0.elapsed();
                 shared.shards[shard]
                     .metrics
@@ -944,6 +1094,15 @@ fn process_frame(
     {
         return Err(());
     }
+    // `conn.truncate` failpoint: cut the just-queued reply frame in
+    // half, push what's left to the peer and drop the connection — a
+    // daemon dying mid-reply, as seen from the client.
+    if shared.faults.fire(fault::site::CONN_TRUNCATE).is_some() {
+        let keep = conn.out.len().saturating_sub(conn.frame.len() / 2);
+        conn.out.truncate(keep.max(conn.out_pos));
+        let _ = conn.flush(&shared.faults);
+        return Err(());
+    }
     shared.shards[home].metrics.note_frame_served();
     Ok(fatal)
 }
@@ -953,12 +1112,12 @@ fn process_frame(
 /// connection stays alive.
 fn service_readable(shared: &Shared, home: usize, conn: &mut Conn) -> bool {
     loop {
-        match conn.read_step() {
+        match conn.read_step(&shared.faults) {
             ReadStep::Frame => {
                 let header = conn.take_header();
                 match process_frame(shared, home, conn, header) {
                     Ok(fatal) => {
-                        if conn.flush().is_err() {
+                        if conn.flush(&shared.faults).is_err() {
                             return false;
                         }
                         if fatal {
@@ -1045,7 +1204,7 @@ fn shard_loop(shared: &Shared, home: usize, rx: mpsc::Receiver<TcpStream>) {
                 None => continue,
             };
             let mut alive = true;
-            if ev.writable && conn.flush().is_err() {
+            if ev.writable && conn.flush(&shared.faults).is_err() {
                 alive = false;
             }
             if alive && ev.readable {
@@ -1094,7 +1253,7 @@ fn shard_loop(shared: &Shared, home: usize, rx: mpsc::Receiver<TcpStream>) {
             if conn.out_is_empty() {
                 continue;
             }
-            if conn.flush().is_err() {
+            if conn.flush(&shared.faults).is_err() {
                 conn.out.clear();
                 conn.out_pos = 0;
             } else if !conn.out_is_empty() {
@@ -1128,7 +1287,17 @@ impl Daemon {
         let listener = TcpListener::bind(&cfg.addr)
             .with_context(|| format!("binding {}", cfg.addr))?;
         listener.set_nonblocking(true)?;
-        let store = SnapshotStore::new(cfg.snapshot_path.clone());
+        // Failpoints arm once at bind: the config/CLI spec first, then
+        // SKETCHD_FAULT on top.  The registry is shared with the store
+        // so snapshot I/O sites answer to the same spec.
+        let faults = Arc::new(
+            FaultRegistry::from_spec_and_env(&cfg.fault)
+                .map_err(|e| anyhow::anyhow!("serve.fault: {e}"))?,
+        );
+        let store = SnapshotStore::with_faults(
+            cfg.snapshot_path.clone(),
+            Arc::clone(&faults),
+        );
         let par = Parallelism::from_threads(resolve_threads(cfg.threads));
         let n_shards = cfg.shards.max(1);
         let mut shards = Vec::with_capacity(n_shards);
@@ -1174,6 +1343,12 @@ impl Daemon {
                         quota_used: rec.quota_used,
                         ingest_bytes: rec.ingest_bytes,
                         busy_rejections: rec.busy_rejections,
+                        // Restoring = a new incarnation of the session
+                        // (pre-v4 snapshots carry epoch 0 → resume as
+                        // epoch 1).  acked_seq restores with the engine
+                        // state it is exactly consistent with.
+                        epoch: rec.epoch + 1,
+                        acked_seq: rec.acked_seq,
                         archive,
                     },
                 );
@@ -1217,6 +1392,8 @@ impl Daemon {
                 sessions_open: AtomicU64::new(restored),
                 started: Instant::now(),
                 obs,
+                faults,
+                skip_final_snapshot: AtomicBool::new(false),
             }),
         })
     }
@@ -1240,6 +1417,12 @@ impl Daemon {
     /// Connection shards this daemon serves with.
     pub fn shard_count(&self) -> usize {
         self.shared.shards.len()
+    }
+
+    /// The daemon's shared failpoint registry — tests and the chaos
+    /// harness arm/disarm sites mid-run through this handle.
+    pub fn faults(&self) -> Arc<FaultRegistry> {
+        Arc::clone(&self.shared.faults)
     }
 
     /// Serve until the shutdown flag is set (by a `Shutdown` frame or a
@@ -1311,21 +1494,11 @@ impl Daemon {
                     && last_snapshot.elapsed().as_secs() >= interval
                 {
                     if shared.dirty.load(Ordering::SeqCst) {
-                        if let Err(e) =
-                            save_snapshot(shared, &shared.obs.control())
-                        {
-                            shared.obs.log(
-                                &shared.obs.control(),
-                                Level::Error,
-                                log_tag::SNAPSHOT_FAILED,
-                                0,
-                                || {
-                                    format!(
-                                        "periodic snapshot failed: {e:#}"
-                                    )
-                                },
-                            );
-                        }
+                        // A failure is counted + journaled inside
+                        // save_snapshot; the dirty flag is re-set so
+                        // the next interval retries.
+                        let _ =
+                            save_snapshot(shared, &shared.obs.control());
                     }
                     last_snapshot = Instant::now();
                 }
@@ -1364,7 +1537,9 @@ impl Daemon {
             }
             drop(senders);
         });
-        if shared.dirty.load(Ordering::SeqCst) {
+        if shared.dirty.load(Ordering::SeqCst)
+            && !shared.skip_final_snapshot.load(Ordering::SeqCst)
+        {
             save_snapshot(shared, &shared.obs.control())?;
         }
         Ok(())
@@ -1413,6 +1588,27 @@ impl DaemonHandle {
             Err(_) => anyhow::bail!("daemon thread panicked"),
         }
     }
+
+    /// Abrupt stop: shut down *without* the final snapshot, so the
+    /// daemon dies with only whatever the last interval/requested
+    /// snapshot captured — as close to `kill -9` as an in-process
+    /// daemon gets.  The chaos harness uses this to prove clients
+    /// resume exactly from durable state (DESIGN.md §11).
+    pub fn kill(self) -> Result<()> {
+        self.shared
+            .skip_final_snapshot
+            .store(true, Ordering::SeqCst);
+        self.shared.shutdown.store(true, Ordering::SeqCst);
+        match self.join.join() {
+            Ok(r) => r,
+            Err(_) => anyhow::bail!("daemon thread panicked"),
+        }
+    }
+
+    /// The daemon's shared failpoint registry (see [`Daemon::faults`]).
+    pub fn faults(&self) -> Arc<FaultRegistry> {
+        Arc::clone(&self.shared.faults)
+    }
 }
 
 /// `sketchd`/`sketchgrad serve` entry point: `[serve]` TOML config with
@@ -1443,6 +1639,7 @@ pub fn serve_from_args(args: &mut Args) -> Result<()> {
     cfg.obs.journal_capacity = args
         .opt_usize("obs-journal-capacity", cfg.obs.journal_capacity)?;
     cfg.obs.slow_ms = args.opt_u64("obs-slow-ms", cfg.obs.slow_ms)?;
+    cfg.fault = args.opt_or("fault", &cfg.fault);
     args.finish()?;
 
     let daemon = Daemon::bind(cfg)?;

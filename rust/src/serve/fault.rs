@@ -1,0 +1,448 @@
+//! Deterministic failpoint framework for the serve subsystem
+//! (DESIGN.md §11).
+//!
+//! A [`FaultRegistry`] holds a set of *armed* failpoints, each bound to
+//! a named injection [`site`] threaded through the daemon's hot paths
+//! (socket reads/writes, snapshot persistence, request handling).  The
+//! registry is std-only and **zero-cost when nothing is armed**: every
+//! site check is a single relaxed atomic load before any lock is
+//! touched, so production builds pay one predictable branch per site.
+//!
+//! Failpoints are configured from a compact spec string — via the
+//! `[serve] fault = "..."` TOML key, the `--fault` CLI flag, or the
+//! `SKETCHD_FAULT` environment variable — and can also be armed
+//! programmatically (the chaos harness and the torn-snapshot property
+//! tests drive them directly through a shared [`Arc`]).
+//!
+//! ## Spec grammar
+//!
+//! ```text
+//! spec    := entry (';' entry)*
+//! entry   := site '=' action ('@' schedule)?
+//! action  := 'err' | 'wouldblock' | 'panic' | 'truncate'
+//!          | 'delay:' MILLIS
+//! schedule:= 'oneshot' | 'every:' N | 'prob:' P ':' SEED
+//! ```
+//!
+//! With no schedule the failpoint fires on *every* check.  `oneshot`
+//! fires on the first check and then disarms itself; `every:N` fires
+//! on the Nth, 2Nth, ... check; `prob:P:SEED` fires each check with
+//! probability `P` drawn from a dedicated xoshiro stream seeded with
+//! `SEED`, so a probabilistic storm is still replayable bit-for-bit.
+//!
+//! Example: `conn.write=err@every:200;handler=panic@oneshot`.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use crate::util::rng::Rng;
+
+/// The named injection sites threaded through the daemon.  Arming a
+/// site not listed here is allowed (sites are open-ended strings) but
+/// will simply never fire.
+pub mod site {
+    /// Shard event loop: reading request bytes from a client socket.
+    pub const CONN_READ: &str = "conn.read";
+    /// Shard event loop: flushing reply bytes to a client socket.
+    pub const CONN_WRITE: &str = "conn.write";
+    /// Reply framing: truncate the encoded reply frame mid-write and
+    /// drop the connection (simulates a daemon dying mid-reply).
+    pub const CONN_TRUNCATE: &str = "conn.truncate";
+    /// Request dispatch, inside the panic-isolation boundary: `panic`
+    /// exercises `catch_unwind`, `delay` injects handler latency,
+    /// `err` fails the request with `Error::Internal`.
+    pub const HANDLER: &str = "handler";
+    /// Snapshot persistence: creating the temp file.
+    pub const SNAP_CREATE: &str = "snapshot.create";
+    /// Snapshot persistence: writing the temp file's bytes.
+    pub const SNAP_WRITE: &str = "snapshot.write";
+    /// Snapshot persistence: fsyncing the temp file.
+    pub const SNAP_SYNC: &str = "snapshot.sync";
+    /// Snapshot persistence: the atomic rename over the live file.
+    pub const SNAP_RENAME: &str = "snapshot.rename";
+}
+
+/// What an armed failpoint does when its schedule fires.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Action {
+    /// Return an injected `io::Error` (kind `Other`).
+    Err,
+    /// Return `io::ErrorKind::WouldBlock` (spurious-readiness storm).
+    WouldBlock,
+    /// Panic with an "injected panic" message.
+    Panic,
+    /// Truncate the in-flight frame (only meaningful at
+    /// [`site::CONN_TRUNCATE`]).
+    Truncate,
+    /// Sleep for the given duration, then proceed normally.
+    Delay(Duration),
+}
+
+/// When an armed failpoint fires.
+#[derive(Clone, Debug, PartialEq)]
+enum Schedule {
+    Always,
+    /// Fire on the first check, then disarm.
+    OneShot,
+    /// Fire on every Nth check (N, 2N, ...).
+    Every(u64),
+    /// Fire each check with probability `p` from a seeded stream.
+    Prob(f64),
+}
+
+#[derive(Debug)]
+struct Point {
+    action: Action,
+    schedule: Schedule,
+    /// Checks seen so far (drives `Every`), or 1 once `OneShot` fired.
+    hits: u64,
+    fired: u64,
+    rng: Rng,
+}
+
+impl Point {
+    /// Evaluate one check: does the schedule fire now?
+    fn check(&mut self) -> Option<Action> {
+        self.hits += 1;
+        let fire = match self.schedule {
+            Schedule::Always => true,
+            Schedule::OneShot => self.hits == 1,
+            Schedule::Every(n) => self.hits % n == 0,
+            Schedule::Prob(p) => self.rng.uniform() < p,
+        };
+        if fire {
+            self.fired += 1;
+            Some(self.action.clone())
+        } else {
+            None
+        }
+    }
+}
+
+/// A set of armed failpoints, shared by everything a daemon instance
+/// owns (shard loops, snapshot store, request dispatch).  Cheap to
+/// check, interior-mutable so the chaos harness can re-arm mid-run
+/// through a shared [`Arc<FaultRegistry>`].
+#[derive(Debug, Default)]
+pub struct FaultRegistry {
+    armed: AtomicBool,
+    points: Mutex<Vec<(String, Point)>>,
+}
+
+impl FaultRegistry {
+    /// An empty registry (nothing armed; checks cost one atomic load).
+    pub fn new() -> FaultRegistry {
+        FaultRegistry::default()
+    }
+
+    /// Build a registry from a config spec plus the `SKETCHD_FAULT`
+    /// environment variable (both optional; env entries arm last).
+    pub fn from_spec_and_env(spec: &str) -> Result<FaultRegistry, String> {
+        let reg = FaultRegistry::new();
+        if !spec.is_empty() {
+            reg.arm(spec)?;
+        }
+        if let Ok(env) = std::env::var("SKETCHD_FAULT") {
+            if !env.is_empty() {
+                reg.arm(&env)?;
+            }
+        }
+        Ok(reg)
+    }
+
+    /// Parse `spec` and arm every entry in it (merging with whatever
+    /// is already armed; a repeated site name replaces the old entry).
+    pub fn arm(&self, spec: &str) -> Result<(), String> {
+        let mut parsed = Vec::new();
+        for entry in spec.split(';') {
+            let entry = entry.trim();
+            if entry.is_empty() {
+                continue;
+            }
+            let (site, rest) = entry
+                .split_once('=')
+                .ok_or_else(|| format!("fault entry {entry:?}: no '='"))?;
+            let (action_s, sched_s) = match rest.split_once('@') {
+                Some((a, s)) => (a, Some(s)),
+                None => (rest, None),
+            };
+            let action = parse_action(action_s)?;
+            let (schedule, seed) = parse_schedule(sched_s)?;
+            parsed.push((
+                site.trim().to_string(),
+                Point {
+                    action,
+                    schedule,
+                    hits: 0,
+                    fired: 0,
+                    rng: Rng::new(seed),
+                },
+            ));
+        }
+        if parsed.is_empty() {
+            return Ok(());
+        }
+        let mut points = lock(&self.points);
+        for (site, point) in parsed {
+            points.retain(|(s, _)| *s != site);
+            points.push((site, point));
+        }
+        self.armed.store(true, Ordering::Release);
+        Ok(())
+    }
+
+    /// Disarm one site (no-op if it was not armed).
+    pub fn disarm(&self, site: &str) {
+        let mut points = lock(&self.points);
+        points.retain(|(s, _)| s != site);
+        if points.is_empty() {
+            self.armed.store(false, Ordering::Release);
+        }
+    }
+
+    /// Disarm everything.
+    pub fn disarm_all(&self) {
+        lock(&self.points).clear();
+        self.armed.store(false, Ordering::Release);
+    }
+
+    /// Whether any failpoint is armed (the fast-path check).
+    #[inline]
+    pub fn is_armed(&self) -> bool {
+        self.armed.load(Ordering::Relaxed)
+    }
+
+    /// One check of `site`: `None` unless a failpoint is armed there
+    /// *and* its schedule fires on this check.  The unarmed fast path
+    /// is a single relaxed load.
+    #[inline]
+    pub fn fire(&self, site: &str) -> Option<Action> {
+        if !self.is_armed() {
+            return None;
+        }
+        self.fire_slow(site)
+    }
+
+    fn fire_slow(&self, site: &str) -> Option<Action> {
+        let mut points = lock(&self.points);
+        let idx = points.iter().position(|(s, _)| s == site)?;
+        let action = points[idx].1.check();
+        if action.is_some()
+            && points[idx].1.schedule == Schedule::OneShot
+        {
+            points.remove(idx);
+            if points.is_empty() {
+                self.armed.store(false, Ordering::Release);
+            }
+        }
+        action
+    }
+
+    /// Check `site` as an I/O step: injected `Err` / `WouldBlock`
+    /// become `io::Error`s, `Panic` panics (for `catch_unwind`
+    /// boundaries), `Delay` sleeps then succeeds, `Truncate` is
+    /// treated as success (it only means something to the framing
+    /// code, which asks via [`FaultRegistry::fire`]).
+    pub fn check_io(&self, site: &str) -> std::io::Result<()> {
+        match self.fire(site) {
+            None | Some(Action::Truncate) => Ok(()),
+            Some(Action::Delay(d)) => {
+                std::thread::sleep(d);
+                Ok(())
+            }
+            Some(Action::Err) => Err(std::io::Error::other(format!(
+                "injected fault at {site}"
+            ))),
+            Some(Action::WouldBlock) => Err(std::io::Error::new(
+                std::io::ErrorKind::WouldBlock,
+                format!("injected WouldBlock at {site}"),
+            )),
+            Some(Action::Panic) => panic!("injected panic at {site}"),
+        }
+    }
+
+    /// How many times `site` has fired so far (test observability).
+    pub fn fired(&self, site: &str) -> u64 {
+        lock(&self.points)
+            .iter()
+            .find(|(s, _)| s == site)
+            .map(|(_, p)| p.fired)
+            .unwrap_or(0)
+    }
+
+    /// A fresh shareable handle around an empty registry.
+    pub fn shared() -> Arc<FaultRegistry> {
+        Arc::new(FaultRegistry::new())
+    }
+}
+
+fn lock<'a, T>(m: &'a Mutex<T>) -> std::sync::MutexGuard<'a, T> {
+    // A panic while holding the registry lock (only possible in the
+    // parser, which never runs under it) must not wedge fault checks.
+    m.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+fn parse_action(s: &str) -> Result<Action, String> {
+    let s = s.trim();
+    Ok(match s {
+        "err" => Action::Err,
+        "wouldblock" => Action::WouldBlock,
+        "panic" => Action::Panic,
+        "truncate" => Action::Truncate,
+        _ => match s.strip_prefix("delay:") {
+            Some(ms) => Action::Delay(Duration::from_millis(
+                ms.trim().parse::<u64>().map_err(|_| {
+                    format!("fault action {s:?}: bad delay millis")
+                })?,
+            )),
+            None => return Err(format!("unknown fault action {s:?}")),
+        },
+    })
+}
+
+fn parse_schedule(s: Option<&str>) -> Result<(Schedule, u64), String> {
+    let s = match s {
+        None => return Ok((Schedule::Always, 0)),
+        Some(s) => s.trim(),
+    };
+    if s == "oneshot" {
+        return Ok((Schedule::OneShot, 0));
+    }
+    if let Some(n) = s.strip_prefix("every:") {
+        let n: u64 = n.trim().parse().map_err(|_| {
+            format!("fault schedule {s:?}: bad every count")
+        })?;
+        if n == 0 {
+            return Err("fault schedule every:0 is invalid".into());
+        }
+        return Ok((Schedule::Every(n), 0));
+    }
+    if let Some(rest) = s.strip_prefix("prob:") {
+        let (p_s, seed_s) = rest.split_once(':').ok_or_else(|| {
+            format!("fault schedule {s:?}: want prob:P:SEED")
+        })?;
+        let p: f64 = p_s.trim().parse().map_err(|_| {
+            format!("fault schedule {s:?}: bad probability")
+        })?;
+        if !(0.0..=1.0).contains(&p) {
+            return Err(format!("fault probability {p} outside [0, 1]"));
+        }
+        let seed: u64 = seed_s.trim().parse().map_err(|_| {
+            format!("fault schedule {s:?}: bad seed")
+        })?;
+        return Ok((Schedule::Prob(p), seed));
+    }
+    Err(format!("unknown fault schedule {s:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_registry_fires_nothing() {
+        let r = FaultRegistry::new();
+        assert!(!r.is_armed());
+        assert_eq!(r.fire(site::CONN_READ), None);
+        assert!(r.check_io(site::SNAP_WRITE).is_ok());
+    }
+
+    #[test]
+    fn spec_parsing_and_schedules() {
+        let r = FaultRegistry::new();
+        r.arm("a=err@oneshot; b=wouldblock@every:3; c=delay:5")
+            .unwrap();
+        assert!(r.is_armed());
+        // oneshot: fires exactly once, then the site disarms.
+        assert_eq!(r.fire("a"), Some(Action::Err));
+        assert_eq!(r.fire("a"), None);
+        // every:3 fires on checks 3, 6, ...
+        assert_eq!(r.fire("b"), None);
+        assert_eq!(r.fire("b"), None);
+        assert_eq!(r.fire("b"), Some(Action::WouldBlock));
+        assert_eq!(r.fire("b"), None);
+        assert_eq!(r.fired("b"), 1);
+        // no schedule = always.
+        assert_eq!(r.fire("c"), Some(Action::Delay(Duration::from_millis(5))));
+        assert_eq!(r.fire("c"), Some(Action::Delay(Duration::from_millis(5))));
+        // unknown sites never fire even while armed.
+        assert_eq!(r.fire("nope"), None);
+    }
+
+    #[test]
+    fn probability_schedule_is_seeded_and_bounded() {
+        let a = FaultRegistry::new();
+        a.arm("p=err@prob:0.25:42").unwrap();
+        let b = FaultRegistry::new();
+        b.arm("p=err@prob:0.25:42").unwrap();
+        let fires_a: Vec<bool> =
+            (0..200).map(|_| a.fire("p").is_some()).collect();
+        let fires_b: Vec<bool> =
+            (0..200).map(|_| b.fire("p").is_some()).collect();
+        // Same seed, same replayable firing sequence.
+        assert_eq!(fires_a, fires_b);
+        let n = fires_a.iter().filter(|&&f| f).count();
+        assert!((20..=80).contains(&n), "p=0.25 fired {n}/200");
+        // p=0 never fires, p=1 always fires.
+        let r = FaultRegistry::new();
+        r.arm("z=err@prob:0:1; o=err@prob:1:1").unwrap();
+        assert_eq!(r.fire("z"), None);
+        assert_eq!(r.fire("o"), Some(Action::Err));
+    }
+
+    #[test]
+    fn check_io_maps_actions_to_io_errors() {
+        let r = FaultRegistry::new();
+        r.arm("e=err; w=wouldblock").unwrap();
+        let err = r.check_io("e").unwrap_err();
+        assert_eq!(err.kind(), std::io::ErrorKind::Other);
+        assert!(err.to_string().contains("injected fault at e"));
+        let wb = r.check_io("w").unwrap_err();
+        assert_eq!(wb.kind(), std::io::ErrorKind::WouldBlock);
+    }
+
+    #[test]
+    fn panic_action_panics_for_catch_unwind() {
+        let r = FaultRegistry::new();
+        r.arm("h=panic@oneshot").unwrap();
+        let caught = std::panic::catch_unwind(
+            std::panic::AssertUnwindSafe(|| r.check_io("h")),
+        );
+        assert!(caught.is_err());
+        // After the oneshot fired the registry is fully disarmed.
+        assert!(!r.is_armed());
+        assert!(r.check_io("h").is_ok());
+    }
+
+    #[test]
+    fn disarm_and_rearm() {
+        let r = FaultRegistry::new();
+        r.arm("a=err; b=err").unwrap();
+        r.disarm("a");
+        assert_eq!(r.fire("a"), None);
+        assert_eq!(r.fire("b"), Some(Action::Err));
+        r.disarm_all();
+        assert!(!r.is_armed());
+        // Re-arming a site replaces the previous entry.
+        r.arm("b=truncate").unwrap();
+        assert_eq!(r.fire("b"), Some(Action::Truncate));
+    }
+
+    #[test]
+    fn bad_specs_are_rejected() {
+        let r = FaultRegistry::new();
+        assert!(r.arm("noequals").is_err());
+        assert!(r.arm("a=frobnicate").is_err());
+        assert!(r.arm("a=err@sometimes").is_err());
+        assert!(r.arm("a=err@every:0").is_err());
+        assert!(r.arm("a=err@prob:2:1").is_err());
+        assert!(r.arm("a=err@prob:0.5").is_err());
+        assert!(r.arm("a=delay:xx").is_err());
+        assert!(!r.is_armed());
+        // Empty specs and stray separators are fine.
+        r.arm("").unwrap();
+        r.arm(" ; ;").unwrap();
+        assert!(!r.is_armed());
+    }
+}

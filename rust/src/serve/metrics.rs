@@ -259,6 +259,13 @@ pub struct ServeMetrics {
     busy_quota: AtomicU64,
     snapshot_count: AtomicU64,
     snapshot_pause_ns: AtomicU64,
+    /// Snapshot saves that failed (I/O error, injected or real).  The
+    /// failure also reaches the journal; see `save_snapshot`.
+    snapshot_failures: AtomicU64,
+    /// Request handlers that panicked and were caught at the shard's
+    /// isolation boundary (the request got `Error::Internal`, the
+    /// shard kept serving).
+    handler_panics: AtomicU64,
     /// Process-lifetime (deliberately NOT persisted; `run_probe` relies
     /// on it restarting from zero).
     frames_served: AtomicU64,
@@ -291,6 +298,8 @@ impl ServeMetrics {
             busy_quota: AtomicU64::new(0),
             snapshot_count: AtomicU64::new(0),
             snapshot_pause_ns: AtomicU64::new(0),
+            snapshot_failures: AtomicU64::new(0),
+            handler_panics: AtomicU64::new(0),
             frames_served: AtomicU64::new(0),
             ingest: AtomicHistogram::new(),
             diagnose: AtomicHistogram::new(),
@@ -323,6 +332,23 @@ impl ServeMetrics {
         self.snapshot_count.fetch_add(1, Ordering::Relaxed);
         self.snapshot_pause_ns
             .fetch_add(duration_ns(pause), Ordering::Relaxed);
+    }
+
+    /// A snapshot save failed (satellite of the failpoint work: the
+    /// failure is observable via `Metrics`/`/metrics`, not only by the
+    /// requesting client).
+    pub fn note_snapshot_failure(&self) {
+        self.snapshot_failures.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// A request handler panicked and was caught at the isolation
+    /// boundary; the shard keeps serving.
+    pub fn note_handler_panic(&self) {
+        self.handler_panics.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn handler_panics(&self) -> u64 {
+        self.handler_panics.load(Ordering::Relaxed)
     }
 
     pub fn note_frame_served(&self) {
@@ -367,6 +393,8 @@ impl ServeMetrics {
             busy_quota: self.busy_quota.load(Ordering::Relaxed),
             snapshot_count: self.snapshot_count.load(Ordering::Relaxed),
             snapshot_pause_ns: self.snapshot_pause_ns.load(Ordering::Relaxed),
+            snapshot_failures: self.snapshot_failures.load(Ordering::Relaxed),
+            handler_panics: self.handler_panics.load(Ordering::Relaxed),
             ingest: self.ingest.snapshot(),
             diagnose: self.diagnose.snapshot(),
             query: self.query.snapshot(),
@@ -384,6 +412,8 @@ impl ServeMetrics {
             busy_quota: self.busy_quota.load(Ordering::Relaxed),
             snapshot_count: self.snapshot_count.load(Ordering::Relaxed),
             snapshot_pause_ns: self.snapshot_pause_ns.load(Ordering::Relaxed),
+            snapshot_failures: self.snapshot_failures.load(Ordering::Relaxed),
+            handler_panics: self.handler_panics.load(Ordering::Relaxed),
             ingest: self.ingest.snapshot(),
             diagnose: self.diagnose.snapshot(),
             query: self.query.snapshot(),
@@ -403,6 +433,10 @@ impl ServeMetrics {
             .store(s.snapshot_count, Ordering::Relaxed);
         self.snapshot_pause_ns
             .store(s.snapshot_pause_ns, Ordering::Relaxed);
+        self.snapshot_failures
+            .store(s.snapshot_failures, Ordering::Relaxed);
+        self.handler_panics
+            .store(s.handler_panics, Ordering::Relaxed);
         self.ingest.restore(&s.ingest);
         self.diagnose.restore(&s.diagnose);
         self.query.restore(&s.query);
@@ -424,6 +458,12 @@ pub struct MetricsReport {
     pub busy_quota: u64,
     pub snapshot_count: u64,
     pub snapshot_pause_ns: u64,
+    /// Failed snapshot saves (proto v6+ on the wire; 0 from older
+    /// daemons).
+    pub snapshot_failures: u64,
+    /// Handler panics caught at the shard isolation boundary (proto
+    /// v6+ on the wire; 0 from older daemons).
+    pub handler_panics: u64,
     pub ingest: Histogram,
     pub diagnose: Histogram,
     pub query: Histogram,
@@ -459,6 +499,12 @@ pub struct MetricsState {
     pub busy_quota: u64,
     pub snapshot_count: u64,
     pub snapshot_pause_ns: u64,
+    /// Failed snapshot saves (SNAP v4+ in snapshots; 0 restored from
+    /// older files).
+    pub snapshot_failures: u64,
+    /// Caught handler panics (SNAP v4+ in snapshots; 0 restored from
+    /// older files).
+    pub handler_panics: u64,
     pub ingest: Histogram,
     pub diagnose: Histogram,
     pub query: Histogram,
@@ -479,6 +525,8 @@ impl MetricsState {
         self.busy_quota += other.busy_quota;
         self.snapshot_count += other.snapshot_count;
         self.snapshot_pause_ns += other.snapshot_pause_ns;
+        self.snapshot_failures += other.snapshot_failures;
+        self.handler_panics += other.handler_panics;
         self.ingest.merge(&other.ingest);
         self.diagnose.merge(&other.diagnose);
         self.query.merge(&other.query);
@@ -503,6 +551,8 @@ impl MetricsState {
             busy_quota: self.busy_quota,
             snapshot_count: self.snapshot_count,
             snapshot_pause_ns: self.snapshot_pause_ns,
+            snapshot_failures: self.snapshot_failures,
+            handler_panics: self.handler_panics,
             ingest: self.ingest,
             diagnose: self.diagnose,
             query: self.query,
@@ -755,6 +805,8 @@ mod tests {
         m.note_busy_quota();
         m.note_busy_admission();
         m.note_snapshot(Duration::from_millis(3));
+        m.note_snapshot_failure();
+        m.note_handler_panic();
         m.note_frame_served();
 
         let r = m.report(2);
@@ -768,6 +820,9 @@ mod tests {
         assert_eq!(r.busy_total(), 2);
         assert_eq!(r.snapshot_count, 1);
         assert!(r.snapshot_pause_ns >= 3_000_000);
+        assert_eq!(r.snapshot_failures, 1);
+        assert_eq!(r.handler_panics, 1);
+        assert_eq!(m.handler_panics(), 1);
         assert_eq!(r.frames_served, 1);
 
         // state() -> restore() preserves the persisted subset exactly;
@@ -803,6 +858,11 @@ mod tests {
             busy_quota: 2,
             snapshot_count: 4,
             snapshot_pause_ns: 5_000_000,
+            // v6-gated fields travel outside the base encoding (the
+            // MetricsOk arm appends them), so the base roundtrip here
+            // carries them as 0.
+            snapshot_failures: 0,
+            handler_panics: 0,
             ingest: h.clone(),
             diagnose: Histogram::new(),
             query: h.clone(),
@@ -822,6 +882,10 @@ mod tests {
             busy_quota: 3,
             snapshot_count: 1,
             snapshot_pause_ns: 42,
+            // SNAP-v4-gated fields are appended by the snapshot codec,
+            // not the base encoding; 0 here for the same reason.
+            snapshot_failures: 0,
+            handler_panics: 0,
             ingest: h.clone(),
             diagnose: h.clone(),
             query: Histogram::new(),
@@ -911,6 +975,8 @@ mod tests {
             busy_quota: rng.below(50),
             snapshot_count: rng.below(10),
             snapshot_pause_ns: rng.below(1 << 30),
+            snapshot_failures: rng.below(5),
+            handler_panics: rng.below(5),
             ..MetricsState::default()
         };
         for _ in 0..rng.below(300) {

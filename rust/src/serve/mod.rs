@@ -32,6 +32,9 @@
 //!   protocol ops.
 //! * [`error`] — the one serve [`Error`] vocabulary; wire codes map
 //!   through the single `code()`/`from_code()` table.
+//! * [`fault`] — deterministic failpoint framework (DESIGN.md §11):
+//!   named injection sites in the socket, snapshot and handler paths,
+//!   armed from TOML/CLI/env specs, zero-cost when unarmed.
 //! * [`daemon`] — the sharded nonblocking TCP server: N connection
 //!   shards each owning a slice of sessions, admission caps,
 //!   per-session byte quotas with `Busy` backpressure,
@@ -45,6 +48,7 @@ pub mod client;
 pub mod codec;
 pub mod daemon;
 pub mod error;
+pub mod fault;
 pub mod metrics;
 pub mod obs;
 pub mod poll;
@@ -53,12 +57,14 @@ pub mod store;
 
 pub use client::{
     run_probe, run_probe_resume, DiagnoseReply, EventsReply, IngestReply,
-    MetricsWindowReply, ServerInfo, SessionHandle, SketchClient, StatsReply,
+    MetricsWindowReply, ResumableSession, ServerInfo, SessionHandle,
+    SketchClient, StatsReply, RESUME_MIN_VERSION,
 };
 pub use daemon::{recon_errors, serve_from_args, Daemon, DaemonHandle};
 pub use error::Error;
 #[allow(deprecated)]
 pub use error::ServeError;
+pub use fault::FaultRegistry;
 pub use metrics::{Histogram, MetricsReport, MetricsState, ServeMetrics};
 pub use poll::{Event, Interest, Poller};
 pub use obs::{LayerHealth, SessionHealth};

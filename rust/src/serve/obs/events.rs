@@ -46,6 +46,7 @@ pub mod kind {
     pub const SHARD_ACCEPT: u8 = 6;
     pub const SLOW_REQUEST: u8 = 7;
     pub const LOG: u8 = 8;
+    pub const HANDLER_PANIC: u8 = 9;
 }
 
 /// `code` values for [`kind::BUSY`] events.
@@ -97,6 +98,10 @@ pub enum EventKind {
     /// Structured log record (tag from [`log_tag`], level 1=error
     /// 2=info 3=debug, `detail` is tag-specific, e.g. a shard index).
     Log { tag: u8, level: u64, detail: u64 },
+    /// A request handler panicked and was caught at the shard's
+    /// isolation boundary (`msg` is the request's message type;
+    /// `session` is 0 when the request named none).
+    HandlerPanic { msg: u8, session: u64 },
 }
 
 impl EventKind {
@@ -130,6 +135,9 @@ impl EventKind {
             }
             EventKind::Log { tag, level, detail } => {
                 (kind::LOG, tag, level, detail)
+            }
+            EventKind::HandlerPanic { msg, session } => {
+                (kind::HANDLER_PANIC, msg, session, 0)
             }
         }
     }
@@ -170,6 +178,10 @@ impl Event {
                 tag: self.code,
                 level: self.a,
                 detail: self.b,
+            },
+            kind::HANDLER_PANIC => EventKind::HandlerPanic {
+                msg: self.code,
+                session: self.a,
             },
             _ => return None,
         })
@@ -224,6 +236,9 @@ impl Event {
                     _ => "debug",
                 };
                 format!("log level={level} tag={tag} detail={detail}")
+            }
+            Some(EventKind::HandlerPanic { msg, session }) => {
+                format!("handler-panic msg={msg} session={session}")
             }
             None => format!(
                 "unknown kind={} code={} a={} b={}",
@@ -443,6 +458,7 @@ mod tests {
                 level: 1,
                 detail: 0,
             },
+            EventKind::HandlerPanic { msg: 3, session: 42 },
         ];
         for k in kinds {
             let (kind, code, a, b) = k.pack();

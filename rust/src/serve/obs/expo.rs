@@ -124,6 +124,18 @@ pub fn render_metrics(s: &ExpoSnapshot) -> String {
         "counter",
         format!("{}", r.snapshot_pause_ns as f64 / 1e9),
     );
+    push(
+        &mut o,
+        "sketchd_snapshot_failures_total",
+        "counter",
+        r.snapshot_failures.to_string(),
+    );
+    push(
+        &mut o,
+        "sketchd_handler_panics_total",
+        "counter",
+        r.handler_panics.to_string(),
+    );
 
     o.push_str("# TYPE sketchd_request_latency_seconds summary\n");
     for (op, h) in [
@@ -381,6 +393,8 @@ mod tests {
             busy_quota: 4,
             snapshot_count: 2,
             snapshot_pause_ns: 3_000_000,
+            snapshot_failures: 1,
+            handler_panics: 2,
             ..MetricsReport::default()
         };
         for ns in [1000u64, 2000, 50_000] {
@@ -440,6 +454,8 @@ mod tests {
         assert!(body.contains("sketchd_ingest_frames_total 3\n"));
         assert!(body.contains("sketchd_ingest_bytes_total 123456\n"));
         assert!(body.contains("sketchd_busy_total{cause=\"quota\"} 4\n"));
+        assert!(body.contains("sketchd_snapshot_failures_total 1\n"));
+        assert!(body.contains("sketchd_handler_panics_total 2\n"));
         assert!(body.contains("sketchd_window_frames_retained 2\n"));
         assert!(body.contains("sketchd_window_frames_open 1\n"));
         assert!(body.contains("sketchd_window_frames_baseline 0\n"));

@@ -52,7 +52,12 @@ pub const FRAME_MAGIC: u32 = u32::from_le_bytes(*b"SKD1");
 /// v5: observability — the `Events` / `MetricsWindow` ops (event
 /// journal dump, window-ring report + per-session sketch-health
 /// gauges; DESIGN.md §10). No pre-v5 payload changes shape.
-pub const PROTO_VERSION: u16 = 5;
+/// v6: crash-safe resumption (DESIGN.md §11) — `Ingest` carries a
+/// client sequence number, `SessionOpened` returns the session's
+/// resume epoch, `IngestOk` acks the highest applied seq, and
+/// `MetricsOk` grows the snapshot-failure + handler-panic counters.
+/// No pre-v6 payload changes shape.
+pub const PROTO_VERSION: u16 = 6;
 /// Oldest frame version the daemon still speaks (v2 clients keep
 /// working; their replies omit the v3/v4 fields).
 pub const PROTO_MIN_VERSION: u16 = 2;
@@ -412,9 +417,14 @@ pub enum Request {
     /// into the session's engine, derives sketch metrics and observes
     /// them (with `loss`) in the hub.  `want_recon` asks for per-layer
     /// relative reconstruction errors in the reply (costs a
-    /// reconstruction per layer server-side).
+    /// reconstruction per layer server-side).  `seq` (v6+) numbers the
+    /// frame for crash-safe resumption: 1, 2, 3, ... per session, or 0
+    /// to opt out (legacy peers and fire-and-forget probes) — the
+    /// daemon dedupes replays of acked seqs and rejects gaps
+    /// (DESIGN.md §11).
     Ingest {
         session: u64,
+        seq: u64,
         loss: f32,
         want_recon: bool,
         acts: Vec<Mat>,
@@ -495,10 +505,11 @@ impl Request {
             }
             Request::Ingest {
                 session,
+                seq,
                 loss,
                 want_recon,
                 acts,
-            } => enc_ingest(e, *session, *loss, *want_recon, acts),
+            } => enc_ingest(e, *session, *seq, *loss, *want_recon, acts),
             Request::Observe { session, metrics } => {
                 e.u64(*session);
                 enc_step_metrics(e, metrics);
@@ -522,6 +533,18 @@ impl Request {
     }
 
     pub fn decode(msg_type: u8, payload: &[u8]) -> Result<Request, CodecError> {
+        Request::decode_v(msg_type, payload, PROTO_VERSION)
+    }
+
+    /// Version-aware decode; `version` is the request frame's header
+    /// version (pre-v6 `Ingest` payloads carry no seq, which decodes
+    /// as 0 = resume opted out).  The daemon calls this with the
+    /// version parsed from each frame.
+    pub fn decode_v(
+        msg_type: u8,
+        payload: &[u8],
+        version: u16,
+    ) -> Result<Request, CodecError> {
         let mut d = Dec::new(payload);
         let req = match msg_type {
             msg::HELLO => Request::Hello { client: d.str()? },
@@ -543,8 +566,10 @@ impl Request {
                 for _ in 0..n {
                     acts.push(d.mat()?);
                 }
+                let seq = if version >= 6 { d.u64()? } else { 0 };
                 Request::Ingest {
                     session,
+                    seq,
                     loss,
                     want_recon,
                     acts,
@@ -597,13 +622,22 @@ pub enum Response {
         sessions: u64,
         max_sessions: u64,
     },
-    SessionOpened { session: u64 },
+    SessionOpened {
+        session: u64,
+        /// Resume epoch (v6+; 0 from older daemons): 1 for a fresh
+        /// session, bumped each time the daemon restarts with the
+        /// session restored from snapshot.
+        epoch: u64,
+    },
     IngestOk {
         batches: u64,
         engine_bytes: u64,
         /// Per-layer relative reconstruction errors (empty unless
         /// `want_recon`).
         recon_err: Vec<f64>,
+        /// Highest applied ingest seq for the session (v6+; 0 from
+        /// older daemons or when the client opted out with seq 0).
+        acked_seq: u64,
     },
     ObserveOk { steps_seen: u64 },
     Diagnosis {
@@ -711,15 +745,24 @@ impl Response {
                 e.u64(*sessions);
                 e.u64(*max_sessions);
             }
-            Response::SessionOpened { session } => e.u64(*session),
+            Response::SessionOpened { session, epoch } => {
+                e.u64(*session);
+                if version >= 6 {
+                    e.u64(*epoch);
+                }
+            }
             Response::IngestOk {
                 batches,
                 engine_bytes,
                 recon_err,
+                acked_seq,
             } => {
                 e.u64(*batches);
                 e.u64(*engine_bytes);
                 e.f64s(recon_err);
+                if version >= 6 {
+                    e.u64(*acked_seq);
+                }
             }
             Response::ObserveOk { steps_seen } => e.u64(*steps_seen),
             Response::Diagnosis {
@@ -830,7 +873,15 @@ impl Response {
                 e.u64(info.oldest_step);
                 e.u64(info.newest_step);
             }
-            Response::MetricsOk(report) => enc_metrics_report(e, report),
+            Response::MetricsOk(report) => {
+                enc_metrics_report(e, report);
+                if version >= 6 {
+                    // The base report encoding is frozen at its v3
+                    // shape; v6 fault counters ride after it.
+                    e.u64(report.snapshot_failures);
+                    e.u64(report.handler_panics);
+                }
+            }
             Response::EventsOk {
                 dropped,
                 base_unix_ms,
@@ -883,11 +934,13 @@ impl Response {
             },
             msg::SESSION_OPENED => Response::SessionOpened {
                 session: d.u64()?,
+                epoch: if version >= 6 { d.u64()? } else { 0 },
             },
             msg::INGEST_OK => Response::IngestOk {
                 batches: d.u64()?,
                 engine_bytes: d.u64()?,
                 recon_err: d.f64s()?,
+                acked_seq: if version >= 6 { d.u64()? } else { 0 },
             },
             msg::OBSERVE_OK => Response::ObserveOk {
                 steps_seen: d.u64()?,
@@ -1008,7 +1061,14 @@ impl Response {
                 oldest_step: d.u64()?,
                 newest_step: d.u64()?,
             }),
-            msg::METRICS_OK => Response::MetricsOk(dec_metrics_report(&mut d)?),
+            msg::METRICS_OK => {
+                let mut report = dec_metrics_report(&mut d)?;
+                if version >= 6 {
+                    report.snapshot_failures = d.u64()?;
+                    report.handler_panics = d.u64()?;
+                }
+                Response::MetricsOk(report)
+            }
             msg::EVENTS_OK => {
                 let dropped = d.u64()?;
                 let base_unix_ms = d.u64()?;
@@ -1054,13 +1114,30 @@ impl Response {
 /// Encode an `Ingest` request payload straight from borrowed
 /// activations — the client's hot path uses this (through its reusable
 /// encoder) so a monitored step never clones the activation matrices
-/// just to build the frame.
+/// just to build the frame.  This is the v6 payload shape (trailing
+/// `seq`); use [`enc_ingest_v`] when talking to an older daemon.
 pub fn enc_ingest(
     e: &mut Enc,
     session: u64,
+    seq: u64,
     loss: f32,
     want_recon: bool,
     acts: &[Mat],
+) {
+    enc_ingest_v(e, session, seq, loss, want_recon, acts, PROTO_VERSION)
+}
+
+/// [`enc_ingest`] at an explicit negotiated frame version: pre-v6
+/// peers reject trailing payload bytes, so `seq` is omitted (the
+/// session simply cannot resume across a daemon of that vintage).
+pub fn enc_ingest_v(
+    e: &mut Enc,
+    session: u64,
+    seq: u64,
+    loss: f32,
+    want_recon: bool,
+    acts: &[Mat],
+    version: u16,
 ) {
     e.u64(session);
     e.f32(loss);
@@ -1068,6 +1145,9 @@ pub fn enc_ingest(
     e.len32(acts.len());
     for a in acts {
         e.mat(a);
+    }
+    if version >= 6 {
+        e.u64(seq);
     }
 }
 
@@ -1171,17 +1251,20 @@ mod tests {
         let acts = vec![Mat::gaussian(4, 8, &mut rng), Mat::gaussian(4, 6, &mut rng)];
         match roundtrip_req(&Request::Ingest {
             session: 3,
+            seq: 12,
             loss: 0.25,
             want_recon: true,
             acts: acts.clone(),
         }) {
             Request::Ingest {
                 session,
+                seq,
                 loss,
                 want_recon,
                 acts: back,
             } => {
-                assert_eq!((session, loss, want_recon), (3, 0.25, true));
+                assert_eq!((session, seq, loss), (3, 12, 0.25));
+                assert!(want_recon);
                 assert_eq!(back.len(), 2);
                 assert_eq!(back[0].max_abs_diff(&acts[0]), 0.0);
                 assert_eq!(back[1].max_abs_diff(&acts[1]), 0.0);
@@ -1271,11 +1354,15 @@ mod tests {
                 sessions: 2,
                 max_sessions: 16,
             },
-            Response::SessionOpened { session: 5 },
+            Response::SessionOpened {
+                session: 5,
+                epoch: 2,
+            },
             Response::IngestOk {
                 batches: 10,
                 engine_bytes: 4096,
                 recon_err: vec![0.5, 0.25],
+                acked_seq: 10,
             },
             Response::ObserveOk { steps_seen: 3 },
             Response::Diagnosis {
@@ -1447,6 +1534,8 @@ mod tests {
             busy_quota: 7,
             snapshot_count: 3,
             snapshot_pause_ns: 9_000_000,
+            snapshot_failures: 1,
+            handler_panics: 2,
             ingest: h.clone(),
             diagnose: crate::serve::metrics::Histogram::new(),
             query: h,
@@ -1546,6 +1635,87 @@ mod tests {
             full
         );
         assert!(Response::decode_v(msg::STATS_OK, &v4_bytes, 3).is_err());
+    }
+
+    /// The v6 resume fields (`Ingest.seq`, `SessionOpened.epoch`,
+    /// `IngestOk.acked_seq`, the `MetricsOk` fault counters) are
+    /// encoded only on v6 frames; older payloads decode with them
+    /// zeroed, and mixing versions is a typed error, never a panic.
+    #[test]
+    fn resume_fields_versioned_encoding() {
+        // Ingest request: v5 payloads carry no seq.
+        let mut rng = Rng::new(2);
+        let acts = vec![Mat::gaussian(2, 3, &mut rng)];
+        let mut e = Enc::new();
+        enc_ingest_v(&mut e, 7, 42, 0.5, false, &acts, 5);
+        let v5_req = e.into_bytes();
+        let mut e = Enc::new();
+        enc_ingest_v(&mut e, 7, 42, 0.5, false, &acts, 6);
+        let v6_req = e.into_bytes();
+        assert_eq!(v6_req.len(), v5_req.len() + 8, "seq is 8 bytes");
+        match Request::decode_v(msg::INGEST, &v5_req, 5).unwrap() {
+            Request::Ingest { session, seq, .. } => {
+                assert_eq!((session, seq), (7, 0), "seq zeroed at v5");
+            }
+            other => panic!("{other:?}"),
+        }
+        match Request::decode_v(msg::INGEST, &v6_req, 6).unwrap() {
+            Request::Ingest { seq, .. } => assert_eq!(seq, 42),
+            other => panic!("{other:?}"),
+        }
+        assert!(Request::decode_v(msg::INGEST, &v6_req, 5).is_err());
+        assert!(Request::decode_v(msg::INGEST, &v5_req, 6).is_err());
+
+        // SessionOpened / IngestOk / MetricsOk responses.
+        let cases = [
+            Response::SessionOpened {
+                session: 9,
+                epoch: 4,
+            },
+            Response::IngestOk {
+                batches: 3,
+                engine_bytes: 64,
+                recon_err: vec![],
+                acked_seq: 17,
+            },
+            Response::MetricsOk(sample_metrics_report()),
+        ];
+        for full in &cases {
+            let enc_at = |version| {
+                let mut e = Enc::new();
+                full.encode_into_v(&mut e, version);
+                e.into_bytes()
+            };
+            let v5 = enc_at(5);
+            let v6 = enc_at(6);
+            assert!(v6.len() > v5.len(), "{full:?}");
+            assert_eq!(
+                &Response::decode_v(full.msg_type(), &v6, 6).unwrap(),
+                full
+            );
+            assert!(
+                Response::decode_v(full.msg_type(), &v6, 5).is_err(),
+                "trailing v6 bytes rejected at v5"
+            );
+            // A v5 payload decodes with the v6 fields zeroed.
+            let back = Response::decode_v(full.msg_type(), &v5, 5).unwrap();
+            match back {
+                Response::SessionOpened { session, epoch } => {
+                    assert_eq!((session, epoch), (9, 0));
+                }
+                Response::IngestOk {
+                    batches, acked_seq, ..
+                } => {
+                    assert_eq!((batches, acked_seq), (3, 0));
+                }
+                Response::MetricsOk(r) => {
+                    assert_eq!(r.snapshot_failures, 0);
+                    assert_eq!(r.handler_panics, 0);
+                    assert_eq!(r.snapshot_count, 3, "base fields kept");
+                }
+                other => panic!("{other:?}"),
+            }
+        }
     }
 
     #[test]

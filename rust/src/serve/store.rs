@@ -15,18 +15,27 @@
 //! engine-side [`EngineSnapshot`] (EMA triplets; projections re-derived
 //! from seed), the backpressure + ingest counters, (v2) the archive
 //! ring ([`ArchiveState`]) — so archive queries answer bit-identically
-//! after a warm restart — and (v3) the per-session Busy-rejection
+//! after a warm restart — (v3) the per-session Busy-rejection
 //! counter plus the daemon-wide [`MetricsState`] (lifetime latency
-//! histograms and counters).  Writes are atomic: the
+//! histograms and counters), and (v4) the per-session resume epoch +
+//! highest acked ingest sequence alongside the fault counters
+//! (DESIGN.md §11).  Writes are atomic: the
 //! bytes go to `<path>.tmp`, are fsynced, then renamed over `<path>`, so
 //! a crash mid-write leaves the previous snapshot intact.  `load`
 //! verifies magic, version, length and CRC-32 before decoding; versions
-//! [`SNAP_MIN_VERSION`]..=[`SNAP_VERSION`] are accepted, with the v3
-//! fields zeroed when reading a v2 file.
+//! [`SNAP_MIN_VERSION`]..=[`SNAP_VERSION`] are accepted, with fields
+//! newer than the file's version zeroed.
+//!
+//! The store carries a shared [`FaultRegistry`] so the crash paths —
+//! temp-file creation, the payload write, the fsync, the final rename —
+//! are all injectable (`snapshot.*` sites); the torn-snapshot property
+//! test below proves a crash at any of them never loses the previous
+//! durable state.
 
 use std::fs;
 use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
 
 use anyhow::{bail, Context, Result};
 
@@ -37,12 +46,15 @@ use crate::monitor::{
 use crate::sketch::{EngineSnapshot, Precision, TripletState};
 
 use super::codec::{crc32, CodecError, Dec, Enc};
+use super::fault::{self, Action, FaultRegistry};
 use super::metrics::{dec_metrics_state, enc_metrics_state, MetricsState};
 
 pub const SNAP_MAGIC: &[u8; 8] = b"SKSNAP01";
 /// v2: per-session ingest counter + archive ring.
 /// v3: per-session Busy-rejection counter + daemon-wide metrics state.
-pub const SNAP_VERSION: u16 = 3;
+/// v4: per-session resume epoch + acked ingest seq, daemon-wide
+///     snapshot-failure and handler-panic counters.
+pub const SNAP_VERSION: u16 = 4;
 /// Oldest snapshot version `load` still understands.
 pub const SNAP_MIN_VERSION: u16 = 2;
 pub const SNAP_HEADER_LEN: usize = 20;
@@ -60,6 +72,14 @@ pub struct SessionRecord {
     pub ingest_bytes: u64,
     /// Lifetime quota-Busy rejections (v3; zero when read from v2).
     pub busy_rejections: u64,
+    /// Resume epoch (v4; zero when read from older files).  Starts at
+    /// 1 when the session opens and is bumped on every daemon restart,
+    /// so a resuming client can tell which incarnation acked it.
+    pub epoch: u64,
+    /// Highest client ingest sequence number applied (v4; zero when
+    /// read from older files, and zero for legacy clients that never
+    /// number their frames).
+    pub acked_seq: u64,
     /// The session's retained sketch history, oldest record first.
     pub archive: ArchiveState,
 }
@@ -92,10 +112,20 @@ impl DaemonSnapshot {
             if version >= 3 {
                 e.u64(rec.busy_rejections);
             }
+            if version >= 4 {
+                e.u64(rec.epoch);
+                e.u64(rec.acked_seq);
+            }
             enc_archive_state(&mut e, &rec.archive);
         }
         if version >= 3 {
             enc_metrics_state(&mut e, &self.metrics);
+        }
+        if version >= 4 {
+            // The base metrics encoding is shared with the wire (v3)
+            // and stays fixed; v4 counters ride after it.
+            e.u64(self.metrics.snapshot_failures);
+            e.u64(self.metrics.handler_panics);
         }
         e.into_bytes()
     }
@@ -114,6 +144,11 @@ impl DaemonSnapshot {
             let ingest_bytes = d.u64()?;
             let busy_rejections =
                 if version >= 3 { d.u64()? } else { 0 };
+            let (epoch, acked_seq) = if version >= 4 {
+                (d.u64()?, d.u64()?)
+            } else {
+                (0, 0)
+            };
             let archive = dec_archive_state(&mut d)?;
             sessions.push(SessionRecord {
                 session,
@@ -121,14 +156,20 @@ impl DaemonSnapshot {
                 quota_used,
                 ingest_bytes,
                 busy_rejections,
+                epoch,
+                acked_seq,
                 archive,
             });
         }
-        let metrics = if version >= 3 {
+        let mut metrics = if version >= 3 {
             dec_metrics_state(&mut d)?
         } else {
             MetricsState::default()
         };
+        if version >= 4 {
+            metrics.snapshot_failures = d.u64()?;
+            metrics.handler_panics = d.u64()?;
+        }
         d.finish()?;
         Ok(DaemonSnapshot { sessions, metrics })
     }
@@ -138,11 +179,27 @@ impl DaemonSnapshot {
 #[derive(Clone, Debug)]
 pub struct SnapshotStore {
     path: PathBuf,
+    /// Failpoints for the `snapshot.*` sites; an empty registry (the
+    /// [`SnapshotStore::new`] default) costs one atomic load per site.
+    faults: Arc<FaultRegistry>,
 }
 
 impl SnapshotStore {
     pub fn new(path: impl Into<PathBuf>) -> SnapshotStore {
-        SnapshotStore { path: path.into() }
+        SnapshotStore::with_faults(path, FaultRegistry::shared())
+    }
+
+    /// A store whose `snapshot.*` injection sites answer to `faults`
+    /// (shared with the owning daemon, so `--fault` specs reach disk
+    /// I/O too).
+    pub fn with_faults(
+        path: impl Into<PathBuf>,
+        faults: Arc<FaultRegistry>,
+    ) -> SnapshotStore {
+        SnapshotStore {
+            path: path.into(),
+            faults,
+        }
     }
 
     pub fn path(&self) -> &Path {
@@ -169,13 +226,46 @@ impl SnapshotStore {
             }
         }
         let tmp = self.path.with_extension("tmp");
+        self.faults
+            .check_io(fault::site::SNAP_CREATE)
+            .with_context(|| format!("creating {}", tmp.display()))?;
         {
             let mut f = fs::File::create(&tmp).with_context(|| {
                 format!("creating {}", tmp.display())
             })?;
+            match self.faults.fire(fault::site::SNAP_WRITE) {
+                // A torn write: half the bytes land, then the
+                // "process dies".  The tmp file lingers; the live
+                // snapshot is untouched.
+                Some(Action::Truncate) => {
+                    f.write_all(&file[..file.len() / 2])?;
+                    f.sync_all()?;
+                    bail!("injected torn write to {}", tmp.display());
+                }
+                Some(Action::Delay(d)) => std::thread::sleep(d),
+                Some(Action::Panic) => {
+                    panic!("injected panic at snapshot.write")
+                }
+                Some(Action::Err) | Some(Action::WouldBlock) => {
+                    bail!("injected fault at snapshot.write")
+                }
+                None => {}
+            }
             f.write_all(&file)?;
+            self.faults
+                .check_io(fault::site::SNAP_SYNC)
+                .with_context(|| format!("syncing {}", tmp.display()))?;
             f.sync_all()?;
         }
+        self.faults
+            .check_io(fault::site::SNAP_RENAME)
+            .with_context(|| {
+                format!(
+                    "renaming {} -> {}",
+                    tmp.display(),
+                    self.path.display()
+                )
+            })?;
         fs::rename(&tmp, &self.path).with_context(|| {
             format!("renaming {} -> {}", tmp.display(), self.path.display())
         })?;
@@ -203,16 +293,23 @@ impl SnapshotStore {
         if &bytes[0..8] != SNAP_MAGIC {
             bail!("snapshot has wrong magic");
         }
-        let version = u16::from_le_bytes(bytes[8..10].try_into().unwrap());
+        // Header fields parse infallibly: the length check above
+        // guarantees all SNAP_HEADER_LEN bytes are present, so an
+        // injected short read surfaces as the typed "truncated" error,
+        // never a slice-conversion abort.
+        let version = u16::from_le_bytes([bytes[8], bytes[9]]);
         if !(SNAP_MIN_VERSION..=SNAP_VERSION).contains(&version) {
             bail!(
                 "snapshot version {version} (expected \
                  {SNAP_MIN_VERSION}..={SNAP_VERSION})"
             );
         }
-        let len =
-            u32::from_le_bytes(bytes[12..16].try_into().unwrap()) as usize;
-        let crc = u32::from_le_bytes(bytes[16..20].try_into().unwrap());
+        let len = u32::from_le_bytes([
+            bytes[12], bytes[13], bytes[14], bytes[15],
+        ]) as usize;
+        let crc = u32::from_le_bytes([
+            bytes[16], bytes[17], bytes[18], bytes[19],
+        ]);
         let payload = &bytes[SNAP_HEADER_LEN..];
         if payload.len() != len {
             bail!(
@@ -503,6 +600,8 @@ mod tests {
             quota_used: 1234,
             ingest_bytes: 99999,
             busy_rejections: 77,
+            epoch: 3,
+            acked_seq: 55,
             archive: archive.state(),
         }
     }
@@ -515,6 +614,8 @@ mod tests {
             busy_quota: 3,
             snapshot_count: 2,
             snapshot_pause_ns: 5_000_000,
+            snapshot_failures: 2,
+            handler_panics: 1,
             ..MetricsState::default()
         };
         for ns in [800, 2_500, 40_000, 1_000_000] {
@@ -539,7 +640,7 @@ mod tests {
 
         let back = store.load().unwrap().expect("snapshot present");
         assert_eq!(back.sessions.len(), 2);
-        // v3 extras survive bit-exactly.
+        // v3/v4 extras survive bit-exactly.
         assert_eq!(back.metrics, snap.metrics);
         for (orig, got) in snap.sessions.iter().zip(&back.sessions) {
             assert_eq!(got.session.id, orig.session.id);
@@ -547,6 +648,8 @@ mod tests {
             assert_eq!(got.quota_used, orig.quota_used);
             assert_eq!(got.ingest_bytes, orig.ingest_bytes);
             assert_eq!(got.busy_rejections, orig.busy_rejections);
+            assert_eq!(got.epoch, orig.epoch);
+            assert_eq!(got.acked_seq, orig.acked_seq);
             // Archive rings survive bit-exactly (floats included).
             assert_eq!(got.archive, orig.archive);
             assert_eq!(got.archive.records.len(), 4);
@@ -622,6 +725,8 @@ mod tests {
         assert_eq!(back.sessions.len(), 1);
         assert_eq!(back.sessions[0].quota_used, 1234);
         assert_eq!(back.sessions[0].busy_rejections, 0, "zeroed from v2");
+        assert_eq!(back.sessions[0].epoch, 0, "zeroed from v2");
+        assert_eq!(back.sessions[0].acked_seq, 0, "zeroed from v2");
         assert_eq!(back.metrics, MetricsState::default());
         assert_eq!(back.sessions[0].archive, snap.sessions[0].archive);
 
@@ -634,6 +739,110 @@ mod tests {
         let err = store.load().unwrap_err().to_string();
         assert!(err.contains("snapshot version 9"), "{err}");
         let _ = fs::remove_file(&path);
+    }
+
+    #[test]
+    fn v3_snapshots_still_load() {
+        // A pre-resume (v3) file decodes with the v4 fields zeroed
+        // while the v3 fields survive intact.
+        let path = temp_path("v3compat");
+        let snap = DaemonSnapshot {
+            sessions: vec![sample_record(13)],
+            metrics: sample_metrics(),
+        };
+        let payload = snap.encode_versioned(3);
+        let mut file = Vec::with_capacity(SNAP_HEADER_LEN + payload.len());
+        file.extend_from_slice(SNAP_MAGIC);
+        file.extend_from_slice(&3u16.to_le_bytes());
+        file.extend_from_slice(&0u16.to_le_bytes());
+        file.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        file.extend_from_slice(&crc32(&payload).to_le_bytes());
+        file.extend_from_slice(&payload);
+        fs::write(&path, &file).unwrap();
+
+        let store = SnapshotStore::new(&path);
+        let back = store.load().unwrap().expect("v3 snapshot loads");
+        assert_eq!(back.sessions.len(), 1);
+        assert_eq!(back.sessions[0].busy_rejections, 77, "v3 field kept");
+        assert_eq!(back.sessions[0].epoch, 0, "zeroed from v3");
+        assert_eq!(back.sessions[0].acked_seq, 0, "zeroed from v3");
+        let mut expect = sample_metrics();
+        expect.snapshot_failures = 0;
+        expect.handler_panics = 0;
+        assert_eq!(back.metrics, expect, "v4 counters zeroed from v3");
+
+        // v3 bytes do not parse as v4 (the v4 tail is missing).
+        assert!(DaemonSnapshot::decode(&payload, 4).is_err());
+        let _ = fs::remove_file(&path);
+    }
+
+    /// The torn-snapshot property (DESIGN.md §11): a crash injected at
+    /// *any* point of the temp-write/rename sequence leaves the store
+    /// loading either the full previous snapshot or the full new one —
+    /// never a blend, never corruption.  A seeded schedule walks all
+    /// four `snapshot.*` sites interleaved with clean saves.
+    #[test]
+    fn torn_snapshot_writes_never_lose_state() {
+        let path = temp_path("torn");
+        let _ = fs::remove_file(&path);
+        let faults = FaultRegistry::shared();
+        let store = SnapshotStore::with_faults(&path, Arc::clone(&faults));
+        let base = sample_record(21);
+        let mut rng = Rng::new(0xF417);
+        // quota_used of the last save that was allowed to succeed.
+        let mut durable: Option<u64> = None;
+        for round in 1..=24u64 {
+            let mut rec = base.clone();
+            rec.quota_used = round;
+            rec.acked_seq = round * 10;
+            let snap = DaemonSnapshot {
+                sessions: vec![rec],
+                metrics: MetricsState::default(),
+            };
+            let crash = match rng.below(5) {
+                0 => Some("snapshot.create=err@oneshot"),
+                1 => Some("snapshot.write=truncate@oneshot"),
+                2 => Some("snapshot.sync=err@oneshot"),
+                3 => Some("snapshot.rename=err@oneshot"),
+                _ => None,
+            };
+            match crash {
+                Some(spec) => {
+                    faults.arm(spec).unwrap();
+                    let err = store
+                        .save(&snap)
+                        .expect_err("armed save must fail");
+                    assert!(
+                        err.to_string().contains("injected")
+                            || format!("{err:#}").contains("injected"),
+                        "{err:#}"
+                    );
+                    assert!(!faults.is_armed(), "oneshot consumed");
+                }
+                None => {
+                    store.save(&snap).unwrap();
+                    durable = Some(round);
+                }
+            }
+            // Whatever just happened, the durable state is intact:
+            // either no file yet, or exactly the last clean save.
+            match (store.load().unwrap(), durable) {
+                (None, None) => {}
+                (Some(back), Some(want)) => {
+                    assert_eq!(back.sessions.len(), 1);
+                    assert_eq!(back.sessions[0].quota_used, want);
+                    assert_eq!(back.sessions[0].acked_seq, want * 10);
+                }
+                (got, want) => panic!(
+                    "round {round}: durable={want:?} but load gave \
+                     {:?}",
+                    got.map(|s| s.sessions[0].quota_used)
+                ),
+            }
+        }
+        assert!(durable.is_some(), "seeded schedule includes clean saves");
+        let _ = fs::remove_file(&path);
+        let _ = fs::remove_file(path.with_extension("tmp"));
     }
 
     #[test]

@@ -59,6 +59,7 @@ fn storm_of_256_concurrent_connections_is_fully_served() {
         shards: SHARDS,
         archive: ArchiveConfig::default(),
         obs: ObsConfig::default(),
+        fault: String::new(),
     })
     .unwrap();
     let addr = daemon.local_addr().unwrap().to_string();

@@ -38,6 +38,7 @@ fn config(tag: &str, capacity: usize, stride: usize) -> ServeConfig {
         shards: 1,
         archive: ArchiveConfig { capacity, stride },
         obs: ObsConfig::default(),
+        fault: String::new(),
     }
 }
 

@@ -94,6 +94,7 @@ fn timeouts_do_not_disturb_a_healthy_daemon() {
         shards: 1,
         archive: ArchiveConfig::default(),
         obs: ObsConfig::default(),
+        fault: String::new(),
     })
     .unwrap();
     let addr = daemon.local_addr().unwrap().to_string();

@@ -34,6 +34,7 @@ fn run_on_spawned(sc: &Scenario, shards: usize) -> ScenarioReport {
         shards,
         archive: ArchiveConfig::default(),
         obs: ObsConfig::default(),
+        fault: String::new(),
     })
     .unwrap();
     let addr = daemon.local_addr().unwrap().to_string();

@@ -31,6 +31,7 @@ fn test_config(tag: &str, quota: usize) -> ServeConfig {
         shards: 1,
         archive: ArchiveConfig::default(),
         obs: ObsConfig::default(),
+        fault: String::new(),
     }
 }
 

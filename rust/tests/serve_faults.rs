@@ -1,0 +1,180 @@
+//! Fault-injection integration (DESIGN.md §11): failpoints armed
+//! through the daemon's shared registry must produce *contained*,
+//! typed, observable failures — an injected handler panic costs
+//! exactly one request, an injected snapshot failure is counted and
+//! surfaced as `Error::Internal`, and a daemon killed without its
+//! final snapshot resumes exactly-once through the client's replay
+//! ring.
+
+use sketchgrad::config::{ArchiveConfig, ObsConfig, ServeConfig};
+use sketchgrad::data::ActStream;
+use sketchgrad::serve::obs::events::kind;
+use sketchgrad::serve::proto::SessionSpec;
+use sketchgrad::serve::{Daemon, Error, SketchClient};
+
+fn test_config(tag: &str) -> ServeConfig {
+    ServeConfig {
+        addr: "127.0.0.1:0".into(),
+        max_sessions: 8,
+        snapshot_interval_secs: 0,
+        session_quota_bytes: 0,
+        snapshot_path: std::env::temp_dir()
+            .join(format!("sketchd-fi-{tag}-{}.snap", std::process::id()))
+            .to_string_lossy()
+            .into_owned(),
+        threads: 1,
+        shards: 1,
+        archive: ArchiveConfig::default(),
+        obs: ObsConfig::default(),
+        fault: String::new(),
+    }
+}
+
+fn spec(name: &str) -> SessionSpec {
+    SessionSpec {
+        name: name.into(),
+        layer_dims: vec![16, 8],
+        rank: 3,
+        beta: 0.9,
+        seed: 7,
+        window: 8,
+        collapse_frac: 0.25,
+    }
+}
+
+/// An injected handler panic is caught at the shard's isolation
+/// boundary: the panicking request gets a typed `Internal` reply, the
+/// *same connection* keeps working, the daemon counts the panic, and
+/// the journal records it.
+#[test]
+fn handler_panic_costs_exactly_one_request() {
+    let cfg = test_config("panic");
+    let snap = cfg.snapshot_path.clone();
+    let daemon = Daemon::bind(cfg).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+
+    handle.faults().arm("handler=panic@oneshot").unwrap();
+    match client.metrics() {
+        Err(Error::Internal(msg)) => {
+            assert!(msg.contains("panicked"), "{msg}")
+        }
+        other => panic!("expected Internal from panic, got {other:?}"),
+    }
+
+    // Same connection, next request: the shard survived the panic and
+    // the counter records it.
+    let m = client.metrics().unwrap();
+    assert_eq!(m.handler_panics, 1);
+    let ev = client.events(128).unwrap();
+    assert!(
+        ev.events.iter().any(|e| e.kind == kind::HANDLER_PANIC),
+        "journal must record the caught handler panic"
+    );
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap);
+}
+
+/// An injected failure in the snapshot rename step surfaces as a typed
+/// `Internal` reply to the requesting client, bumps the
+/// `snapshot_failures` counter, and — being a oneshot — the next
+/// snapshot attempt succeeds.
+#[test]
+fn injected_snapshot_failure_is_typed_and_counted() {
+    let cfg = test_config("snapfail");
+    let snap = cfg.snapshot_path.clone();
+    let _ = std::fs::remove_file(&snap);
+    let daemon = Daemon::bind(cfg).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    let sess = client.open_session(&spec("snapfail")).unwrap();
+    let id = sess.id();
+
+    handle.faults().arm("snapshot.rename=err@oneshot").unwrap();
+    match client.snapshot() {
+        Err(Error::Internal(msg)) => {
+            assert!(msg.contains("snapshot failed"), "{msg}")
+        }
+        other => panic!("expected Internal from snap fault, got {other:?}"),
+    }
+    let m = client.metrics().unwrap();
+    assert_eq!(m.snapshot_failures, 1);
+
+    // The oneshot disarmed itself: the retry lands a real snapshot.
+    let (_, _, sessions) = client.snapshot().unwrap();
+    assert_eq!(sessions, 1);
+    client.session(id).close().unwrap();
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap);
+}
+
+/// Kill the daemon (no final snapshot — a crash) after a durable
+/// snapshot mid-run; the client's `ResumableSession` reconnects to the
+/// restarted daemon and replays its ring.  The daemon re-acks the
+/// already-applied prefix and applies only the lost tail: the final
+/// ack shows exactly-once ingest across the crash.
+#[test]
+fn killed_daemon_resumes_exactly_once_via_replay() {
+    let cfg = test_config("resume");
+    let snap = cfg.snapshot_path.clone();
+    let _ = std::fs::remove_file(&snap);
+    let daemon = Daemon::bind(cfg.clone()).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    let sess = client.open_session(&spec("resume")).unwrap();
+    assert_eq!(sess.epoch(), 1);
+    let mut sess = sess.resumable(32).unwrap();
+    let mut stream = ActStream::new(&[16, 8], false, 7);
+    for _ in 0..4 {
+        sess.ingest(0.1, &stream.next_batch(4), false).unwrap();
+    }
+    // Durability floor: seqs 1..=4 are snapshotted; everything after
+    // exists only in the client's replay ring.
+    sess.client().snapshot().unwrap();
+    for _ in 0..3 {
+        sess.ingest(0.2, &stream.next_batch(4), false).unwrap();
+    }
+    assert_eq!(sess.replays(), 0);
+
+    handle.kill().unwrap();
+    let mut cfg2 = cfg;
+    cfg2.addr = addr.clone();
+    let daemon2 = Daemon::bind(cfg2).unwrap();
+    assert_eq!(daemon2.session_count(), 1);
+    let handle2 = daemon2.spawn().unwrap();
+
+    // The next ingest hits the dead socket, reconnects, and replays
+    // the whole ring: the daemon re-acks 1..=4 and applies 5..=8.
+    let mut last = sess.ingest(0.3, &stream.next_batch(4), false).unwrap();
+    assert!(sess.replays() >= 1, "kill must force a replay recovery");
+    assert_eq!(last.batches, 8);
+    assert_eq!(last.acked_seq, 8);
+    for _ in 0..4 {
+        last = sess.ingest(0.4, &stream.next_batch(4), false).unwrap();
+    }
+    assert_eq!(last.batches, 12, "lost or duplicated ingests");
+    assert_eq!(last.acked_seq, 12);
+    sess.close().unwrap();
+
+    handle2.stop().unwrap();
+    let _ = std::fs::remove_file(&snap);
+}
+
+/// A malformed `serve.fault` spec is rejected at bind time with a
+/// diagnosable error naming the config key.
+#[test]
+fn invalid_fault_spec_fails_bind() {
+    let mut cfg = test_config("badspec");
+    cfg.fault = "handler@panic".into();
+    let err = match Daemon::bind(cfg) {
+        Err(e) => format!("{e:#}"),
+        Ok(_) => panic!("bind accepted a malformed fault spec"),
+    };
+    assert!(err.contains("serve.fault"), "{err}");
+}

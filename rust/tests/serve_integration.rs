@@ -53,6 +53,7 @@ fn test_config(tag: &str, max_sessions: usize, quota: usize) -> ServeConfig {
         shards: 1,
         archive: ArchiveConfig::default(),
         obs: ObsConfig::default(),
+        fault: String::new(),
     }
 }
 

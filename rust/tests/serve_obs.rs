@@ -38,6 +38,7 @@ fn test_config(tag: &str, shards: usize, obs: ObsConfig) -> ServeConfig {
         shards,
         archive: ArchiveConfig::default(),
         obs,
+        fault: String::new(),
     }
 }
 

@@ -35,6 +35,7 @@ fn config(tag: &str, shards: usize) -> ServeConfig {
         shards,
         archive: ArchiveConfig::default(),
         obs: ObsConfig::default(),
+        fault: String::new(),
     }
 }
 
