@@ -29,7 +29,10 @@
 //! snapshot.  When the transport fails mid-run — daemon killed, frame
 //! torn, socket timeout — the session reconnects and replays the ring
 //! in order; the daemon dedupes already-applied frames by seq, so a
-//! daemon kill→restart is invisible to the training loop.
+//! daemon kill→restart is invisible to the training loop.  An error
+//! *reply* (Busy backpressure, an Invalid rejection) instead rolls the
+//! frame back — the daemon guarantees it applied nothing — so the seq
+//! is reused on retry and backpressure never wedges the session.
 
 use std::collections::hash_map::DefaultHasher;
 use std::collections::VecDeque;
@@ -77,7 +80,11 @@ pub struct IngestReply {
     pub engine_bytes: u64,
     pub recon_err: Vec<f64>,
     /// Highest client sequence number the daemon has applied for this
-    /// session (0 on pre-v6 connections or seq-less ingests).
+    /// session (0 on pre-v6 connections or seq-less ingests).  The ack
+    /// for a frame the daemon had already applied (a replay after
+    /// reconnect) is a fresh reply: `recon_err` comes back empty even
+    /// if the frame asked for reconstruction, and `batches` /
+    /// `engine_bytes` reflect the session's current state.
     pub acked_seq: u64,
 }
 
@@ -445,7 +452,7 @@ impl SketchClient {
     /// connection fails client-side before touching the wire).
     pub fn metrics(&mut self) -> Result<MetricsReport, Error> {
         if self.version < METRICS_MIN_VERSION {
-            return Err(Error::Protocol(format!(
+            return Err(Error::UnsupportedVersion(format!(
                 "Metrics requires proto v{METRICS_MIN_VERSION}, \
                  connection negotiated v{}",
                 self.version
@@ -462,7 +469,7 @@ impl SketchClient {
     /// instead of burning a round trip on a typed rejection.
     fn require_obs(&self, op: &str) -> Result<(), Error> {
         if self.version < OBS_MIN_VERSION {
-            return Err(Error::Protocol(format!(
+            return Err(Error::UnsupportedVersion(format!(
                 "{op} requires proto v{OBS_MIN_VERSION}, connection \
                  negotiated v{}",
                 self.version
@@ -760,13 +767,17 @@ impl<'c> SessionHandle<'c> {
 
     /// Upgrade to a crash-safe [`ResumableSession`]: ingests carry
     /// sequence numbers and are retained in a replay ring of at most
-    /// `ring_cap` frames until acked.  Requires a proto-v6 connection.
+    /// `ring_cap` frames until acked.  Requires a proto-v6 connection
+    /// and a session with no prior numbered ingest history (sequence
+    /// numbering starts at 1 — adopting a session another resumable
+    /// handle already drove fails loudly on the first ingest rather
+    /// than letting the daemon's dedup silently swallow fresh frames).
     pub fn resumable(
         self,
         ring_cap: usize,
     ) -> Result<ResumableSession<'c>, Error> {
         if self.client.version < RESUME_MIN_VERSION {
-            return Err(Error::Protocol(format!(
+            return Err(Error::UnsupportedVersion(format!(
                 "resumable sessions require proto \
                  v{RESUME_MIN_VERSION}, connection negotiated v{}",
                 self.client.version
@@ -777,6 +788,7 @@ impl<'c> SessionHandle<'c> {
             id: self.id,
             epoch: self.epoch,
             next_seq: 1,
+            acked: 0,
             ring: VecDeque::new(),
             ring_cap: ring_cap.max(1),
             replays: 0,
@@ -874,6 +886,14 @@ pub const RESUME_MIN_VERSION: u16 = 6;
 /// `acked_seq` without re-applying them, so the caller observes
 /// exactly-once ingest semantics across daemon restarts.
 ///
+/// An error *reply* (as opposed to a transport failure) — `Busy`
+/// backpressure, an `Invalid` rejection — carries the daemon's
+/// guarantee that the frame was not applied and its acked seq did not
+/// move, so the handle rolls the frame back and reuses its sequence
+/// number on the caller's retry.  Busy therefore keeps its documented
+/// remedy under resumable sessions: wait or `Diagnose` to drain the
+/// quota, then call [`ResumableSession::ingest`] again.
+///
 /// The ring deliberately retains the most recent `ring_cap` frames
 /// even after the live daemon acks them: an in-memory ack is not
 /// durable, and a crash rolls `acked_seq` back to the last snapshot.
@@ -886,6 +906,12 @@ pub struct ResumableSession<'c> {
     id: u64,
     epoch: u64,
     next_seq: u64,
+    /// Highest `acked_seq` the daemon has confirmed to this handle.
+    /// Frames above it are pending: sent (or about to be) but not yet
+    /// known applied.  Stale-high after a daemon crash — recovery
+    /// replays the full ring precisely because live acks are not
+    /// durable.
+    acked: u64,
     /// Most recent frames, oldest first: (seq, encoded ingest payload).
     ring: VecDeque<(u64, Vec<u8>)>,
     ring_cap: usize,
@@ -921,6 +947,12 @@ impl ResumableSession<'_> {
     /// One monitored training step with crash-safe delivery: assigns
     /// the next sequence number, retains the encoded frame until acked,
     /// and transparently reconnects + replays on transport failure.
+    ///
+    /// On an error *reply* (e.g. [`Error::Busy`] backpressure) the
+    /// frame is rolled back — the daemon applied nothing — and the
+    /// same sequence number is reused when the caller retries, so
+    /// backpressure stays retryable instead of wedging the session on
+    /// a sequence gap.
     pub fn ingest(
         &mut self,
         loss: f32,
@@ -943,15 +975,75 @@ impl ResumableSession<'_> {
             self.ring.pop_front();
         }
         self.ring.push_back((seq, e.bytes().to_vec()));
-        let sent = {
-            let payload = &self.ring.back().expect("just pushed").1;
-            self.client.send_payload(proto::msg::INGEST, payload)
-        };
-        match sent {
-            Ok(resp) => ingest_reply(resp),
-            Err(e) if transport_error(&e) => self.recover(),
-            Err(e) => Err(e),
+        match self.drive() {
+            Ok(reply) => Ok(reply),
+            Err(e) => {
+                // An error reply means the daemon rejected the frame
+                // without applying it and without advancing its acked
+                // seq (the handler's documented contract), so the
+                // frame is popped and its seq slot reused on retry —
+                // otherwise the next ingest would send seq+1 into a
+                // daemon still expecting seq and wedge the session on
+                // a permanent seq-gap error.  A transport failure
+                // carries no such guarantee (the daemon may have
+                // applied the frame and died before the ack), so the
+                // frame stays retained for replay.
+                if !transport_error(&e)
+                    && self.ring.back().map(|f| f.0) == Some(seq)
+                {
+                    self.ring.pop_back();
+                    self.next_seq = seq;
+                }
+                Err(e)
+            }
         }
+    }
+
+    /// Send every retained frame the daemon has not acked (oldest
+    /// first) — normally just the frame `ingest` pushed, plus any
+    /// left pending by an earlier failed recovery — switching to
+    /// reconnect + full-ring replay on transport failure.
+    fn drive(&mut self) -> Result<IngestReply, Error> {
+        let mut last = None;
+        for i in 0..self.ring.len() {
+            if self.ring[i].0 <= self.acked {
+                continue;
+            }
+            let resp = {
+                let payload = &self.ring[i].1;
+                self.client.send_payload(proto::msg::INGEST, payload)
+            };
+            match resp.and_then(ingest_reply) {
+                Ok(reply) => {
+                    self.note_ack(&reply)?;
+                    last = Some(reply);
+                }
+                Err(e) if transport_error(&e) => return self.recover(),
+                Err(e) => return Err(e),
+            }
+        }
+        last.ok_or_else(|| {
+            Error::Unexpected("no unacked frames to send".into())
+        })
+    }
+
+    /// Record a daemon ack.  An ack covering sequence numbers this
+    /// handle never issued means the session already had numbered
+    /// ingest history (adopted, not freshly opened): the daemon's
+    /// dedup would silently swallow this handle's fresh frames, so
+    /// fail loudly instead.
+    fn note_ack(&mut self, reply: &IngestReply) -> Result<(), Error> {
+        if reply.acked_seq >= self.next_seq {
+            return Err(Error::Unexpected(format!(
+                "daemon acked ingest seq {} but this handle issued \
+                 only up to {}; resumable sessions must start on a \
+                 freshly opened session",
+                reply.acked_seq,
+                self.next_seq - 1
+            )));
+        }
+        self.acked = self.acked.max(reply.acked_seq);
+        Ok(())
     }
 
     /// Diagnose through the underlying connection (not replayed —
@@ -983,27 +1075,31 @@ impl ResumableSession<'_> {
             }
         }
         Err(last_err.unwrap_or_else(|| {
-            Error::Protocol("replay ring empty during recovery".into())
+            Error::Unexpected("replay ring empty during recovery".into())
         }))
     }
 
     fn try_replay(&mut self) -> Result<IngestReply, Error> {
         self.client.reconnect()?;
         if self.client.version < RESUME_MIN_VERSION {
-            return Err(Error::Protocol(format!(
+            return Err(Error::UnsupportedVersion(format!(
                 "daemon downgraded to proto v{} mid-session; cannot \
                  replay unacked ingests",
                 self.client.version
             )));
         }
         let mut last = None;
-        for (_, payload) in &self.ring {
-            let resp =
-                self.client.send_payload(proto::msg::INGEST, payload)?;
-            last = Some(ingest_reply(resp)?);
+        for i in 0..self.ring.len() {
+            let resp = {
+                let payload = &self.ring[i].1;
+                self.client.send_payload(proto::msg::INGEST, payload)
+            };
+            let reply = ingest_reply(resp?)?;
+            self.note_ack(&reply)?;
+            last = Some(reply);
         }
         last.ok_or_else(|| {
-            Error::Protocol("replay ring empty during recovery".into())
+            Error::Unexpected("replay ring empty during recovery".into())
         })
     }
 }
@@ -1013,6 +1109,10 @@ const RECOVER_ATTEMPTS: usize = 3;
 /// Errors that indicate the connection (not the request) failed, and a
 /// reconnect + replay can recover: I/O failures, socket timeouts, and
 /// torn/garbled frames from a daemon killed mid-write.
+/// [`Error::Protocol`] covers only undecodable or out-of-range reply
+/// frames; a well-formed reply answering the wrong request is
+/// [`Error::Unexpected`] — a daemon logic error that a replay cycle
+/// would only mask, so it is surfaced instead.
 fn transport_error(e: &Error) -> bool {
     matches!(
         e,
@@ -1038,7 +1138,7 @@ fn ingest_reply(resp: Response) -> Result<IngestReply, Error> {
 }
 
 fn unexpected(want: &str, got: &Response) -> Error {
-    Error::Protocol(format!("expected {want}, got {got:?}"))
+    Error::Unexpected(format!("expected {want}, got {got:?}"))
 }
 
 // ---------------------------------------------------------------------

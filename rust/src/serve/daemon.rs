@@ -488,9 +488,13 @@ fn handle_request(
             // seq — a client resending its unacked window after a
             // reconnect — is re-acked with *no* engine, quota or
             // archive side effects, so a kill→restart mid-run never
-            // double-ingests.  A gap past acked+1 means frames were
-            // lost (e.g. the client's replay ring overflowed); reject
-            // loudly rather than silently corrupt the sketch.
+            // double-ingests.  The replayed ack is a fresh reply, not
+            // a recording of the original: `recon_err` is empty even
+            // if the replayed frame asked for reconstruction, and
+            // `batches`/`engine_bytes` reflect the session's *current*
+            // state.  A gap past acked+1 means frames were lost (e.g.
+            // the client's replay ring overflowed); reject loudly
+            // rather than silently corrupt the sketch.
             if seq > 0 {
                 if seq <= tenant.acked_seq {
                     return Ok(Response::IngestOk {
@@ -521,52 +525,133 @@ fn handle_request(
                     limit: quota,
                 });
             }
+            // The engine ingest is the LAST fallible step before the
+            // ack commits: it validates every activation shape before
+            // touching any sketch, so an error reply to `Ingest` always
+            // means "nothing was applied, acked_seq did not move".
+            // That contract is what lets a resumable client roll a
+            // rejected seq back and reuse it on retry — Busy
+            // backpressure included — instead of wedging on a seq gap.
             tenant.engine.ingest(&acts).map_err(|e| {
                 Error::Invalid(format!("ingest rejected: {e}"))
             })?;
-            // Journal a rank transition if the engine's rank moved
-            // (future adaptive-rank resizing; static engines never
-            // trigger this).
-            let engine_rank = tenant.engine.config().rank as u32;
-            if engine_rank != tenant.rank {
-                journal.emit(EventKind::RankChange {
-                    session,
-                    from: tenant.rank,
-                    to: engine_rank,
-                });
-                tenant.rank = engine_rank;
-            }
-            tenant.quota_used += payload_len as u64;
-            tenant.ingest_bytes += payload_len as u64;
-            shard.metrics.note_ingest_bytes(payload_len as u64);
-            // Archive this interval (ring-buffered, stride-sampled) and
-            // push the ring's honest byte accounting into the hub.
-            if tenant.archive.maybe_record(
-                tenant.engine.batches_ingested(),
-                loss,
-                tenant.engine.layers(),
-            ) {
-                let archive_bytes = tenant.archive.bytes();
-                hub.report_archive_bytes(id, archive_bytes)?;
-            }
-            let metrics = tenant.engine.metrics();
-            hub.observe(id, &step_metrics(loss, &metrics))?;
-            let engine_bytes = tenant.engine.memory();
-            hub.report_sketch_bytes(id, engine_bytes)?;
-            let recon_err = if want_recon {
-                recon_errors(&tenant.engine, &acts).map_err(|e| {
-                    Error::Invalid(format!("reconstruction failed: {e}"))
-                })?
-            } else {
-                Vec::new()
-            };
+            // Commit: the ack becomes visible together with the engine
+            // step it acknowledges, before anything that could still
+            // fail.  (A panic *inside* the engine ingest above is the
+            // one residual at-least-once window: partial sketch
+            // updates with no ack, so a client replay re-applies on
+            // top — see DESIGN.md §11.)
             if seq > 0 {
                 tenant.acked_seq = seq;
             }
             shared.dirty.store(true, Ordering::SeqCst);
+            // Post-commit tail: accounting, archive, monitor and recon
+            // run best-effort — the frame is applied and acked, so a
+            // failure here must NOT become an error reply (a resumable
+            // client would roll the seq back and the dedup would then
+            // swallow its next, different frame).  Hub inconsistencies
+            // and recon failures degrade to a journaled error; a panic
+            // is caught, counted and journaled like any handler panic;
+            // the reply stays the honest IngestOk either way.
+            let tail = catch_unwind(AssertUnwindSafe(|| {
+                // Journal a rank transition if the engine's rank moved
+                // (future adaptive-rank resizing; static engines never
+                // trigger this).
+                let engine_rank = tenant.engine.config().rank as u32;
+                if engine_rank != tenant.rank {
+                    journal.emit(EventKind::RankChange {
+                        session,
+                        from: tenant.rank,
+                        to: engine_rank,
+                    });
+                    tenant.rank = engine_rank;
+                }
+                tenant.quota_used += payload_len as u64;
+                tenant.ingest_bytes += payload_len as u64;
+                shard.metrics.note_ingest_bytes(payload_len as u64);
+                // Archive this interval (ring-buffered, stride-sampled)
+                // and push the ring's honest byte accounting into the
+                // hub.
+                if tenant.archive.maybe_record(
+                    tenant.engine.batches_ingested(),
+                    loss,
+                    tenant.engine.layers(),
+                ) {
+                    let archive_bytes = tenant.archive.bytes();
+                    if let Err(e) = hub.report_archive_bytes(id, archive_bytes)
+                    {
+                        shared.obs.log(
+                            journal,
+                            Level::Error,
+                            log_tag::INGEST_DEGRADED,
+                            session,
+                            || format!("archive-bytes report failed: {e}"),
+                        );
+                    }
+                }
+                let metrics = tenant.engine.metrics();
+                if let Err(e) = hub.observe(id, &step_metrics(loss, &metrics))
+                {
+                    shared.obs.log(
+                        journal,
+                        Level::Error,
+                        log_tag::INGEST_DEGRADED,
+                        session,
+                        || format!("monitor observe failed: {e}"),
+                    );
+                }
+                if let Err(e) =
+                    hub.report_sketch_bytes(id, tenant.engine.memory())
+                {
+                    shared.obs.log(
+                        journal,
+                        Level::Error,
+                        log_tag::INGEST_DEGRADED,
+                        session,
+                        || format!("sketch-bytes report failed: {e}"),
+                    );
+                }
+                if want_recon {
+                    match recon_errors(&tenant.engine, &acts) {
+                        Ok(errs) => errs,
+                        Err(e) => {
+                            shared.obs.log(
+                                journal,
+                                Level::Error,
+                                log_tag::INGEST_DEGRADED,
+                                session,
+                                || format!("reconstruction failed: {e:#}"),
+                            );
+                            Vec::new()
+                        }
+                    }
+                } else {
+                    Vec::new()
+                }
+            }));
+            let recon_err = tail.unwrap_or_else(|panic| {
+                shard.metrics.note_handler_panic();
+                journal.emit(EventKind::HandlerPanic {
+                    msg: proto::msg::INGEST,
+                    session,
+                });
+                shared.obs.log(
+                    journal,
+                    Level::Error,
+                    log_tag::INGEST_DEGRADED,
+                    session,
+                    || {
+                        format!(
+                            "post-commit ingest tail panicked: {}",
+                            panic_message(panic.as_ref())
+                        )
+                    },
+                );
+                Vec::new()
+            });
             Ok(Response::IngestOk {
                 batches: tenant.engine.batches_ingested(),
-                engine_bytes: engine_bytes as u64,
+                engine_bytes: tenant.engine.memory() as u64,
                 recon_err,
                 acked_seq: tenant.acked_seq,
             })

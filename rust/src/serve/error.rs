@@ -11,11 +11,15 @@
 //! new code can't silently diverge between the two sides
 //! (`error_code_round_trip` pins the bijection).
 //!
-//! Three variants never cross the wire as codes: [`Error::Busy`] has
+//! Some variants never cross the wire as codes: [`Error::Busy`] has
 //! its own protocol frame (it is backpressure, not failure — it
 //! carries the quota numbers a client needs for the documented
 //! Diagnose-drain remedy), while [`Error::Timeout`] / [`Error::Io`] /
-//! [`Error::Protocol`] are client-side transport observations.
+//! [`Error::Protocol`] / [`Error::Unexpected`] are client-side
+//! observations.  `Protocol` vs `Unexpected` is the replay split:
+//! a reply that couldn't be *decoded* may be a torn frame and is
+//! retried by resumable sessions; a reply that decoded fine but
+//! answers the wrong request is a logic error and is surfaced.
 
 use std::fmt;
 use std::io;
@@ -48,9 +52,17 @@ pub enum Error {
     Invalid(String),
     /// Daemon-side invariant failure; nothing the client can fix.
     Internal(String),
-    /// Client-side: the reply violated the protocol (wrong message
-    /// type, undecodable payload).
+    /// Client-side: the reply frame itself could not be trusted —
+    /// undecodable payload, out-of-range version.  Plausibly a torn
+    /// frame from a daemon dying mid-write, so resumable sessions
+    /// treat it as a transport failure and reconnect + replay.
     Protocol(String),
+    /// Client-side: a well-formed, in-protocol reply that does not
+    /// answer the request that was sent (e.g. `Diagnosis` in reply to
+    /// `Ingest`).  A daemon logic error, NOT a transport failure —
+    /// resumable sessions surface it instead of masking it behind a
+    /// reconnect-and-replay cycle.
+    Unexpected(String),
     /// Client-side: a socket deadline expired.
     Timeout(io::Error),
     /// Client-side: any other transport failure.
@@ -80,6 +92,7 @@ impl Error {
             Error::Internal(_) => ErrorCode::Internal,
             Error::Busy { .. }
             | Error::Protocol(_)
+            | Error::Unexpected(_)
             | Error::Timeout(_)
             | Error::Io(_) => return None,
         })
@@ -115,7 +128,8 @@ impl Error {
             | Error::SessionsExhausted(m)
             | Error::Invalid(m)
             | Error::Internal(m)
-            | Error::Protocol(m) => m.clone(),
+            | Error::Protocol(m)
+            | Error::Unexpected(m) => m.clone(),
             Error::Timeout(e) | Error::Io(e) => e.to_string(),
         }
     }
@@ -159,6 +173,9 @@ impl fmt::Display for Error {
             Error::Timeout(e) => write!(f, "timed out: {e}"),
             Error::Io(e) => write!(f, "transport error: {e}"),
             Error::Protocol(m) => write!(f, "protocol violation: {m}"),
+            Error::Unexpected(m) => {
+                write!(f, "unexpected reply: {m}")
+            }
             other => match other.code() {
                 Some(code) => write!(f, "{code}: {}", other.message()),
                 None => unreachable!("non-coded variants matched above"),
@@ -244,6 +261,8 @@ mod tests {
     fn non_coded_variants_have_no_code() {
         assert_eq!(Error::Busy { used: 1, limit: 2 }.code(), None);
         assert_eq!(Error::Protocol("x".into()).code(), None);
+        assert_eq!(Error::Unexpected("x".into()).code(), None);
+        assert_eq!(Error::Unexpected("x".into()).message(), "x");
         let t: Error = io::Error::from(io::ErrorKind::TimedOut).into();
         assert!(matches!(t, Error::Timeout(_)));
         assert_eq!(t.code(), None);

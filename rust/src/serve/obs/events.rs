@@ -62,6 +62,12 @@ pub mod log_tag {
     pub const SNAPSHOT_FAILED: u8 = 2;
     pub const ACCEPT_FAILED: u8 = 3;
     pub const OBS_LISTENER_FAILED: u8 = 4;
+    /// A post-commit step of an applied ingest degraded (archive/hub
+    /// accounting, reconstruction): the frame was acked, the reply is
+    /// still `IngestOk`, and the shortfall is recorded here instead of
+    /// an error reply (DESIGN.md §11 — an error reply to `Ingest` must
+    /// mean "nothing was applied").
+    pub const INGEST_DEGRADED: u8 = 5;
 }
 
 /// One journal record. `ts_ns` is monotonic nanoseconds since the
@@ -228,6 +234,7 @@ impl Event {
                     log_tag::SNAPSHOT_FAILED => "snapshot-failed",
                     log_tag::ACCEPT_FAILED => "accept-failed",
                     log_tag::OBS_LISTENER_FAILED => "obs-listener-failed",
+                    log_tag::INGEST_DEGRADED => "ingest-degraded",
                     _ => "unknown",
                 };
                 let level = match level {

@@ -637,6 +637,12 @@ pub enum Response {
         recon_err: Vec<f64>,
         /// Highest applied ingest seq for the session (v6+; 0 from
         /// older daemons or when the client opted out with seq 0).
+        ///
+        /// The ack for a *replayed* (already-applied) frame is a fresh
+        /// reply, not a recording of the original: `recon_err` is
+        /// empty even if the replayed frame asked for reconstruction,
+        /// and `batches`/`engine_bytes` reflect the session's current
+        /// — possibly later — state.
         acked_seq: u64,
     },
     ObserveOk { steps_seen: u64 },

@@ -166,6 +166,102 @@ fn killed_daemon_resumes_exactly_once_via_replay() {
     let _ = std::fs::remove_file(&snap);
 }
 
+/// Quota backpressure must stay retryable under resumable sessions: a
+/// `Busy` reply guarantees the daemon applied nothing and its acked
+/// seq did not move, so the client rolls the frame back and reuses the
+/// seq — the session must NOT wedge on a permanent "ingest seq gap"
+/// after the first Busy (the daemon keeps expecting the rejected seq).
+#[test]
+fn busy_backpressure_does_not_wedge_resumable_sessions() {
+    let mut cfg = test_config("busyresume");
+    // Small enough that a paced run trips quota Busy every few steps,
+    // large enough that a single drained frame always fits.
+    cfg.session_quota_bytes = 8192;
+    let snap = cfg.snapshot_path.clone();
+    let daemon = Daemon::bind(cfg).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    let sess = client.open_session(&spec("busyresume")).unwrap();
+    let mut sess = sess.resumable(64).unwrap();
+    let mut stream = ActStream::new(&[16, 8], false, 7);
+
+    let mut applied = 0u64;
+    let mut busy_hits = 0u32;
+    let mut last_batches = 0u64;
+    for _ in 0..24 {
+        let acts = stream.next_batch(4);
+        let reply = match sess.ingest(0.1, &acts, false) {
+            Ok(r) => r,
+            Err(Error::Busy { .. }) => {
+                busy_hits += 1;
+                // The documented remedy: Diagnose drains the quota
+                // counter; the retry reuses the rolled-back seq.
+                sess.diagnose().unwrap();
+                sess.ingest(0.1, &acts, false).unwrap()
+            }
+            Err(e) => panic!("resumable ingest failed: {e}"),
+        };
+        applied += 1;
+        assert_eq!(
+            reply.acked_seq, applied,
+            "seq accounting drifted after {busy_hits} Busy rejections"
+        );
+        last_batches = reply.batches;
+    }
+    assert!(busy_hits >= 1, "quota never tripped Busy — test is vacuous");
+    assert_eq!(last_batches, applied, "lost or duplicated ingests");
+    sess.close().unwrap();
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap);
+}
+
+/// An injected handler panic mid-run costs one typed `Internal` reply;
+/// the rejected frame rolls back and the retried seq keeps the
+/// exactly-once accounting exact (the panic fires before the engine
+/// mutation, so the daemon applied nothing).
+#[test]
+fn injected_panic_keeps_resumable_accounting_exact() {
+    let cfg = test_config("panicresume");
+    let snap = cfg.snapshot_path.clone();
+    let daemon = Daemon::bind(cfg).unwrap();
+    let addr = daemon.local_addr().unwrap().to_string();
+    let handle = daemon.spawn().unwrap();
+
+    let (mut client, _info) = SketchClient::connect(&addr).unwrap();
+    let sess = client.open_session(&spec("panicresume")).unwrap();
+    let mut sess = sess.resumable(32).unwrap();
+    let mut stream = ActStream::new(&[16, 8], false, 7);
+    for _ in 0..3 {
+        sess.ingest(0.1, &stream.next_batch(4), false).unwrap();
+    }
+
+    handle.faults().arm("handler=panic@oneshot").unwrap();
+    let acts = stream.next_batch(4);
+    match sess.ingest(0.2, &acts, false) {
+        Err(Error::Internal(msg)) => {
+            assert!(msg.contains("panicked"), "{msg}")
+        }
+        other => panic!("expected Internal from panic, got {other:?}"),
+    }
+    // Same step, same (rolled-back) seq: the retry must apply cleanly.
+    let reply = sess.ingest(0.2, &acts, false).unwrap();
+    assert_eq!(reply.acked_seq, 4);
+    let mut last = reply;
+    for _ in 0..2 {
+        last = sess.ingest(0.3, &stream.next_batch(4), false).unwrap();
+    }
+    assert_eq!(last.acked_seq, 6);
+    assert_eq!(last.batches, 6, "lost or duplicated ingests");
+    assert_eq!(sess.client().metrics().unwrap().handler_panics, 1);
+    sess.close().unwrap();
+
+    handle.stop().unwrap();
+    let _ = std::fs::remove_file(&snap);
+}
+
 /// A malformed `serve.fault` spec is rejected at bind time with a
 /// diagnosable error naming the config key.
 #[test]
